@@ -1,0 +1,94 @@
+//! Quickstart: build the paper's Table I cluster, submit one pod of
+//! each workload class, and compare where GreenPod (TOPSIS) and the
+//! default kube-scheduler place them — including the full decision
+//! matrix GreenPod scored.
+//!
+//! Run: `cargo run --example quickstart`
+
+use greenpod::cluster::ClusterState;
+use greenpod::config::{Config, SchedulerKind, WeightingScheme};
+use greenpod::scheduler::{
+    DefaultK8sScheduler, Estimator, GreenPodScheduler, Scheduler,
+};
+use greenpod::workload::WorkloadClass;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::paper_default();
+    let mut state = ClusterState::from_config(&cfg.cluster);
+
+    println!("cluster (paper Table I):");
+    for n in state.nodes() {
+        println!(
+            "  {:24} cat {:7} {:4} vCPU  {:5} MiB  speed {:.2}  power x{:.2}",
+            n.name, n.category.label(), n.vcpus(), n.memory_mib,
+            n.speed_factor, n.power_scale
+        );
+    }
+
+    let mut greenpod_sched = GreenPodScheduler::new(
+        Estimator::with_defaults(cfg.energy.clone()),
+        WeightingScheme::EnergyCentric,
+    );
+    let mut default_sched = DefaultK8sScheduler::new(cfg.experiment.seed);
+
+    println!("\nplacing one pod of each class (energy-centric profile):");
+    for (i, class) in WorkloadClass::ALL.into_iter().enumerate() {
+        let pod = greenpod::cluster::Pod::new(
+            i as u64,
+            class,
+            SchedulerKind::Topsis,
+            0.0,
+            cfg.experiment.epochs_for(class),
+        );
+
+        // Show the decision matrix GreenPod evaluates.
+        let candidates = state.feasible_nodes(pod.requests);
+        let problem = greenpod_sched.decision_problem(&state, &pod, &candidates);
+        println!(
+            "\n{} pod ({}m CPU / {} MiB): decision matrix",
+            class.label(),
+            pod.requests.cpu_millis,
+            pod.requests.memory_mib
+        );
+        println!(
+            "  {:24} {:>9} {:>9} {:>9} {:>9} {:>9}",
+            "node", "exec(s)", "energy(J)", "cpu-free", "mem-free", "balance"
+        );
+        for (row, &id) in candidates.iter().enumerate() {
+            println!(
+                "  {:24} {:>9.2} {:>9.2} {:>9.3} {:>9.3} {:>9.3}",
+                state.node(id).name,
+                problem.at(row, 0),
+                problem.at(row, 1),
+                problem.at(row, 2),
+                problem.at(row, 3),
+                problem.at(row, 4),
+            );
+        }
+
+        let g = greenpod_sched.schedule(&state, &pod);
+        let d = default_sched.schedule(&state, &pod);
+        let g_node = g.node.expect("fits");
+        let d_node = d.node.expect("fits");
+        println!(
+            "  GreenPod(TOPSIS) -> {} (closeness {:.4}, {:.0} µs)",
+            state.node(g_node).name,
+            g.scores.iter().find(|(n, _)| *n == g_node).unwrap().1,
+            g.latency.as_secs_f64() * 1e6,
+        );
+        println!(
+            "  default K8s      -> {} ({:.0} µs)",
+            state.node(d_node).name,
+            d.latency.as_secs_f64() * 1e6,
+        );
+
+        // Bind the GreenPod choice so successive pods see a loaded cluster.
+        state.bind(&pod, g_node, 0.0)?;
+    }
+
+    println!(
+        "\ncluster requested-CPU utilization now {:.1}%",
+        100.0 * state.total_cpu_utilization()
+    );
+    Ok(())
+}

@@ -1,0 +1,219 @@
+"""AOT compile path: lower every L2 graph to HLO text + manifest.
+
+`make artifacts` runs this ONCE; afterwards the Rust binary is fully
+self-contained (python never runs on the request path).
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`). The HLO text parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+  topsis_score_n{N}.hlo.txt      N in TOPSIS_SIZES, C=8 criteria slots
+  linreg_step_{cls}.hlo.txt      one SGD train step per workload class
+  linreg_epoch_{cls}.hlo.txt     scanned EPOCH_STEPS-step variant
+  manifest.json                  name -> shapes/dtypes/paths (Rust registry)
+  golden.json                    seeded input/output vectors for Rust
+                                 integration tests (cross-layer numerics)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Node-count tiers for the scoring artifact; the coordinator picks the
+# smallest tier >= |candidate nodes| and pads with invalid rows.
+TOPSIS_SIZES = (4, 8, 16, 32, 64)
+CRITERIA_SLOTS = 8  # 5 paper criteria + 3 padding slots (lane-friendly)
+
+# Workload classes (paper Table II), mapped to laptop-scale step shapes
+# that preserve the light:medium:complex work ratios (see DESIGN.md §1).
+WORKLOAD_SHAPES = {
+    "light": (1024, 16),
+    "medium": (4096, 32),
+    "complex": (8192, 64),
+}
+EPOCH_STEPS = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_topsis(n):
+    spec = (
+        f32((n, CRITERIA_SLOTS)),
+        f32((CRITERIA_SLOTS,)),
+        f32((CRITERIA_SLOTS,)),
+        f32((n,)),
+    )
+    return jax.jit(model.topsis_score).lower(*spec)
+
+
+def lower_step(n, d):
+    spec = (f32((d,)), f32((n, d)), f32((n,)), f32(()))
+    return jax.jit(model.linreg_train_step).lower(*spec)
+
+
+def lower_epoch(n, d):
+    spec = (f32((d,)), f32((n, d)), f32((n,)), f32(()))
+    fn = lambda w, x, y, lr: model.linreg_train_epoch(w, x, y, lr, EPOCH_STEPS)
+    return jax.jit(fn).lower(*spec)
+
+
+def emit(out_dir, name, lowered, entry):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    entry["path"] = f"{name}.hlo.txt"
+    print(f"  wrote {path} ({len(text)} chars)")
+    return entry
+
+
+def build_golden():
+    """Seeded input/output pairs the Rust integration tests replay."""
+    golden = {}
+
+    # TOPSIS: fixed 4x8 matrix (first 5 columns meaningful, rest padding).
+    m = jnp.array(
+        [
+            # exec_time, energy, cores, mem, balance, pad, pad, pad
+            [0.9, 0.8, 2.0, 4.0, 0.7, 0.0, 0.0, 0.0],
+            [0.5, 0.6, 2.0, 8.0, 0.8, 0.0, 0.0, 0.0],
+            [0.3, 1.0, 4.0, 16.0, 0.6, 0.0, 0.0, 0.0],
+            [0.6, 0.7, 2.0, 8.0, 0.9, 0.0, 0.0, 0.0],
+        ],
+        dtype=jnp.float32,
+    )
+    w = jnp.array([0.2, 0.2, 0.2, 0.2, 0.2, 0.0, 0.0, 0.0], jnp.float32)
+    b = jnp.array([0.0, 0.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0], jnp.float32)
+    v = jnp.ones((4,), jnp.float32)
+    (closeness,) = model.topsis_score(m, w, b, v)
+    golden["topsis_n4"] = {
+        "matrix": [float(x) for x in m.reshape(-1)],
+        "weights": [float(x) for x in w],
+        "benefit": [float(x) for x in b],
+        "valid": [float(x) for x in v],
+        "closeness": [float(x) for x in closeness],
+    }
+
+    # LinReg light: one step from a seeded dataset.
+    x, y, _ = model.make_dataset(jax.random.PRNGKey(42), 1024, 16)
+    w0 = jnp.zeros((16,), jnp.float32)
+    w1, loss = model.linreg_train_step(w0, x, y, jnp.float32(1.0))
+    wf, losses = model.linreg_train_epoch(
+        w0, x, y, jnp.float32(1.0), EPOCH_STEPS
+    )
+    golden["linreg_light_seed42"] = {
+        "seed": 42,
+        "lr": 1.0,
+        "loss0": float(loss),
+        "w1_head": [float(v_) for v_ in w1[:4]],
+        "epoch_losses": [float(v_) for v_ in losses],
+        "epoch_w_head": [float(v_) for v_ in wf[:4]],
+    }
+    return golden
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"criteria_slots": CRITERIA_SLOTS, "epoch_steps": EPOCH_STEPS,
+                "entries": {}}
+    ent = manifest["entries"]
+
+    print("lowering TOPSIS scoring artifacts:")
+    for n in TOPSIS_SIZES:
+        name = f"topsis_score_n{n}"
+        ent[name] = emit(
+            args.out_dir, name, lower_topsis(n),
+            {
+                "kind": "topsis",
+                "nodes": n,
+                "criteria": CRITERIA_SLOTS,
+                "inputs": [
+                    {"name": "matrix", "shape": [n, CRITERIA_SLOTS]},
+                    {"name": "weights", "shape": [CRITERIA_SLOTS]},
+                    {"name": "benefit", "shape": [CRITERIA_SLOTS]},
+                    {"name": "valid", "shape": [n]},
+                ],
+                "outputs": [{"name": "closeness", "shape": [n]}],
+            },
+        )
+
+    print("lowering linear-regression workload artifacts:")
+    for cls, (n, d) in WORKLOAD_SHAPES.items():
+        name = f"linreg_step_{cls}"
+        ent[name] = emit(
+            args.out_dir, name, lower_step(n, d),
+            {
+                "kind": "linreg_step",
+                "workload": cls,
+                "samples": n,
+                "features": d,
+                "inputs": [
+                    {"name": "w", "shape": [d]},
+                    {"name": "x", "shape": [n, d]},
+                    {"name": "y", "shape": [n]},
+                    {"name": "lr", "shape": []},
+                ],
+                "outputs": [
+                    {"name": "w_new", "shape": [d]},
+                    {"name": "loss", "shape": []},
+                ],
+            },
+        )
+        name = f"linreg_epoch_{cls}"
+        ent[name] = emit(
+            args.out_dir, name, lower_epoch(n, d),
+            {
+                "kind": "linreg_epoch",
+                "workload": cls,
+                "samples": n,
+                "features": d,
+                "steps": EPOCH_STEPS,
+                "inputs": [
+                    {"name": "w", "shape": [d]},
+                    {"name": "x", "shape": [n, d]},
+                    {"name": "y", "shape": [n]},
+                    {"name": "lr", "shape": []},
+                ],
+                "outputs": [
+                    {"name": "w_final", "shape": [d]},
+                    {"name": "losses", "shape": [EPOCH_STEPS]},
+                ],
+            },
+        )
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json ({len(ent)} entries)")
+
+    golden = build_golden()
+    with open(os.path.join(args.out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=2)
+    print(f"wrote {args.out_dir}/golden.json")
+
+
+if __name__ == "__main__":
+    main()

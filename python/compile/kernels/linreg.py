@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: tiled linear-regression gradient.
+
+The paper's containerized workloads (Table II) are linear-regression
+training jobs at three scales. Their compute hot-spot is the MSE gradient
+
+    grad = X^T (X w - y) / n
+
+i.e. two matmuls sharing the residual. This kernel tiles X into row
+blocks: each grid step streams one (bm, d) tile HBM->VMEM, computes the
+tile's residual r_i = X_i w - y_i on the spot, multiplies X_i^T r_i, and
+accumulates into the (d,) gradient held in the output block. On real TPU
+the two products map onto the MXU systolic array with the residual kept
+in VMEM; X is read exactly once.
+
+The row-block size is chosen so a tile is MXU/lane friendly (multiples of
+128 rows; d = 16/32/64 columns pad into one lane group). interpret=True —
+see topsis.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height: 128 keeps a tile 8-128 KiB for d in 16..64 and matches
+# the MXU edge on real TPU.
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _grad_kernel(x_ref, y_ref, w_ref, o_ref, *, n_total):
+    """One grid step: accumulate X_i^T (X_i w - y_i) / n into o_ref."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                       # (bm, d)
+    w = w_ref[...]                       # (d, 1)
+    y = y_ref[...]                       # (bm, 1)
+    r = jnp.dot(x, w, preferred_element_type=jnp.float32) - y   # (bm, 1)
+    g = jnp.dot(x.T, r, preferred_element_type=jnp.float32)     # (d, 1)
+    o_ref[...] += g / jnp.float32(n_total)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def linreg_grad(w, x, y, *, block_rows=DEFAULT_BLOCK_ROWS):
+    """MSE gradient x^T(xw - y)/n via the tiled Pallas kernel.
+
+    Args:
+      w: (d,) weights.  x: (n, d) design matrix.  y: (n,) targets.
+      block_rows: row-tile height; n must be divisible by it (the AOT
+        shapes 1024/4096/8192 all are).
+
+    Returns: (d,) gradient, matching `ref.linreg_grad_ref`.
+    """
+    n, d = x.shape
+    if n % block_rows != 0:
+        raise ValueError(f"n={n} not divisible by block_rows={block_rows}")
+    grid = (n // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_grad_kernel, n_total=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),  # stream X tiles
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),  # stream y tiles
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),           # w resident
+        ],
+        out_specs=pl.BlockSpec((d, 1), lambda i: (0, 0)),     # accumulator
+        out_shape=jax.ShapeDtypeStruct((d, 1), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(
+        x.astype(jnp.float32),
+        y.astype(jnp.float32).reshape(n, 1),
+        w.astype(jnp.float32).reshape(d, 1),
+    )
+    return out.reshape(d)

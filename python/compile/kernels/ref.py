@@ -1,0 +1,78 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its `*_ref` counterpart to float tolerance (see python/tests/).
+They are also the shapes the L2 model (`compile.model`) is validated against.
+"""
+
+import jax.numpy as jnp
+
+# Guard for zero denominators (all-identical alternatives, zero columns).
+EPS = 1e-12
+
+
+def topsis_ref(matrix, weights, benefit, valid):
+    """Reference TOPSIS closeness coefficients.
+
+    Args:
+      matrix:  (n, c) decision matrix, row = candidate node, col = criterion.
+      weights: (c,) criterion weights (need not be normalized; we normalize).
+      benefit: (c,) 1.0 where the criterion is benefit (higher is better),
+               0.0 where it is cost (lower is better).
+      valid:   (n,) 1.0 for real rows, 0.0 for padding rows.
+
+    Returns:
+      (n,) closeness coefficients in [0, 1]; padded rows get 0.
+    """
+    matrix = matrix.astype(jnp.float32)
+    w = weights.astype(jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), EPS)
+    b = benefit.astype(jnp.float32)
+    v = valid.astype(jnp.float32)[:, None]  # (n, 1)
+
+    # Vector (Euclidean) column normalization over valid rows only.
+    masked = matrix * v
+    col_norm = jnp.sqrt(jnp.sum(masked * masked, axis=0, keepdims=True))
+    r = masked / jnp.maximum(col_norm, EPS)
+
+    # Weighted normalized matrix.
+    vm = r * w[None, :]
+
+    # Ideal / anti-ideal points, excluding padded rows from the extrema.
+    big = jnp.float32(3.4e38)
+    vm_for_max = jnp.where(v > 0.0, vm, -big)
+    vm_for_min = jnp.where(v > 0.0, vm, big)
+    col_max = jnp.max(vm_for_max, axis=0)
+    col_min = jnp.min(vm_for_min, axis=0)
+    v_plus = b * col_max + (1.0 - b) * col_min   # ideal
+    v_minus = b * col_min + (1.0 - b) * col_max  # anti-ideal
+
+    d_plus = jnp.sqrt(jnp.sum((vm - v_plus[None, :]) ** 2, axis=1))
+    d_minus = jnp.sqrt(jnp.sum((vm - v_minus[None, :]) ** 2, axis=1))
+    closeness = d_minus / jnp.maximum(d_plus + d_minus, EPS)
+    return closeness * valid.astype(jnp.float32)
+
+
+def linreg_predict_ref(w, x):
+    """(n, d) @ (d,) -> (n,) predictions."""
+    return x @ w
+
+
+def linreg_grad_ref(w, x, y):
+    """MSE gradient: d/dw [0.5 * mean((x@w - y)^2)] = x^T (x@w - y) / n."""
+    n = x.shape[0]
+    r = x @ w - y
+    return x.T @ r / jnp.float32(n)
+
+
+def linreg_loss_ref(w, x, y):
+    """Half mean squared error."""
+    r = x @ w - y
+    return 0.5 * jnp.mean(r * r)
+
+
+def linreg_step_ref(w, x, y, lr):
+    """One SGD step; returns (w_new, loss_before_step)."""
+    loss = linreg_loss_ref(w, x, y)
+    grad = linreg_grad_ref(w, x, y)
+    return w - lr * grad, loss

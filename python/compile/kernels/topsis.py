@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: fused TOPSIS scoring.
+
+The whole MCDA pipeline — column normalization, weighting, ideal /
+anti-ideal extraction, separation distances, closeness coefficient — runs
+as ONE Pallas kernel over a single VMEM-resident block. On TPU this means
+the (n, c) decision matrix is loaded from HBM exactly once and every
+intermediate (normalized matrix, weighted matrix, ideals) lives in VMEM;
+there are no HBM round-trips between MCDA stages, unlike a staged jnp
+implementation where XLA may materialize intermediates.
+
+Scheduling decision matrices are tiny (n <= a few hundred nodes, c = 8
+criteria slots), so a single block always fits: worst case 512 x 8 x 4 B
+= 16 KiB against ~16 MiB VMEM.
+
+Kernels MUST be lowered with interpret=True in this environment: the CPU
+PJRT plugin cannot execute Mosaic custom-calls (see DESIGN.md §2).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12
+_BIG = 3.4e38
+
+
+def _topsis_kernel(m_ref, w_ref, b_ref, v_ref, o_ref):
+    """Fused TOPSIS over one (n, c) block.
+
+    m_ref: (n, c) decision matrix     w_ref: (1, c) weights
+    b_ref: (1, c) benefit mask        v_ref: (n, 1) valid-row mask
+    o_ref: (n, 1) closeness out
+    """
+    m = m_ref[...]
+    w = w_ref[...]            # (1, c)
+    b = b_ref[...]            # (1, c)
+    v = v_ref[...]            # (n, 1)
+
+    # Normalize weights to the unit simplex so callers can pass raw weights.
+    w = w / jnp.maximum(jnp.sum(w), _EPS)
+
+    # Stage 1: vector (Euclidean) column normalization over valid rows.
+    masked = m * v
+    col_norm = jnp.sqrt(jnp.sum(masked * masked, axis=0, keepdims=True))
+    r = masked / jnp.maximum(col_norm, _EPS)
+
+    # Stage 2: weighted normalized matrix.
+    vm = r * w
+
+    # Stage 3: ideal / anti-ideal points (padding rows excluded).
+    vm_max = jnp.max(jnp.where(v > 0.0, vm, -_BIG), axis=0, keepdims=True)
+    vm_min = jnp.min(jnp.where(v > 0.0, vm, _BIG), axis=0, keepdims=True)
+    v_plus = b * vm_max + (1.0 - b) * vm_min
+    v_minus = b * vm_min + (1.0 - b) * vm_max
+
+    # Stage 4: separation distances and closeness coefficient.
+    d_plus = jnp.sqrt(jnp.sum((vm - v_plus) ** 2, axis=1, keepdims=True))
+    d_minus = jnp.sqrt(jnp.sum((vm - v_minus) ** 2, axis=1, keepdims=True))
+    o_ref[...] = v * d_minus / jnp.maximum(d_plus + d_minus, _EPS)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def topsis_closeness(matrix, weights, benefit, valid):
+    """Closeness coefficients for an (n, c) decision matrix via Pallas.
+
+    Same contract as `ref.topsis_ref` (see that docstring); this is the
+    kernel the L2 scoring graph and the AOT artifacts are built from.
+    """
+    n, c = matrix.shape
+    out = pl.pallas_call(
+        _topsis_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(
+        matrix.astype(jnp.float32),
+        weights.astype(jnp.float32).reshape(1, c),
+        benefit.astype(jnp.float32).reshape(1, c),
+        valid.astype(jnp.float32).reshape(n, 1),
+    )
+    return out.reshape(n)

@@ -1,0 +1,72 @@
+"""L2: the JAX compute graphs GreenPod AOT-compiles and Rust executes.
+
+Two families of graphs, both calling the L1 Pallas kernels:
+
+  * `topsis_score` — the scheduler's scoring hot path: decision matrix in,
+    closeness coefficients out. Lowered at several node counts; the Rust
+    coordinator picks the smallest artifact that fits the candidate set.
+
+  * `linreg_train_step` / `linreg_train_epoch` — the paper's workloads
+    (Table II): linear-regression training. These are *really executed*
+    by the Rust runtime when a scheduled pod "runs", so execution times
+    and loss curves in the experiments are measured, not modeled.
+
+Everything here is build-time only; Python never runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import linreg as linreg_kernel
+from compile.kernels import topsis as topsis_kernel
+from compile.kernels import ref
+
+
+def topsis_score(matrix, weights, benefit, valid):
+    """Score candidate nodes; thin L2 wrapper over the fused Pallas kernel.
+
+    Returns a 1-tuple (closeness,) so the lowered HLO has a stable tuple
+    output shape for the Rust loader.
+    """
+    return (topsis_kernel.topsis_closeness(matrix, weights, benefit, valid),)
+
+
+def linreg_train_step(w, x, y, lr):
+    """One SGD step on half-MSE linear regression.
+
+    Forward (loss) + backward (gradient, via the tiled Pallas kernel) +
+    update. Returns (w_new, loss_before_step).
+    """
+    r = linreg_kernel.linreg_grad(w, x, y)  # backward: x^T(xw-y)/n
+    loss = ref.linreg_loss_ref(w, x, y)     # forward loss (cheap, fused by XLA)
+    return w - lr * r, loss
+
+
+def linreg_train_epoch(w, x, y, lr, steps):
+    """`steps` SGD iterations via lax.scan — one artifact per epoch.
+
+    Used by the Rust executor to amortize dispatch overhead: an epoch
+    artifact advances the weights `steps` times per PJRT call and returns
+    the per-step loss trace (the pod's loss curve segment).
+    """
+
+    def body(w, _):
+        w_new, loss = linreg_train_step(w, x, y, lr)
+        return w_new, loss
+
+    w_final, losses = jax.lax.scan(body, w, None, length=steps)
+    return w_final, losses
+
+
+def make_dataset(key, n, d, noise=0.01):
+    """Synthetic well-conditioned regression problem (build/test helper).
+
+    y = x @ w_true + noise; x ~ N(0, 1)/sqrt(d) so lr ~ 1.0 is stable.
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (n, d), dtype=jnp.float32) / jnp.sqrt(
+        jnp.float32(d)
+    )
+    w_true = jax.random.normal(k2, (d,), dtype=jnp.float32)
+    y = x @ w_true + noise * jax.random.normal(k3, (n,), dtype=jnp.float32)
+    return x, y, w_true

@@ -1,0 +1,154 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Every Pallas kernel must match its pure-jnp oracle in ref.py to float
+tolerance, across shapes, seeds, and degenerate inputs. Hypothesis sweeps
+live in test_properties.py; these are the deterministic fixtures.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import linreg, ref, topsis
+
+
+def rand(key, shape, lo=0.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape,
+                              minval=lo, maxval=hi, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- TOPSIS
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32, 64])
+@pytest.mark.parametrize("c", [2, 5, 8])
+def test_topsis_matches_ref(n, c):
+    m = rand(n * 100 + c, (n, c), 0.1, 10.0)
+    w = rand(n * 100 + c + 1, (c,), 0.05, 1.0)
+    b = (rand(n * 100 + c + 2, (c,)) > 0.5).astype(jnp.float32)
+    v = jnp.ones((n,), jnp.float32)
+    got = topsis.topsis_closeness(m, w, b, v)
+    want = ref.topsis_ref(m, w, b, v)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_topsis_padded_rows_zero_and_ignored():
+    m = rand(7, (8, 5), 0.1, 5.0)
+    w = jnp.ones((5,), jnp.float32)
+    b = jnp.array([1, 0, 1, 0, 1], jnp.float32)
+    v = jnp.array([1, 1, 1, 1, 0, 0, 0, 0], jnp.float32)
+    got = topsis.topsis_closeness(m, w, b, v)
+    # Padding rows score exactly 0.
+    np.testing.assert_array_equal(np.asarray(got[4:]), np.zeros(4))
+    # Valid-row scores equal the unpadded problem's scores.
+    got_small = topsis.topsis_closeness(
+        m[:4], w, b, jnp.ones((4,), jnp.float32))
+    np.testing.assert_allclose(got[:4], got_small, rtol=1e-5, atol=1e-6)
+
+
+def test_topsis_closeness_in_unit_interval():
+    m = rand(3, (16, 8), 0.0, 100.0)
+    w = rand(4, (8,), 0.01, 1.0)
+    b = (rand(5, (8,)) > 0.3).astype(jnp.float32)
+    v = jnp.ones((16,), jnp.float32)
+    got = np.asarray(topsis.topsis_closeness(m, w, b, v))
+    assert (got >= -1e-6).all() and (got <= 1 + 1e-6).all()
+
+
+def test_topsis_dominant_row_wins():
+    # Row 0 strictly dominates: best on every criterion.
+    #            cost  cost  benefit benefit
+    m = jnp.array([
+        [0.1, 0.1, 9.0, 9.0],
+        [0.5, 0.8, 4.0, 2.0],
+        [0.9, 0.5, 1.0, 5.0],
+    ], jnp.float32)
+    w = jnp.ones((4,), jnp.float32)
+    b = jnp.array([0, 0, 1, 1], jnp.float32)
+    v = jnp.ones((3,), jnp.float32)
+    got = np.asarray(topsis.topsis_closeness(m, w, b, v))
+    assert got[0] == got.max()
+    # A fully dominant alternative coincides with the ideal point.
+    assert got[0] == pytest.approx(1.0, abs=1e-5)
+
+
+def test_topsis_identical_rows_tie():
+    m = jnp.tile(jnp.array([[1.0, 2.0, 3.0]], jnp.float32), (5, 1))
+    w = jnp.ones((3,), jnp.float32)
+    b = jnp.array([1, 0, 1], jnp.float32)
+    v = jnp.ones((5,), jnp.float32)
+    got = np.asarray(topsis.topsis_closeness(m, w, b, v))
+    assert np.allclose(got, got[0])
+
+
+def test_topsis_scale_invariance_per_column():
+    # Vector normalization: scaling one column by a constant must not
+    # change the ranking (and in fact not the scores at all).
+    m = rand(11, (8, 5), 0.5, 5.0)
+    w = rand(12, (5,), 0.1, 1.0)
+    b = jnp.array([1, 0, 1, 0, 1], jnp.float32)
+    v = jnp.ones((8,), jnp.float32)
+    scaled = m * jnp.array([1.0, 7.5, 1.0, 0.2, 1.0], jnp.float32)
+    a = topsis.topsis_closeness(m, w, b, v)
+    s = topsis.topsis_closeness(scaled, w, b, v)
+    np.testing.assert_allclose(a, s, rtol=1e-4, atol=1e-5)
+
+
+def test_topsis_weight_normalization_invariance():
+    m = rand(21, (6, 4), 0.1, 3.0)
+    w = jnp.array([1.0, 2.0, 3.0, 4.0], jnp.float32)
+    b = jnp.array([1, 1, 0, 0], jnp.float32)
+    v = jnp.ones((6,), jnp.float32)
+    a = topsis.topsis_closeness(m, w, b, v)
+    s = topsis.topsis_closeness(m, w * 10.0, b, v)
+    np.testing.assert_allclose(a, s, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------- LinReg
+
+@pytest.mark.parametrize("n,d", [(128, 4), (256, 16), (1024, 16),
+                                 (4096, 32), (8192, 64)])
+def test_linreg_grad_matches_ref(n, d):
+    key = jax.random.PRNGKey(n + d)
+    from compile import model
+    x, y, _ = model.make_dataset(key, n, d)
+    w = jax.random.normal(jax.random.PRNGKey(d), (d,), dtype=jnp.float32)
+    got = linreg.linreg_grad(w, x, y)
+    want = ref.linreg_grad_ref(w, x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_linreg_grad_matches_jax_autodiff():
+    # The closed-form kernel gradient IS the autodiff gradient of the loss.
+    from compile import model
+    x, y, _ = model.make_dataset(jax.random.PRNGKey(0), 256, 8)
+    w = rand(1, (8,))
+    got = linreg.linreg_grad(w, x, y)
+    want = jax.grad(ref.linreg_loss_ref)(w, x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_linreg_grad_zero_at_optimum():
+    from compile import model
+    x, y, w_true = model.make_dataset(jax.random.PRNGKey(5), 512, 8,
+                                      noise=0.0)
+    g = np.asarray(linreg.linreg_grad(w_true, x, y))
+    assert np.abs(g).max() < 1e-4
+
+
+def test_linreg_grad_block_rows_invariance():
+    from compile import model
+    x, y, _ = model.make_dataset(jax.random.PRNGKey(9), 512, 16)
+    w = rand(2, (16,))
+    a = linreg.linreg_grad(w, x, y, block_rows=128)
+    b = linreg.linreg_grad(w, x, y, block_rows=256)
+    c = linreg.linreg_grad(w, x, y, block_rows=512)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(a, c, rtol=1e-5, atol=1e-6)
+
+
+def test_linreg_grad_rejects_indivisible_block():
+    from compile import model
+    x, y, _ = model.make_dataset(jax.random.PRNGKey(9), 100, 4)
+    with pytest.raises(ValueError):
+        linreg.linreg_grad(jnp.zeros((4,)), x, y, block_rows=128)

@@ -1,0 +1,77 @@
+"""L2 model tests: shapes, training dynamics, scan semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_train_step_matches_ref():
+    x, y, _ = model.make_dataset(jax.random.PRNGKey(1), 1024, 16)
+    w0 = jnp.zeros((16,), jnp.float32)
+    got_w, got_l = model.linreg_train_step(w0, x, y, jnp.float32(0.5))
+    want_w, want_l = ref.linreg_step_ref(w0, x, y, jnp.float32(0.5))
+    np.testing.assert_allclose(got_w, want_w, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got_l, want_l, rtol=1e-5)
+
+
+def test_train_step_shapes():
+    for n, d in [(1024, 16), (4096, 32), (8192, 64)]:
+        x, y, _ = model.make_dataset(jax.random.PRNGKey(n), n, d)
+        w, loss = model.linreg_train_step(
+            jnp.zeros((d,), jnp.float32), x, y, jnp.float32(1.0))
+        assert w.shape == (d,)
+        assert loss.shape == ()
+
+
+def test_loss_decreases_over_epoch():
+    x, y, _ = model.make_dataset(jax.random.PRNGKey(7), 1024, 16)
+    w0 = jnp.zeros((16,), jnp.float32)
+    _, losses = model.linreg_train_epoch(w0, x, y, jnp.float32(1.0), 8)
+    losses = np.asarray(losses)
+    assert losses.shape == (8,)
+    # Strictly decreasing on a well-conditioned problem with lr=1.
+    assert (np.diff(losses) < 0).all(), losses
+    assert losses[-1] < 0.5 * losses[0]
+
+
+def test_epoch_equals_unrolled_steps():
+    x, y, _ = model.make_dataset(jax.random.PRNGKey(3), 512, 8)
+    w = jnp.full((8,), 0.1, jnp.float32)
+    lr = jnp.float32(0.7)
+    wf, losses = model.linreg_train_epoch(w, x, y, lr, 4)
+    w_manual, manual_losses = w, []
+    for _ in range(4):
+        w_manual, l = model.linreg_train_step(w_manual, x, y, lr)
+        manual_losses.append(float(l))
+    np.testing.assert_allclose(wf, w_manual, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(losses), manual_losses, rtol=1e-5)
+
+
+def test_converges_to_true_weights():
+    x, y, w_true = model.make_dataset(jax.random.PRNGKey(11), 2048, 8,
+                                      noise=0.0)
+    w = jnp.zeros((8,), jnp.float32)
+    for _ in range(10):
+        w, _ = model.linreg_train_epoch(w, x, y, jnp.float32(1.0), 8)
+    np.testing.assert_allclose(w, w_true, rtol=0.05, atol=0.05)
+
+
+def test_make_dataset_seeded_determinism():
+    a = model.make_dataset(jax.random.PRNGKey(42), 128, 4)
+    b = model.make_dataset(jax.random.PRNGKey(42), 128, 4)
+    for u, v in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+def test_topsis_score_tuple_contract():
+    m = jnp.ones((4, 8), jnp.float32)
+    w = jnp.ones((8,), jnp.float32)
+    b = jnp.zeros((8,), jnp.float32)
+    v = jnp.ones((4,), jnp.float32)
+    out = model.topsis_score(m, w, b, v)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (4,)

@@ -1,0 +1,107 @@
+"""Hypothesis property sweeps over the Pallas kernels (L1 contract).
+
+Shapes, weights, masks and dtypes are generated; every draw must satisfy
+the kernel-vs-ref equivalence plus TOPSIS's mathematical invariants.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import linreg, ref, topsis
+
+COMMON = dict(max_examples=25, deadline=None)
+
+
+def _matrix(key, n, c):
+    return jax.random.uniform(jax.random.PRNGKey(key), (n, c),
+                              minval=0.05, maxval=10.0, dtype=jnp.float32)
+
+
+@settings(**COMMON)
+@given(
+    n=st.integers(min_value=2, max_value=48),
+    c=st.integers(min_value=2, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_topsis_kernel_equals_ref(n, c, seed):
+    m = _matrix(seed, n, c)
+    w = jax.random.uniform(jax.random.PRNGKey(seed + 1), (c,),
+                           minval=0.01, maxval=1.0, dtype=jnp.float32)
+    b = (jax.random.uniform(jax.random.PRNGKey(seed + 2), (c,)) > 0.5
+         ).astype(jnp.float32)
+    v = jnp.ones((n,), jnp.float32)
+    got = topsis.topsis_closeness(m, w, b, v)
+    want = ref.topsis_ref(m, w, b, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(**COMMON)
+@given(
+    n=st.integers(min_value=2, max_value=32),
+    n_valid=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_topsis_padding_never_leaks(n, n_valid, seed):
+    n_valid = min(n_valid, n)
+    m = _matrix(seed, n, 5)
+    w = jnp.ones((5,), jnp.float32)
+    b = jnp.array([0, 0, 1, 1, 1], jnp.float32)
+    v = (jnp.arange(n) < n_valid).astype(jnp.float32)
+    got = np.asarray(topsis.topsis_closeness(m, w, b, v))
+    # Padded rows exactly zero.
+    assert (got[n_valid:] == 0.0).all()
+    # Scores of valid rows independent of padded-row contents.
+    m2 = m.at[n_valid:].set(999.0)
+    got2 = np.asarray(topsis.topsis_closeness(m2, w, b, v))
+    np.testing.assert_allclose(got[:n_valid], got2[:n_valid],
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(**COMMON)
+@given(
+    n=st.integers(min_value=3, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_topsis_improving_benefit_criterion_helps(n, seed):
+    """Raising a row's benefit entry (to the column max) cannot hurt it."""
+    c = 4
+    m = _matrix(seed, n, c)
+    w = jnp.ones((c,), jnp.float32)
+    b = jnp.array([1, 1, 0, 0], jnp.float32)
+    v = jnp.ones((n,), jnp.float32)
+    before = np.asarray(topsis.topsis_closeness(m, w, b, v))
+    m_up = m.at[0, 0].set(float(jnp.max(m[:, 0])) * 1.5)
+    after = np.asarray(topsis.topsis_closeness(m_up, w, b, v))
+    assert after[0] >= before[0] - 1e-5
+
+
+@settings(**COMMON)
+@given(
+    log_n=st.integers(min_value=7, max_value=12),
+    d=st.sampled_from([4, 8, 16, 32, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_linreg_grad_equals_ref_across_shapes(log_n, d, seed):
+    n = 2 ** log_n
+    key = jax.random.PRNGKey(seed)
+    from compile import model
+    x, y, _ = model.make_dataset(key, n, d)
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (d,),
+                          dtype=jnp.float32)
+    got = linreg.linreg_grad(w, x, y)
+    want = ref.linreg_grad_ref(w, x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+@settings(**COMMON)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_linreg_step_reduces_loss(seed):
+    from compile import model
+    x, y, _ = model.make_dataset(jax.random.PRNGKey(seed), 512, 8)
+    w0 = jax.random.normal(jax.random.PRNGKey(seed + 1), (8,),
+                           dtype=jnp.float32)
+    w1, loss0 = model.linreg_train_step(w0, x, y, jnp.float32(0.5))
+    _, loss1 = model.linreg_train_step(w1, x, y, jnp.float32(0.5))
+    assert float(loss1) <= float(loss0) + 1e-6

@@ -1,0 +1,61 @@
+//! Bench: per-pod scheduling latency — the paper's "scheduling time
+//! (ms)" overhead metric (Table IV), GreenPod TOPSIS vs the default
+//! scheduler, swept over cluster sizes (the paper's 6-node Table I
+//! cluster up to 96 nodes).
+
+use greenpod::cluster::ClusterState;
+use greenpod::config::{
+    ClusterConfig, Config, SchedulerKind, WeightingScheme,
+};
+use greenpod::scheduler::{
+    DefaultK8sScheduler, Estimator, GreenPodScheduler, Scheduler,
+};
+use greenpod::util::bench::Bench;
+use greenpod::workload::WorkloadClass;
+
+fn main() {
+    let cfg = Config::paper_default();
+    let mut b = Bench::new();
+
+    for scale in [1usize, 4, 16] {
+        let cluster = ClusterConfig::scaled(scale);
+        let n_nodes = cluster.total_nodes();
+        let state = ClusterState::from_config(&cluster);
+        let pod = greenpod::cluster::Pod::new(
+            0,
+            WorkloadClass::Medium,
+            SchedulerKind::Topsis,
+            0.0,
+            4,
+        );
+
+        let mut greenpod_sched = GreenPodScheduler::new(
+            Estimator::with_defaults(cfg.energy.clone()),
+            WeightingScheme::EnergyCentric,
+        );
+        b.bench(&format!("schedule/greenpod-topsis/{n_nodes}-nodes"), || {
+            greenpod_sched.schedule(&state, &pod).node
+        });
+
+        let mut default_sched = DefaultK8sScheduler::new(1);
+        b.bench(&format!("schedule/default-k8s/{n_nodes}-nodes"), || {
+            default_sched.schedule(&state, &pod).node
+        });
+    }
+
+    // Decision-matrix construction alone (scoring excluded), to show
+    // where the TOPSIS overhead lives.
+    let state = ClusterState::from_config(&ClusterConfig::scaled(16));
+    let pod = greenpod::cluster::Pod::new(
+        0, WorkloadClass::Medium, SchedulerKind::Topsis, 0.0, 4);
+    let greenpod_sched = GreenPodScheduler::new(
+        Estimator::with_defaults(cfg.energy.clone()),
+        WeightingScheme::EnergyCentric,
+    );
+    let candidates = state.feasible_nodes(pod.requests);
+    b.bench("schedule/decision-matrix-only/96-nodes", || {
+        greenpod_sched.decision_problem(&state, &pod, &candidates).n
+    });
+
+    b.finish();
+}

@@ -1,0 +1,62 @@
+//! Bench: discrete-event simulation throughput — full deployment runs
+//! per competition level and a scaled stress run (the engine is the
+//! substrate every experiment stands on; see EXPERIMENTS.md §Perf).
+
+use greenpod::config::{
+    ClusterConfig, CompetitionLevel, Config, WeightingScheme,
+};
+use greenpod::experiments::{run_once, ExperimentContext};
+use greenpod::scheduler::{DefaultK8sScheduler, Estimator, GreenPodScheduler};
+use greenpod::simulation::{SimulationEngine, SimulationParams};
+use greenpod::util::bench::Bench;
+use greenpod::workload::{ArrivalTrace, TraceSpec, WorkloadExecutor};
+
+fn main() {
+    let cfg = Config::paper_default();
+    let ctx = ExperimentContext::new(cfg.clone());
+    let executor = WorkloadExecutor::analytic();
+    let mut b = Bench::new();
+
+    for level in CompetitionLevel::ALL {
+        let mut seed = 0u64;
+        b.bench(
+            &format!(
+                "simulation/{}-competition/{}-pods",
+                level.label().to_lowercase(),
+                level.total_pods()
+            ),
+            || {
+                seed += 1;
+                run_once(&ctx, level, WeightingScheme::General, seed,
+                         &executor)
+                    .makespan_s
+            },
+        );
+    }
+
+    // Stress: a 24-node cluster fed a 500-pod Poisson trace.
+    let mut big = Config::paper_default();
+    big.cluster = ClusterConfig::scaled(4);
+    let trace = ArrivalTrace::poisson(&TraceSpec::surf_lisa(2.0, 250.0), 3);
+    let n_pods = trace.entries.len();
+    let engine = SimulationEngine::new(
+        &big,
+        SimulationParams { contention_beta: 0.35, seed: 3 },
+        &executor,
+    );
+    b.bench(
+        &format!("simulation/stress/24-nodes/{n_pods}-pods"),
+        || {
+            let pods =
+                trace.to_pods(greenpod::config::SchedulerKind::Topsis);
+            let mut topsis = GreenPodScheduler::new(
+                Estimator::with_defaults(big.energy.clone()),
+                WeightingScheme::EnergyCentric,
+            );
+            let mut default = DefaultK8sScheduler::new(3);
+            engine.run(pods, &mut topsis, &mut default).records.len()
+        },
+    );
+
+    b.finish();
+}

@@ -1,0 +1,51 @@
+//! Bench: Table VI regeneration — the full factorial cell (one run per
+//! iteration) for every competition level, plus the complete Table VI
+//! at the end (so `cargo bench` reproduces the paper's headline table).
+
+use greenpod::config::{CompetitionLevel, Config, WeightingScheme};
+use greenpod::experiments::{run_once, run_table6, ExperimentContext};
+use greenpod::metrics::format_table;
+use greenpod::util::bench::Bench;
+use greenpod::workload::WorkloadExecutor;
+
+fn main() {
+    let mut cfg = Config::paper_default();
+    cfg.experiment.replications = 1;
+    let ctx = ExperimentContext::new(cfg);
+    let executor = WorkloadExecutor::analytic();
+
+    let mut b = Bench::new();
+    for level in CompetitionLevel::ALL {
+        let mut seed = 0u64;
+        b.bench(
+            &format!(
+                "table6/run_once/{}-competition ({} pods)",
+                level.label().to_lowercase(),
+                level.total_pods()
+            ),
+            || {
+                seed += 1;
+                run_once(
+                    &ctx,
+                    level,
+                    WeightingScheme::EnergyCentric,
+                    seed,
+                    &executor,
+                )
+                .records
+                .len()
+            },
+        );
+    }
+    b.finish();
+
+    // Regenerate the full table (5 replications) as the bench artifact.
+    let mut cfg = Config::paper_default();
+    cfg.experiment.replications = 5;
+    let t6 = run_table6(&ExperimentContext::new(cfg));
+    println!("\n{}", format_table(&t6.to_table()));
+    println!(
+        "\nall-levels average optimization: {:.2}% (paper: 19.38%)",
+        t6.average_optimization_pct
+    );
+}

@@ -1,0 +1,62 @@
+//! Bench: MCDA scoring backends — pure-Rust TOPSIS vs SAW/VIKOR/COPRAS
+//! at growing candidate counts, and the PJRT Pallas-kernel backend
+//! (compiled-artifact execution) against the Rust path it must match.
+
+use std::rc::Rc;
+
+use greenpod::mcda::{Criterion, DecisionProblem, McdaMethod};
+use greenpod::runtime::{ArtifactRegistry, PjrtTopsisEngine};
+use greenpod::util::bench::Bench;
+use greenpod::util::rng::Rng;
+
+fn problem(n: usize, seed: u64) -> DecisionProblem {
+    let mut rng = Rng::seed_from_u64(seed);
+    let c = 5;
+    let matrix: Vec<f64> =
+        (0..n * c).map(|_| rng.range_f64(0.1, 10.0)).collect();
+    DecisionProblem::new(
+        matrix,
+        n,
+        vec![
+            Criterion::cost(0.15),
+            Criterion::cost(0.40),
+            Criterion::benefit(0.15),
+            Criterion::benefit(0.15),
+            Criterion::benefit(0.15),
+        ],
+    )
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    for n in [6usize, 24, 96, 384] {
+        let p = problem(n, 42);
+        for method in McdaMethod::ALL {
+            b.bench(
+                &format!("mcda/{method:?}/{n}-alternatives").to_lowercase(),
+                || method.scores(&p),
+            );
+        }
+    }
+
+    // PJRT backend (needs `make artifacts`); skipped gracefully if absent.
+    match ArtifactRegistry::open_default() {
+        Ok(reg) => {
+            let reg = Rc::new(reg);
+            let mut engine = PjrtTopsisEngine::new(reg);
+            for n in [4usize, 16, 64] {
+                let p = problem(n, 7);
+                // Warm the compile cache outside the timing loop.
+                engine.closeness(&p).expect("pjrt scoring");
+                b.bench(&format!("mcda/pjrt-pallas-topsis/{n}-alternatives"),
+                        || engine.closeness(&p).unwrap().len());
+            }
+        }
+        Err(e) => {
+            eprintln!("skipping PJRT benches (run `make artifacts`): {e}");
+        }
+    }
+
+    b.finish();
+}

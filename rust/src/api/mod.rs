@@ -1,0 +1,413 @@
+//! In-process kube-like API loop: live pod submission, binding, and
+//! completion events — the "serving" counterpart of the discrete-event
+//! simulation.
+//!
+//! Pods arrive on an `std::sync::mpsc` channel (from a trace replayer,
+//! stdin, or a test thread); the loop schedules each with its owner
+//! scheduler, models execution as a deadline on a monotonic timer wheel
+//! (a `BinaryHeap` of `Instant`s, compressed by `time_scale`), and
+//! emits lifecycle events through a callback. Everything runs on one
+//! thread: schedulers and PJRT executables are not `Send`, and
+//! kube-scheduler's own scheduling cycle is sequential per profile too.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use crate::cluster::{ClusterState, Pod, PodId};
+use crate::config::{Config, SchedulerKind};
+use crate::energy::EnergyMeter;
+use crate::scheduler::Scheduler;
+use crate::simulation::contention_factor;
+use crate::util::json::Json;
+use crate::workload::{TraceEntry, WorkloadExecutor};
+
+/// A pod submission (what `kubectl apply` would carry).
+#[derive(Debug, Clone)]
+pub struct PodSubmission {
+    pub entry: TraceEntry,
+    pub scheduler: SchedulerKind,
+}
+
+/// Lifecycle events emitted by the loop.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiEvent {
+    Bound {
+        pod: PodId,
+        name: String,
+        node: String,
+        sched_latency_us: f64,
+    },
+    Unschedulable {
+        pod: PodId,
+        name: String,
+    },
+    Completed {
+        pod: PodId,
+        name: String,
+        duration_s: f64,
+        joules: f64,
+    },
+    Drained {
+        completed: u64,
+        unschedulable: u64,
+        total_kj: f64,
+    },
+}
+
+impl ApiEvent {
+    /// JSON-lines rendering (the `serve` subcommand's output format).
+    pub fn to_json(&self) -> Json {
+        match self {
+            ApiEvent::Bound { pod, name, node, sched_latency_us } => {
+                Json::obj(vec![
+                    ("event", Json::Str("bound".into())),
+                    ("pod", Json::Num(*pod as f64)),
+                    ("name", Json::Str(name.clone())),
+                    ("node", Json::Str(node.clone())),
+                    ("sched_latency_us", Json::Num(*sched_latency_us)),
+                ])
+            }
+            ApiEvent::Unschedulable { pod, name } => Json::obj(vec![
+                ("event", Json::Str("unschedulable".into())),
+                ("pod", Json::Num(*pod as f64)),
+                ("name", Json::Str(name.clone())),
+            ]),
+            ApiEvent::Completed { pod, name, duration_s, joules } => {
+                Json::obj(vec![
+                    ("event", Json::Str("completed".into())),
+                    ("pod", Json::Num(*pod as f64)),
+                    ("name", Json::Str(name.clone())),
+                    ("duration_s", Json::Num(*duration_s)),
+                    ("joules", Json::Num(*joules)),
+                ])
+            }
+            ApiEvent::Drained { completed, unschedulable, total_kj } => {
+                Json::obj(vec![
+                    ("event", Json::Str("drained".into())),
+                    ("completed", Json::Num(*completed as f64)),
+                    ("unschedulable", Json::Num(*unschedulable as f64)),
+                    ("total_kj", Json::Num(*total_kj)),
+                ])
+            }
+        }
+    }
+}
+
+/// Timer-wheel entry: a running pod's completion deadline.
+struct Running {
+    due: Instant,
+    seq: u64,
+    pod: Pod,
+    duration_s: f64,
+    joules: f64,
+}
+
+impl PartialEq for Running {
+    fn eq(&self, other: &Self) -> bool {
+        self.due == other.due && self.seq == other.seq
+    }
+}
+impl Eq for Running {}
+impl Ord for Running {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.due.cmp(&other.due).then(self.seq.cmp(&other.seq))
+    }
+}
+impl PartialOrd for Running {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The serve loop.
+pub struct ApiLoop {
+    config: Config,
+    executor: WorkloadExecutor,
+    /// Virtual-seconds-per-real-second compression for executions
+    /// (e.g. 100.0 replays a 50 s workload in 0.5 s of wall time).
+    pub time_scale: f64,
+}
+
+impl ApiLoop {
+    pub fn new(config: Config, executor: WorkloadExecutor) -> Self {
+        Self { config, executor, time_scale: 100.0 }
+    }
+
+    /// Drain `rx`, scheduling each submission with its owner scheduler;
+    /// deliver events through `on_event`. Returns when `rx` disconnects
+    /// and all running pods have completed.
+    pub fn run(
+        &self,
+        rx: Receiver<PodSubmission>,
+        on_event: &mut dyn FnMut(ApiEvent),
+        topsis: &mut dyn Scheduler,
+        default: &mut dyn Scheduler,
+    ) -> anyhow::Result<()> {
+        let mut state = ClusterState::from_config(&self.config.cluster);
+        let mut meter = EnergyMeter::new();
+        let mut timers: BinaryHeap<Reverse<Running>> = BinaryHeap::new();
+        let mut pending: Vec<Pod> = Vec::new();
+        let mut next_id: PodId = 0;
+        let mut seq: u64 = 0;
+        let mut completed = 0u64;
+        let mut input_open = true;
+
+        loop {
+            // 1. Fire due completions.
+            let now = Instant::now();
+            while timers.peek().is_some_and(|Reverse(r)| r.due <= now) {
+                let Reverse(run) = timers.pop().unwrap();
+                state.release(run.pod.id, 0.0)?;
+                completed += 1;
+                on_event(ApiEvent::Completed {
+                    pod: run.pod.id,
+                    name: run.pod.name.clone(),
+                    duration_s: run.duration_s,
+                    joules: run.joules,
+                });
+                // Retry pending pods in FIFO order.
+                let mut still = Vec::new();
+                for pod in pending.drain(..) {
+                    if let Some(pod) = self.try_start(
+                        pod, &mut state, &mut meter, &mut timers, &mut seq,
+                        on_event, topsis, default,
+                    )? {
+                        still.push(pod);
+                    }
+                }
+                pending = still;
+            }
+
+            // 2. Exit when drained.
+            if !input_open && timers.is_empty() {
+                break;
+            }
+
+            // 3. Wait for the next submission or the next deadline.
+            let timeout = timers
+                .peek()
+                .map(|Reverse(r)| {
+                    r.due.saturating_duration_since(Instant::now())
+                })
+                .unwrap_or(Duration::from_millis(50));
+            if !input_open {
+                std::thread::sleep(timeout);
+                continue;
+            }
+            match rx.recv_timeout(timeout) {
+                Ok(sub) => {
+                    let pod = Pod::new(
+                        next_id,
+                        sub.entry.class,
+                        sub.scheduler,
+                        0.0,
+                        sub.entry.epochs,
+                    );
+                    next_id += 1;
+                    if let Some(pod) = self.try_start(
+                        pod, &mut state, &mut meter, &mut timers, &mut seq,
+                        on_event, topsis, default,
+                    )? {
+                        pending.push(pod);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => input_open = false,
+            }
+        }
+
+        let unschedulable = pending.len() as u64;
+        for pod in pending {
+            on_event(ApiEvent::Unschedulable { pod: pod.id, name: pod.name });
+        }
+        let total_kj = meter.total_kj(SchedulerKind::Topsis)
+            + meter.total_kj(SchedulerKind::DefaultK8s);
+        on_event(ApiEvent::Drained { completed, unschedulable, total_kj });
+        Ok(())
+    }
+
+    /// Schedule + start one pod. Returns `Ok(Some(pod))` if it has to
+    /// stay pending, `Ok(None)` if it started.
+    #[allow(clippy::too_many_arguments)]
+    fn try_start(
+        &self,
+        pod: Pod,
+        state: &mut ClusterState,
+        meter: &mut EnergyMeter,
+        timers: &mut BinaryHeap<Reverse<Running>>,
+        seq: &mut u64,
+        on_event: &mut dyn FnMut(ApiEvent),
+        topsis: &mut dyn Scheduler,
+        default: &mut dyn Scheduler,
+    ) -> anyhow::Result<Option<Pod>> {
+        let decision = match pod.scheduler {
+            SchedulerKind::Topsis => topsis.schedule(state, &pod),
+            SchedulerKind::DefaultK8s => default.schedule(state, &pod),
+        };
+        let Some(node_id) = decision.node else {
+            return Ok(Some(pod));
+        };
+        state.bind(&pod, node_id, 0.0)?;
+
+        let node = state.node(node_id).clone();
+        let outcome = self.executor.execute(&pod, &node, pod.id)?;
+        let share = pod.requests.cpu_millis as f64 / node.cpu_millis as f64;
+        let duration = outcome.base_secs
+            * contention_factor(
+                self.config.experiment.contention_beta,
+                state.cpu_utilization(node_id),
+                share,
+            );
+        let joules = meter.record(
+            &self.config.energy,
+            pod.id,
+            pod.class,
+            pod.scheduler,
+            &node,
+            share,
+            duration,
+        );
+
+        on_event(ApiEvent::Bound {
+            pod: pod.id,
+            name: pod.name.clone(),
+            node: node.name.clone(),
+            sched_latency_us: decision.latency.as_secs_f64() * 1e6,
+        });
+
+        let due = Instant::now()
+            + Duration::from_secs_f64(duration / self.time_scale.max(1e-9));
+        timers.push(Reverse(Running {
+            due,
+            seq: *seq,
+            pod,
+            duration_s: duration,
+            joules,
+        }));
+        *seq += 1;
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WeightingScheme;
+    use crate::scheduler::{
+        DefaultK8sScheduler, Estimator, GreenPodScheduler,
+    };
+    use crate::workload::WorkloadClass;
+
+    #[test]
+    fn serve_loop_processes_submissions() {
+        let config = Config::paper_default();
+        let mut api =
+            ApiLoop::new(config.clone(), WorkloadExecutor::analytic());
+        api.time_scale = 100_000.0; // fast test
+
+        let (sub_tx, sub_rx) = std::sync::mpsc::channel();
+        for i in 0..6u64 {
+            let class = match i % 3 {
+                0 => WorkloadClass::Light,
+                1 => WorkloadClass::Medium,
+                _ => WorkloadClass::Complex,
+            };
+            sub_tx
+                .send(PodSubmission {
+                    entry: TraceEntry { at_s: 0.0, class, epochs: 1 },
+                    scheduler: if i % 2 == 0 {
+                        SchedulerKind::Topsis
+                    } else {
+                        SchedulerKind::DefaultK8s
+                    },
+                })
+                .unwrap();
+        }
+        drop(sub_tx);
+
+        let mut topsis = GreenPodScheduler::new(
+            Estimator::with_defaults(config.energy.clone()),
+            WeightingScheme::EnergyCentric,
+        );
+        let mut default = DefaultK8sScheduler::new(1);
+        let mut events = Vec::new();
+        api.run(sub_rx, &mut |e| events.push(e), &mut topsis, &mut default)
+            .unwrap();
+
+        let bound = events
+            .iter()
+            .filter(|e| matches!(e, ApiEvent::Bound { .. }))
+            .count();
+        let done = events
+            .iter()
+            .filter(|e| matches!(e, ApiEvent::Completed { .. }))
+            .count();
+        assert_eq!(bound, 6);
+        assert_eq!(done, 6);
+        match events.last().unwrap() {
+            ApiEvent::Drained { completed, unschedulable, total_kj } => {
+                assert_eq!(*completed, 6);
+                assert_eq!(*unschedulable, 0);
+                assert!(*total_kj > 0.0);
+            }
+            other => panic!("last event {other:?}"),
+        }
+    }
+
+    #[test]
+    fn overload_goes_pending_then_completes() {
+        // More complex pods than the cluster can hold at once: the
+        // pending queue must drain as completions free capacity.
+        let config = Config::paper_default();
+        let mut api =
+            ApiLoop::new(config.clone(), WorkloadExecutor::analytic());
+        api.time_scale = 100_000.0;
+        let (sub_tx, sub_rx) = std::sync::mpsc::channel();
+        for _ in 0..12 {
+            sub_tx
+                .send(PodSubmission {
+                    entry: TraceEntry {
+                        at_s: 0.0,
+                        class: WorkloadClass::Complex,
+                        epochs: 1,
+                    },
+                    scheduler: SchedulerKind::Topsis,
+                })
+                .unwrap();
+        }
+        drop(sub_tx);
+        let mut topsis = GreenPodScheduler::new(
+            Estimator::with_defaults(config.energy.clone()),
+            WeightingScheme::General,
+        );
+        let mut default = DefaultK8sScheduler::new(1);
+        let mut completed = 0;
+        api.run(
+            sub_rx,
+            &mut |e| {
+                if matches!(e, ApiEvent::Completed { .. }) {
+                    completed += 1;
+                }
+            },
+            &mut topsis,
+            &mut default,
+        )
+        .unwrap();
+        assert_eq!(completed, 12);
+    }
+
+    #[test]
+    fn event_json_shape() {
+        let e = ApiEvent::Bound {
+            pod: 3,
+            name: "p".into(),
+            node: "n".into(),
+            sched_latency_us: 12.5,
+        };
+        let j = e.to_json().to_string();
+        assert!(j.contains("\"event\":\"bound\""), "{j}");
+        assert!(j.contains("\"pod\":3"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Kubernetes-like cluster-state substrate.
+//!
+//! The paper evaluates on a live GKE cluster; this module is the
+//! substituted substrate (DESIGN.md §1): nodes with capacity/allocatable
+//! accounting, pods with resource requests and a lifecycle, and a
+//! cluster state that enforces the same invariants a kubelet +
+//! API-server pair would (no overcommit of requests, bind/release
+//! symmetry, NotReady exclusion).
+
+mod node;
+mod pod;
+mod state;
+
+pub use node::{Node, NodeCategory, NodeId};
+pub use pod::{Pod, PodId, PodPhase, ResourceRequests};
+pub use state::{ClusterEvent, ClusterState};

@@ -1,0 +1,99 @@
+//! Cluster nodes: the heterogeneous machines of paper Table I.
+
+
+/// Node category from Table I. Ordering is the paper's reporting order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum NodeCategory {
+    /// e2-medium — energy-efficient, minimal resources.
+    A,
+    /// n2-standard-2 — balanced performance.
+    B,
+    /// n2-standard-4 — high-performance, high resource.
+    C,
+    /// e2-standard-2 — system components pool.
+    Default,
+}
+
+impl NodeCategory {
+    pub const ALL: [NodeCategory; 4] = [
+        NodeCategory::A,
+        NodeCategory::B,
+        NodeCategory::C,
+        NodeCategory::Default,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            NodeCategory::A => "A",
+            NodeCategory::B => "B",
+            NodeCategory::C => "C",
+            NodeCategory::Default => "Default",
+        }
+    }
+}
+
+impl std::fmt::Display for NodeCategory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Dense node index within a [`crate::cluster::ClusterState`].
+pub type NodeId = usize;
+
+/// One cluster node. Capacity is fixed; live allocation is tracked by
+/// [`crate::cluster::ClusterState`], not here, so `Node` stays cheap to
+/// share with estimators and scorers.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub category: NodeCategory,
+    /// GCE machine type (informational).
+    pub machine_type: String,
+    /// Capacity in millicores (kubelet "allocatable").
+    pub cpu_millis: u64,
+    /// Capacity in MiB.
+    pub memory_mib: u64,
+    /// Relative per-core execution speed (1.0 = n2 baseline).
+    pub speed_factor: f64,
+    /// Dayarathna blade-model scale for this hardware class.
+    pub power_scale: f64,
+    /// NotReady nodes are excluded from scheduling (failure injection).
+    pub ready: bool,
+}
+
+impl Node {
+    /// vCPU count (capacity / 1000m).
+    pub fn vcpus(&self) -> f64 {
+        self.cpu_millis as f64 / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn category_labels_roundtrip_display() {
+        for c in NodeCategory::ALL {
+            assert_eq!(format!("{c}"), c.label());
+        }
+    }
+
+    #[test]
+    fn vcpu_conversion() {
+        let n = Node {
+            id: 0,
+            name: "n".into(),
+            category: NodeCategory::C,
+            machine_type: "n2-standard-4".into(),
+            cpu_millis: 4000,
+            memory_mib: 16384,
+            speed_factor: 1.1,
+            power_scale: 1.6,
+            ready: true,
+        };
+        assert_eq!(n.vcpus(), 4.0);
+    }
+}

@@ -1,0 +1,89 @@
+//! Pods: containerized workload instances (paper Table II rows).
+
+
+use crate::config::SchedulerKind;
+use crate::workload::WorkloadClass;
+
+/// Unique pod identifier within a run.
+pub type PodId = u64;
+
+/// CPU/memory requests — what the scheduler reserves (kube semantics:
+/// requests gate placement; we do not model limits separately).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ResourceRequests {
+    pub cpu_millis: u64,
+    pub memory_mib: u64,
+}
+
+/// Kube-style pod lifecycle, reduced to what the simulation needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PodPhase {
+    Pending,
+    Running,
+    Succeeded,
+    /// Could not be placed on any node (stays in queue or fails the run,
+    /// depending on engine policy).
+    Unschedulable,
+}
+
+/// One pod to place and execute.
+#[derive(Debug, Clone)]
+pub struct Pod {
+    pub id: PodId,
+    pub name: String,
+    /// Workload class — determines requests, artifact, and work size.
+    pub class: WorkloadClass,
+    /// Which scheduler owns this pod (Table V half/half split). Mirrors
+    /// the `schedulerName` field of a real pod spec.
+    pub scheduler: SchedulerKind,
+    pub requests: ResourceRequests,
+    /// Submission time (simulated seconds).
+    pub arrival_s: f64,
+    /// SGD epochs to run (work size; see `ExperimentConfig::epochs_for`).
+    pub epochs: u32,
+    pub phase: PodPhase,
+}
+
+impl Pod {
+    pub fn new(
+        id: PodId,
+        class: WorkloadClass,
+        scheduler: SchedulerKind,
+        arrival_s: f64,
+        epochs: u32,
+    ) -> Self {
+        Self {
+            id,
+            name: format!(
+                "{}-{}-{id}",
+                class.label_lower(),
+                match scheduler {
+                    SchedulerKind::Topsis => "topsis",
+                    SchedulerKind::DefaultK8s => "default",
+                }
+            ),
+            class,
+            scheduler,
+            requests: class.requests(),
+            arrival_s,
+            epochs,
+            phase: PodPhase::Pending,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pod_names_encode_class_and_scheduler() {
+        let p = Pod::new(7, WorkloadClass::Medium, SchedulerKind::Topsis,
+                         0.0, 4);
+        assert_eq!(p.name, "medium-topsis-7");
+        assert_eq!(p.phase, PodPhase::Pending);
+        // Table II: medium requests 0.5 CPU / 1 GB.
+        assert_eq!(p.requests.cpu_millis, 500);
+        assert_eq!(p.requests.memory_mib, 1024);
+    }
+}

@@ -1,0 +1,277 @@
+//! Live cluster state: allocatable accounting + bind/release, the
+//! invariant-bearing core the schedulers and the simulation share.
+
+use std::collections::HashMap;
+
+
+use super::{Node, NodeCategory, NodeId, Pod, PodId, ResourceRequests};
+use crate::config::ClusterConfig;
+
+/// Events the state emits (consumed by metrics & the api watch loop).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterEvent {
+    Bound { pod: PodId, node: NodeId, at_s: f64 },
+    Released { pod: PodId, node: NodeId, at_s: f64 },
+    NodeReady { node: NodeId, ready: bool, at_s: f64 },
+}
+
+/// Per-node live allocation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+struct Alloc {
+    cpu_millis: u64,
+    memory_mib: u64,
+    pods: u32,
+}
+
+/// The cluster: fixed node set + mutable allocation state.
+///
+/// Invariants (enforced here, property-tested in `rust/tests/`):
+/// * allocated ≤ capacity on every node, always;
+/// * a pod is bound to at most one node;
+/// * release exactly undoes the matching bind.
+#[derive(Debug, Clone)]
+pub struct ClusterState {
+    nodes: Vec<Node>,
+    alloc: Vec<Alloc>,
+    bound: HashMap<PodId, (NodeId, ResourceRequests)>,
+    events: Vec<ClusterEvent>,
+}
+
+impl ClusterState {
+    /// Materialize the Table I cluster from config.
+    pub fn from_config(cfg: &ClusterConfig) -> Self {
+        let mut nodes = Vec::with_capacity(cfg.total_nodes());
+        for pool in &cfg.pools {
+            for i in 0..pool.count {
+                let id = nodes.len();
+                nodes.push(Node {
+                    id,
+                    name: format!(
+                        "{}-{}-{i}",
+                        pool.machine_type,
+                        pool.category.label().to_lowercase()
+                    ),
+                    category: pool.category,
+                    machine_type: pool.machine_type.clone(),
+                    cpu_millis: pool.cpu_millis,
+                    memory_mib: pool.memory_mib,
+                    speed_factor: pool.speed_factor,
+                    power_scale: pool.power_scale,
+                    ready: true,
+                });
+            }
+        }
+        let alloc = vec![Alloc::default(); nodes.len()];
+        Self { nodes, alloc, bound: HashMap::new(), events: Vec::new() }
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn events(&self) -> &[ClusterEvent] {
+        &self.events
+    }
+
+    /// Free CPU on a node (millicores).
+    pub fn free_cpu(&self, id: NodeId) -> u64 {
+        self.nodes[id].cpu_millis - self.alloc[id].cpu_millis
+    }
+
+    /// Free memory on a node (MiB).
+    pub fn free_memory(&self, id: NodeId) -> u64 {
+        self.nodes[id].memory_mib - self.alloc[id].memory_mib
+    }
+
+    /// Requested-CPU utilization fraction of a node, in `[0, 1]`.
+    pub fn cpu_utilization(&self, id: NodeId) -> f64 {
+        self.alloc[id].cpu_millis as f64 / self.nodes[id].cpu_millis as f64
+    }
+
+    /// Requested-memory utilization fraction of a node, in `[0, 1]`.
+    pub fn memory_utilization(&self, id: NodeId) -> f64 {
+        self.alloc[id].memory_mib as f64 / self.nodes[id].memory_mib as f64
+    }
+
+    /// Number of pods currently bound to `id`.
+    pub fn pods_on(&self, id: NodeId) -> u32 {
+        self.alloc[id].pods
+    }
+
+    /// Node the pod is currently bound to, if any.
+    pub fn node_of(&self, pod: PodId) -> Option<NodeId> {
+        self.bound.get(&pod).map(|(n, _)| *n)
+    }
+
+    /// Whether `requests` fit on node `id` right now (kube
+    /// NodeResourcesFit filter semantics, plus readiness).
+    pub fn fits(&self, id: NodeId, requests: ResourceRequests) -> bool {
+        self.nodes[id].ready
+            && self.free_cpu(id) >= requests.cpu_millis
+            && self.free_memory(id) >= requests.memory_mib
+    }
+
+    /// Ready nodes where `requests` fit — the scheduler's candidate set.
+    pub fn feasible_nodes(&self, requests: ResourceRequests) -> Vec<NodeId> {
+        (0..self.nodes.len())
+            .filter(|&id| self.fits(id, requests))
+            .collect()
+    }
+
+    /// Bind a pod (reserve its requests). Errors if it does not fit or
+    /// the pod is already bound — the invariants the API server enforces.
+    pub fn bind(
+        &mut self,
+        pod: &Pod,
+        node: NodeId,
+        at_s: f64,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.bound.contains_key(&pod.id),
+            "pod {} already bound",
+            pod.name
+        );
+        anyhow::ensure!(
+            self.fits(node, pod.requests),
+            "pod {} does not fit on node {}",
+            pod.name,
+            self.nodes[node].name
+        );
+        let a = &mut self.alloc[node];
+        a.cpu_millis += pod.requests.cpu_millis;
+        a.memory_mib += pod.requests.memory_mib;
+        a.pods += 1;
+        self.bound.insert(pod.id, (node, pod.requests));
+        self.events.push(ClusterEvent::Bound { pod: pod.id, node, at_s });
+        Ok(())
+    }
+
+    /// Release a pod's reservation (completion or failure).
+    pub fn release(&mut self, pod: PodId, at_s: f64) -> anyhow::Result<NodeId> {
+        let (node, req) = self
+            .bound
+            .remove(&pod)
+            .ok_or_else(|| anyhow::anyhow!("pod {pod} not bound"))?;
+        let a = &mut self.alloc[node];
+        a.cpu_millis -= req.cpu_millis;
+        a.memory_mib -= req.memory_mib;
+        a.pods -= 1;
+        self.events.push(ClusterEvent::Released { pod, node, at_s });
+        Ok(node)
+    }
+
+    /// Failure injection: flip a node's readiness. Running pods keep
+    /// their reservation (kube semantics: NotReady gates *new* bindings).
+    pub fn set_ready(&mut self, node: NodeId, ready: bool, at_s: f64) {
+        self.nodes[node].ready = ready;
+        self.events.push(ClusterEvent::NodeReady { node, ready, at_s });
+    }
+
+    /// Pods bound per category — §V.D's allocation analysis.
+    pub fn pods_per_category(&self) -> HashMap<NodeCategory, u32> {
+        let mut out = HashMap::new();
+        for (&_pod, &(node, _)) in &self.bound {
+            *out.entry(self.nodes[node].category).or_insert(0) += 1;
+        }
+        out
+    }
+
+    /// Cluster-wide requested-CPU utilization in `[0, 1]`.
+    pub fn total_cpu_utilization(&self) -> f64 {
+        let used: u64 = self.alloc.iter().map(|a| a.cpu_millis).sum();
+        let cap: u64 = self.nodes.iter().map(|n| n.cpu_millis).sum();
+        used as f64 / cap as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedulerKind;
+    use crate::workload::WorkloadClass;
+
+    fn state() -> ClusterState {
+        ClusterState::from_config(&ClusterConfig::paper_default())
+    }
+
+    fn pod(id: PodId, class: WorkloadClass) -> Pod {
+        Pod::new(id, class, SchedulerKind::Topsis, 0.0, 1)
+    }
+
+    #[test]
+    fn from_config_materializes_table1() {
+        let s = state();
+        assert_eq!(s.nodes().len(), 7);
+        assert_eq!(s.nodes()[0].category, NodeCategory::A);
+        assert_eq!(s.free_cpu(0), 2000);
+        assert_eq!(s.free_memory(3), 8192); // first B node
+    }
+
+    #[test]
+    fn bind_release_roundtrip() {
+        let mut s = state();
+        let p = pod(1, WorkloadClass::Complex);
+        s.bind(&p, 5, 0.0).unwrap(); // node 5 = the C node
+        assert_eq!(s.free_cpu(5), 3000);
+        assert_eq!(s.node_of(1), Some(5));
+        assert_eq!(s.pods_on(5), 1);
+        let n = s.release(1, 1.0).unwrap();
+        assert_eq!(n, 5);
+        assert_eq!(s.free_cpu(5), 4000);
+        assert_eq!(s.node_of(1), None);
+        assert_eq!(s.events().len(), 2);
+    }
+
+    #[test]
+    fn overcommit_rejected() {
+        let mut s = state();
+        // Node 0 (A, 2000m): two complex pods (1000m each) fit; a third
+        // complex does not.
+        s.bind(&pod(1, WorkloadClass::Complex), 0, 0.0).unwrap();
+        s.bind(&pod(2, WorkloadClass::Complex), 0, 0.0).unwrap();
+        assert!(s.bind(&pod(3, WorkloadClass::Complex), 0, 0.0).is_err());
+        // Memory can also be the binding constraint: node 0 has 4096 MiB;
+        // after 2x2048 MiB nothing fits.
+        assert!(!s.fits(0, ResourceRequests { cpu_millis: 0, memory_mib: 1 }));
+    }
+
+    #[test]
+    fn double_bind_rejected() {
+        let mut s = state();
+        let p = pod(1, WorkloadClass::Light);
+        s.bind(&p, 0, 0.0).unwrap();
+        assert!(s.bind(&p, 1, 0.0).is_err());
+    }
+
+    #[test]
+    fn not_ready_node_filtered() {
+        let mut s = state();
+        s.set_ready(0, false, 0.0);
+        let feas = s.feasible_nodes(WorkloadClass::Light.requests());
+        assert!(!feas.contains(&0));
+        assert!(s.bind(&pod(1, WorkloadClass::Light), 0, 0.0).is_err());
+        s.set_ready(0, true, 1.0);
+        assert!(s.fits(0, WorkloadClass::Light.requests()));
+    }
+
+    #[test]
+    fn release_unknown_pod_errors() {
+        let mut s = state();
+        assert!(s.release(99, 0.0).is_err());
+    }
+
+    #[test]
+    fn category_histogram() {
+        let mut s = state();
+        s.bind(&pod(1, WorkloadClass::Light), 0, 0.0).unwrap();
+        s.bind(&pod(2, WorkloadClass::Light), 1, 0.0).unwrap();
+        s.bind(&pod(3, WorkloadClass::Light), 5, 0.0).unwrap();
+        let h = s.pods_per_category();
+        assert_eq!(h[&NodeCategory::A], 2);
+        assert_eq!(h[&NodeCategory::C], 1);
+    }
+}

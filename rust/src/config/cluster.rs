@@ -1,0 +1,198 @@
+//! Cluster configuration — paper Table I.
+//!
+//! The paper's GKE cluster has four node categories:
+//!
+//! | Category | Machine type           | vCPUs | Memory | Purpose |
+//! |----------|------------------------|-------|--------|---------|
+//! | A        | e2-medium              | 2     | 4 GB   | energy-efficient, minimal resources |
+//! | B        | n2-standard-2          | 2     | 8 GB   | balanced performance |
+//! | C        | n2-standard-4          | 4     | 16 GB  | high-performance, high resource |
+//! | Default  | e2-standard-2          | 2     | 8 GB   | system components |
+//!
+//! Per-category *performance* (relative per-core speed) and *power*
+//! (Dayarathna-model scale factor) profiles encode the heterogeneity the
+//! paper's results depend on: E2 machines are slower but markedly more
+//! energy-efficient than N2 (see `DESIGN.md` §1 substitution table).
+
+
+use crate::cluster::NodeCategory;
+
+/// One homogeneous node pool (GKE terminology).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodePoolConfig {
+    pub category: NodeCategory,
+    /// GCE machine type name (informational; profiles below are authoritative).
+    pub machine_type: String,
+    /// Number of identical nodes in the pool.
+    pub count: usize,
+    /// vCPUs per node, in millicores (2 vCPU = 2000m).
+    pub cpu_millis: u64,
+    /// Memory per node, MiB.
+    pub memory_mib: u64,
+    /// Relative per-core execution speed (1.0 = n2-standard baseline).
+    pub speed_factor: f64,
+    /// Scale applied to the Dayarathna blade power model for this
+    /// hardware class (e2 shared-core machines draw far less than a
+    /// full blade; n2-standard-4 draws more).
+    pub power_scale: f64,
+}
+
+/// Cluster-wide configuration: the set of node pools.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub pools: Vec<NodePoolConfig>,
+    /// Whether the Default pool accepts user workloads (in the paper it
+    /// hosts system components but remains schedulable).
+    pub schedulable_default_pool: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self::paper_default()
+    }
+}
+
+impl ClusterConfig {
+    /// Table I machine types, with three A nodes and two B nodes so the
+    /// scheduler has real placement choice (16 vCPU / 52 GiB total; the
+    /// high-competition level requests ~9.4 vCPU, and with executions
+    /// overlapping, the cluster transiently approaches full utilization,
+    /// matching the paper's description). Speed/power profiles are the
+    /// calibrated values of EXPERIMENTS.md §Calibration.
+    pub fn paper_default() -> Self {
+        Self {
+            pools: vec![
+                NodePoolConfig {
+                    category: NodeCategory::A,
+                    machine_type: "e2-medium".into(),
+                    count: 3,
+                    cpu_millis: 2000,
+                    memory_mib: 4096,
+                    speed_factor: 0.70,
+                    power_scale: 0.30,
+                },
+                NodePoolConfig {
+                    category: NodeCategory::B,
+                    machine_type: "n2-standard-2".into(),
+                    count: 2,
+                    cpu_millis: 2000,
+                    memory_mib: 8192,
+                    speed_factor: 1.00,
+                    power_scale: 0.55,
+                },
+                NodePoolConfig {
+                    category: NodeCategory::C,
+                    machine_type: "n2-standard-4".into(),
+                    count: 1,
+                    cpu_millis: 4000,
+                    memory_mib: 16384,
+                    speed_factor: 1.10,
+                    power_scale: 2.60,
+                },
+                NodePoolConfig {
+                    category: NodeCategory::Default,
+                    machine_type: "e2-standard-2".into(),
+                    count: 1,
+                    cpu_millis: 2000,
+                    memory_mib: 8192,
+                    speed_factor: 0.85,
+                    power_scale: 0.50,
+                },
+            ],
+            schedulable_default_pool: true,
+        }
+    }
+
+    /// A scaled cluster with `n` copies of each paper pool (benchmarks).
+    pub fn scaled(n: usize) -> Self {
+        let mut cfg = Self::paper_default();
+        for pool in &mut cfg.pools {
+            pool.count *= n;
+        }
+        cfg
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        self.pools.iter().map(|p| p.count).sum()
+    }
+
+    pub fn total_cpu_millis(&self) -> u64 {
+        self.pools.iter().map(|p| p.count as u64 * p.cpu_millis).sum()
+    }
+
+    pub fn total_memory_mib(&self) -> u64 {
+        self.pools.iter().map(|p| p.count as u64 * p.memory_mib).sum()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.pools.is_empty(), "cluster has no node pools");
+        for p in &self.pools {
+            anyhow::ensure!(p.count > 0, "pool {:?} has zero nodes", p.category);
+            anyhow::ensure!(
+                p.cpu_millis >= 100,
+                "pool {:?}: cpu_millis < 100",
+                p.category
+            );
+            anyhow::ensure!(
+                p.memory_mib >= 128,
+                "pool {:?}: memory_mib < 128",
+                p.category
+            );
+            anyhow::ensure!(
+                p.speed_factor > 0.0 && p.speed_factor <= 10.0,
+                "pool {:?}: speed_factor out of range",
+                p.category
+            );
+            anyhow::ensure!(
+                p.power_scale > 0.0 && p.power_scale <= 10.0,
+                "pool {:?}: power_scale out of range",
+                p.category
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_capacities() {
+        let cfg = ClusterConfig::paper_default();
+        assert_eq!(cfg.total_nodes(), 7);
+        assert_eq!(cfg.total_cpu_millis(), 16_000);
+        assert_eq!(cfg.total_memory_mib(), 3 * 4096 + 2 * 8192 + 16384 + 8192);
+        let a = &cfg.pools[0];
+        assert_eq!(a.machine_type, "e2-medium");
+        assert_eq!((a.cpu_millis, a.memory_mib), (2000, 4096));
+        let c = &cfg.pools[2];
+        assert_eq!((c.cpu_millis, c.memory_mib), (4000, 16384));
+    }
+
+    #[test]
+    fn category_a_is_most_efficient() {
+        let cfg = ClusterConfig::paper_default();
+        let scale = |cat: NodeCategory| {
+            cfg.pools
+                .iter()
+                .find(|p| p.category == cat)
+                .unwrap()
+                .power_scale
+        };
+        assert!(scale(NodeCategory::A) < scale(NodeCategory::B));
+        assert!(scale(NodeCategory::B) < scale(NodeCategory::C));
+    }
+
+    #[test]
+    fn scaled_multiplies_counts() {
+        assert_eq!(ClusterConfig::scaled(4).total_nodes(), 28);
+    }
+
+    #[test]
+    fn invalid_pool_rejected() {
+        let mut cfg = ClusterConfig::paper_default();
+        cfg.pools[0].speed_factor = 0.0;
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Energy-model constants — the Dayarathna et al. blade-server power
+//! model the paper itself uses for its impact analysis (§V.E), plus the
+//! conversion factors of §V.F (eGRID CO₂, EIA rate, World Bank credits).
+//!
+//! Blade model:
+//! `P = 14.45 + 0.236·u_cpu − 4.47e-8·u_mem + 0.00281·u_disk + 3.1e-8·u_net` W
+//! with `u_cpu` in percent, `u_mem` memory accesses/s, `u_disk` IO ops/s,
+//! `u_net` network ops/s.
+
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyModelConfig {
+    /// Blade-model constant term (W).
+    pub p_idle: f64,
+    /// CPU coefficient (W per % utilization).
+    pub k_cpu: f64,
+    /// Memory coefficient (W per access/s; negative in the paper's model).
+    pub k_mem: f64,
+    /// Disk coefficient (W per IO op/s).
+    pub k_disk: f64,
+    /// Network coefficient (W per op/s).
+    pub k_net: f64,
+    /// Power-usage-effectiveness multiplier (paper: 1.45).
+    pub pue: f64,
+    /// Typical workload parameters used by §V.E (memory accesses/s,
+    /// disk IOPS, network ops/s) — applied proportionally to CPU load.
+    pub mem_accesses_per_sec: f64,
+    pub disk_iops: f64,
+    pub net_ops_per_sec: f64,
+    /// eGRID national average emission factor (lb CO₂ / kWh).
+    pub co2_lb_per_kwh: f64,
+    /// EIA average commercial electricity rate ($ / kWh).
+    pub usd_per_kwh: f64,
+    /// World Bank carbon-credit price range ($ / metric ton CO₂).
+    pub carbon_credit_usd_min: f64,
+    pub carbon_credit_usd_max: f64,
+    /// EPA average passenger-vehicle emissions (metric tons CO₂ / yr).
+    pub vehicle_tons_per_year: f64,
+}
+
+impl Default for EnergyModelConfig {
+    fn default() -> Self {
+        Self {
+            p_idle: 14.45,
+            k_cpu: 0.236,
+            k_mem: -4.47e-8,
+            k_disk: 0.00281,
+            k_net: 3.1e-8,
+            pue: 1.45,
+            mem_accesses_per_sec: 8.0e6,
+            disk_iops: 350.0,
+            net_ops_per_sec: 3.0e6,
+            co2_lb_per_kwh: 0.823,
+            usd_per_kwh: 0.1289,
+            carbon_credit_usd_min: 0.46,
+            carbon_credit_usd_max: 167.0,
+            vehicle_tons_per_year: 4.6,
+        }
+    }
+}
+
+impl EnergyModelConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.p_idle > 0.0, "p_idle must be positive");
+        anyhow::ensure!(self.k_cpu > 0.0, "k_cpu must be positive");
+        anyhow::ensure!(self.pue >= 1.0, "PUE < 1 is unphysical");
+        anyhow::ensure!(
+            self.carbon_credit_usd_min <= self.carbon_credit_usd_max,
+            "carbon credit range inverted"
+        );
+        anyhow::ensure!(self.usd_per_kwh > 0.0, "electricity rate <= 0");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_constants() {
+        let c = EnergyModelConfig::default();
+        assert_eq!(c.p_idle, 14.45);
+        assert_eq!(c.k_cpu, 0.236);
+        assert_eq!(c.pue, 1.45);
+        assert_eq!(c.co2_lb_per_kwh, 0.823);
+        assert_eq!(c.usd_per_kwh, 0.1289);
+        assert_eq!((c.carbon_credit_usd_min, c.carbon_credit_usd_max),
+                   (0.46, 167.0));
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn bad_pue_rejected() {
+        let mut c = EnergyModelConfig::default();
+        c.pue = 0.5;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! Experimental factorial design — paper Tables III & V.
+
+
+use crate::workload::WorkloadClass;
+
+/// Which scheduler places a pod (Table V splits each level half/half).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchedulerKind {
+    /// GreenPod's TOPSIS scheduler (the paper's contribution).
+    Topsis,
+    /// The default kube-scheduler baseline.
+    DefaultK8s,
+}
+
+/// Resource-contention level — paper Table V.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CompetitionLevel {
+    Low,
+    Medium,
+    High,
+}
+
+impl std::str::FromStr for SchedulerKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "topsis" => Ok(SchedulerKind::Topsis),
+            "default-k8s" | "default" => Ok(SchedulerKind::DefaultK8s),
+            other => anyhow::bail!("unknown scheduler `{other}`"),
+        }
+    }
+}
+
+impl std::str::FromStr for CompetitionLevel {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "low" => Ok(CompetitionLevel::Low),
+            "medium" => Ok(CompetitionLevel::Medium),
+            "high" => Ok(CompetitionLevel::High),
+            other => anyhow::bail!(
+                "unknown competition level `{other}` (low|medium|high)"
+            ),
+        }
+    }
+}
+
+/// Pod counts for one workload class at one competition level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PodMix {
+    pub class: WorkloadClass,
+    /// Pods placed by the TOPSIS scheduler.
+    pub topsis: usize,
+    /// Pods placed by the default scheduler.
+    pub default_k8s: usize,
+}
+
+impl PodMix {
+    pub fn total(&self) -> usize {
+        self.topsis + self.default_k8s
+    }
+}
+
+impl CompetitionLevel {
+    pub const ALL: [CompetitionLevel; 3] = [
+        CompetitionLevel::Low,
+        CompetitionLevel::Medium,
+        CompetitionLevel::High,
+    ];
+
+    /// Table V, verbatim: (light, medium, complex) pods, half TOPSIS /
+    /// half default.
+    pub fn pod_mix(self) -> [PodMix; 3] {
+        let mix = |class, t, d| PodMix { class, topsis: t, default_k8s: d };
+        match self {
+            CompetitionLevel::Low => [
+                mix(WorkloadClass::Light, 2, 2),
+                mix(WorkloadClass::Medium, 1, 1),
+                mix(WorkloadClass::Complex, 1, 1),
+            ],
+            CompetitionLevel::Medium => [
+                mix(WorkloadClass::Light, 4, 4),
+                mix(WorkloadClass::Medium, 2, 2),
+                mix(WorkloadClass::Complex, 1, 1),
+            ],
+            CompetitionLevel::High => [
+                mix(WorkloadClass::Light, 6, 6),
+                mix(WorkloadClass::Medium, 3, 3),
+                mix(WorkloadClass::Complex, 2, 2),
+            ],
+        }
+    }
+
+    pub fn total_pods(self) -> usize {
+        self.pod_mix().iter().map(|m| m.total()).sum()
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            CompetitionLevel::Low => "Low",
+            CompetitionLevel::Medium => "Medium",
+            CompetitionLevel::High => "High",
+        }
+    }
+}
+
+/// Factorial experiment configuration (Table III) plus run mechanics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Independent seeded replications averaged per cell.
+    pub replications: u32,
+    /// Base RNG seed; replication r uses `seed + r`.
+    pub seed: u64,
+    /// Mean pod inter-arrival time (seconds of simulated time). The
+    /// paper deploys each level as a burst; small jitter models kubectl
+    /// submission spacing.
+    pub arrival_jitter_s: f64,
+    /// Contention slowdown coefficient (see `simulation::contention`).
+    pub contention_beta: f64,
+    /// SGD epochs each pod runs (scales Table II task sizes; an epoch is
+    /// `artifacts/manifest.json: epoch_steps` kernel steps).
+    pub epochs_light: u32,
+    pub epochs_medium: u32,
+    pub epochs_complex: u32,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            replications: 5,
+            seed: 20250710,
+            arrival_jitter_s: 0.25,
+            contention_beta: 0.20,
+            // Work ratios follow Table II sample counts (1k/1M/10M) at
+            // laptop scale: medium ≈ 8× light work, complex ≈ 32× light
+            // (the per-step shapes already differ by 4×/16× FLOPs).
+            epochs_light: 2,
+            epochs_medium: 4,
+            epochs_complex: 8,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.replications >= 1, "need at least 1 replication");
+        anyhow::ensure!(
+            self.arrival_jitter_s >= 0.0,
+            "arrival jitter must be non-negative"
+        );
+        anyhow::ensure!(
+            (0.0..=10.0).contains(&self.contention_beta),
+            "contention_beta out of range"
+        );
+        anyhow::ensure!(
+            self.epochs_light >= 1
+                && self.epochs_medium >= 1
+                && self.epochs_complex >= 1,
+            "epoch counts must be >= 1"
+        );
+        Ok(())
+    }
+
+    pub fn epochs_for(&self, class: WorkloadClass) -> u32 {
+        match class {
+            WorkloadClass::Light => self.epochs_light,
+            WorkloadClass::Medium => self.epochs_medium,
+            WorkloadClass::Complex => self.epochs_complex,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_pod_counts() {
+        // Low: 4 light, 2 medium, 2 complex.
+        let low = CompetitionLevel::Low.pod_mix();
+        assert_eq!(low.iter().map(PodMix::total).collect::<Vec<_>>(),
+                   vec![4, 2, 2]);
+        // Medium: 8/4/2. High: 12/6/4.
+        assert_eq!(CompetitionLevel::Medium.total_pods(), 14);
+        assert_eq!(CompetitionLevel::High.total_pods(), 22);
+        // Every mix is split half/half between schedulers.
+        for level in CompetitionLevel::ALL {
+            for m in level.pod_mix() {
+                assert_eq!(m.topsis, m.default_k8s, "{level:?} {m:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn default_config_validates() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+}

@@ -1,0 +1,96 @@
+//! Configuration system: every experimental knob of the paper, as data.
+//!
+//! The defaults reproduce the paper's setup exactly:
+//! * Table I  — cluster node categories ([`ClusterConfig::paper_default`])
+//! * Table II — workload classes ([`crate::workload::WorkloadClass`])
+//! * Table III/V — factorial design & competition levels
+//! * §IV.D — weighting schemes ([`WeightingScheme`])
+//!
+//! Configs serialize to/from JSON (via the in-tree `util::json`
+//! substrate — DESIGN.md §1b) so experiments can be driven from files
+//! (`greenpod experiment table6 --config my.json`) and every run can
+//! record the exact configuration it used.
+
+mod cluster;
+mod energy;
+mod experiment;
+mod serial;
+mod weights;
+
+pub use cluster::{ClusterConfig, NodePoolConfig};
+pub use energy::EnergyModelConfig;
+pub use experiment::{
+    CompetitionLevel, ExperimentConfig, PodMix, SchedulerKind,
+};
+pub use weights::{WeightingScheme, BENEFIT_MASK, CRITERIA_NAMES, NUM_CRITERIA};
+
+/// Top-level config bundle (what a JSON config file deserializes into).
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub cluster: ClusterConfig,
+    pub energy: EnergyModelConfig,
+    pub experiment: ExperimentConfig,
+}
+
+impl Config {
+    /// The paper's full experimental configuration.
+    pub fn paper_default() -> Self {
+        Self::default()
+    }
+
+    /// Load from a JSON file; absent sections/fields keep paper
+    /// defaults. See `config::serial` for the schema.
+    pub fn from_json_file(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let cfg = serial::config_from_json(&text)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize to pretty JSON (the same schema `from_json_file` reads).
+    pub fn to_json(&self) -> String {
+        serial::config_to_json(self).pretty()
+    }
+
+    /// Cross-field validation (weights simplex, positive capacities, ...).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.cluster.validate()?;
+        self.energy.validate()?;
+        self.experiment.validate()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_validates() {
+        Config::paper_default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = Config::paper_default();
+        let text = cfg.to_json();
+        let back = serial::config_from_json(&text).unwrap();
+        assert_eq!(cfg.cluster.pools.len(), back.cluster.pools.len());
+        assert_eq!(cfg.experiment.seed, back.experiment.seed);
+        assert_eq!(cfg.energy.pue, back.energy.pue);
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn partial_config_keeps_defaults() {
+        let cfg = serial::config_from_json(
+            r#"{"experiment": {"replications": 2, "seed": 9}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.experiment.replications, 2);
+        assert_eq!(cfg.experiment.seed, 9);
+        // Untouched sections keep paper values.
+        assert_eq!(cfg.cluster.total_nodes(), 7);
+        assert_eq!(cfg.energy.pue, 1.45);
+    }
+}

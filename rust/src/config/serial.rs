@@ -1,0 +1,246 @@
+//! JSON (de)serialization for the config types, over `util::json`.
+//!
+//! Schema mirrors the struct layout:
+//! ```json
+//! {
+//!   "cluster":    {"pools": [{"category": "A", ...}], ...},
+//!   "energy":     {"pue": 1.45, ...},
+//!   "experiment": {"replications": 5, "seed": 1, ...}
+//! }
+//! ```
+//! Absent sections/fields fall back to the paper defaults, so a config
+//! file only states deviations.
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::NodeCategory;
+use crate::util::json::Json;
+
+use super::{
+    ClusterConfig, Config, EnergyModelConfig, ExperimentConfig,
+    NodePoolConfig,
+};
+
+// ------------------------------------------------------------ helpers
+
+fn get_f64(obj: &Json, key: &str, default: f64) -> Result<f64> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| anyhow!("field `{key}` is not a number")),
+    }
+}
+
+fn get_u64(obj: &Json, key: &str, default: u64) -> Result<u64> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_u64()
+            .ok_or_else(|| anyhow!("field `{key}` is not an integer")),
+    }
+}
+
+fn category_from_str(s: &str) -> Result<NodeCategory> {
+    match s {
+        "A" => Ok(NodeCategory::A),
+        "B" => Ok(NodeCategory::B),
+        "C" => Ok(NodeCategory::C),
+        "Default" => Ok(NodeCategory::Default),
+        other => Err(anyhow!("unknown node category `{other}`")),
+    }
+}
+
+// ------------------------------------------------------------- loads
+
+pub fn config_from_json(text: &str) -> Result<Config> {
+    let v = Json::parse(text)?;
+    let mut cfg = Config::paper_default();
+    if let Some(c) = v.get("cluster") {
+        cfg.cluster = cluster_from_json(c)?;
+    }
+    if let Some(e) = v.get("energy") {
+        cfg.energy = energy_from_json(e)?;
+    }
+    if let Some(x) = v.get("experiment") {
+        cfg.experiment = experiment_from_json(x)?;
+    }
+    Ok(cfg)
+}
+
+fn cluster_from_json(v: &Json) -> Result<ClusterConfig> {
+    let mut cfg = ClusterConfig::paper_default();
+    if let Some(pools) = v.get("pools") {
+        let arr = pools
+            .as_arr()
+            .ok_or_else(|| anyhow!("`pools` is not an array"))?;
+        cfg.pools = arr
+            .iter()
+            .map(|p| {
+                Ok(NodePoolConfig {
+                    category: category_from_str(p.req_str("category")?)?,
+                    machine_type: p
+                        .get("machine_type")
+                        .and_then(Json::as_str)
+                        .unwrap_or("custom")
+                        .to_string(),
+                    count: p.req_usize("count")?,
+                    cpu_millis: p.req_f64("cpu_millis")? as u64,
+                    memory_mib: p.req_f64("memory_mib")? as u64,
+                    speed_factor: p.req_f64("speed_factor")?,
+                    power_scale: p.req_f64("power_scale")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(b) = v.get("schedulable_default_pool") {
+        cfg.schedulable_default_pool = b
+            .as_bool()
+            .ok_or_else(|| anyhow!("schedulable_default_pool not bool"))?;
+    }
+    Ok(cfg)
+}
+
+fn energy_from_json(v: &Json) -> Result<EnergyModelConfig> {
+    let d = EnergyModelConfig::default();
+    Ok(EnergyModelConfig {
+        p_idle: get_f64(v, "p_idle", d.p_idle)?,
+        k_cpu: get_f64(v, "k_cpu", d.k_cpu)?,
+        k_mem: get_f64(v, "k_mem", d.k_mem)?,
+        k_disk: get_f64(v, "k_disk", d.k_disk)?,
+        k_net: get_f64(v, "k_net", d.k_net)?,
+        pue: get_f64(v, "pue", d.pue)?,
+        mem_accesses_per_sec: get_f64(
+            v, "mem_accesses_per_sec", d.mem_accesses_per_sec)?,
+        disk_iops: get_f64(v, "disk_iops", d.disk_iops)?,
+        net_ops_per_sec: get_f64(v, "net_ops_per_sec", d.net_ops_per_sec)?,
+        co2_lb_per_kwh: get_f64(v, "co2_lb_per_kwh", d.co2_lb_per_kwh)?,
+        usd_per_kwh: get_f64(v, "usd_per_kwh", d.usd_per_kwh)?,
+        carbon_credit_usd_min: get_f64(
+            v, "carbon_credit_usd_min", d.carbon_credit_usd_min)?,
+        carbon_credit_usd_max: get_f64(
+            v, "carbon_credit_usd_max", d.carbon_credit_usd_max)?,
+        vehicle_tons_per_year: get_f64(
+            v, "vehicle_tons_per_year", d.vehicle_tons_per_year)?,
+    })
+}
+
+fn experiment_from_json(v: &Json) -> Result<ExperimentConfig> {
+    let d = ExperimentConfig::default();
+    Ok(ExperimentConfig {
+        replications: get_u64(v, "replications", d.replications as u64)?
+            as u32,
+        seed: get_u64(v, "seed", d.seed)?,
+        arrival_jitter_s: get_f64(v, "arrival_jitter_s", d.arrival_jitter_s)?,
+        contention_beta: get_f64(v, "contention_beta", d.contention_beta)?,
+        epochs_light: get_u64(v, "epochs_light", d.epochs_light as u64)?
+            as u32,
+        epochs_medium: get_u64(v, "epochs_medium", d.epochs_medium as u64)?
+            as u32,
+        epochs_complex: get_u64(
+            v, "epochs_complex", d.epochs_complex as u64)? as u32,
+    })
+}
+
+// ------------------------------------------------------------- dumps
+
+pub fn config_to_json(cfg: &Config) -> Json {
+    Json::obj(vec![
+        ("cluster", cluster_to_json(&cfg.cluster)),
+        ("energy", energy_to_json(&cfg.energy)),
+        ("experiment", experiment_to_json(&cfg.experiment)),
+    ])
+}
+
+pub fn cluster_to_json(c: &ClusterConfig) -> Json {
+    Json::obj(vec![
+        (
+            "pools",
+            Json::Arr(
+                c.pools
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("category",
+                             Json::Str(p.category.label().into())),
+                            ("machine_type",
+                             Json::Str(p.machine_type.clone())),
+                            ("count", Json::Num(p.count as f64)),
+                            ("cpu_millis", Json::Num(p.cpu_millis as f64)),
+                            ("memory_mib", Json::Num(p.memory_mib as f64)),
+                            ("speed_factor", Json::Num(p.speed_factor)),
+                            ("power_scale", Json::Num(p.power_scale)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "schedulable_default_pool",
+            Json::Bool(c.schedulable_default_pool),
+        ),
+    ])
+}
+
+pub fn energy_to_json(e: &EnergyModelConfig) -> Json {
+    Json::obj(vec![
+        ("p_idle", Json::Num(e.p_idle)),
+        ("k_cpu", Json::Num(e.k_cpu)),
+        ("k_mem", Json::Num(e.k_mem)),
+        ("k_disk", Json::Num(e.k_disk)),
+        ("k_net", Json::Num(e.k_net)),
+        ("pue", Json::Num(e.pue)),
+        ("mem_accesses_per_sec", Json::Num(e.mem_accesses_per_sec)),
+        ("disk_iops", Json::Num(e.disk_iops)),
+        ("net_ops_per_sec", Json::Num(e.net_ops_per_sec)),
+        ("co2_lb_per_kwh", Json::Num(e.co2_lb_per_kwh)),
+        ("usd_per_kwh", Json::Num(e.usd_per_kwh)),
+        ("carbon_credit_usd_min", Json::Num(e.carbon_credit_usd_min)),
+        ("carbon_credit_usd_max", Json::Num(e.carbon_credit_usd_max)),
+        ("vehicle_tons_per_year", Json::Num(e.vehicle_tons_per_year)),
+    ])
+}
+
+pub fn experiment_to_json(x: &ExperimentConfig) -> Json {
+    Json::obj(vec![
+        ("replications", Json::Num(x.replications as f64)),
+        ("seed", Json::Num(x.seed as f64)),
+        ("arrival_jitter_s", Json::Num(x.arrival_jitter_s)),
+        ("contention_beta", Json::Num(x.contention_beta)),
+        ("epochs_light", Json::Num(x.epochs_light as f64)),
+        ("epochs_medium", Json::Num(x.epochs_medium as f64)),
+        ("epochs_complex", Json::Num(x.epochs_complex as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn custom_pools_parse() {
+        let cfg = config_from_json(
+            r#"{"cluster": {"pools": [
+                {"category": "A", "count": 3, "cpu_millis": 2000,
+                 "memory_mib": 4096, "speed_factor": 0.7,
+                 "power_scale": 0.45}
+            ]}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.pools.len(), 1);
+        assert_eq!(cfg.cluster.total_nodes(), 3);
+        assert_eq!(cfg.cluster.pools[0].machine_type, "custom");
+    }
+
+    #[test]
+    fn bad_category_rejected() {
+        let err = config_from_json(
+            r#"{"cluster": {"pools": [
+                {"category": "Z", "count": 1, "cpu_millis": 1000,
+                 "memory_mib": 1024, "speed_factor": 1.0,
+                 "power_scale": 1.0}
+            ]}}"#,
+        );
+        assert!(err.is_err());
+    }
+}

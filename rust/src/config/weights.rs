@@ -1,0 +1,126 @@
+//! Weighting schemes (scheduling profiles) — paper §IV.D.
+//!
+//! GreenPod scores nodes on five criteria; each profile reweights them:
+//!
+//! * **General (balanced)** — equal importance to all metrics.
+//! * **Energy-centric** — prioritizes power consumption.
+//! * **Performance-centric** — emphasizes execution speed.
+//! * **Resource-efficient** — balances utilization and energy.
+
+
+/// Number of scheduling criteria (paper abstract: execution time, energy
+/// consumption, processing core, memory availability, resource balance).
+pub const NUM_CRITERIA: usize = 5;
+
+/// Criterion order used everywhere a decision matrix appears.
+pub const CRITERIA_NAMES: [&str; NUM_CRITERIA] = [
+    "exec_time",
+    "energy",
+    "free_cores",
+    "free_memory",
+    "resource_balance",
+];
+
+/// Criterion direction: `exec_time` and `energy` are costs, the rest are
+/// benefits. 1.0 = benefit, 0.0 = cost (the kernel-side convention).
+pub const BENEFIT_MASK: [f64; NUM_CRITERIA] = [0.0, 0.0, 1.0, 1.0, 1.0];
+
+/// A scheduling profile from §IV.D.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WeightingScheme {
+    General,
+    EnergyCentric,
+    PerformanceCentric,
+    ResourceEfficient,
+}
+
+impl WeightingScheme {
+    /// All four profiles, in the paper's reporting order (Table VI).
+    pub const ALL: [WeightingScheme; 4] = [
+        WeightingScheme::General,
+        WeightingScheme::EnergyCentric,
+        WeightingScheme::PerformanceCentric,
+        WeightingScheme::ResourceEfficient,
+    ];
+
+    /// Criterion weights `[exec_time, energy, cores, memory, balance]`.
+    /// Each sums to 1.0 (validated by tests and proptest).
+    pub fn weights(self) -> [f64; NUM_CRITERIA] {
+        match self {
+            WeightingScheme::General => [0.20, 0.20, 0.20, 0.20, 0.20],
+            WeightingScheme::EnergyCentric => [0.15, 0.40, 0.15, 0.15, 0.15],
+            WeightingScheme::PerformanceCentric => {
+                [0.50, 0.10, 0.15, 0.15, 0.10]
+            }
+            WeightingScheme::ResourceEfficient => {
+                [0.05, 0.35, 0.15, 0.15, 0.30]
+            }
+        }
+    }
+
+    /// Paper display name.
+    pub fn label(self) -> &'static str {
+        match self {
+            WeightingScheme::General => "General (Balanced)",
+            WeightingScheme::EnergyCentric => "Energy-centric",
+            WeightingScheme::PerformanceCentric => "Performance-centric",
+            WeightingScheme::ResourceEfficient => "Resource-efficient",
+        }
+    }
+}
+
+impl std::str::FromStr for WeightingScheme {
+    type Err = anyhow::Error;
+
+    /// kebab-case names, as used on the CLI (`--scheme energy-centric`).
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "general" => Ok(WeightingScheme::General),
+            "energy-centric" => Ok(WeightingScheme::EnergyCentric),
+            "performance-centric" => Ok(WeightingScheme::PerformanceCentric),
+            "resource-efficient" => Ok(WeightingScheme::ResourceEfficient),
+            other => anyhow::bail!(
+                "unknown weighting scheme `{other}` (expected general, \
+                 energy-centric, performance-centric, resource-efficient)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_sum_to_one() {
+        for s in WeightingScheme::ALL {
+            let sum: f64 = s.weights().iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "{s:?} sums to {sum}");
+        }
+    }
+
+    #[test]
+    fn energy_centric_prioritizes_energy() {
+        let w = WeightingScheme::EnergyCentric.weights();
+        assert!(w[1] > w[0] && w[1] > w[2] && w[1] > w[3] && w[1] > w[4]);
+    }
+
+    #[test]
+    fn performance_centric_prioritizes_exec_time() {
+        let w = WeightingScheme::PerformanceCentric.weights();
+        assert_eq!(w[0], *w.iter().max_by(|a, b| a.total_cmp(b)).unwrap());
+    }
+
+    #[test]
+    fn general_is_uniform() {
+        let w = WeightingScheme::General.weights();
+        assert!(w.iter().all(|&x| (x - 0.2).abs() < 1e-12));
+    }
+
+    #[test]
+    fn from_str_kebab_case() {
+        let s: WeightingScheme = "energy-centric".parse().unwrap();
+        assert_eq!(s, WeightingScheme::EnergyCentric);
+        assert!("energy".parse::<WeightingScheme>().is_err());
+    }
+}

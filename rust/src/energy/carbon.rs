@@ -1,0 +1,150 @@
+//! Real-world impact arithmetic — paper §V.E/F and Table VII.
+//!
+//! Extrapolates a measured optimization percentage to SURF-Lisa-scale
+//! clusters: energy (MWh), CO₂ (metric tons, eGRID factor), vehicle
+//! equivalents (EPA), electricity cost (EIA rate) and carbon-credit
+//! value (World Bank range).
+
+
+use crate::config::EnergyModelConfig;
+
+/// Extrapolation parameters (defaults = the paper's §V.E inputs).
+#[derive(Debug, Clone)]
+pub struct ImpactParams {
+    /// Average jobs per day (SURF Lisa: 6,304 from SLURM logs).
+    pub jobs_per_day: f64,
+    /// Average energy per job (kWh; paper derives 0.024 from the blade
+    /// model at its typical workload parameters).
+    pub kwh_per_job: f64,
+    /// Measured energy optimization as a fraction (paper: 0.1938, the
+    /// all-levels average of Table VI).
+    pub optimization: f64,
+    /// Clusters in the deployment (1 = single, 10 = medium data center).
+    pub clusters: u32,
+}
+
+impl ImpactParams {
+    /// §V.E single-cluster inputs with a supplied optimization fraction.
+    pub fn surf_lisa(optimization: f64) -> Self {
+        Self {
+            jobs_per_day: 6304.0,
+            kwh_per_job: 0.024,
+            optimization,
+            clusters: 1,
+        }
+    }
+
+    pub fn with_clusters(mut self, clusters: u32) -> Self {
+        self.clusters = clusters;
+        self
+    }
+}
+
+/// The Table VII row set for one deployment size.
+#[derive(Debug, Clone)]
+pub struct ImpactAssessment {
+    pub clusters: u32,
+    pub daily_mwh: f64,
+    pub monthly_mwh: f64,
+    pub annual_mwh: f64,
+    pub annual_co2_tons: f64,
+    pub vehicles_equivalent: f64,
+    pub annual_cost_usd: f64,
+    pub annual_credit_usd_min: f64,
+    pub annual_credit_usd_max: f64,
+    pub total_1yr_usd_min: f64,
+    pub total_1yr_usd_max: f64,
+    pub total_5yr_usd_min: f64,
+    pub total_5yr_usd_max: f64,
+}
+
+impl ImpactAssessment {
+    /// Compute Table VII from the extrapolation inputs.
+    pub fn compute(cfg: &EnergyModelConfig, p: &ImpactParams) -> Self {
+        let c = p.clusters as f64;
+        // Daily MWh saved: kWh/job × jobs/day × optimization / 1000.
+        let daily_mwh = p.kwh_per_job * p.jobs_per_day * p.optimization
+            / 1000.0
+            * c;
+        let monthly_mwh = daily_mwh * 30.0;
+        let annual_mwh = daily_mwh * 365.0;
+        // eGRID: lb/kWh → kg/MWh → metric tons.
+        let kg_per_mwh = cfg.co2_lb_per_kwh * 0.4536 * 1000.0;
+        let annual_co2_tons = annual_mwh * kg_per_mwh / 1000.0;
+        let vehicles_equivalent = annual_co2_tons / cfg.vehicle_tons_per_year;
+        let annual_cost_usd = annual_mwh * 1000.0 * cfg.usd_per_kwh;
+        let annual_credit_usd_min =
+            annual_co2_tons * cfg.carbon_credit_usd_min;
+        let annual_credit_usd_max =
+            annual_co2_tons * cfg.carbon_credit_usd_max;
+        Self {
+            clusters: p.clusters,
+            daily_mwh,
+            monthly_mwh,
+            annual_mwh,
+            annual_co2_tons,
+            vehicles_equivalent,
+            annual_cost_usd,
+            annual_credit_usd_min,
+            annual_credit_usd_max,
+            total_1yr_usd_min: annual_cost_usd + annual_credit_usd_min,
+            total_1yr_usd_max: annual_cost_usd + annual_credit_usd_max,
+            total_5yr_usd_min: 5.0 * (annual_cost_usd + annual_credit_usd_min),
+            total_5yr_usd_max: 5.0 * (annual_cost_usd + annual_credit_usd_max),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// §V.E/F publishes intermediate numbers; we must match them when
+    /// fed the same inputs (optimization = 19.38%).
+    #[test]
+    fn reproduces_paper_single_cluster_numbers() {
+        let cfg = EnergyModelConfig::default();
+        let a = ImpactAssessment::compute(&cfg,
+                                          &ImpactParams::surf_lisa(0.1938));
+        assert!((a.daily_mwh - 0.0293).abs() < 0.0005, "{}", a.daily_mwh);
+        assert!((a.monthly_mwh - 0.88).abs() < 0.01, "{}", a.monthly_mwh);
+        assert!((a.annual_mwh - 10.70).abs() < 0.05, "{}", a.annual_mwh);
+        // Paper: 3.99 metric tons CO₂ (10.6872 MWh × 373.2 kg/MWh).
+        assert!((a.annual_co2_tons - 3.99).abs() < 0.03, "{}",
+                a.annual_co2_tons);
+        assert!((a.vehicles_equivalent - 0.87).abs() < 0.01);
+        // Paper: ≈ $1,380 annual electricity savings.
+        assert!((a.annual_cost_usd - 1380.0).abs() < 10.0, "{}",
+                a.annual_cost_usd);
+        // Credits: $1.84 – $667.
+        assert!((a.annual_credit_usd_min - 1.84).abs() < 0.05);
+        assert!((a.annual_credit_usd_max - 667.0).abs() < 5.0);
+        // Combined: $1,381 – $2,047; 5 yr: $6,907 – $10,233.
+        assert!((a.total_1yr_usd_min - 1381.0).abs() < 12.0);
+        assert!((a.total_1yr_usd_max - 2047.0).abs() < 15.0);
+        assert!((a.total_5yr_usd_min - 6907.0).abs() < 60.0);
+        assert!((a.total_5yr_usd_max - 10233.0).abs() < 75.0);
+    }
+
+    /// Medium data center = 10 clusters: everything scales ×10.
+    #[test]
+    fn reproduces_paper_ten_cluster_numbers() {
+        let cfg = EnergyModelConfig::default();
+        let p = ImpactParams::surf_lisa(0.1938).with_clusters(10);
+        let a = ImpactAssessment::compute(&cfg, &p);
+        assert!((a.annual_mwh - 107.02).abs() < 0.5, "{}", a.annual_mwh);
+        assert!((a.annual_co2_tons - 39.94).abs() < 0.3);
+        assert!((a.vehicles_equivalent - 8.70).abs() < 0.1);
+        assert!((a.annual_cost_usd - 13795.0).abs() < 100.0);
+        assert!((a.total_5yr_usd_max - 102326.0).abs() < 750.0);
+    }
+
+    #[test]
+    fn zero_optimization_zero_impact() {
+        let cfg = EnergyModelConfig::default();
+        let a = ImpactAssessment::compute(&cfg,
+                                          &ImpactParams::surf_lisa(0.0));
+        assert_eq!(a.annual_mwh, 0.0);
+        assert_eq!(a.total_5yr_usd_max, 0.0);
+    }
+}

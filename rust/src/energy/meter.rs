@@ -1,0 +1,190 @@
+//! Energy metering: integrates pod power over execution time and keeps
+//! the per-pod / per-scheduler / per-class ledgers the evaluation
+//! (Table VI, §V.D) reads out.
+
+use std::collections::HashMap;
+
+
+use crate::cluster::{Node, PodId};
+use crate::config::{EnergyModelConfig, SchedulerKind};
+use crate::energy::pod_power_watts;
+use crate::workload::WorkloadClass;
+
+/// Energy record for one completed pod.
+#[derive(Debug, Clone)]
+pub struct PodEnergy {
+    pub pod: PodId,
+    pub class: WorkloadClass,
+    pub scheduler: SchedulerKind,
+    pub node: usize,
+    /// Execution duration (simulated seconds).
+    pub duration_s: f64,
+    /// Attributed energy (joules, at the wall).
+    pub joules: f64,
+}
+
+/// The run-wide energy ledger.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyMeter {
+    records: Vec<PodEnergy>,
+}
+
+impl EnergyMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a pod execution: `share` is the CPU fraction of `node` the
+    /// pod occupied for `duration_s` seconds.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &mut self,
+        cfg: &EnergyModelConfig,
+        pod: PodId,
+        class: WorkloadClass,
+        scheduler: SchedulerKind,
+        node: &Node,
+        share: f64,
+        duration_s: f64,
+    ) -> f64 {
+        let joules = pod_power_watts(cfg, node, share) * duration_s;
+        self.records.push(PodEnergy {
+            pod,
+            class,
+            scheduler,
+            node: node.id,
+            duration_s,
+            joules,
+        });
+        joules
+    }
+
+    pub fn records(&self) -> &[PodEnergy] {
+        &self.records
+    }
+
+    /// Total energy (kJ) consumed by pods owned by `kind`.
+    pub fn total_kj(&self, kind: SchedulerKind) -> f64 {
+        self.records
+            .iter()
+            .filter(|r| r.scheduler == kind)
+            .map(|r| r.joules)
+            .sum::<f64>()
+            / 1000.0
+    }
+
+    /// Mean per-pod energy (kJ) for pods owned by `kind` — the unit the
+    /// paper's Table VI reports.
+    pub fn mean_kj_per_pod(&self, kind: SchedulerKind) -> f64 {
+        let (sum, n) = self
+            .records
+            .iter()
+            .filter(|r| r.scheduler == kind)
+            .fold((0.0, 0usize), |(s, n), r| (s + r.joules, n + 1));
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64 / 1000.0
+        }
+    }
+
+    /// Per-class mean energy (kJ/pod) for one scheduler — §V.D's
+    /// workload analysis.
+    pub fn per_class_kj(
+        &self,
+        kind: SchedulerKind,
+    ) -> HashMap<WorkloadClass, f64> {
+        let mut sums: HashMap<WorkloadClass, (f64, usize)> = HashMap::new();
+        for r in self.records.iter().filter(|r| r.scheduler == kind) {
+            let e = sums.entry(r.class).or_insert((0.0, 0));
+            e.0 += r.joules;
+            e.1 += 1;
+        }
+        sums.into_iter()
+            .map(|(k, (s, n))| (k, s / n as f64 / 1000.0))
+            .collect()
+    }
+
+    /// Mean execution duration per class for one scheduler (Table IV
+    /// "execution performance").
+    pub fn per_class_duration(
+        &self,
+        kind: SchedulerKind,
+    ) -> HashMap<WorkloadClass, f64> {
+        let mut sums: HashMap<WorkloadClass, (f64, usize)> = HashMap::new();
+        for r in self.records.iter().filter(|r| r.scheduler == kind) {
+            let e = sums.entry(r.class).or_insert((0.0, 0));
+            e.0 += r.duration_s;
+            e.1 += 1;
+        }
+        sums.into_iter()
+            .map(|(k, (s, n))| (k, s / n as f64))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeCategory;
+
+    fn node(id: usize, power_scale: f64) -> Node {
+        Node {
+            id,
+            name: format!("n{id}"),
+            category: NodeCategory::A,
+            machine_type: "e2-medium".into(),
+            cpu_millis: 2000,
+            memory_mib: 4096,
+            speed_factor: 0.7,
+            power_scale,
+            ready: true,
+        }
+    }
+
+    #[test]
+    fn ledger_accumulates_and_averages() {
+        let cfg = EnergyModelConfig::default();
+        let mut m = EnergyMeter::new();
+        let n = node(0, 0.45);
+        let j1 = m.record(&cfg, 1, WorkloadClass::Light,
+                          SchedulerKind::Topsis, &n, 0.1, 10.0);
+        let j2 = m.record(&cfg, 2, WorkloadClass::Light,
+                          SchedulerKind::Topsis, &n, 0.1, 10.0);
+        assert!(j1 > 0.0);
+        assert!((m.total_kj(SchedulerKind::Topsis)
+            - (j1 + j2) / 1000.0).abs() < 1e-12);
+        assert!((m.mean_kj_per_pod(SchedulerKind::Topsis)
+            - j1 / 1000.0).abs() < 1e-12);
+        assert_eq!(m.total_kj(SchedulerKind::DefaultK8s), 0.0);
+        assert_eq!(m.mean_kj_per_pod(SchedulerKind::DefaultK8s), 0.0);
+    }
+
+    #[test]
+    fn efficient_node_uses_less_energy() {
+        let cfg = EnergyModelConfig::default();
+        let mut m = EnergyMeter::new();
+        let a = node(0, 0.45);
+        let c = node(1, 1.6);
+        let ja = m.record(&cfg, 1, WorkloadClass::Medium,
+                          SchedulerKind::Topsis, &a, 0.25, 20.0);
+        let jc = m.record(&cfg, 2, WorkloadClass::Medium,
+                          SchedulerKind::DefaultK8s, &c, 0.25, 20.0);
+        assert!(ja < jc, "A-node energy {ja} !< C-node energy {jc}");
+    }
+
+    #[test]
+    fn per_class_breakdown() {
+        let cfg = EnergyModelConfig::default();
+        let mut m = EnergyMeter::new();
+        let n = node(0, 1.0);
+        m.record(&cfg, 1, WorkloadClass::Light, SchedulerKind::Topsis,
+                 &n, 0.1, 5.0);
+        m.record(&cfg, 2, WorkloadClass::Complex, SchedulerKind::Topsis,
+                 &n, 0.5, 40.0);
+        let per = m.per_class_kj(SchedulerKind::Topsis);
+        assert!(per[&WorkloadClass::Complex] > per[&WorkloadClass::Light]);
+        let dur = m.per_class_duration(SchedulerKind::Topsis);
+        assert_eq!(dur[&WorkloadClass::Complex], 40.0);
+    }
+}

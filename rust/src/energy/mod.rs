@@ -1,0 +1,11 @@
+//! Energy substrate: the Dayarathna blade-server power model (the
+//! paper's own model, §V.E), per-node energy metering, and the carbon /
+//! cost arithmetic behind Table VII.
+
+mod carbon;
+mod meter;
+mod power;
+
+pub use carbon::{ImpactAssessment, ImpactParams};
+pub use meter::{EnergyMeter, PodEnergy};
+pub use power::{blade_power_watts, node_power_watts, pod_power_watts};

@@ -1,0 +1,79 @@
+//! Ablations beyond the paper: (a) MCDA method — TOPSIS vs SAW / VIKOR /
+//! COPRAS under identical decision matrices; (b) scoring backend —
+//! pure-Rust vs the PJRT Pallas-kernel artifact (equivalence + cost).
+
+
+use crate::config::{CompetitionLevel, WeightingScheme};
+use crate::mcda::McdaMethod;
+use crate::metrics::Table;
+
+use super::{run_cell, ExperimentContext};
+
+/// Per-method results on the energy-centric profile.
+#[derive(Debug, Clone)]
+pub struct AblationResult {
+    pub level: CompetitionLevel,
+    pub rows: Vec<(McdaMethod, f64, f64)>, // (method, opt %, sched ms)
+}
+
+/// Run the MCDA-method ablation at one competition level.
+pub fn run_ablation(
+    ctx: &ExperimentContext,
+    level: CompetitionLevel,
+) -> AblationResult {
+    let mut rows = Vec::new();
+    for method in McdaMethod::ALL {
+        let cell_ctx = ExperimentContext {
+            config: ctx.config.clone(),
+            registry: None, // Rust backends only; PJRT covered elsewhere
+            mcda_method: method,
+        };
+        let cell =
+            run_cell(&cell_ctx, level, WeightingScheme::EnergyCentric);
+        rows.push((method, cell.optimization_pct(), cell.topsis_sched_ms));
+    }
+    AblationResult { level, rows }
+}
+
+impl AblationResult {
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Ablation — MCDA method (energy-centric, {} competition)",
+                self.level.label()
+            ),
+            &["Method", "Optimization (%)", "Sched time (ms)"],
+        );
+        for (m, opt, ms) in &self.rows {
+            t.row(vec![
+                format!("{m:?}"),
+                format!("{opt:.2}"),
+                format!("{ms:.4}"),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn all_methods_produce_positive_optimization() {
+        let mut cfg = Config::paper_default();
+        cfg.experiment.replications = 2;
+        let ctx = ExperimentContext::new(cfg);
+        let ab = run_ablation(&ctx, CompetitionLevel::Medium);
+        assert_eq!(ab.rows.len(), 4);
+        for (m, opt, _) in &ab.rows {
+            assert!(
+                *opt > 0.0,
+                "{m:?} failed to save energy ({opt:.2}%)"
+            );
+        }
+        assert!(crate::metrics::format_table(&ab.to_table())
+            .contains("Topsis"));
+    }
+}

@@ -1,0 +1,160 @@
+//! §V.D — node-allocation and per-workload analysis: where does each
+//! strategy place pods, and which workload class saves the most energy?
+
+use std::collections::HashMap;
+
+
+use crate::cluster::NodeCategory;
+use crate::config::{
+    CompetitionLevel, SchedulerKind, WeightingScheme,
+};
+use crate::metrics::Table;
+use crate::workload::{WorkloadClass, WorkloadExecutor};
+
+use super::{runner::run_once, ExperimentContext};
+
+/// Allocation + per-class-savings analysis for one competition level.
+#[derive(Debug, Clone)]
+pub struct AllocAnalysis {
+    pub level: CompetitionLevel,
+    /// profile → category → pods placed there by TOPSIS.
+    pub topsis_alloc:
+        HashMap<WeightingScheme, HashMap<NodeCategory, u32>>,
+    /// Default-scheduler allocation histogram (profile-independent in
+    /// expectation; measured from the same runs).
+    pub default_alloc: HashMap<NodeCategory, u32>,
+    /// Energy-centric per-class optimization % (savings by workload).
+    pub per_class_optimization: HashMap<WorkloadClass, f64>,
+}
+
+/// Run §V.D's analysis at one level (replications from config).
+pub fn run_alloc_analysis(
+    ctx: &ExperimentContext,
+    level: CompetitionLevel,
+) -> AllocAnalysis {
+    let executor = WorkloadExecutor::analytic();
+    let reps = ctx.config.experiment.replications;
+    let mut topsis_alloc: HashMap<_, HashMap<NodeCategory, u32>> =
+        HashMap::new();
+    let mut default_alloc: HashMap<NodeCategory, u32> = HashMap::new();
+    let mut class_sum: HashMap<WorkloadClass, (f64, f64)> = HashMap::new();
+
+    for scheme in WeightingScheme::ALL {
+        let entry = topsis_alloc.entry(scheme).or_default();
+        for r in 0..reps {
+            let seed = ctx.config.experiment.seed.wrapping_add(r as u64);
+            let result = run_once(ctx, level, scheme, seed, &executor);
+            for (cat, n) in result.allocations(SchedulerKind::Topsis) {
+                *entry.entry(cat).or_insert(0) += n;
+            }
+            for (cat, n) in result.allocations(SchedulerKind::DefaultK8s) {
+                *default_alloc.entry(cat).or_insert(0) += n;
+            }
+            if scheme == WeightingScheme::EnergyCentric {
+                let t = result.meter.per_class_kj(SchedulerKind::Topsis);
+                let d =
+                    result.meter.per_class_kj(SchedulerKind::DefaultK8s);
+                for class in WorkloadClass::ALL {
+                    let e = class_sum.entry(class).or_insert((0.0, 0.0));
+                    e.0 += *t.get(&class).unwrap_or(&0.0);
+                    e.1 += *d.get(&class).unwrap_or(&0.0);
+                }
+            }
+        }
+    }
+
+    let per_class_optimization = class_sum
+        .into_iter()
+        .map(|(class, (t, d))| {
+            (class, if d > 0.0 { 100.0 * (d - t) / d } else { 0.0 })
+        })
+        .collect();
+
+    AllocAnalysis {
+        level,
+        topsis_alloc,
+        default_alloc,
+        per_class_optimization,
+    }
+}
+
+impl AllocAnalysis {
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "§V.D — Node allocation by profile ({} competition, \
+                 pods over all replications)",
+                self.level.label()
+            ),
+            &["Profile", "Cat A", "Cat B", "Cat C", "Cat Default"],
+        );
+        for scheme in WeightingScheme::ALL {
+            let hist = &self.topsis_alloc[&scheme];
+            let mut row = vec![scheme.label().to_string()];
+            for cat in NodeCategory::ALL {
+                row.push(format!("{}", hist.get(&cat).unwrap_or(&0)));
+            }
+            t.row(row);
+        }
+        let mut row = vec!["Default K8s (baseline)".to_string()];
+        for cat in NodeCategory::ALL {
+            row.push(format!(
+                "{}",
+                self.default_alloc.get(&cat).unwrap_or(&0)
+            ));
+        }
+        t.row(row);
+        t
+    }
+
+    pub fn per_class_table(&self) -> Table {
+        let mut t = Table::new(
+            "§V.D — Energy-centric optimization by workload class",
+            &["Workload", "Optimization (%)"],
+        );
+        for class in WorkloadClass::ALL {
+            t.row(vec![
+                class.label().to_string(),
+                format!(
+                    "{:.2}",
+                    self.per_class_optimization.get(&class).unwrap_or(&0.0)
+                ),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn energy_centric_prefers_category_a_nodes() {
+        let mut cfg = Config::paper_default();
+        cfg.experiment.replications = 2;
+        let ctx = ExperimentContext::new(cfg);
+        let a = run_alloc_analysis(&ctx, CompetitionLevel::Low);
+
+        let energy = &a.topsis_alloc[&WeightingScheme::EnergyCentric];
+        let on_a = *energy.get(&NodeCategory::A).unwrap_or(&0);
+        let on_c = *energy.get(&NodeCategory::C).unwrap_or(&0);
+        assert!(
+            on_a > on_c,
+            "energy-centric put {on_a} pods on A vs {on_c} on C"
+        );
+
+        // Performance-centric must spread away from A relative to
+        // energy-centric.
+        let perf = &a.topsis_alloc[&WeightingScheme::PerformanceCentric];
+        let perf_on_a = *perf.get(&NodeCategory::A).unwrap_or(&0);
+        assert!(perf_on_a < on_a);
+
+        // Tables render.
+        assert!(crate::metrics::format_table(&a.to_table())
+            .contains("Energy-centric"));
+        assert!(crate::metrics::format_table(&a.per_class_table())
+            .contains("Medium"));
+    }
+}

@@ -1,0 +1,58 @@
+//! Fig. 2: heatmap of energy optimization % across competition levels
+//! (columns) and scheduling profiles (rows).
+
+use crate::config::{CompetitionLevel, WeightingScheme};
+use crate::metrics::format_heatmap;
+
+use super::Table6;
+
+/// Render the Fig-2 heatmap from Table VI data.
+pub fn render_fig2(t6: &Table6) -> String {
+    let row_labels: Vec<String> = WeightingScheme::ALL
+        .iter()
+        .map(|s| s.label().to_string())
+        .collect();
+    let col_labels: Vec<String> = CompetitionLevel::ALL
+        .iter()
+        .map(|l| l.label().to_string())
+        .collect();
+    let values: Vec<Vec<f64>> = WeightingScheme::ALL
+        .iter()
+        .map(|&scheme| {
+            CompetitionLevel::ALL
+                .iter()
+                .map(|&level| t6.cell(level, scheme).optimization_pct())
+                .collect()
+        })
+        .collect();
+    format_heatmap(
+        "Fig. 2 — Energy Savings (Optimization %) across Competition \
+         Levels and Profiles",
+        &row_labels,
+        &col_labels,
+        &values,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::experiments::{run_table6, ExperimentContext};
+
+    #[test]
+    fn fig2_renders_every_cell() {
+        let mut cfg = Config::paper_default();
+        cfg.experiment.replications = 1;
+        let t6 = run_table6(&ExperimentContext::new(cfg));
+        let fig = render_fig2(&t6);
+        for s in WeightingScheme::ALL {
+            assert!(fig.contains(s.label()), "missing row {s:?}");
+        }
+        for l in CompetitionLevel::ALL {
+            assert!(fig.contains(l.label()), "missing col {l:?}");
+        }
+        // 12 data cells rendered as percentages.
+        assert_eq!(fig.matches('%').count() >= 12, true);
+    }
+}

@@ -1,0 +1,16 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (see DESIGN.md §5 for the full index).
+
+mod ablation;
+mod alloc;
+mod fig2;
+mod runner;
+mod table6;
+mod table7;
+
+pub use ablation::{run_ablation, AblationResult};
+pub use alloc::{run_alloc_analysis, AllocAnalysis};
+pub use fig2::render_fig2;
+pub use runner::{run_cell, run_once, run_uniform, CellResult, ExperimentContext};
+pub use table6::{run_table6, Table6, Table6Row};
+pub use table7::{run_table7, Table7};

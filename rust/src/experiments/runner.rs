@@ -1,0 +1,268 @@
+//! The factorial cell runner: one (competition level × weighting
+//! scheme) cell, replicated over seeds, exactly as Table III prescribes.
+//!
+//! Comparison methodology: *paired runs*. Each replication generates
+//! one Table V pod set and deploys it twice — once entirely under the
+//! default scheduler (baseline) and once entirely under GreenPod with
+//! the cell's profile (treatment) — so the energy delta isolates the
+//! scheduling decision, and the "Default K8s (kJ)" column is constant
+//! across profiles within a level, exactly as the paper's Table VI
+//! shows. (The half/half mixed deployment of Table V is exercised by
+//! `run_once`, the §V.D analysis, and the e2e example.)
+
+use std::rc::Rc;
+
+
+use crate::config::{
+    CompetitionLevel, Config, SchedulerKind, WeightingScheme,
+};
+use crate::mcda::McdaMethod;
+use crate::runtime::{ArtifactRegistry, PjrtTopsisEngine};
+use crate::scheduler::{
+    DefaultK8sScheduler, Estimator, GreenPodScheduler, ScoringBackend,
+};
+use crate::simulation::{RunResult, SimulationEngine, SimulationParams};
+use crate::workload::{generate_pods, WorkloadExecutor};
+
+/// Shared context for experiment drivers: config + optional PJRT
+/// registry (when present, GreenPod scores through the Pallas-kernel
+/// artifact; otherwise through the pure-Rust TOPSIS — same math).
+pub struct ExperimentContext {
+    pub config: Config,
+    pub registry: Option<Rc<ArtifactRegistry>>,
+    pub mcda_method: McdaMethod,
+}
+
+impl ExperimentContext {
+    pub fn new(config: Config) -> Self {
+        Self { config, registry: None, mcda_method: McdaMethod::Topsis }
+    }
+
+    pub fn with_registry(mut self, registry: Rc<ArtifactRegistry>) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
+    pub fn with_method(mut self, method: McdaMethod) -> Self {
+        self.mcda_method = method;
+        self
+    }
+
+    fn backend(&self) -> ScoringBackend {
+        match (&self.registry, self.mcda_method) {
+            (Some(reg), McdaMethod::Topsis) => ScoringBackend::Pjrt(
+                Box::new(PjrtTopsisEngine::new(reg.clone())),
+            ),
+            (_, m) => ScoringBackend::Rust(m),
+        }
+    }
+}
+
+/// Aggregated result of one factorial cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub level: CompetitionLevel,
+    pub scheme: WeightingScheme,
+    /// Mean per-pod energy (kJ), default-scheduler half (Table VI col 1).
+    pub default_kj: f64,
+    /// Mean per-pod energy (kJ), TOPSIS half (Table VI col 2).
+    pub topsis_kj: f64,
+    /// Mean scheduling latency (ms) per scheduler.
+    pub default_sched_ms: f64,
+    pub topsis_sched_ms: f64,
+    /// Fraction of TOPSIS pods placed on Category-A nodes.
+    pub topsis_alloc_efficiency: f64,
+    pub default_alloc_efficiency: f64,
+    pub replications: u32,
+    pub unschedulable: usize,
+}
+
+impl CellResult {
+    /// kJ saved per pod (Table VI col 3).
+    pub fn savings_kj(&self) -> f64 {
+        self.default_kj - self.topsis_kj
+    }
+
+    /// Optimization percentage (Table VI col 4).
+    pub fn optimization_pct(&self) -> f64 {
+        if self.default_kj <= 0.0 {
+            0.0
+        } else {
+            100.0 * self.savings_kj() / self.default_kj
+        }
+    }
+}
+
+/// Run one factorial cell: `replications` seeded runs, averaged.
+pub fn run_cell(
+    ctx: &ExperimentContext,
+    level: CompetitionLevel,
+    scheme: WeightingScheme,
+) -> CellResult {
+    let cfg = &ctx.config;
+    let executor = WorkloadExecutor::analytic();
+    let mut acc = CellResult {
+        level,
+        scheme,
+        default_kj: 0.0,
+        topsis_kj: 0.0,
+        default_sched_ms: 0.0,
+        topsis_sched_ms: 0.0,
+        topsis_alloc_efficiency: 0.0,
+        default_alloc_efficiency: 0.0,
+        replications: cfg.experiment.replications,
+        unschedulable: 0,
+    };
+    let reps = cfg.experiment.replications;
+    for r in 0..reps {
+        let seed = cfg.experiment.seed.wrapping_add(r as u64);
+        let baseline =
+            run_uniform(ctx, level, scheme, seed, &executor,
+                        SchedulerKind::DefaultK8s);
+        let treatment =
+            run_uniform(ctx, level, scheme, seed, &executor,
+                        SchedulerKind::Topsis);
+        acc.default_kj += baseline.mean_kj(SchedulerKind::DefaultK8s);
+        acc.topsis_kj += treatment.mean_kj(SchedulerKind::Topsis);
+        acc.default_sched_ms +=
+            baseline.mean_sched_ms(SchedulerKind::DefaultK8s);
+        acc.topsis_sched_ms +=
+            treatment.mean_sched_ms(SchedulerKind::Topsis);
+        acc.topsis_alloc_efficiency +=
+            treatment.allocation_efficiency(SchedulerKind::Topsis);
+        acc.default_alloc_efficiency +=
+            baseline.allocation_efficiency(SchedulerKind::DefaultK8s);
+        acc.unschedulable +=
+            baseline.unschedulable.len() + treatment.unschedulable.len();
+    }
+    let n = reps as f64;
+    acc.default_kj /= n;
+    acc.topsis_kj /= n;
+    acc.default_sched_ms /= n;
+    acc.topsis_sched_ms /= n;
+    acc.topsis_alloc_efficiency /= n;
+    acc.default_alloc_efficiency /= n;
+    acc
+}
+
+/// One paired-run half: the Table V pod set with every pod owned by
+/// `kind` (baseline = all default, treatment = all TOPSIS).
+pub fn run_uniform(
+    ctx: &ExperimentContext,
+    level: CompetitionLevel,
+    scheme: WeightingScheme,
+    seed: u64,
+    executor: &WorkloadExecutor,
+    kind: SchedulerKind,
+) -> RunResult {
+    let cfg = &ctx.config;
+    let mut pods = generate_pods(level, &cfg.experiment, seed).pods;
+    for p in &mut pods {
+        p.scheduler = kind;
+    }
+    run_pods(ctx, pods, scheme, seed, executor)
+}
+
+/// One seeded *mixed* (Table V half/half) run of one cell — the live
+/// deployment shape; used by the §V.D analysis and the e2e example.
+pub fn run_once(
+    ctx: &ExperimentContext,
+    level: CompetitionLevel,
+    scheme: WeightingScheme,
+    seed: u64,
+    executor: &WorkloadExecutor,
+) -> RunResult {
+    let cfg = &ctx.config;
+    let pods = generate_pods(level, &cfg.experiment, seed).pods;
+    run_pods(ctx, pods, scheme, seed, executor)
+}
+
+/// Shared run mechanics for uniform and mixed deployments.
+fn run_pods(
+    ctx: &ExperimentContext,
+    pods: Vec<crate::cluster::Pod>,
+    scheme: WeightingScheme,
+    seed: u64,
+    executor: &WorkloadExecutor,
+) -> RunResult {
+    let cfg = &ctx.config;
+    let mut estimator = Estimator::new(
+        cfg.energy.clone(),
+        executor.light_epoch_secs(),
+        cfg.experiment.contention_beta,
+    );
+    estimator.set_light_epoch_secs(executor.light_epoch_secs());
+    let mut topsis = GreenPodScheduler::new(estimator, scheme)
+        .with_backend(ctx.backend());
+    let mut default = DefaultK8sScheduler::new(seed);
+    let engine = SimulationEngine::new(
+        cfg,
+        SimulationParams {
+            contention_beta: cfg.experiment.contention_beta,
+            seed,
+        },
+        executor,
+    );
+    let mut result = engine.run(pods, &mut topsis, &mut default);
+    result.pjrt_fallbacks = topsis.pjrt_fallbacks;
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_ctx() -> ExperimentContext {
+        let mut cfg = Config::paper_default();
+        cfg.experiment.replications = 2;
+        ExperimentContext::new(cfg)
+    }
+
+    #[test]
+    fn energy_centric_cell_saves_energy() {
+        let cell = run_cell(
+            &quick_ctx(),
+            CompetitionLevel::Medium,
+            WeightingScheme::EnergyCentric,
+        );
+        assert!(cell.topsis_kj > 0.0 && cell.default_kj > 0.0);
+        assert!(
+            cell.optimization_pct() > 10.0,
+            "energy-centric optimization only {:.2}%",
+            cell.optimization_pct()
+        );
+        assert_eq!(cell.unschedulable, 0);
+    }
+
+    #[test]
+    fn performance_centric_saves_less_than_energy_centric() {
+        let ctx = quick_ctx();
+        let perf = run_cell(
+            &ctx,
+            CompetitionLevel::Low,
+            WeightingScheme::PerformanceCentric,
+        );
+        let energy = run_cell(
+            &ctx,
+            CompetitionLevel::Low,
+            WeightingScheme::EnergyCentric,
+        );
+        assert!(
+            energy.optimization_pct() > perf.optimization_pct(),
+            "energy {:.2}% !> perf {:.2}%",
+            energy.optimization_pct(),
+            perf.optimization_pct()
+        );
+    }
+
+    #[test]
+    fn cell_deterministic() {
+        let ctx = quick_ctx();
+        let a = run_cell(&ctx, CompetitionLevel::Low,
+                         WeightingScheme::General);
+        let b = run_cell(&ctx, CompetitionLevel::Low,
+                         WeightingScheme::General);
+        assert_eq!(a.topsis_kj, b.topsis_kj);
+        assert_eq!(a.default_kj, b.default_kj);
+    }
+}

@@ -1,0 +1,163 @@
+//! Table VI: energy consumption per (competition level × profile),
+//! TOPSIS vs default, with savings and optimization %, plus the
+//! per-level and all-levels averages the paper reports.
+
+
+use crate::config::{CompetitionLevel, WeightingScheme};
+use crate::metrics::Table;
+
+use super::{run_cell, CellResult, ExperimentContext};
+
+/// One printable Table VI row.
+#[derive(Debug, Clone)]
+pub struct Table6Row {
+    pub level: String,
+    pub profile: String,
+    pub default_kj: f64,
+    pub topsis_kj: f64,
+    pub savings_kj: f64,
+    pub optimization_pct: f64,
+}
+
+/// The full Table VI result set.
+#[derive(Debug, Clone)]
+pub struct Table6 {
+    pub cells: Vec<CellResult>,
+    pub rows: Vec<Table6Row>,
+    /// All-levels average optimization % (feeds §V.E extrapolation).
+    pub average_optimization_pct: f64,
+    /// Per-level average optimization % keyed in `CompetitionLevel::ALL`
+    /// order (feeds §V.C's analysis).
+    pub per_level_avg_pct: [f64; 3],
+}
+
+/// Run the full factorial and assemble Table VI.
+pub fn run_table6(ctx: &ExperimentContext) -> Table6 {
+    let mut cells = Vec::new();
+    let mut rows = Vec::new();
+    let mut per_level_avg = [0.0f64; 3];
+    let mut grand_default = 0.0;
+    let mut grand_topsis = 0.0;
+
+    for (li, level) in CompetitionLevel::ALL.into_iter().enumerate() {
+        let mut lvl_default = 0.0;
+        let mut lvl_topsis = 0.0;
+        for scheme in WeightingScheme::ALL {
+            let cell = run_cell(ctx, level, scheme);
+            rows.push(Table6Row {
+                level: level.label().to_string(),
+                profile: scheme.label().to_string(),
+                default_kj: cell.default_kj,
+                topsis_kj: cell.topsis_kj,
+                savings_kj: cell.savings_kj(),
+                optimization_pct: cell.optimization_pct(),
+            });
+            lvl_default += cell.default_kj;
+            lvl_topsis += cell.topsis_kj;
+            cells.push(cell);
+        }
+        let n = WeightingScheme::ALL.len() as f64;
+        let (d, t) = (lvl_default / n, lvl_topsis / n);
+        per_level_avg[li] = 100.0 * (d - t) / d;
+        rows.push(Table6Row {
+            level: level.label().to_string(),
+            profile: format!("Average ({})", level.label()),
+            default_kj: d,
+            topsis_kj: t,
+            savings_kj: d - t,
+            optimization_pct: per_level_avg[li],
+        });
+        grand_default += d;
+        grand_topsis += t;
+    }
+
+    let gd = grand_default / 3.0;
+    let gt = grand_topsis / 3.0;
+    let average_optimization_pct = 100.0 * (gd - gt) / gd;
+    rows.push(Table6Row {
+        level: "All".into(),
+        profile: "Average (All)".into(),
+        default_kj: gd,
+        topsis_kj: gt,
+        savings_kj: gd - gt,
+        optimization_pct: average_optimization_pct,
+    });
+
+    Table6 { cells, rows, average_optimization_pct, per_level_avg_pct: per_level_avg }
+}
+
+impl Table6 {
+    /// Render in the paper's format.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            "TABLE VI — ENERGY CONSUMPTION (default K8s vs GreenPod TOPSIS)",
+            &["Level", "Profile", "Default K8s (kJ)", "TOPSIS (kJ)",
+              "Savings (kJ)", "Optimization (%)"],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                r.level.clone(),
+                r.profile.clone(),
+                format!("{:.4}", r.default_kj),
+                format!("{:.4}", r.topsis_kj),
+                format!("{:.4}", r.savings_kj),
+                format!("{:.2} ▼", r.optimization_pct),
+            ]);
+        }
+        t
+    }
+
+    /// The cell for a given (level, scheme).
+    pub fn cell(
+        &self,
+        level: CompetitionLevel,
+        scheme: WeightingScheme,
+    ) -> &CellResult {
+        self.cells
+            .iter()
+            .find(|c| c.level == level && c.scheme == scheme)
+            .expect("cell present")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    /// The paper's qualitative shape must hold (DESIGN.md §5's
+    /// reproduction criterion). Uses reduced replications for speed.
+    #[test]
+    fn table6_shape_matches_paper() {
+        let mut cfg = Config::paper_default();
+        cfg.experiment.replications = 3;
+        let ctx = ExperimentContext::new(cfg);
+        let t6 = run_table6(&ctx);
+
+        for level in CompetitionLevel::ALL {
+            let e = t6
+                .cell(level, WeightingScheme::EnergyCentric)
+                .optimization_pct();
+            let p = t6
+                .cell(level, WeightingScheme::PerformanceCentric)
+                .optimization_pct();
+            // Energy-centric always beats performance-centric.
+            assert!(e > p, "{level:?}: energy {e:.1}% !> perf {p:.1}%");
+            // Energy-centric achieves substantial savings everywhere.
+            assert!(e > 15.0, "{level:?}: energy-centric only {e:.1}%");
+        }
+        // Resource-efficient is strong at low/medium competition.
+        for level in [CompetitionLevel::Low, CompetitionLevel::Medium] {
+            let r = t6
+                .cell(level, WeightingScheme::ResourceEfficient)
+                .optimization_pct();
+            let p = t6
+                .cell(level, WeightingScheme::PerformanceCentric)
+                .optimization_pct();
+            assert!(r > p, "{level:?}: resource {r:.1}% !> perf {p:.1}%");
+        }
+        // 13 + 3 + 1 → 12 cells + 3 level averages + grand average.
+        assert_eq!(t6.rows.len(), 16);
+        assert!(t6.average_optimization_pct > 0.0);
+    }
+}

@@ -1,0 +1,45 @@
+//! # GreenPod — energy-optimized TOPSIS scheduling for AIoT workloads
+//!
+//! Reproduction of *GreenPod: Energy-Optimized Scheduling for AIoT Workloads
+//! Using TOPSIS* (Pradeep & Al-Masri, CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas system (see `DESIGN.md`).
+//!
+//! The crate is organized bottom-up:
+//!
+//! * [`config`] — serde/TOML configuration system encoding the paper's
+//!   Tables I–V plus energy-model constants.
+//! * [`cluster`] — the Kubernetes-like cluster-state substrate: nodes,
+//!   pods, binding/allocatable accounting.
+//! * [`energy`] — the Dayarathna blade-server power model the paper uses,
+//!   energy metering, and the carbon/cost arithmetic of §V.E/F.
+//! * [`mcda`] — standalone multi-criteria decision analysis library:
+//!   TOPSIS (reference implementation) plus the SAW / VIKOR / COPRAS
+//!   baselines the related work compares against.
+//! * [`scheduler`] — the paper's contribution: the GreenPod TOPSIS
+//!   scheduler (decision-matrix builder, weighting schemes, scoring
+//!   backends) and the default kube-scheduler baseline.
+//! * [`workload`] — Table II workload classes, Table V competition-level
+//!   generators, arrival traces, and the PJRT-backed executor.
+//! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`
+//!   produced by `make artifacts` and executes them on the hot path.
+//! * [`simulation`] — deterministic discrete-event simulation engine with
+//!   a CPU-contention model.
+//! * [`metrics`] — Table IV metrics collection and paper-style reports.
+//! * [`experiments`] — drivers regenerating every table and figure of the
+//!   paper's evaluation (Table VI, Fig 2, Table VII, §V.D, ablations).
+//! * [`api`] — in-process kube-like submission loop (`serve` mode).
+
+pub mod api;
+pub mod cluster;
+pub mod util;
+pub mod config;
+pub mod energy;
+pub mod experiments;
+pub mod mcda;
+pub mod metrics;
+pub mod runtime;
+pub mod scheduler;
+pub mod simulation;
+pub mod workload;
+
+pub use config::ExperimentConfig;

@@ -1,0 +1,320 @@
+//! `greenpod` — the CLI launcher for the GreenPod reproduction.
+//!
+//! ```text
+//! greenpod show-config [--section all|cluster|workloads|competition|experiment|energy]
+//! greenpod experiment table6 [--pjrt] [--csv]     # Table VI factorial
+//! greenpod experiment fig2                        # Fig. 2 heatmap
+//! greenpod experiment table7 [--optimization P]   # Table VII impact
+//! greenpod experiment alloc [--level medium]      # §V.D analysis
+//! greenpod experiment ablation [--level medium]   # MCDA-method ablation
+//! greenpod experiment all                         # everything above
+//! greenpod calibrate [--reps 4]                   # PJRT epoch timings
+//! greenpod serve --trace t.jsonl [--scheme energy-centric]
+//!                [--time-scale 100] [--only topsis|default]
+//!
+//! global: --config file.json --replications N --seed S
+//! ```
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use greenpod::api::{ApiEvent, ApiLoop, PodSubmission};
+use greenpod::config::{
+    CompetitionLevel, Config, SchedulerKind, WeightingScheme,
+};
+use greenpod::experiments::{
+    render_fig2, run_ablation, run_alloc_analysis, run_table6, run_table7,
+    ExperimentContext,
+};
+use greenpod::metrics::format_table;
+use greenpod::runtime::{ArtifactRegistry, LinRegRunner};
+use greenpod::scheduler::{
+    DefaultK8sScheduler, Estimator, GreenPodScheduler,
+};
+use greenpod::util::cli::Args;
+use greenpod::workload::{ArrivalTrace, WorkloadClass, WorkloadExecutor};
+
+const FLAGS: &[&str] = &["pjrt", "csv", "help", "version"];
+const KNOWN_OPTS: &[&str] = &[
+    "config", "replications", "seed", "section", "optimization", "level",
+    "reps", "trace", "scheme", "time-scale", "only",
+];
+
+const USAGE: &str = "\
+greenpod — energy-optimized TOPSIS scheduling for AIoT workloads
+  (reproduction of GreenPod, CS.DC 2025; see DESIGN.md)
+
+usage:
+  greenpod show-config [--section all|cluster|workloads|competition|experiment|energy]
+  greenpod experiment table6 [--pjrt] [--csv]
+  greenpod experiment fig2
+  greenpod experiment table7 [--optimization PCT]
+  greenpod experiment alloc [--level low|medium|high]
+  greenpod experiment ablation [--level low|medium|high]
+  greenpod experiment all
+  greenpod calibrate [--reps N]
+  greenpod serve --trace FILE|- [--scheme S] [--time-scale X] [--only topsis|default]
+
+global options:
+  --config FILE.json   override paper defaults (partial configs fine)
+  --replications N     factorial replications per cell
+  --seed S             base RNG seed";
+
+fn main() -> Result<()> {
+    let args = Args::from_env(FLAGS)?;
+    args.reject_unknown_opts(KNOWN_OPTS)?;
+    if args.flag("help") || args.command(0).is_none() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    if args.flag("version") {
+        println!("greenpod {}", env!("CARGO_PKG_VERSION"));
+        return Ok(());
+    }
+
+    let cfg = load_config(&args)?;
+    match args.command(0).unwrap() {
+        "show-config" => show_config(&cfg, args.opt("section").unwrap_or("all")),
+        "experiment" => run_experiment(&cfg, &args),
+        "calibrate" => calibrate(args.opt_parse("reps", 4u32)?),
+        "serve" => serve(&cfg, &args),
+        other => bail!("unknown command `{other}`\n\n{USAGE}"),
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => Config::from_json_file(std::path::Path::new(path))?,
+        None => Config::paper_default(),
+    };
+    if let Some(r) = args.opt("replications") {
+        cfg.experiment.replications = r.parse()?;
+    }
+    if let Some(s) = args.opt("seed") {
+        cfg.experiment.seed = s.parse()?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn show_config(cfg: &Config, section: &str) -> Result<()> {
+    let all = section == "all";
+    if all || section == "cluster" {
+        println!("# Cluster (paper Table I)\n{}\n", cfg.to_json());
+    }
+    if all || section == "workloads" {
+        println!("# Workloads (paper Table II)");
+        for class in WorkloadClass::ALL {
+            let r = class.requests();
+            let (n, d) = class.step_shape();
+            println!(
+                "{:8} requests: {}m CPU / {} MiB; step shape {}x{}; \
+                 work/epoch {}x",
+                class.label(),
+                r.cpu_millis,
+                r.memory_mib,
+                n,
+                d,
+                class.work_per_epoch()
+            );
+        }
+        println!();
+    }
+    if all || section == "competition" {
+        println!("# Competition levels (paper Table V)");
+        for level in CompetitionLevel::ALL {
+            let mix = level.pod_mix();
+            println!(
+                "{:6}: light {}+{}, medium {}+{}, complex {}+{} \
+                 (TOPSIS+default)",
+                level.label(),
+                mix[0].topsis, mix[0].default_k8s,
+                mix[1].topsis, mix[1].default_k8s,
+                mix[2].topsis, mix[2].default_k8s,
+            );
+        }
+        println!();
+    }
+    if all || section == "experiment" || section == "energy" {
+        println!("# Full config (JSON; `--config` accepts this schema)");
+        println!("{}", cfg.to_json());
+    }
+    Ok(())
+}
+
+fn make_context(cfg: &Config, pjrt: bool) -> Result<ExperimentContext> {
+    let mut ctx = ExperimentContext::new(cfg.clone());
+    if pjrt {
+        let registry = Rc::new(ArtifactRegistry::open_default()?);
+        eprintln!(
+            "PJRT backend: platform={} artifacts={}",
+            registry.client().platform_name(),
+            registry.dir().display()
+        );
+        ctx = ctx.with_registry(registry);
+    }
+    Ok(ctx)
+}
+
+fn run_experiment(cfg: &Config, args: &Args) -> Result<()> {
+    let which = args
+        .command(1)
+        .ok_or_else(|| anyhow::anyhow!("experiment needs a name\n\n{USAGE}"))?;
+    let level: CompetitionLevel =
+        args.opt("level").unwrap_or("medium").parse()?;
+    match which {
+        "table6" => {
+            let ctx = make_context(cfg, args.flag("pjrt"))?;
+            let t6 = run_table6(&ctx);
+            println!("{}", format_table(&t6.to_table()));
+            if args.flag("csv") {
+                println!("\nCSV:\n{}", t6.to_table().to_csv());
+            }
+            println!(
+                "\nAll-levels average optimization: {:.2}%",
+                t6.average_optimization_pct
+            );
+        }
+        "fig2" => {
+            let ctx = make_context(cfg, false)?;
+            let t6 = run_table6(&ctx);
+            println!("{}", render_fig2(&t6));
+        }
+        "table7" => {
+            let pct = match args.opt("optimization") {
+                Some(p) => p.parse()?,
+                None => {
+                    eprintln!("measuring Table VI average first ...");
+                    run_table6(&make_context(cfg, false)?)
+                        .average_optimization_pct
+                }
+            };
+            let t7 = run_table7(&cfg.energy, pct);
+            println!("{}", format_table(&t7.to_table()));
+        }
+        "alloc" => {
+            let ctx = make_context(cfg, false)?;
+            let a = run_alloc_analysis(&ctx, level);
+            println!("{}", format_table(&a.to_table()));
+            println!("\n{}", format_table(&a.per_class_table()));
+        }
+        "ablation" => {
+            let ctx = make_context(cfg, false)?;
+            let ab = run_ablation(&ctx, level);
+            println!("{}", format_table(&ab.to_table()));
+        }
+        "all" => {
+            let ctx = make_context(cfg, false)?;
+            let t6 = run_table6(&ctx);
+            println!("{}", format_table(&t6.to_table()));
+            println!();
+            println!("{}", render_fig2(&t6));
+            println!();
+            let t7 = run_table7(&cfg.energy, t6.average_optimization_pct);
+            println!("{}", format_table(&t7.to_table()));
+            println!();
+            let a = run_alloc_analysis(&ctx, CompetitionLevel::Medium);
+            println!("{}", format_table(&a.to_table()));
+            println!("\n{}", format_table(&a.per_class_table()));
+            println!();
+            let ab = run_ablation(&ctx, CompetitionLevel::Medium);
+            println!("{}", format_table(&ab.to_table()));
+        }
+        other => bail!("unknown experiment `{other}`\n\n{USAGE}"),
+    }
+    Ok(())
+}
+
+fn calibrate(reps: u32) -> Result<()> {
+    let registry = ArtifactRegistry::open_default()?;
+    println!(
+        "platform={} devices={}",
+        registry.client().platform_name(),
+        registry.client().device_count()
+    );
+    let runner = LinRegRunner::new(&registry);
+    for class in WorkloadClass::ALL {
+        let secs = runner.calibrate(class, reps)?;
+        let (n, d) = class.step_shape();
+        println!(
+            "{:8} epoch ({}x{} x {} steps): {:.3} ms",
+            class.label(),
+            n,
+            d,
+            registry.manifest().epoch_steps,
+            secs * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn serve(cfg: &Config, args: &Args) -> Result<()> {
+    let trace_path = args
+        .opt("trace")
+        .ok_or_else(|| anyhow::anyhow!("serve needs --trace FILE|-"))?;
+    let scheme: WeightingScheme =
+        args.opt("scheme").unwrap_or("energy-centric").parse()?;
+    let time_scale: f64 = args.opt_parse("time-scale", 100.0)?;
+    let only: Option<SchedulerKind> = match args.opt("only") {
+        Some(s) => Some(s.parse()?),
+        None => None,
+    };
+
+    let text = if trace_path == "-" {
+        use std::io::Read;
+        let mut s = String::new();
+        std::io::stdin().read_to_string(&mut s)?;
+        s
+    } else {
+        std::fs::read_to_string(trace_path)?
+    };
+    let trace = ArrivalTrace::from_jsonl(&text)?;
+    eprintln!(
+        "serving {} pods (scheme {:?}, time_scale {time_scale})",
+        trace.entries.len(),
+        scheme
+    );
+
+    let mut api = ApiLoop::new(cfg.clone(), WorkloadExecutor::analytic());
+    api.time_scale = time_scale;
+    let (sub_tx, sub_rx) = std::sync::mpsc::channel();
+
+    // Feed the trace from a separate thread, honoring inter-arrival
+    // gaps compressed by time_scale.
+    let entries = trace.entries.clone();
+    let feeder = std::thread::spawn(move || {
+        let mut prev = 0.0f64;
+        for (i, e) in entries.into_iter().enumerate() {
+            let gap = ((e.at_s - prev) / time_scale).max(0.0);
+            prev = e.at_s;
+            if gap > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    gap.min(0.25),
+                ));
+            }
+            let scheduler = only.unwrap_or(if i % 2 == 0 {
+                SchedulerKind::Topsis
+            } else {
+                SchedulerKind::DefaultK8s
+            });
+            if sub_tx.send(PodSubmission { entry: e, scheduler }).is_err() {
+                break;
+            }
+        }
+    });
+
+    let mut topsis = GreenPodScheduler::new(
+        Estimator::with_defaults(cfg.energy.clone()),
+        scheme,
+    );
+    let mut default = DefaultK8sScheduler::new(cfg.experiment.seed);
+    api.run(
+        sub_rx,
+        &mut |ev: ApiEvent| println!("{}", ev.to_json().to_string()),
+        &mut topsis,
+        &mut default,
+    )?;
+    feeder.join().ok();
+    Ok(())
+}

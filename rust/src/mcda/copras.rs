@@ -1,0 +1,101 @@
+//! COPRAS — COmplex PRoportional ASsessment (ablation baseline, §II.B
+//! [21]).
+//!
+//! Sum-normalizes the matrix, splits weighted sums into benefit (S⁺)
+//! and cost (S⁻) parts, and scores `Q_i = S⁺_i + min(S⁻)·ΣS⁻ /
+//! (S⁻_i · Σ(min(S⁻)/S⁻_j))`, normalized to the best alternative.
+
+use super::normalize::sum_normalize;
+use super::types::{DecisionProblem, Direction};
+
+const EPS: f64 = 1e-12;
+
+/// COPRAS utility degrees, normalized so the best alternative gets 1.0.
+pub fn copras_scores(p: &DecisionProblem) -> Vec<f64> {
+    let (n, c) = (p.n, p.c());
+    if n == 0 {
+        return Vec::new();
+    }
+    let w = p.norm_weights();
+    let nm = sum_normalize(&p.matrix, n, c);
+
+    let mut s_plus = vec![0.0f64; n];
+    let mut s_minus = vec![0.0f64; n];
+    for row in 0..n {
+        for col in 0..c {
+            let v = w[col] * nm[row * c + col];
+            match p.criteria[col].direction {
+                Direction::Benefit => s_plus[row] += v,
+                Direction::Cost => s_minus[row] += v,
+            }
+        }
+    }
+
+    let any_cost =
+        p.criteria.iter().any(|cr| cr.direction == Direction::Cost);
+    let q: Vec<f64> = if !any_cost {
+        s_plus.clone()
+    } else {
+        let s_minus_min =
+            s_minus.iter().cloned().fold(f64::INFINITY, f64::min).max(EPS);
+        let sum_s_minus: f64 = s_minus.iter().sum();
+        let denom: f64 =
+            s_minus.iter().map(|&s| s_minus_min / s.max(EPS)).sum();
+        (0..n)
+            .map(|i| {
+                s_plus[i]
+                    + s_minus_min * sum_s_minus
+                        / (s_minus[i].max(EPS) * denom.max(EPS))
+            })
+            .collect()
+    };
+
+    let q_max = q.iter().cloned().fold(f64::NEG_INFINITY, f64::max).max(EPS);
+    q.iter().map(|&x| x / q_max).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcda::Criterion;
+
+    #[test]
+    fn dominant_row_scores_one() {
+        let p = DecisionProblem::new(
+            vec![
+                0.1, 9.0, //
+                0.9, 1.0, //
+                0.5, 5.0,
+            ],
+            3,
+            vec![Criterion::cost(1.0), Criterion::benefit(1.0)],
+        );
+        let s = copras_scores(&p);
+        assert!((s[0] - 1.0).abs() < 1e-12, "{s:?}");
+        assert!(s[0] > s[2] && s[2] > s[1]);
+    }
+
+    #[test]
+    fn benefit_only_problem() {
+        let p = DecisionProblem::new(
+            vec![2.0, 1.0, 4.0],
+            3,
+            vec![Criterion::benefit(1.0)],
+        );
+        let s = copras_scores(&p);
+        assert!((s[2] - 1.0).abs() < 1e-12);
+        assert!(s[2] > s[0] && s[0] > s[1]);
+    }
+
+    #[test]
+    fn scores_positive_and_bounded() {
+        let p = DecisionProblem::new(
+            vec![3.0, 7.0, 2.0, 4.0, 9.0, 5.0],
+            3,
+            vec![Criterion::benefit(1.0), Criterion::cost(2.0)],
+        );
+        for s in copras_scores(&p) {
+            assert!(s > 0.0 && s <= 1.0 + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Standalone multi-criteria decision analysis (MCDA) library.
+//!
+//! [`topsis`] is the pure-Rust reference implementation of the method
+//! GreenPod schedules with (bit-for-bit the same math as the Pallas
+//! kernel — cross-checked in `rust/tests/pjrt_integration.rs`). The
+//! related work the paper positions against combines SAW, VIKOR and
+//! COPRAS ([21]); those are implemented here as ablation baselines
+//! (`greenpod experiment ablation`).
+//!
+//! All methods share the [`DecisionProblem`] input type: an `n × c`
+//! row-major matrix, per-criterion weights, and per-criterion
+//! directions.
+
+mod copras;
+mod normalize;
+mod saw;
+mod topsis;
+mod types;
+mod vikor;
+
+pub use copras::copras_scores;
+pub use normalize::{minmax_normalize, sum_normalize, vector_normalize};
+pub use saw::saw_scores;
+pub use topsis::{topsis_best, topsis_closeness, topsis_closeness_into, topsis_rank};
+pub use types::{argmax, Criterion, DecisionProblem, Direction};
+pub use vikor::{vikor_scores, VikorResult};
+
+/// Which MCDA method ranks the candidates (ablation axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum McdaMethod {
+    Topsis,
+    Saw,
+    Vikor,
+    Copras,
+}
+
+impl McdaMethod {
+    pub const ALL: [McdaMethod; 4] = [
+        McdaMethod::Topsis,
+        McdaMethod::Saw,
+        McdaMethod::Vikor,
+        McdaMethod::Copras,
+    ];
+
+    /// Score all alternatives; higher is always better (VIKOR's Q is
+    /// inverted to fit the convention).
+    pub fn scores(self, p: &DecisionProblem) -> Vec<f64> {
+        match self {
+            McdaMethod::Topsis => topsis_closeness(p),
+            McdaMethod::Saw => saw_scores(p),
+            McdaMethod::Vikor => {
+                vikor_scores(p, 0.5).q.iter().map(|q| 1.0 - q).collect()
+            }
+            McdaMethod::Copras => copras_scores(p),
+        }
+    }
+}
+
+impl std::str::FromStr for McdaMethod {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "topsis" => Ok(McdaMethod::Topsis),
+            "saw" => Ok(McdaMethod::Saw),
+            "vikor" => Ok(McdaMethod::Vikor),
+            "copras" => Ok(McdaMethod::Copras),
+            other => anyhow::bail!(
+                "unknown MCDA method `{other}` (topsis|saw|vikor|copras)"
+            ),
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Decision-matrix normalization schemes.
+
+const EPS: f64 = 1e-12;
+
+/// Vector (Euclidean) normalization per column — what TOPSIS uses.
+/// Returns a new row-major matrix of the same shape.
+pub fn vector_normalize(matrix: &[f64], n: usize, c: usize) -> Vec<f64> {
+    let mut norms = vec![0.0f64; c];
+    for row in 0..n {
+        for col in 0..c {
+            let v = matrix[row * c + col];
+            norms[col] += v * v;
+        }
+    }
+    for norm in &mut norms {
+        *norm = norm.sqrt().max(EPS);
+    }
+    let mut out = vec![0.0; n * c];
+    for row in 0..n {
+        for col in 0..c {
+            out[row * c + col] = matrix[row * c + col] / norms[col];
+        }
+    }
+    out
+}
+
+/// Min-max normalization per column into [0, 1] (SAW/VIKOR style).
+/// Constant columns normalize to 0.
+pub fn minmax_normalize(matrix: &[f64], n: usize, c: usize) -> Vec<f64> {
+    let mut mins = vec![f64::INFINITY; c];
+    let mut maxs = vec![f64::NEG_INFINITY; c];
+    for row in 0..n {
+        for col in 0..c {
+            let v = matrix[row * c + col];
+            mins[col] = mins[col].min(v);
+            maxs[col] = maxs[col].max(v);
+        }
+    }
+    let mut out = vec![0.0; n * c];
+    for row in 0..n {
+        for col in 0..c {
+            let span = maxs[col] - mins[col];
+            out[row * c + col] = if span <= EPS {
+                0.0
+            } else {
+                (matrix[row * c + col] - mins[col]) / span
+            };
+        }
+    }
+    out
+}
+
+/// Sum normalization per column (COPRAS style): each column sums to 1.
+pub fn sum_normalize(matrix: &[f64], n: usize, c: usize) -> Vec<f64> {
+    let mut sums = vec![0.0f64; c];
+    for row in 0..n {
+        for col in 0..c {
+            sums[col] += matrix[row * c + col];
+        }
+    }
+    let mut out = vec![0.0; n * c];
+    for row in 0..n {
+        for col in 0..c {
+            let s = if sums[col].abs() <= EPS { 1.0 } else { sums[col] };
+            out[row * c + col] = matrix[row * c + col] / s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_norm_unit_columns() {
+        let m = vec![3.0, 1.0, 4.0, 2.0]; // 2x2
+        let r = vector_normalize(&m, 2, 2);
+        // col 0: 3,4 -> /5; col 1: 1,2 -> /sqrt(5)
+        assert!((r[0] - 0.6).abs() < 1e-12);
+        assert!((r[2] - 0.8).abs() < 1e-12);
+        let c1: f64 = (r[1] * r[1] + r[3] * r[3]).sqrt();
+        assert!((c1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vector_norm_zero_column_safe() {
+        let m = vec![0.0, 1.0, 0.0, 2.0];
+        let r = vector_normalize(&m, 2, 2);
+        assert_eq!(r[0], 0.0);
+        assert_eq!(r[2], 0.0);
+        assert!(r.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn minmax_hits_bounds() {
+        let m = vec![1.0, 10.0, 5.0, 20.0, 9.0, 30.0]; // 3x2
+        let r = minmax_normalize(&m, 3, 2);
+        assert_eq!(r[0], 0.0);
+        assert_eq!(r[4], 1.0);
+        assert!((r[2] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn minmax_constant_column_zero() {
+        let m = vec![5.0, 5.0, 5.0];
+        let r = minmax_normalize(&m, 3, 1);
+        assert!(r.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn sum_norm_columns_sum_to_one() {
+        let m = vec![1.0, 2.0, 3.0, 4.0, 6.0, 4.0]; // 3x2
+        let r = sum_normalize(&m, 3, 2);
+        let s0 = r[0] + r[2] + r[4];
+        let s1 = r[1] + r[3] + r[5];
+        assert!((s0 - 1.0).abs() < 1e-12);
+        assert!((s1 - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,66 @@
+//! SAW — Simple Additive Weighting (ablation baseline, paper §II.B).
+//!
+//! Min-max normalize each criterion (cost criteria inverted), then take
+//! the weighted sum. The simplest MCDA method; GreenPod's ablation runs
+//! it against TOPSIS under identical decision matrices.
+
+use super::normalize::minmax_normalize;
+use super::types::{DecisionProblem, Direction};
+
+/// SAW scores in [0, 1]; higher is better.
+pub fn saw_scores(p: &DecisionProblem) -> Vec<f64> {
+    let (n, c) = (p.n, p.c());
+    if n == 0 {
+        return Vec::new();
+    }
+    let w = p.norm_weights();
+    let nm = minmax_normalize(&p.matrix, n, c);
+    (0..n)
+        .map(|row| {
+            (0..c)
+                .map(|col| {
+                    let v = nm[row * c + col];
+                    let v = match p.criteria[col].direction {
+                        Direction::Benefit => v,
+                        Direction::Cost => 1.0 - v,
+                    };
+                    w[col] * v
+                })
+                .sum()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcda::Criterion;
+
+    #[test]
+    fn dominant_row_scores_highest() {
+        let p = DecisionProblem::new(
+            vec![
+                0.1, 9.0, //
+                0.9, 1.0, //
+                0.5, 5.0,
+            ],
+            3,
+            vec![Criterion::cost(1.0), Criterion::benefit(1.0)],
+        );
+        let s = saw_scores(&p);
+        assert!((s[0] - 1.0).abs() < 1e-12); // best on both criteria
+        assert!(s[0] > s[2] && s[2] > s[1]);
+    }
+
+    #[test]
+    fn scores_bounded() {
+        let p = DecisionProblem::new(
+            vec![3.0, 7.0, 2.0, 4.0, 9.0, 5.0],
+            3,
+            vec![Criterion::benefit(2.0), Criterion::cost(3.0)],
+        );
+        for s in saw_scores(&p) {
+            assert!((0.0..=1.0 + 1e-12).contains(&s));
+        }
+    }
+}

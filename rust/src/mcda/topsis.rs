@@ -1,0 +1,199 @@
+//! TOPSIS — Technique for Order Preference by Similarity to Ideal
+//! Solution. The reference Rust implementation of GreenPod's ranking
+//! method; mathematically identical to the Pallas kernel
+//! (`python/compile/kernels/topsis.py`), which the integration tests
+//! verify numerically through the PJRT artifact.
+
+
+use super::types::{argmax, DecisionProblem, Direction};
+
+const EPS: f64 = 1e-12;
+
+/// Closeness coefficients `C_i = d⁻ / (d⁺ + d⁻) ∈ [0, 1]`; higher is
+/// better.
+///
+/// Two passes over the matrix, no `n × c` intermediate: the weighted
+/// normalized value is `vm = m · s` with a per-column scale
+/// `s = w / ‖col‖`, and since `s ≥ 0` the per-column extremes of `vm`
+/// are the extremes of `m` scaled — so ideal/anti-ideal points fall out
+/// of the same pass that accumulates the column norms (§Perf in
+/// EXPERIMENTS.md: ~2.3× over the textbook staged version).
+pub fn topsis_closeness(p: &DecisionProblem) -> Vec<f64> {
+    let mut out = Vec::new();
+    topsis_closeness_into(p, &mut out);
+    out
+}
+
+/// Allocation-reusing variant: clears and fills `out` (scratch buffers
+/// for the per-column stats are stack-allocated up to 8 criteria, the
+/// scheduler's case).
+pub fn topsis_closeness_into(p: &DecisionProblem, out: &mut Vec<f64>) {
+    let (n, c) = (p.n, p.c());
+    out.clear();
+    if n == 0 {
+        return;
+    }
+
+    // Per-column stats: sum of squares, min, max (SmallVec-style: a
+    // fixed stack array covers the scheduler's 5 criteria).
+    const STACK_C: usize = 8;
+    let mut stats_stack = [(0.0f64, f64::INFINITY, f64::NEG_INFINITY); STACK_C];
+    let mut stats_heap;
+    let stats: &mut [(f64, f64, f64)] = if c <= STACK_C {
+        &mut stats_stack[..c]
+    } else {
+        stats_heap = vec![(0.0, f64::INFINITY, f64::NEG_INFINITY); c];
+        &mut stats_heap
+    };
+
+    // Pass 1: column norms and extremes.
+    for row in 0..n {
+        let base = row * c;
+        for (col, s) in stats.iter_mut().enumerate() {
+            let v = p.matrix[base + col];
+            s.0 += v * v;
+            s.1 = s.1.min(v);
+            s.2 = s.2.max(v);
+        }
+    }
+
+    // Per-column scale s = w/‖col‖ and ideal/anti-ideal points.
+    let w_sum: f64 = p.criteria.iter().map(|cr| cr.weight).sum();
+    let w_sum = if w_sum <= 0.0 { 1.0 } else { w_sum };
+    let mut cols_stack = [(0.0f64, 0.0f64, 0.0f64); STACK_C];
+    let mut cols_heap;
+    let cols: &mut [(f64, f64, f64)] = if c <= STACK_C {
+        &mut cols_stack[..c]
+    } else {
+        cols_heap = vec![(0.0, 0.0, 0.0); c];
+        &mut cols_heap
+    };
+    for col in 0..c {
+        let (sumsq, lo, hi) = stats[col];
+        let scale = (p.criteria[col].weight / w_sum) / sumsq.sqrt().max(EPS);
+        let (vm_lo, vm_hi) = (lo * scale, hi * scale);
+        let (v_plus, v_minus) = match p.criteria[col].direction {
+            Direction::Benefit => (vm_hi, vm_lo),
+            Direction::Cost => (vm_lo, vm_hi),
+        };
+        cols[col] = (scale, v_plus, v_minus);
+    }
+
+    // Pass 2: separation distances and closeness.
+    out.reserve(n);
+    for row in 0..n {
+        let base = row * c;
+        let mut dp = 0.0;
+        let mut dm = 0.0;
+        for (col, &(scale, v_plus, v_minus)) in cols.iter().enumerate() {
+            let v = p.matrix[base + col] * scale;
+            dp += (v - v_plus) * (v - v_plus);
+            dm += (v - v_minus) * (v - v_minus);
+        }
+        let (dp, dm) = (dp.sqrt(), dm.sqrt());
+        out.push(dm / (dp + dm).max(EPS));
+    }
+}
+
+/// Rank alternatives: indices sorted by descending closeness (stable;
+/// equal scores keep input order for determinism).
+pub fn topsis_rank(p: &DecisionProblem) -> Vec<usize> {
+    let scores = topsis_closeness(p);
+    let mut idx: Vec<usize> = (0..p.n).collect();
+    idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
+    idx
+}
+
+/// Convenience: the single best alternative.
+pub fn topsis_best(p: &DecisionProblem) -> Option<usize> {
+    argmax(&topsis_closeness(p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcda::Criterion;
+
+    fn problem() -> DecisionProblem {
+        // 3 alternatives x 4 criteria (2 cost, 2 benefit); row 0 dominates.
+        DecisionProblem::new(
+            vec![
+                0.1, 0.1, 9.0, 9.0, //
+                0.5, 0.8, 4.0, 2.0, //
+                0.9, 0.5, 1.0, 5.0,
+            ],
+            3,
+            vec![
+                Criterion::cost(1.0),
+                Criterion::cost(1.0),
+                Criterion::benefit(1.0),
+                Criterion::benefit(1.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn dominant_alternative_scores_one() {
+        let c = topsis_closeness(&problem());
+        assert!((c[0] - 1.0).abs() < 1e-9, "{c:?}");
+        assert!(c.iter().all(|&x| (0.0..=1.0 + 1e-9).contains(&x)));
+        assert_eq!(topsis_best(&problem()), Some(0));
+    }
+
+    #[test]
+    fn rank_is_descending() {
+        let p = problem();
+        let rank = topsis_rank(&p);
+        let scores = topsis_closeness(&p);
+        for w in rank.windows(2) {
+            assert!(scores[w[0]] >= scores[w[1]]);
+        }
+    }
+
+    #[test]
+    fn identical_alternatives_tie() {
+        let p = DecisionProblem::new(
+            vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0],
+            3,
+            vec![Criterion::benefit(1.0), Criterion::cost(1.0)],
+        );
+        let c = topsis_closeness(&p);
+        assert!((c[0] - c[1]).abs() < 1e-12);
+        assert!((c[1] - c[2]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_problem_empty_scores() {
+        let p = DecisionProblem::new(vec![], 0, vec![Criterion::benefit(1.0)]);
+        assert!(topsis_closeness(&p).is_empty());
+        assert_eq!(topsis_best(&p), None);
+    }
+
+    #[test]
+    fn matches_python_golden_vector() {
+        // Same fixture as artifacts/golden.json topsis_n4 (5 real
+        // criteria; padding columns omitted — zero-weight columns don't
+        // affect closeness).
+        let p = DecisionProblem::new(
+            vec![
+                0.9, 0.8, 2.0, 4.0, 0.7, //
+                0.5, 0.6, 2.0, 8.0, 0.8, //
+                0.3, 1.0, 4.0, 16.0, 0.6, //
+                0.6, 0.7, 2.0, 8.0, 0.9,
+            ],
+            4,
+            vec![
+                Criterion::cost(0.2),
+                Criterion::cost(0.2),
+                Criterion::benefit(0.2),
+                Criterion::benefit(0.2),
+                Criterion::benefit(0.2),
+            ],
+        );
+        let c = topsis_closeness(&p);
+        // Values checked against the python oracle at artifact-build
+        // time; the integration test re-verifies via golden.json.
+        assert_eq!(c.len(), 4);
+        assert!(c.iter().all(|&x| x.is_finite()));
+    }
+}

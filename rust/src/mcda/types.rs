@@ -1,0 +1,107 @@
+//! Shared MCDA input types.
+
+
+/// Criterion direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Higher is better (free cores, free memory, balance).
+    Benefit,
+    /// Lower is better (execution time, energy).
+    Cost,
+}
+
+/// One criterion: weight + direction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Criterion {
+    pub weight: f64,
+    pub direction: Direction,
+}
+
+impl Criterion {
+    pub fn benefit(weight: f64) -> Self {
+        Self { weight, direction: Direction::Benefit }
+    }
+
+    pub fn cost(weight: f64) -> Self {
+        Self { weight, direction: Direction::Cost }
+    }
+}
+
+/// An `n`-alternative × `c`-criterion decision problem (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionProblem {
+    pub matrix: Vec<f64>,
+    pub n: usize,
+    pub criteria: Vec<Criterion>,
+}
+
+impl DecisionProblem {
+    pub fn new(matrix: Vec<f64>, n: usize, criteria: Vec<Criterion>) -> Self {
+        assert_eq!(
+            matrix.len(),
+            n * criteria.len(),
+            "matrix size {} != n {} x c {}",
+            matrix.len(),
+            n,
+            criteria.len()
+        );
+        Self { matrix, n, criteria }
+    }
+
+    pub fn c(&self) -> usize {
+        self.criteria.len()
+    }
+
+    #[inline]
+    pub fn at(&self, row: usize, col: usize) -> f64 {
+        self.matrix[row * self.criteria.len() + col]
+    }
+
+    /// Normalized weights (unit simplex).
+    pub fn norm_weights(&self) -> Vec<f64> {
+        let sum: f64 = self.criteria.iter().map(|c| c.weight).sum();
+        let sum = if sum <= 0.0 { 1.0 } else { sum };
+        self.criteria.iter().map(|c| c.weight / sum).collect()
+    }
+}
+
+/// Index of the best (highest-score) alternative; ties broken by lowest
+/// index for determinism.
+pub fn argmax(scores: &[f64]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &s) in scores.iter().enumerate() {
+        match best {
+            None => best = Some((i, s)),
+            Some((_, bs)) if s > bs => best = Some((i, s)),
+            _ => {}
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[should_panic(expected = "matrix size")]
+    fn size_mismatch_panics() {
+        DecisionProblem::new(vec![1.0; 5], 2, vec![Criterion::benefit(1.0); 3]);
+    }
+
+    #[test]
+    fn weights_normalize() {
+        let p = DecisionProblem::new(
+            vec![1.0; 4],
+            2,
+            vec![Criterion::benefit(2.0), Criterion::cost(6.0)],
+        );
+        assert_eq!(p.norm_weights(), vec![0.25, 0.75]);
+    }
+
+    #[test]
+    fn argmax_tie_breaks_low_index() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), Some(1));
+        assert_eq!(argmax(&[]), None);
+    }
+}

@@ -1,0 +1,124 @@
+//! VIKOR — VIseKriterijumska Optimizacija I Kompromisno Resenje
+//! (ablation baseline, paper §II.B [20, 21]).
+//!
+//! Computes the group utility S, individual regret R, and compromise
+//! index Q (lower Q is better). `McdaMethod::scores` inverts Q so all
+//! methods share the higher-is-better convention.
+
+use super::types::{DecisionProblem, Direction};
+
+const EPS: f64 = 1e-12;
+
+/// VIKOR outputs for each alternative.
+#[derive(Debug, Clone)]
+pub struct VikorResult {
+    /// Group utility (weighted Manhattan distance to the ideal).
+    pub s: Vec<f64>,
+    /// Individual regret (weighted Chebyshev distance to the ideal).
+    pub r: Vec<f64>,
+    /// Compromise index in [0, 1]; LOWER is better.
+    pub q: Vec<f64>,
+}
+
+/// Compute VIKOR with strategy weight `v` (0.5 = consensus).
+pub fn vikor_scores(p: &DecisionProblem, v: f64) -> VikorResult {
+    let (n, c) = (p.n, p.c());
+    if n == 0 {
+        return VikorResult { s: vec![], r: vec![], q: vec![] };
+    }
+    let w = p.norm_weights();
+
+    // Best (f*) and worst (f-) per criterion, direction-aware.
+    let mut f_star = vec![0.0f64; c];
+    let mut f_minus = vec![0.0f64; c];
+    for col in 0..c {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for row in 0..n {
+            let x = p.at(row, col);
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        match p.criteria[col].direction {
+            Direction::Benefit => {
+                f_star[col] = hi;
+                f_minus[col] = lo;
+            }
+            Direction::Cost => {
+                f_star[col] = lo;
+                f_minus[col] = hi;
+            }
+        }
+    }
+
+    let mut s = vec![0.0f64; n];
+    let mut r = vec![0.0f64; n];
+    for row in 0..n {
+        for col in 0..c {
+            let span = (f_star[col] - f_minus[col]).abs().max(EPS);
+            let d = w[col] * (f_star[col] - p.at(row, col)).abs() / span;
+            s[row] += d;
+            r[row] = r[row].max(d);
+        }
+    }
+
+    let (s_min, s_max) = min_max(&s);
+    let (r_min, r_max) = min_max(&r);
+    let q = (0..n)
+        .map(|i| {
+            let su = (s[i] - s_min) / (s_max - s_min).max(EPS);
+            let ru = (r[i] - r_min) / (r_max - r_min).max(EPS);
+            v * su + (1.0 - v) * ru
+        })
+        .collect();
+
+    VikorResult { s, r, q }
+}
+
+fn min_max(xs: &[f64]) -> (f64, f64) {
+    xs.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &x| {
+        (lo.min(x), hi.max(x))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcda::Criterion;
+
+    fn problem() -> DecisionProblem {
+        DecisionProblem::new(
+            vec![
+                0.1, 9.0, //
+                0.9, 1.0, //
+                0.5, 5.0,
+            ],
+            3,
+            vec![Criterion::cost(1.0), Criterion::benefit(1.0)],
+        )
+    }
+
+    #[test]
+    fn dominant_row_has_lowest_q() {
+        let res = vikor_scores(&problem(), 0.5);
+        assert!(res.q[0] <= res.q[1] && res.q[0] <= res.q[2]);
+        assert!((res.q[0] - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn s_bounded_by_one_r_by_max_weight() {
+        let res = vikor_scores(&problem(), 0.5);
+        for i in 0..3 {
+            assert!(res.s[i] <= 1.0 + 1e-12);
+            assert!(res.r[i] <= 0.5 + 1e-12); // max normalized weight
+        }
+    }
+
+    #[test]
+    fn q_in_unit_interval() {
+        let res = vikor_scores(&problem(), 0.25);
+        for q in res.q {
+            assert!((0.0..=1.0 + 1e-12).contains(&q));
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Metrics (paper Table IV) and paper-style report formatting.
+
+mod report;
+mod stats;
+
+pub use report::{format_heatmap, format_table, Table};
+pub use stats::Summary;

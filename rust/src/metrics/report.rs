@@ -1,0 +1,162 @@
+//! Paper-style table and heatmap rendering (terminal + CSV).
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// CSV rendering (for EXPERIMENTS.md ingestion / plotting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.headers.join(","));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Align and render a `Table` for the terminal.
+pub fn format_table(t: &Table) -> String {
+    let ncol = t.headers.len();
+    let mut widths: Vec<usize> =
+        t.headers.iter().map(|h| h.len()).collect();
+    for r in &t.rows {
+        for (i, c) in r.iter().enumerate() {
+            widths[i] = widths[i].max(c.len());
+        }
+    }
+    let sep = |ch: char| {
+        let mut s = String::from("+");
+        for w in &widths {
+            s.push_str(&ch.to_string().repeat(w + 2));
+            s.push('+');
+        }
+        s
+    };
+    let render_row = |cells: &[String]| {
+        let mut s = String::from("|");
+        for i in 0..ncol {
+            s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+        }
+        s
+    };
+    let mut out = String::new();
+    if !t.title.is_empty() {
+        out.push_str(&format!("{}\n", t.title));
+    }
+    out.push_str(&sep('-'));
+    out.push('\n');
+    out.push_str(&render_row(&t.headers));
+    out.push('\n');
+    out.push_str(&sep('='));
+    out.push('\n');
+    for r in &t.rows {
+        out.push_str(&render_row(r));
+        out.push('\n');
+    }
+    out.push_str(&sep('-'));
+    out
+}
+
+/// Render a Fig-2-style heatmap: rows × cols of percentages with a
+/// coarse shade legend (terminal-safe ASCII shading).
+pub fn format_heatmap(
+    title: &str,
+    row_labels: &[String],
+    col_labels: &[String],
+    values: &[Vec<f64>],
+) -> String {
+    let shade = |v: f64, lo: f64, hi: f64| {
+        let t = if hi > lo { (v - lo) / (hi - lo) } else { 0.5 };
+        match (t * 4.0) as i64 {
+            0 => "░░",
+            1 => "▒▒",
+            2 => "▓▓",
+            _ => "██",
+        }
+    };
+    let (lo, hi) = values
+        .iter()
+        .flatten()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &v| {
+            (l.min(v), h.max(v))
+        });
+    let label_w = row_labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let col_w = 12;
+    let mut out = format!("{title}\n");
+    out.push_str(&" ".repeat(label_w + 2));
+    for c in col_labels {
+        out.push_str(&format!("{c:>col_w$}"));
+    }
+    out.push('\n');
+    for (i, r) in row_labels.iter().enumerate() {
+        out.push_str(&format!("{r:<label_w$}  "));
+        for v in &values[i] {
+            out.push_str(&format!(
+                "{:>w$}",
+                format!("{} {:5.2}%", shade(*v, lo, hi), v),
+                w = col_w
+            ));
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "shade: ░░ low … ██ high  (range {lo:.2}% – {hi:.2}%)\n"
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let text = format_table(&t);
+        assert!(text.contains("| a |"));
+        assert!(text.contains("| 1 |"));
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn heatmap_renders_all_cells() {
+        let text = format_heatmap(
+            "H",
+            &["r1".into(), "r2".into()],
+            &["c1".into(), "c2".into()],
+            &[vec![1.0, 2.0], vec![3.0, 4.0]],
+        );
+        assert!(text.contains("1.00%"));
+        assert!(text.contains("4.00%"));
+        assert!(text.contains("██"));
+    }
+}

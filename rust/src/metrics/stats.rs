@@ -1,0 +1,73 @@
+//! Summary statistics over metric samples.
+
+
+/// Mean / spread / percentiles of a sample set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute a summary; empty input yields all zeros.
+    pub fn of(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Self { n: 0, mean: 0.0, std: 0.0, min: 0.0,
+                          p50: 0.0, p95: 0.0, max: 0.0 };
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let pct = |p: f64| {
+            let idx = ((n as f64 - 1.0) * p).round() as usize;
+            sorted[idx.min(n - 1)]
+        };
+        Self {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: pct(0.50),
+            p95: pct(0.95),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_stats() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+        assert!((s.std - 2.0_f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::of(&[7.5]);
+        assert_eq!((s.mean, s.min, s.max, s.p50, s.p95), (7.5, 7.5, 7.5, 7.5, 7.5));
+        assert_eq!(s.std, 0.0);
+    }
+}

@@ -1,0 +1,238 @@
+//! Manifest-driven artifact registry with a compile cache.
+//!
+//! `artifacts/manifest.json` (written by `python/compile/aot.py`) maps
+//! artifact names to HLO-text files and I/O shapes. The registry
+//! compiles each artifact at most once per process (compilation is the
+//! expensive step — see EXPERIMENTS.md §Perf) and hands out references
+//! to the cached `PjRtLoadedExecutable`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::util::json::Json;
+
+/// One tensor description in the manifest.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One artifact entry in the manifest.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub kind: String,
+    pub path: String,
+    pub nodes: Option<usize>,
+    pub criteria: Option<usize>,
+    pub workload: Option<String>,
+    pub samples: Option<usize>,
+    pub features: Option<usize>,
+    pub steps: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest file.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub criteria_slots: usize,
+    pub epoch_steps: usize,
+    pub entries: HashMap<String, ManifestEntry>,
+}
+
+fn tensor_specs(v: &Json, key: &str) -> anyhow::Result<Vec<TensorSpec>> {
+    let arr = v
+        .req(key)?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("`{key}` is not an array"))?;
+    arr.iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t.req_str("name")?.to_string(),
+                shape: t
+                    .req("shape")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("shape not array"))?
+                    .iter()
+                    .map(|d| {
+                        d.as_usize().ok_or_else(|| {
+                            anyhow::anyhow!("shape dim not integer")
+                        })
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Parse from the JSON text `python/compile/aot.py` writes.
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let v = Json::parse(text)?;
+        let mut entries = HashMap::new();
+        let obj = v
+            .req("entries")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("`entries` is not an object"))?;
+        for (name, e) in obj {
+            entries.insert(
+                name.clone(),
+                ManifestEntry {
+                    kind: e.req_str("kind")?.to_string(),
+                    path: e.req_str("path")?.to_string(),
+                    nodes: e.get("nodes").and_then(Json::as_usize),
+                    criteria: e.get("criteria").and_then(Json::as_usize),
+                    workload: e
+                        .get("workload")
+                        .and_then(Json::as_str)
+                        .map(String::from),
+                    samples: e.get("samples").and_then(Json::as_usize),
+                    features: e.get("features").and_then(Json::as_usize),
+                    steps: e.get("steps").and_then(Json::as_usize),
+                    inputs: tensor_specs(e, "inputs")?,
+                    outputs: tensor_specs(e, "outputs")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            criteria_slots: v.req_usize("criteria_slots")?,
+            epoch_steps: v.req_usize("epoch_steps")?,
+            entries,
+        })
+    }
+}
+
+/// Loads HLO-text artifacts and caches compiled executables.
+pub struct ArtifactRegistry {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactRegistry {
+    /// Open the registry over an artifacts directory.
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Open at the default location (env var / repo walk-up).
+    pub fn open_default() -> anyhow::Result<Self> {
+        Self::open(super::default_artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Entry metadata for `name`.
+    pub fn entry(&self, name: &str) -> anyhow::Result<&ManifestEntry> {
+        self.manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact `{name}` not in manifest"))
+    }
+
+    /// Compile (or fetch from cache) the executable for `name`.
+    pub fn load(&self, name: &str) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.entry(name)?;
+        let path = self.dir.join(&entry.path);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| {
+                anyhow::anyhow!("parse HLO text {}: {e:?}", path.display())
+            })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile `{name}`: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Warm the compile cache for a set of artifacts (startup-time cost
+    /// instead of first-request latency — the vLLM-router pattern).
+    pub fn warmup<'a>(
+        &self,
+        names: impl IntoIterator<Item = &'a str>,
+    ) -> anyhow::Result<()> {
+        for n in names {
+            self.load(n)?;
+        }
+        Ok(())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Smallest TOPSIS artifact tier that fits `n` candidate nodes.
+    pub fn topsis_tier(&self, n: usize) -> anyhow::Result<(String, usize)> {
+        let mut tiers: Vec<usize> = self
+            .manifest
+            .entries
+            .values()
+            .filter(|e| e.kind == "topsis")
+            .filter_map(|e| e.nodes)
+            .collect();
+        tiers.sort_unstable();
+        for t in tiers {
+            if t >= n {
+                return Ok((format!("topsis_score_n{t}"), t));
+            }
+        }
+        anyhow::bail!("no TOPSIS artifact tier fits {n} nodes (max is 64)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Registry tests that require built artifacts live in
+    // rust/tests/pjrt_integration.rs; here we only test pure logic.
+    use super::*;
+
+    #[test]
+    fn manifest_parses_minimal() {
+        let json = r#"{
+            "criteria_slots": 8, "epoch_steps": 8,
+            "entries": {
+                "topsis_score_n4": {
+                    "kind": "topsis", "nodes": 4, "criteria": 8,
+                    "path": "topsis_score_n4.hlo.txt",
+                    "inputs": [{"name": "matrix", "shape": [4, 8]}],
+                    "outputs": [{"name": "closeness", "shape": [4]}]
+                }
+            }
+        }"#;
+        let m = Manifest::parse(json).unwrap();
+        assert_eq!(m.criteria_slots, 8);
+        assert_eq!(m.entries["topsis_score_n4"].nodes, Some(4));
+    }
+}

@@ -1,0 +1,141 @@
+//! LinReg workload execution: runs the paper's Table II training jobs
+//! for real through the PJRT artifacts.
+//!
+//! A pod's "containerized workload" is one of the `linreg_epoch_*`
+//! artifacts executed `epochs` times; the runner returns measured
+//! wall-clock per epoch and the loss trace, which the e2e example logs
+//! and the simulation uses to calibrate its analytic execution model.
+
+use std::time::Instant;
+
+use crate::runtime::ArtifactRegistry;
+use crate::util::rng::Rng;
+use crate::workload::WorkloadClass;
+
+/// A synthetic regression dataset generated Rust-side (mirrors
+/// `python/compile/model.py::make_dataset`'s distribution, not its exact
+/// streams — correctness is judged by loss decrease, and exact python
+/// parity is covered by golden.json replay).
+#[derive(Debug, Clone)]
+pub struct RustDataset {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl RustDataset {
+    /// Sample x ~ N(0,1)/sqrt(d) (Box–Muller), w_true ~ N(0,1),
+    /// y = x·w_true + noise.
+    pub fn generate(seed: u64, n: usize, d: usize, noise: f32) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut normal = move || rng.normal() as f32;
+        let scale = 1.0 / (d as f32).sqrt();
+        let x: Vec<f32> = (0..n * d).map(|_| normal() * scale).collect();
+        let w_true: Vec<f32> = (0..d).map(|_| normal()).collect();
+        let y: Vec<f32> = (0..n)
+            .map(|i| {
+                let dot: f32 = (0..d)
+                    .map(|j| x[i * d + j] * w_true[j])
+                    .sum();
+                dot + noise * normal()
+            })
+            .collect();
+        Self { x, y, n, d }
+    }
+}
+
+/// Result of running one pod's training job.
+#[derive(Debug, Clone)]
+pub struct EpochResult {
+    /// Loss at the start of each executed step (concatenated epochs).
+    pub losses: Vec<f32>,
+    /// Final weight vector.
+    pub weights: Vec<f32>,
+    /// Measured wall-clock per epoch artifact call (seconds).
+    pub epoch_secs: Vec<f64>,
+}
+
+/// Executes linreg workloads via PJRT.
+pub struct LinRegRunner<'a> {
+    registry: &'a ArtifactRegistry,
+}
+
+impl<'a> LinRegRunner<'a> {
+    pub fn new(registry: &'a ArtifactRegistry) -> Self {
+        Self { registry }
+    }
+
+    /// Run `epochs` epoch-artifact calls for `class`, threading the
+    /// weights through. `seed` fixes the dataset.
+    pub fn run(
+        &self,
+        class: WorkloadClass,
+        epochs: u32,
+        seed: u64,
+        lr: f32,
+    ) -> anyhow::Result<EpochResult> {
+        let name = class.epoch_artifact();
+        let exe = self.registry.load(name)?;
+        let entry = self.registry.entry(name)?;
+        let (n, d) = (
+            entry.samples.unwrap_or(0),
+            entry.features.unwrap_or(0),
+        );
+        anyhow::ensure!(n > 0 && d > 0, "artifact {name} missing shape info");
+        let steps = entry.steps.unwrap_or(1);
+
+        let ds = RustDataset::generate(seed, n, d, 0.01);
+        let x = xla::Literal::vec1(&ds.x)
+            .reshape(&[n as i64, d as i64])
+            .map_err(|e| anyhow::anyhow!("reshape x: {e:?}"))?;
+        let y = xla::Literal::vec1(&ds.y);
+        let lr_lit = xla::Literal::from(lr);
+
+        let mut w = vec![0.0f32; d];
+        let mut losses = Vec::with_capacity(epochs as usize * steps);
+        let mut epoch_secs = Vec::with_capacity(epochs as usize);
+        for _ in 0..epochs {
+            let w_lit = xla::Literal::vec1(&w);
+            let t0 = Instant::now();
+            let result = exe
+                .execute::<xla::Literal>(&[
+                    w_lit,
+                    x.reshape(&[n as i64, d as i64])
+                        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?,
+                    y.reshape(&[n as i64])
+                        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?,
+                    lr_lit.reshape(&[]).map_err(|e| anyhow::anyhow!("{e:?}"))?,
+                ])
+                .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
+            epoch_secs.push(t0.elapsed().as_secs_f64());
+            let (w_out, loss_out) = result
+                .to_tuple2()
+                .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+            w = w_out.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            let step_losses: Vec<f32> =
+                loss_out.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            losses.extend_from_slice(&step_losses);
+        }
+        Ok(EpochResult { losses, weights: w, epoch_secs })
+    }
+
+    /// Measure the mean epoch wall-clock for a class (used once at
+    /// startup to calibrate the simulation's analytic execution model).
+    pub fn calibrate(
+        &self,
+        class: WorkloadClass,
+        reps: u32,
+    ) -> anyhow::Result<f64> {
+        let res = self.run(class, reps.max(1), 1234, 0.5)?;
+        // Skip the first call (compile/warmup noise) when possible.
+        let times = if res.epoch_secs.len() > 1 {
+            &res.epoch_secs[1..]
+        } else {
+            &res.epoch_secs[..]
+        };
+        Ok(times.iter().sum::<f64>() / times.len() as f64)
+    }
+}

@@ -1,0 +1,38 @@
+//! PJRT runtime: loads the AOT artifacts (`make artifacts`) and executes
+//! them from the Rust hot path. Python is never involved at runtime.
+//!
+//! Interchange format is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//!
+//! `PjRtLoadedExecutable` is not `Send`; the runtime is designed for
+//! single-threaded use (the simulation engine is synchronous, and the
+//! `serve` loop keeps execution on its own thread).
+
+mod artifacts;
+mod linreg;
+mod topsis_exec;
+
+pub use artifacts::{ArtifactRegistry, Manifest, ManifestEntry};
+pub use linreg::{EpochResult, LinRegRunner, RustDataset};
+pub use topsis_exec::PjrtTopsisEngine;
+
+/// Locate the artifacts directory: `$GREENPOD_ARTIFACTS`, else the
+/// nearest `artifacts/` with a manifest walking up from the current
+/// directory (so examples, tests and benches work from anywhere in the
+/// repo).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("GREENPOD_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

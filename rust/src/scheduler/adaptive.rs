@@ -1,0 +1,117 @@
+//! Adaptive weighting — the paper's "adaptive weighting module
+//! dynamically adjusts criteria weights based on system conditions"
+//! (§III.A), realized as load-dependent profile interpolation.
+//!
+//! The evaluation (§V.C) observes that energy-centric weighting is best
+//! at low/medium load while high competition "may require hybrid
+//! approaches balancing energy awareness with resource efficiency" —
+//! exactly the hybrid this module implements: as cluster requested-CPU
+//! utilization crosses `lo..hi`, the active profile's weights are
+//! blended toward the resource-efficient profile.
+
+
+use crate::cluster::ClusterState;
+use crate::config::{WeightingScheme, NUM_CRITERIA};
+
+#[derive(Debug, Clone)]
+pub struct AdaptiveWeighting {
+    /// Utilization below which the base profile applies unchanged.
+    pub lo: f64,
+    /// Utilization above which the hybrid target applies fully.
+    pub hi: f64,
+    /// Profile blended toward under load.
+    pub target: WeightingScheme,
+}
+
+impl Default for AdaptiveWeighting {
+    fn default() -> Self {
+        Self {
+            lo: 0.45,
+            hi: 0.80,
+            target: WeightingScheme::ResourceEfficient,
+        }
+    }
+}
+
+impl AdaptiveWeighting {
+    /// Blend factor in [0,1] for the current cluster load.
+    pub fn blend(&self, utilization: f64) -> f64 {
+        if self.hi <= self.lo {
+            return if utilization >= self.hi { 1.0 } else { 0.0 };
+        }
+        ((utilization - self.lo) / (self.hi - self.lo)).clamp(0.0, 1.0)
+    }
+
+    /// Effective weights for `base` at the current cluster state.
+    pub fn weights(
+        &self,
+        state: &ClusterState,
+        base: WeightingScheme,
+    ) -> [f64; NUM_CRITERIA] {
+        let t = self.blend(state.total_cpu_utilization());
+        let a = base.weights();
+        let b = self.target.weights();
+        let mut out = [0.0; NUM_CRITERIA];
+        for i in 0..NUM_CRITERIA {
+            out[i] = (1.0 - t) * a[i] + t * b[i];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterState, Pod};
+    use crate::config::{ClusterConfig, SchedulerKind};
+    use crate::workload::WorkloadClass;
+
+    #[test]
+    fn blend_saturates() {
+        let a = AdaptiveWeighting::default();
+        assert_eq!(a.blend(0.0), 0.0);
+        assert_eq!(a.blend(0.45), 0.0);
+        assert_eq!(a.blend(1.0), 1.0);
+        let mid = a.blend(0.625);
+        assert!(mid > 0.49 && mid < 0.52);
+    }
+
+    #[test]
+    fn weights_remain_on_simplex() {
+        let a = AdaptiveWeighting::default();
+        let mut s = ClusterState::from_config(&ClusterConfig::paper_default());
+        // Load the cluster past `lo` (16 vCPU total; 8 complex pods
+        // = 8 vCPU requested = 50% utilization).
+        for (i, node) in [(0u64, 0usize), (1, 1), (2, 2), (3, 3),
+                          (4, 4), (5, 5), (6, 5), (7, 5)] {
+            let p = Pod::new(i, WorkloadClass::Complex,
+                             SchedulerKind::Topsis, 0.0, 1);
+            s.bind(&p, node, 0.0).unwrap();
+        }
+        let w = a.weights(&s, WeightingScheme::EnergyCentric);
+        let sum: f64 = w.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "{w:?}");
+        // Under load the energy weight moves toward resource-efficient's.
+        let pure = WeightingScheme::EnergyCentric.weights();
+        assert!(w[1] < pure[1]);
+    }
+
+    #[test]
+    fn empty_cluster_keeps_base_profile() {
+        let a = AdaptiveWeighting::default();
+        let s = ClusterState::from_config(&ClusterConfig::paper_default());
+        let w = a.weights(&s, WeightingScheme::EnergyCentric);
+        assert_eq!(w, WeightingScheme::EnergyCentric.weights());
+    }
+
+    #[test]
+    fn degenerate_thresholds() {
+        let a = AdaptiveWeighting {
+            lo: 0.5,
+            hi: 0.5,
+            target: WeightingScheme::General,
+        };
+        assert_eq!(a.blend(0.49), 0.0);
+        assert_eq!(a.blend(0.51), 1.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! The baseline: default kube-scheduler scoring, as documented.
+//!
+//! The default scheduler filters by NodeResourcesFit, then scores with
+//! (among others) `NodeResourcesLeastAllocated` and
+//! `NodeResourcesBalancedAllocation`, both 0–100, averaged here with
+//! equal weight — the heuristic spread-by-least-requested behaviour the
+//! paper contrasts against ([14, 15]). Ties are broken uniformly at
+//! random, as in kube-scheduler's `selectHost`; the RNG is seeded for
+//! replicable experiments.
+
+use std::time::Instant;
+
+use crate::cluster::{ClusterState, Pod};
+use crate::util::rng::Rng;
+
+use super::{Scheduler, SchedulingDecision};
+
+pub struct DefaultK8sScheduler {
+    rng: Rng,
+}
+
+impl DefaultK8sScheduler {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::seed_from_u64(seed) }
+    }
+
+    /// `LeastAllocated`: mean over cpu/mem of free-fraction after
+    /// placement, scaled to 0–100.
+    fn least_allocated(state: &ClusterState, node: usize, pod: &Pod) -> f64 {
+        let n = state.node(node);
+        let cpu_free = (state.free_cpu(node) - pod.requests.cpu_millis) as f64
+            / n.cpu_millis as f64;
+        let mem_free = (state.free_memory(node) - pod.requests.memory_mib)
+            as f64
+            / n.memory_mib as f64;
+        50.0 * (cpu_free + mem_free)
+    }
+
+    /// `BalancedAllocation`: 100 − |cpu_fraction − mem_fraction|·100
+    /// after placement.
+    fn balanced_allocation(
+        state: &ClusterState,
+        node: usize,
+        pod: &Pod,
+    ) -> f64 {
+        let n = state.node(node);
+        let cpu_used = (n.cpu_millis - state.free_cpu(node)
+            + pod.requests.cpu_millis) as f64
+            / n.cpu_millis as f64;
+        let mem_used = (n.memory_mib - state.free_memory(node)
+            + pod.requests.memory_mib) as f64
+            / n.memory_mib as f64;
+        100.0 - 100.0 * (cpu_used - mem_used).abs()
+    }
+}
+
+impl Scheduler for DefaultK8sScheduler {
+    fn name(&self) -> &'static str {
+        "default-k8s"
+    }
+
+    fn schedule(
+        &mut self,
+        state: &ClusterState,
+        pod: &Pod,
+    ) -> SchedulingDecision {
+        let t0 = Instant::now();
+        let feasible = state.feasible_nodes(pod.requests);
+        let scores: Vec<(usize, f64)> = feasible
+            .iter()
+            .map(|&id| {
+                let s = (Self::least_allocated(state, id, pod)
+                    + Self::balanced_allocation(state, id, pod))
+                    / 2.0;
+                (id, s)
+            })
+            .collect();
+
+        // Highest score wins; ties broken uniformly at random.
+        let node = {
+            let best = scores
+                .iter()
+                .map(|&(_, s)| s)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let top: Vec<usize> = scores
+                .iter()
+                .filter(|&&(_, s)| (s - best).abs() < 1e-9)
+                .map(|&(id, _)| id)
+                .collect();
+            if top.is_empty() {
+                None
+            } else {
+                Some(top[self.rng.below(top.len())])
+            }
+        };
+
+        SchedulingDecision { node, latency: t0.elapsed(), scores }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, SchedulerKind};
+    use crate::workload::WorkloadClass;
+
+    fn state() -> ClusterState {
+        ClusterState::from_config(&ClusterConfig::paper_default())
+    }
+
+    fn pod(id: u64, class: WorkloadClass) -> Pod {
+        Pod::new(id, class, SchedulerKind::DefaultK8s, 0.0, 1)
+    }
+
+    #[test]
+    fn spreads_to_least_allocated() {
+        let mut s = state();
+        let mut sched = DefaultK8sScheduler::new(0);
+        // Load node 3 (B) heavily; the next pod must not land there
+        // while emptier same-shape nodes exist.
+        s.bind(&pod(1, WorkloadClass::Complex), 3, 0.0).unwrap();
+        s.bind(&pod(2, WorkloadClass::Medium), 3, 0.0).unwrap();
+        let d = sched.schedule(&s, &pod(3, WorkloadClass::Light));
+        assert_ne!(d.node, Some(3));
+    }
+
+    #[test]
+    fn unschedulable_when_full() {
+        let mut s = state();
+        let mut sched = DefaultK8sScheduler::new(0);
+        // Fill every node's memory with synthetic hog pods.
+        for id in 0..s.nodes().len() {
+            let mut hog = pod(100 + id as u64, WorkloadClass::Light);
+            hog.requests.cpu_millis = s.free_cpu(id);
+            hog.requests.memory_mib = s.free_memory(id);
+            s.bind(&hog, id, 0.0).unwrap();
+        }
+        let d = sched.schedule(&s, &pod(1, WorkloadClass::Light));
+        assert_eq!(d.node, None);
+        assert!(d.scores.is_empty());
+    }
+
+    #[test]
+    fn deterministic_under_same_seed() {
+        let s = state();
+        let mut a = DefaultK8sScheduler::new(5);
+        let mut b = DefaultK8sScheduler::new(5);
+        for i in 0..10 {
+            let p = pod(i, WorkloadClass::Light);
+            assert_eq!(a.schedule(&s, &p).node, b.schedule(&s, &p).node);
+        }
+    }
+
+    #[test]
+    fn scores_cover_all_feasible_nodes() {
+        let s = state();
+        let mut sched = DefaultK8sScheduler::new(0);
+        let d = sched.schedule(&s, &pod(1, WorkloadClass::Light));
+        assert_eq!(d.scores.len(), 7);
+        assert!(d.node.is_some());
+        for &(_, score) in &d.scores {
+            assert!((0.0..=100.0).contains(&score));
+        }
+    }
+}

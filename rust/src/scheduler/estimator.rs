@@ -1,0 +1,209 @@
+//! Execution-time and energy estimators — the predictive half of
+//! GreenPod's "energy profiling module" (§III.A).
+//!
+//! Estimates feed the decision matrix; the simulation then *realizes*
+//! execution with the same physical model plus contention dynamics, so
+//! estimates are honest (same units, same power model) but not
+//! clairvoyant (contention evolves after placement).
+
+use crate::cluster::{ClusterState, Node, NodeId, Pod};
+use crate::config::EnergyModelConfig;
+use crate::energy::pod_power_watts;
+
+/// Calibrated cost of one *light-class epoch* on a speed-1.0 node with
+/// one full vCPU, in seconds. The default is the PJRT-measured value on
+/// the reference machine; `greenpod` recalibrates at startup when the
+/// runtime is available (see `LinRegRunner::calibrate`).
+pub const DEFAULT_LIGHT_EPOCH_SECS: f64 = 0.35;
+
+/// One candidate node's predicted metrics — a decision-matrix row.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeEstimate {
+    pub node: NodeId,
+    /// Predicted execution time (s) — cost criterion 1.
+    pub exec_time_s: f64,
+    /// Predicted energy (J) — cost criterion 2.
+    pub energy_j: f64,
+    /// Free-CPU fraction after placement — benefit criterion 3
+    /// ("processing core availability"; a fraction so that big nodes do
+    /// not dwarf the other criteria by sheer absolute size).
+    pub free_cpu_frac: f64,
+    /// Free-memory fraction after placement — benefit criterion 4.
+    pub free_mem_frac: f64,
+    /// Resource balance after placement — benefit criterion 5.
+    pub balance: f64,
+}
+
+/// Estimator with a calibrated work-unit cost.
+#[derive(Debug, Clone)]
+pub struct Estimator {
+    energy_cfg: EnergyModelConfig,
+    /// Seconds per light-epoch on a speed-1 node at 1 vCPU.
+    light_epoch_secs: f64,
+    /// Contention coefficient β: estimated slowdown = 1 + β·util.
+    contention_beta: f64,
+}
+
+impl Estimator {
+    pub fn new(
+        energy_cfg: EnergyModelConfig,
+        light_epoch_secs: f64,
+        contention_beta: f64,
+    ) -> Self {
+        Self { energy_cfg, light_epoch_secs, contention_beta }
+    }
+
+    pub fn with_defaults(energy_cfg: EnergyModelConfig) -> Self {
+        Self::new(energy_cfg, DEFAULT_LIGHT_EPOCH_SECS, 0.35)
+    }
+
+    pub fn light_epoch_secs(&self) -> f64 {
+        self.light_epoch_secs
+    }
+
+    /// Recalibrate the work-unit cost (from a PJRT measurement).
+    pub fn set_light_epoch_secs(&mut self, secs: f64) {
+        if secs.is_finite() && secs > 0.0 {
+            self.light_epoch_secs = secs;
+        }
+    }
+
+    /// Pure compute time of `pod` on `node` with no contention (s).
+    pub fn base_exec_time(&self, node: &Node, pod: &Pod) -> f64 {
+        let work = pod.class.work_per_epoch() * pod.epochs as f64;
+        let cores = pod.requests.cpu_millis as f64 / 1000.0;
+        self.light_epoch_secs * work / (node.speed_factor * cores)
+    }
+
+    /// Predicted execution time on `node` given its current utilization.
+    pub fn exec_time(
+        &self,
+        state: &ClusterState,
+        node: &Node,
+        pod: &Pod,
+    ) -> f64 {
+        let slowdown = 1.0 + self.contention_beta * state.cpu_utilization(node.id);
+        self.base_exec_time(node, pod) * slowdown
+    }
+
+    /// Predicted energy (J) for running `pod` on `node`.
+    pub fn energy(
+        &self,
+        state: &ClusterState,
+        node: &Node,
+        pod: &Pod,
+    ) -> f64 {
+        let share =
+            pod.requests.cpu_millis as f64 / node.cpu_millis as f64;
+        pod_power_watts(&self.energy_cfg, node, share)
+            * self.exec_time(state, node, pod)
+    }
+
+    /// Full decision-matrix row for placing `pod` on `node`.
+    pub fn estimate(
+        &self,
+        state: &ClusterState,
+        node: &Node,
+        pod: &Pod,
+    ) -> NodeEstimate {
+        let exec_time_s = self.exec_time(state, node, pod);
+        let energy_j = {
+            let share =
+                pod.requests.cpu_millis as f64 / node.cpu_millis as f64;
+            pod_power_watts(&self.energy_cfg, node, share) * exec_time_s
+        };
+        let free_cpu_after =
+            state.free_cpu(node.id).saturating_sub(pod.requests.cpu_millis);
+        let free_mem_after = state
+            .free_memory(node.id)
+            .saturating_sub(pod.requests.memory_mib);
+        let cpu_util_after = 1.0
+            - free_cpu_after as f64 / node.cpu_millis as f64;
+        let mem_util_after = 1.0
+            - free_mem_after as f64 / node.memory_mib as f64;
+        NodeEstimate {
+            node: node.id,
+            exec_time_s,
+            energy_j,
+            free_cpu_frac: 1.0 - cpu_util_after,
+            free_mem_frac: 1.0 - mem_util_after,
+            balance: 1.0 - (cpu_util_after - mem_util_after).abs(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, SchedulerKind};
+    use crate::workload::WorkloadClass;
+
+    fn setup() -> (ClusterState, Estimator) {
+        let state = ClusterState::from_config(&ClusterConfig::paper_default());
+        let est = Estimator::with_defaults(EnergyModelConfig::default());
+        (state, est)
+    }
+
+    fn pod(class: WorkloadClass) -> Pod {
+        Pod::new(0, class, SchedulerKind::Topsis, 0.0, 2)
+    }
+
+    #[test]
+    fn faster_node_lower_exec_time() {
+        let (state, est) = setup();
+        let p = pod(WorkloadClass::Medium);
+        // Node 0 = A (speed 0.7), node 3 = B (speed 1.0).
+        let t_a = est.exec_time(&state, state.node(0), &p);
+        let t_b = est.exec_time(&state, state.node(3), &p);
+        assert!(t_a > t_b);
+    }
+
+    #[test]
+    fn efficient_node_lower_energy_despite_slower() {
+        let (state, est) = setup();
+        let p = pod(WorkloadClass::Medium);
+        // A (power 0.30, speed 0.7) vs C (power 2.6, speed 1.1): the
+        // speed gap (~1.6x) is far smaller than the power gap (~8.7x),
+        // so A wins on energy — the heterogeneity driving the paper.
+        let e_a = est.energy(&state, state.node(0), &p);
+        let e_c = est.energy(&state, state.node(5), &p);
+        assert!(e_a < e_c, "A energy {e_a} !< C energy {e_c}");
+    }
+
+    #[test]
+    fn contention_raises_estimate() {
+        let (mut state, est) = setup();
+        let p = pod(WorkloadClass::Light);
+        let before = est.exec_time(&state, state.node(0), &p);
+        let filler = Pod::new(9, WorkloadClass::Complex,
+                              SchedulerKind::DefaultK8s, 0.0, 1);
+        state.bind(&filler, 0, 0.0).unwrap();
+        let after = est.exec_time(&state, state.node(0), &p);
+        assert!(after > before);
+    }
+
+    #[test]
+    fn estimate_row_fields_sane() {
+        let (state, est) = setup();
+        let p = pod(WorkloadClass::Complex);
+        let row = est.estimate(&state, state.node(5), &p); // C node
+        assert!(row.exec_time_s > 0.0);
+        assert!(row.energy_j > 0.0);
+        assert!((row.free_cpu_frac - 0.75).abs() < 1e-9); // 3 of 4 vCPU
+        assert!((row.free_mem_frac - 14.0 / 16.0).abs() < 1e-9);
+        assert!((0.0..=1.0).contains(&row.balance));
+    }
+
+    #[test]
+    fn more_epochs_more_time_and_energy() {
+        let (state, est) = setup();
+        let mut p = pod(WorkloadClass::Light);
+        let t1 = est.exec_time(&state, state.node(0), &p);
+        let e1 = est.energy(&state, state.node(0), &p);
+        p.epochs = 8;
+        let t4 = est.exec_time(&state, state.node(0), &p);
+        let e4 = est.energy(&state, state.node(0), &p);
+        assert!((t4 / t1 - 4.0).abs() < 1e-9);
+        assert!((e4 / e1 - 4.0).abs() < 1e-9);
+    }
+}

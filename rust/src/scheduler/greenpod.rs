@@ -1,0 +1,272 @@
+//! GreenPodScheduler — the paper's TOPSIS-based multi-criteria
+//! scheduler (§III).
+//!
+//! Pipeline per pod (§III.A "multi-stage decision pipeline"):
+//! 1. **filter** — NodeResourcesFit + readiness (candidate set);
+//! 2. **decision matrix** — one [`NodeEstimate`] row per candidate
+//!    across the paper's five criteria;
+//! 3. **scoring** — TOPSIS closeness via the configured backend:
+//!    pure-Rust [`crate::mcda`] (default), the AOT Pallas kernel through
+//!    PJRT, or an alternate MCDA method (ablations);
+//! 4. **select** — highest closeness coefficient wins (deterministic
+//!    lowest-index tie-break).
+//!
+//! If the PJRT backend errors at scoring time (artifact missing, client
+//! failure) the scheduler degrades to the pure-Rust path and counts the
+//! fallback — the failure-injection tests assert this.
+
+use std::time::Instant;
+
+use crate::cluster::{ClusterState, Pod};
+use crate::config::{WeightingScheme, BENEFIT_MASK, NUM_CRITERIA};
+use crate::mcda::{argmax, Criterion, DecisionProblem, McdaMethod};
+use crate::runtime::PjrtTopsisEngine;
+
+use super::{AdaptiveWeighting, Estimator, Scheduler, SchedulingDecision};
+
+/// How GreenPod turns a decision matrix into scores.
+pub enum ScoringBackend {
+    /// Pure-Rust MCDA (`McdaMethod::Topsis` is the paper's method; other
+    /// methods are ablation baselines).
+    Rust(McdaMethod),
+    /// The AOT-compiled fused Pallas kernel, executed via PJRT.
+    Pjrt(Box<PjrtTopsisEngine>),
+}
+
+pub struct GreenPodScheduler {
+    estimator: Estimator,
+    scheme: WeightingScheme,
+    backend: ScoringBackend,
+    /// Optional adaptive weighting (paper §III.A); replaces the static
+    /// scheme's weights when set.
+    adaptive: Option<AdaptiveWeighting>,
+    /// PJRT failures that fell back to the Rust path.
+    pub pjrt_fallbacks: u64,
+}
+
+impl GreenPodScheduler {
+    pub fn new(estimator: Estimator, scheme: WeightingScheme) -> Self {
+        Self {
+            estimator,
+            scheme,
+            backend: ScoringBackend::Rust(McdaMethod::Topsis),
+            adaptive: None,
+            pjrt_fallbacks: 0,
+        }
+    }
+
+    pub fn with_backend(mut self, backend: ScoringBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn with_adaptive(mut self, adaptive: AdaptiveWeighting) -> Self {
+        self.adaptive = Some(adaptive);
+        self
+    }
+
+    pub fn scheme(&self) -> WeightingScheme {
+        self.scheme
+    }
+
+    pub fn set_scheme(&mut self, scheme: WeightingScheme) {
+        self.scheme = scheme;
+    }
+
+    pub fn estimator_mut(&mut self) -> &mut Estimator {
+        &mut self.estimator
+    }
+
+    /// The weights used for this decision (static scheme or adaptive).
+    fn effective_weights(&self, state: &ClusterState) -> [f64; NUM_CRITERIA] {
+        match &self.adaptive {
+            Some(a) => a.weights(state, self.scheme),
+            None => self.scheme.weights(),
+        }
+    }
+
+    /// Build the 5-criteria decision problem over the candidate set.
+    pub fn decision_problem(
+        &self,
+        state: &ClusterState,
+        pod: &Pod,
+        candidates: &[usize],
+    ) -> DecisionProblem {
+        let weights = self.effective_weights(state);
+        let mut matrix = Vec::with_capacity(candidates.len() * NUM_CRITERIA);
+        for &id in candidates {
+            let e = self.estimator.estimate(state, state.node(id), pod);
+            matrix.extend_from_slice(&[
+                e.exec_time_s,
+                e.energy_j,
+                e.free_cpu_frac,
+                e.free_mem_frac,
+                e.balance,
+            ]);
+        }
+        let criteria = (0..NUM_CRITERIA)
+            .map(|i| {
+                if BENEFIT_MASK[i] > 0.5 {
+                    Criterion::benefit(weights[i])
+                } else {
+                    Criterion::cost(weights[i])
+                }
+            })
+            .collect();
+        DecisionProblem::new(matrix, candidates.len(), criteria)
+    }
+
+    fn score(&mut self, problem: &DecisionProblem) -> Vec<f64> {
+        match &mut self.backend {
+            ScoringBackend::Rust(method) => method.scores(problem),
+            ScoringBackend::Pjrt(engine) => {
+                match engine.closeness(problem) {
+                    Ok(s) => s,
+                    Err(_) => {
+                        // Degrade gracefully: the artifact math and the
+                        // Rust math are the same TOPSIS.
+                        self.pjrt_fallbacks += 1;
+                        McdaMethod::Topsis.scores(problem)
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Scheduler for GreenPodScheduler {
+    fn name(&self) -> &'static str {
+        "greenpod-topsis"
+    }
+
+    fn schedule(
+        &mut self,
+        state: &ClusterState,
+        pod: &Pod,
+    ) -> SchedulingDecision {
+        let t0 = Instant::now();
+        // Stage 1: filter.
+        let candidates = state.feasible_nodes(pod.requests);
+        if candidates.is_empty() {
+            return SchedulingDecision {
+                node: None,
+                latency: t0.elapsed(),
+                scores: Vec::new(),
+            };
+        }
+        // Stage 2+3: decision matrix and MCDA scoring.
+        let problem = self.decision_problem(state, pod, &candidates);
+        let scores = self.score(&problem);
+        // Stage 4: select.
+        let node = argmax(&scores).map(|i| candidates[i]);
+        SchedulingDecision {
+            node,
+            latency: t0.elapsed(),
+            scores: candidates.into_iter().zip(scores).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeCategory;
+    use crate::config::{ClusterConfig, EnergyModelConfig, SchedulerKind};
+    use crate::workload::WorkloadClass;
+
+    fn scheduler(scheme: WeightingScheme) -> GreenPodScheduler {
+        GreenPodScheduler::new(
+            Estimator::with_defaults(EnergyModelConfig::default()),
+            scheme,
+        )
+    }
+
+    fn state() -> ClusterState {
+        ClusterState::from_config(&ClusterConfig::paper_default())
+    }
+
+    fn pod(id: u64, class: WorkloadClass) -> Pod {
+        Pod::new(id, class, SchedulerKind::Topsis, 0.0, 2)
+    }
+
+    #[test]
+    fn energy_centric_prefers_category_a() {
+        let s = state();
+        let mut sched = scheduler(WeightingScheme::EnergyCentric);
+        let d = sched.schedule(&s, &pod(1, WorkloadClass::Medium));
+        let cat = s.node(d.node.unwrap()).category;
+        assert_eq!(cat, NodeCategory::A, "scores: {:?}", d.scores);
+    }
+
+    #[test]
+    fn performance_centric_prefers_fast_nodes() {
+        let s = state();
+        let mut sched = scheduler(WeightingScheme::PerformanceCentric);
+        let d = sched.schedule(&s, &pod(1, WorkloadClass::Medium));
+        let node = s.node(d.node.unwrap());
+        // B (1.0) or C (1.1) — never the slow A machines.
+        assert!(node.speed_factor >= 1.0, "chose {:?}", node.name);
+    }
+
+    #[test]
+    fn respects_filter() {
+        let mut s = state();
+        let mut sched = scheduler(WeightingScheme::EnergyCentric);
+        // Exhaust all three A nodes' memory so they are infeasible.
+        for id in [0usize, 1, 2] {
+            let mut hog = pod(50 + id as u64, WorkloadClass::Light);
+            hog.requests.cpu_millis = 100;
+            hog.requests.memory_mib = s.free_memory(id) - 256;
+            s.bind(&hog, id, 0.0).unwrap();
+        }
+        let d = sched.schedule(&s, &pod(1, WorkloadClass::Complex));
+        let cat = s.node(d.node.unwrap()).category;
+        assert_ne!(cat, NodeCategory::A);
+    }
+
+    #[test]
+    fn unschedulable_on_full_cluster() {
+        let mut s = state();
+        let mut sched = scheduler(WeightingScheme::General);
+        for id in 0..s.nodes().len() {
+            let mut hog = pod(80 + id as u64, WorkloadClass::Light);
+            hog.requests.cpu_millis = s.free_cpu(id);
+            hog.requests.memory_mib = s.free_memory(id);
+            s.bind(&hog, id, 0.0).unwrap();
+        }
+        let d = sched.schedule(&s, &pod(1, WorkloadClass::Light));
+        assert_eq!(d.node, None);
+        assert!(d.scores.is_empty());
+    }
+
+    #[test]
+    fn scores_one_per_candidate_in_unit_interval() {
+        let s = state();
+        let mut sched = scheduler(WeightingScheme::General);
+        let d = sched.schedule(&s, &pod(1, WorkloadClass::Light));
+        assert_eq!(d.scores.len(), 7);
+        for &(_, c) in &d.scores {
+            assert!((0.0..=1.0 + 1e-9).contains(&c), "{:?}", d.scores);
+        }
+    }
+
+    #[test]
+    fn deterministic_decisions() {
+        let s = state();
+        let mut a = scheduler(WeightingScheme::EnergyCentric);
+        let mut b = scheduler(WeightingScheme::EnergyCentric);
+        for i in 0..5 {
+            let p = pod(i, WorkloadClass::Light);
+            assert_eq!(a.schedule(&s, &p).node, b.schedule(&s, &p).node);
+        }
+    }
+
+    #[test]
+    fn saw_backend_also_picks_efficient_nodes() {
+        let s = state();
+        let mut sched = scheduler(WeightingScheme::EnergyCentric)
+            .with_backend(ScoringBackend::Rust(McdaMethod::Saw));
+        let d = sched.schedule(&s, &pod(1, WorkloadClass::Medium));
+        assert!(d.node.is_some());
+    }
+}

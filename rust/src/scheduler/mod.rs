@@ -1,0 +1,52 @@
+//! Schedulers — the paper's contribution lives here.
+//!
+//! * [`GreenPodScheduler`] — the TOPSIS-based multi-criteria scheduler:
+//!   filter → decision matrix (5 criteria) → MCDA scoring → bind target.
+//! * [`DefaultK8sScheduler`] — the baseline: the documented default
+//!   kube-scheduler scoring path (LeastAllocated + BalancedAllocation).
+//! * [`estimator`] — per-(node, pod) execution-time and energy
+//!   predictions feeding the decision matrix.
+//! * [`AdaptiveWeighting`] — the paper's "adaptive weighting module"
+//!   (§III.A): interpolates between profiles based on cluster load.
+//!
+//! Both schedulers implement [`Scheduler`] and are driven identically by
+//! the simulation engine and the serve loop.
+
+mod adaptive;
+mod default_k8s;
+pub mod estimator;
+mod greenpod;
+
+pub use adaptive::AdaptiveWeighting;
+pub use default_k8s::DefaultK8sScheduler;
+pub use estimator::{Estimator, NodeEstimate};
+pub use greenpod::{GreenPodScheduler, ScoringBackend};
+
+use std::time::Duration;
+
+use crate::cluster::{ClusterState, NodeId, Pod};
+
+/// Outcome of one scheduling decision.
+#[derive(Debug, Clone)]
+pub struct SchedulingDecision {
+    /// Chosen node, or `None` if the pod is unschedulable right now.
+    pub node: Option<NodeId>,
+    /// Wall-clock the decision took (the paper's "scheduling time" metric).
+    pub latency: Duration,
+    /// Per-candidate scores (node id, score), for logging/§V.D analysis.
+    pub scores: Vec<(NodeId, f64)>,
+}
+
+/// A pod scheduler: stateless with respect to the cluster (all cluster
+/// knowledge flows in through `state`), stateful for internal RNG /
+/// scoring backends.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Pick a node for `pod` given the current cluster state.
+    fn schedule(
+        &mut self,
+        state: &ClusterState,
+        pod: &Pod,
+    ) -> SchedulingDecision;
+}

@@ -1,0 +1,52 @@
+//! CPU-contention model.
+//!
+//! Kubernetes CFS shares guarantee a pod its *request*, but co-resident
+//! pods still contend for memory bandwidth, LLC, and burst headroom. We
+//! model that as a multiplicative slowdown on the pod's base duration:
+//!
+//! `factor = 1 + β · u_others`
+//!
+//! where `u_others` is the requested-CPU fraction of the node occupied
+//! by *other* pods at the moment this pod starts, and β is
+//! `ExperimentConfig::contention_beta` (default 0.35, i.e. a fully
+//! contended node runs ~35% slower — in line with public noisy-neighbor
+//! measurements on shared-core cloud VMs).
+//!
+//! The factor is frozen at start time: deterministic, and a reasonable
+//! approximation because the paper's workloads are short relative to
+//! cluster churn.
+
+/// Contention slowdown for a pod occupying `pod_share` of a node whose
+/// post-placement requested-CPU utilization is `util_after`.
+pub fn contention_factor(beta: f64, util_after: f64, pod_share: f64) -> f64 {
+    let others = (util_after - pod_share).clamp(0.0, 1.0);
+    1.0 + beta * others
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alone_on_node_no_slowdown() {
+        assert_eq!(contention_factor(0.35, 0.25, 0.25), 1.0);
+    }
+
+    #[test]
+    fn full_node_max_slowdown() {
+        let f = contention_factor(0.35, 1.0, 0.1);
+        assert!((f - 1.315).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_in_coresidents() {
+        let a = contention_factor(0.35, 0.4, 0.2);
+        let b = contention_factor(0.35, 0.8, 0.2);
+        assert!(b > a && a > 1.0);
+    }
+
+    #[test]
+    fn zero_beta_disables_contention() {
+        assert_eq!(contention_factor(0.0, 1.0, 0.1), 1.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Deterministic discrete-event simulation of the cluster.
+//!
+//! Replaces the paper's wall-clock GKE runs (DESIGN.md §1): arrivals,
+//! scheduling decisions, execution (base durations from the
+//! [`crate::workload::WorkloadExecutor`], contention from
+//! [`contention`]), completion, and energy metering, all on a virtual
+//! clock with seeded randomness.
+
+mod contention;
+mod engine;
+mod results;
+
+pub use contention::contention_factor;
+pub use engine::{SimulationEngine, SimulationParams};
+pub use results::{PodRecord, RunResult};

@@ -1,0 +1,112 @@
+//! Per-run results: everything the metrics/report layer and the
+//! experiment drivers need from one simulated deployment.
+
+use std::collections::HashMap;
+
+
+use crate::cluster::{NodeCategory, PodId};
+use crate::config::SchedulerKind;
+use crate::energy::EnergyMeter;
+use crate::workload::WorkloadClass;
+
+/// Lifecycle record of one pod.
+#[derive(Debug, Clone)]
+pub struct PodRecord {
+    pub pod: PodId,
+    pub class: WorkloadClass,
+    pub scheduler: SchedulerKind,
+    pub node: usize,
+    pub node_category: NodeCategory,
+    pub arrival_s: f64,
+    pub start_s: f64,
+    pub finish_s: f64,
+    /// Scheduling decision latency (µs).
+    pub sched_latency_us: f64,
+    /// Attributed energy (J).
+    pub joules: f64,
+    /// Queueing delay before binding (s).
+    pub wait_s: f64,
+}
+
+/// The outcome of one simulated run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub records: Vec<PodRecord>,
+    pub meter: EnergyMeter,
+    /// Pods that never became schedulable.
+    pub unschedulable: Vec<PodId>,
+    /// Virtual time at which the last pod finished.
+    pub makespan_s: f64,
+    /// PJRT scoring fallbacks observed (failure injection).
+    pub pjrt_fallbacks: u64,
+}
+
+impl RunResult {
+    /// Mean per-pod energy (kJ) for one scheduler — Table VI's unit.
+    pub fn mean_kj(&self, kind: SchedulerKind) -> f64 {
+        self.meter.mean_kj_per_pod(kind)
+    }
+
+    /// Mean scheduling latency (ms) for one scheduler — the paper's
+    /// "scheduling time" metric.
+    pub fn mean_sched_ms(&self, kind: SchedulerKind) -> f64 {
+        let l: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.scheduler == kind)
+            .map(|r| r.sched_latency_us / 1000.0)
+            .collect();
+        if l.is_empty() {
+            0.0
+        } else {
+            l.iter().sum::<f64>() / l.len() as f64
+        }
+    }
+
+    /// Allocation histogram per node category for one scheduler (§V.D).
+    pub fn allocations(
+        &self,
+        kind: SchedulerKind,
+    ) -> HashMap<NodeCategory, u32> {
+        let mut out = HashMap::new();
+        for r in self.records.iter().filter(|r| r.scheduler == kind) {
+            *out.entry(r.node_category).or_insert(0) += 1;
+        }
+        out
+    }
+
+    /// Mean completion time (s) per workload class for one scheduler.
+    pub fn completion_by_class(
+        &self,
+        kind: SchedulerKind,
+    ) -> HashMap<WorkloadClass, f64> {
+        let mut sums: HashMap<WorkloadClass, (f64, usize)> = HashMap::new();
+        for r in self.records.iter().filter(|r| r.scheduler == kind) {
+            let e = sums.entry(r.class).or_insert((0.0, 0));
+            e.0 += r.finish_s - r.arrival_s;
+            e.1 += 1;
+        }
+        sums.into_iter()
+            .map(|(k, (s, n))| (k, s / n as f64))
+            .collect()
+    }
+
+    /// Node-allocation efficiency (Table IV): fraction of pods placed on
+    /// the node category that minimizes their energy (the "optimal"
+    /// energy allocation is Category A whenever it fits).
+    pub fn allocation_efficiency(&self, kind: SchedulerKind) -> f64 {
+        let recs: Vec<_> = self
+            .records
+            .iter()
+            .filter(|r| r.scheduler == kind)
+            .collect();
+        if recs.is_empty() {
+            return 0.0;
+        }
+        let on_a = recs
+            .iter()
+            .filter(|r| r.node_category == NodeCategory::A)
+            .count();
+        on_a as f64 / recs.len() as f64
+    }
+}

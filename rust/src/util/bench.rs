@@ -1,0 +1,146 @@
+//! Bench harness: warmup + timed iterations + summary, criterion-style
+//! output. Used by every target under `rust/benches/`.
+//!
+//! Not statistically fancy (no bootstrap), but reports mean/std/p50/p95
+//! over per-iteration timings and guards against dead-code elimination
+//! via `std::hint::black_box`.
+
+use std::time::{Duration, Instant};
+
+use crate::metrics::Summary;
+
+/// One benchmark's result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall-clock (seconds).
+    pub summary: Summary,
+    pub iters: u32,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>12}  ({} iters)",
+            self.name,
+            fmt_time(s.mean),
+            fmt_time(s.std),
+            fmt_time(s.p50),
+            fmt_time(s.p95),
+            self.iters,
+        )
+    }
+}
+
+/// Render seconds human-readably (ns/µs/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// A bench suite accumulating results and printing a criterion-like
+/// header/footer.
+pub struct Bench {
+    target_time: Duration,
+    min_iters: u32,
+    max_iters: u32,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>12}",
+            "benchmark", "mean", "std", "p50", "p95"
+        );
+        Self {
+            target_time: Duration::from_secs_f64(
+                std::env::var("BENCH_TARGET_SECS")
+                    .ok()
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(1.0),
+            ),
+            min_iters: 10,
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, auto-choosing the iteration count to fill the target
+    /// time (after 3 warmup calls). Return values are black-boxed.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        // Warmup + per-iteration cost estimate.
+        let mut est = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            est = est.min(t0.elapsed().as_secs_f64());
+        }
+        let iters = ((self.target_time.as_secs_f64() / est.max(1e-9)) as u32)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&samples),
+            iters,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+    }
+
+    /// All results so far (e.g. for CSV emission).
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn finish(self) {
+        println!("-- {} benchmarks done", self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_time_scales() {
+        assert!(fmt_time(5e-9).contains("ns"));
+        assert!(fmt_time(5e-6).contains("µs"));
+        assert!(fmt_time(5e-3).contains("ms"));
+        assert!(fmt_time(5.0).ends_with("s"));
+    }
+
+    #[test]
+    fn bench_runs_and_records() {
+        std::env::set_var("BENCH_TARGET_SECS", "0.01");
+        let mut b = Bench::new();
+        let mut x = 0u64;
+        b.bench("noop", || {
+            x = x.wrapping_add(1);
+            x
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].summary.mean >= 0.0);
+        assert!(b.results()[0].iters >= 10);
+    }
+}

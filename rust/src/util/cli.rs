@@ -1,0 +1,155 @@
+//! Small CLI argument parser: subcommands, `--flag`, `--key value`.
+//!
+//! Deliberately minimal: positional subcommand chain first, then options.
+//! Unknown options are errors (catches typos in experiment scripts).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed arguments: subcommand path + options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Leading non-option words, e.g. `["experiment", "table6"]`.
+    pub commands: Vec<String>,
+    /// `--key value` options.
+    opts: BTreeMap<String, String>,
+    /// `--flag` booleans.
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        flag_names: &[&str],
+    ) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        let mut seen_opt = false;
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                seen_opt = true;
+                if name.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it.next().ok_or_else(|| {
+                        anyhow::anyhow!("option --{name} needs a value")
+                    })?;
+                    out.opts.insert(name.to_string(), v);
+                }
+            } else if !seen_opt {
+                out.commands.push(arg);
+            } else {
+                bail!("unexpected positional `{arg}` after options");
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env(flag_names: &[&str]) -> Result<Args> {
+        Self::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn opt_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| {
+                anyhow::anyhow!("bad value for --{name}: {e}")
+            }),
+        }
+    }
+
+    /// Subcommand at position `i`, if present.
+    pub fn command(&self, i: usize) -> Option<&str> {
+        self.commands.get(i).map(|s| s.as_str())
+    }
+
+    /// Error if any option other than those in `known` was given
+    /// (flag names are validated at parse time already).
+    pub fn reject_unknown_opts(&self, known: &[&str]) -> Result<()> {
+        for k in self.opts.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> Result<Args> {
+        Args::parse(args.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn subcommands_then_options() {
+        let a = parse(
+            &["experiment", "table6", "--replications", "3", "--pjrt"],
+            &["pjrt"],
+        )
+        .unwrap();
+        assert_eq!(a.command(0), Some("experiment"));
+        assert_eq!(a.command(1), Some("table6"));
+        assert_eq!(a.opt("replications"), Some("3"));
+        assert!(a.flag("pjrt"));
+        assert_eq!(a.opt_parse::<u32>("replications", 5).unwrap(), 3);
+        assert_eq!(a.opt_parse::<u32>("seed", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--seed=9"], &[]).unwrap();
+        assert_eq!(a.opt("seed"), Some("9"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&["--seed"], &[]).is_err());
+    }
+
+    #[test]
+    fn positional_after_option_is_error() {
+        assert!(parse(&["--pjrt", "table6"], &["pjrt"]).is_err());
+    }
+
+    #[test]
+    fn unknown_opt_rejection() {
+        let a = parse(&["--sed", "9"], &[]).unwrap();
+        assert!(a.reject_unknown_opts(&["seed"]).is_err());
+        let b = parse(&["--seed", "9"], &[]).unwrap();
+        assert!(b.reject_unknown_opts(&["seed"]).is_ok());
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let a = parse(&["--seed", "abc"], &[]).unwrap();
+        assert!(a.opt_parse::<u64>("seed", 0).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! In-tree infrastructure substrates (DESIGN.md §1b).
+//!
+//! The build environment is fully offline, so the ecosystem crates a
+//! project like this would normally lean on (rand, serde_json, clap,
+//! criterion, tokio) are implemented here at the scale this repo needs,
+//! each with its own tests.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,175 @@
+//! Workload execution backends.
+//!
+//! The simulation needs, for each (pod, node) pair, the pod's base
+//! execution duration (before contention). Two backends provide it:
+//!
+//! * **Analytic** — closed-form: `light_epoch_secs × work / (speed ×
+//!   cores)`, with the per-class work ratios of Table II. Fast and
+//!   deterministic; used by the factorial experiments.
+//! * **Measured** — calibrated from *real PJRT executions* of the
+//!   `linreg_epoch_*` artifacts at startup: the measured per-class epoch
+//!   wall-clock replaces the analytic constant, and pods can optionally
+//!   run their training for real (the e2e example does; losses are then
+//!   genuine).
+//!
+//! Real pods on Kubernetes are CPU-throttled to their request; the
+//! host-measured epoch time is therefore scaled by `1 / (speed_factor ×
+//! requested_cores)` exactly like the analytic path.
+
+use std::rc::Rc;
+
+use crate::cluster::{Node, Pod};
+use crate::runtime::{ArtifactRegistry, EpochResult, LinRegRunner};
+use crate::scheduler::estimator::DEFAULT_LIGHT_EPOCH_SECS;
+use crate::workload::WorkloadClass;
+
+/// Outcome of executing one pod.
+#[derive(Debug, Clone)]
+pub struct ExecutionOutcome {
+    /// Base duration (seconds, before the engine's contention factor).
+    pub base_secs: f64,
+    /// Loss trace when the workload really ran (Measured + run_real).
+    pub losses: Option<Vec<f32>>,
+}
+
+/// Execution backend.
+pub enum WorkloadExecutor {
+    Analytic {
+        /// Seconds per light epoch on a speed-1 node at 1 vCPU.
+        light_epoch_secs: f64,
+    },
+    Measured {
+        registry: Rc<ArtifactRegistry>,
+        /// Measured epoch seconds per class `[light, medium, complex]`
+        /// on this host (speed 1.0 reference).
+        per_class_epoch_secs: [f64; 3],
+        /// Whether `execute` actually runs the PJRT artifact per pod
+        /// (true in the e2e example) or just uses the calibration.
+        run_real: bool,
+    },
+}
+
+impl WorkloadExecutor {
+    /// Default analytic executor.
+    pub fn analytic() -> Self {
+        WorkloadExecutor::Analytic {
+            light_epoch_secs: DEFAULT_LIGHT_EPOCH_SECS,
+        }
+    }
+
+    /// Calibrate a measured executor by timing each class's epoch
+    /// artifact (`reps` epochs per class, first discarded as warmup).
+    pub fn calibrated(
+        registry: Rc<ArtifactRegistry>,
+        reps: u32,
+        run_real: bool,
+    ) -> anyhow::Result<Self> {
+        let runner = LinRegRunner::new(&registry);
+        let mut per_class = [0.0f64; 3];
+        for (i, class) in WorkloadClass::ALL.iter().enumerate() {
+            per_class[i] = runner.calibrate(*class, reps)?;
+        }
+        Ok(WorkloadExecutor::Measured {
+            registry,
+            per_class_epoch_secs: per_class,
+            run_real,
+        })
+    }
+
+    /// Per-class epoch cost at speed 1.0 / 1 vCPU.
+    fn epoch_secs(&self, class: WorkloadClass) -> f64 {
+        match self {
+            WorkloadExecutor::Analytic { light_epoch_secs } => {
+                light_epoch_secs * class.work_per_epoch()
+            }
+            WorkloadExecutor::Measured { per_class_epoch_secs, .. } => {
+                per_class_epoch_secs[class as usize]
+            }
+        }
+    }
+
+    /// Base (contention-free) duration of `pod` on `node`.
+    pub fn base_secs(&self, pod: &Pod, node: &Node) -> f64 {
+        let cores = pod.requests.cpu_millis as f64 / 1000.0;
+        self.epoch_secs(pod.class) * pod.epochs as f64
+            / (node.speed_factor * cores)
+    }
+
+    /// Execute the pod: compute its duration and (optionally) really run
+    /// its training job.
+    pub fn execute(
+        &self,
+        pod: &Pod,
+        node: &Node,
+        seed: u64,
+    ) -> anyhow::Result<ExecutionOutcome> {
+        let base_secs = self.base_secs(pod, node);
+        let losses = match self {
+            WorkloadExecutor::Measured { registry, run_real: true, .. } => {
+                let runner = LinRegRunner::new(registry);
+                let res: EpochResult =
+                    runner.run(pod.class, pod.epochs, seed, 0.5)?;
+                Some(res.losses)
+            }
+            _ => None,
+        };
+        Ok(ExecutionOutcome { base_secs, losses })
+    }
+
+    /// Equivalent light-epoch constant (to configure the estimator so
+    /// scheduler predictions match executor reality).
+    pub fn light_epoch_secs(&self) -> f64 {
+        self.epoch_secs(WorkloadClass::Light)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeCategory;
+    use crate::config::SchedulerKind;
+
+    fn node(speed: f64, cpu: u64) -> Node {
+        Node {
+            id: 0,
+            name: "n".into(),
+            category: NodeCategory::B,
+            machine_type: "n2-standard-2".into(),
+            cpu_millis: cpu,
+            memory_mib: 8192,
+            speed_factor: speed,
+            power_scale: 0.85,
+            ready: true,
+        }
+    }
+
+    fn pod(class: WorkloadClass, epochs: u32) -> Pod {
+        Pod::new(0, class, SchedulerKind::Topsis, 0.0, epochs)
+    }
+
+    #[test]
+    fn analytic_scales_with_work_speed_and_cores() {
+        let ex = WorkloadExecutor::analytic();
+        let n = node(1.0, 2000);
+        let light = ex.base_secs(&pod(WorkloadClass::Light, 1), &n);
+        let medium = ex.base_secs(&pod(WorkloadClass::Medium, 1), &n);
+        // medium = 8x work but 2.5x cores => 3.2x duration.
+        assert!((medium / light - 8.0 / 2.5).abs() < 1e-9);
+        // Slower node takes proportionally longer.
+        let slow = node(0.5, 2000);
+        let light_slow = ex.base_secs(&pod(WorkloadClass::Light, 1), &slow);
+        assert!((light_slow / light - 2.0).abs() < 1e-9);
+        // More epochs, more time.
+        let light4 = ex.base_secs(&pod(WorkloadClass::Light, 4), &n);
+        assert!((light4 / light - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn analytic_execute_has_no_losses() {
+        let ex = WorkloadExecutor::analytic();
+        let out = ex.execute(&pod(WorkloadClass::Light, 1), &node(1.0, 2000), 1)
+            .unwrap();
+        assert!(out.losses.is_none());
+        assert!(out.base_secs > 0.0);
+    }
+}

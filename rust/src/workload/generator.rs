@@ -1,0 +1,144 @@
+//! Pod-set generation for a competition level (paper Table V).
+//!
+//! Seeded and deterministic: the same `(level, config, seed)` always
+//! yields the same pods in the same arrival order, so experiment cells
+//! are replicable and TOPSIS/default halves face identical workloads.
+
+use crate::cluster::Pod;
+use crate::config::{CompetitionLevel, ExperimentConfig, SchedulerKind};
+use crate::util::rng::Rng;
+
+/// The generated pod set plus bookkeeping for assertions/reports.
+#[derive(Debug, Clone)]
+pub struct GeneratedSet {
+    pub pods: Vec<Pod>,
+    pub level: CompetitionLevel,
+    pub seed: u64,
+}
+
+/// Generate the Table V pod mix for `level`.
+///
+/// Arrival times get a small exponential jitter (`arrival_jitter_s`
+/// mean) modeling kubectl submission spacing; the interleaving of
+/// TOPSIS- and default-owned pods is shuffled (seeded) so neither
+/// scheduler systematically goes first — mirroring the paper's
+/// concurrent deployment of both pod groups.
+pub fn generate_pods(
+    level: CompetitionLevel,
+    cfg: &ExperimentConfig,
+    seed: u64,
+) -> GeneratedSet {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut pods = Vec::with_capacity(level.total_pods());
+    let mut id: u64 = 0;
+    for mix in level.pod_mix() {
+        for scheduler in [SchedulerKind::Topsis, SchedulerKind::DefaultK8s] {
+            let count = match scheduler {
+                SchedulerKind::Topsis => mix.topsis,
+                SchedulerKind::DefaultK8s => mix.default_k8s,
+            };
+            for _ in 0..count {
+                pods.push(Pod::new(
+                    id,
+                    mix.class,
+                    scheduler,
+                    0.0, // arrival assigned after shuffle
+                    cfg.epochs_for(mix.class),
+                ));
+                id += 1;
+            }
+        }
+    }
+
+    // Seeded Fisher–Yates shuffle, then monotone jittered arrivals.
+    rng.shuffle(&mut pods);
+    let mut t = 0.0_f64;
+    for p in &mut pods {
+        // Exponential inter-arrival with mean `arrival_jitter_s`.
+        t += rng.exponential(cfg.arrival_jitter_s);
+        p.arrival_s = t;
+    }
+
+    GeneratedSet { pods, level, seed }
+}
+
+impl GeneratedSet {
+    /// Pods owned by one scheduler (Table V half).
+    pub fn owned_by(&self, kind: SchedulerKind) -> Vec<&Pod> {
+        self.pods.iter().filter(|p| p.scheduler == kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadClass;
+
+    fn counts(
+        set: &GeneratedSet,
+        class: WorkloadClass,
+        kind: SchedulerKind,
+    ) -> usize {
+        set.pods
+            .iter()
+            .filter(|p| p.class == class && p.scheduler == kind)
+            .count()
+    }
+
+    #[test]
+    fn table5_counts_all_levels() {
+        let cfg = ExperimentConfig::default();
+        let cases = [
+            (CompetitionLevel::Low, [2, 1, 1]),
+            (CompetitionLevel::Medium, [4, 2, 1]),
+            (CompetitionLevel::High, [6, 3, 2]),
+        ];
+        for (level, per_sched) in cases {
+            let set = generate_pods(level, &cfg, 1);
+            for (class, want) in WorkloadClass::ALL.iter().zip(per_sched) {
+                assert_eq!(counts(&set, *class, SchedulerKind::Topsis), want);
+                assert_eq!(
+                    counts(&set, *class, SchedulerKind::DefaultK8s),
+                    want
+                );
+            }
+            assert_eq!(set.pods.len(), level.total_pods());
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = ExperimentConfig::default();
+        let a = generate_pods(CompetitionLevel::Medium, &cfg, 7);
+        let b = generate_pods(CompetitionLevel::Medium, &cfg, 7);
+        for (x, y) in a.pods.iter().zip(&b.pods) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.class, y.class);
+        }
+        let c = generate_pods(CompetitionLevel::Medium, &cfg, 8);
+        assert!(a.pods.iter().zip(&c.pods).any(|(x, y)| x.id != y.id
+            || x.arrival_s != y.arrival_s));
+    }
+
+    #[test]
+    fn arrivals_monotone_nonnegative() {
+        let cfg = ExperimentConfig::default();
+        let set = generate_pods(CompetitionLevel::High, &cfg, 3);
+        let mut prev = 0.0;
+        for p in &set.pods {
+            assert!(p.arrival_s >= prev);
+            prev = p.arrival_s;
+        }
+    }
+
+    #[test]
+    fn unique_ids() {
+        let cfg = ExperimentConfig::default();
+        let set = generate_pods(CompetitionLevel::High, &cfg, 3);
+        let mut ids: Vec<_> = set.pods.iter().map(|p| p.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), set.pods.len());
+    }
+}

@@ -1,0 +1,13 @@
+//! Workloads: the paper's containerized IoT tasks (Table II), the
+//! competition-level generators (Table V), arrival traces, and the
+//! PJRT-backed executor that *really runs* each pod's training job.
+
+mod executor;
+mod generator;
+mod spec;
+mod trace;
+
+pub use executor::{ExecutionOutcome, WorkloadExecutor};
+pub use generator::{generate_pods, GeneratedSet};
+pub use spec::WorkloadClass;
+pub use trace::{ArrivalTrace, TraceEntry, TraceSpec};

@@ -1,0 +1,143 @@
+//! Workload classes — paper Table II.
+//!
+//! | Type    | Description                               | Requests        | Task size   |
+//! |---------|-------------------------------------------|-----------------|-------------|
+//! | Light   | basic linear regression, 1k samples       | 0.2 CPU, 0.5 GB | small       |
+//! | Medium  | scalable linear regression, 1M samples    | 0.5 CPU, 1 GB   | scalable    |
+//! | Complex | distributed linear regression, 10M samples| 1.0 CPU, 2 GB   | distributed |
+//!
+//! Sample counts map to AOT step shapes (see `python/compile/aot.py`):
+//! light (1024×16), medium (4096×32), complex (8192×64); per-class epoch
+//! counts in `ExperimentConfig` preserve the relative work ratios.
+
+
+use crate::cluster::ResourceRequests;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum WorkloadClass {
+    Light,
+    Medium,
+    Complex,
+}
+
+impl WorkloadClass {
+    pub const ALL: [WorkloadClass; 3] = [
+        WorkloadClass::Light,
+        WorkloadClass::Medium,
+        WorkloadClass::Complex,
+    ];
+
+    /// Table II resource requests.
+    pub fn requests(self) -> ResourceRequests {
+        match self {
+            WorkloadClass::Light => ResourceRequests {
+                cpu_millis: 200,
+                memory_mib: 512,
+            },
+            WorkloadClass::Medium => ResourceRequests {
+                cpu_millis: 500,
+                memory_mib: 1024,
+            },
+            WorkloadClass::Complex => ResourceRequests {
+                cpu_millis: 1000,
+                memory_mib: 2048,
+            },
+        }
+    }
+
+    /// AOT artifact step shape `(samples_per_step, features)`.
+    pub fn step_shape(self) -> (usize, usize) {
+        match self {
+            WorkloadClass::Light => (1024, 16),
+            WorkloadClass::Medium => (4096, 32),
+            WorkloadClass::Complex => (8192, 64),
+        }
+    }
+
+    /// FLOPs of one SGD step (two matmuls: X·w and Xᵀ·r).
+    pub fn step_flops(self) -> f64 {
+        let (n, d) = self.step_shape();
+        2.0 * 2.0 * n as f64 * d as f64
+    }
+
+    /// Abstract work units per epoch for the analytic execution model;
+    /// normalized so a light epoch ≈ 1.0.
+    pub fn work_per_epoch(self) -> f64 {
+        self.step_flops() / WorkloadClass::Light.step_flops()
+    }
+
+    /// Manifest key of the per-class epoch artifact.
+    pub fn epoch_artifact(self) -> &'static str {
+        match self {
+            WorkloadClass::Light => "linreg_epoch_light",
+            WorkloadClass::Medium => "linreg_epoch_medium",
+            WorkloadClass::Complex => "linreg_epoch_complex",
+        }
+    }
+
+    /// Manifest key of the per-class single-step artifact.
+    pub fn step_artifact(self) -> &'static str {
+        match self {
+            WorkloadClass::Light => "linreg_step_light",
+            WorkloadClass::Medium => "linreg_step_medium",
+            WorkloadClass::Complex => "linreg_step_complex",
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            WorkloadClass::Light => "Light",
+            WorkloadClass::Medium => "Medium",
+            WorkloadClass::Complex => "Complex",
+        }
+    }
+
+    pub fn label_lower(self) -> &'static str {
+        match self {
+            WorkloadClass::Light => "light",
+            WorkloadClass::Medium => "medium",
+            WorkloadClass::Complex => "complex",
+        }
+    }
+}
+
+impl std::str::FromStr for WorkloadClass {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "light" => Ok(WorkloadClass::Light),
+            "medium" => Ok(WorkloadClass::Medium),
+            "complex" => Ok(WorkloadClass::Complex),
+            other => anyhow::bail!(
+                "unknown workload class `{other}` (light|medium|complex)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_requests() {
+        let l = WorkloadClass::Light.requests();
+        assert_eq!((l.cpu_millis, l.memory_mib), (200, 512));
+        let m = WorkloadClass::Medium.requests();
+        assert_eq!((m.cpu_millis, m.memory_mib), (500, 1024));
+        let c = WorkloadClass::Complex.requests();
+        assert_eq!((c.cpu_millis, c.memory_mib), (1000, 2048));
+    }
+
+    #[test]
+    fn work_ratios_increase_with_class() {
+        let w: Vec<f64> =
+            WorkloadClass::ALL.iter().map(|c| c.work_per_epoch()).collect();
+        assert_eq!(w[0], 1.0);
+        assert!(w[1] > w[0] && w[2] > w[1]);
+        // medium = (4096*32)/(1024*16) = 8x, complex = 32x light.
+        assert_eq!(w[1], 8.0);
+        assert_eq!(w[2], 32.0);
+    }
+}

@@ -1,0 +1,199 @@
+//! Arrival traces: Poisson streams and JSON-lines replay.
+//!
+//! Two uses:
+//! * the `aiot_smart_city` example drives the scheduler with a Poisson
+//!   stream whose class mix models the paper's motivating AIoT scenarios;
+//! * §V.E extrapolates to the SURF Lisa cluster — [`TraceSpec::surf_lisa`]
+//!   generates a trace with that workload composition (13.32% ML i.e.
+//!   medium/complex, 86.68% generic i.e. light) for trace-replay runs.
+
+use crate::cluster::Pod;
+use crate::config::SchedulerKind;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::WorkloadClass;
+
+/// One submitted pod in a replayable trace.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    pub at_s: f64,
+    pub class: WorkloadClass,
+    pub epochs: u32,
+}
+
+impl TraceEntry {
+    /// Parse from a JSON object: `{"at_s": 0.5, "class": "light",
+    /// "epochs": 2}` (`epochs` optional, default 2).
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        Ok(Self {
+            at_s: v.req_f64("at_s")?,
+            class: v.req_str("class")?.parse()?,
+            epochs: match v.get("epochs") {
+                None => 2,
+                Some(e) => e.as_u64().ok_or_else(|| {
+                    anyhow::anyhow!("`epochs` is not an integer")
+                })? as u32,
+            },
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("at_s", Json::Num(self.at_s)),
+            ("class", Json::Str(self.class.label_lower().into())),
+            ("epochs", Json::Num(self.epochs as f64)),
+        ])
+    }
+}
+
+/// Poisson-stream specification.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// Mean arrivals per second.
+    pub rate_per_s: f64,
+    /// Duration of the trace (seconds).
+    pub duration_s: f64,
+    /// Class mix (probabilities; normalized internally).
+    pub p_light: f64,
+    pub p_medium: f64,
+    pub p_complex: f64,
+    /// Epochs per class (work size).
+    pub epochs: [u32; 3],
+}
+
+impl TraceSpec {
+    /// SURF-Lisa-like composition (§V.E): 86.68% generic jobs mapped to
+    /// light, ML jobs (13.32%) split between medium and complex.
+    pub fn surf_lisa(rate_per_s: f64, duration_s: f64) -> Self {
+        Self {
+            rate_per_s,
+            duration_s,
+            p_light: 0.8668,
+            p_medium: 0.0932,
+            p_complex: 0.0400,
+            epochs: [2, 4, 8],
+        }
+    }
+}
+
+/// A generated or loaded arrival trace.
+#[derive(Debug, Clone)]
+pub struct ArrivalTrace {
+    pub entries: Vec<TraceEntry>,
+}
+
+impl ArrivalTrace {
+    /// Sample a Poisson trace (seeded, deterministic).
+    pub fn poisson(spec: &TraceSpec, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let total = spec.p_light + spec.p_medium + spec.p_complex;
+        let (pl, pm) = (spec.p_light / total, spec.p_medium / total);
+        let mut entries = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(1.0 / spec.rate_per_s);
+            if t > spec.duration_s {
+                break;
+            }
+            let x: f64 = rng.f64();
+            let (class, epochs) = if x < pl {
+                (WorkloadClass::Light, spec.epochs[0])
+            } else if x < pl + pm {
+                (WorkloadClass::Medium, spec.epochs[1])
+            } else {
+                (WorkloadClass::Complex, spec.epochs[2])
+            };
+            entries.push(TraceEntry { at_s: t, class, epochs });
+        }
+        Self { entries }
+    }
+
+    /// Parse a JSON-lines trace (one `TraceEntry` per line).
+    pub fn from_jsonl(text: &str) -> anyhow::Result<Self> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let v = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 1))?;
+            entries.push(TraceEntry::from_json(&v).map_err(|e| {
+                anyhow::anyhow!("trace line {}: {e}", i + 1)
+            })?);
+        }
+        anyhow::ensure!(!entries.is_empty(), "trace is empty");
+        Ok(Self { entries })
+    }
+
+    /// Serialize to JSON-lines.
+    pub fn to_jsonl(&self) -> String {
+        self.entries
+            .iter()
+            .map(|e| e.to_json().to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// Materialize pods, all owned by `scheduler`.
+    pub fn to_pods(&self, scheduler: SchedulerKind) -> Vec<Pod> {
+        self.entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                Pod::new(i as u64, e.class, scheduler, e.at_s, e.epochs)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_approximately_honored() {
+        let spec = TraceSpec::surf_lisa(2.0, 500.0);
+        let t = ArrivalTrace::poisson(&spec, 42);
+        let n = t.entries.len() as f64;
+        // E[n] = 1000; allow 4 sigma.
+        assert!((n - 1000.0).abs() < 4.0 * 1000.0_f64.sqrt(), "n={n}");
+    }
+
+    #[test]
+    fn surf_lisa_composition() {
+        let spec = TraceSpec::surf_lisa(5.0, 2000.0);
+        let t = ArrivalTrace::poisson(&spec, 7);
+        let light = t
+            .entries
+            .iter()
+            .filter(|e| e.class == WorkloadClass::Light)
+            .count() as f64
+            / t.entries.len() as f64;
+        assert!((light - 0.8668).abs() < 0.03, "light frac {light}");
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let spec = TraceSpec::surf_lisa(1.0, 20.0);
+        let t = ArrivalTrace::poisson(&spec, 3);
+        let text = t.to_jsonl();
+        let back = ArrivalTrace::from_jsonl(&text).unwrap();
+        assert_eq!(t.entries.len(), back.entries.len());
+        assert_eq!(t.entries[0].at_s, back.entries[0].at_s);
+    }
+
+    #[test]
+    fn jsonl_rejects_garbage() {
+        assert!(ArrivalTrace::from_jsonl("not json").is_err());
+        assert!(ArrivalTrace::from_jsonl("").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let text = "# header\n\n{\"at_s\":0.5,\"class\":\"light\"}\n";
+        let t = ArrivalTrace::from_jsonl(text).unwrap();
+        assert_eq!(t.entries.len(), 1);
+        assert_eq!(t.entries[0].epochs, 2); // default
+    }
+}

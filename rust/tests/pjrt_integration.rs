@@ -1,0 +1,184 @@
+//! Cross-layer integration tests: the Rust runtime against the real AOT
+//! artifacts (requires `make artifacts`).
+//!
+//! These verify the numerical contract between the three layers:
+//! * golden.json replay — python-computed outputs must match what Rust
+//!   gets from the PJRT executables, bit-close;
+//! * PJRT TOPSIS ≡ pure-Rust TOPSIS on random decision problems;
+//! * every manifest artifact loads, compiles and executes.
+
+use std::rc::Rc;
+
+use greenpod::mcda::{self, Criterion, DecisionProblem};
+use greenpod::runtime::{ArtifactRegistry, LinRegRunner, PjrtTopsisEngine};
+use greenpod::util::json::Json;
+use greenpod::util::rng::Rng;
+use greenpod::workload::WorkloadClass;
+
+fn registry() -> Rc<ArtifactRegistry> {
+    Rc::new(
+        ArtifactRegistry::open_default()
+            .expect("artifacts missing — run `make artifacts`"),
+    )
+}
+
+#[test]
+fn every_manifest_artifact_compiles() {
+    let reg = registry();
+    let names: Vec<String> =
+        reg.manifest().entries.keys().cloned().collect();
+    assert_eq!(names.len(), 11, "expected 11 artifacts, got {names:?}");
+    for name in &names {
+        reg.load(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+    assert_eq!(reg.cached_count(), names.len());
+}
+
+#[test]
+fn topsis_tier_selection() {
+    let reg = registry();
+    assert_eq!(reg.topsis_tier(3).unwrap().1, 4);
+    assert_eq!(reg.topsis_tier(4).unwrap().1, 4);
+    assert_eq!(reg.topsis_tier(5).unwrap().1, 8);
+    assert_eq!(reg.topsis_tier(64).unwrap().1, 64);
+    assert!(reg.topsis_tier(65).is_err());
+}
+
+#[test]
+fn golden_topsis_replay() {
+    let reg = registry();
+    let golden = Json::parse(
+        &std::fs::read_to_string(reg.dir().join("golden.json")).unwrap(),
+    )
+    .unwrap();
+    let g = golden.get("topsis_n4").unwrap();
+    let matrix: Vec<f64> = g
+        .get("matrix").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_f64().unwrap()).collect();
+    let weights: Vec<f64> = g
+        .get("weights").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_f64().unwrap()).collect();
+    let benefit: Vec<f64> = g
+        .get("benefit").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_f64().unwrap()).collect();
+    let expect: Vec<f64> = g
+        .get("closeness").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_f64().unwrap()).collect();
+
+    // Reconstruct the 4x8 problem (padding columns included, weight 0).
+    let criteria: Vec<Criterion> = (0..8)
+        .map(|i| {
+            if benefit[i] > 0.5 {
+                Criterion::benefit(weights[i])
+            } else {
+                Criterion::cost(weights[i])
+            }
+        })
+        .collect();
+    let p = DecisionProblem::new(matrix, 4, criteria);
+
+    // PJRT path matches python golden output.
+    let mut engine = PjrtTopsisEngine::new(registry());
+    let got = engine.closeness(&p).unwrap();
+    for (g, e) in got.iter().zip(&expect) {
+        assert!((g - e).abs() < 1e-5, "pjrt {got:?} vs golden {expect:?}");
+    }
+
+    // Pure-Rust path matches too (cross-implementation equivalence).
+    let rust = mcda::topsis_closeness(&p);
+    for (r, e) in rust.iter().zip(&expect) {
+        assert!((r - e).abs() < 1e-5, "rust {rust:?} vs golden {expect:?}");
+    }
+}
+
+#[test]
+fn golden_linreg_replay() {
+    // The python-recorded epoch losses for seed 42 must be strictly
+    // decreasing, and our Rust-side run of the same artifact (different
+    // dataset stream, same distribution) must behave the same way.
+    let reg = registry();
+    let golden = Json::parse(
+        &std::fs::read_to_string(reg.dir().join("golden.json")).unwrap(),
+    )
+    .unwrap();
+    let g = golden.get("linreg_light_seed42").unwrap();
+    let losses: Vec<f64> = g
+        .get("epoch_losses").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_f64().unwrap()).collect();
+    assert!(losses.windows(2).all(|w| w[1] < w[0]), "python losses {losses:?}");
+
+    let runner = LinRegRunner::new(&reg);
+    let res = runner.run(WorkloadClass::Light, 1, 42, 1.0).unwrap();
+    assert_eq!(res.losses.len(), reg.manifest().epoch_steps);
+    assert!(
+        res.losses.windows(2).all(|w| w[1] < w[0]),
+        "rust losses {:?}",
+        res.losses
+    );
+    // Loss magnitude comparable to python's run (same distribution,
+    // same lr): final loss within an order of magnitude.
+    let py_final = *losses.last().unwrap();
+    let rs_final = *res.losses.last().unwrap() as f64;
+    assert!(
+        rs_final < py_final * 10.0 + 0.1,
+        "rust final {rs_final} vs python {py_final}"
+    );
+}
+
+#[test]
+fn pjrt_equals_rust_topsis_on_random_problems() {
+    let mut engine = PjrtTopsisEngine::new(registry());
+    let mut rng = Rng::seed_from_u64(99);
+    for case in 0..25 {
+        let n = 2 + rng.below(30);
+        let c = 2 + rng.below(4); // up to 5 criteria (artifact slots = 8)
+        let matrix: Vec<f64> =
+            (0..n * c).map(|_| rng.range_f64(0.05, 10.0)).collect();
+        let criteria: Vec<Criterion> = (0..c)
+            .map(|_| {
+                let w = rng.range_f64(0.05, 1.0);
+                if rng.chance(0.5) {
+                    Criterion::benefit(w)
+                } else {
+                    Criterion::cost(w)
+                }
+            })
+            .collect();
+        let p = DecisionProblem::new(matrix, n, criteria);
+        let pjrt = engine.closeness(&p).unwrap();
+        let rust = mcda::topsis_closeness(&p);
+        assert_eq!(pjrt.len(), rust.len());
+        for (a, b) in pjrt.iter().zip(&rust) {
+            assert!(
+                (a - b).abs() < 5e-4,
+                "case {case} (n={n}, c={c}): pjrt {a} vs rust {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn all_workload_classes_train_and_converge() {
+    let reg = registry();
+    let runner = LinRegRunner::new(&reg);
+    for class in WorkloadClass::ALL {
+        let res = runner.run(class, 2, 7, 0.5).unwrap();
+        let first = res.losses[0];
+        let last = *res.losses.last().unwrap();
+        assert!(
+            last < first,
+            "{class:?}: loss {first} -> {last} did not decrease"
+        );
+        let (_, d) = class.step_shape();
+        assert_eq!(res.weights.len(), d);
+        assert_eq!(res.epoch_secs.len(), 2);
+    }
+}
+
+#[test]
+fn epoch_timing_calibration_positive() {
+    let reg = registry();
+    let runner = LinRegRunner::new(&reg);
+    let secs = runner.calibrate(WorkloadClass::Light, 3).unwrap();
+    assert!(secs > 0.0 && secs < 60.0, "implausible epoch time {secs}");
+}

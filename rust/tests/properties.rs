@@ -1,0 +1,329 @@
+//! Randomized property tests (seeded, deterministic) over the L3
+//! invariants — the in-tree stand-in for proptest (DESIGN.md §1b).
+//!
+//! Each property runs a few hundred random cases from a fixed seed;
+//! shrinkage is traded for printing the failing case's seed so it can
+//! be replayed.
+
+use greenpod::cluster::{ClusterState, Pod};
+use greenpod::config::{
+    ClusterConfig, CompetitionLevel, Config, ExperimentConfig,
+    SchedulerKind, WeightingScheme,
+};
+use greenpod::mcda::{
+    self, Criterion, DecisionProblem, Direction, McdaMethod,
+};
+use greenpod::scheduler::{
+    DefaultK8sScheduler, Estimator, GreenPodScheduler, Scheduler,
+};
+use greenpod::util::rng::Rng;
+use greenpod::workload::{generate_pods, WorkloadClass};
+
+fn random_problem(rng: &mut Rng) -> DecisionProblem {
+    let n = 1 + rng.below(40);
+    let c = 1 + rng.below(7);
+    let matrix: Vec<f64> =
+        (0..n * c).map(|_| rng.range_f64(0.01, 100.0)).collect();
+    let criteria: Vec<Criterion> = (0..c)
+        .map(|_| {
+            let w = rng.range_f64(0.01, 2.0);
+            if rng.chance(0.5) {
+                Criterion::benefit(w)
+            } else {
+                Criterion::cost(w)
+            }
+        })
+        .collect();
+    DecisionProblem::new(matrix, n, criteria)
+}
+
+#[test]
+fn prop_topsis_closeness_in_unit_interval() {
+    let mut rng = Rng::seed_from_u64(1);
+    for case in 0..300 {
+        let p = random_problem(&mut rng);
+        for (i, s) in mcda::topsis_closeness(&p).iter().enumerate() {
+            assert!(
+                (-1e-9..=1.0 + 1e-9).contains(s),
+                "case {case}: row {i} score {s}"
+            );
+            assert!(s.is_finite());
+        }
+    }
+}
+
+#[test]
+fn prop_dominated_alternative_never_first() {
+    // Build a problem, then append a row strictly dominated by row 0;
+    // the dominated row must never outrank its dominator.
+    let mut rng = Rng::seed_from_u64(2);
+    for case in 0..200 {
+        let mut p = random_problem(&mut rng);
+        let c = p.c();
+        let mut dominated = Vec::with_capacity(c);
+        for col in 0..c {
+            let v = p.at(0, col);
+            let delta = rng.range_f64(0.1, 1.0);
+            dominated.push(match p.criteria[col].direction {
+                Direction::Benefit => (v - delta).max(0.001),
+                Direction::Cost => v + delta,
+            });
+        }
+        p.matrix.extend_from_slice(&dominated);
+        p.n += 1;
+        let scores = mcda::topsis_closeness(&p);
+        assert!(
+            scores[0] >= scores[p.n - 1] - 1e-9,
+            "case {case}: dominated row scored {} > dominator {}",
+            scores[p.n - 1],
+            scores[0]
+        );
+    }
+}
+
+#[test]
+fn prop_all_mcda_methods_rank_dominator_over_dominated() {
+    let mut rng = Rng::seed_from_u64(3);
+    for case in 0..100 {
+        let mut p = random_problem(&mut rng);
+        let c = p.c();
+        let mut dominated = Vec::with_capacity(c);
+        for col in 0..c {
+            let v = p.at(0, col);
+            dominated.push(match p.criteria[col].direction {
+                Direction::Benefit => v * 0.5,
+                Direction::Cost => v * 2.0 + 0.1,
+            });
+        }
+        p.matrix.extend_from_slice(&dominated);
+        p.n += 1;
+        for method in McdaMethod::ALL {
+            let scores = method.scores(&p);
+            assert!(
+                scores[0] >= scores[p.n - 1] - 1e-9,
+                "case {case} {method:?}: dominated outranked dominator"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_topsis_scale_invariance() {
+    // Multiplying any column by a positive constant leaves closeness
+    // unchanged (vector normalization).
+    let mut rng = Rng::seed_from_u64(4);
+    for case in 0..200 {
+        let p = random_problem(&mut rng);
+        let col = rng.below(p.c());
+        let k = rng.range_f64(0.1, 50.0);
+        let mut scaled = p.clone();
+        for row in 0..p.n {
+            scaled.matrix[row * p.c() + col] *= k;
+        }
+        let a = mcda::topsis_closeness(&p);
+        let b = mcda::topsis_closeness(&scaled);
+        for (x, y) in a.iter().zip(&b) {
+            assert!(
+                (x - y).abs() < 1e-6,
+                "case {case}: column {col} scale {k} changed {x} -> {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_cluster_never_overcommits() {
+    // Random bind/release sequences keep every node within capacity and
+    // release restores the exact previous free amounts.
+    let mut rng = Rng::seed_from_u64(5);
+    for _case in 0..100 {
+        let mut state =
+            ClusterState::from_config(&ClusterConfig::paper_default());
+        let mut live: Vec<Pod> = Vec::new();
+        let mut id = 0u64;
+        for _step in 0..200 {
+            if rng.chance(0.6) || live.is_empty() {
+                let class = match rng.below(3) {
+                    0 => WorkloadClass::Light,
+                    1 => WorkloadClass::Medium,
+                    _ => WorkloadClass::Complex,
+                };
+                let pod =
+                    Pod::new(id, class, SchedulerKind::Topsis, 0.0, 1);
+                id += 1;
+                let node = rng.below(state.nodes().len());
+                let fits = state.fits(node, pod.requests);
+                let res = state.bind(&pod, node, 0.0);
+                assert_eq!(res.is_ok(), fits);
+                if res.is_ok() {
+                    live.push(pod);
+                }
+            } else {
+                let idx = rng.below(live.len());
+                let pod = live.swap_remove(idx);
+                state.release(pod.id, 0.0).unwrap();
+            }
+            for n in 0..state.nodes().len() {
+                assert!(state.free_cpu(n) <= state.node(n).cpu_millis);
+                assert!(state.free_memory(n) <= state.node(n).memory_mib);
+                let u = state.cpu_utilization(n);
+                assert!((0.0..=1.0).contains(&u));
+            }
+        }
+        // Release everything: cluster returns to pristine.
+        for pod in live {
+            state.release(pod.id, 0.0).unwrap();
+        }
+        for n in 0..state.nodes().len() {
+            assert_eq!(state.free_cpu(n), state.node(n).cpu_millis);
+            assert_eq!(state.free_memory(n), state.node(n).memory_mib);
+            assert_eq!(state.pods_on(n), 0);
+        }
+    }
+}
+
+#[test]
+fn prop_schedulers_always_pick_feasible_nodes() {
+    let mut rng = Rng::seed_from_u64(6);
+    let energy = greenpod::config::EnergyModelConfig::default();
+    for case in 0..60 {
+        let mut state =
+            ClusterState::from_config(&ClusterConfig::paper_default());
+        let mut topsis = GreenPodScheduler::new(
+            Estimator::with_defaults(energy.clone()),
+            match rng.below(4) {
+                0 => WeightingScheme::General,
+                1 => WeightingScheme::EnergyCentric,
+                2 => WeightingScheme::PerformanceCentric,
+                _ => WeightingScheme::ResourceEfficient,
+            },
+        );
+        let mut default = DefaultK8sScheduler::new(case as u64);
+        let mut id = 0u64;
+        for _ in 0..40 {
+            let class = match rng.below(3) {
+                0 => WorkloadClass::Light,
+                1 => WorkloadClass::Medium,
+                _ => WorkloadClass::Complex,
+            };
+            let kind = if rng.chance(0.5) {
+                SchedulerKind::Topsis
+            } else {
+                SchedulerKind::DefaultK8s
+            };
+            let pod = Pod::new(id, class, kind, 0.0, 1);
+            id += 1;
+            let d = match kind {
+                SchedulerKind::Topsis => topsis.schedule(&state, &pod),
+                SchedulerKind::DefaultK8s => default.schedule(&state, &pod),
+            };
+            match d.node {
+                Some(n) => {
+                    // The chosen node must satisfy the filter — bind
+                    // must succeed.
+                    state.bind(&pod, n, 0.0).unwrap();
+                }
+                None => {
+                    // Unschedulable must mean NO node fits.
+                    assert!(
+                        state.feasible_nodes(pod.requests).is_empty(),
+                        "case {case}: scheduler gave up though nodes fit"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_generator_counts_and_determinism() {
+    let mut rng = Rng::seed_from_u64(7);
+    let cfg = ExperimentConfig::default();
+    for _ in 0..50 {
+        let seed = rng.next_u64();
+        for level in CompetitionLevel::ALL {
+            let a = generate_pods(level, &cfg, seed);
+            let b = generate_pods(level, &cfg, seed);
+            assert_eq!(a.pods.len(), level.total_pods());
+            for (x, y) in a.pods.iter().zip(&b.pods) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.class, y.class);
+                assert_eq!(x.scheduler, y.scheduler);
+                assert_eq!(x.arrival_s, y.arrival_s);
+            }
+            // Half/half ownership per Table V.
+            let t = a.owned_by(SchedulerKind::Topsis).len();
+            let d = a.owned_by(SchedulerKind::DefaultK8s).len();
+            assert_eq!(t, d);
+        }
+    }
+}
+
+#[test]
+fn prop_simulation_conservation() {
+    // Across random seeds: every generated pod either completes with
+    // positive energy and start >= arrival, or is reported
+    // unschedulable; energy sums are finite and positive.
+    let mut rng = Rng::seed_from_u64(8);
+    let config = Config::paper_default();
+    let executor = greenpod::workload::WorkloadExecutor::analytic();
+    for _case in 0..30 {
+        let seed = rng.next_u64();
+        let level = match rng.below(3) {
+            0 => CompetitionLevel::Low,
+            1 => CompetitionLevel::Medium,
+            _ => CompetitionLevel::High,
+        };
+        let ctx = greenpod::experiments::ExperimentContext::new(
+            config.clone(),
+        );
+        let result = greenpod::experiments::run_once(
+            &ctx,
+            level,
+            WeightingScheme::EnergyCentric,
+            seed,
+            &executor,
+        );
+        assert_eq!(
+            result.records.len() + result.unschedulable.len(),
+            level.total_pods()
+        );
+        for r in &result.records {
+            assert!(r.joules > 0.0 && r.joules.is_finite());
+            assert!(r.start_s >= r.arrival_s - 1e-9);
+            assert!(r.finish_s > r.start_s);
+            assert!(r.wait_s >= 0.0);
+        }
+        assert!(result.makespan_s.is_finite());
+    }
+}
+
+#[test]
+fn prop_weights_simplex_under_adaptation() {
+    use greenpod::scheduler::AdaptiveWeighting;
+    let mut rng = Rng::seed_from_u64(9);
+    for _ in 0..100 {
+        let a = AdaptiveWeighting {
+            lo: rng.range_f64(0.0, 0.9),
+            hi: rng.range_f64(0.0, 1.0),
+            target: WeightingScheme::ResourceEfficient,
+        };
+        let mut state =
+            ClusterState::from_config(&ClusterConfig::paper_default());
+        // Random load.
+        let mut id = 0;
+        for _ in 0..rng.below(10) {
+            let pod = Pod::new(id, WorkloadClass::Medium,
+                               SchedulerKind::Topsis, 0.0, 1);
+            id += 1;
+            let node = rng.below(state.nodes().len());
+            let _ = state.bind(&pod, node, 0.0);
+        }
+        for base in WeightingScheme::ALL {
+            let w = a.weights(&state, base);
+            let sum: f64 = w.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "{w:?}");
+            assert!(w.iter().all(|&x| x >= 0.0));
+        }
+    }
+}
