@@ -65,10 +65,10 @@ fn main() -> anyhow::Result<()> {
     let executor = WorkloadExecutor::analytic();
     let engine = SimulationEngine::new(
         &cfg,
-        SimulationParams {
-            contention_beta: cfg.experiment.contention_beta,
-            seed: cfg.experiment.seed,
-        },
+        SimulationParams::with_beta_and_seed(
+            cfg.experiment.contention_beta,
+            cfg.experiment.seed,
+        ),
         &executor,
     );
 

@@ -1,0 +1,7 @@
+"""Pytest path setup: make `compile.*` (and `tools.*`) importable when
+the suite is invoked from the repo root (`python -m pytest python/tests -q`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

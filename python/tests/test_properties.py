@@ -7,9 +7,14 @@ the kernel-vs-ref equivalence plus TOPSIS's mathematical invariants.
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from compile.kernels import linreg, ref, topsis
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property sweeps skipped"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from compile.kernels import linreg, ref, topsis  # noqa: E402
 
 COMMON = dict(max_examples=25, deadline=None)
 

@@ -1,0 +1,38 @@
+"""Cross-language pin for tools/rng_mirror.py.
+
+The same constants are asserted by `xoshiro_reference_vector_seed42`
+in rust/src/util/rng.rs; if either side's xoshiro256** drifts, its
+pinned test fails and the mirror contract is visibly broken.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+
+from rng_mirror import Rng
+
+SEED42_U64 = [
+    0x15780B2E0C2EC716,
+    0x6104D9866D113A7E,
+    0xAE17533239E499A1,
+    0xECB8AD4703B360A1,
+]
+SEED42_NEXT_F64 = [0.9918039142821028, 0.7697394604342425]
+
+
+def test_seed42_reference_vector():
+    r = Rng(42)
+    assert [r.next_u64() for _ in range(4)] == SEED42_U64
+    assert [r.f64() for _ in range(2)] == SEED42_NEXT_F64
+
+
+def test_determinism_and_exponential_mean():
+    a, b = Rng(7), Rng(7)
+    assert [a.next_u64() for _ in range(64)] == [
+        b.next_u64() for _ in range(64)
+    ]
+    r = Rng(3)
+    n = 50_000
+    mean = sum(r.exponential(2.5) for _ in range(n)) / n
+    assert abs(mean - 2.5) < 0.05

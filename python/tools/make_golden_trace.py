@@ -1,0 +1,330 @@
+"""Generate the golden-trace regression fixtures for the Rust
+discrete-event engine (rust/tests/golden_trace.rs).
+
+This is an *independent oracle*: a line-by-line Python mirror of the
+engine's arithmetic (estimator, TOPSIS closeness, contention, power
+model, event kernel with FIFO scheduling cycles and interval-integrated
+energy), kept in the exact floating-point operation order of the Rust
+source so the two implementations agree to ~1e-12 relative. The Rust
+test replays rust/tests/data/golden_trace.jsonl and asserts placements
+exactly and times/energy to 1e-9.
+
+Run from the repo root:  python3 python/tools/make_golden_trace.py
+"""
+
+import json
+import math
+import os
+from collections import deque
+
+EPS = 1e-12
+
+# --- paper_default cluster (rust/src/config/cluster.rs) --------------
+# (category, cpu_millis, memory_mib, speed_factor, power_scale)
+NODES = [
+    ("A", 2000, 4096, 0.70, 0.30),
+    ("A", 2000, 4096, 0.70, 0.30),
+    ("A", 2000, 4096, 0.70, 0.30),
+    ("B", 2000, 8192, 1.00, 0.55),
+    ("B", 2000, 8192, 1.00, 0.55),
+    ("C", 4000, 16384, 1.10, 2.60),
+    ("Default", 2000, 8192, 0.85, 0.50),
+]
+
+# --- EnergyModelConfig::default (rust/src/config/energy.rs) ----------
+P_IDLE, K_CPU, K_MEM, K_DISK, K_NET = 14.45, 0.236, -4.47e-8, 0.00281, 3.1e-8
+PUE = 1.45
+MEM_APS, DISK_IOPS, NET_OPS = 8.0e6, 350.0, 3.0e6
+
+# --- experiment knobs the golden run uses ----------------------------
+LIGHT_EPOCH_SECS = 0.35      # estimator::DEFAULT_LIGHT_EPOCH_SECS
+CONTENTION_BETA = 0.20       # ExperimentConfig::default().contention_beta
+WEIGHTS = [0.15, 0.40, 0.15, 0.15, 0.15]   # EnergyCentric
+BENEFIT = [False, False, True, True, True]  # cost, cost, benefit x3
+
+REQUESTS = {"light": (200, 512), "medium": (500, 1024),
+            "complex": (1000, 2048)}
+WORK_PER_EPOCH = {"light": 1.0, "medium": 8.0, "complex": 32.0}
+
+# --- the committed trace ---------------------------------------------
+TRACE = (
+    [(0.0, "complex", 1)] * 6
+    + [(0.25, "complex", 1)] * 6
+    + [(0.5, "complex", 1)] * 6
+    + [(30.0, "light", 2)] * 3
+    + [(31.0, "medium", 2)] * 2
+)
+
+
+def blade_power_at_load(f):
+    f = min(max(f, 0.0), 1.0)
+    return (P_IDLE + K_CPU * (100.0 * f) + K_MEM * (MEM_APS * f)
+            + K_DISK * (DISK_IOPS * f) + K_NET * (NET_OPS * f))
+
+
+def pod_power_watts(node, share):
+    share = min(max(share, 0.0), 1.0)
+    dynamic = blade_power_at_load(share) - blade_power_at_load(0.0)
+    idle_share = blade_power_at_load(0.0) * share
+    return node[4] * (dynamic + idle_share) * PUE
+
+
+def topsis_closeness(matrix, n, c, weights, benefit):
+    # Mirrors mcda::topsis_closeness_into.
+    if n == 0:
+        return []
+    stats = [[0.0, math.inf, -math.inf] for _ in range(c)]
+    for row in range(n):
+        base = row * c
+        for col in range(c):
+            v = matrix[base + col]
+            stats[col][0] += v * v
+            stats[col][1] = min(stats[col][1], v)
+            stats[col][2] = max(stats[col][2], v)
+    w_sum = 0.0
+    for w in weights:
+        w_sum += w
+    if w_sum <= 0.0:
+        w_sum = 1.0
+    cols = []
+    for col in range(c):
+        sumsq, lo, hi = stats[col]
+        scale = (weights[col] / w_sum) / max(math.sqrt(sumsq), EPS)
+        vm_lo, vm_hi = lo * scale, hi * scale
+        if benefit[col]:
+            v_plus, v_minus = vm_hi, vm_lo
+        else:
+            v_plus, v_minus = vm_lo, vm_hi
+        cols.append((scale, v_plus, v_minus))
+    out = []
+    for row in range(n):
+        base = row * c
+        dp = 0.0
+        dm = 0.0
+        for col, (scale, v_plus, v_minus) in enumerate(cols):
+            v = matrix[base + col] * scale
+            dp += (v - v_plus) * (v - v_plus)
+            dm += (v - v_minus) * (v - v_minus)
+        dp, dm = math.sqrt(dp), math.sqrt(dm)
+        out.append(dm / max(dp + dm, EPS))
+    return out
+
+
+def argmax(scores):
+    best_i, best_s = None, None
+    for i, s in enumerate(scores):
+        if best_s is None or s > best_s:
+            best_i, best_s = i, s
+    return best_i
+
+
+class Cluster:
+    def __init__(self):
+        self.alloc = [[0, 0] for _ in NODES]  # cpu, mem
+
+    def free_cpu(self, i):
+        return NODES[i][1] - self.alloc[i][0]
+
+    def free_mem(self, i):
+        return NODES[i][2] - self.alloc[i][1]
+
+    def util(self, i):
+        return self.alloc[i][0] / NODES[i][1]
+
+    def fits(self, i, req):
+        return self.free_cpu(i) >= req[0] and self.free_mem(i) >= req[1]
+
+    def feasible(self, req):
+        return [i for i in range(len(NODES)) if self.fits(i, req)]
+
+    def bind(self, i, req):
+        self.alloc[i][0] += req[0]
+        self.alloc[i][1] += req[1]
+
+    def release(self, i, req):
+        self.alloc[i][0] -= req[0]
+        self.alloc[i][1] -= req[1]
+
+
+def estimate_row(cluster, node_id, cls, epochs):
+    # Mirrors scheduler::estimator::Estimator::estimate.
+    cat, cpu_millis, mem_mib, speed, _power = NODES[node_id]
+    req = REQUESTS[cls]
+    work = WORK_PER_EPOCH[cls] * float(epochs)
+    cores = req[0] / 1000.0
+    base = LIGHT_EPOCH_SECS * work / (speed * cores)
+    slowdown = 1.0 + CONTENTION_BETA * cluster.util(node_id)
+    exec_time = base * slowdown
+    share = req[0] / cpu_millis
+    energy = pod_power_watts(NODES[node_id], share) * exec_time
+    free_cpu_after = max(cluster.free_cpu(node_id) - req[0], 0)
+    free_mem_after = max(cluster.free_mem(node_id) - req[1], 0)
+    cpu_util_after = 1.0 - free_cpu_after / cpu_millis
+    mem_util_after = 1.0 - free_mem_after / mem_mib
+    return [
+        exec_time,
+        energy,
+        1.0 - cpu_util_after,
+        1.0 - mem_util_after,
+        1.0 - abs(cpu_util_after - mem_util_after),
+    ]
+
+
+def schedule(cluster, cls, epochs):
+    """GreenPod TOPSIS decision; returns node id or None."""
+    req = REQUESTS[cls]
+    candidates = cluster.feasible(req)
+    if not candidates:
+        return None
+    matrix = []
+    for cid in candidates:
+        matrix.extend(estimate_row(cluster, cid, cls, epochs))
+    scores = topsis_closeness(matrix, len(candidates), 5, WEIGHTS, BENEFIT)
+    return candidates[argmax(scores)]
+
+
+def executor_base_secs(node_id, cls, epochs):
+    # Mirrors WorkloadExecutor::base_secs (op order differs from the
+    # estimator's base_exec_time — keep both faithful).
+    _cat, _cpu, _mem, speed, _power = NODES[node_id]
+    req = REQUESTS[cls]
+    cores = req[0] / 1000.0
+    epoch_secs = LIGHT_EPOCH_SECS * WORK_PER_EPOCH[cls]
+    return epoch_secs * float(epochs) / (speed * cores)
+
+
+def contention_factor(util_after, share):
+    others = min(max(util_after - share, 0.0), 1.0)
+    return 1.0 + CONTENTION_BETA * others
+
+
+def simulate(trace):
+    """Mirror of SimulationEngine::run for an all-TOPSIS pod set."""
+    cluster = Cluster()
+    # Event queue: (at, seq, kind, payload); kinds: arrival/cycle/done.
+    queue = []
+    seq = 0
+    for i, (at, _cls, _ep) in enumerate(trace):
+        queue.append([at, seq, "arrival", i])
+        seq += 1
+    pending = deque()
+    running = {}   # pod -> dict(watts, start, acc, node)
+    records = {}
+    attempts = [0] * len(trace)
+    cycle_queued = False
+    last_s = 0.0   # meter frontier
+    makespan = 0.0
+
+    def advance(now):
+        nonlocal last_s
+        if now <= last_s:
+            return
+        dt = now - last_s
+        for r in running.values():
+            r["acc"] += r["watts"] * dt
+        last_s = now
+
+    def try_place(i, now):
+        nonlocal seq
+        at, cls, epochs = trace[i]
+        attempts[i] += 1
+        node = schedule(cluster, cls, epochs)
+        if node is None:
+            return False
+        req = REQUESTS[cls]
+        cluster.bind(node, req)
+        base = executor_base_secs(node, cls, epochs)
+        share = req[0] / NODES[node][1]
+        factor = contention_factor(cluster.util(node), share)
+        duration = base * factor
+        running[i] = {
+            "watts": pod_power_watts(NODES[node], share),
+            "start": now,
+            "acc": 0.0,
+            "node": node,
+        }
+        queue.append([now + duration, seq, "done", i])
+        seq += 1
+        return True
+
+    while queue:
+        queue.sort(key=lambda e: (e[0], e[1]))
+        at, _s, kind, payload = queue.pop(0)
+        now = at
+        advance(now)
+        if kind == "arrival":
+            pending.append(payload)
+            if not cycle_queued:
+                queue.append([now, seq, "cycle", None])
+                seq += 1
+                cycle_queued = True
+        elif kind == "cycle":
+            cycle_queued = False
+            for _ in range(len(pending)):
+                i = pending.popleft()
+                if not try_place(i, now):
+                    pending.append(i)
+        elif kind == "done":
+            i = payload
+            makespan = max(makespan, now)
+            r = running.pop(i)
+            cluster.release(r["node"], REQUESTS[trace[i][1]])
+            advance(now)  # no-op; mirrors meter.finish's advance
+            records[i] = {
+                "pod": i,
+                "class": trace[i][1],
+                "node": r["node"],
+                "arrival_s": trace[i][0],
+                "start_s": r["start"],
+                "finish_s": now,
+                "wait_s": r["start"] - trace[i][0],
+                "attempts": attempts[i],
+                "joules": r["acc"],
+            }
+            if pending and not cycle_queued:
+                queue.append([now, seq, "cycle", None])
+                seq += 1
+                cycle_queued = True
+
+    assert not pending, f"unschedulable pods in golden trace: {pending}"
+    ordered = [records[i] for i in sorted(records)]
+    total_kj = sum(r["joules"] for r in ordered) / 1000.0
+    return ordered, makespan, total_kj
+
+
+def main():
+    root = os.path.join(os.path.dirname(__file__), "..", "..")
+    data_dir = os.path.join(root, "rust", "tests", "data")
+    os.makedirs(data_dir, exist_ok=True)
+
+    with open(os.path.join(data_dir, "golden_trace.jsonl"), "w") as f:
+        f.write("# golden arrival trace — regenerate expectations with\n"
+                "# python3 python/tools/make_golden_trace.py\n")
+        for at, cls, epochs in TRACE:
+            f.write(json.dumps(
+                {"at_s": at, "class": cls, "epochs": epochs}) + "\n")
+
+    pods, makespan, total_kj = simulate(TRACE)
+    expected = {
+        "engine": "event",
+        "scheduler": "greenpod-topsis/energy-centric",
+        "seed": 42,
+        "pods": pods,
+        "makespan_s": makespan,
+        "total_kj": total_kj,
+    }
+    out = os.path.join(data_dir, "golden_trace.expected.json")
+    with open(out, "w") as f:
+        json.dump(expected, f, indent=1)
+        f.write("\n")
+    waited = sum(1 for p in pods if p["wait_s"] > 0.0)
+    print(f"golden trace: {len(pods)} pods, {waited} queued, "
+          f"makespan {makespan:.3f}s, total {total_kj:.4f} kJ")
+    for p in pods:
+        print(f"  pod {p['pod']:2} {p['class']:7} -> node {p['node']} "
+              f"start {p['start_s']:7.3f} wait {p['wait_s']:6.3f} "
+              f"x{p['attempts']} {p['joules']:9.2f} J")
+
+
+if __name__ == "__main__":
+    main()

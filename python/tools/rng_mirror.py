@@ -1,0 +1,72 @@
+"""Python mirror of rust/src/util/rng.rs (xoshiro256** seeded via
+SplitMix64), for tooling that must reproduce the Rust RNG streams
+exactly — e.g. validating that a seed chosen for a seeded Rust test
+produces the stream the test assumes, without a Rust toolchain.
+
+IEEE-754 doubles are identical across both languages for the operations
+used here, so streams match bit-for-bit. Both sides pin the same
+reference vector for seed 42: `python/tests/test_rng_mirror.py` here,
+`xoshiro_reference_vector_seed42` in rust/src/util/rng.rs — if either
+implementation drifts, its pinned test fails.
+"""
+
+import math
+
+MASK = (1 << 64) - 1
+
+
+class Rng:
+    """xoshiro256** with the same API subset as util::rng::Rng."""
+
+    def __init__(self, seed):
+        sm = seed & MASK
+        s = []
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append((z ^ (z >> 31)) & MASK)
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (self._rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return result
+
+    @staticmethod
+    def _rotl(x, k):
+        return ((x << k) | (x >> (64 - k))) & MASK
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def range_f64(self, lo, hi):
+        return lo + (hi - lo) * self.f64()
+
+    def below(self, n):
+        assert n > 0
+        zone = MASK - (MASK % n)
+        while True:
+            v = self.next_u64()
+            if v < zone:
+                return v % n
+
+    def chance(self, p):
+        return self.f64() < p
+
+    def exponential(self, mean):
+        u = max(self.f64(), 1e-15)
+        return -mean * math.log(u)
+
+    def shuffle(self, xs):
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]

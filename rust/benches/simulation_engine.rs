@@ -41,7 +41,7 @@ fn main() {
     let n_pods = trace.entries.len();
     let engine = SimulationEngine::new(
         &big,
-        SimulationParams { contention_beta: 0.35, seed: 3 },
+        SimulationParams::with_beta_and_seed(0.35, 3),
         &executor,
     );
     b.bench(

@@ -38,6 +38,10 @@ pub enum ApiEvent {
         name: String,
         node: String,
         sched_latency_us: f64,
+        /// Virtual seconds the pod queued before binding (wall wait
+        /// scaled by `time_scale` — the serve-loop counterpart of the
+        /// event engine's `wait_s`).
+        queue_wait_s: f64,
     },
     Unschedulable {
         pod: PodId,
@@ -60,15 +64,20 @@ impl ApiEvent {
     /// JSON-lines rendering (the `serve` subcommand's output format).
     pub fn to_json(&self) -> Json {
         match self {
-            ApiEvent::Bound { pod, name, node, sched_latency_us } => {
-                Json::obj(vec![
-                    ("event", Json::Str("bound".into())),
-                    ("pod", Json::Num(*pod as f64)),
-                    ("name", Json::Str(name.clone())),
-                    ("node", Json::Str(node.clone())),
-                    ("sched_latency_us", Json::Num(*sched_latency_us)),
-                ])
-            }
+            ApiEvent::Bound {
+                pod,
+                name,
+                node,
+                sched_latency_us,
+                queue_wait_s,
+            } => Json::obj(vec![
+                ("event", Json::Str("bound".into())),
+                ("pod", Json::Num(*pod as f64)),
+                ("name", Json::Str(name.clone())),
+                ("node", Json::Str(node.clone())),
+                ("sched_latency_us", Json::Num(*sched_latency_us)),
+                ("queue_wait_s", Json::Num(*queue_wait_s)),
+            ]),
             ApiEvent::Unschedulable { pod, name } => Json::obj(vec![
                 ("event", Json::Str("unschedulable".into())),
                 ("pod", Json::Num(*pod as f64)),
@@ -148,7 +157,9 @@ impl ApiLoop {
         let mut state = ClusterState::from_config(&self.config.cluster);
         let mut meter = EnergyMeter::new();
         let mut timers: BinaryHeap<Reverse<Running>> = BinaryHeap::new();
-        let mut pending: Vec<Pod> = Vec::new();
+        // Pending pods carry their submission instant so Bound events
+        // can report queue wait.
+        let mut pending: Vec<(Pod, Instant)> = Vec::new();
         let mut next_id: PodId = 0;
         let mut seq: u64 = 0;
         let mut completed = 0u64;
@@ -169,12 +180,12 @@ impl ApiLoop {
                 });
                 // Retry pending pods in FIFO order.
                 let mut still = Vec::new();
-                for pod in pending.drain(..) {
+                for (pod, submitted) in pending.drain(..) {
                     if let Some(pod) = self.try_start(
-                        pod, &mut state, &mut meter, &mut timers, &mut seq,
-                        on_event, topsis, default,
+                        pod, submitted, &mut state, &mut meter, &mut timers,
+                        &mut seq, on_event, topsis, default,
                     )? {
-                        still.push(pod);
+                        still.push((pod, submitted));
                     }
                 }
                 pending = still;
@@ -206,11 +217,12 @@ impl ApiLoop {
                         sub.entry.epochs,
                     );
                     next_id += 1;
+                    let submitted = Instant::now();
                     if let Some(pod) = self.try_start(
-                        pod, &mut state, &mut meter, &mut timers, &mut seq,
-                        on_event, topsis, default,
+                        pod, submitted, &mut state, &mut meter, &mut timers,
+                        &mut seq, on_event, topsis, default,
                     )? {
-                        pending.push(pod);
+                        pending.push((pod, submitted));
                     }
                 }
                 Err(RecvTimeoutError::Timeout) => {}
@@ -219,7 +231,7 @@ impl ApiLoop {
         }
 
         let unschedulable = pending.len() as u64;
-        for pod in pending {
+        for (pod, _) in pending {
             on_event(ApiEvent::Unschedulable { pod: pod.id, name: pod.name });
         }
         let total_kj = meter.total_kj(SchedulerKind::Topsis)
@@ -234,6 +246,7 @@ impl ApiLoop {
     fn try_start(
         &self,
         pod: Pod,
+        submitted: Instant,
         state: &mut ClusterState,
         meter: &mut EnergyMeter,
         timers: &mut BinaryHeap<Reverse<Running>>,
@@ -275,6 +288,8 @@ impl ApiLoop {
             name: pod.name.clone(),
             node: node.name.clone(),
             sched_latency_us: decision.latency.as_secs_f64() * 1e6,
+            queue_wait_s: submitted.elapsed().as_secs_f64()
+                * self.time_scale.max(1e-9),
         });
 
         let due = Instant::now()
@@ -405,9 +420,60 @@ mod tests {
             name: "p".into(),
             node: "n".into(),
             sched_latency_us: 12.5,
+            queue_wait_s: 0.25,
         };
         let j = e.to_json().to_string();
         assert!(j.contains("\"event\":\"bound\""), "{j}");
         assert!(j.contains("\"pod\":3"));
+        assert!(j.contains("\"queue_wait_s\":0.25"), "{j}");
+    }
+
+    #[test]
+    fn overload_reports_queue_waits() {
+        // 20 complex pods against 16 complex-sized slots: at least four
+        // must queue behind capacity and report a (virtual-time) wait.
+        let config = Config::paper_default();
+        let mut api =
+            ApiLoop::new(config.clone(), WorkloadExecutor::analytic());
+        api.time_scale = 100_000.0;
+        let (sub_tx, sub_rx) = std::sync::mpsc::channel();
+        for _ in 0..20 {
+            sub_tx
+                .send(PodSubmission {
+                    entry: TraceEntry {
+                        at_s: 0.0,
+                        class: WorkloadClass::Complex,
+                        epochs: 1,
+                    },
+                    scheduler: SchedulerKind::Topsis,
+                })
+                .unwrap();
+        }
+        drop(sub_tx);
+        let mut topsis = GreenPodScheduler::new(
+            Estimator::with_defaults(config.energy.clone()),
+            WeightingScheme::General,
+        );
+        let mut default = DefaultK8sScheduler::new(1);
+        let mut waits = Vec::new();
+        api.run(
+            sub_rx,
+            &mut |e| {
+                if let ApiEvent::Bound { queue_wait_s, .. } = e {
+                    waits.push(queue_wait_s);
+                }
+            },
+            &mut topsis,
+            &mut default,
+        )
+        .unwrap();
+        assert_eq!(waits.len(), 20);
+        assert!(waits.iter().all(|w| w.is_finite() && *w >= 0.0));
+        // Queued pods wait for a completion (≥ ~0.1 ms wall at this
+        // time scale, i.e. ≥ ~10 virtual seconds); 1 s is a safe floor.
+        assert!(
+            waits.iter().any(|&w| w > 1.0),
+            "no pod reported a real queue wait: {waits:?}"
+        );
     }
 }

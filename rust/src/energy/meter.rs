@@ -1,6 +1,18 @@
 //! Energy metering: integrates pod power over execution time and keeps
 //! the per-pod / per-scheduler / per-class ledgers the evaluation
 //! (Table VI, §V.D) reads out.
+//!
+//! Two accounting modes share one ledger:
+//! * **single-shot** ([`EnergyMeter::record`]) — power × duration in
+//!   one multiply, for callers that know the full duration up front
+//!   (the real-time serve loop);
+//! * **interval integration** ([`EnergyMeter::start`] /
+//!   [`EnergyMeter::advance`] / [`EnergyMeter::finish`]) — the
+//!   discrete-event engine advances the meter at every event boundary
+//!   and each running pod's energy accumulates piecewise over the
+//!   intervals, which is what lets future work vary power within a
+//!   pod's lifetime (DVFS, carbon-intensity curves) without touching
+//!   the engine.
 
 use std::collections::HashMap;
 
@@ -23,10 +35,24 @@ pub struct PodEnergy {
     pub joules: f64,
 }
 
+/// A pod currently accumulating energy (interval-integration mode).
+#[derive(Debug, Clone)]
+struct RunningEntry {
+    class: WorkloadClass,
+    scheduler: SchedulerKind,
+    node: usize,
+    watts: f64,
+    started_s: f64,
+    acc_joules: f64,
+}
+
 /// The run-wide energy ledger.
 #[derive(Debug, Clone, Default)]
 pub struct EnergyMeter {
     records: Vec<PodEnergy>,
+    running: HashMap<PodId, RunningEntry>,
+    /// Virtual time up to which all running pods are integrated.
+    last_s: f64,
 }
 
 impl EnergyMeter {
@@ -57,6 +83,76 @@ impl EnergyMeter {
             joules,
         });
         joules
+    }
+
+    /// Begin interval-integrated metering for `pod` at virtual time
+    /// `at_s`. The pod's draw is sampled once at start (contention is
+    /// frozen at bind time — `simulation::contention`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn start(
+        &mut self,
+        cfg: &EnergyModelConfig,
+        pod: PodId,
+        class: WorkloadClass,
+        scheduler: SchedulerKind,
+        node: &Node,
+        share: f64,
+        at_s: f64,
+    ) {
+        self.advance(at_s);
+        let watts = pod_power_watts(cfg, node, share);
+        self.running.insert(
+            pod,
+            RunningEntry {
+                class,
+                scheduler,
+                node: node.id,
+                watts,
+                started_s: at_s,
+                acc_joules: 0.0,
+            },
+        );
+    }
+
+    /// Integrate every running pod's power over `[last, now]` and move
+    /// the integration frontier to `now`. Idempotent at equal times;
+    /// never moves the frontier backwards.
+    pub fn advance(&mut self, now_s: f64) {
+        if now_s <= self.last_s {
+            return;
+        }
+        let dt = now_s - self.last_s;
+        for entry in self.running.values_mut() {
+            entry.acc_joules += entry.watts * dt;
+        }
+        self.last_s = now_s;
+    }
+
+    /// Close the interval integration for `pod` at `at_s`, emit its
+    /// ledger record, and return the accumulated joules.
+    ///
+    /// Panics if the pod was never [`EnergyMeter::start`]ed — the
+    /// engine's bind/complete pairing guarantees it.
+    pub fn finish(&mut self, pod: PodId, at_s: f64) -> f64 {
+        self.advance(at_s);
+        let entry = self
+            .running
+            .remove(&pod)
+            .expect("finish() without matching start()");
+        self.records.push(PodEnergy {
+            pod,
+            class: entry.class,
+            scheduler: entry.scheduler,
+            node: entry.node,
+            duration_s: at_s - entry.started_s,
+            joules: entry.acc_joules,
+        });
+        entry.acc_joules
+    }
+
+    /// Number of pods currently integrating.
+    pub fn running_count(&self) -> usize {
+        self.running.len()
     }
 
     pub fn records(&self) -> &[PodEnergy] {
@@ -171,6 +267,73 @@ mod tests {
         let jc = m.record(&cfg, 2, WorkloadClass::Medium,
                           SchedulerKind::DefaultK8s, &c, 0.25, 20.0);
         assert!(ja < jc, "A-node energy {ja} !< C-node energy {jc}");
+    }
+
+    #[test]
+    fn interval_integration_matches_single_shot() {
+        let cfg = EnergyModelConfig::default();
+        let n = node(0, 0.45);
+
+        let mut single = EnergyMeter::new();
+        let want = single.record(&cfg, 1, WorkloadClass::Medium,
+                                 SchedulerKind::Topsis, &n, 0.25, 12.5);
+
+        // Same pod integrated across several uneven event intervals.
+        let mut meter = EnergyMeter::new();
+        meter.start(&cfg, 1, WorkloadClass::Medium, SchedulerKind::Topsis,
+                    &n, 0.25, 0.0);
+        assert_eq!(meter.running_count(), 1);
+        for t in [0.5, 0.5, 3.75, 9.0] {
+            meter.advance(t); // includes a deliberate same-time repeat
+        }
+        let got = meter.finish(1, 12.5);
+        assert_eq!(meter.running_count(), 0);
+        assert!(
+            (got - want).abs() < 1e-9 * want,
+            "interval {got} vs single-shot {want}"
+        );
+        let rec = &meter.records()[0];
+        assert_eq!(rec.duration_s, 12.5);
+        assert_eq!(rec.joules, got);
+    }
+
+    #[test]
+    fn advance_never_moves_backwards() {
+        let cfg = EnergyModelConfig::default();
+        let n = node(0, 1.0);
+        let mut meter = EnergyMeter::new();
+        meter.start(&cfg, 1, WorkloadClass::Light, SchedulerKind::Topsis,
+                    &n, 0.1, 0.0);
+        meter.advance(10.0);
+        meter.advance(4.0); // ignored: frontier stays at 10
+        let j = meter.finish(1, 10.0);
+        let mut single = EnergyMeter::new();
+        let want = single.record(&cfg, 1, WorkloadClass::Light,
+                                 SchedulerKind::Topsis, &n, 0.1, 10.0);
+        assert!((j - want).abs() < 1e-9 * want);
+    }
+
+    #[test]
+    fn overlapping_pods_integrate_independently() {
+        let cfg = EnergyModelConfig::default();
+        let a = node(0, 0.45);
+        let c = node(1, 1.6);
+        let mut meter = EnergyMeter::new();
+        meter.start(&cfg, 1, WorkloadClass::Light, SchedulerKind::Topsis,
+                    &a, 0.1, 0.0);
+        meter.advance(2.0);
+        meter.start(&cfg, 2, WorkloadClass::Light,
+                    SchedulerKind::DefaultK8s, &c, 0.1, 2.0);
+        meter.advance(5.0);
+        let j1 = meter.finish(1, 5.0);
+        let j2 = meter.finish(2, 8.0);
+        let mut oracle = EnergyMeter::new();
+        let w1 = oracle.record(&cfg, 1, WorkloadClass::Light,
+                               SchedulerKind::Topsis, &a, 0.1, 5.0);
+        let w2 = oracle.record(&cfg, 2, WorkloadClass::Light,
+                               SchedulerKind::DefaultK8s, &c, 0.1, 6.0);
+        assert!((j1 - w1).abs() < 1e-9 * w1);
+        assert!((j2 - w2).abs() < 1e-9 * w2);
     }
 
     #[test]

@@ -70,6 +70,13 @@ pub struct CellResult {
     /// Mean scheduling latency (ms) per scheduler.
     pub default_sched_ms: f64,
     pub topsis_sched_ms: f64,
+    /// Mean per-pod queue wait (s) per scheduler — the latency cost of
+    /// energy-aware placement the event engine surfaces.
+    pub topsis_wait_s: f64,
+    pub default_wait_s: f64,
+    /// p95 per-pod queue wait (s), averaged over replications.
+    pub topsis_wait_p95_s: f64,
+    pub default_wait_p95_s: f64,
     /// Fraction of TOPSIS pods placed on Category-A nodes.
     pub topsis_alloc_efficiency: f64,
     pub default_alloc_efficiency: f64,
@@ -108,6 +115,10 @@ pub fn run_cell(
         topsis_kj: 0.0,
         default_sched_ms: 0.0,
         topsis_sched_ms: 0.0,
+        topsis_wait_s: 0.0,
+        default_wait_s: 0.0,
+        topsis_wait_p95_s: 0.0,
+        default_wait_p95_s: 0.0,
         topsis_alloc_efficiency: 0.0,
         default_alloc_efficiency: 0.0,
         replications: cfg.experiment.replications,
@@ -128,6 +139,12 @@ pub fn run_cell(
             baseline.mean_sched_ms(SchedulerKind::DefaultK8s);
         acc.topsis_sched_ms +=
             treatment.mean_sched_ms(SchedulerKind::Topsis);
+        let t_wait = treatment.queue_wait_summary(SchedulerKind::Topsis);
+        let d_wait = baseline.queue_wait_summary(SchedulerKind::DefaultK8s);
+        acc.topsis_wait_s += t_wait.mean;
+        acc.default_wait_s += d_wait.mean;
+        acc.topsis_wait_p95_s += t_wait.p95;
+        acc.default_wait_p95_s += d_wait.p95;
         acc.topsis_alloc_efficiency +=
             treatment.allocation_efficiency(SchedulerKind::Topsis);
         acc.default_alloc_efficiency +=
@@ -140,6 +157,10 @@ pub fn run_cell(
     acc.topsis_kj /= n;
     acc.default_sched_ms /= n;
     acc.topsis_sched_ms /= n;
+    acc.topsis_wait_s /= n;
+    acc.default_wait_s /= n;
+    acc.topsis_wait_p95_s /= n;
+    acc.default_wait_p95_s /= n;
     acc.topsis_alloc_efficiency /= n;
     acc.default_alloc_efficiency /= n;
     acc
@@ -197,10 +218,10 @@ fn run_pods(
     let mut default = DefaultK8sScheduler::new(seed);
     let engine = SimulationEngine::new(
         cfg,
-        SimulationParams {
-            contention_beta: cfg.experiment.contention_beta,
+        SimulationParams::with_beta_and_seed(
+            cfg.experiment.contention_beta,
             seed,
-        },
+        ),
         executor,
     );
     let mut result = engine.run(pods, &mut topsis, &mut default);
@@ -232,6 +253,11 @@ mod tests {
             cell.optimization_pct()
         );
         assert_eq!(cell.unschedulable, 0);
+        // The event engine reports queue-wait distributions.
+        assert!(cell.topsis_wait_s >= 0.0 && cell.topsis_wait_s.is_finite());
+        assert!(cell.default_wait_s >= 0.0 && cell.default_wait_s.is_finite());
+        assert!(cell.topsis_wait_p95_s >= 0.0);
+        assert!(cell.default_wait_p95_s >= 0.0);
     }
 
     #[test]

@@ -88,6 +88,36 @@ mod tests {
     }
 
     #[test]
+    fn zero_cost_column_finite() {
+        // An all-zero cost column makes every S⁻ zero; the EPS guards
+        // must keep the utility degrees finite (no 0/0).
+        let p = DecisionProblem::new(
+            vec![2.0, 0.0, 1.0, 0.0, 4.0, 0.0],
+            3,
+            vec![Criterion::benefit(1.0), Criterion::cost(1.0)],
+        );
+        let s = copras_scores(&p);
+        assert!(s.iter().all(|x| x.is_finite()), "{s:?}");
+        // Benefit ordering still decides.
+        assert!(s[2] >= s[0] && s[0] >= s[1]);
+    }
+
+    #[test]
+    fn all_equal_matrix_finite_and_tied() {
+        let p = DecisionProblem::new(
+            vec![5.0; 8],
+            4,
+            vec![Criterion::benefit(1.0), Criterion::cost(3.0)],
+        );
+        let s = copras_scores(&p);
+        assert!(s.iter().all(|x| x.is_finite()), "{s:?}");
+        for w in s.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-12, "{s:?}");
+        }
+        assert!((s[0] - 1.0).abs() < 1e-9, "best normalizes to 1: {s:?}");
+    }
+
+    #[test]
     fn scores_positive_and_bounded() {
         let p = DecisionProblem::new(
             vec![3.0, 7.0, 2.0, 4.0, 9.0, 5.0],

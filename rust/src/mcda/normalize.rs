@@ -25,7 +25,11 @@ pub fn vector_normalize(matrix: &[f64], n: usize, c: usize) -> Vec<f64> {
 }
 
 /// Min-max normalization per column into [0, 1] (SAW/VIKOR style).
-/// Constant columns normalize to 0.
+///
+/// Zero-range (all-equal) columns carry no preference information, so
+/// they normalize to the *neutral* value 0.5 — direction-independent,
+/// never NaN. (Normalizing them to 0 would silently bias cost criteria,
+/// whose scores invert to `1 − v`.)
 pub fn minmax_normalize(matrix: &[f64], n: usize, c: usize) -> Vec<f64> {
     let mut mins = vec![f64::INFINITY; c];
     let mut maxs = vec![f64::NEG_INFINITY; c];
@@ -41,7 +45,7 @@ pub fn minmax_normalize(matrix: &[f64], n: usize, c: usize) -> Vec<f64> {
         for col in 0..c {
             let span = maxs[col] - mins[col];
             out[row * c + col] = if span <= EPS {
-                0.0
+                0.5
             } else {
                 (matrix[row * c + col] - mins[col]) / span
             };
@@ -102,10 +106,43 @@ mod tests {
     }
 
     #[test]
-    fn minmax_constant_column_zero() {
+    fn minmax_constant_column_is_neutral() {
         let m = vec![5.0, 5.0, 5.0];
         let r = minmax_normalize(&m, 3, 1);
-        assert!(r.iter().all(|&v| v == 0.0));
+        assert!(r.iter().all(|&v| v == 0.5), "{r:?}");
+    }
+
+    #[test]
+    fn sum_norm_zero_sum_column_finite() {
+        // Entries cancel to a zero column sum; the guard divides by 1
+        // instead of 0, so outputs stay finite.
+        let m = vec![1.0, -1.0, 0.0];
+        let r = sum_normalize(&m, 3, 1);
+        assert!(r.iter().all(|v| v.is_finite()), "{r:?}");
+        assert_eq!(r, m);
+    }
+
+    #[test]
+    fn all_normalizers_finite_on_degenerate_matrices() {
+        // Zero-range, all-zero and identical-row matrices must never
+        // produce NaN/inf from any normalizer.
+        let cases: Vec<(Vec<f64>, usize, usize)> = vec![
+            (vec![3.0; 8], 4, 2),            // all-equal everywhere
+            (vec![0.0; 6], 3, 2),            // all-zero
+            (vec![1.0, 2.0, 1.0, 2.0], 2, 2), // identical rows
+        ];
+        for (m, n, c) in cases {
+            for r in [
+                vector_normalize(&m, n, c),
+                minmax_normalize(&m, n, c),
+                sum_normalize(&m, n, c),
+            ] {
+                assert!(
+                    r.iter().all(|v| v.is_finite()),
+                    "non-finite normalization of {m:?}: {r:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -53,6 +53,49 @@ mod tests {
     }
 
     #[test]
+    fn zero_range_column_is_neutral() {
+        // A constant column contributes the neutral 0.5 to every row
+        // (for both directions), so it cannot flip a ranking or
+        // produce NaN.
+        let base = DecisionProblem::new(
+            vec![0.1, 9.0, 0.9, 1.0, 0.5, 5.0],
+            3,
+            vec![Criterion::cost(1.0), Criterion::benefit(1.0)],
+        );
+        let with_const = DecisionProblem::new(
+            vec![0.1, 9.0, 3.0, 0.9, 1.0, 3.0, 0.5, 5.0, 3.0],
+            3,
+            vec![
+                Criterion::cost(1.0),
+                Criterion::benefit(1.0),
+                Criterion::cost(1.0),
+            ],
+        );
+        let a = saw_scores(&base);
+        let b = saw_scores(&with_const);
+        assert!(b.iter().all(|s| s.is_finite()));
+        // Same ranking in both.
+        let rank = |s: &[f64]| {
+            let mut idx: Vec<usize> = (0..s.len()).collect();
+            idx.sort_by(|&x, &y| s[y].total_cmp(&s[x]));
+            idx
+        };
+        assert_eq!(rank(&a), rank(&b));
+    }
+
+    #[test]
+    fn all_equal_matrix_finite_and_tied() {
+        let p = DecisionProblem::new(
+            vec![2.0; 6],
+            3,
+            vec![Criterion::benefit(1.0), Criterion::cost(1.0)],
+        );
+        let s = saw_scores(&p);
+        assert!(s.iter().all(|x| x.is_finite()), "{s:?}");
+        assert!((s[0] - s[1]).abs() < 1e-12 && (s[1] - s[2]).abs() < 1e-12);
+    }
+
+    #[test]
     fn scores_bounded() {
         let p = DecisionProblem::new(
             vec![3.0, 7.0, 2.0, 4.0, 9.0, 5.0],

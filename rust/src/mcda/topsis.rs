@@ -163,6 +163,60 @@ mod tests {
     }
 
     #[test]
+    fn zero_range_column_is_inert() {
+        // A constant (all-equal) criterion column carries no preference
+        // information: closeness must stay finite and match the same
+        // problem without the column (zero-range guard).
+        let base = DecisionProblem::new(
+            vec![
+                0.2, 5.0, //
+                0.8, 2.0, //
+                0.5, 9.0,
+            ],
+            3,
+            vec![Criterion::cost(1.0), Criterion::benefit(1.0)],
+        );
+        let with_const = DecisionProblem::new(
+            vec![
+                0.2, 5.0, 7.5, //
+                0.8, 2.0, 7.5, //
+                0.5, 9.0, 7.5,
+            ],
+            3,
+            vec![
+                Criterion::cost(1.0),
+                Criterion::benefit(1.0),
+                Criterion::cost(1.0),
+            ],
+        );
+        let a = topsis_closeness(&base);
+        let b = topsis_closeness(&with_const);
+        for (x, y) in a.iter().zip(&b) {
+            assert!(y.is_finite());
+            assert!((x - y).abs() < 1e-12, "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn all_equal_matrix_finite_and_tied() {
+        // Every criterion zero-range: scores must be finite and equal
+        // (NaN here would silently corrupt rankings downstream).
+        let p = DecisionProblem::new(
+            vec![4.0; 12],
+            3,
+            vec![
+                Criterion::cost(0.4),
+                Criterion::benefit(0.3),
+                Criterion::benefit(0.2),
+                Criterion::cost(0.1),
+            ],
+        );
+        let c = topsis_closeness(&p);
+        assert!(c.iter().all(|x| x.is_finite()), "{c:?}");
+        assert!((c[0] - c[1]).abs() < 1e-12 && (c[1] - c[2]).abs() < 1e-12);
+    }
+
+    #[test]
     fn empty_problem_empty_scores() {
         let p = DecisionProblem::new(vec![], 0, vec![Criterion::benefit(1.0)]);
         assert!(topsis_closeness(&p).is_empty());

@@ -115,6 +115,50 @@ mod tests {
     }
 
     #[test]
+    fn zero_range_column_finite() {
+        // A constant column has f* == f⁻; the span guard keeps its
+        // regret contribution at 0 instead of NaN.
+        let p = DecisionProblem::new(
+            vec![0.1, 9.0, 4.0, 0.9, 1.0, 4.0, 0.5, 5.0, 4.0],
+            3,
+            vec![
+                Criterion::cost(1.0),
+                Criterion::benefit(1.0),
+                Criterion::benefit(1.0),
+            ],
+        );
+        let res = vikor_scores(&p, 0.5);
+        for i in 0..3 {
+            assert!(res.s[i].is_finite());
+            assert!(res.r[i].is_finite());
+            assert!(res.q[i].is_finite());
+        }
+        // Dominator still wins.
+        assert!(res.q[0] <= res.q[1] && res.q[0] <= res.q[2]);
+    }
+
+    #[test]
+    fn all_equal_matrix_finite_and_tied() {
+        // Identical alternatives: S/R spans are zero; the Q guard must
+        // yield finite, equal scores rather than 0/0.
+        let p = DecisionProblem::new(
+            vec![3.0; 9],
+            3,
+            vec![
+                Criterion::cost(1.0),
+                Criterion::benefit(1.0),
+                Criterion::benefit(2.0),
+            ],
+        );
+        let res = vikor_scores(&p, 0.5);
+        for q in &res.q {
+            assert!(q.is_finite(), "{:?}", res.q);
+        }
+        assert!((res.q[0] - res.q[1]).abs() < 1e-12);
+        assert!((res.q[1] - res.q[2]).abs() < 1e-12);
+    }
+
+    #[test]
     fn q_in_unit_interval() {
         let res = vikor_scores(&problem(), 0.25);
         for q in res.q {

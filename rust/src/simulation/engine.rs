@@ -1,20 +1,43 @@
-//! The discrete-event engine.
+//! The discrete-event simulation engine.
 //!
-//! Events: pod arrival → scheduling attempt → (bind, execute) →
-//! completion → retry queue. Unschedulable pods wait in a FIFO retry
-//! queue that is re-examined on every completion — the same retry
-//! semantics as kube-scheduler's backoff queue, collapsed to
-//! event-driven time.
+//! Built on the kernel in [`super::event`]: a virtual clock and a
+//! total-ordered event queue over `PodArrival`, `SchedulingCycle`,
+//! `PodCompleted`, `NodeJoined` and `NodeFailed` events. Arriving pods
+//! enter a FIFO pending queue; a `SchedulingCycle` (requested by
+//! arrivals, completions and node joins, at most one outstanding per
+//! timestamp) drains that queue through the owning schedulers — the
+//! same retry semantics as kube-scheduler's backoff queue, collapsed to
+//! event-driven time. Energy is integrated interval-by-interval as the
+//! clock advances (see [`EnergyMeter::advance`]), and per-pod queue
+//! wait, scheduling latency and attempt counts are recorded into
+//! [`RunResult`].
+//!
+//! [`SimulationEngine::run_batch`] is an independent re-implementation
+//! of the same scheduling semantics without the event queue (whole
+//! deployment submitted at t = 0, one synchronous FIFO pass,
+//! completion-driven retries with the kernel's same-timestamp
+//! coalescing) — a differential-testing oracle: with all arrivals at
+//! t = 0 the two modes must produce identical placements
+//! (property-tested in `rust/tests/properties.rs`).
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{HashMap, VecDeque};
 
-use crate::cluster::{ClusterState, Pod, PodPhase};
+use crate::cluster::{ClusterState, NodeId, Pod, PodPhase};
 use crate::config::{Config, SchedulerKind};
 use crate::energy::EnergyMeter;
 use crate::scheduler::Scheduler;
-use crate::simulation::{contention_factor, PodRecord, RunResult};
+use crate::simulation::event::{EventQueue, SimEvent, VirtualClock};
+use crate::simulation::{contention_factor, EventRecord, PodRecord, RunResult};
 use crate::workload::WorkloadExecutor;
+
+/// A scheduled node-membership change (cluster churn injection).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeChange {
+    pub at_s: f64,
+    pub node: NodeId,
+    /// `true` = NodeJoined (Ready), `false` = NodeFailed (NotReady).
+    pub up: bool,
+}
 
 /// Engine-level knobs (beyond what `Config` carries).
 #[derive(Debug, Clone)]
@@ -22,42 +45,93 @@ pub struct SimulationParams {
     pub contention_beta: f64,
     /// Seed for per-pod dataset generation in real-execution mode.
     pub seed: u64,
+    /// Node churn schedule (empty = the fixed paper cluster).
+    pub node_events: Vec<NodeChange>,
 }
 
 impl Default for SimulationParams {
     fn default() -> Self {
-        Self { contention_beta: 0.35, seed: 0 }
+        Self { contention_beta: 0.35, seed: 0, node_events: Vec::new() }
     }
 }
 
-#[derive(Debug, Clone, PartialEq)]
-enum Event {
-    Arrival(usize),
-    Completion(usize),
-}
-
-/// Time-ordered event-queue entry. `seq` makes ordering total and
-/// deterministic for simultaneous events.
-#[derive(Debug, Clone, PartialEq)]
-struct QueuedEvent {
-    at: f64,
-    seq: u64,
-    event: Event,
-}
-
-impl Eq for QueuedEvent {}
-
-impl Ord for QueuedEvent {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.at
-            .total_cmp(&other.at)
-            .then_with(|| self.seq.cmp(&other.seq))
+impl SimulationParams {
+    /// Explicit contention/seed, no node churn — the common case for
+    /// experiments, benches and examples.
+    pub fn with_beta_and_seed(contention_beta: f64, seed: u64) -> Self {
+        Self { contention_beta, seed, node_events: Vec::new() }
     }
 }
 
-impl PartialOrd for QueuedEvent {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
+/// Bookkeeping for a bound, executing pod (indexed by pod *index*).
+struct RunningPod {
+    node: NodeId,
+    start_s: f64,
+}
+
+/// Mutable per-run state threaded through the event handlers.
+struct RunState {
+    state: ClusterState,
+    meter: EnergyMeter,
+    records: Vec<PodRecord>,
+    queue: EventQueue,
+    pending: VecDeque<usize>,
+    running: HashMap<usize, RunningPod>,
+    sched_latency_us: Vec<f64>,
+    attempts: Vec<u32>,
+    events: Vec<EventRecord>,
+    makespan: f64,
+    cycle_queued: bool,
+}
+
+impl RunState {
+    fn new(config: &Config, n_pods: usize) -> Self {
+        Self {
+            state: ClusterState::from_config(&config.cluster),
+            meter: EnergyMeter::new(),
+            records: Vec::with_capacity(n_pods),
+            queue: EventQueue::new(),
+            pending: VecDeque::new(),
+            running: HashMap::new(),
+            sched_latency_us: vec![0.0; n_pods],
+            attempts: vec![0; n_pods],
+            events: Vec::new(),
+            makespan: 0.0,
+            cycle_queued: false,
+        }
+    }
+
+    /// Request a scheduling cycle at `now` unless one is already
+    /// outstanding (any outstanding cycle is at the current timestamp
+    /// and fires before any strictly later event, so the flag is safe).
+    fn request_cycle(&mut self, now: f64) {
+        if !self.cycle_queued {
+            self.queue.push(now, SimEvent::SchedulingCycle);
+            self.cycle_queued = true;
+        }
+    }
+
+    fn into_result(
+        mut self,
+        pods: &mut [Pod],
+        pjrt_fallbacks: u64,
+    ) -> RunResult {
+        let unschedulable = self
+            .pending
+            .iter()
+            .map(|&i| {
+                pods[i].phase = PodPhase::Unschedulable;
+                pods[i].id
+            })
+            .collect();
+        RunResult {
+            records: std::mem::take(&mut self.records),
+            meter: self.meter,
+            unschedulable,
+            makespan_s: self.makespan,
+            pjrt_fallbacks,
+            events: self.events,
+        }
     }
 }
 
@@ -78,118 +152,162 @@ impl<'a> SimulationEngine<'a> {
         Self { config, params, executor }
     }
 
-    /// Run one deployment: `pods` arrive per their `arrival_s`; pods
-    /// tagged `Topsis` are placed by `topsis`, the rest by `default`.
+    /// Event mode: pods arrive per their `arrival_s`; pods tagged
+    /// `Topsis` are placed by `topsis`, the rest by `default`.
     pub fn run(
         &self,
         mut pods: Vec<Pod>,
         topsis: &mut dyn Scheduler,
         default: &mut dyn Scheduler,
     ) -> RunResult {
-        let mut state = ClusterState::from_config(&self.config.cluster);
-        let mut meter = EnergyMeter::new();
-        let mut records: Vec<PodRecord> = Vec::with_capacity(pods.len());
-        let mut queue: BinaryHeap<Reverse<QueuedEvent>> = BinaryHeap::new();
-        let mut seq: u64 = 0;
-        // Pods awaiting a schedulable moment (FIFO), by index into pods.
-        let mut pending: Vec<usize> = Vec::new();
-        // Cumulative scheduling latency per pod (µs), across retries.
-        let mut sched_latency_us: Vec<f64> = vec![0.0; pods.len()];
-        let mut makespan: f64 = 0.0;
+        let mut rs = RunState::new(self.config, pods.len());
+        let mut clock = VirtualClock::default();
 
+        // Seed the queue: arrivals first (insertion order = pod order),
+        // then the churn schedule — so at equal timestamps arrivals
+        // precede membership changes, deterministically.
         for (i, p) in pods.iter().enumerate() {
-            queue.push(Reverse(QueuedEvent {
-                at: p.arrival_s,
-                seq,
-                event: Event::Arrival(i),
-            }));
-            seq += 1;
+            rs.queue.push(p.arrival_s, SimEvent::PodArrival { pod: i });
+        }
+        for ch in &self.params.node_events {
+            let ev = if ch.up {
+                SimEvent::NodeJoined { node: ch.node }
+            } else {
+                SimEvent::NodeFailed { node: ch.node }
+            };
+            rs.queue.push(ch.at_s, ev);
         }
 
-        while let Some(Reverse(QueuedEvent { at: now, event, .. })) =
-            queue.pop()
-        {
-            match event {
-                Event::Arrival(i) => {
-                    if !self.try_place(
-                        i, now, &mut pods, &mut state, &mut meter,
-                        &mut records, &mut sched_latency_us, &mut queue,
-                        &mut seq, topsis, default,
-                    ) {
-                        pending.push(i);
+        while let Some(ev) = rs.queue.pop() {
+            let now = clock.advance_to(ev.at);
+            rs.meter.advance(now);
+            rs.events.push(EventRecord { at_s: now, kind: ev.event.kind() });
+            match ev.event {
+                SimEvent::PodArrival { pod } => {
+                    rs.pending.push_back(pod);
+                    rs.request_cycle(now);
+                }
+                SimEvent::SchedulingCycle => {
+                    rs.cycle_queued = false;
+                    self.drain_pending(&mut rs, now, &mut pods, topsis, default);
+                }
+                SimEvent::PodCompleted { pod } => {
+                    self.complete(&mut rs, now, &mut pods, pod);
+                    if !rs.pending.is_empty() {
+                        rs.request_cycle(now);
                     }
                 }
-                Event::Completion(i) => {
-                    makespan = makespan.max(now);
-                    state
-                        .release(pods[i].id, now)
-                        .expect("completion of bound pod");
-                    pods[i].phase = PodPhase::Succeeded;
-                    // Retry pending pods in FIFO order; stop early is not
-                    // possible (a later small pod may fit where an
-                    // earlier big one does not), so scan all.
-                    let mut still_pending = Vec::new();
-                    for &j in &pending {
-                        if !self.try_place(
-                            j, now, &mut pods, &mut state, &mut meter,
-                            &mut records, &mut sched_latency_us, &mut queue,
-                            &mut seq, topsis, default,
-                        ) {
-                            still_pending.push(j);
-                        }
+                SimEvent::NodeJoined { node } => {
+                    rs.state.set_ready(node, true, now);
+                    if !rs.pending.is_empty() {
+                        rs.request_cycle(now);
                     }
-                    pending = still_pending;
+                }
+                SimEvent::NodeFailed { node } => {
+                    rs.state.set_ready(node, false, now);
                 }
             }
         }
 
-        let unschedulable = pending
-            .iter()
-            .map(|&i| {
-                pods[i].phase = PodPhase::Unschedulable;
-                pods[i].id
-            })
-            .collect();
+        rs.into_result(&mut pods, 0)
+    }
 
-        RunResult {
-            records,
-            meter,
-            unschedulable,
-            makespan_s: makespan,
-            pjrt_fallbacks: 0,
+    /// Batch mode (differential oracle, and the paper's burst
+    /// deployment without arrival dynamics): every pod is submitted at
+    /// t = 0 regardless of `arrival_s`, placed in one synchronous FIFO
+    /// pass; completions then release capacity chronologically —
+    /// coalescing equal timestamps exactly like the event kernel's
+    /// single outstanding cycle — each group retrying the pending
+    /// queue once.
+    pub fn run_batch(
+        &self,
+        mut pods: Vec<Pod>,
+        topsis: &mut dyn Scheduler,
+        default: &mut dyn Scheduler,
+    ) -> RunResult {
+        for p in &mut pods {
+            p.arrival_s = 0.0;
+        }
+        let mut rs = RunState::new(self.config, pods.len());
+
+        // Synchronous placement pass at t = 0.
+        rs.events.push(EventRecord { at_s: 0.0, kind: "batch-submit" });
+        for i in 0..pods.len() {
+            if !self.try_place(&mut rs, i, 0.0, &mut pods, topsis, default) {
+                rs.pending.push_back(i);
+            }
+        }
+
+        // Completion-driven retries (the queue holds only completions).
+        // Same-time completions are coalesced before the retry pass —
+        // mirroring the event kernel, where one SchedulingCycle fires
+        // after every completion at a given timestamp.
+        while let Some(first) = rs.queue.pop() {
+            let now = first.at;
+            rs.meter.advance(now);
+            let mut group = vec![first];
+            while rs.queue.peek().is_some_and(|e| e.at == now) {
+                group.push(rs.queue.pop().expect("peeked"));
+            }
+            for ev in group {
+                rs.events
+                    .push(EventRecord { at_s: now, kind: ev.event.kind() });
+                let SimEvent::PodCompleted { pod } = ev.event else {
+                    unreachable!("batch mode queues only completions");
+                };
+                self.complete(&mut rs, now, &mut pods, pod);
+            }
+            self.drain_pending(&mut rs, now, &mut pods, topsis, default);
+        }
+
+        rs.into_result(&mut pods, 0)
+    }
+
+    /// One scheduling cycle: try every pending pod once, FIFO. A later
+    /// small pod may fit where an earlier big one does not, so the
+    /// whole queue is scanned; failures keep their queue order.
+    fn drain_pending(
+        &self,
+        rs: &mut RunState,
+        now: f64,
+        pods: &mut [Pod],
+        topsis: &mut dyn Scheduler,
+        default: &mut dyn Scheduler,
+    ) {
+        let n = rs.pending.len();
+        for _ in 0..n {
+            let i = rs.pending.pop_front().expect("pending non-empty");
+            if !self.try_place(rs, i, now, pods, topsis, default) {
+                rs.pending.push_back(i);
+            }
         }
     }
 
     /// Attempt to place and start pod `i` at time `now`. Returns false
     /// if it remains pending.
-    #[allow(clippy::too_many_arguments)]
     fn try_place(
         &self,
+        rs: &mut RunState,
         i: usize,
         now: f64,
         pods: &mut [Pod],
-        state: &mut ClusterState,
-        meter: &mut EnergyMeter,
-        records: &mut Vec<PodRecord>,
-        sched_latency_us: &mut [f64],
-        queue: &mut BinaryHeap<Reverse<QueuedEvent>>,
-        seq: &mut u64,
         topsis: &mut dyn Scheduler,
         default: &mut dyn Scheduler,
     ) -> bool {
         let decision = match pods[i].scheduler {
-            SchedulerKind::Topsis => topsis.schedule(state, &pods[i]),
-            SchedulerKind::DefaultK8s => default.schedule(state, &pods[i]),
+            SchedulerKind::Topsis => topsis.schedule(&rs.state, &pods[i]),
+            SchedulerKind::DefaultK8s => default.schedule(&rs.state, &pods[i]),
         };
-        sched_latency_us[i] += decision.latency.as_secs_f64() * 1e6;
+        rs.sched_latency_us[i] += decision.latency.as_secs_f64() * 1e6;
+        rs.attempts[i] += 1;
         let Some(node_id) = decision.node else {
             return false;
         };
 
-        state.bind(&pods[i], node_id, now).expect("scheduler chose fit");
+        rs.state.bind(&pods[i], node_id, now).expect("scheduler chose fit");
         pods[i].phase = PodPhase::Running;
 
-        let node = state.node(node_id).clone();
+        let node = rs.state.node(node_id).clone();
         let outcome = self
             .executor
             .execute(&pods[i], &node, self.params.seed ^ pods[i].id)
@@ -198,41 +316,55 @@ impl<'a> SimulationEngine<'a> {
             pods[i].requests.cpu_millis as f64 / node.cpu_millis as f64;
         let factor = contention_factor(
             self.params.contention_beta,
-            state.cpu_utilization(node_id),
+            rs.state.cpu_utilization(node_id),
             share,
         );
         let duration = outcome.base_secs * factor;
-        let joules = meter.record(
+
+        rs.meter.start(
             &self.config.energy,
             pods[i].id,
             pods[i].class,
             pods[i].scheduler,
             &node,
             share,
-            duration,
+            now,
         );
+        rs.running.insert(i, RunningPod { node: node_id, start_s: now });
+        rs.queue.push(now + duration, SimEvent::PodCompleted { pod: i });
+        true
+    }
 
-        records.push(PodRecord {
+    /// Handle a completion: release the reservation, close the energy
+    /// interval, and emit the pod's lifecycle record.
+    fn complete(
+        &self,
+        rs: &mut RunState,
+        now: f64,
+        pods: &mut [Pod],
+        i: usize,
+    ) {
+        rs.makespan = rs.makespan.max(now);
+        rs.state
+            .release(pods[i].id, now)
+            .expect("completion of bound pod");
+        pods[i].phase = PodPhase::Succeeded;
+        let run = rs.running.remove(&i).expect("completion of running pod");
+        let joules = rs.meter.finish(pods[i].id, now);
+        rs.records.push(PodRecord {
             pod: pods[i].id,
             class: pods[i].class,
             scheduler: pods[i].scheduler,
-            node: node_id,
-            node_category: node.category,
+            node: run.node,
+            node_category: rs.state.node(run.node).category,
             arrival_s: pods[i].arrival_s,
-            start_s: now,
-            finish_s: now + duration,
-            sched_latency_us: sched_latency_us[i],
+            start_s: run.start_s,
+            finish_s: now,
+            sched_latency_us: rs.sched_latency_us[i],
+            attempts: rs.attempts[i],
             joules,
-            wait_s: now - pods[i].arrival_s,
+            wait_s: run.start_s - pods[i].arrival_s,
         });
-
-        queue.push(Reverse(QueuedEvent {
-            at: now + duration,
-            seq: *seq,
-            event: Event::Completion(i),
-        }));
-        *seq += 1;
-        true
     }
 }
 
@@ -250,7 +382,7 @@ mod tests {
         let executor = WorkloadExecutor::analytic();
         let engine = SimulationEngine::new(
             &config,
-            SimulationParams { contention_beta: 0.35, seed },
+            SimulationParams::with_beta_and_seed(0.35, seed),
             &executor,
         );
         let pods = generate_pods(level, &config.experiment, seed).pods;
@@ -272,6 +404,7 @@ mod tests {
             assert!(rec.finish_s > rec.start_s);
             assert!(rec.start_s >= rec.arrival_s);
             assert!(rec.joules > 0.0);
+            assert!(rec.attempts >= 1);
         }
     }
 
@@ -296,6 +429,7 @@ mod tests {
             assert_eq!(x.finish_s, y.finish_s);
             assert_eq!(x.joules, y.joules);
         }
+        assert_eq!(a.events.len(), b.events.len());
     }
 
     #[test]
@@ -313,5 +447,96 @@ mod tests {
             topsis_kj < default_kj,
             "TOPSIS {topsis_kj} !< default {default_kj}"
         );
+    }
+
+    #[test]
+    fn event_log_is_time_ordered_and_complete() {
+        let r = run_level(CompetitionLevel::Medium, 3);
+        assert!(!r.events.is_empty());
+        for w in r.events.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s, "{w:?}");
+        }
+        let arrivals =
+            r.events.iter().filter(|e| e.kind == "pod-arrival").count();
+        let completions =
+            r.events.iter().filter(|e| e.kind == "pod-completed").count();
+        assert_eq!(arrivals, CompetitionLevel::Medium.total_pods());
+        assert_eq!(completions, r.records.len());
+    }
+
+    #[test]
+    fn node_failure_defers_placement_until_rejoin() {
+        // Kill every node before the pods arrive; nothing can place
+        // until the nodes rejoin, so queue waits must cover the outage.
+        let config = Config::paper_default();
+        let executor = WorkloadExecutor::analytic();
+        let n_nodes = config.cluster.total_nodes();
+        let mut node_events: Vec<NodeChange> = (0..n_nodes)
+            .map(|node| NodeChange { at_s: 0.0, node, up: false })
+            .collect();
+        node_events.extend(
+            (0..n_nodes).map(|node| NodeChange { at_s: 30.0, node, up: true }),
+        );
+        let engine = SimulationEngine::new(
+            &config,
+            SimulationParams { contention_beta: 0.35, seed: 1, node_events },
+            &executor,
+        );
+        let pods =
+            generate_pods(CompetitionLevel::Low, &config.experiment, 1).pods;
+        let mut topsis = GreenPodScheduler::new(
+            Estimator::with_defaults(config.energy.clone()),
+            WeightingScheme::EnergyCentric,
+        );
+        let mut default = DefaultK8sScheduler::new(1);
+        let r = engine.run(pods, &mut topsis, &mut default);
+        assert_eq!(r.records.len(), 8);
+        assert!(r.unschedulable.is_empty());
+        for rec in &r.records {
+            assert!(
+                rec.start_s >= 30.0,
+                "pod {} started at {} during the outage",
+                rec.pod,
+                rec.start_s
+            );
+            assert!(rec.wait_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn batch_mode_matches_event_mode_at_t0() {
+        let config = Config::paper_default();
+        let executor = WorkloadExecutor::analytic();
+        let engine = SimulationEngine::new(
+            &config,
+            SimulationParams::with_beta_and_seed(0.35, 5),
+            &executor,
+        );
+        let mut pods =
+            generate_pods(CompetitionLevel::High, &config.experiment, 5).pods;
+        for p in &mut pods {
+            p.arrival_s = 0.0;
+        }
+        let mk = || {
+            (
+                GreenPodScheduler::new(
+                    Estimator::with_defaults(config.energy.clone()),
+                    WeightingScheme::EnergyCentric,
+                ),
+                DefaultK8sScheduler::new(5),
+            )
+        };
+        let (mut t1, mut d1) = mk();
+        let (mut t2, mut d2) = mk();
+        let ev = engine.run(pods.clone(), &mut t1, &mut d1);
+        let ba = engine.run_batch(pods, &mut t2, &mut d2);
+        assert_eq!(ev.records.len(), ba.records.len());
+        for (x, y) in ev.records.iter().zip(&ba.records) {
+            assert_eq!(x.pod, y.pod);
+            assert_eq!(x.node, y.node);
+            assert_eq!(x.start_s, y.start_s);
+            assert_eq!(x.finish_s, y.finish_s);
+            assert!((x.joules - y.joules).abs() <= 1e-9 * x.joules.abs());
+        }
     }
 }

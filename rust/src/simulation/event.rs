@@ -1,0 +1,194 @@
+//! The discrete-event kernel: a virtual clock plus a total-ordered
+//! event queue (DESIGN.md §"Event kernel").
+//!
+//! Determinism contract:
+//! * events are ordered by `(time, seq)` where `seq` is the insertion
+//!   counter — simultaneous events fire in insertion order, so a run is
+//!   a pure function of `(pods, params, scheduler seeds)`;
+//! * the clock never moves backwards: `VirtualClock::advance_to`
+//!   is monotone (and debug-asserts it);
+//! * all randomness lives in the workload generator and the schedulers
+//!   (seeded xoshiro256**, `util::rng`) — the kernel itself is
+//!   deterministic by construction.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::cluster::NodeId;
+
+/// Kernel event types. Pods are addressed by their index into the
+/// run's pod vector (dense, stable for the whole run).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimEvent {
+    /// A pod enters the scheduling queue.
+    PodArrival { pod: usize },
+    /// Drain the pending-pod queue (FIFO) through the schedulers.
+    /// Requested by arrivals, completions, and node joins; at most one
+    /// is outstanding per timestamp.
+    SchedulingCycle,
+    /// A running pod finished; its reservation is released.
+    PodCompleted { pod: usize },
+    /// Node (re)joins: becomes Ready and schedulable.
+    NodeJoined { node: NodeId },
+    /// Node fails: NotReady. Running pods keep their reservation
+    /// (kube semantics: NotReady gates *new* bindings).
+    NodeFailed { node: NodeId },
+}
+
+impl SimEvent {
+    /// Stable label for event logs and reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SimEvent::PodArrival { .. } => "pod-arrival",
+            SimEvent::SchedulingCycle => "scheduling-cycle",
+            SimEvent::PodCompleted { .. } => "pod-completed",
+            SimEvent::NodeJoined { .. } => "node-joined",
+            SimEvent::NodeFailed { .. } => "node-failed",
+        }
+    }
+}
+
+/// A queued event: fire time + total-order tie-break.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduledEvent {
+    pub at: f64,
+    pub seq: u64,
+    pub event: SimEvent,
+}
+
+impl Eq for ScheduledEvent {}
+
+impl Ord for ScheduledEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at
+            .total_cmp(&other.at)
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for ScheduledEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Monotone virtual clock (simulated seconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance to `t` (returns the new now). Time never moves
+    /// backwards; the min-heap pop order guarantees `t >= now` up to
+    /// total_cmp ties, which this asserts in debug builds.
+    pub fn advance_to(&mut self, t: f64) -> f64 {
+        debug_assert!(
+            t >= self.now,
+            "clock moved backwards: {} -> {t}",
+            self.now
+        );
+        if t > self.now {
+            self.now = t;
+        }
+        self.now
+    }
+}
+
+/// Deterministic min-queue of [`ScheduledEvent`]s.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<ScheduledEvent>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue `event` at time `at`; insertion order breaks ties.
+    pub fn push(&mut self, at: f64, event: SimEvent) {
+        self.heap.push(Reverse(ScheduledEvent { at, seq: self.seq, event }));
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event (lowest `(at, seq)`).
+    pub fn pop(&mut self) -> Option<ScheduledEvent> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+
+    /// Peek at the earliest event without removing it.
+    pub fn peek(&self) -> Option<&ScheduledEvent> {
+        self.heap.peek().map(|Reverse(e)| e)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_then_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(2.0, SimEvent::SchedulingCycle);
+        q.push(1.0, SimEvent::PodArrival { pod: 0 });
+        q.push(1.0, SimEvent::PodArrival { pod: 1 });
+        q.push(0.5, SimEvent::NodeFailed { node: 3 });
+        let order: Vec<(f64, SimEvent)> =
+            std::iter::from_fn(|| q.pop().map(|e| (e.at, e.event))).collect();
+        assert_eq!(
+            order,
+            vec![
+                (0.5, SimEvent::NodeFailed { node: 3 }),
+                (1.0, SimEvent::PodArrival { pod: 0 }),
+                (1.0, SimEvent::PodArrival { pod: 1 }),
+                (2.0, SimEvent::SchedulingCycle),
+            ]
+        );
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn seq_breaks_exact_ties_fifo() {
+        let mut q = EventQueue::new();
+        for pod in 0..100 {
+            q.push(7.25, SimEvent::PodArrival { pod });
+        }
+        for pod in 0..100 {
+            let e = q.pop().unwrap();
+            assert_eq!(e.event, SimEvent::PodArrival { pod });
+        }
+    }
+
+    #[test]
+    fn clock_is_monotone() {
+        let mut c = VirtualClock::default();
+        assert_eq!(c.now(), 0.0);
+        assert_eq!(c.advance_to(1.5), 1.5);
+        assert_eq!(c.advance_to(1.5), 1.5); // same-time events are fine
+        assert_eq!(c.advance_to(3.0), 3.0);
+        assert_eq!(c.now(), 3.0);
+    }
+
+    #[test]
+    fn event_kinds_are_stable_labels() {
+        assert_eq!(SimEvent::PodArrival { pod: 0 }.kind(), "pod-arrival");
+        assert_eq!(SimEvent::SchedulingCycle.kind(), "scheduling-cycle");
+        assert_eq!(SimEvent::PodCompleted { pod: 0 }.kind(), "pod-completed");
+        assert_eq!(SimEvent::NodeJoined { node: 0 }.kind(), "node-joined");
+        assert_eq!(SimEvent::NodeFailed { node: 0 }.kind(), "node-failed");
+    }
+}

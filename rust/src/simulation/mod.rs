@@ -7,9 +7,11 @@
 //! clock with seeded randomness.
 
 mod contention;
+pub mod event;
 mod engine;
 mod results;
 
 pub use contention::contention_factor;
-pub use engine::{SimulationEngine, SimulationParams};
-pub use results::{PodRecord, RunResult};
+pub use engine::{NodeChange, SimulationEngine, SimulationParams};
+pub use event::{EventQueue, ScheduledEvent, SimEvent, VirtualClock};
+pub use results::{EventRecord, PodRecord, RunResult};

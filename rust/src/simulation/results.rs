@@ -3,10 +3,10 @@
 
 use std::collections::HashMap;
 
-
 use crate::cluster::{NodeCategory, PodId};
 use crate::config::SchedulerKind;
 use crate::energy::EnergyMeter;
+use crate::metrics::Summary;
 use crate::workload::WorkloadClass;
 
 /// Lifecycle record of one pod.
@@ -20,12 +20,22 @@ pub struct PodRecord {
     pub arrival_s: f64,
     pub start_s: f64,
     pub finish_s: f64,
-    /// Scheduling decision latency (µs).
+    /// Cumulative scheduling decision latency across attempts (µs).
     pub sched_latency_us: f64,
+    /// Scheduling attempts until bound (1 = placed on first try).
+    pub attempts: u32,
     /// Attributed energy (J).
     pub joules: f64,
-    /// Queueing delay before binding (s).
+    /// Queueing delay between arrival and binding (s).
     pub wait_s: f64,
+}
+
+/// One kernel event, for audit/debug and the monotonicity property
+/// tests (`at_s` is non-decreasing over the log).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventRecord {
+    pub at_s: f64,
+    pub kind: &'static str,
 }
 
 /// The outcome of one simulated run.
@@ -39,6 +49,8 @@ pub struct RunResult {
     pub makespan_s: f64,
     /// PJRT scoring fallbacks observed (failure injection).
     pub pjrt_fallbacks: u64,
+    /// Time-ordered kernel event log.
+    pub events: Vec<EventRecord>,
 }
 
 impl RunResult {
@@ -61,6 +73,41 @@ impl RunResult {
         } else {
             l.iter().sum::<f64>() / l.len() as f64
         }
+    }
+
+    /// Per-pod queue-wait distribution (s) for one scheduler — the
+    /// "slight scheduling latency" cost the paper trades for energy.
+    pub fn queue_wait_summary(&self, kind: SchedulerKind) -> Summary {
+        let w: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.scheduler == kind)
+            .map(|r| r.wait_s)
+            .collect();
+        Summary::of(&w)
+    }
+
+    /// Per-pod cumulative scheduling-latency distribution (ms).
+    pub fn sched_latency_summary_ms(&self, kind: SchedulerKind) -> Summary {
+        let l: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.scheduler == kind)
+            .map(|r| r.sched_latency_us / 1000.0)
+            .collect();
+        Summary::of(&l)
+    }
+
+    /// Mean scheduling attempts per placed pod (1.0 = never queued
+    /// behind capacity).
+    pub fn mean_attempts(&self, kind: SchedulerKind) -> f64 {
+        let a: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.scheduler == kind)
+            .map(|r| r.attempts as f64)
+            .collect();
+        Summary::of(&a).mean
     }
 
     /// Allocation histogram per node category for one scheduler (§V.D).

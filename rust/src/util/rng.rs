@@ -116,6 +116,20 @@ mod tests {
     }
 
     #[test]
+    fn xoshiro_reference_vector_seed42() {
+        // Cross-language pin: python/tests/test_rng_mirror.py asserts
+        // the same constants for python/tools/rng_mirror.py. If either
+        // implementation drifts, its side of this pair fails.
+        let mut r = Rng::seed_from_u64(42);
+        assert_eq!(r.next_u64(), 0x15780B2E0C2EC716);
+        assert_eq!(r.next_u64(), 0x6104D9866D113A7E);
+        assert_eq!(r.next_u64(), 0xAE17533239E499A1);
+        assert_eq!(r.next_u64(), 0xECB8AD4703B360A1);
+        assert_eq!(r.f64(), 0.9918039142821028);
+        assert_eq!(r.f64(), 0.7697394604342425);
+    }
+
+    #[test]
     fn f64_in_unit_interval_and_roughly_uniform() {
         let mut r = Rng::seed_from_u64(1);
         let n = 20_000;

@@ -1,12 +1,82 @@
-//! Pod-set generation for a competition level (paper Table V).
+//! Pod-set generation for a competition level (paper Table V), plus
+//! the arrival processes that lay the set out on the virtual clock.
 //!
-//! Seeded and deterministic: the same `(level, config, seed)` always
-//! yields the same pods in the same arrival order, so experiment cells
-//! are replicable and TOPSIS/default halves face identical workloads.
+//! Seeded and deterministic: the same `(level, config, seed, process)`
+//! always yields the same pods in the same arrival order, so experiment
+//! cells are replicable and TOPSIS/default halves face identical
+//! workloads.
 
 use crate::cluster::Pod;
 use crate::config::{CompetitionLevel, ExperimentConfig, SchedulerKind};
 use crate::util::rng::Rng;
+
+/// How a generated pod set's arrival times are laid out — the
+/// scenario-diversity axis of the discrete-event engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// The paper's deployment shape: a near-burst submission with
+    /// exponential inter-arrival jitter of mean `mean_gap_s` (models
+    /// kubectl submission spacing). `mean_gap_s = 0` submits everything
+    /// at t = 0 (the batch-equivalence fixture).
+    Jittered { mean_gap_s: f64 },
+    /// Open-loop Poisson arrivals at `rate_per_s` — the steady-state
+    /// AIoT stream of the motivating scenario.
+    Poisson { rate_per_s: f64 },
+    /// Bursts of `burst_size` arrivals spaced `intra_gap_s` apart,
+    /// with exponential gaps of mean `burst_gap_s` between the end of
+    /// one burst and the start of the next — sensor fleets phoning
+    /// home on synchronized timers.
+    Bursty {
+        burst_size: usize,
+        burst_gap_s: f64,
+        intra_gap_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Sample `n` non-decreasing arrival times (seeded via `rng`).
+    pub fn arrival_times(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            ArrivalProcess::Jittered { mean_gap_s } => {
+                let mut t = 0.0;
+                for _ in 0..n {
+                    t += rng.exponential(mean_gap_s);
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Poisson { rate_per_s } => {
+                assert!(rate_per_s > 0.0, "Poisson rate must be positive");
+                let mut t = 0.0;
+                for _ in 0..n {
+                    t += rng.exponential(1.0 / rate_per_s);
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Bursty {
+                burst_size,
+                burst_gap_s,
+                intra_gap_s,
+            } => {
+                let burst = burst_size.max(1);
+                let mut t = 0.0;
+                while out.len() < n {
+                    t += rng.exponential(burst_gap_s);
+                    for k in 0..burst {
+                        if out.len() == n {
+                            break;
+                        }
+                        out.push(t + k as f64 * intra_gap_s);
+                    }
+                    // Next burst gap starts at the end of this burst so
+                    // the sequence stays monotone.
+                    t += (burst - 1) as f64 * intra_gap_s;
+                }
+            }
+        }
+        out
+    }
+}
 
 /// The generated pod set plus bookkeeping for assertions/reports.
 #[derive(Debug, Clone)]
@@ -16,17 +86,33 @@ pub struct GeneratedSet {
     pub seed: u64,
 }
 
-/// Generate the Table V pod mix for `level`.
-///
-/// Arrival times get a small exponential jitter (`arrival_jitter_s`
-/// mean) modeling kubectl submission spacing; the interleaving of
-/// TOPSIS- and default-owned pods is shuffled (seeded) so neither
-/// scheduler systematically goes first — mirroring the paper's
-/// concurrent deployment of both pod groups.
+/// Generate the Table V pod mix for `level` with the paper's arrival
+/// shape (exponential jitter of mean `cfg.arrival_jitter_s`).
 pub fn generate_pods(
     level: CompetitionLevel,
     cfg: &ExperimentConfig,
     seed: u64,
+) -> GeneratedSet {
+    generate_pods_with(
+        level,
+        cfg,
+        seed,
+        ArrivalProcess::Jittered { mean_gap_s: cfg.arrival_jitter_s },
+    )
+}
+
+/// Generate the Table V pod mix for `level` under an explicit arrival
+/// process.
+///
+/// The interleaving of TOPSIS- and default-owned pods is shuffled
+/// (seeded) so neither scheduler systematically goes first — mirroring
+/// the paper's concurrent deployment of both pod groups — and arrival
+/// times are then assigned in shuffled order.
+pub fn generate_pods_with(
+    level: CompetitionLevel,
+    cfg: &ExperimentConfig,
+    seed: u64,
+    process: ArrivalProcess,
 ) -> GeneratedSet {
     let mut rng = Rng::seed_from_u64(seed);
     let mut pods = Vec::with_capacity(level.total_pods());
@@ -50,12 +136,10 @@ pub fn generate_pods(
         }
     }
 
-    // Seeded Fisher–Yates shuffle, then monotone jittered arrivals.
+    // Seeded Fisher–Yates shuffle, then monotone arrival assignment.
     rng.shuffle(&mut pods);
-    let mut t = 0.0_f64;
-    for p in &mut pods {
-        // Exponential inter-arrival with mean `arrival_jitter_s`.
-        t += rng.exponential(cfg.arrival_jitter_s);
+    let times = process.arrival_times(pods.len(), &mut rng);
+    for (p, t) in pods.iter_mut().zip(times) {
         p.arrival_s = t;
     }
 
@@ -140,5 +224,85 @@ mod tests {
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), set.pods.len());
+    }
+
+    #[test]
+    fn all_processes_yield_monotone_times() {
+        let processes = [
+            ArrivalProcess::Jittered { mean_gap_s: 0.25 },
+            ArrivalProcess::Poisson { rate_per_s: 2.0 },
+            ArrivalProcess::Bursty {
+                burst_size: 4,
+                burst_gap_s: 5.0,
+                intra_gap_s: 0.05,
+            },
+        ];
+        for process in processes {
+            let mut rng = Rng::seed_from_u64(11);
+            let times = process.arrival_times(200, &mut rng);
+            assert_eq!(times.len(), 200);
+            for w in times.windows(2) {
+                assert!(
+                    w[1] >= w[0],
+                    "{process:?}: {} then {}",
+                    w[0],
+                    w[1]
+                );
+            }
+            assert!(times.iter().all(|t| t.is_finite() && *t >= 0.0));
+        }
+    }
+
+    #[test]
+    fn zero_jitter_is_a_batch_at_t0() {
+        let mut rng = Rng::seed_from_u64(1);
+        let times = ArrivalProcess::Jittered { mean_gap_s: 0.0 }
+            .arrival_times(10, &mut rng);
+        assert!(times.iter().all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn poisson_rate_shapes_mean_gap() {
+        let mut rng = Rng::seed_from_u64(2);
+        let times = ArrivalProcess::Poisson { rate_per_s: 4.0 }
+            .arrival_times(4000, &mut rng);
+        let mean_gap = times.last().unwrap() / 4000.0;
+        assert!((mean_gap - 0.25).abs() < 0.02, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn bursty_groups_arrivals() {
+        let mut rng = Rng::seed_from_u64(3);
+        let times = ArrivalProcess::Bursty {
+            burst_size: 5,
+            burst_gap_s: 60.0,
+            intra_gap_s: 0.01,
+        }
+        .arrival_times(50, &mut rng);
+        // Within a burst gaps are 0.01; between bursts they are ~60 —
+        // so sorted gaps split sharply.
+        let gaps: Vec<f64> =
+            times.windows(2).map(|w| w[1] - w[0]).collect();
+        let small = gaps.iter().filter(|&&g| g < 1.0).count();
+        let large = gaps.iter().filter(|&&g| g >= 1.0).count();
+        assert_eq!(small, 40, "intra-burst gaps");
+        assert_eq!(large, 9, "inter-burst gaps");
+    }
+
+    #[test]
+    fn generate_with_bursty_process_is_deterministic() {
+        let cfg = ExperimentConfig::default();
+        let process = ArrivalProcess::Bursty {
+            burst_size: 3,
+            burst_gap_s: 10.0,
+            intra_gap_s: 0.0,
+        };
+        let a = generate_pods_with(CompetitionLevel::High, &cfg, 9, process);
+        let b = generate_pods_with(CompetitionLevel::High, &cfg, 9, process);
+        assert_eq!(a.pods.len(), 22);
+        for (x, y) in a.pods.iter().zip(&b.pods) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival_s, y.arrival_s);
+        }
     }
 }

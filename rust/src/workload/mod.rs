@@ -8,6 +8,8 @@ mod spec;
 mod trace;
 
 pub use executor::{ExecutionOutcome, WorkloadExecutor};
-pub use generator::{generate_pods, GeneratedSet};
+pub use generator::{
+    generate_pods, generate_pods_with, ArrivalProcess, GeneratedSet,
+};
 pub use spec::WorkloadClass;
 pub use trace::{ArrivalTrace, TraceEntry, TraceSpec};

@@ -82,12 +82,26 @@ pub struct ArrivalTrace {
     pub entries: Vec<TraceEntry>,
 }
 
+impl TraceSpec {
+    /// Sample one class/epochs pair from the (normalized) mix.
+    fn sample_class(&self, rng: &mut Rng) -> (WorkloadClass, u32) {
+        let total = self.p_light + self.p_medium + self.p_complex;
+        let (pl, pm) = (self.p_light / total, self.p_medium / total);
+        let x: f64 = rng.f64();
+        if x < pl {
+            (WorkloadClass::Light, self.epochs[0])
+        } else if x < pl + pm {
+            (WorkloadClass::Medium, self.epochs[1])
+        } else {
+            (WorkloadClass::Complex, self.epochs[2])
+        }
+    }
+}
+
 impl ArrivalTrace {
     /// Sample a Poisson trace (seeded, deterministic).
     pub fn poisson(spec: &TraceSpec, seed: u64) -> Self {
         let mut rng = Rng::seed_from_u64(seed);
-        let total = spec.p_light + spec.p_medium + spec.p_complex;
-        let (pl, pm) = (spec.p_light / total, spec.p_medium / total);
         let mut entries = Vec::new();
         let mut t = 0.0;
         loop {
@@ -95,15 +109,31 @@ impl ArrivalTrace {
             if t > spec.duration_s {
                 break;
             }
-            let x: f64 = rng.f64();
-            let (class, epochs) = if x < pl {
-                (WorkloadClass::Light, spec.epochs[0])
-            } else if x < pl + pm {
-                (WorkloadClass::Medium, spec.epochs[1])
-            } else {
-                (WorkloadClass::Complex, spec.epochs[2])
-            };
+            let (class, epochs) = spec.sample_class(&mut rng);
             entries.push(TraceEntry { at_s: t, class, epochs });
+        }
+        Self { entries }
+    }
+
+    /// Sample a bursty trace: burst start times form a Poisson process
+    /// at `spec.rate_per_s / burst_size` (so the long-run arrival rate
+    /// matches `spec`), and each burst carries `burst_size`
+    /// simultaneous arrivals with classes drawn from the mix — the
+    /// synchronized-sensor-fleet shape of AIoT deployments.
+    pub fn bursty(spec: &TraceSpec, burst_size: usize, seed: u64) -> Self {
+        let burst = burst_size.max(1);
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut entries = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(burst as f64 / spec.rate_per_s);
+            if t > spec.duration_s {
+                break;
+            }
+            for _ in 0..burst {
+                let (class, epochs) = spec.sample_class(&mut rng);
+                entries.push(TraceEntry { at_s: t, class, epochs });
+            }
         }
         Self { entries }
     }
@@ -142,6 +172,24 @@ impl ArrivalTrace {
             .enumerate()
             .map(|(i, e)| {
                 Pod::new(i as u64, e.class, scheduler, e.at_s, e.epochs)
+            })
+            .collect()
+    }
+
+    /// Materialize pods with ownership alternating between the two
+    /// schedulers (even index → TOPSIS, odd → default) — the same split
+    /// the `serve` loop applies to a live trace.
+    pub fn to_pods_round_robin(&self) -> Vec<Pod> {
+        self.entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                let kind = if i % 2 == 0 {
+                    SchedulerKind::Topsis
+                } else {
+                    SchedulerKind::DefaultK8s
+                };
+                Pod::new(i as u64, e.class, kind, e.at_s, e.epochs)
             })
             .collect()
     }
@@ -187,6 +235,53 @@ mod tests {
     fn jsonl_rejects_garbage() {
         assert!(ArrivalTrace::from_jsonl("not json").is_err());
         assert!(ArrivalTrace::from_jsonl("").is_err());
+    }
+
+    #[test]
+    fn bursty_rate_and_grouping() {
+        let spec = TraceSpec::surf_lisa(2.0, 500.0);
+        let t = ArrivalTrace::bursty(&spec, 5, 11);
+        // Long-run rate matches the spec: E[n] = 1000, generous bound.
+        let n = t.entries.len() as f64;
+        assert!((n - 1000.0).abs() < 200.0, "n={n}");
+        // Arrivals are monotone and come in same-timestamp groups of 5.
+        let mut prev = 0.0;
+        for e in &t.entries {
+            assert!(e.at_s >= prev);
+            prev = e.at_s;
+        }
+        for chunk in t.entries.chunks(5) {
+            assert!(chunk.iter().all(|e| e.at_s == chunk[0].at_s));
+        }
+    }
+
+    #[test]
+    fn bursty_deterministic_per_seed() {
+        let spec = TraceSpec::surf_lisa(1.0, 60.0);
+        let a = ArrivalTrace::bursty(&spec, 3, 7);
+        let b = ArrivalTrace::bursty(&spec, 3, 7);
+        assert_eq!(a.entries.len(), b.entries.len());
+        for (x, y) in a.entries.iter().zip(&b.entries) {
+            assert_eq!(x.at_s, y.at_s);
+            assert_eq!(x.class, y.class);
+        }
+    }
+
+    #[test]
+    fn round_robin_alternates_ownership() {
+        let spec = TraceSpec::surf_lisa(1.0, 30.0);
+        let t = ArrivalTrace::poisson(&spec, 5);
+        let pods = t.to_pods_round_robin();
+        assert_eq!(pods.len(), t.entries.len());
+        for (i, p) in pods.iter().enumerate() {
+            let want = if i % 2 == 0 {
+                SchedulerKind::Topsis
+            } else {
+                SchedulerKind::DefaultK8s
+            };
+            assert_eq!(p.scheduler, want);
+            assert_eq!(p.arrival_s, t.entries[i].at_s);
+        }
     }
 
     #[test]

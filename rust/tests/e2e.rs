@@ -169,10 +169,7 @@ fn adaptive_scheduler_places_pods() {
     let mut default = DefaultK8sScheduler::new(7);
     let engine = greenpod::simulation::SimulationEngine::new(
         &config,
-        greenpod::simulation::SimulationParams {
-            contention_beta: 0.35,
-            seed: 7,
-        },
+        greenpod::simulation::SimulationParams::with_beta_and_seed(0.35, 7),
         &executor,
     );
     let pods = greenpod::workload::generate_pods(

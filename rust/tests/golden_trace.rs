@@ -1,0 +1,169 @@
+//! Deterministic golden-trace regression: replay the committed arrival
+//! trace (`tests/data/golden_trace.jsonl`) through the discrete-event
+//! engine and assert placements, queue waits, attempt counts and
+//! energy against the checked-in expectations
+//! (`tests/data/golden_trace.expected.json`).
+//!
+//! The expectations are produced by an *independent oracle* — a Python
+//! mirror of the engine's arithmetic
+//! (`python/tools/make_golden_trace.py`) — so this test pins both the
+//! engine's determinism and its numerical semantics. Placements and
+//! attempt counts must match exactly; times and joules to 1e-9
+//! relative (the two implementations share IEEE-754 doubles but may
+//! round intermediate sums differently).
+
+use std::collections::HashMap;
+
+use greenpod::config::{Config, SchedulerKind, WeightingScheme};
+use greenpod::scheduler::{DefaultK8sScheduler, Estimator, GreenPodScheduler};
+use greenpod::simulation::{RunResult, SimulationEngine, SimulationParams};
+use greenpod::util::json::Json;
+use greenpod::workload::{ArrivalTrace, WorkloadExecutor};
+
+fn data_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/data")
+        .join(name)
+}
+
+/// Replay the committed trace with the golden configuration: paper
+/// defaults, all pods TOPSIS-owned, energy-centric profile, seed 42.
+fn replay() -> RunResult {
+    let cfg = Config::paper_default();
+    let executor = WorkloadExecutor::analytic();
+    let text = std::fs::read_to_string(data_path("golden_trace.jsonl"))
+        .expect("committed golden trace");
+    let trace = ArrivalTrace::from_jsonl(&text).expect("parse golden trace");
+    let pods = trace.to_pods(SchedulerKind::Topsis);
+    let engine = SimulationEngine::new(
+        &cfg,
+        SimulationParams::with_beta_and_seed(
+            cfg.experiment.contention_beta,
+            42,
+        ),
+        &executor,
+    );
+    let mut topsis = GreenPodScheduler::new(
+        Estimator::new(
+            cfg.energy.clone(),
+            executor.light_epoch_secs(),
+            cfg.experiment.contention_beta,
+        ),
+        WeightingScheme::EnergyCentric,
+    );
+    let mut default = DefaultK8sScheduler::new(42);
+    engine.run(pods, &mut topsis, &mut default)
+}
+
+fn assert_close(what: &str, got: f64, want: f64) {
+    let tol = 1e-9 * want.abs().max(1.0);
+    assert!(
+        (got - want).abs() <= tol,
+        "{what}: got {got}, golden {want} (tol {tol})"
+    );
+}
+
+#[test]
+fn golden_trace_matches_checked_in_expectations() {
+    let result = replay();
+    assert!(
+        result.unschedulable.is_empty(),
+        "golden trace must fully complete: {:?}",
+        result.unschedulable
+    );
+
+    let expected = Json::parse(
+        &std::fs::read_to_string(data_path("golden_trace.expected.json"))
+            .expect("committed golden expectations"),
+    )
+    .expect("parse golden expectations");
+
+    let by_pod: HashMap<u64, &greenpod::simulation::PodRecord> =
+        result.records.iter().map(|r| (r.pod, r)).collect();
+
+    let pods = expected
+        .get("pods")
+        .and_then(Json::as_arr)
+        .expect("`pods` array");
+    assert_eq!(by_pod.len(), pods.len(), "pod count drifted");
+
+    for e in pods {
+        let id = e.get("pod").and_then(Json::as_u64).expect("pod id");
+        let rec = by_pod
+            .get(&id)
+            .unwrap_or_else(|| panic!("pod {id} missing from replay"));
+        let want_node = e.get("node").and_then(Json::as_usize).unwrap();
+        assert_eq!(
+            rec.node, want_node,
+            "pod {id}: placed on node {} but golden says {want_node}",
+            rec.node
+        );
+        assert_eq!(
+            rec.class.label_lower(),
+            e.req_str("class").unwrap(),
+            "pod {id} class drifted"
+        );
+        let want_attempts =
+            e.get("attempts").and_then(Json::as_u64).unwrap() as u32;
+        assert_eq!(rec.attempts, want_attempts, "pod {id} attempts");
+        assert_close(
+            &format!("pod {id} arrival_s"),
+            rec.arrival_s,
+            e.req_f64("arrival_s").unwrap(),
+        );
+        assert_close(
+            &format!("pod {id} start_s"),
+            rec.start_s,
+            e.req_f64("start_s").unwrap(),
+        );
+        assert_close(
+            &format!("pod {id} finish_s"),
+            rec.finish_s,
+            e.req_f64("finish_s").unwrap(),
+        );
+        assert_close(
+            &format!("pod {id} wait_s"),
+            rec.wait_s,
+            e.req_f64("wait_s").unwrap(),
+        );
+        assert_close(
+            &format!("pod {id} joules"),
+            rec.joules,
+            e.req_f64("joules").unwrap(),
+        );
+    }
+
+    assert_close(
+        "makespan_s",
+        result.makespan_s,
+        expected.req_f64("makespan_s").unwrap(),
+    );
+    assert_close(
+        "total_kj",
+        result.meter.total_kj(SchedulerKind::Topsis),
+        expected.req_f64("total_kj").unwrap(),
+    );
+
+    // The golden scenario must actually exercise queueing: some pods
+    // wait and retry.
+    let queued = result.records.iter().filter(|r| r.wait_s > 0.0).count();
+    assert!(queued > 0, "golden trace exercises no queueing");
+    assert!(result.records.iter().any(|r| r.attempts > 1));
+}
+
+#[test]
+fn golden_trace_replay_is_deterministic() {
+    let a = replay();
+    let b = replay();
+    assert_eq!(a.records.len(), b.records.len());
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.pod, y.pod);
+        assert_eq!(x.node, y.node);
+        assert_eq!(x.start_s, y.start_s);
+        assert_eq!(x.finish_s, y.finish_s);
+        assert_eq!(x.wait_s, y.wait_s);
+        assert_eq!(x.joules, y.joules);
+        assert_eq!(x.attempts, y.attempts);
+    }
+    assert_eq!(a.makespan_s, b.makespan_s);
+}

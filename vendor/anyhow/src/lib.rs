@@ -1,0 +1,188 @@
+//! In-tree minimal `anyhow` stand-in.
+//!
+//! The build environment is fully offline (see `rust/src/util/mod.rs`),
+//! so the error-handling ergonomics this repo leans on — `anyhow::Result`,
+//! the `anyhow!` / `bail!` / `ensure!` macros, and `?`-conversion from any
+//! `std::error::Error` — are implemented here at the scale the repo
+//! needs. API-compatible with the subset of the real crate we use, so
+//! swapping in upstream `anyhow` is a one-line Cargo.toml change.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased error, API-compatible with `anyhow::Error` for the
+/// operations this repo performs (construct, display, debug-print,
+/// convert via `?`).
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Internal: an error that is just a message.
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Construct from any standard error.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error { inner: Box::new(error) }
+    }
+
+    /// The underlying error chain's root (this minimal version keeps a
+    /// single level; the source chain of the boxed error is preserved).
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut e: &(dyn StdError + 'static) = &*self.inner;
+        while let Some(src) = e.source() {
+            e = src;
+        }
+        e
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Like upstream: Debug renders the message (plus sources).
+        write!(f, "{}", self.inner)?;
+        let mut src = self.inner.source();
+        if src.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = src {
+            write!(f, "\n    {e}")?;
+            src = e.source();
+        }
+        Ok(())
+    }
+}
+
+// NOTE: like upstream anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that is what makes this blanket `From` legal.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Construct an [`Error`] from a format string (with inline captures
+/// and arguments). The tokens are forwarded to `format!` verbatim, so
+/// everything `format!` accepts works here; every call site in this
+/// repo leads with a string literal.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            // Not routed through format!: stringify!($cond) may contain
+            // braces, which format! would try to interpret.
+            return ::std::result::Result::Err($crate::Error::msg(
+                ::std::concat!(
+                    "condition failed: `",
+                    ::std::stringify!($cond),
+                    "`"
+                ),
+            ));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_and_double(s: &str) -> Result<u32> {
+        let n: u32 = s.parse()?; // From<ParseIntError> via blanket impl
+        ensure!(n < 100, "n too big: {n}");
+        Ok(n * 2)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_and_double("21").unwrap(), 42);
+        let e = parse_and_double("abc").unwrap_err();
+        assert!(e.to_string().contains("invalid digit"), "{e}");
+    }
+
+    #[test]
+    fn ensure_formats_message() {
+        let e = parse_and_double("500").unwrap_err();
+        assert_eq!(e.to_string(), "n too big: 500");
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let key = "seed";
+        let a = anyhow!("missing field `{key}`");
+        assert_eq!(a.to_string(), "missing field `seed`");
+        let b = anyhow!("line {}: {}", 3, "oops");
+        assert_eq!(b.to_string(), "line 3: oops");
+        let c = anyhow!("mixed {}: {key}", 1);
+        assert_eq!(c.to_string(), "mixed 1: seed");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flagged {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "flagged 7");
+    }
+
+    #[test]
+    fn debug_includes_source_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "disk gone");
+        let e: Error = io.into();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("disk gone"), "{dbg}");
+        assert_eq!(e.root_cause().to_string(), "disk gone");
+    }
+}

@@ -1,0 +1,201 @@
+//! In-tree stub of the `xla` PJRT bindings.
+//!
+//! The offline build environment has no XLA/PJRT runtime, so this crate
+//! provides the exact API surface `greenpod::runtime` compiles against
+//! with honest runtime behavior: the CPU client constructs, HLO text
+//! files parse (load + carry the text), and *compilation/execution*
+//! return errors — which the scheduler's failure-injection path turns
+//! into a counted fallback to the pure-Rust TOPSIS (same math; see
+//! `GreenPodScheduler::score`). Swapping in a real `xla` crate is a
+//! one-line Cargo.toml change; nothing in `greenpod` knows the
+//! difference at the type level.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type; call sites format it with `{:?}` only.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} unavailable: greenpod was built against the in-tree PJRT \
+         stub (no XLA runtime in this environment); the pure-Rust scoring \
+         and analytic execution paths are used instead"
+    ))
+}
+
+/// Stub PJRT client. Construction succeeds (so registries can open and
+/// manifests can be validated); compilation fails.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(PjRtClient(()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("artifact compilation"))
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("device buffer upload"))
+    }
+}
+
+/// Parsed HLO-module text (the stub keeps the raw text only).
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("read {}: {e}", path.display())))?;
+        if text.trim().is_empty() {
+            return Err(Error(format!("{}: empty HLO text", path.display())));
+        }
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// Stub executable: never constructed by the stub client (compile
+/// errors first), so execution paths are unreachable but type-correct.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executable invocation"))
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executable invocation"))
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device-to-host transfer"))
+    }
+}
+
+/// Host-side literal: f32 data plus dims. Shape ops work for real so
+/// input staging code runs unchanged up to the execute boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D literal over f32 data.
+    pub fn vec1(xs: &[f32]) -> Self {
+        Literal { data: xs.to_vec(), dims: vec![xs.len() as i64] }
+    }
+
+    /// Reshape; the element count must match (empty dims = scalar).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec(&self) -> Result<Vec<f32>> {
+        Ok(self.data.clone())
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable("tuple destructuring"))
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        Err(unavailable("tuple destructuring"))
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(x: f32) -> Self {
+        Literal { data: vec![x], dims: vec![] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_opens_but_compile_fails() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu-stub");
+        assert_eq!(c.device_count(), 1);
+        let hlo = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&hlo);
+        let err = c.compile(&comp).unwrap_err();
+        assert!(format!("{err:?}").contains("stub"));
+    }
+
+    #[test]
+    fn literal_shape_ops() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.to_vec().unwrap().len(), 6);
+        assert!(l.reshape(&[4, 4]).is_err());
+        let s = Literal::from(0.5f32);
+        assert!(s.reshape(&[]).is_ok());
+    }
+
+    #[test]
+    fn missing_hlo_file_errors() {
+        assert!(HloModuleProto::from_text_file(Path::new(
+            "/nonexistent/x.hlo.txt"
+        ))
+        .is_err());
+    }
+}
