@@ -3,11 +3,22 @@ discrete-event engine (rust/tests/golden_trace.rs).
 
 This is an *independent oracle*: a line-by-line Python mirror of the
 engine's arithmetic (estimator, TOPSIS closeness, contention, power
-model, event kernel with FIFO scheduling cycles and interval-integrated
-energy), kept in the exact floating-point operation order of the Rust
-source so the two implementations agree to ~1e-12 relative. The Rust
-test replays rust/tests/data/golden_trace.jsonl and asserts placements
-exactly and times/energy to 1e-9.
+model, event kernel with FIFO scheduling cycles, interval-integrated
+pod energy and node-idle accrual, and the queue-driven threshold
+autoscaler), kept in the exact floating-point operation order of the
+Rust source so the two implementations agree to ~1e-12 relative. The
+Rust tests replay rust/tests/data/golden_trace.jsonl and assert
+placements exactly and times/energy to 1e-9, twice:
+
+* golden_trace.expected.json            — fixed paper cluster;
+* golden_trace_autoscaled.expected.json — same trace under the
+  ThresholdAutoscaler (scale-out on pending depth 2, 5 s provisioning,
+  2 s cooldown, 10 s idle scale-in, bounds [7, 10], edge template).
+
+Event ordering mirrors the kernel's total order: (time, kind-priority,
+seq) with priorities arrival 0, completed 1, autoscale-tick 2, failed
+3, joined 4, cycle 5 (failures before joins: a same-instant down+up
+blip nets Ready).
 
 Run from the repo root:  python3 python/tools/make_golden_trace.py
 """
@@ -18,10 +29,11 @@ import os
 from collections import deque
 
 EPS = 1e-12
+INF = float("inf")
 
 # --- paper_default cluster (rust/src/config/cluster.rs) --------------
 # (category, cpu_millis, memory_mib, speed_factor, power_scale)
-NODES = [
+BASE_NODES = [
     ("A", 2000, 4096, 0.70, 0.30),
     ("A", 2000, 4096, 0.70, 0.30),
     ("A", 2000, 4096, 0.70, 0.30),
@@ -30,6 +42,9 @@ NODES = [
     ("C", 4000, 16384, 1.10, 2.60),
     ("Default", 2000, 8192, 0.85, 0.50),
 ]
+
+# The autoscaler's edge template = the lowest-power pool (A).
+EDGE_TEMPLATE = ("A", 2000, 4096, 0.70, 0.30)
 
 # --- EnergyModelConfig::default (rust/src/config/energy.rs) ----------
 P_IDLE, K_CPU, K_MEM, K_DISK, K_NET = 14.45, 0.236, -4.47e-8, 0.00281, 3.1e-8
@@ -45,6 +60,23 @@ BENEFIT = [False, False, True, True, True]  # cost, cost, benefit x3
 REQUESTS = {"light": (200, 512), "medium": (500, 1024),
             "complex": (1000, 2048)}
 WORK_PER_EPOCH = {"light": 1.0, "medium": 8.0, "complex": 32.0}
+
+# --- autoscaler policy of the second fixture -------------------------
+# Mirrors autoscaler::ThresholdConfig in rust/tests/golden_trace.rs.
+GOLDEN_POLICY = {
+    "scale_out_pending": 2,
+    "scale_out_wait_p95_s": INF,
+    "provision_delay_s": 5.0,
+    "cooldown_s": 2.0,
+    "idle_scale_in_s": 10.0,
+    "min_nodes": 7,
+    "max_nodes": 10,
+    "template": EDGE_TEMPLATE,
+}
+
+# --- kernel event priorities (simulation::event::SimEvent::priority) -
+PRIO = {"arrival": 0, "done": 1, "tick": 2, "fail": 3, "join": 4,
+        "cycle": 5}
 
 # --- the committed trace ---------------------------------------------
 TRACE = (
@@ -67,6 +99,17 @@ def pod_power_watts(node, share):
     dynamic = blade_power_at_load(share) - blade_power_at_load(0.0)
     idle_share = blade_power_at_load(0.0) * share
     return node[4] * (dynamic + idle_share) * PUE
+
+
+def node_idle_watts(node):
+    # Mirrors energy::node_idle_watts: ps * blade(0) * pue.
+    return node[4] * blade_power_at_load(0.0) * PUE
+
+
+def pod_idle_claim_watts(node, share):
+    # Mirrors energy::pod_idle_claim_watts: ps * blade(0) * share * pue.
+    share = min(max(share, 0.0), 1.0)
+    return node[4] * blade_power_at_load(0.0) * share * PUE
 
 
 def topsis_closeness(matrix, n, c, weights, benefit):
@@ -119,36 +162,54 @@ def argmax(scores):
 
 
 class Cluster:
-    def __init__(self):
-        self.alloc = [[0, 0] for _ in NODES]  # cpu, mem
+    """Mirror of cluster::ClusterState (dynamic node set + readiness)."""
+
+    def __init__(self, nodes):
+        self.nodes = list(nodes)
+        self.alloc = [[0, 0] for _ in self.nodes]  # cpu, mem
+        self.pods_on = [0 for _ in self.nodes]
+        self.ready = [True for _ in self.nodes]
+
+    def add_node(self, template):
+        self.nodes.append(template)
+        self.alloc.append([0, 0])
+        self.pods_on.append(0)
+        self.ready.append(False)
+        return len(self.nodes) - 1
+
+    def ready_count(self):
+        return sum(1 for r in self.ready if r)
 
     def free_cpu(self, i):
-        return NODES[i][1] - self.alloc[i][0]
+        return self.nodes[i][1] - self.alloc[i][0]
 
     def free_mem(self, i):
-        return NODES[i][2] - self.alloc[i][1]
+        return self.nodes[i][2] - self.alloc[i][1]
 
     def util(self, i):
-        return self.alloc[i][0] / NODES[i][1]
+        return self.alloc[i][0] / self.nodes[i][1]
 
     def fits(self, i, req):
-        return self.free_cpu(i) >= req[0] and self.free_mem(i) >= req[1]
+        return (self.ready[i] and self.free_cpu(i) >= req[0]
+                and self.free_mem(i) >= req[1])
 
     def feasible(self, req):
-        return [i for i in range(len(NODES)) if self.fits(i, req)]
+        return [i for i in range(len(self.nodes)) if self.fits(i, req)]
 
     def bind(self, i, req):
         self.alloc[i][0] += req[0]
         self.alloc[i][1] += req[1]
+        self.pods_on[i] += 1
 
     def release(self, i, req):
         self.alloc[i][0] -= req[0]
         self.alloc[i][1] -= req[1]
+        self.pods_on[i] -= 1
 
 
 def estimate_row(cluster, node_id, cls, epochs):
     # Mirrors scheduler::estimator::Estimator::estimate.
-    cat, cpu_millis, mem_mib, speed, _power = NODES[node_id]
+    _cat, cpu_millis, mem_mib, speed, _power = cluster.nodes[node_id]
     req = REQUESTS[cls]
     work = WORK_PER_EPOCH[cls] * float(epochs)
     cores = req[0] / 1000.0
@@ -156,7 +217,7 @@ def estimate_row(cluster, node_id, cls, epochs):
     slowdown = 1.0 + CONTENTION_BETA * cluster.util(node_id)
     exec_time = base * slowdown
     share = req[0] / cpu_millis
-    energy = pod_power_watts(NODES[node_id], share) * exec_time
+    energy = pod_power_watts(cluster.nodes[node_id], share) * exec_time
     free_cpu_after = max(cluster.free_cpu(node_id) - req[0], 0)
     free_mem_after = max(cluster.free_mem(node_id) - req[1], 0)
     cpu_util_after = 1.0 - free_cpu_after / cpu_millis
@@ -183,10 +244,10 @@ def schedule(cluster, cls, epochs):
     return candidates[argmax(scores)]
 
 
-def executor_base_secs(node_id, cls, epochs):
+def executor_base_secs(cluster, node_id, cls, epochs):
     # Mirrors WorkloadExecutor::base_secs (op order differs from the
     # estimator's base_exec_time — keep both faithful).
-    _cat, _cpu, _mem, speed, _power = NODES[node_id]
+    _cat, _cpu, _mem, speed, _power = cluster.nodes[node_id]
     req = REQUESTS[cls]
     cores = req[0] / 1000.0
     epoch_secs = LIGHT_EPOCH_SECS * WORK_PER_EPOCH[cls]
@@ -198,22 +259,138 @@ def contention_factor(util_after, share):
     return 1.0 + CONTENTION_BETA * others
 
 
-def simulate(trace):
-    """Mirror of SimulationEngine::run for an all-TOPSIS pod set."""
-    cluster = Cluster()
-    # Event queue: (at, seq, kind, payload); kinds: arrival/cycle/done.
+class ThresholdAutoscaler:
+    """Mirror of autoscaler::ThresholdAutoscaler::decide."""
+
+    def __init__(self, policy, base_nodes):
+        self.cfg = policy
+        self.base_nodes = base_nodes
+        self.pending_join = []           # provisioned, join not observed
+        self.pending_fail = []           # deactivated, fail not observed
+        self.idle_since = {}             # node id -> first idle time
+        self.last_scale_out = -INF
+
+    @staticmethod
+    def _p95(samples):
+        # Mirrors metrics::Summary's percentile: sorted sample at
+        # round((n-1)*0.95), Rust round = half away from zero.
+        s = sorted(samples)
+        x = (len(s) - 1) * 0.95
+        idx = int(math.floor(x + 0.5))
+        return s[min(idx, len(s) - 1)]
+
+    def decide(self, now, cluster, waits):
+        cfg = self.cfg
+        # Prune by observed readiness, never by time (mirrors the Rust
+        # comments on ThresholdAutoscaler::pending_join/pending_fail).
+        self.pending_join = [nid for nid in self.pending_join
+                             if nid >= len(cluster.nodes)
+                             or not cluster.ready[nid]]
+        self.pending_fail = [nid for nid in self.pending_fail
+                             if nid < len(cluster.nodes)
+                             and cluster.ready[nid]]
+        for nid in range(self.base_nodes, len(cluster.nodes)):
+            if (cluster.ready[nid] and cluster.pods_on[nid] == 0
+                    and nid not in self.pending_fail):
+                self.idle_since.setdefault(nid, now)
+            else:
+                self.idle_since.pop(nid, None)
+
+        active = (cluster.ready_count() + len(self.pending_join)
+                  - len(self.pending_fail))
+        actions = []
+        wake_candidates = []
+
+        depth_hit = (cfg["scale_out_pending"] > 0
+                     and len(waits) >= cfg["scale_out_pending"])
+        pending_p95 = (self._p95(waits)
+                       if math.isfinite(cfg["scale_out_wait_p95_s"])
+                       and waits else None)
+        wait_hit = (pending_p95 is not None
+                    and pending_p95 >= cfg["scale_out_wait_p95_s"])
+        if (not (depth_hit or wait_hit) and active < cfg["max_nodes"]
+                and pending_p95 is not None):
+            # Pending waits grow at unit rate: wake exactly at the p95
+            # trigger's crossing time (mirrors the Rust wake candidate).
+            wake_candidates.append(
+                now + (cfg["scale_out_wait_p95_s"] - pending_p95))
+        if (depth_hit or wait_hit) and active < cfg["max_nodes"]:
+            if now >= self.last_scale_out + cfg["cooldown_s"]:
+                ready_at = now + cfg["provision_delay_s"]
+                # Reactivate the lowest-id scaled-in carcass before
+                # growing the node set (mirrors the Rust reuse scan).
+                reusable = next(
+                    (nid for nid in range(self.base_nodes,
+                                          len(cluster.nodes))
+                     if not cluster.ready[nid]
+                     and nid not in self.pending_join
+                     and nid not in self.pending_fail),
+                    None)
+                if reusable is not None:
+                    actions.append(("activate", reusable, ready_at))
+                    self.pending_join.append(reusable)
+                else:
+                    actions.append(("provision", cfg["template"],
+                                    ready_at))
+                    self.pending_join.append(len(cluster.nodes))
+                self.last_scale_out = now
+                active += 1
+            else:
+                wake_candidates.append(self.last_scale_out
+                                       + cfg["cooldown_s"])
+
+        if math.isfinite(cfg["idle_scale_in_s"]):
+            removed = []
+            for nid in sorted(self.idle_since):
+                eligible_at = (self.idle_since[nid]
+                               + cfg["idle_scale_in_s"])
+                if eligible_at <= now:
+                    if active > cfg["min_nodes"]:
+                        actions.append(("deactivate", nid, now))
+                        self.pending_fail.append(nid)
+                        active -= 1
+                        removed.append(nid)
+                else:
+                    wake_candidates.append(eligible_at)
+            for nid in removed:
+                self.idle_since.pop(nid, None)
+
+        wake = None
+        for t in wake_candidates:
+            if t > now and (wake is None or t < wake):
+                wake = t
+        return actions, wake
+
+
+def simulate(trace, policy=None):
+    """Mirror of SimulationEngine::run for an all-TOPSIS pod set, with
+    optional threshold autoscaling."""
+    cluster = Cluster(BASE_NODES)
+    # Event queue entries: [at, prio, seq, kind, payload].
     queue = []
     seq = 0
-    for i, (at, _cls, _ep) in enumerate(trace):
-        queue.append([at, seq, "arrival", i])
+
+    def push(at, kind, payload=None):
+        nonlocal seq
+        queue.append([at, PRIO[kind], seq, kind, payload])
         seq += 1
+
+    for i, (at, _cls, _ep) in enumerate(trace):
+        push(at, "arrival", i)
     pending = deque()
-    running = {}   # pod -> dict(watts, start, acc, node)
+    running = {}   # pod -> dict(watts, claim, start, acc, node)
     records = {}
     attempts = [0] * len(trace)
     cycle_queued = False
     last_s = 0.0   # meter frontier
     makespan = 0.0
+    # Node idle ledgers: id -> [idle_watts, claimed, online, acc].
+    ledgers = {}
+    scaling = []
+    timeline = []
+    next_tick = [None]
+    autoscaler = (ThresholdAutoscaler(policy, len(BASE_NODES))
+                  if policy else None)
 
     def advance(now):
         nonlocal last_s
@@ -222,10 +399,57 @@ def simulate(trace):
         dt = now - last_s
         for r in running.values():
             r["acc"] += r["watts"] * dt
+        for nid in sorted(ledgers):
+            led = ledgers[nid]
+            if led[2]:
+                led[3] += max(led[0] - led[1], 0.0) * dt
         last_s = now
 
+    def node_online(nid, at):
+        advance(at)
+        if nid not in ledgers:
+            ledgers[nid] = [node_idle_watts(cluster.nodes[nid]), 0.0,
+                            False, 0.0]
+        ledgers[nid][2] = True
+
+    def node_offline(nid, at):
+        advance(at)
+        if nid in ledgers:
+            ledgers[nid][2] = False
+
+    def sample(now):
+        timeline.append((now, cluster.ready_count(), len(cluster.nodes)))
+
+    def autoscale(now):
+        waits = [now - trace[i][0] for i in pending]
+        actions, wake = autoscaler.decide(now, cluster, waits)
+        for action in actions:
+            if action[0] == "provision":
+                _tag, template, ready_at = action
+                nid = cluster.add_node(template)
+                at = max(ready_at, now)
+                push(at, "join", nid)
+                sample(now)
+                scaling.append({"at_s": now, "kind": "scale-out",
+                                "node": nid, "effective_at_s": at})
+            elif action[0] == "activate":
+                _tag, nid, ready_at = action
+                at = max(ready_at, now)
+                push(at, "join", nid)
+                scaling.append({"at_s": now, "kind": "activate",
+                                "node": nid, "effective_at_s": at})
+            else:
+                _tag, nid, at_s = action
+                at = max(at_s, now)
+                push(at, "fail", nid)
+                scaling.append({"at_s": now, "kind": "scale-in",
+                                "node": nid, "effective_at_s": at})
+        if (wake is not None and wake > now
+                and (next_tick[0] is None or wake < next_tick[0])):
+            push(wake, "tick", None)
+            next_tick[0] = wake
+
     def try_place(i, now):
-        nonlocal seq
         at, cls, epochs = trace[i]
         attempts[i] += 1
         node = schedule(cluster, cls, epochs)
@@ -233,30 +457,41 @@ def simulate(trace):
             return False
         req = REQUESTS[cls]
         cluster.bind(node, req)
-        base = executor_base_secs(node, cls, epochs)
-        share = req[0] / NODES[node][1]
+        base = executor_base_secs(cluster, node, cls, epochs)
+        share = req[0] / cluster.nodes[node][1]
         factor = contention_factor(cluster.util(node), share)
         duration = base * factor
+        claim = pod_idle_claim_watts(cluster.nodes[node], share)
+        if node in ledgers:
+            ledgers[node][1] += claim
         running[i] = {
-            "watts": pod_power_watts(NODES[node], share),
+            "watts": pod_power_watts(cluster.nodes[node], share),
+            "claim": claim,
             "start": now,
             "acc": 0.0,
             "node": node,
         }
-        queue.append([now + duration, seq, "done", i])
-        seq += 1
+        push(now + duration, "done", i)
         return True
 
+    # Ready base nodes accrue idle from t = 0; initial timeline sample;
+    # initial autoscaler decision.
+    for nid in range(len(cluster.nodes)):
+        if cluster.ready[nid]:
+            node_online(nid, 0.0)
+    sample(0.0)
+    if autoscaler:
+        autoscale(0.0)
+
     while queue:
-        queue.sort(key=lambda e: (e[0], e[1]))
-        at, _s, kind, payload = queue.pop(0)
+        queue.sort(key=lambda e: (e[0], e[1], e[2]))
+        at, _p, _s, kind, payload = queue.pop(0)
         now = at
         advance(now)
         if kind == "arrival":
             pending.append(payload)
             if not cycle_queued:
-                queue.append([now, seq, "cycle", None])
-                seq += 1
+                push(now, "cycle")
                 cycle_queued = True
         elif kind == "cycle":
             cycle_queued = False
@@ -270,6 +505,8 @@ def simulate(trace):
             r = running.pop(i)
             cluster.release(r["node"], REQUESTS[trace[i][1]])
             advance(now)  # no-op; mirrors meter.finish's advance
+            if r["node"] in ledgers:
+                ledgers[r["node"]][1] -= r["claim"]
             records[i] = {
                 "pod": i,
                 "class": trace[i][1],
@@ -282,14 +519,57 @@ def simulate(trace):
                 "joules": r["acc"],
             }
             if pending and not cycle_queued:
-                queue.append([now, seq, "cycle", None])
-                seq += 1
+                push(now, "cycle")
                 cycle_queued = True
+        elif kind == "join":
+            cluster.ready[payload] = True
+            node_online(payload, now)
+            sample(now)
+            if pending and not cycle_queued:
+                push(now, "cycle")
+                cycle_queued = True
+        elif kind == "fail":
+            cluster.ready[payload] = False
+            node_offline(payload, now)
+            sample(now)
+        elif kind == "tick":
+            next_tick[0] = None
+        # Consult the policy unless a same-instant cycle is outstanding
+        # (its own consultation follows); wake-up ticks always consult.
+        if autoscaler and (kind == "tick" or not cycle_queued):
+            autoscale(now)
 
     assert not pending, f"unschedulable pods in golden trace: {pending}"
     ordered = [records[i] for i in sorted(records)]
     total_kj = sum(r["joules"] for r in ordered) / 1000.0
-    return ordered, makespan, total_kj
+    idle_kj = sum(ledgers[nid][3] for nid in sorted(ledgers)) / 1000.0
+    return {
+        "pods": ordered,
+        "makespan_s": makespan,
+        "total_kj": total_kj,
+        "idle_kj": idle_kj,
+        "scaling": scaling,
+        "timeline": timeline,
+        "peak_ready_nodes": max(t[1] for t in timeline),
+        "final_ready_nodes": timeline[-1][1],
+        "final_total_nodes": timeline[-1][2],
+    }
+
+
+def summarize(tag, sim):
+    waited = sum(1 for p in sim["pods"] if p["wait_s"] > 0.0)
+    print(f"{tag}: {len(sim['pods'])} pods, {waited} queued, "
+          f"makespan {sim['makespan_s']:.3f}s, "
+          f"total {sim['total_kj']:.4f} kJ, idle {sim['idle_kj']:.4f} kJ, "
+          f"nodes peak {sim['peak_ready_nodes']} "
+          f"final {sim['final_ready_nodes']}")
+    for s in sim["scaling"]:
+        print(f"  {s['kind']:9} node {s['node']} at {s['at_s']:7.3f} "
+              f"(effective {s['effective_at_s']:7.3f})")
+    for p in sim["pods"]:
+        print(f"  pod {p['pod']:2} {p['class']:7} -> node {p['node']} "
+              f"start {p['start_s']:7.3f} wait {p['wait_s']:6.3f} "
+              f"x{p['attempts']} {p['joules']:9.2f} J")
 
 
 def main():
@@ -304,26 +584,42 @@ def main():
             f.write(json.dumps(
                 {"at_s": at, "class": cls, "epochs": epochs}) + "\n")
 
-    pods, makespan, total_kj = simulate(TRACE)
+    plain = simulate(TRACE)
     expected = {
         "engine": "event",
         "scheduler": "greenpod-topsis/energy-centric",
         "seed": 42,
-        "pods": pods,
-        "makespan_s": makespan,
-        "total_kj": total_kj,
+        "pods": plain["pods"],
+        "makespan_s": plain["makespan_s"],
+        "total_kj": plain["total_kj"],
     }
     out = os.path.join(data_dir, "golden_trace.expected.json")
     with open(out, "w") as f:
         json.dump(expected, f, indent=1)
         f.write("\n")
-    waited = sum(1 for p in pods if p["wait_s"] > 0.0)
-    print(f"golden trace: {len(pods)} pods, {waited} queued, "
-          f"makespan {makespan:.3f}s, total {total_kj:.4f} kJ")
-    for p in pods:
-        print(f"  pod {p['pod']:2} {p['class']:7} -> node {p['node']} "
-              f"start {p['start_s']:7.3f} wait {p['wait_s']:6.3f} "
-              f"x{p['attempts']} {p['joules']:9.2f} J")
+    summarize("golden trace", plain)
+
+    scaled = simulate(TRACE, policy=GOLDEN_POLICY)
+    expected2 = {
+        "engine": "event+threshold-autoscaler",
+        "scheduler": "greenpod-topsis/energy-centric",
+        "seed": 42,
+        "policy": {k: v for k, v in GOLDEN_POLICY.items()
+                   if k not in ("template", "scale_out_wait_p95_s")},
+        "pods": scaled["pods"],
+        "makespan_s": scaled["makespan_s"],
+        "total_kj": scaled["total_kj"],
+        "idle_kj": scaled["idle_kj"],
+        "scaling": scaled["scaling"],
+        "peak_ready_nodes": scaled["peak_ready_nodes"],
+        "final_ready_nodes": scaled["final_ready_nodes"],
+        "final_total_nodes": scaled["final_total_nodes"],
+    }
+    out2 = os.path.join(data_dir, "golden_trace_autoscaled.expected.json")
+    with open(out2, "w") as f:
+        json.dump(expected2, f, indent=1)
+        f.write("\n")
+    summarize("autoscaled golden trace", scaled)
 
 
 if __name__ == "__main__":

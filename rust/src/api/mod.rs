@@ -53,6 +53,19 @@ pub enum ApiEvent {
         duration_s: f64,
         joules: f64,
     },
+    /// A cluster-scaling action (autoscaler scale-out/scale-in or a
+    /// scheduled churn change), in the same JSONL vocabulary as the
+    /// pod lifecycle — emitted when replaying simulation results that
+    /// carried scaling records (`experiments::ElasticCell::
+    /// scaling_events`).
+    Scaled {
+        at_s: f64,
+        /// `"scale-out"`, `"scale-in"` or `"activate"`.
+        action: String,
+        node: usize,
+        /// Ready-node count after the action takes effect.
+        ready_nodes: usize,
+    },
     Drained {
         completed: u64,
         unschedulable: u64,
@@ -90,6 +103,15 @@ impl ApiEvent {
                     ("name", Json::Str(name.clone())),
                     ("duration_s", Json::Num(*duration_s)),
                     ("joules", Json::Num(*joules)),
+                ])
+            }
+            ApiEvent::Scaled { at_s, action, node, ready_nodes } => {
+                Json::obj(vec![
+                    ("event", Json::Str("scaled".into())),
+                    ("at_s", Json::Num(*at_s)),
+                    ("action", Json::Str(action.clone())),
+                    ("node", Json::Num(*node as f64)),
+                    ("ready_nodes", Json::Num(*ready_nodes as f64)),
                 ])
             }
             ApiEvent::Drained { completed, unschedulable, total_kj } => {
@@ -411,6 +433,21 @@ mod tests {
         )
         .unwrap();
         assert_eq!(completed, 12);
+    }
+
+    #[test]
+    fn scaled_event_json_shape() {
+        let e = ApiEvent::Scaled {
+            at_s: 12.5,
+            action: "scale-out".into(),
+            node: 7,
+            ready_nodes: 8,
+        };
+        let j = e.to_json().to_string();
+        assert!(j.contains("\"event\":\"scaled\""), "{j}");
+        assert!(j.contains("\"action\":\"scale-out\""), "{j}");
+        assert!(j.contains("\"node\":7"), "{j}");
+        assert!(j.contains("\"ready_nodes\":8"), "{j}");
     }
 
     #[test]

@@ -1,0 +1,116 @@
+//! Cluster autoscaling: policies that grow and shrink the simulated
+//! cluster by emitting `NodeJoined` / `NodeFailed` events into the
+//! discrete-event kernel (DESIGN.md §"Autoscaler").
+//!
+//! The engine invokes the active policy's [`Autoscaler::decide`] once
+//! at t = 0 and then after every kernel event that leaves no
+//! same-instant `SchedulingCycle` outstanding (arrivals always queue
+//! one, and so do completions/joins with a backlog) — the policy only
+//! ever sees the pending queue *after* the scheduler has had its
+//! chance at this timestamp, so it reacts to real backlog, not to
+//! pods the imminent cycle would have placed anyway. The policy's own
+//! wake-up ticks are always consulted (the scheduled-churn replay
+//! depends on firing exactly on time, ahead of the cycle). Decisions
+//! are applied in order, immediately:
+//!
+//! * [`ScalingAction::Provision`] adds a NotReady node from a pool
+//!   template ([`crate::cluster::ClusterState::add_node`]) and
+//!   schedules its `NodeJoined` after the provisioning delay;
+//! * [`ScalingAction::Activate`] / [`ScalingAction::Deactivate`]
+//!   schedule `NodeJoined` / `NodeFailed` for an existing node —
+//!   the same event vocabulary as `SimulationParams::node_events`
+//!   churn injection, which is what makes the two paths differentially
+//!   testable (`rust/tests/properties.rs`).
+//!
+//! A policy may also request a future wake-up ([`Decision::wake_at_s`]);
+//! the engine schedules an `AutoscaleTick` so idle-timeout scale-ins
+//! and cooldown expiries fire even when no workload event happens.
+//! All of it is deterministic: decisions are pure functions of the
+//! observation stream, and the emitted events obey the kernel's
+//! `(time, kind-priority, seq)` total order.
+
+mod scheduled;
+mod threshold;
+
+pub use scheduled::ScheduledAutoscaler;
+pub use threshold::{ThresholdAutoscaler, ThresholdConfig};
+
+use crate::cluster::{ClusterState, NodeId};
+use crate::config::NodePoolConfig;
+use crate::simulation::NodeChange;
+
+/// What a policy sees at each decision point.
+pub struct Observation<'a> {
+    /// Current virtual time.
+    pub now_s: f64,
+    /// Live cluster state (readiness, per-node allocation).
+    pub state: &'a ClusterState,
+    /// Queue waits (`now − arrival`) of the currently pending pods, in
+    /// FIFO order — the backlog signal PR 1 made observable.
+    pub pending_wait_s: &'a [f64],
+}
+
+/// A scaling command the engine applies to the event kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScalingAction {
+    /// Add a new NotReady node from `template`; its `NodeJoined` fires
+    /// at `ready_at_s` (now + provisioning delay).
+    Provision { template: NodePoolConfig, ready_at_s: f64 },
+    /// Schedule `NodeJoined` for an existing node at `at_s` (clamped to
+    /// now).
+    Activate { node: NodeId, at_s: f64 },
+    /// Schedule `NodeFailed` at `at_s` (clamped to now): scale-in or
+    /// injected failure.
+    Deactivate { node: NodeId, at_s: f64 },
+}
+
+/// One decision: actions to apply now, plus an optional future wake-up
+/// (strictly later than now) at which the policy wants to be consulted
+/// even if no workload event fires.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Decision {
+    pub actions: Vec<ScalingAction>,
+    pub wake_at_s: Option<f64>,
+}
+
+impl Decision {
+    /// No actions, no wake-up.
+    pub fn none() -> Self {
+        Self::default()
+    }
+}
+
+/// A cluster-autoscaling policy.
+pub trait Autoscaler {
+    /// Evaluate the policy at one decision point.
+    fn decide(&mut self, obs: &Observation) -> Decision;
+}
+
+/// Clonable policy configuration carried by
+/// [`crate::simulation::SimulationParams`]; the engine builds the
+/// stateful policy from it at the start of each run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AutoscalerPolicy {
+    /// Queue-driven threshold scaling (the production policy).
+    Threshold(ThresholdConfig),
+    /// Replay a fixed churn schedule through the autoscaler's
+    /// event-emission path — differential-testing twin of
+    /// `SimulationParams::node_events`.
+    Scheduled(Vec<NodeChange>),
+}
+
+impl AutoscalerPolicy {
+    /// Instantiate the run-scoped policy state. `base_nodes` is the
+    /// node count of the configured (pre-autoscaling) cluster; nodes
+    /// with ids at or above it are autoscaled capacity.
+    pub fn build(&self, base_nodes: usize) -> Box<dyn Autoscaler> {
+        match self {
+            AutoscalerPolicy::Threshold(cfg) => {
+                Box::new(ThresholdAutoscaler::new(cfg.clone(), base_nodes))
+            }
+            AutoscalerPolicy::Scheduled(schedule) => {
+                Box::new(ScheduledAutoscaler::new(schedule.clone()))
+            }
+        }
+    }
+}

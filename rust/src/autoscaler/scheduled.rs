@@ -1,0 +1,109 @@
+//! Scheduled churn replay: drives a fixed `NodeChange` schedule through
+//! the autoscaler's event-emission path.
+//!
+//! `SimulationParams::node_events` seeds the same schedule into the
+//! event queue before the run starts; this policy instead emits each
+//! change from a `decide()` call at the change's timestamp (wake-ups
+//! keep the decisions on schedule). The kernel's `(time, kind-priority,
+//! seq)` total order makes the two paths produce identical runs — the
+//! differential property in `rust/tests/properties.rs` pins that
+//! equivalence, which is what lets the threshold policy share the
+//! kernel with churn injection without a parallel code path.
+
+use crate::simulation::NodeChange;
+
+use super::{Autoscaler, Decision, Observation, ScalingAction};
+
+/// Replay policy state: the schedule plus an emission cursor.
+pub struct ScheduledAutoscaler {
+    /// The schedule, sorted by time (stable: equal-time entries keep
+    /// their original order, mirroring the seeded-queue path).
+    schedule: Vec<NodeChange>,
+    next: usize,
+}
+
+impl ScheduledAutoscaler {
+    pub fn new(mut schedule: Vec<NodeChange>) -> Self {
+        schedule.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        Self { schedule, next: 0 }
+    }
+}
+
+impl Autoscaler for ScheduledAutoscaler {
+    fn decide(&mut self, obs: &Observation) -> Decision {
+        let mut decision = Decision::none();
+        while self.next < self.schedule.len()
+            && self.schedule[self.next].at_s <= obs.now_s
+        {
+            let ch = self.schedule[self.next];
+            self.next += 1;
+            decision.actions.push(if ch.up {
+                ScalingAction::Activate { node: ch.node, at_s: ch.at_s }
+            } else {
+                ScalingAction::Deactivate { node: ch.node, at_s: ch.at_s }
+            });
+        }
+        decision.wake_at_s = self
+            .schedule
+            .get(self.next)
+            .map(|ch| ch.at_s)
+            .filter(|&t| t > obs.now_s);
+        decision
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterState;
+    use crate::config::ClusterConfig;
+
+    fn obs(state: &ClusterState, now_s: f64) -> Observation {
+        Observation { now_s, state, pending_wait_s: &[] }
+    }
+
+    #[test]
+    fn emits_due_entries_and_wakes_for_the_next() {
+        let state = ClusterState::from_config(&ClusterConfig::paper_default());
+        let mut a = ScheduledAutoscaler::new(vec![
+            NodeChange { at_s: 0.0, node: 2, up: false },
+            NodeChange { at_s: 30.0, node: 2, up: true },
+        ]);
+        let d0 = a.decide(&obs(&state, 0.0));
+        assert_eq!(
+            d0.actions,
+            vec![ScalingAction::Deactivate { node: 2, at_s: 0.0 }]
+        );
+        assert_eq!(d0.wake_at_s, Some(30.0));
+        // Intermediate decisions emit nothing and keep the wake-up.
+        let mid = a.decide(&obs(&state, 12.5));
+        assert!(mid.actions.is_empty());
+        assert_eq!(mid.wake_at_s, Some(30.0));
+        let d30 = a.decide(&obs(&state, 30.0));
+        assert_eq!(
+            d30.actions,
+            vec![ScalingAction::Activate { node: 2, at_s: 30.0 }]
+        );
+        assert_eq!(d30.wake_at_s, None);
+        // Exhausted: permanently quiet.
+        assert_eq!(a.decide(&obs(&state, 99.0)), Decision::none());
+    }
+
+    #[test]
+    fn unsorted_schedules_are_replayed_in_time_order() {
+        let state = ClusterState::from_config(&ClusterConfig::paper_default());
+        let mut a = ScheduledAutoscaler::new(vec![
+            NodeChange { at_s: 20.0, node: 1, up: true },
+            NodeChange { at_s: 5.0, node: 1, up: false },
+        ]);
+        let d = a.decide(&obs(&state, 0.0));
+        assert!(d.actions.is_empty());
+        assert_eq!(d.wake_at_s, Some(5.0));
+        let d5 = a.decide(&obs(&state, 5.0));
+        assert_eq!(
+            d5.actions,
+            vec![ScalingAction::Deactivate { node: 1, at_s: 5.0 }]
+        );
+        assert_eq!(d5.wake_at_s, Some(20.0));
+    }
+}

@@ -1,0 +1,589 @@
+//! The queue-driven threshold policy: scale out when the pending queue
+//! is deep or slow, scale in nodes that sit idle past a cooldown.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::NodeId;
+use crate::config::{ClusterConfig, NodePoolConfig};
+
+use super::{Autoscaler, Decision, Observation, ScalingAction};
+
+/// Threshold-policy knobs. Every disabled trigger has an explicit
+/// sentinel (`0` / `f64::INFINITY`) so a fully disabled config is a
+/// provable no-op (property-tested: it is bit-identical to running
+/// with no autoscaler at all).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ThresholdConfig {
+    /// Scale out when the pending queue holds at least this many pods
+    /// after a scheduling cycle (`0` disables the depth trigger).
+    pub scale_out_pending: usize,
+    /// Scale out when the p95 queue wait of the pending pods reaches
+    /// this many seconds (`f64::INFINITY` disables the wait trigger).
+    pub scale_out_wait_p95_s: f64,
+    /// Virtual seconds between the scale-out decision and the new
+    /// node's `NodeJoined` (cloud-provider boot time).
+    pub provision_delay_s: f64,
+    /// Minimum gap between consecutive scale-out decisions.
+    pub cooldown_s: f64,
+    /// Scale in an autoscaled node once it has been Ready and empty
+    /// for this long (`f64::INFINITY` disables scale-in).
+    pub idle_scale_in_s: f64,
+    /// Lower bound on active nodes (Ready + provisioning); scale-in
+    /// never goes below it.
+    pub min_nodes: usize,
+    /// Upper bound on active nodes; scale-out never exceeds it.
+    pub max_nodes: usize,
+    /// Pool template for provisioned nodes (`count` is ignored — the
+    /// policy adds one node per scale-out decision).
+    pub template: NodePoolConfig,
+}
+
+impl ThresholdConfig {
+    /// A conservative default around `cluster`: depth trigger at 3,
+    /// wait trigger disabled, 5 s provisioning, 15 s cooldown, 20 s
+    /// idle scale-in, bounds `[base, base + 3]`, edge template.
+    pub fn for_cluster(cluster: &ClusterConfig) -> Self {
+        let base = cluster.total_nodes();
+        Self {
+            scale_out_pending: 3,
+            scale_out_wait_p95_s: f64::INFINITY,
+            provision_delay_s: 5.0,
+            cooldown_s: 15.0,
+            idle_scale_in_s: 20.0,
+            min_nodes: base,
+            max_nodes: base + 3,
+            template: Self::edge_template(cluster),
+        }
+    }
+
+    /// A config whose every trigger is disabled — scale-out can never
+    /// fire and scale-in can never fire, so the run must be
+    /// bit-identical to one with no autoscaler.
+    pub fn disabled(cluster: &ClusterConfig) -> Self {
+        let base = cluster.total_nodes();
+        Self {
+            scale_out_pending: 0,
+            scale_out_wait_p95_s: f64::INFINITY,
+            provision_delay_s: 5.0,
+            cooldown_s: 0.0,
+            idle_scale_in_s: f64::INFINITY,
+            min_nodes: base,
+            max_nodes: base,
+            template: Self::edge_template(cluster),
+        }
+    }
+
+    /// The cluster's energy-efficient edge template: the pool with the
+    /// lowest power scale (first on ties).
+    pub fn edge_template(cluster: &ClusterConfig) -> NodePoolConfig {
+        cluster
+            .pools
+            .iter()
+            .min_by(|a, b| a.power_scale.total_cmp(&b.power_scale))
+            .expect("cluster has pools")
+            .clone()
+    }
+
+    /// The cluster's high-capacity cloud template: the pool with the
+    /// most vCPUs (lowest power scale, then first, on ties —
+    /// `min_by` over the inverted key keeps the first minimal element,
+    /// so tied pools select deterministically by position).
+    pub fn cloud_template(cluster: &ClusterConfig) -> NodePoolConfig {
+        cluster
+            .pools
+            .iter()
+            .min_by(|a, b| {
+                b.cpu_millis
+                    .cmp(&a.cpu_millis)
+                    .then(a.power_scale.total_cmp(&b.power_scale))
+            })
+            .expect("cluster has pools")
+            .clone()
+    }
+}
+
+/// p95 via `metrics::Summary`, so scaling triggers and the reported
+/// wait distributions agree on what "p95" means by construction.
+fn p95(samples: &[f64]) -> f64 {
+    crate::metrics::Summary::of(samples).p95
+}
+
+/// Run-scoped state of the threshold policy.
+pub struct ThresholdAutoscaler {
+    cfg: ThresholdConfig,
+    /// Node count of the configured cluster; ids `>= base_nodes` are
+    /// autoscaled capacity (append-only ids make this a total rule).
+    base_nodes: usize,
+    /// Provisioned/reactivated nodes whose `NodeJoined` has not been
+    /// observed yet. Tracked by id and pruned on observed readiness —
+    /// never by time: a decision can run at the exact timestamp of a
+    /// pending join but *before* it (a same-time completion fires
+    /// first), and a time-based prune would undercount `active` there
+    /// and scale out past `max_nodes`.
+    pending_join: Vec<NodeId>,
+    /// Deactivated nodes whose `NodeFailed` has not been observed yet
+    /// (the symmetric case: still Ready at a same-instant decision).
+    /// Without it a second consultation at the deactivation's exact
+    /// timestamp would recount the node as active and approve one
+    /// scale-in too many, breaching the `min_nodes` floor — or
+    /// deactivate the same node twice.
+    pending_fail: Vec<NodeId>,
+    /// When each autoscaled node last became Ready-and-empty (BTreeMap:
+    /// deterministic ascending-id iteration).
+    idle_since: BTreeMap<NodeId, f64>,
+    last_scale_out_s: f64,
+}
+
+impl ThresholdAutoscaler {
+    pub fn new(cfg: ThresholdConfig, base_nodes: usize) -> Self {
+        Self {
+            cfg,
+            base_nodes,
+            pending_join: Vec::new(),
+            pending_fail: Vec::new(),
+            idle_since: BTreeMap::new(),
+            last_scale_out_s: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Autoscaler for ThresholdAutoscaler {
+    fn decide(&mut self, obs: &Observation) -> Decision {
+        let now = obs.now_s;
+        let cfg = &self.cfg;
+
+        // In-flight provisions whose NodeJoined already fired are Ready
+        // in the observed state; drop them so they are not counted
+        // twice in the active tally. Symmetrically, in-flight
+        // deactivations are done once the node is observed NotReady.
+        self.pending_join
+            .retain(|&id| obs.state.nodes().get(id).map_or(true, |n| !n.ready));
+        self.pending_fail
+            .retain(|&id| obs.state.nodes().get(id).map_or(false, |n| n.ready));
+
+        // Idle tracking over autoscaled nodes: a node enters the map
+        // when first observed Ready-and-empty, keeps its original
+        // timestamp while it stays that way, and leaves on any pod or
+        // readiness change (nodes with an in-flight deactivation are
+        // already leaving — never idle candidates). Decisions run after
+        // every completion, join and failure, so transitions are never
+        // observed late.
+        for id in self.base_nodes..obs.state.nodes().len() {
+            if obs.state.node(id).ready
+                && obs.state.pods_on(id) == 0
+                && !self.pending_fail.contains(&id)
+            {
+                self.idle_since.entry(id).or_insert(now);
+            } else {
+                self.idle_since.remove(&id);
+            }
+        }
+
+        let mut active = obs.state.ready_nodes() + self.pending_join.len()
+            - self.pending_fail.len();
+        let mut decision = Decision::none();
+        let mut wake_candidates: Vec<f64> = Vec::new();
+
+        // Scale-out: queue pressure by depth or by p95 wait, one node
+        // per decision, rate-limited by the cooldown, bounded by max.
+        let depth_hit = cfg.scale_out_pending > 0
+            && obs.pending_wait_s.len() >= cfg.scale_out_pending;
+        let pending_p95 = if cfg.scale_out_wait_p95_s.is_finite()
+            && !obs.pending_wait_s.is_empty()
+        {
+            Some(p95(obs.pending_wait_s))
+        } else {
+            None
+        };
+        let wait_hit =
+            pending_p95.map_or(false, |p| p >= cfg.scale_out_wait_p95_s);
+        if !(depth_hit || wait_hit) && active < cfg.max_nodes {
+            if let Some(p) = pending_p95 {
+                // Every pending wait grows at unit rate, so the p95
+                // trigger's crossing time is exact — wake then instead
+                // of waiting for an unrelated kernel event.
+                wake_candidates.push(now + (cfg.scale_out_wait_p95_s - p));
+            }
+        }
+        if (depth_hit || wait_hit) && active < cfg.max_nodes {
+            if now >= self.last_scale_out_s + cfg.cooldown_s {
+                let ready_at_s = now + cfg.provision_delay_s;
+                // Reactivate the lowest-id scaled-in node before
+                // growing the node set — repeated burst/idle phases
+                // would otherwise accumulate NotReady carcasses without
+                // bound. (All autoscaled nodes come from the policy's
+                // single template, so any carcass matches.) Rebooting
+                // pays the same provisioning delay.
+                let reusable = (self.base_nodes..obs.state.nodes().len())
+                    .find(|&id| {
+                        !obs.state.node(id).ready
+                            && !self.pending_join.contains(&id)
+                            && !self.pending_fail.contains(&id)
+                    });
+                match reusable {
+                    Some(node) => {
+                        decision.actions.push(ScalingAction::Activate {
+                            node,
+                            at_s: ready_at_s,
+                        });
+                        self.pending_join.push(node);
+                    }
+                    None => {
+                        decision.actions.push(ScalingAction::Provision {
+                            template: cfg.template.clone(),
+                            ready_at_s,
+                        });
+                        // The engine applies actions in order
+                        // immediately after this decision, so the new
+                        // node's id is the current node count (ids are
+                        // dense and append-only).
+                        self.pending_join.push(obs.state.nodes().len());
+                    }
+                }
+                self.last_scale_out_s = now;
+                active += 1;
+            } else {
+                // Blocked purely by the cooldown: wake at its expiry so
+                // a starved queue cannot wait on an unrelated event.
+                wake_candidates.push(self.last_scale_out_s + cfg.cooldown_s);
+            }
+        }
+
+        // Scale-in: every autoscaled node idle past the timeout, oldest
+        // id first, floored at min_nodes.
+        if cfg.idle_scale_in_s.is_finite() {
+            let mut eligible: Vec<NodeId> = Vec::new();
+            for (&id, &since) in &self.idle_since {
+                let eligible_at = since + cfg.idle_scale_in_s;
+                if eligible_at <= now {
+                    if active > cfg.min_nodes {
+                        decision
+                            .actions
+                            .push(ScalingAction::Deactivate { node: id, at_s: now });
+                        self.pending_fail.push(id);
+                        active -= 1;
+                        eligible.push(id);
+                    }
+                } else {
+                    wake_candidates.push(eligible_at);
+                }
+            }
+            for id in eligible {
+                self.idle_since.remove(&id);
+            }
+        }
+
+        decision.wake_at_s = wake_candidates
+            .into_iter()
+            .filter(|&t| t > now)
+            .min_by(f64::total_cmp);
+        decision
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterState, Pod};
+    use crate::config::SchedulerKind;
+    use crate::workload::WorkloadClass;
+
+    fn obs_case(
+        state: &ClusterState,
+        now_s: f64,
+        waits: &[f64],
+    ) -> Decision {
+        // Helper builds a fresh policy each call where tests want
+        // statelessness; stateful tests call decide() directly.
+        let cfg = ThresholdConfig::for_cluster(&ClusterConfig::paper_default());
+        let mut a = ThresholdAutoscaler::new(cfg, state.nodes().len());
+        a.decide(&Observation { now_s, state, pending_wait_s: waits })
+    }
+
+    #[test]
+    fn deep_queue_triggers_one_provision() {
+        let state = ClusterState::from_config(&ClusterConfig::paper_default());
+        let d = obs_case(&state, 1.0, &[0.5, 0.5, 0.5, 0.5]);
+        assert_eq!(d.actions.len(), 1);
+        match &d.actions[0] {
+            ScalingAction::Provision { template, ready_at_s } => {
+                assert_eq!(*ready_at_s, 6.0); // now + 5 s delay
+                assert_eq!(template.category, crate::cluster::NodeCategory::A);
+            }
+            other => panic!("expected Provision, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shallow_queue_is_quiet() {
+        let state = ClusterState::from_config(&ClusterConfig::paper_default());
+        let d = obs_case(&state, 1.0, &[0.5, 0.5]);
+        assert!(d.actions.is_empty());
+        assert_eq!(d.wake_at_s, None);
+    }
+
+    #[test]
+    fn wait_trigger_fires_without_depth() {
+        let cluster = ClusterConfig::paper_default();
+        let state = ClusterState::from_config(&cluster);
+        let mut cfg = ThresholdConfig::for_cluster(&cluster);
+        cfg.scale_out_pending = 0;
+        cfg.scale_out_wait_p95_s = 8.0;
+        let mut a = ThresholdAutoscaler::new(cfg, state.nodes().len());
+        let quiet = a.decide(&Observation {
+            now_s: 1.0,
+            state: &state,
+            pending_wait_s: &[1.0],
+        });
+        assert!(quiet.actions.is_empty());
+        let d = a.decide(&Observation {
+            now_s: 10.0,
+            state: &state,
+            pending_wait_s: &[9.0],
+        });
+        assert_eq!(d.actions.len(), 1);
+    }
+
+    #[test]
+    fn cooldown_blocks_and_wakes() {
+        let cluster = ClusterConfig::paper_default();
+        let state = ClusterState::from_config(&cluster);
+        let cfg = ThresholdConfig::for_cluster(&cluster);
+        let cooldown = cfg.cooldown_s;
+        let mut a = ThresholdAutoscaler::new(cfg, state.nodes().len());
+        let deep = [0.0, 0.0, 0.0, 0.0];
+        let first = a.decide(&Observation {
+            now_s: 2.0,
+            state: &state,
+            pending_wait_s: &deep,
+        });
+        assert_eq!(first.actions.len(), 1);
+        let second = a.decide(&Observation {
+            now_s: 3.0,
+            state: &state,
+            pending_wait_s: &deep,
+        });
+        assert!(second.actions.is_empty());
+        assert_eq!(second.wake_at_s, Some(2.0 + cooldown));
+        let third = a.decide(&Observation {
+            now_s: 2.0 + cooldown,
+            state: &state,
+            pending_wait_s: &deep,
+        });
+        assert_eq!(third.actions.len(), 1);
+    }
+
+    #[test]
+    fn max_bound_stops_scale_out() {
+        let cluster = ClusterConfig::paper_default();
+        let mut state = ClusterState::from_config(&cluster);
+        let mut cfg = ThresholdConfig::for_cluster(&cluster);
+        cfg.cooldown_s = 0.0;
+        cfg.max_nodes = state.nodes().len() + 1;
+        let template = cfg.template.clone();
+        let mut a = ThresholdAutoscaler::new(cfg, state.nodes().len());
+        let deep = [0.0; 5];
+        let d = a.decide(&Observation {
+            now_s: 1.0,
+            state: &state,
+            pending_wait_s: &deep,
+        });
+        assert_eq!(d.actions.len(), 1);
+        // Apply the provision the way the engine would, then ask again:
+        // active (ready + provisioning) is at max, so no further action
+        // even though the node has not joined yet.
+        state.add_node(&template, 1.0);
+        let d2 = a.decide(&Observation {
+            now_s: 2.0,
+            state: &state,
+            pending_wait_s: &deep,
+        });
+        assert!(d2.actions.is_empty());
+    }
+
+    #[test]
+    fn idle_autoscaled_node_scales_in_after_timeout() {
+        let cluster = ClusterConfig::paper_default();
+        let mut state = ClusterState::from_config(&cluster);
+        let mut cfg = ThresholdConfig::for_cluster(&cluster);
+        cfg.idle_scale_in_s = 10.0;
+        let template = cfg.template.clone();
+        let base = state.nodes().len();
+        let mut a = ThresholdAutoscaler::new(cfg, base);
+        let id = state.add_node(&template, 0.0);
+        state.set_ready(id, true, 5.0);
+        // First sighting at 5 s: starts the idle clock, wakes at 15 s.
+        let d = a.decide(&Observation {
+            now_s: 5.0,
+            state: &state,
+            pending_wait_s: &[],
+        });
+        assert!(d.actions.is_empty());
+        assert_eq!(d.wake_at_s, Some(15.0));
+        // At 15 s it is eligible and above min: deactivate.
+        let d2 = a.decide(&Observation {
+            now_s: 15.0,
+            state: &state,
+            pending_wait_s: &[],
+        });
+        assert_eq!(
+            d2.actions,
+            vec![ScalingAction::Deactivate { node: id, at_s: 15.0 }]
+        );
+    }
+
+    #[test]
+    fn busy_or_base_nodes_never_scale_in() {
+        let cluster = ClusterConfig::paper_default();
+        let mut state = ClusterState::from_config(&cluster);
+        let mut cfg = ThresholdConfig::for_cluster(&cluster);
+        cfg.idle_scale_in_s = 1.0;
+        let template = cfg.template.clone();
+        let base = state.nodes().len();
+        let mut a = ThresholdAutoscaler::new(cfg, base);
+        let id = state.add_node(&template, 0.0);
+        state.set_ready(id, true, 0.0);
+        let pod = Pod::new(1, WorkloadClass::Light, SchedulerKind::Topsis,
+                           0.0, 1);
+        state.bind(&pod, id, 0.0).unwrap();
+        // Busy autoscaled node + idle *base* nodes, long past timeout:
+        // nothing to do.
+        let d = a.decide(&Observation {
+            now_s: 100.0,
+            state: &state,
+            pending_wait_s: &[],
+        });
+        assert!(d.actions.is_empty());
+        assert_eq!(d.wake_at_s, None);
+    }
+
+    #[test]
+    fn min_bound_floors_scale_in() {
+        let cluster = ClusterConfig::paper_default();
+        let mut state = ClusterState::from_config(&cluster);
+        let mut cfg = ThresholdConfig::for_cluster(&cluster);
+        cfg.idle_scale_in_s = 1.0;
+        let base = state.nodes().len();
+        cfg.min_nodes = base + 1; // the one autoscaled node is protected
+        let template = cfg.template.clone();
+        let mut a = ThresholdAutoscaler::new(cfg, base);
+        let id = state.add_node(&template, 0.0);
+        state.set_ready(id, true, 0.0);
+        let seen = a.decide(&Observation {
+            now_s: 0.0,
+            state: &state,
+            pending_wait_s: &[],
+        });
+        assert_eq!(seen.wake_at_s, Some(1.0));
+        let d = a.decide(&Observation {
+            now_s: 50.0,
+            state: &state,
+            pending_wait_s: &[],
+        });
+        assert!(d.actions.is_empty());
+        // Min-blocked with eligibility already past: no wake either
+        // (nothing will become actionable without another event).
+        assert_eq!(d.wake_at_s, None);
+    }
+
+    #[test]
+    fn scale_out_reuses_scaled_in_carcass() {
+        // A NotReady autoscaled node (a previous scale-in) is
+        // reactivated instead of growing the node set.
+        let cluster = ClusterConfig::paper_default();
+        let mut state = ClusterState::from_config(&cluster);
+        let mut cfg = ThresholdConfig::for_cluster(&cluster);
+        cfg.cooldown_s = 0.0;
+        let template = cfg.template.clone();
+        let base = state.nodes().len();
+        let mut a = ThresholdAutoscaler::new(cfg, base);
+        let id = state.add_node(&template, 0.0); // carcass: NotReady
+        let d = a.decide(&Observation {
+            now_s: 30.0,
+            state: &state,
+            pending_wait_s: &[1.0, 1.0, 1.0, 1.0],
+        });
+        assert_eq!(
+            d.actions,
+            vec![ScalingAction::Activate { node: id, at_s: 35.0 }]
+        );
+        // In-flight: a second backlog decision must not double-book it.
+        let d2 = a.decide(&Observation {
+            now_s: 31.0,
+            state: &state,
+            pending_wait_s: &[2.0, 2.0, 2.0, 2.0],
+        });
+        assert!(matches!(
+            d2.actions.first(),
+            Some(ScalingAction::Provision { .. })
+        ));
+    }
+
+    #[test]
+    fn same_instant_repeat_decision_honors_min_floor() {
+        // Two idle autoscaled nodes with min allowing only one
+        // scale-in: a repeated decision at the same instant (before
+        // the NodeFailed fires, node still Ready in state) must not
+        // deactivate the second node or re-deactivate the first.
+        let cluster = ClusterConfig::paper_default();
+        let mut state = ClusterState::from_config(&cluster);
+        let mut cfg = ThresholdConfig::for_cluster(&cluster);
+        cfg.idle_scale_in_s = 5.0;
+        let base = state.nodes().len();
+        cfg.min_nodes = base + 1;
+        cfg.max_nodes = base + 2;
+        let template = cfg.template.clone();
+        let mut a = ThresholdAutoscaler::new(cfg, base);
+        for _ in 0..2 {
+            let id = state.add_node(&template, 0.0);
+            state.set_ready(id, true, 0.0);
+        }
+        let seen = a.decide(&Observation {
+            now_s: 0.0,
+            state: &state,
+            pending_wait_s: &[],
+        });
+        assert!(seen.actions.is_empty());
+        let first = a.decide(&Observation {
+            now_s: 10.0,
+            state: &state,
+            pending_wait_s: &[],
+        });
+        assert_eq!(
+            first.actions,
+            vec![ScalingAction::Deactivate { node: base, at_s: 10.0 }]
+        );
+        // Same instant, NodeFailed not yet applied to `state`.
+        let again = a.decide(&Observation {
+            now_s: 10.0,
+            state: &state,
+            pending_wait_s: &[],
+        });
+        assert!(again.actions.is_empty(), "{:?}", again.actions);
+    }
+
+    #[test]
+    fn disabled_config_never_acts() {
+        let cluster = ClusterConfig::paper_default();
+        let state = ClusterState::from_config(&cluster);
+        let cfg = ThresholdConfig::disabled(&cluster);
+        let mut a = ThresholdAutoscaler::new(cfg, state.nodes().len());
+        for now in [0.0, 1.0, 50.0] {
+            let d = a.decide(&Observation {
+                now_s: now,
+                state: &state,
+                pending_wait_s: &[0.0; 64],
+            });
+            assert_eq!(d, Decision::none());
+        }
+    }
+
+    #[test]
+    fn templates_pick_edge_and_cloud_pools() {
+        let cluster = ClusterConfig::paper_default();
+        let edge = ThresholdConfig::edge_template(&cluster);
+        assert_eq!(edge.machine_type, "e2-medium");
+        let cloud = ThresholdConfig::cloud_template(&cluster);
+        assert_eq!(cloud.machine_type, "n2-standard-4");
+    }
+}

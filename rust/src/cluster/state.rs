@@ -13,6 +13,9 @@ pub enum ClusterEvent {
     Bound { pod: PodId, node: NodeId, at_s: f64 },
     Released { pod: PodId, node: NodeId, at_s: f64 },
     NodeReady { node: NodeId, ready: bool, at_s: f64 },
+    /// A node was provisioned into the cluster (autoscaler scale-out);
+    /// it starts NotReady and becomes schedulable via `NodeReady`.
+    NodeAdded { node: NodeId, at_s: f64 },
 }
 
 /// Per-node live allocation.
@@ -171,6 +174,42 @@ impl ClusterState {
         self.events.push(ClusterEvent::NodeReady { node, ready, at_s });
     }
 
+    /// Provision a new node from a pool template (autoscaler
+    /// scale-out). The node starts NotReady — it becomes schedulable
+    /// only when its `NodeJoined` event fires after the provisioning
+    /// delay. Returns the new node's id (ids are dense and append-only,
+    /// so a run's node ids are deterministic).
+    pub fn add_node(
+        &mut self,
+        pool: &crate::config::NodePoolConfig,
+        at_s: f64,
+    ) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            id,
+            name: format!(
+                "{}-{}-as{id}",
+                pool.machine_type,
+                pool.category.label().to_lowercase()
+            ),
+            category: pool.category,
+            machine_type: pool.machine_type.clone(),
+            cpu_millis: pool.cpu_millis,
+            memory_mib: pool.memory_mib,
+            speed_factor: pool.speed_factor,
+            power_scale: pool.power_scale,
+            ready: false,
+        });
+        self.alloc.push(Alloc::default());
+        self.events.push(ClusterEvent::NodeAdded { node: id, at_s });
+        id
+    }
+
+    /// Number of Ready nodes right now.
+    pub fn ready_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| n.ready).count()
+    }
+
     /// Pods bound per category — §V.D's allocation analysis.
     pub fn pods_per_category(&self) -> HashMap<NodeCategory, u32> {
         let mut out = HashMap::new();
@@ -262,6 +301,28 @@ mod tests {
     fn release_unknown_pod_errors() {
         let mut s = state();
         assert!(s.release(99, 0.0).is_err());
+    }
+
+    #[test]
+    fn add_node_appends_not_ready_then_joins() {
+        let mut s = state();
+        let pool = ClusterConfig::paper_default().pools[0].clone();
+        let id = s.add_node(&pool, 5.0);
+        assert_eq!(id, 7);
+        assert_eq!(s.nodes().len(), 8);
+        assert!(!s.node(id).ready);
+        assert_eq!(s.ready_nodes(), 7);
+        // NotReady: not schedulable yet.
+        assert!(!s.fits(id, WorkloadClass::Light.requests()));
+        s.set_ready(id, true, 10.0);
+        assert_eq!(s.ready_nodes(), 8);
+        assert!(s.fits(id, WorkloadClass::Light.requests()));
+        assert_eq!(s.free_cpu(id), pool.cpu_millis);
+        assert_eq!(s.free_memory(id), pool.memory_mib);
+        assert!(matches!(
+            s.events()[0],
+            ClusterEvent::NodeAdded { node: 7, at_s: _ }
+        ));
     }
 
     #[test]

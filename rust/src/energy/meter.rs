@@ -14,12 +14,12 @@
 //!   pod's lifetime (DVFS, carbon-intensity curves) without touching
 //!   the engine.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 
 use crate::cluster::{Node, PodId};
 use crate::config::{EnergyModelConfig, SchedulerKind};
-use crate::energy::pod_power_watts;
+use crate::energy::{node_idle_watts, pod_idle_claim_watts, pod_power_watts};
 use crate::workload::WorkloadClass;
 
 /// Energy record for one completed pod.
@@ -42,7 +42,23 @@ struct RunningEntry {
     scheduler: SchedulerKind,
     node: usize,
     watts: f64,
+    /// The idle-floor share of `watts` — handed back to the node's
+    /// ledger when the pod finishes.
+    idle_claim_watts: f64,
     started_s: f64,
+    acc_joules: f64,
+}
+
+/// A powered-on node's idle-floor ledger: integrates the node's
+/// *unattributed* idle draw — the idle floor minus the shares claimed
+/// by running pods — over its online (Ready) intervals. This is the
+/// waste an autoscaler's scale-in eliminates.
+#[derive(Debug, Clone)]
+struct NodeLedger {
+    idle_watts: f64,
+    /// Σ idle-claims of pods currently running on the node.
+    claimed_watts: f64,
+    online: bool,
     acc_joules: f64,
 }
 
@@ -51,6 +67,8 @@ struct RunningEntry {
 pub struct EnergyMeter {
     records: Vec<PodEnergy>,
     running: HashMap<PodId, RunningEntry>,
+    /// Per-node idle ledgers (BTreeMap: deterministic iteration).
+    nodes: BTreeMap<usize, NodeLedger>,
     /// Virtual time up to which all running pods are integrated.
     last_s: f64,
 }
@@ -101,6 +119,10 @@ impl EnergyMeter {
     ) {
         self.advance(at_s);
         let watts = pod_power_watts(cfg, node, share);
+        let idle_claim_watts = pod_idle_claim_watts(cfg, node, share);
+        if let Some(ledger) = self.nodes.get_mut(&node.id) {
+            ledger.claimed_watts += idle_claim_watts;
+        }
         self.running.insert(
             pod,
             RunningEntry {
@@ -108,15 +130,17 @@ impl EnergyMeter {
                 scheduler,
                 node: node.id,
                 watts,
+                idle_claim_watts,
                 started_s: at_s,
                 acc_joules: 0.0,
             },
         );
     }
 
-    /// Integrate every running pod's power over `[last, now]` and move
-    /// the integration frontier to `now`. Idempotent at equal times;
-    /// never moves the frontier backwards.
+    /// Integrate every running pod's power — and every online node's
+    /// unattributed idle floor — over `[last, now]` and move the
+    /// integration frontier to `now`. Idempotent at equal times; never
+    /// moves the frontier backwards.
     pub fn advance(&mut self, now_s: f64) {
         if now_s <= self.last_s {
             return;
@@ -125,7 +149,45 @@ impl EnergyMeter {
         for entry in self.running.values_mut() {
             entry.acc_joules += entry.watts * dt;
         }
+        for ledger in self.nodes.values_mut() {
+            if ledger.online {
+                ledger.acc_joules +=
+                    (ledger.idle_watts - ledger.claimed_watts).max(0.0) * dt;
+            }
+        }
         self.last_s = now_s;
+    }
+
+    /// Begin idle-floor metering for a node that powered on (became
+    /// Ready) at `at_s`. Idempotent while online; a node that was
+    /// offline resumes accrual from `at_s`.
+    pub fn node_online(
+        &mut self,
+        cfg: &EnergyModelConfig,
+        node: &Node,
+        at_s: f64,
+    ) {
+        self.advance(at_s);
+        let idle_watts = node_idle_watts(cfg, node);
+        let ledger = self.nodes.entry(node.id).or_insert(NodeLedger {
+            idle_watts,
+            claimed_watts: 0.0,
+            online: false,
+            acc_joules: 0.0,
+        });
+        ledger.online = true;
+    }
+
+    /// Stop idle-floor metering for a node that powered off (scale-in
+    /// or failure) at `at_s`. Unknown or already-offline nodes are a
+    /// no-op. Pods still running on the node keep integrating their own
+    /// attribution (kube semantics: NotReady gates new bindings, not
+    /// executions) — only the node's unattributed idle stops accruing.
+    pub fn node_offline(&mut self, node: usize, at_s: f64) {
+        self.advance(at_s);
+        if let Some(ledger) = self.nodes.get_mut(&node) {
+            ledger.online = false;
+        }
     }
 
     /// Close the interval integration for `pod` at `at_s`, emit its
@@ -139,6 +201,9 @@ impl EnergyMeter {
             .running
             .remove(&pod)
             .expect("finish() without matching start()");
+        if let Some(ledger) = self.nodes.get_mut(&entry.node) {
+            ledger.claimed_watts -= entry.idle_claim_watts;
+        }
         self.records.push(PodEnergy {
             pod,
             class: entry.class,
@@ -153,6 +218,19 @@ impl EnergyMeter {
     /// Number of pods currently integrating.
     pub fn running_count(&self) -> usize {
         self.running.len()
+    }
+
+    /// Total unattributed node-idle energy (kJ) across the run — the
+    /// infrastructure cost of keeping nodes powered beyond what running
+    /// pods account for. Zero when node metering was never enabled
+    /// (single-shot mode, the batch oracle).
+    pub fn idle_kj(&self) -> f64 {
+        self.nodes.values().map(|l| l.acc_joules).sum::<f64>() / 1000.0
+    }
+
+    /// Unattributed idle energy (J) accrued by one node.
+    pub fn node_idle_joules(&self, node: usize) -> f64 {
+        self.nodes.get(&node).map_or(0.0, |l| l.acc_joules)
     }
 
     pub fn records(&self) -> &[PodEnergy] {
@@ -334,6 +412,80 @@ mod tests {
                                SchedulerKind::DefaultK8s, &c, 0.1, 6.0);
         assert!((j1 - w1).abs() < 1e-9 * w1);
         assert!((j2 - w2).abs() < 1e-9 * w2);
+    }
+
+    #[test]
+    fn node_idle_accrues_only_while_online() {
+        let cfg = EnergyModelConfig::default();
+        let n = node(0, 1.0);
+        let mut m = EnergyMeter::new();
+        m.node_online(&cfg, &n, 0.0);
+        m.advance(10.0);
+        m.node_offline(0, 10.0);
+        m.advance(25.0); // offline: no accrual
+        m.node_online(&cfg, &n, 25.0);
+        m.advance(30.0);
+        let idle_w = crate::energy::node_idle_watts(&cfg, &n);
+        let want = idle_w * 15.0; // 10 s + 5 s online
+        let got = m.node_idle_joules(0);
+        assert!((got - want).abs() < 1e-9 * want, "{got} vs {want}");
+        assert!((m.idle_kj() - want / 1000.0).abs() < 1e-12 * want);
+    }
+
+    #[test]
+    fn running_pod_claims_its_idle_share_from_the_node() {
+        // One half-share pod for 10 of 20 online seconds: the node's
+        // unattributed idle is full-idle for 10 s + half-idle for 10 s,
+        // and pod + node-idle together equal node power integrated at
+        // the pod's load — no double counting.
+        let cfg = EnergyModelConfig::default();
+        let n = node(0, 1.0);
+        let mut m = EnergyMeter::new();
+        m.node_online(&cfg, &n, 0.0);
+        m.start(&cfg, 1, WorkloadClass::Medium, SchedulerKind::Topsis,
+                &n, 0.5, 0.0);
+        let pod_j = m.finish(1, 10.0);
+        m.advance(20.0);
+        let idle_w = crate::energy::node_idle_watts(&cfg, &n);
+        let claim_w = crate::energy::pod_idle_claim_watts(&cfg, &n, 0.5);
+        let want_idle = (idle_w - claim_w) * 10.0 + idle_w * 10.0;
+        let got_idle = m.node_idle_joules(0);
+        assert!(
+            (got_idle - want_idle).abs() < 1e-9 * want_idle,
+            "{got_idle} vs {want_idle}"
+        );
+        let total = pod_j + got_idle;
+        let node_at_load =
+            crate::energy::node_power_watts(&cfg, &n, 0.5) * 10.0
+                + idle_w * 10.0;
+        assert!(
+            (total - node_at_load).abs() < 1e-9 * node_at_load,
+            "attribution {total} != node draw {node_at_load}"
+        );
+    }
+
+    #[test]
+    fn node_online_is_idempotent_and_unknown_offline_is_noop() {
+        let cfg = EnergyModelConfig::default();
+        let n = node(0, 0.45);
+        let mut m = EnergyMeter::new();
+        m.node_online(&cfg, &n, 0.0);
+        m.node_online(&cfg, &n, 0.0); // repeat: no reset, no double accrual
+        m.node_offline(99, 0.0); // never onlined: no-op
+        m.advance(8.0);
+        let want = crate::energy::node_idle_watts(&cfg, &n) * 8.0;
+        assert!((m.node_idle_joules(0) - want).abs() < 1e-9 * want);
+        assert_eq!(m.node_idle_joules(99), 0.0);
+    }
+
+    #[test]
+    fn single_shot_mode_reports_zero_idle() {
+        let cfg = EnergyModelConfig::default();
+        let mut m = EnergyMeter::new();
+        let n = node(0, 1.0);
+        m.record(&cfg, 1, WorkloadClass::Light, SchedulerKind::Topsis,
+                 &n, 0.1, 10.0);
+        assert_eq!(m.idle_kj(), 0.0);
     }
 
     #[test]

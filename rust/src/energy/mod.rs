@@ -8,4 +8,7 @@ mod power;
 
 pub use carbon::{ImpactAssessment, ImpactParams};
 pub use meter::{EnergyMeter, PodEnergy};
-pub use power::{blade_power_watts, node_power_watts, pod_power_watts};
+pub use power::{
+    blade_power_watts, node_idle_watts, node_power_watts,
+    pod_idle_claim_watts, pod_power_watts,
+};

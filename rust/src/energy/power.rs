@@ -55,6 +55,29 @@ pub fn node_power_watts(
     node.power_scale * blade_power_at_load(cfg, u) * cfg.pue
 }
 
+/// A powered-on node's idle floor (W, at the wall) — what the node
+/// draws with zero pods. This is the draw the autoscaler eliminates by
+/// scaling in: the energy meter integrates it over each node's Ready
+/// intervals, minus the idle shares already attributed to running pods
+/// (see [`pod_idle_claim_watts`]), so pod accounting and node-idle
+/// accounting never double-count a watt.
+pub fn node_idle_watts(cfg: &EnergyModelConfig, node: &Node) -> f64 {
+    node.power_scale * blade_power_at_load(cfg, 0.0) * cfg.pue
+}
+
+/// The idle-floor component of [`pod_power_watts`]: the share of the
+/// node's idle draw that "idle cost follows reservation" accounting
+/// charges to a pod occupying CPU fraction `share`. Subtracted from the
+/// node's unattributed idle accrual while the pod runs.
+pub fn pod_idle_claim_watts(
+    cfg: &EnergyModelConfig,
+    node: &Node,
+    share: f64,
+) -> f64 {
+    let share = share.clamp(0.0, 1.0);
+    node.power_scale * blade_power_at_load(cfg, 0.0) * share * cfg.pue
+}
+
 /// Power attributed to one pod occupying CPU fraction `share` of `node`
 /// (W, at the wall).
 ///
@@ -140,5 +163,31 @@ mod tests {
     fn zero_share_zero_power() {
         let cfg = EnergyModelConfig::default();
         assert_eq!(pod_power_watts(&cfg, &node(1.0), 0.0), 0.0);
+    }
+
+    #[test]
+    fn idle_watts_is_zero_load_node_power() {
+        let cfg = EnergyModelConfig::default();
+        let n = node(0.45);
+        assert_eq!(node_idle_watts(&cfg, &n), node_power_watts(&cfg, &n, 0.0));
+        assert!(node_idle_watts(&cfg, &n) > 0.0);
+    }
+
+    #[test]
+    fn pod_idle_claims_sum_to_node_idle_at_full_reservation() {
+        // Four quarter-share pods claim exactly the node's idle floor —
+        // so (idle − Σclaims) is zero on a fully reserved node and no
+        // watt is double-counted between pod and node-idle ledgers.
+        let cfg = EnergyModelConfig::default();
+        let n = node(1.6);
+        let claims = 4.0 * pod_idle_claim_watts(&cfg, &n, 0.25);
+        let idle = node_idle_watts(&cfg, &n);
+        assert!((claims - idle).abs() < 1e-9 * idle);
+        // And a full-share pod's claim is its attribution minus the
+        // purely dynamic draw.
+        let full_claim = pod_idle_claim_watts(&cfg, &n, 1.0);
+        let dynamic = pod_power_watts(&cfg, &n, 1.0) - full_claim;
+        assert!(dynamic > 0.0);
+        assert!((full_claim - idle).abs() < 1e-9 * idle);
     }
 }

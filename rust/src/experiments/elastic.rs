@@ -1,0 +1,496 @@
+//! Elasticity & churn scenarios: the ROADMAP's "node churn is wired
+//! but only exercised by tests" item, promoted to a first-class
+//! experiment driver.
+//!
+//! The grid crosses two arrival shapes (synchronized AIoT bursts,
+//! open-loop Poisson) with four cluster modes:
+//!
+//! * **static** — the paper's fixed Table I cluster;
+//! * **static-max** — the fixed cluster plus the autoscaler's full
+//!   extra capacity, powered on for the whole run (the elasticity
+//!   baseline: same peak capacity, no scaling);
+//! * **churn** — the fixed cluster with an injected outage (two nodes
+//!   fail mid-run and later rejoin) via `SimulationParams::node_events`;
+//! * **autoscaled** — the fixed cluster driven by the queue-driven
+//!   [`ThresholdAutoscaler`](crate::autoscaler::ThresholdAutoscaler).
+//!
+//! Each cell is run once per scheduler (all pods GreenPod, all pods
+//! default kube-scheduler — the paired-run methodology of Table VI)
+//! and reports *total* energy (pod attribution + unattributed node
+//! idle), queue-wait p50/p95, SLO misses, and the node-count timeline.
+//! The headline the e2e test pins: at equal admitted work, the
+//! autoscaled cluster spends strictly less total energy than the
+//! static-max cluster that holds the same peak capacity all along.
+
+use crate::api::ApiEvent;
+use crate::autoscaler::{AutoscalerPolicy, ThresholdConfig};
+use crate::config::{ClusterConfig, Config, SchedulerKind, WeightingScheme};
+use crate::metrics::{Summary, Table};
+use crate::scheduler::{DefaultK8sScheduler, Estimator, GreenPodScheduler};
+use crate::simulation::{
+    NodeChange, NodeCountSample, RunResult, ScalingRecord, SimulationEngine,
+    SimulationParams,
+};
+use crate::workload::{ArrivalTrace, TraceSpec, WorkloadExecutor};
+
+use super::ExperimentContext;
+
+/// Queue wait beyond which a pod counts as an SLO miss (s).
+pub const SLO_WAIT_S: f64 = 10.0;
+
+/// Extra nodes the elastic scenarios may add beyond the base cluster.
+pub const EXTRA_NODES: usize = 3;
+
+/// Common idle-billing horizon (s): every cell's powered-on nodes are
+/// billed over the same `[0, horizon]` window, so totals compare
+/// configurations rather than event-stream lengths (the trace spans
+/// 240 s; 300 s covers every cell's drain with margin).
+pub const BILLING_HORIZON_S: f64 = 300.0;
+
+/// Cluster elasticity modes of the scenario grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterMode {
+    Static,
+    StaticMax,
+    Churn,
+    Autoscaled,
+}
+
+impl ClusterMode {
+    pub const ALL: [ClusterMode; 4] = [
+        ClusterMode::Static,
+        ClusterMode::StaticMax,
+        ClusterMode::Churn,
+        ClusterMode::Autoscaled,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ClusterMode::Static => "static",
+            ClusterMode::StaticMax => "static-max",
+            ClusterMode::Churn => "churn",
+            ClusterMode::Autoscaled => "autoscaled",
+        }
+    }
+}
+
+/// The two arrival shapes of the grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElasticProcess {
+    Bursty,
+    Poisson,
+}
+
+impl ElasticProcess {
+    pub const ALL: [ElasticProcess; 2] =
+        [ElasticProcess::Bursty, ElasticProcess::Poisson];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ElasticProcess::Bursty => "bursty",
+            ElasticProcess::Poisson => "poisson",
+        }
+    }
+
+    /// Complex-heavy AIoT mix: bursts of synchronized sensor uploads
+    /// that overflow the base cluster, separated by gaps long enough
+    /// for idle scale-in to pay off.
+    fn trace(&self, seed: u64) -> ArrivalTrace {
+        let spec = TraceSpec {
+            rate_per_s: 0.3,
+            duration_s: 240.0,
+            p_light: 0.1,
+            p_medium: 0.2,
+            p_complex: 0.7,
+            epochs: [2, 2, 1],
+        };
+        match self {
+            ElasticProcess::Bursty => ArrivalTrace::bursty(&spec, 28, seed),
+            ElasticProcess::Poisson => ArrivalTrace::poisson(&spec, seed),
+        }
+    }
+}
+
+/// The threshold policy every autoscaled cell runs (edge template —
+/// scale-out adds energy-efficient e2 capacity).
+pub fn elastic_policy(cluster: &ClusterConfig) -> ThresholdConfig {
+    let base = cluster.total_nodes();
+    ThresholdConfig {
+        scale_out_pending: 3,
+        scale_out_wait_p95_s: 15.0,
+        provision_delay_s: 5.0,
+        cooldown_s: 15.0,
+        idle_scale_in_s: 20.0,
+        min_nodes: base,
+        max_nodes: base + EXTRA_NODES,
+        template: ThresholdConfig::edge_template(cluster),
+    }
+}
+
+/// The injected outage of the churn mode: one A node and one B node
+/// fail mid-run and rejoin 90 s later.
+pub fn churn_schedule() -> Vec<NodeChange> {
+    vec![
+        NodeChange { at_s: 60.0, node: 1, up: false },
+        NodeChange { at_s: 60.0, node: 4, up: false },
+        NodeChange { at_s: 150.0, node: 1, up: true },
+        NodeChange { at_s: 150.0, node: 4, up: true },
+    ]
+}
+
+/// One (process × mode × scheduler) cell.
+#[derive(Debug, Clone)]
+pub struct ElasticCell {
+    pub process: ElasticProcess,
+    pub mode: ClusterMode,
+    pub scheduler: SchedulerKind,
+    pub pods: usize,
+    pub unschedulable: usize,
+    /// Pod-attributed energy (kJ).
+    pub pod_kj: f64,
+    /// Unattributed node-idle energy (kJ).
+    pub idle_kj: f64,
+    /// pod_kj + idle_kj — the comparable total.
+    pub total_kj: f64,
+    pub wait_p50_s: f64,
+    pub wait_p95_s: f64,
+    /// Fraction of pods whose queue wait exceeded [`SLO_WAIT_S`].
+    pub slo_miss: f64,
+    pub makespan_s: f64,
+    pub mean_nodes: f64,
+    pub peak_nodes: usize,
+    /// Capacity-adding actions: fresh provisions plus reactivations of
+    /// previously scaled-in nodes.
+    pub scale_outs: usize,
+    pub scale_ins: usize,
+    /// Ready/total node counts over the run.
+    pub node_timeline: Vec<NodeCountSample>,
+    /// Autoscaler actions, in decision order.
+    pub scaling: Vec<ScalingRecord>,
+}
+
+impl ElasticCell {
+    /// The cell's scaling actions in the serve loop's JSON-lines event
+    /// vocabulary ([`ApiEvent::Scaled`]) — `greenpod experiment elastic
+    /// --events` and `examples/elastic_burst.rs` stream these.
+    pub fn scaling_events(&self) -> Vec<ApiEvent> {
+        self.scaling
+            .iter()
+            .map(|s| {
+                // Ready count once the action takes effect, read off the
+                // (time-ordered) timeline — decision order can differ
+                // from effect order when provisioning delays overlap a
+                // scale-in, so cumulative arithmetic would be wrong.
+                let ready_nodes = self
+                    .node_timeline
+                    .iter()
+                    .take_while(|t| t.at_s <= s.effective_at_s)
+                    .last()
+                    .map_or(0, |t| t.ready_nodes);
+                ApiEvent::Scaled {
+                    at_s: s.at_s,
+                    action: s.kind.to_string(),
+                    node: s.node,
+                    ready_nodes,
+                }
+            })
+            .collect()
+    }
+}
+
+/// The full scenario grid.
+#[derive(Debug, Clone)]
+pub struct ElasticityReport {
+    pub cells: Vec<ElasticCell>,
+    pub slo_wait_s: f64,
+}
+
+impl ElasticityReport {
+    /// Look up one cell (panics if the grid does not contain it).
+    pub fn cell(
+        &self,
+        process: ElasticProcess,
+        mode: ClusterMode,
+        scheduler: SchedulerKind,
+    ) -> &ElasticCell {
+        self.cells
+            .iter()
+            .find(|c| {
+                c.process == process
+                    && c.mode == mode
+                    && c.scheduler == scheduler
+            })
+            .expect("cell in grid")
+    }
+
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Elasticity scenarios (total = pod + idle energy; \
+                 SLO: wait <= {:.0} s)",
+                self.slo_wait_s
+            ),
+            &[
+                "arrivals", "cluster", "scheduler", "pods", "total kJ",
+                "pod kJ", "idle kJ", "wait p50 s", "wait p95 s", "SLO miss %",
+                "nodes mean/peak", "scale out/in", "makespan s",
+            ],
+        );
+        for c in &self.cells {
+            t.row(vec![
+                c.process.label().to_string(),
+                c.mode.label().to_string(),
+                match c.scheduler {
+                    SchedulerKind::Topsis => "greenpod".to_string(),
+                    SchedulerKind::DefaultK8s => "default-k8s".to_string(),
+                },
+                format!("{}", c.pods),
+                format!("{:.3}", c.total_kj),
+                format!("{:.3}", c.pod_kj),
+                format!("{:.3}", c.idle_kj),
+                format!("{:.2}", c.wait_p50_s),
+                format!("{:.2}", c.wait_p95_s),
+                format!("{:.1}", 100.0 * c.slo_miss),
+                format!("{:.2}/{}", c.mean_nodes, c.peak_nodes),
+                format!("{}/{}", c.scale_outs, c.scale_ins),
+                format!("{:.1}", c.makespan_s),
+            ]);
+        }
+        t
+    }
+}
+
+/// Run one cell: the given trace, all pods owned by `kind`, under one
+/// cluster mode. (Named distinctly from `runner::run_cell`, the
+/// factorial-cell driver re-exported by this module.)
+fn run_scenario_cell(
+    ctx: &ExperimentContext,
+    process: ElasticProcess,
+    mode: ClusterMode,
+    kind: SchedulerKind,
+    trace: &ArrivalTrace,
+) -> ElasticCell {
+    let base = &ctx.config;
+    let mut cluster = base.cluster.clone();
+    let mut params = SimulationParams::with_beta_and_seed(
+        base.experiment.contention_beta,
+        base.experiment.seed,
+    );
+    params.billing_horizon_s = Some(BILLING_HORIZON_S);
+    match mode {
+        ClusterMode::Static => {}
+        ClusterMode::StaticMax => {
+            let mut pool = ThresholdConfig::edge_template(&cluster);
+            pool.count = EXTRA_NODES;
+            cluster.pools.push(pool);
+        }
+        ClusterMode::Churn => params.node_events = churn_schedule(),
+        ClusterMode::Autoscaled => {
+            params.autoscaler = Some(AutoscalerPolicy::Threshold(
+                elastic_policy(&cluster),
+            ));
+        }
+    }
+    let config = Config {
+        cluster,
+        energy: base.energy.clone(),
+        experiment: base.experiment.clone(),
+    };
+
+    let executor = WorkloadExecutor::analytic();
+    let engine = SimulationEngine::new(&config, params, &executor);
+    let mut topsis = GreenPodScheduler::new(
+        Estimator::new(
+            config.energy.clone(),
+            executor.light_epoch_secs(),
+            config.experiment.contention_beta,
+        ),
+        WeightingScheme::EnergyCentric,
+    );
+    let mut default = DefaultK8sScheduler::new(config.experiment.seed);
+    let pods = trace.to_pods(kind);
+    let n_pods = pods.len();
+    let result: RunResult = engine.run(pods, &mut topsis, &mut default);
+
+    let waits: Summary = result.queue_wait_summary(kind);
+    ElasticCell {
+        process,
+        mode,
+        scheduler: kind,
+        pods: n_pods,
+        unschedulable: result.unschedulable.len(),
+        pod_kj: result.meter.total_kj(kind),
+        idle_kj: result.idle_kj(),
+        total_kj: result.meter.total_kj(kind) + result.idle_kj(),
+        wait_p50_s: waits.p50,
+        wait_p95_s: waits.p95,
+        slo_miss: result.slo_miss_fraction(kind, SLO_WAIT_S),
+        makespan_s: result.makespan_s,
+        mean_nodes: result.mean_ready_nodes(),
+        peak_nodes: result.peak_ready_nodes(),
+        scale_outs: result.scaling_count("scale-out")
+            + result.scaling_count("activate"),
+        scale_ins: result.scaling_count("scale-in"),
+        node_timeline: result.node_timeline,
+        scaling: result.scaling,
+    }
+}
+
+/// Run the full grid: {bursty, poisson} × {static, static-max, churn,
+/// autoscaled} × {GreenPod, default kube-scheduler}, one seeded trace
+/// per arrival shape shared by every cell in its row block.
+pub fn run_elastic(ctx: &ExperimentContext) -> ElasticityReport {
+    let mut cells = Vec::new();
+    for process in ElasticProcess::ALL {
+        let trace = process.trace(ctx.config.experiment.seed);
+        for mode in ClusterMode::ALL {
+            for kind in [SchedulerKind::Topsis, SchedulerKind::DefaultK8s] {
+                cells.push(run_scenario_cell(ctx, process, mode, kind, &trace));
+            }
+        }
+    }
+    ElasticityReport { cells, slo_wait_s: SLO_WAIT_S }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> &'static ElasticityReport {
+        static REPORT: std::sync::OnceLock<ElasticityReport> =
+            std::sync::OnceLock::new();
+        REPORT.get_or_init(|| {
+            run_elastic(&ExperimentContext::new(Config::paper_default()))
+        })
+    }
+
+    #[test]
+    fn grid_is_complete_and_all_work_is_admitted() {
+        let r = report();
+        assert_eq!(r.cells.len(), 16);
+        for c in &r.cells {
+            assert!(c.pods > 0);
+            assert_eq!(
+                c.unschedulable, 0,
+                "{}/{}/{:?} dropped pods",
+                c.process.label(),
+                c.mode.label(),
+                c.scheduler
+            );
+            assert!(c.total_kj.is_finite() && c.total_kj > 0.0);
+            assert!(c.idle_kj > 0.0);
+            // The common billing window must actually cover the drain,
+            // or the equal-window energy comparison silently breaks.
+            assert!(
+                c.makespan_s <= BILLING_HORIZON_S,
+                "{}/{}/{:?} drained at {:.1} s, past the {} s billing \
+                 horizon",
+                c.process.label(),
+                c.mode.label(),
+                c.scheduler,
+                c.makespan_s,
+                BILLING_HORIZON_S
+            );
+            assert!(c.wait_p95_s >= c.wait_p50_s);
+            assert!((0.0..=1.0).contains(&c.slo_miss));
+            assert!(c.peak_nodes >= 7);
+        }
+        // Equal admitted work within each arrival shape.
+        for p in ElasticProcess::ALL {
+            let counts: Vec<usize> = r
+                .cells
+                .iter()
+                .filter(|c| c.process == p)
+                .map(|c| c.pods)
+                .collect();
+            assert!(counts.windows(2).all(|w| w[0] == w[1]));
+        }
+    }
+
+    #[test]
+    fn autoscaled_burst_beats_static_max_on_total_energy() {
+        // The acceptance headline: at equal admitted work, scaling the
+        // extra capacity in and out costs strictly less total energy
+        // than keeping it powered all along.
+        let r = report();
+        let auto = r.cell(
+            ElasticProcess::Bursty,
+            ClusterMode::Autoscaled,
+            SchedulerKind::Topsis,
+        );
+        let maxed = r.cell(
+            ElasticProcess::Bursty,
+            ClusterMode::StaticMax,
+            SchedulerKind::Topsis,
+        );
+        assert_eq!(auto.pods, maxed.pods);
+        assert_eq!(auto.unschedulable + maxed.unschedulable, 0);
+        assert!(
+            auto.total_kj < maxed.total_kj,
+            "autoscaled {:.3} kJ !< static-max {:.3} kJ",
+            auto.total_kj,
+            maxed.total_kj
+        );
+        // The autoscaler actually scaled, and returned to base size.
+        assert!(auto.scale_outs >= 1);
+        assert!(auto.scale_ins >= 1);
+        assert!(auto.peak_nodes > 7);
+        assert_eq!(auto.node_timeline.last().unwrap().ready_nodes, 7);
+        assert!(auto.mean_nodes < maxed.mean_nodes);
+    }
+
+    #[test]
+    fn autoscaling_relieves_static_queueing() {
+        // Against the *base* static cluster, added elastic capacity
+        // must not make waits worse.
+        let r = report();
+        let auto = r.cell(
+            ElasticProcess::Bursty,
+            ClusterMode::Autoscaled,
+            SchedulerKind::Topsis,
+        );
+        let fixed = r.cell(
+            ElasticProcess::Bursty,
+            ClusterMode::Static,
+            SchedulerKind::Topsis,
+        );
+        assert!(auto.wait_p95_s <= fixed.wait_p95_s + 1e-9);
+        assert!(auto.slo_miss <= fixed.slo_miss + 1e-12);
+    }
+
+    #[test]
+    fn churn_outage_raises_waits_over_static() {
+        let r = report();
+        let churn = r.cell(
+            ElasticProcess::Poisson,
+            ClusterMode::Churn,
+            SchedulerKind::Topsis,
+        );
+        let fixed = r.cell(
+            ElasticProcess::Poisson,
+            ClusterMode::Static,
+            SchedulerKind::Topsis,
+        );
+        assert_eq!(churn.pods, fixed.pods);
+        // Losing two nodes for 90 s cannot *improve* the wait tail.
+        assert!(churn.wait_p95_s >= fixed.wait_p95_s - 1e-9);
+    }
+
+    #[test]
+    fn table_and_event_stream_render() {
+        let r = report();
+        let text = crate::metrics::format_table(&r.to_table());
+        assert!(text.contains("autoscaled"));
+        assert!(text.contains("static-max"));
+        let auto = r.cell(
+            ElasticProcess::Bursty,
+            ClusterMode::Autoscaled,
+            SchedulerKind::Topsis,
+        );
+        let events = auto.scaling_events();
+        assert_eq!(events.len(), auto.scaling.len());
+        assert_eq!(auto.scaling.len(), auto.scale_outs + auto.scale_ins);
+        let json = events[0].to_json().to_string();
+        assert!(json.contains("\"event\":\"scaled\""), "{json}");
+    }
+}

@@ -3,6 +3,7 @@
 
 mod ablation;
 mod alloc;
+mod elastic;
 mod fig2;
 mod runner;
 mod table6;
@@ -10,6 +11,11 @@ mod table7;
 
 pub use ablation::{run_ablation, AblationResult};
 pub use alloc::{run_alloc_analysis, AllocAnalysis};
+pub use elastic::{
+    churn_schedule, elastic_policy, run_elastic, ClusterMode, ElasticCell,
+    ElasticProcess, ElasticityReport, BILLING_HORIZON_S, EXTRA_NODES,
+    SLO_WAIT_S,
+};
 pub use fig2::render_fig2;
 pub use runner::{run_cell, run_once, run_uniform, CellResult, ExperimentContext};
 pub use table6::{run_table6, Table6, Table6Row};

@@ -24,12 +24,15 @@
 //!   produced by `make artifacts` and executes them on the hot path.
 //! * [`simulation`] — deterministic discrete-event simulation engine with
 //!   a CPU-contention model.
+//! * [`autoscaler`] — queue-driven cluster autoscaling policies that
+//!   grow/shrink the simulated cluster through the event kernel.
 //! * [`metrics`] — Table IV metrics collection and paper-style reports.
 //! * [`experiments`] — drivers regenerating every table and figure of the
 //!   paper's evaluation (Table VI, Fig 2, Table VII, §V.D, ablations).
 //! * [`api`] — in-process kube-like submission loop (`serve` mode).
 
 pub mod api;
+pub mod autoscaler;
 pub mod cluster;
 pub mod util;
 pub mod config;

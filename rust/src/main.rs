@@ -7,6 +7,7 @@
 //! greenpod experiment table7 [--optimization P]   # Table VII impact
 //! greenpod experiment alloc [--level medium]      # §V.D analysis
 //! greenpod experiment ablation [--level medium]   # MCDA-method ablation
+//! greenpod experiment elastic [--csv] [--events]  # churn/autoscaler scenarios
 //! greenpod experiment all                         # everything above
 //! greenpod calibrate [--reps 4]                   # PJRT epoch timings
 //! greenpod serve --trace t.jsonl [--scheme energy-centric]
@@ -24,10 +25,10 @@ use greenpod::config::{
     CompetitionLevel, Config, SchedulerKind, WeightingScheme,
 };
 use greenpod::experiments::{
-    render_fig2, run_ablation, run_alloc_analysis, run_table6, run_table7,
-    ExperimentContext,
+    render_fig2, run_ablation, run_alloc_analysis, run_elastic, run_table6,
+    run_table7, ClusterMode, ElasticProcess, ExperimentContext,
 };
-use greenpod::metrics::format_table;
+use greenpod::metrics::{format_table, format_timeline};
 use greenpod::runtime::{ArtifactRegistry, LinRegRunner};
 use greenpod::scheduler::{
     DefaultK8sScheduler, Estimator, GreenPodScheduler,
@@ -35,7 +36,7 @@ use greenpod::scheduler::{
 use greenpod::util::cli::Args;
 use greenpod::workload::{ArrivalTrace, WorkloadClass, WorkloadExecutor};
 
-const FLAGS: &[&str] = &["pjrt", "csv", "help", "version"];
+const FLAGS: &[&str] = &["pjrt", "csv", "events", "help", "version"];
 const KNOWN_OPTS: &[&str] = &[
     "config", "replications", "seed", "section", "optimization", "level",
     "reps", "trace", "scheme", "time-scale", "only",
@@ -52,6 +53,7 @@ usage:
   greenpod experiment table7 [--optimization PCT]
   greenpod experiment alloc [--level low|medium|high]
   greenpod experiment ablation [--level low|medium|high]
+  greenpod experiment elastic [--csv] [--events]
   greenpod experiment all
   greenpod calibrate [--reps N]
   greenpod serve --trace FILE|- [--scheme S] [--time-scale X] [--only topsis|default]
@@ -204,6 +206,46 @@ fn run_experiment(cfg: &Config, args: &Args) -> Result<()> {
             let ab = run_ablation(&ctx, level);
             println!("{}", format_table(&ab.to_table()));
         }
+        "elastic" => {
+            let ctx = make_context(cfg, false)?;
+            let report = run_elastic(&ctx);
+            println!("{}", format_table(&report.to_table()));
+            if args.flag("csv") {
+                println!("\nCSV:\n{}", report.to_table().to_csv());
+            }
+            for process in ElasticProcess::ALL {
+                let cell = report.cell(
+                    process,
+                    ClusterMode::Autoscaled,
+                    SchedulerKind::Topsis,
+                );
+                let samples: Vec<(f64, usize)> = cell
+                    .node_timeline
+                    .iter()
+                    .map(|s| (s.at_s, s.ready_nodes))
+                    .collect();
+                println!(
+                    "\n{}",
+                    format_timeline(
+                        &format!(
+                            "Ready nodes, {} arrivals, autoscaled GreenPod \
+                             ({} scale-outs / {} scale-ins)",
+                            process.label(),
+                            cell.scale_outs,
+                            cell.scale_ins
+                        ),
+                        &samples,
+                        cell.makespan_s,
+                        64,
+                    )
+                );
+                if args.flag("events") {
+                    for ev in cell.scaling_events() {
+                        println!("{}", ev.to_json().to_string());
+                    }
+                }
+            }
+        }
         "all" => {
             let ctx = make_context(cfg, false)?;
             let t6 = run_table6(&ctx);
@@ -220,6 +262,9 @@ fn run_experiment(cfg: &Config, args: &Args) -> Result<()> {
             println!();
             let ab = run_ablation(&ctx, CompetitionLevel::Medium);
             println!("{}", format_table(&ab.to_table()));
+            println!();
+            let report = run_elastic(&ctx);
+            println!("{}", format_table(&report.to_table()));
         }
         other => bail!("unknown experiment `{other}`\n\n{USAGE}"),
     }

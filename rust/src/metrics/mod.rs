@@ -3,5 +3,5 @@
 mod report;
 mod stats;
 
-pub use report::{format_heatmap, format_table, Table};
+pub use report::{format_heatmap, format_table, format_timeline, Table};
 pub use stats::Summary;

@@ -126,6 +126,49 @@ pub fn format_heatmap(
     out
 }
 
+/// Render a step-function timeline (e.g. Ready-node count over a run)
+/// as a fixed-width block sparkline with its value range. `samples`
+/// are `(time, value)` change points; the value holds until the next
+/// sample (and to `end_s` after the last).
+pub fn format_timeline(
+    title: &str,
+    samples: &[(f64, usize)],
+    end_s: f64,
+    width: usize,
+) -> String {
+    if samples.is_empty() || width == 0 {
+        return format!("{title}\n(no samples)\n");
+    }
+    let lo = samples.iter().map(|&(_, v)| v).min().unwrap_or(0);
+    let hi = samples.iter().map(|&(_, v)| v).max().unwrap_or(0);
+    let end = end_s.max(samples.last().unwrap().0);
+    let value_at = |t: f64| {
+        let mut v = samples[0].1;
+        for &(at, val) in samples {
+            if at <= t {
+                v = val;
+            } else {
+                break;
+            }
+        }
+        v
+    };
+    const BLOCKS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let mut line = String::new();
+    for i in 0..width {
+        // Sample at the midpoint of each column's time slice.
+        let t = end * (i as f64 + 0.5) / width as f64;
+        let v = value_at(t);
+        let idx = if hi > lo {
+            (((v - lo) as f64 / (hi - lo) as f64) * 7.0).round() as usize
+        } else {
+            3
+        };
+        line.push(BLOCKS[idx.min(7)]);
+    }
+    format!("{title}\n{line}\nnodes {lo}–{hi} over {end:.1} s\n")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,6 +188,32 @@ mod tests {
     fn row_width_checked() {
         let mut t = Table::new("T", &["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn timeline_steps_between_levels() {
+        // 7 nodes for the first half, 9 for the second: the sparkline's
+        // first half is the low block, the second the high block.
+        let text = format_timeline(
+            "nodes",
+            &[(0.0, 7), (50.0, 9)],
+            100.0,
+            10,
+        );
+        let line = text.lines().nth(1).unwrap();
+        let chars: Vec<char> = line.chars().collect();
+        assert_eq!(chars.len(), 10);
+        assert_eq!(chars[0], '▁');
+        assert_eq!(chars[9], '█');
+        assert!(text.contains("nodes 7–9"));
+    }
+
+    #[test]
+    fn timeline_flat_and_empty_are_safe() {
+        let flat = format_timeline("n", &[(0.0, 7)], 10.0, 5);
+        assert_eq!(flat.lines().nth(1).unwrap().chars().count(), 5);
+        let empty = format_timeline("n", &[], 10.0, 5);
+        assert!(empty.contains("no samples"));
     }
 
     #[test]

@@ -19,15 +19,29 @@
 //! coalescing) — a differential-testing oracle: with all arrivals at
 //! t = 0 the two modes must produce identical placements
 //! (property-tested in `rust/tests/properties.rs`).
+//!
+//! Event mode can additionally run a cluster autoscaler
+//! (`SimulationParams::autoscaler`, DESIGN.md §"Autoscaler"): the
+//! policy is consulted after every event except arrivals and grows or
+//! shrinks the cluster by emitting `NodeJoined` / `NodeFailed` through
+//! the same kernel as churn injection. The energy meter attributes the
+//! idle floor of every Ready node (`EnergyMeter::node_online`), so
+//! scale-in shows up as measured savings. Batch mode ignores both
+//! `node_events` and the autoscaler — it is the fixed-cluster legacy
+//! oracle.
 
 use std::collections::{HashMap, VecDeque};
 
+use crate::autoscaler::{Autoscaler, AutoscalerPolicy, Observation, ScalingAction};
 use crate::cluster::{ClusterState, NodeId, Pod, PodPhase};
 use crate::config::{Config, SchedulerKind};
 use crate::energy::EnergyMeter;
 use crate::scheduler::Scheduler;
 use crate::simulation::event::{EventQueue, SimEvent, VirtualClock};
-use crate::simulation::{contention_factor, EventRecord, PodRecord, RunResult};
+use crate::simulation::{
+    contention_factor, EventRecord, NodeCountSample, PodRecord, RunResult,
+    ScalingRecord,
+};
 use crate::workload::WorkloadExecutor;
 
 /// A scheduled node-membership change (cluster churn injection).
@@ -47,11 +61,29 @@ pub struct SimulationParams {
     pub seed: u64,
     /// Node churn schedule (empty = the fixed paper cluster).
     pub node_events: Vec<NodeChange>,
+    /// Cluster-autoscaling policy (`None` = the fixed cluster; the run
+    /// is then bit-identical to the pre-autoscaler engine, which the
+    /// property suite pins).
+    pub autoscaler: Option<AutoscalerPolicy>,
+    /// Billing horizon for idle energy (s). By default the meter stops
+    /// at the last event, which undercounts a static cluster relative
+    /// to an autoscaled one whose trailing scale-ins extend the event
+    /// stream; setting a common horizon bills every configuration's
+    /// powered-on nodes over the same `[0, horizon]` window, making
+    /// totals comparable at equal admitted work (the elasticity
+    /// experiments set this; plain experiment cells do not).
+    pub billing_horizon_s: Option<f64>,
 }
 
 impl Default for SimulationParams {
     fn default() -> Self {
-        Self { contention_beta: 0.35, seed: 0, node_events: Vec::new() }
+        Self {
+            contention_beta: 0.35,
+            seed: 0,
+            node_events: Vec::new(),
+            autoscaler: None,
+            billing_horizon_s: None,
+        }
     }
 }
 
@@ -59,7 +91,13 @@ impl SimulationParams {
     /// Explicit contention/seed, no node churn — the common case for
     /// experiments, benches and examples.
     pub fn with_beta_and_seed(contention_beta: f64, seed: u64) -> Self {
-        Self { contention_beta, seed, node_events: Vec::new() }
+        Self { contention_beta, seed, ..Self::default() }
+    }
+
+    /// Attach an autoscaling policy.
+    pub fn with_autoscaler(mut self, policy: AutoscalerPolicy) -> Self {
+        self.autoscaler = Some(policy);
+        self
     }
 }
 
@@ -80,6 +118,10 @@ struct RunState {
     sched_latency_us: Vec<f64>,
     attempts: Vec<u32>,
     events: Vec<EventRecord>,
+    scaling: Vec<ScalingRecord>,
+    node_timeline: Vec<NodeCountSample>,
+    /// Fire time of the earliest pending `AutoscaleTick`, for dedupe.
+    next_tick: Option<f64>,
     makespan: f64,
     cycle_queued: bool,
 }
@@ -96,6 +138,9 @@ impl RunState {
             sched_latency_us: vec![0.0; n_pods],
             attempts: vec![0; n_pods],
             events: Vec::new(),
+            scaling: Vec::new(),
+            node_timeline: Vec::new(),
+            next_tick: None,
             makespan: 0.0,
             cycle_queued: false,
         }
@@ -109,6 +154,15 @@ impl RunState {
             self.queue.push(now, SimEvent::SchedulingCycle);
             self.cycle_queued = true;
         }
+    }
+
+    /// Append a node-count sample (after a membership change).
+    fn sample_nodes(&mut self, at_s: f64) {
+        self.node_timeline.push(NodeCountSample {
+            at_s,
+            ready_nodes: self.state.ready_nodes(),
+            total_nodes: self.state.nodes().len(),
+        });
     }
 
     fn into_result(
@@ -131,6 +185,8 @@ impl RunState {
             makespan_s: self.makespan,
             pjrt_fallbacks,
             events: self.events,
+            scaling: self.scaling,
+            node_timeline: self.node_timeline,
         }
     }
 }
@@ -163,9 +219,21 @@ impl<'a> SimulationEngine<'a> {
         let mut rs = RunState::new(self.config, pods.len());
         let mut clock = VirtualClock::default();
 
+        // Idle-floor metering starts with the configured cluster: every
+        // Ready node draws its idle power from t = 0 until it fails or
+        // is scaled in (`EnergyMeter::node_online`).
+        for id in 0..rs.state.nodes().len() {
+            if rs.state.node(id).ready {
+                let node = rs.state.node(id).clone();
+                rs.meter.node_online(&self.config.energy, &node, 0.0);
+            }
+        }
+        rs.sample_nodes(0.0);
+
         // Seed the queue: arrivals first (insertion order = pod order),
-        // then the churn schedule — so at equal timestamps arrivals
-        // precede membership changes, deterministically.
+        // then the churn schedule. The kernel's `(time, kind-priority,
+        // seq)` order guarantees same-timestamp arrivals precede
+        // membership changes however the events were pushed.
         for (i, p) in pods.iter().enumerate() {
             rs.queue.push(p.arrival_s, SimEvent::PodArrival { pod: i });
         }
@@ -178,10 +246,29 @@ impl<'a> SimulationEngine<'a> {
             rs.queue.push(ch.at_s, ev);
         }
 
+        // The autoscaler decides once at t = 0 (so schedules and
+        // wake-ups that start immediately are honored) and then after
+        // every event that leaves no same-instant scheduling cycle
+        // outstanding — if a cycle is queued at this timestamp, the
+        // pending queue is about to be retried and the cycle's own
+        // consultation follows, so the policy only ever reacts to
+        // backlog the scheduler actually failed to place. The policy's
+        // own wake-up ticks are always honored (the scheduled-churn
+        // replay depends on firing exactly on time, before the cycle).
+        let mut autoscaler = self
+            .params
+            .autoscaler
+            .as_ref()
+            .map(|p| p.build(rs.state.nodes().len()));
+        if let Some(policy) = autoscaler.as_deref_mut() {
+            self.autoscale(&mut rs, 0.0, &pods, policy);
+        }
+
         while let Some(ev) = rs.queue.pop() {
             let now = clock.advance_to(ev.at);
             rs.meter.advance(now);
             rs.events.push(EventRecord { at_s: now, kind: ev.event.kind() });
+            let is_tick = matches!(ev.event, SimEvent::AutoscaleTick);
             match ev.event {
                 SimEvent::PodArrival { pod } => {
                     rs.pending.push_back(pod);
@@ -199,17 +286,98 @@ impl<'a> SimulationEngine<'a> {
                 }
                 SimEvent::NodeJoined { node } => {
                     rs.state.set_ready(node, true, now);
+                    let joined = rs.state.node(node).clone();
+                    rs.meter.node_online(&self.config.energy, &joined, now);
+                    rs.sample_nodes(now);
                     if !rs.pending.is_empty() {
                         rs.request_cycle(now);
                     }
                 }
                 SimEvent::NodeFailed { node } => {
                     rs.state.set_ready(node, false, now);
+                    rs.meter.node_offline(node, now);
+                    rs.sample_nodes(now);
+                }
+                SimEvent::AutoscaleTick => {
+                    rs.next_tick = None;
+                }
+            }
+            if is_tick || !rs.cycle_queued {
+                if let Some(policy) = autoscaler.as_deref_mut() {
+                    self.autoscale(&mut rs, now, &pods, policy);
                 }
             }
         }
 
+        // Bill still-powered nodes' idle out to the common horizon
+        // (no-op when the horizon already passed or none is set).
+        if let Some(horizon) = self.params.billing_horizon_s {
+            rs.meter.advance(horizon);
+        }
+
         rs.into_result(&mut pods, 0)
+    }
+
+    /// One autoscaler consultation: observe, apply the decision's
+    /// actions in order, and (de-duplicated) schedule its wake-up.
+    fn autoscale(
+        &self,
+        rs: &mut RunState,
+        now: f64,
+        pods: &[Pod],
+        policy: &mut dyn Autoscaler,
+    ) {
+        let waits: Vec<f64> =
+            rs.pending.iter().map(|&i| now - pods[i].arrival_s).collect();
+        let decision = policy.decide(&Observation {
+            now_s: now,
+            state: &rs.state,
+            pending_wait_s: &waits,
+        });
+        for action in decision.actions {
+            match action {
+                ScalingAction::Provision { template, ready_at_s } => {
+                    let node = rs.state.add_node(&template, now);
+                    let at = ready_at_s.max(now);
+                    rs.queue.push(at, SimEvent::NodeJoined { node });
+                    // Sample so the timeline shows the booting node
+                    // (total > ready until its NodeJoined fires).
+                    rs.sample_nodes(now);
+                    rs.scaling.push(ScalingRecord {
+                        at_s: now,
+                        kind: "scale-out",
+                        node,
+                        effective_at_s: at,
+                    });
+                }
+                ScalingAction::Activate { node, at_s } => {
+                    let at = at_s.max(now);
+                    rs.queue.push(at, SimEvent::NodeJoined { node });
+                    rs.scaling.push(ScalingRecord {
+                        at_s: now,
+                        kind: "activate",
+                        node,
+                        effective_at_s: at,
+                    });
+                }
+                ScalingAction::Deactivate { node, at_s } => {
+                    let at = at_s.max(now);
+                    rs.queue.push(at, SimEvent::NodeFailed { node });
+                    rs.scaling.push(ScalingRecord {
+                        at_s: now,
+                        kind: "scale-in",
+                        node,
+                        effective_at_s: at,
+                    });
+                }
+            }
+        }
+        if let Some(wake) = decision.wake_at_s {
+            if wake > now && rs.next_tick.map_or(true, |t| wake < t) {
+                rs.queue.push(wake, SimEvent::AutoscaleTick);
+                rs.next_tick = Some(wake);
+            }
+        }
     }
 
     /// Batch mode (differential oracle, and the paper's burst
@@ -479,7 +647,12 @@ mod tests {
         );
         let engine = SimulationEngine::new(
             &config,
-            SimulationParams { contention_beta: 0.35, seed: 1, node_events },
+            SimulationParams {
+                contention_beta: 0.35,
+                seed: 1,
+                node_events,
+                ..SimulationParams::default()
+            },
             &executor,
         );
         let pods =
@@ -501,6 +674,114 @@ mod tests {
             );
             assert!(rec.wait_s > 0.0);
         }
+    }
+
+    #[test]
+    fn threshold_autoscaler_scales_out_under_backlog_and_back_in() {
+        use crate::autoscaler::{AutoscalerPolicy, ThresholdConfig};
+        use crate::workload::WorkloadClass;
+
+        // 18 complex pods against 16 complex slots: 2 overflow at
+        // t = 0.5, the depth-2 trigger provisions edge nodes, the
+        // overflow lands on them, and idle scale-in returns the cluster
+        // to its base size before the run ends.
+        let config = Config::paper_default();
+        let executor = WorkloadExecutor::analytic();
+        let mut pods = Vec::new();
+        for i in 0..18u64 {
+            let at = 0.25 * (i / 6) as f64;
+            pods.push(Pod::new(
+                i,
+                WorkloadClass::Complex,
+                SchedulerKind::Topsis,
+                at,
+                1,
+            ));
+        }
+        let policy = ThresholdConfig {
+            scale_out_pending: 2,
+            scale_out_wait_p95_s: f64::INFINITY,
+            provision_delay_s: 5.0,
+            cooldown_s: 2.0,
+            idle_scale_in_s: 10.0,
+            min_nodes: 7,
+            max_nodes: 10,
+            template: ThresholdConfig::edge_template(&config.cluster),
+        };
+        let params = SimulationParams::with_beta_and_seed(0.35, 1)
+            .with_autoscaler(AutoscalerPolicy::Threshold(policy));
+        let engine = SimulationEngine::new(&config, params, &executor);
+        let mut topsis = GreenPodScheduler::new(
+            Estimator::with_defaults(config.energy.clone()),
+            WeightingScheme::EnergyCentric,
+        );
+        let mut default = DefaultK8sScheduler::new(1);
+        let r = engine.run(pods, &mut topsis, &mut default);
+
+        assert_eq!(r.records.len(), 18);
+        assert!(r.unschedulable.is_empty());
+        assert!(r.scaling_count("scale-out") >= 1, "{:?}", r.scaling);
+        assert!(r.scaling_count("scale-in") >= 1, "{:?}", r.scaling);
+        // Provisioned capacity is append-only: autoscaled ids follow
+        // the 7 base nodes, and the overflow actually ran on one.
+        assert!(r.scaling.iter().all(|s| s.node >= 7));
+        assert!(
+            r.records.iter().any(|rec| rec.node >= 7),
+            "no pod ever used autoscaled capacity"
+        );
+        // Scale-out takes effect only after the provisioning delay.
+        for s in r.scaling.iter().filter(|s| s.kind == "scale-out") {
+            assert!((s.effective_at_s - s.at_s - 5.0).abs() < 1e-12);
+        }
+        assert!(r.peak_ready_nodes() > 7);
+        assert_eq!(r.node_timeline.last().unwrap().ready_nodes, 7);
+        assert!(r.idle_kj() > 0.0);
+        assert!(r.mean_ready_nodes() > 7.0);
+        assert!(r.mean_ready_nodes() < 10.0);
+    }
+
+    #[test]
+    fn disabled_threshold_policy_is_bit_identical_to_none() {
+        use crate::autoscaler::{AutoscalerPolicy, ThresholdConfig};
+
+        let config = Config::paper_default();
+        let executor = WorkloadExecutor::analytic();
+        let pods =
+            generate_pods(CompetitionLevel::High, &config.experiment, 9).pods;
+        let mk = || {
+            (
+                GreenPodScheduler::new(
+                    Estimator::with_defaults(config.energy.clone()),
+                    WeightingScheme::EnergyCentric,
+                ),
+                DefaultK8sScheduler::new(9),
+            )
+        };
+        let run = |params: SimulationParams| {
+            let engine = SimulationEngine::new(&config, params, &executor);
+            let (mut t, mut d) = mk();
+            engine.run(pods.clone(), &mut t, &mut d)
+        };
+        let plain = run(SimulationParams::with_beta_and_seed(0.35, 9));
+        let noop = run(
+            SimulationParams::with_beta_and_seed(0.35, 9).with_autoscaler(
+                AutoscalerPolicy::Threshold(ThresholdConfig::disabled(
+                    &config.cluster,
+                )),
+            ),
+        );
+        assert_eq!(plain.records.len(), noop.records.len());
+        for (x, y) in plain.records.iter().zip(&noop.records) {
+            assert_eq!(x.pod, y.pod);
+            assert_eq!(x.node, y.node);
+            assert_eq!(x.start_s, y.start_s);
+            assert_eq!(x.finish_s, y.finish_s);
+            assert_eq!(x.joules, y.joules);
+        }
+        assert_eq!(plain.events, noop.events);
+        assert_eq!(plain.makespan_s, noop.makespan_s);
+        assert!(noop.scaling.is_empty());
+        assert_eq!(plain.node_timeline, noop.node_timeline);
     }
 
     #[test]

@@ -2,9 +2,13 @@
 //! event queue (DESIGN.md §"Event kernel").
 //!
 //! Determinism contract:
-//! * events are ordered by `(time, seq)` where `seq` is the insertion
-//!   counter — simultaneous events fire in insertion order, so a run is
-//!   a pure function of `(pods, params, scheduler seeds)`;
+//! * events are ordered by `(time, kind-priority, seq)` where `seq` is
+//!   the insertion counter — at equal timestamps, state changes land in
+//!   a fixed kind order (arrivals, completions, autoscaler decisions,
+//!   failures, joins) before the scheduling cycle fires, and events of
+//!   the same kind fire in insertion order, so a run is a pure function
+//!   of `(pods, params, scheduler seeds)` regardless of *when* an event
+//!   was pushed (seeded at init vs. emitted at runtime);
 //! * the clock never moves backwards: `VirtualClock::advance_to`
 //!   is monotone (and debug-asserts it);
 //! * all randomness lives in the workload generator and the schedulers
@@ -33,6 +37,10 @@ pub enum SimEvent {
     /// Node fails: NotReady. Running pods keep their reservation
     /// (kube semantics: NotReady gates *new* bindings).
     NodeFailed { node: NodeId },
+    /// Autoscaler wake-up: re-evaluate the scaling policy even though
+    /// no workload event fired (idle-timeout scale-in, cooldown expiry,
+    /// scheduled churn replay).
+    AutoscaleTick,
 }
 
 impl SimEvent {
@@ -44,6 +52,29 @@ impl SimEvent {
             SimEvent::PodCompleted { .. } => "pod-completed",
             SimEvent::NodeJoined { .. } => "node-joined",
             SimEvent::NodeFailed { .. } => "node-failed",
+            SimEvent::AutoscaleTick => "autoscale-tick",
+        }
+    }
+
+    /// Same-timestamp tie-break rank (lower fires first). The
+    /// documented total order at one instant: pod arrivals land first,
+    /// then completions, then autoscaler decisions, then node failures,
+    /// then node joins, and the scheduling cycle runs only after every
+    /// same-time state change. In particular a `PodArrival` is never
+    /// outrun by a same-timestamp `NodeFailed` — scale-in cannot
+    /// silently race an arrival (regression-tested below) — no pod is
+    /// ever bound to a node whose failure is due at the same instant,
+    /// and a same-instant down+up blip on one node nets *Ready*
+    /// (failures before joins: recovery wins, as a down-then-up churn
+    /// schedule read in order would).
+    pub fn priority(&self) -> u8 {
+        match self {
+            SimEvent::PodArrival { .. } => 0,
+            SimEvent::PodCompleted { .. } => 1,
+            SimEvent::AutoscaleTick => 2,
+            SimEvent::NodeFailed { .. } => 3,
+            SimEvent::NodeJoined { .. } => 4,
+            SimEvent::SchedulingCycle => 5,
         }
     }
 }
@@ -62,6 +93,7 @@ impl Ord for ScheduledEvent {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         self.at
             .total_cmp(&other.at)
+            .then_with(|| self.event.priority().cmp(&other.event.priority()))
             .then_with(|| self.seq.cmp(&other.seq))
     }
 }
@@ -111,13 +143,14 @@ impl EventQueue {
         Self::default()
     }
 
-    /// Enqueue `event` at time `at`; insertion order breaks ties.
+    /// Enqueue `event` at time `at`; kind priority then insertion order
+    /// break ties.
     pub fn push(&mut self, at: f64, event: SimEvent) {
         self.heap.push(Reverse(ScheduledEvent { at, seq: self.seq, event }));
         self.seq += 1;
     }
 
-    /// Pop the earliest event (lowest `(at, seq)`).
+    /// Pop the earliest event (lowest `(at, priority, seq)`).
     pub fn pop(&mut self) -> Option<ScheduledEvent> {
         self.heap.pop().map(|Reverse(e)| e)
     }
@@ -190,5 +223,72 @@ mod tests {
         assert_eq!(SimEvent::PodCompleted { pod: 0 }.kind(), "pod-completed");
         assert_eq!(SimEvent::NodeJoined { node: 0 }.kind(), "node-joined");
         assert_eq!(SimEvent::NodeFailed { node: 0 }.kind(), "node-failed");
+        assert_eq!(SimEvent::AutoscaleTick.kind(), "autoscale-tick");
+    }
+
+    #[test]
+    fn same_timestamp_arrival_beats_node_failure() {
+        // The documented scale-in/arrival race fix: a NodeFailed pushed
+        // *before* a PodArrival at the same virtual time still fires
+        // after it — kind priority overrides insertion order.
+        let mut q = EventQueue::new();
+        q.push(3.0, SimEvent::NodeFailed { node: 1 });
+        q.push(3.0, SimEvent::PodArrival { pod: 0 });
+        assert_eq!(q.pop().unwrap().event, SimEvent::PodArrival { pod: 0 });
+        assert_eq!(
+            q.pop().unwrap().event,
+            SimEvent::NodeFailed { node: 1 }
+        );
+    }
+
+    #[test]
+    fn same_timestamp_total_order_is_documented_kind_order() {
+        // Push one event of every kind at one timestamp, in reverse of
+        // the documented order; the queue must restore it: arrival,
+        // completion, autoscale tick, failure, join, cycle.
+        let mut q = EventQueue::new();
+        q.push(1.0, SimEvent::SchedulingCycle);
+        q.push(1.0, SimEvent::NodeJoined { node: 1 });
+        q.push(1.0, SimEvent::NodeFailed { node: 0 });
+        q.push(1.0, SimEvent::AutoscaleTick);
+        q.push(1.0, SimEvent::PodCompleted { pod: 2 });
+        q.push(1.0, SimEvent::PodArrival { pod: 3 });
+        let kinds: Vec<&'static str> =
+            std::iter::from_fn(|| q.pop().map(|e| e.event.kind())).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                "pod-arrival",
+                "pod-completed",
+                "autoscale-tick",
+                "node-failed",
+                "node-joined",
+                "scheduling-cycle",
+            ]
+        );
+    }
+
+    #[test]
+    fn same_instant_down_up_blip_nets_ready() {
+        // A down+up blip at one timestamp resolves failure-then-join
+        // regardless of push order, so the node ends the instant Ready
+        // — recovery wins, matching a down-then-up schedule read in
+        // order.
+        let mut q = EventQueue::new();
+        q.push(9.0, SimEvent::NodeJoined { node: 2 });
+        q.push(9.0, SimEvent::NodeFailed { node: 2 });
+        assert_eq!(q.pop().unwrap().event, SimEvent::NodeFailed { node: 2 });
+        assert_eq!(q.pop().unwrap().event, SimEvent::NodeJoined { node: 2 });
+    }
+
+    #[test]
+    fn priority_only_breaks_exact_time_ties() {
+        // A strictly earlier low-priority event still precedes a later
+        // high-priority one: priority is a tie-break, not a reordering.
+        let mut q = EventQueue::new();
+        q.push(2.0, SimEvent::PodArrival { pod: 0 });
+        q.push(1.0, SimEvent::SchedulingCycle);
+        assert_eq!(q.pop().unwrap().event, SimEvent::SchedulingCycle);
+        assert_eq!(q.pop().unwrap().event, SimEvent::PodArrival { pod: 0 });
     }
 }

@@ -14,4 +14,6 @@ mod results;
 pub use contention::contention_factor;
 pub use engine::{NodeChange, SimulationEngine, SimulationParams};
 pub use event::{EventQueue, ScheduledEvent, SimEvent, VirtualClock};
-pub use results::{EventRecord, PodRecord, RunResult};
+pub use results::{
+    EventRecord, NodeCountSample, PodRecord, RunResult, ScalingRecord,
+};

@@ -38,6 +38,32 @@ pub struct EventRecord {
     pub kind: &'static str,
 }
 
+/// One autoscaler action, as applied to the kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalingRecord {
+    /// Decision time.
+    pub at_s: f64,
+    /// `"scale-out"` (provision), `"scale-in"` (deactivate) or
+    /// `"activate"` (scheduled rejoin).
+    pub kind: &'static str,
+    pub node: usize,
+    /// When the action takes effect (scale-out: decision time +
+    /// provisioning delay; others: the emitted event's time).
+    pub effective_at_s: f64,
+}
+
+/// One point of the node-count timeline (sampled at t = 0 and after
+/// every membership change).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeCountSample {
+    pub at_s: f64,
+    /// Nodes currently Ready (schedulable capacity).
+    pub ready_nodes: usize,
+    /// Nodes that exist, Ready or not (provisioned but still booting,
+    /// failed, scaled in).
+    pub total_nodes: usize,
+}
+
 /// The outcome of one simulated run.
 #[derive(Debug, Clone)]
 pub struct RunResult {
@@ -51,12 +77,80 @@ pub struct RunResult {
     pub pjrt_fallbacks: u64,
     /// Time-ordered kernel event log.
     pub events: Vec<EventRecord>,
+    /// Autoscaler actions, in decision order (empty without a policy).
+    pub scaling: Vec<ScalingRecord>,
+    /// Ready/total node counts over the run (event mode; empty in the
+    /// batch oracle).
+    pub node_timeline: Vec<NodeCountSample>,
 }
 
 impl RunResult {
     /// Mean per-pod energy (kJ) for one scheduler — Table VI's unit.
     pub fn mean_kj(&self, kind: SchedulerKind) -> f64 {
         self.meter.mean_kj_per_pod(kind)
+    }
+
+    /// Unattributed node-idle energy (kJ) — powered-on capacity no pod
+    /// accounted for. This is what scale-in saves.
+    pub fn idle_kj(&self) -> f64 {
+        self.meter.idle_kj()
+    }
+
+    /// Fraction of completed pods of `kind` whose queue wait exceeded
+    /// `slo_wait_s` (0.0 when none completed).
+    pub fn slo_miss_fraction(&self, kind: SchedulerKind, slo_wait_s: f64) -> f64 {
+        let (miss, n) = self
+            .records
+            .iter()
+            .filter(|r| r.scheduler == kind)
+            .fold((0usize, 0usize), |(m, n), r| {
+                (m + usize::from(r.wait_s > slo_wait_s), n + 1)
+            });
+        if n == 0 {
+            0.0
+        } else {
+            miss as f64 / n as f64
+        }
+    }
+
+    /// Time-weighted mean Ready-node count over `[0, makespan]` (0.0
+    /// when no timeline was sampled — the batch oracle).
+    pub fn mean_ready_nodes(&self) -> f64 {
+        let end = self.makespan_s;
+        if self.node_timeline.is_empty() || end <= 0.0 {
+            return self
+                .node_timeline
+                .first()
+                .map_or(0.0, |s| s.ready_nodes as f64);
+        }
+        let mut area = 0.0;
+        for (i, s) in self.node_timeline.iter().enumerate() {
+            let from = s.at_s.min(end);
+            let to = self
+                .node_timeline
+                .get(i + 1)
+                .map_or(end, |n| n.at_s)
+                .min(end);
+            if to > from {
+                area += s.ready_nodes as f64 * (to - from);
+            }
+        }
+        area / end
+    }
+
+    /// Peak Ready-node count over the run.
+    pub fn peak_ready_nodes(&self) -> usize {
+        self.node_timeline
+            .iter()
+            .map(|s| s.ready_nodes)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Scaling actions of one kind (`"scale-out"` / `"scale-in"` /
+    /// `"activate"`).
+    pub fn scaling_count(&self, kind: &str) -> usize {
+        self.scaling.iter().filter(|s| s.kind == kind).count()
     }
 
     /// Mean scheduling latency (ms) for one scheduler — the paper's

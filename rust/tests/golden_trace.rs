@@ -2,18 +2,22 @@
 //! trace (`tests/data/golden_trace.jsonl`) through the discrete-event
 //! engine and assert placements, queue waits, attempt counts and
 //! energy against the checked-in expectations
-//! (`tests/data/golden_trace.expected.json`).
+//! (`tests/data/golden_trace.expected.json`), then replay the same
+//! trace under the queue-driven threshold autoscaler against
+//! `tests/data/golden_trace_autoscaled.expected.json` (scaling
+//! actions, autoscaled placements, idle energy, node counts).
 //!
 //! The expectations are produced by an *independent oracle* — a Python
 //! mirror of the engine's arithmetic
-//! (`python/tools/make_golden_trace.py`) — so this test pins both the
-//! engine's determinism and its numerical semantics. Placements and
-//! attempt counts must match exactly; times and joules to 1e-9
-//! relative (the two implementations share IEEE-754 doubles but may
-//! round intermediate sums differently).
+//! (`python/tools/make_golden_trace.py`) — so these tests pin both the
+//! engine's determinism and its numerical semantics. Placements,
+//! attempt counts and scaling actions must match exactly; times and
+//! joules to 1e-9 relative (the two implementations share IEEE-754
+//! doubles but may round intermediate sums differently).
 
 use std::collections::HashMap;
 
+use greenpod::autoscaler::{AutoscalerPolicy, ThresholdConfig};
 use greenpod::config::{Config, SchedulerKind, WeightingScheme};
 use greenpod::scheduler::{DefaultK8sScheduler, Estimator, GreenPodScheduler};
 use greenpod::simulation::{RunResult, SimulationEngine, SimulationParams};
@@ -26,23 +30,40 @@ fn data_path(name: &str) -> std::path::PathBuf {
         .join(name)
 }
 
+/// The autoscaled fixture's policy — mirrored by `GOLDEN_POLICY` in
+/// `python/tools/make_golden_trace.py`.
+fn golden_policy(cfg: &Config) -> ThresholdConfig {
+    ThresholdConfig {
+        scale_out_pending: 2,
+        scale_out_wait_p95_s: f64::INFINITY,
+        provision_delay_s: 5.0,
+        cooldown_s: 2.0,
+        idle_scale_in_s: 10.0,
+        min_nodes: 7,
+        max_nodes: 10,
+        template: ThresholdConfig::edge_template(&cfg.cluster),
+    }
+}
+
 /// Replay the committed trace with the golden configuration: paper
-/// defaults, all pods TOPSIS-owned, energy-centric profile, seed 42.
-fn replay() -> RunResult {
+/// defaults, all pods TOPSIS-owned, energy-centric profile, seed 42 —
+/// optionally under the autoscaled fixture's threshold policy.
+fn replay_with(autoscaled: bool) -> RunResult {
     let cfg = Config::paper_default();
     let executor = WorkloadExecutor::analytic();
     let text = std::fs::read_to_string(data_path("golden_trace.jsonl"))
         .expect("committed golden trace");
     let trace = ArrivalTrace::from_jsonl(&text).expect("parse golden trace");
     let pods = trace.to_pods(SchedulerKind::Topsis);
-    let engine = SimulationEngine::new(
-        &cfg,
-        SimulationParams::with_beta_and_seed(
-            cfg.experiment.contention_beta,
-            42,
-        ),
-        &executor,
+    let mut params = SimulationParams::with_beta_and_seed(
+        cfg.experiment.contention_beta,
+        42,
     );
+    if autoscaled {
+        params = params
+            .with_autoscaler(AutoscalerPolicy::Threshold(golden_policy(&cfg)));
+    }
+    let engine = SimulationEngine::new(&cfg, params, &executor);
     let mut topsis = GreenPodScheduler::new(
         Estimator::new(
             cfg.energy.clone(),
@@ -55,6 +76,10 @@ fn replay() -> RunResult {
     engine.run(pods, &mut topsis, &mut default)
 }
 
+fn replay() -> RunResult {
+    replay_with(false)
+}
+
 fn assert_close(what: &str, got: f64, want: f64) {
     let tol = 1e-9 * want.abs().max(1.0);
     assert!(
@@ -63,21 +88,9 @@ fn assert_close(what: &str, got: f64, want: f64) {
     );
 }
 
-#[test]
-fn golden_trace_matches_checked_in_expectations() {
-    let result = replay();
-    assert!(
-        result.unschedulable.is_empty(),
-        "golden trace must fully complete: {:?}",
-        result.unschedulable
-    );
-
-    let expected = Json::parse(
-        &std::fs::read_to_string(data_path("golden_trace.expected.json"))
-            .expect("committed golden expectations"),
-    )
-    .expect("parse golden expectations");
-
+/// Assert the per-pod records, makespan and TOPSIS energy total of
+/// `result` against one expected-JSON fixture.
+fn assert_matches_fixture(result: &RunResult, expected: &Json) {
     let by_pod: HashMap<u64, &greenpod::simulation::PodRecord> =
         result.records.iter().map(|r| (r.pod, r)).collect();
 
@@ -143,12 +156,119 @@ fn golden_trace_matches_checked_in_expectations() {
         result.meter.total_kj(SchedulerKind::Topsis),
         expected.req_f64("total_kj").unwrap(),
     );
+}
+
+fn load_fixture(name: &str) -> Json {
+    Json::parse(
+        &std::fs::read_to_string(data_path(name))
+            .expect("committed golden expectations"),
+    )
+    .expect("parse golden expectations")
+}
+
+#[test]
+fn golden_trace_matches_checked_in_expectations() {
+    let result = replay();
+    assert!(
+        result.unschedulable.is_empty(),
+        "golden trace must fully complete: {:?}",
+        result.unschedulable
+    );
+
+    let expected = load_fixture("golden_trace.expected.json");
+    assert_matches_fixture(&result, &expected);
 
     // The golden scenario must actually exercise queueing: some pods
     // wait and retry.
     let queued = result.records.iter().filter(|r| r.wait_s > 0.0).count();
     assert!(queued > 0, "golden trace exercises no queueing");
     assert!(result.records.iter().any(|r| r.attempts > 1));
+    // No autoscaler: no scaling actions, flat node timeline.
+    assert!(result.scaling.is_empty());
+    assert!(result
+        .node_timeline
+        .iter()
+        .all(|s| s.ready_nodes == 7 && s.total_nodes == 7));
+}
+
+#[test]
+fn autoscaled_golden_trace_matches_checked_in_expectations() {
+    let result = replay_with(true);
+    assert!(
+        result.unschedulable.is_empty(),
+        "autoscaled golden trace must fully complete: {:?}",
+        result.unschedulable
+    );
+
+    let expected = load_fixture("golden_trace_autoscaled.expected.json");
+    assert_matches_fixture(&result, &expected);
+
+    // Scaling actions: exact kinds, nodes and order; times to 1e-9.
+    let want_scaling = expected
+        .get("scaling")
+        .and_then(Json::as_arr)
+        .expect("`scaling` array");
+    assert_eq!(
+        result.scaling.len(),
+        want_scaling.len(),
+        "scaling action count drifted: {:?}",
+        result.scaling
+    );
+    for (i, (got, want)) in
+        result.scaling.iter().zip(want_scaling).enumerate()
+    {
+        assert_eq!(got.kind, want.req_str("kind").unwrap(), "action {i}");
+        assert_eq!(
+            got.node,
+            want.get("node").and_then(Json::as_usize).unwrap(),
+            "action {i} node"
+        );
+        assert_close(
+            &format!("action {i} at_s"),
+            got.at_s,
+            want.req_f64("at_s").unwrap(),
+        );
+        assert_close(
+            &format!("action {i} effective_at_s"),
+            got.effective_at_s,
+            want.req_f64("effective_at_s").unwrap(),
+        );
+    }
+
+    // Idle-energy attribution and the node-count envelope.
+    assert_close(
+        "idle_kj",
+        result.idle_kj(),
+        expected.req_f64("idle_kj").unwrap(),
+    );
+    assert_eq!(
+        result.peak_ready_nodes(),
+        expected
+            .get("peak_ready_nodes")
+            .and_then(Json::as_usize)
+            .unwrap()
+    );
+    let last = result.node_timeline.last().expect("timeline sampled");
+    assert_eq!(
+        last.ready_nodes,
+        expected
+            .get("final_ready_nodes")
+            .and_then(Json::as_usize)
+            .unwrap()
+    );
+    assert_eq!(
+        last.total_nodes,
+        expected
+            .get("final_total_nodes")
+            .and_then(Json::as_usize)
+            .unwrap()
+    );
+
+    // The scenario exercises the full lifecycle: provisioned capacity
+    // was actually used, and the cluster returned to base size.
+    assert!(result.records.iter().any(|r| r.node >= 7));
+    assert!(result.scaling.iter().any(|s| s.kind == "scale-out"));
+    assert!(result.scaling.iter().any(|s| s.kind == "scale-in"));
 }
 
 #[test]

@@ -5,6 +5,7 @@
 //! shrinkage is traded for printing the failing case's seed so it can
 //! be replayed.
 
+use greenpod::autoscaler::{AutoscalerPolicy, ThresholdConfig};
 use greenpod::cluster::{ClusterState, Pod};
 use greenpod::config::{
     ClusterConfig, CompetitionLevel, Config, ExperimentConfig,
@@ -16,11 +17,13 @@ use greenpod::mcda::{
 use greenpod::scheduler::{
     DefaultK8sScheduler, Estimator, GreenPodScheduler, Scheduler,
 };
-use greenpod::simulation::{RunResult, SimulationEngine, SimulationParams};
+use greenpod::simulation::{
+    NodeChange, RunResult, SimulationEngine, SimulationParams,
+};
 use greenpod::util::rng::Rng;
 use greenpod::workload::{
-    generate_pods, generate_pods_with, ArrivalProcess, WorkloadClass,
-    WorkloadExecutor,
+    generate_pods, generate_pods_with, ArrivalProcess, ArrivalTrace,
+    TraceSpec, WorkloadClass, WorkloadExecutor,
 };
 
 /// Case-count knob: `GREENPOD_PROP_CASES` scales every property's
@@ -466,6 +469,345 @@ fn prop_no_pod_lost_between_arrival_and_completion() {
             assert!(rec.finish_s > rec.start_s);
             assert!(rec.joules.is_finite() && rec.joules > 0.0);
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Autoscaler properties (the threshold policy's contract with the
+// kernel — DESIGN.md §"Autoscaler").
+
+/// Run one seeded deployment through the event engine under an optional
+/// autoscaling policy (and optional churn schedule).
+fn run_autoscaled_case(
+    config: &Config,
+    executor: &WorkloadExecutor,
+    pods: Vec<Pod>,
+    seed: u64,
+    node_events: Vec<NodeChange>,
+    policy: Option<AutoscalerPolicy>,
+) -> RunResult {
+    let params = SimulationParams {
+        contention_beta: config.experiment.contention_beta,
+        seed,
+        node_events,
+        autoscaler: policy,
+        ..SimulationParams::default()
+    };
+    let engine = SimulationEngine::new(config, params, executor);
+    let mut topsis = GreenPodScheduler::new(
+        Estimator::with_defaults(config.energy.clone()),
+        WeightingScheme::EnergyCentric,
+    );
+    let mut default = DefaultK8sScheduler::new(seed);
+    engine.run(pods, &mut topsis, &mut default)
+}
+
+fn random_threshold_policy(
+    rng: &mut Rng,
+    cluster: &ClusterConfig,
+) -> ThresholdConfig {
+    let base = cluster.total_nodes();
+    ThresholdConfig {
+        scale_out_pending: 1 + rng.below(4),
+        scale_out_wait_p95_s: if rng.chance(0.5) {
+            rng.range_f64(2.0, 30.0)
+        } else {
+            f64::INFINITY
+        },
+        provision_delay_s: rng.range_f64(0.5, 10.0),
+        cooldown_s: rng.range_f64(0.0, 10.0),
+        idle_scale_in_s: if rng.chance(0.7) {
+            rng.range_f64(5.0, 30.0)
+        } else {
+            f64::INFINITY
+        },
+        min_nodes: base,
+        max_nodes: base + 1 + rng.below(5),
+        template: if rng.chance(0.5) {
+            ThresholdConfig::edge_template(cluster)
+        } else {
+            ThresholdConfig::cloud_template(cluster)
+        },
+    }
+}
+
+#[test]
+fn prop_autoscaler_node_count_stays_in_bounds() {
+    // Under random workloads and random threshold policies the Ready
+    // node count never leaves [min_nodes, max_nodes], conservation
+    // holds, and every scaling action is well-formed.
+    let mut rng = Rng::seed_from_u64(13);
+    let config = Config::paper_default();
+    let executor = WorkloadExecutor::analytic();
+    let base = config.cluster.total_nodes();
+    for case in 0..prop_cases(20) {
+        let level = match rng.below(3) {
+            0 => CompetitionLevel::Low,
+            1 => CompetitionLevel::Medium,
+            _ => CompetitionLevel::High,
+        };
+        let process = random_process(&mut rng);
+        let policy = random_threshold_policy(&mut rng, &config.cluster);
+        let (min_n, max_n) = (policy.min_nodes, policy.max_nodes);
+        let seed = rng.next_u64();
+        let pods =
+            generate_pods_with(level, &config.experiment, seed, process).pods;
+        let r = run_autoscaled_case(
+            &config,
+            &executor,
+            pods,
+            seed,
+            Vec::new(),
+            Some(AutoscalerPolicy::Threshold(policy)),
+        );
+        assert_eq!(
+            r.records.len() + r.unschedulable.len(),
+            level.total_pods(),
+            "case {case} (seed {seed}): pods lost"
+        );
+        assert!(!r.node_timeline.is_empty());
+        for s in &r.node_timeline {
+            assert!(
+                (min_n..=max_n).contains(&s.ready_nodes),
+                "case {case} (seed {seed}): ready {} outside [{min_n}, \
+                 {max_n}] at {}",
+                s.ready_nodes,
+                s.at_s
+            );
+            assert!(s.total_nodes >= base);
+            assert!(s.ready_nodes <= s.total_nodes);
+        }
+        for a in &r.scaling {
+            assert!(a.node >= base, "case {case}: scaled a base node");
+            assert!(a.effective_at_s >= a.at_s);
+            assert!(matches!(a.kind, "scale-out" | "scale-in" | "activate"));
+        }
+        // Every scale-in targets a node that was provisioned first,
+        // and every reactivation targets a previously scaled-in node.
+        let outs: Vec<usize> = r
+            .scaling
+            .iter()
+            .filter(|a| a.kind == "scale-out")
+            .map(|a| a.node)
+            .collect();
+        for a in r
+            .scaling
+            .iter()
+            .filter(|a| a.kind == "scale-in" || a.kind == "activate")
+        {
+            assert!(outs.contains(&a.node), "case {case}: {a:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_autoscaler_disabled_is_bit_identical() {
+    // A policy whose every trigger is disabled must be bit-identical —
+    // records, event log, makespan — to running with no autoscaler at
+    // all: plugging the subsystem in perturbs nothing.
+    let mut rng = Rng::seed_from_u64(14);
+    let config = Config::paper_default();
+    let executor = WorkloadExecutor::analytic();
+    for case in 0..prop_cases(15) {
+        let level = match rng.below(3) {
+            0 => CompetitionLevel::Low,
+            1 => CompetitionLevel::Medium,
+            _ => CompetitionLevel::High,
+        };
+        let process = random_process(&mut rng);
+        let seed = rng.next_u64();
+        let pods =
+            generate_pods_with(level, &config.experiment, seed, process).pods;
+        let plain = run_autoscaled_case(
+            &config,
+            &executor,
+            pods.clone(),
+            seed,
+            Vec::new(),
+            None,
+        );
+        let noop = run_autoscaled_case(
+            &config,
+            &executor,
+            pods,
+            seed,
+            Vec::new(),
+            Some(AutoscalerPolicy::Threshold(ThresholdConfig::disabled(
+                &config.cluster,
+            ))),
+        );
+        assert_eq!(plain.records.len(), noop.records.len(), "case {case}");
+        for (x, y) in plain.records.iter().zip(&noop.records) {
+            assert_eq!(x.pod, y.pod, "case {case} (seed {seed})");
+            assert_eq!(x.node, y.node);
+            assert_eq!(x.start_s, y.start_s);
+            assert_eq!(x.finish_s, y.finish_s);
+            assert_eq!(x.wait_s, y.wait_s);
+            assert_eq!(x.attempts, y.attempts);
+            assert_eq!(x.joules, y.joules);
+        }
+        assert_eq!(plain.events, noop.events, "case {case}");
+        assert_eq!(plain.makespan_s, noop.makespan_s);
+        assert_eq!(plain.unschedulable, noop.unschedulable);
+        assert!(noop.scaling.is_empty());
+        assert_eq!(plain.node_timeline, noop.node_timeline);
+    }
+}
+
+#[test]
+fn prop_autoscaler_scale_out_threshold_monotone() {
+    // Two monotonicity guarantees when raising the depth threshold
+    // under the same workload and seed (cross-validated against the
+    // Python engine mirror, python/tools/make_golden_trace.py):
+    //
+    // 1. the first scale-out never happens *earlier* — runs are
+    //    identical until the first action, and a depth that reaches a
+    //    higher threshold has reached every lower one;
+    // 2. with provisioning slower than the run (added nodes never
+    //    join, so scaling cannot feed back into placement), the final
+    //    node count — base + total provisions — never increases.
+    //
+    // Unrestricted final-count monotonicity is *not* a law of the
+    // closed loop: an early scale-out at a low threshold can absorb
+    // backlog that would otherwise re-trigger scaling later, so a
+    // higher threshold occasionally ends up provisioning more.
+    let mut rng = Rng::seed_from_u64(15);
+    let config = Config::paper_default();
+    let executor = WorkloadExecutor::analytic();
+    let base = config.cluster.total_nodes();
+    let spec = TraceSpec {
+        rate_per_s: 0.3,
+        duration_s: 120.0,
+        p_light: 0.2,
+        p_medium: 0.2,
+        p_complex: 0.6,
+        epochs: [2, 2, 1],
+    };
+    let depths = [1usize, 2, 3, 5, 8];
+    for case in 0..prop_cases(10) {
+        let seed = rng.next_u64();
+        let trace = ArrivalTrace::bursty(&spec, 12, seed);
+        let run = |depth: usize, provision_delay_s: f64| {
+            let policy = ThresholdConfig {
+                scale_out_pending: depth,
+                scale_out_wait_p95_s: f64::INFINITY,
+                provision_delay_s,
+                cooldown_s: 2.0,
+                idle_scale_in_s: f64::INFINITY,
+                min_nodes: base,
+                max_nodes: base + 4,
+                template: ThresholdConfig::edge_template(&config.cluster),
+            };
+            run_autoscaled_case(
+                &config,
+                &executor,
+                trace.to_pods(SchedulerKind::Topsis),
+                0,
+                Vec::new(),
+                Some(AutoscalerPolicy::Threshold(policy)),
+            )
+        };
+
+        // 1. First-scale-out time is non-decreasing in the threshold.
+        let mut last_first = 0.0_f64;
+        for depth in depths {
+            let r = run(depth, 5.0);
+            assert!(r.unschedulable.is_empty(), "case {case} seed {seed}");
+            let first = r
+                .scaling
+                .iter()
+                .find(|a| a.kind == "scale-out")
+                .map_or(f64::INFINITY, |a| a.at_s);
+            assert!(
+                first >= last_first,
+                "case {case} (seed {seed}): depth {depth} scaled out at \
+                 {first} — earlier than a lower threshold ({last_first})"
+            );
+            last_first = first;
+        }
+
+        // 2. Open-loop provisions (delay outlasts the run) are
+        //    non-increasing in the threshold.
+        let mut last_total = usize::MAX;
+        for depth in depths {
+            let r = run(depth, 1e6);
+            let total = base + r.scaling_count("scale-out");
+            assert_eq!(r.scaling_count("scale-in"), 0);
+            assert!(
+                total <= last_total,
+                "case {case} (seed {seed}): depth {depth} provisioned \
+                 {total} nodes > {last_total} at a lower threshold"
+            );
+            last_total = total;
+        }
+    }
+}
+
+#[test]
+fn prop_churn_schedule_equals_autoscaler_replay() {
+    // The differential contract: a churn schedule injected through
+    // `SimulationParams::node_events` and the same schedule replayed
+    // through the autoscaler's event-emission path share the kernel,
+    // so placements, times, energy and outcomes are identical.
+    let mut rng = Rng::seed_from_u64(16);
+    let config = Config::paper_default();
+    let executor = WorkloadExecutor::analytic();
+    let n_nodes = config.cluster.total_nodes();
+    for case in 0..prop_cases(15) {
+        let level = match rng.below(3) {
+            0 => CompetitionLevel::Low,
+            1 => CompetitionLevel::Medium,
+            _ => CompetitionLevel::High,
+        };
+        let process = random_process(&mut rng);
+        let seed = rng.next_u64();
+        // Random churn: pair each failure with a later rejoin so the
+        // cluster always recovers (every pod eventually completes in
+        // both runs — and must do so identically).
+        let mut schedule = Vec::new();
+        for _ in 0..1 + rng.below(4) {
+            let node = rng.below(n_nodes);
+            let down_at = rng.range_f64(0.0, 30.0);
+            let up_at = down_at + rng.range_f64(1.0, 30.0);
+            schedule.push(NodeChange { at_s: down_at, node, up: false });
+            schedule.push(NodeChange { at_s: up_at, node, up: true });
+        }
+        let pods =
+            generate_pods_with(level, &config.experiment, seed, process).pods;
+        let injected = run_autoscaled_case(
+            &config,
+            &executor,
+            pods.clone(),
+            seed,
+            schedule.clone(),
+            None,
+        );
+        let replayed = run_autoscaled_case(
+            &config,
+            &executor,
+            pods,
+            seed,
+            Vec::new(),
+            Some(AutoscalerPolicy::Scheduled(schedule)),
+        );
+        assert_eq!(
+            injected.records.len(),
+            replayed.records.len(),
+            "case {case} (seed {seed})"
+        );
+        for (x, y) in injected.records.iter().zip(&replayed.records) {
+            assert_eq!(x.pod, y.pod, "case {case} (seed {seed})");
+            assert_eq!(x.node, y.node, "case {case} (seed {seed})");
+            assert_eq!(x.start_s, y.start_s);
+            assert_eq!(x.finish_s, y.finish_s);
+            assert_eq!(x.wait_s, y.wait_s);
+            assert_eq!(x.attempts, y.attempts);
+            assert_eq!(x.joules, y.joules);
+        }
+        assert_eq!(injected.unschedulable, replayed.unschedulable);
+        assert_eq!(injected.makespan_s, replayed.makespan_s);
+        // Idle-energy attribution sees the same Ready intervals.
+        assert_eq!(injected.meter.idle_kj(), replayed.meter.idle_kj());
     }
 }
 
