@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut api = ApiLoop::new(cfg.clone(), WorkloadExecutor::analytic());
-    api.time_scale = 100.0;
+    api.set_time_scale(100.0)?;
 
     let (sub_tx, sub_rx) = std::sync::mpsc::channel();
     let entries = trace.entries.clone();

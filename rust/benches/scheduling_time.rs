@@ -41,6 +41,21 @@ fn main() {
         b.bench(&format!("schedule/default-k8s/{n_nodes}-nodes"), || {
             default_sched.schedule(&state, &pod).node
         });
+
+        // The same pipelines composed from framework plugins, plus the
+        // profiles only the framework can express — overhead of the
+        // extension-point indirection should be noise.
+        let registry = greenpod::framework::ProfileRegistry::new(&cfg);
+        let opts = greenpod::framework::BuildOptions::new(
+            &cfg,
+            WeightingScheme::EnergyCentric,
+        );
+        for name in registry.names() {
+            let mut sched = registry.build(&name, &opts).unwrap();
+            b.bench(&format!("schedule/profile-{name}/{n_nodes}-nodes"), || {
+                sched.schedule(&state, &pod).node
+            });
+        }
     }
 
     // Decision-matrix construction alone (scoring excluded), to show

@@ -37,6 +37,10 @@ pub enum ApiEvent {
         pod: PodId,
         name: String,
         node: String,
+        /// Name of the scheduling profile (or legacy scheduler) that
+        /// placed the pod — attributes each binding when multiple
+        /// profiles serve one trace.
+        profile: String,
         sched_latency_us: f64,
         /// Virtual seconds the pod queued before binding (wall wait
         /// scaled by `time_scale` — the serve-loop counterpart of the
@@ -81,6 +85,7 @@ impl ApiEvent {
                 pod,
                 name,
                 node,
+                profile,
                 sched_latency_us,
                 queue_wait_s,
             } => Json::obj(vec![
@@ -88,6 +93,7 @@ impl ApiEvent {
                 ("pod", Json::Num(*pod as f64)),
                 ("name", Json::Str(name.clone())),
                 ("node", Json::Str(node.clone())),
+                ("profile", Json::Str(profile.clone())),
                 ("sched_latency_us", Json::Num(*sched_latency_us)),
                 ("queue_wait_s", Json::Num(*queue_wait_s)),
             ]),
@@ -158,12 +164,29 @@ pub struct ApiLoop {
     executor: WorkloadExecutor,
     /// Virtual-seconds-per-real-second compression for executions
     /// (e.g. 100.0 replays a 50 s workload in 0.5 s of wall time).
-    pub time_scale: f64,
+    /// Private: validated once at [`ApiLoop::set_time_scale`], so every
+    /// use site can divide/multiply by it without re-guarding.
+    time_scale: f64,
 }
 
 impl ApiLoop {
     pub fn new(config: Config, executor: WorkloadExecutor) -> Self {
         Self { config, executor, time_scale: 100.0 }
+    }
+
+    /// Set the time compression. Rejects non-finite or non-positive
+    /// values — the single validation point for every `time_scale` use.
+    pub fn set_time_scale(&mut self, time_scale: f64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            time_scale.is_finite() && time_scale > 0.0,
+            "time_scale must be a finite positive number, got {time_scale}"
+        );
+        self.time_scale = time_scale;
+        Ok(())
+    }
+
+    pub fn time_scale(&self) -> f64 {
+        self.time_scale
     }
 
     /// Drain `rx`, scheduling each submission with its owner scheduler;
@@ -277,9 +300,13 @@ impl ApiLoop {
         topsis: &mut dyn Scheduler,
         default: &mut dyn Scheduler,
     ) -> anyhow::Result<Option<Pod>> {
-        let decision = match pod.scheduler {
-            SchedulerKind::Topsis => topsis.schedule(state, &pod),
-            SchedulerKind::DefaultK8s => default.schedule(state, &pod),
+        let (decision, profile) = match pod.scheduler {
+            SchedulerKind::Topsis => {
+                (topsis.schedule(state, &pod), topsis.name().to_string())
+            }
+            SchedulerKind::DefaultK8s => {
+                (default.schedule(state, &pod), default.name().to_string())
+            }
         };
         let Some(node_id) = decision.node else {
             return Ok(Some(pod));
@@ -309,13 +336,14 @@ impl ApiLoop {
             pod: pod.id,
             name: pod.name.clone(),
             node: node.name.clone(),
+            profile,
             sched_latency_us: decision.latency.as_secs_f64() * 1e6,
             queue_wait_s: submitted.elapsed().as_secs_f64()
-                * self.time_scale.max(1e-9),
+                * self.time_scale,
         });
 
         let due = Instant::now()
-            + Duration::from_secs_f64(duration / self.time_scale.max(1e-9));
+            + Duration::from_secs_f64(duration / self.time_scale);
         timers.push(Reverse(Running {
             due,
             seq: *seq,
@@ -342,7 +370,7 @@ mod tests {
         let config = Config::paper_default();
         let mut api =
             ApiLoop::new(config.clone(), WorkloadExecutor::analytic());
-        api.time_scale = 100_000.0; // fast test
+        api.set_time_scale(100_000.0).unwrap(); // fast test
 
         let (sub_tx, sub_rx) = std::sync::mpsc::channel();
         for i in 0..6u64 {
@@ -400,7 +428,7 @@ mod tests {
         let config = Config::paper_default();
         let mut api =
             ApiLoop::new(config.clone(), WorkloadExecutor::analytic());
-        api.time_scale = 100_000.0;
+        api.set_time_scale(100_000.0).unwrap();
         let (sub_tx, sub_rx) = std::sync::mpsc::channel();
         for _ in 0..12 {
             sub_tx
@@ -456,13 +484,30 @@ mod tests {
             pod: 3,
             name: "p".into(),
             node: "n".into(),
+            profile: "greenpod".into(),
             sched_latency_us: 12.5,
             queue_wait_s: 0.25,
         };
         let j = e.to_json().to_string();
         assert!(j.contains("\"event\":\"bound\""), "{j}");
         assert!(j.contains("\"pod\":3"));
+        assert!(j.contains("\"profile\":\"greenpod\""), "{j}");
         assert!(j.contains("\"queue_wait_s\":0.25"), "{j}");
+    }
+
+    #[test]
+    fn bad_time_scale_rejected() {
+        let config = Config::paper_default();
+        let mut api =
+            ApiLoop::new(config, WorkloadExecutor::analytic());
+        assert!(api.set_time_scale(0.0).is_err());
+        assert!(api.set_time_scale(-3.0).is_err());
+        assert!(api.set_time_scale(f64::NAN).is_err());
+        assert!(api.set_time_scale(f64::INFINITY).is_err());
+        // The default survives every rejected set.
+        assert_eq!(api.time_scale(), 100.0);
+        api.set_time_scale(42.0).unwrap();
+        assert_eq!(api.time_scale(), 42.0);
     }
 
     #[test]
@@ -472,7 +517,7 @@ mod tests {
         let config = Config::paper_default();
         let mut api =
             ApiLoop::new(config.clone(), WorkloadExecutor::analytic());
-        api.time_scale = 100_000.0;
+        api.set_time_scale(100_000.0).unwrap();
         let (sub_tx, sub_rx) = std::sync::mpsc::channel();
         for _ in 0..20 {
             sub_tx

@@ -14,6 +14,7 @@
 mod cluster;
 mod energy;
 mod experiment;
+mod profile;
 mod serial;
 mod weights;
 
@@ -21,6 +22,10 @@ pub use cluster::{ClusterConfig, NodePoolConfig};
 pub use energy::EnergyModelConfig;
 pub use experiment::{
     CompetitionLevel, ExperimentConfig, PodMix, SchedulerKind,
+};
+pub use profile::{
+    ProfileSpec, ProfileTieBreak, ScorePluginKind, ScorePluginSpec,
+    BUILTIN_PROFILE_NAMES,
 };
 pub use weights::{WeightingScheme, BENEFIT_MASK, CRITERIA_NAMES, NUM_CRITERIA};
 
@@ -30,6 +35,9 @@ pub struct Config {
     pub cluster: ClusterConfig,
     pub energy: EnergyModelConfig,
     pub experiment: ExperimentConfig,
+    /// User-defined scheduling profiles, registered alongside the
+    /// framework built-ins (see `framework::ProfileRegistry`).
+    pub profiles: Vec<ProfileSpec>,
 }
 
 impl Config {
@@ -57,6 +65,7 @@ impl Config {
         self.cluster.validate()?;
         self.energy.validate()?;
         self.experiment.validate()?;
+        profile::validate_profiles(&self.profiles)?;
         Ok(())
     }
 }

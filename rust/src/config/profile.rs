@@ -1,0 +1,186 @@
+//! Scheduling-profile configuration: named plugin compositions, as
+//! data. The framework's [`ProfileRegistry`] materializes these specs
+//! into runnable schedulers; the JSON schema lives in
+//! [`super::serial`].
+//!
+//! [`ProfileRegistry`]: crate::framework::ProfileRegistry
+
+use crate::mcda::McdaMethod;
+
+use super::WeightingScheme;
+
+/// Profile names reserved by the framework's built-ins — config-defined
+/// profiles may not shadow them.
+pub const BUILTIN_PROFILE_NAMES: [&str; 4] =
+    ["greenpod", "default-k8s", "carbon-aware", "hybrid-topsis-balanced"];
+
+/// Tie-break policy of a configured profile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProfileTieBreak {
+    LowestIndex,
+    SeededRandom,
+}
+
+impl ProfileTieBreak {
+    pub fn label(self) -> &'static str {
+        match self {
+            ProfileTieBreak::LowestIndex => "lowest-index",
+            ProfileTieBreak::SeededRandom => "seeded-random",
+        }
+    }
+}
+
+impl std::str::FromStr for ProfileTieBreak {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "lowest-index" => Ok(ProfileTieBreak::LowestIndex),
+            "seeded-random" => Ok(ProfileTieBreak::SeededRandom),
+            other => anyhow::bail!(
+                "unknown tie_break `{other}` (lowest-index|seeded-random)"
+            ),
+        }
+    }
+}
+
+/// Which score plugin a profile entry names.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScorePluginKind {
+    LeastAllocated,
+    BalancedAllocation,
+    CarbonAware,
+    Mcda {
+        method: McdaMethod,
+        scheme: WeightingScheme,
+        /// Rescale the MCDA closeness onto the 0–100 convention (for
+        /// composition with the kube-style plugins).
+        percent_scale: bool,
+    },
+}
+
+impl ScorePluginKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScorePluginKind::LeastAllocated => "least-allocated",
+            ScorePluginKind::BalancedAllocation => "balanced-allocation",
+            ScorePluginKind::CarbonAware => "carbon-aware",
+            ScorePluginKind::Mcda { .. } => "mcda",
+        }
+    }
+}
+
+/// One weighted score plugin in a profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScorePluginSpec {
+    pub kind: ScorePluginKind,
+    pub weight: f64,
+}
+
+/// A config-defined scheduling profile (the `profiles` section of a
+/// config file). All profiles implicitly filter with NodeResourcesFit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileSpec {
+    pub name: String,
+    pub tie_break: ProfileTieBreak,
+    pub plugins: Vec<ScorePluginSpec>,
+}
+
+impl ProfileSpec {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "profile name must not be empty");
+        anyhow::ensure!(
+            !BUILTIN_PROFILE_NAMES.contains(&self.name.as_str()),
+            "profile name `{}` shadows a built-in profile",
+            self.name
+        );
+        anyhow::ensure!(
+            !self.plugins.is_empty(),
+            "profile `{}` has no score plugins",
+            self.name
+        );
+        for p in &self.plugins {
+            anyhow::ensure!(
+                p.weight.is_finite() && p.weight > 0.0,
+                "profile `{}`: plugin `{}` weight must be a finite \
+                 positive number, got {}",
+                self.name,
+                p.kind.label(),
+                p.weight
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Validate a profile list (individual specs + duplicate names).
+pub fn validate_profiles(profiles: &[ProfileSpec]) -> anyhow::Result<()> {
+    for (i, p) in profiles.iter().enumerate() {
+        p.validate()?;
+        anyhow::ensure!(
+            !profiles[..i].iter().any(|q| q.name == p.name),
+            "duplicate profile name `{}`",
+            p.name
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str) -> ProfileSpec {
+        ProfileSpec {
+            name: name.into(),
+            tie_break: ProfileTieBreak::LowestIndex,
+            plugins: vec![ScorePluginSpec {
+                kind: ScorePluginKind::LeastAllocated,
+                weight: 1.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn valid_spec_passes() {
+        validate_profiles(&[spec("mine"), spec("yours")]).unwrap();
+    }
+
+    #[test]
+    fn builtin_shadowing_rejected() {
+        assert!(spec("greenpod").validate().is_err());
+        assert!(spec("default-k8s").validate().is_err());
+    }
+
+    #[test]
+    fn bad_weight_rejected() {
+        let mut s = spec("w");
+        s.plugins[0].weight = 0.0;
+        assert!(s.validate().is_err());
+        s.plugins[0].weight = f64::NAN;
+        assert!(s.validate().is_err());
+        s.plugins[0].weight = -1.0;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn empty_plugins_rejected() {
+        let mut s = spec("e");
+        s.plugins.clear();
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        assert!(validate_profiles(&[spec("a"), spec("a")]).is_err());
+    }
+
+    #[test]
+    fn tie_break_parses() {
+        assert_eq!(
+            "seeded-random".parse::<ProfileTieBreak>().unwrap(),
+            ProfileTieBreak::SeededRandom
+        );
+        assert!("coin-flip".parse::<ProfileTieBreak>().is_err());
+    }
+}

@@ -5,7 +5,14 @@
 //! {
 //!   "cluster":    {"pools": [{"category": "A", ...}], ...},
 //!   "energy":     {"pue": 1.45, ...},
-//!   "experiment": {"replications": 5, "seed": 1, ...}
+//!   "experiment": {"replications": 5, "seed": 1, ...},
+//!   "profiles":   [{"name": "my-hybrid",
+//!                   "tie_break": "lowest-index",
+//!                   "plugins": [
+//!                     {"plugin": "mcda", "weight": 0.7,
+//!                      "method": "topsis", "scheme": "energy-centric",
+//!                      "percent_scale": true},
+//!                     {"plugin": "balanced-allocation", "weight": 0.3}]}]
 //! }
 //! ```
 //! Absent sections/fields fall back to the paper defaults, so a config
@@ -18,7 +25,7 @@ use crate::util::json::Json;
 
 use super::{
     ClusterConfig, Config, EnergyModelConfig, ExperimentConfig,
-    NodePoolConfig,
+    NodePoolConfig, ProfileSpec, ScorePluginKind, ScorePluginSpec,
 };
 
 // ------------------------------------------------------------ helpers
@@ -65,7 +72,65 @@ pub fn config_from_json(text: &str) -> Result<Config> {
     if let Some(x) = v.get("experiment") {
         cfg.experiment = experiment_from_json(x)?;
     }
+    if let Some(p) = v.get("profiles") {
+        cfg.profiles = profiles_from_json(p)?;
+    }
     Ok(cfg)
+}
+
+fn profiles_from_json(v: &Json) -> Result<Vec<ProfileSpec>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| anyhow!("`profiles` is not an array"))?;
+    arr.iter().map(profile_from_json).collect()
+}
+
+fn profile_from_json(p: &Json) -> Result<ProfileSpec> {
+    let name = p.req_str("name")?.to_string();
+    let tie_break = p
+        .get("tie_break")
+        .and_then(Json::as_str)
+        .unwrap_or("lowest-index")
+        .parse()?;
+    let plugins = p
+        .req("plugins")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("profile `{name}`: `plugins` is not an array"))?
+        .iter()
+        .map(|pl| {
+            let weight = get_f64(pl, "weight", 1.0)?;
+            let kind = match pl.req_str("plugin")? {
+                "least-allocated" => ScorePluginKind::LeastAllocated,
+                "balanced-allocation" => ScorePluginKind::BalancedAllocation,
+                "carbon-aware" => ScorePluginKind::CarbonAware,
+                "mcda" => ScorePluginKind::Mcda {
+                    method: pl
+                        .get("method")
+                        .and_then(Json::as_str)
+                        .unwrap_or("topsis")
+                        .parse()?,
+                    scheme: pl
+                        .get("scheme")
+                        .and_then(Json::as_str)
+                        .unwrap_or("energy-centric")
+                        .parse()?,
+                    percent_scale: pl
+                        .get("percent_scale")
+                        .and_then(Json::as_bool)
+                        .unwrap_or(false),
+                },
+                other => {
+                    return Err(anyhow!(
+                        "profile `{name}`: unknown score plugin `{other}` \
+                         (least-allocated|balanced-allocation|carbon-aware\
+                         |mcda)"
+                    ))
+                }
+            };
+            Ok(ScorePluginSpec { kind, weight })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ProfileSpec { name, tie_break, plugins })
 }
 
 fn cluster_from_json(v: &Json) -> Result<ClusterConfig> {
@@ -149,7 +214,58 @@ pub fn config_to_json(cfg: &Config) -> Json {
         ("cluster", cluster_to_json(&cfg.cluster)),
         ("energy", energy_to_json(&cfg.energy)),
         ("experiment", experiment_to_json(&cfg.experiment)),
+        ("profiles", profiles_to_json(&cfg.profiles)),
     ])
+}
+
+pub fn profiles_to_json(profiles: &[ProfileSpec]) -> Json {
+    Json::Arr(
+        profiles
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("name", Json::Str(p.name.clone())),
+                    ("tie_break", Json::Str(p.tie_break.label().into())),
+                    (
+                        "plugins",
+                        Json::Arr(
+                            p.plugins
+                                .iter()
+                                .map(plugin_to_json)
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn plugin_to_json(p: &ScorePluginSpec) -> Json {
+    let mut pairs = vec![
+        ("plugin", Json::Str(p.kind.label().into())),
+        ("weight", Json::Num(p.weight)),
+    ];
+    if let ScorePluginKind::Mcda { method, scheme, percent_scale } = &p.kind {
+        pairs.push((
+            "method",
+            Json::Str(format!("{method:?}").to_lowercase()),
+        ));
+        pairs.push(("scheme", Json::Str(scheme_label(*scheme).into())));
+        pairs.push(("percent_scale", Json::Bool(*percent_scale)));
+    }
+    Json::obj(pairs)
+}
+
+/// Kebab-case scheme name (the `FromStr` inverse).
+fn scheme_label(s: super::WeightingScheme) -> &'static str {
+    use super::WeightingScheme::*;
+    match s {
+        General => "general",
+        EnergyCentric => "energy-centric",
+        PerformanceCentric => "performance-centric",
+        ResourceEfficient => "resource-efficient",
+    }
 }
 
 pub fn cluster_to_json(c: &ClusterConfig) -> Json {
@@ -230,6 +346,39 @@ mod tests {
         assert_eq!(cfg.cluster.pools.len(), 1);
         assert_eq!(cfg.cluster.total_nodes(), 3);
         assert_eq!(cfg.cluster.pools[0].machine_type, "custom");
+    }
+
+    #[test]
+    fn profiles_parse_and_roundtrip() {
+        let text = r#"{"profiles": [
+            {"name": "my-hybrid", "tie_break": "seeded-random",
+             "plugins": [
+                {"plugin": "mcda", "weight": 0.7, "method": "saw",
+                 "scheme": "general", "percent_scale": true},
+                {"plugin": "carbon-aware", "weight": 0.3},
+                {"plugin": "least-allocated"}
+             ]}
+        ]}"#;
+        let cfg = config_from_json(text).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.profiles.len(), 1);
+        let p = &cfg.profiles[0];
+        assert_eq!(p.name, "my-hybrid");
+        assert_eq!(p.plugins.len(), 3);
+        // Omitted weight defaults to 1.0.
+        assert_eq!(p.plugins[2].weight, 1.0);
+        // Dump → parse is the identity on the profile list.
+        let back = config_from_json(&config_to_json(&cfg).pretty()).unwrap();
+        assert_eq!(cfg.profiles, back.profiles);
+    }
+
+    #[test]
+    fn unknown_plugin_rejected() {
+        assert!(config_from_json(
+            r#"{"profiles": [{"name": "x", "plugins":
+                [{"plugin": "warp-drive"}]}]}"#,
+        )
+        .is_err());
     }
 
     #[test]

@@ -8,6 +8,15 @@
 
 use crate::config::EnergyModelConfig;
 
+/// Grid carbon intensity as grams CO₂ per joule, derived from the
+/// config's eGRID emission factor (lb CO₂ per kWh). The carbon-aware
+/// scheduling profile scores candidates with this; Table VII's
+/// annual-tonnage arithmetic uses the same factor at MWh scale.
+pub fn grams_co2_per_joule(cfg: &EnergyModelConfig) -> f64 {
+    // lb → g (453.59237), kWh → J (3.6e6).
+    cfg.co2_lb_per_kwh * 453.59237 / 3.6e6
+}
+
 /// Extrapolation parameters (defaults = the paper's §V.E inputs).
 #[derive(Debug, Clone)]
 pub struct ImpactParams {
@@ -137,6 +146,19 @@ mod tests {
         assert!((a.vehicles_equivalent - 8.70).abs() < 0.1);
         assert!((a.annual_cost_usd - 13795.0).abs() < 100.0);
         assert!((a.total_5yr_usd_max - 102326.0).abs() < 750.0);
+    }
+
+    #[test]
+    fn grams_per_joule_consistent_with_table7_arithmetic() {
+        // 1 MWh = 3.6e9 J; the per-joule factor must reproduce the
+        // kg-per-MWh figure Table VII uses (0.8229 lb/kWh → ~373 kg).
+        let cfg = EnergyModelConfig::default();
+        let kg_per_mwh = grams_co2_per_joule(&cfg) * 3.6e9 / 1000.0;
+        let expect = cfg.co2_lb_per_kwh * 0.4536 * 1000.0;
+        assert!(
+            (kg_per_mwh - expect).abs() < 0.05,
+            "{kg_per_mwh} vs {expect}"
+        );
     }
 
     #[test]

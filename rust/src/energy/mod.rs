@@ -6,7 +6,7 @@ mod carbon;
 mod meter;
 mod power;
 
-pub use carbon::{ImpactAssessment, ImpactParams};
+pub use carbon::{grams_co2_per_joule, ImpactAssessment, ImpactParams};
 pub use meter::{EnergyMeter, PodEnergy};
 pub use power::{
     blade_power_watts, node_idle_watts, node_power_watts,

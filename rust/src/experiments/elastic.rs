@@ -25,8 +25,8 @@
 use crate::api::ApiEvent;
 use crate::autoscaler::{AutoscalerPolicy, ThresholdConfig};
 use crate::config::{ClusterConfig, Config, SchedulerKind, WeightingScheme};
+use crate::framework::{BuildOptions, ProfileRegistry};
 use crate::metrics::{Summary, Table};
-use crate::scheduler::{DefaultK8sScheduler, Estimator, GreenPodScheduler};
 use crate::simulation::{
     NodeChange, NodeCountSample, RunResult, ScalingRecord, SimulationEngine,
     SimulationParams,
@@ -95,7 +95,7 @@ impl ElasticProcess {
     /// Complex-heavy AIoT mix: bursts of synchronized sensor uploads
     /// that overflow the base cluster, separated by gaps long enough
     /// for idle scale-in to pay off.
-    fn trace(&self, seed: u64) -> ArrivalTrace {
+    pub(crate) fn trace(&self, seed: u64) -> ArrivalTrace {
         let spec = TraceSpec {
             rate_per_s: 0.3,
             duration_s: 240.0,
@@ -299,15 +299,13 @@ fn run_scenario_cell(
 
     let executor = WorkloadExecutor::analytic();
     let engine = SimulationEngine::new(&config, params, &executor);
-    let mut topsis = GreenPodScheduler::new(
-        Estimator::new(
-            config.energy.clone(),
-            executor.light_epoch_secs(),
-            config.experiment.contention_beta,
-        ),
-        WeightingScheme::EnergyCentric,
-    );
-    let mut default = DefaultK8sScheduler::new(config.experiment.seed);
+    let registry = ProfileRegistry::new(&config);
+    let opts = BuildOptions::new(&config, WeightingScheme::EnergyCentric)
+        .with_executor(&executor);
+    let mut topsis =
+        registry.build("greenpod", &opts).expect("built-in profile");
+    let mut default =
+        registry.build("default-k8s", &opts).expect("built-in profile");
     let pods = trace.to_pods(kind);
     let n_pods = pods.len();
     let result: RunResult = engine.run(pods, &mut topsis, &mut default);

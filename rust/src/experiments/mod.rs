@@ -5,6 +5,7 @@ mod ablation;
 mod alloc;
 mod elastic;
 mod fig2;
+mod profiles;
 mod runner;
 mod table6;
 mod table7;
@@ -17,6 +18,7 @@ pub use elastic::{
     SLO_WAIT_S,
 };
 pub use fig2::render_fig2;
+pub use profiles::{run_profiles, ProfileCell, ProfilesReport};
 pub use runner::{run_cell, run_once, run_uniform, CellResult, ExperimentContext};
 pub use table6::{run_table6, Table6, Table6Row};
 pub use table7::{run_table7, Table7};

@@ -1,0 +1,247 @@
+//! Profile comparison on the elastic grid: every registered scheduling
+//! profile (framework built-ins + `Config::profiles`) drives the same
+//! bursty AIoT trace on the static and the autoscaled cluster, so
+//! profiles are compared at equal admitted work — `greenpod experiment
+//! profiles`.
+//!
+//! This is the experiment the old monolithic API could not express:
+//! `carbon-aware` and `hybrid-topsis-balanced` (and any config-defined
+//! composition) run beside the two ported legacy pipelines with no new
+//! scheduler structs, only profile definitions.
+
+use anyhow::Result;
+
+use crate::config::{SchedulerKind, WeightingScheme};
+use crate::energy::grams_co2_per_joule;
+use crate::framework::ProfileRegistry;
+use crate::metrics::{Summary, Table};
+use crate::simulation::{RunResult, SimulationEngine, SimulationParams};
+use crate::workload::WorkloadExecutor;
+
+use super::{
+    elastic_policy, ClusterMode, ElasticProcess, ExperimentContext,
+    BILLING_HORIZON_S, SLO_WAIT_S,
+};
+use crate::autoscaler::AutoscalerPolicy;
+
+/// One (profile × cluster mode) cell.
+#[derive(Debug, Clone)]
+pub struct ProfileCell {
+    pub profile: String,
+    pub mode: ClusterMode,
+    pub pods: usize,
+    pub unschedulable: usize,
+    /// Pod-attributed energy (kJ).
+    pub pod_kj: f64,
+    /// Unattributed node-idle energy (kJ).
+    pub idle_kj: f64,
+    /// pod_kj + idle_kj — the comparable total.
+    pub total_kj: f64,
+    /// Estimated grid CO₂ of the total (grams).
+    pub co2_g: f64,
+    pub wait_p50_s: f64,
+    pub wait_p95_s: f64,
+    pub slo_miss: f64,
+    pub makespan_s: f64,
+}
+
+/// The full profile comparison.
+#[derive(Debug, Clone)]
+pub struct ProfilesReport {
+    pub cells: Vec<ProfileCell>,
+}
+
+impl ProfilesReport {
+    /// Profile names covered (in run order, deduplicated).
+    pub fn profile_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = Vec::new();
+        for c in &self.cells {
+            if !names.contains(&c.profile) {
+                names.push(c.profile.clone());
+            }
+        }
+        names
+    }
+
+    pub fn cell(&self, profile: &str, mode: ClusterMode) -> &ProfileCell {
+        self.cells
+            .iter()
+            .find(|c| c.profile == profile && c.mode == mode)
+            .expect("cell in grid")
+    }
+
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Scheduling profiles on the elastic grid (bursty \
+                 arrivals; total = pod + idle energy; SLO: wait <= \
+                 {SLO_WAIT_S:.0} s)"
+            ),
+            &[
+                "profile", "cluster", "pods", "total kJ", "pod kJ",
+                "idle kJ", "CO2 g", "wait p50 s", "wait p95 s",
+                "SLO miss %", "makespan s",
+            ],
+        );
+        for c in &self.cells {
+            t.row(vec![
+                c.profile.clone(),
+                c.mode.label().to_string(),
+                format!("{}", c.pods),
+                format!("{:.3}", c.total_kj),
+                format!("{:.3}", c.pod_kj),
+                format!("{:.3}", c.idle_kj),
+                format!("{:.1}", c.co2_g),
+                format!("{:.2}", c.wait_p50_s),
+                format!("{:.2}", c.wait_p95_s),
+                format!("{:.1}", 100.0 * c.slo_miss),
+                format!("{:.1}", c.makespan_s),
+            ]);
+        }
+        t
+    }
+}
+
+/// Run every registered profile over the bursty elastic trace on the
+/// static and autoscaled clusters. All pods are owned by the profile
+/// under test (uniform deployment — the paired-run methodology).
+pub fn run_profiles(ctx: &ExperimentContext) -> Result<ProfilesReport> {
+    let base = &ctx.config;
+    let registry = ProfileRegistry::new(base);
+    let executor = WorkloadExecutor::analytic();
+    let trace = ElasticProcess::Bursty.trace(base.experiment.seed);
+
+    let mut cells = Vec::new();
+    for name in registry.names() {
+        for mode in [ClusterMode::Static, ClusterMode::Autoscaled] {
+            let mut params = SimulationParams::with_beta_and_seed(
+                base.experiment.contention_beta,
+                base.experiment.seed,
+            );
+            params.billing_horizon_s = Some(BILLING_HORIZON_S);
+            if mode == ClusterMode::Autoscaled {
+                params.autoscaler = Some(AutoscalerPolicy::Threshold(
+                    elastic_policy(&base.cluster),
+                ));
+            }
+            let opts = ctx.build_options(
+                WeightingScheme::EnergyCentric,
+                base.experiment.seed,
+                &executor,
+            );
+            // The profile under test drives *all* pods (they are tagged
+            // Topsis, the engine's "first scheduler" slot); the second
+            // slot never schedules.
+            let mut under_test = registry.build(&name, &opts)?;
+            let mut unused = registry.build("default-k8s", &opts)?;
+            let engine = SimulationEngine::new(base, params, &executor);
+            let pods = trace.to_pods(SchedulerKind::Topsis);
+            let n_pods = pods.len();
+            let result: RunResult =
+                engine.run(pods, &mut under_test, &mut unused);
+
+            let waits: Summary =
+                result.queue_wait_summary(SchedulerKind::Topsis);
+            let pod_kj = result.meter.total_kj(SchedulerKind::Topsis);
+            let idle_kj = result.idle_kj();
+            let total_kj = pod_kj + idle_kj;
+            cells.push(ProfileCell {
+                profile: name.clone(),
+                mode,
+                pods: n_pods,
+                unschedulable: result.unschedulable.len(),
+                pod_kj,
+                idle_kj,
+                total_kj,
+                co2_g: total_kj * 1000.0 * grams_co2_per_joule(&base.energy),
+                wait_p50_s: waits.p50,
+                wait_p95_s: waits.p95,
+                slo_miss: result
+                    .slo_miss_fraction(SchedulerKind::Topsis, SLO_WAIT_S),
+                makespan_s: result.makespan_s,
+            });
+        }
+    }
+    Ok(ProfilesReport { cells })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, BUILTIN_PROFILE_NAMES};
+
+    fn report() -> &'static ProfilesReport {
+        static REPORT: std::sync::OnceLock<ProfilesReport> =
+            std::sync::OnceLock::new();
+        REPORT.get_or_init(|| {
+            run_profiles(&ExperimentContext::new(Config::paper_default()))
+                .unwrap()
+        })
+    }
+
+    #[test]
+    fn grid_covers_all_registered_profiles() {
+        let r = report();
+        let names = r.profile_names();
+        // The acceptance floor: >= 4 profiles, at least two of which
+        // the old monolithic API could not express.
+        assert!(names.len() >= 4, "{names:?}");
+        for name in BUILTIN_PROFILE_NAMES {
+            assert!(names.iter().any(|n| n == name), "{name} missing");
+        }
+        assert!(names.iter().any(|n| n == "carbon-aware"));
+        assert!(names.iter().any(|n| n == "hybrid-topsis-balanced"));
+        assert_eq!(r.cells.len(), 2 * names.len());
+    }
+
+    #[test]
+    fn equal_admitted_work_and_sane_metrics() {
+        let r = report();
+        let pods = r.cells[0].pods;
+        assert!(pods > 0);
+        for c in &r.cells {
+            assert_eq!(c.pods, pods, "{}/{}", c.profile, c.mode.label());
+            assert_eq!(
+                c.unschedulable,
+                0,
+                "{}/{} dropped pods",
+                c.profile,
+                c.mode.label()
+            );
+            assert!(c.total_kj.is_finite() && c.total_kj > 0.0);
+            assert!(c.co2_g > 0.0);
+            assert!(c.wait_p95_s >= c.wait_p50_s);
+            assert!((0.0..=1.0).contains(&c.slo_miss));
+            assert!(c.makespan_s <= BILLING_HORIZON_S);
+        }
+    }
+
+    #[test]
+    fn greenpod_profile_matches_elastic_grid_cell() {
+        // The framework `greenpod` profile on the autoscaled bursty
+        // cell must reproduce the elastic experiment's GreenPod cell —
+        // same trace, same policy, schedulers now built via the
+        // registry in both drivers.
+        let r = report();
+        let ctx = ExperimentContext::new(Config::paper_default());
+        let elastic = super::super::run_elastic(&ctx);
+        let mine = r.cell("greenpod", ClusterMode::Autoscaled);
+        let theirs = elastic.cell(
+            ElasticProcess::Bursty,
+            ClusterMode::Autoscaled,
+            SchedulerKind::Topsis,
+        );
+        assert_eq!(mine.pods, theirs.pods);
+        assert_eq!(mine.total_kj, theirs.total_kj);
+        assert_eq!(mine.wait_p95_s, theirs.wait_p95_s);
+    }
+
+    #[test]
+    fn table_renders_every_profile() {
+        let r = report();
+        let text = crate::metrics::format_table(&r.to_table());
+        for name in BUILTIN_PROFILE_NAMES {
+            assert!(text.contains(name), "{name} not in table");
+        }
+    }
+}

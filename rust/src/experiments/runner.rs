@@ -16,11 +16,9 @@ use std::rc::Rc;
 use crate::config::{
     CompetitionLevel, Config, SchedulerKind, WeightingScheme,
 };
+use crate::framework::{BuildOptions, ProfileRegistry};
 use crate::mcda::McdaMethod;
-use crate::runtime::{ArtifactRegistry, PjrtTopsisEngine};
-use crate::scheduler::{
-    DefaultK8sScheduler, Estimator, GreenPodScheduler, ScoringBackend,
-};
+use crate::runtime::ArtifactRegistry;
 use crate::simulation::{RunResult, SimulationEngine, SimulationParams};
 use crate::workload::{generate_pods, WorkloadExecutor};
 
@@ -48,13 +46,19 @@ impl ExperimentContext {
         self
     }
 
-    fn backend(&self) -> ScoringBackend {
-        match (&self.registry, self.mcda_method) {
-            (Some(reg), McdaMethod::Topsis) => ScoringBackend::Pjrt(
-                Box::new(PjrtTopsisEngine::new(reg.clone())),
-            ),
-            (_, m) => ScoringBackend::Rust(m),
-        }
+    /// Profile build options carrying this context's scheme, seed,
+    /// MCDA method, PJRT registry and executor calibration.
+    pub fn build_options(
+        &self,
+        scheme: WeightingScheme,
+        seed: u64,
+        executor: &WorkloadExecutor,
+    ) -> BuildOptions {
+        BuildOptions::new(&self.config, scheme)
+            .with_seed(seed)
+            .with_executor(executor)
+            .with_method(self.mcda_method)
+            .with_pjrt(self.registry.clone())
     }
 }
 
@@ -198,7 +202,10 @@ pub fn run_once(
     run_pods(ctx, pods, scheme, seed, executor)
 }
 
-/// Shared run mechanics for uniform and mixed deployments.
+/// Shared run mechanics for uniform and mixed deployments. Schedulers
+/// are composed through the profile registry — the framework profiles
+/// are pinned bit-identical to the legacy monoliths, so every pinned
+/// table/figure is unchanged.
 fn run_pods(
     ctx: &ExperimentContext,
     pods: Vec<crate::cluster::Pod>,
@@ -207,15 +214,12 @@ fn run_pods(
     executor: &WorkloadExecutor,
 ) -> RunResult {
     let cfg = &ctx.config;
-    let mut estimator = Estimator::new(
-        cfg.energy.clone(),
-        executor.light_epoch_secs(),
-        cfg.experiment.contention_beta,
-    );
-    estimator.set_light_epoch_secs(executor.light_epoch_secs());
-    let mut topsis = GreenPodScheduler::new(estimator, scheme)
-        .with_backend(ctx.backend());
-    let mut default = DefaultK8sScheduler::new(seed);
+    let registry = ProfileRegistry::new(cfg);
+    let opts = ctx.build_options(scheme, seed, executor);
+    let mut topsis =
+        registry.build("greenpod", &opts).expect("built-in profile");
+    let mut default =
+        registry.build("default-k8s", &opts).expect("built-in profile");
     let engine = SimulationEngine::new(
         cfg,
         SimulationParams::with_beta_and_seed(
@@ -225,7 +229,7 @@ fn run_pods(
         executor,
     );
     let mut result = engine.run(pods, &mut topsis, &mut default);
-    result.pjrt_fallbacks = topsis.pjrt_fallbacks;
+    result.pjrt_fallbacks = topsis.pjrt_fallbacks();
     result
 }
 

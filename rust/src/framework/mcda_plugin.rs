@@ -1,0 +1,228 @@
+//! The MCDA pipeline as one Score plugin — GreenPod's estimator /
+//! decision-matrix / scoring-backend stage, behind the framework's
+//! extension-point API.
+//!
+//! [`build_decision_problem`] is the canonical matrix builder; the
+//! legacy `GreenPodScheduler` delegates to it, so the monolith and the
+//! plugin share one implementation and stay bit-identical.
+
+use crate::cluster::{ClusterState, NodeId, Pod};
+use crate::config::{WeightingScheme, BENEFIT_MASK, NUM_CRITERIA};
+use crate::mcda::{Criterion, DecisionProblem, McdaMethod};
+use crate::scheduler::{AdaptiveWeighting, Estimator, ScoringBackend};
+
+use super::ScorePlugin;
+
+/// Build the paper's 5-criteria decision problem over a candidate set:
+/// one estimator row per candidate (exec time, energy, free cores,
+/// free memory, balance), directions from [`BENEFIT_MASK`].
+pub fn build_decision_problem(
+    estimator: &Estimator,
+    weights: [f64; NUM_CRITERIA],
+    state: &ClusterState,
+    pod: &Pod,
+    candidates: &[NodeId],
+) -> DecisionProblem {
+    let mut matrix = Vec::with_capacity(candidates.len() * NUM_CRITERIA);
+    for &id in candidates {
+        let e = estimator.estimate(state, state.node(id), pod);
+        matrix.extend_from_slice(&[
+            e.exec_time_s,
+            e.energy_j,
+            e.free_cpu_frac,
+            e.free_mem_frac,
+            e.balance,
+        ]);
+    }
+    let criteria = (0..NUM_CRITERIA)
+        .map(|i| {
+            if BENEFIT_MASK[i] > 0.5 {
+                Criterion::benefit(weights[i])
+            } else {
+                Criterion::cost(weights[i])
+            }
+        })
+        .collect();
+    DecisionProblem::new(matrix, candidates.len(), criteria)
+}
+
+/// GreenPod's scoring stage as a framework plugin: decision matrix over
+/// the candidates, then MCDA closeness through the configured backend
+/// (pure-Rust method or the AOT Pallas kernel via PJRT, degrading to
+/// Rust TOPSIS with a counted fallback on runtime failure — the same
+/// contract the failure-injection tests pin on the monolith).
+///
+/// Raw output is the MCDA score in `[0, 1]` (TOPSIS closeness). As a
+/// profile's sole scorer that raw scale is kept — it is the published
+/// per-candidate score of `SchedulingDecision` — so this plugin opts
+/// out of the 0–100 convention by default; composed profiles enable
+/// [`with_percent_scale`] to make it commensurable with the kube-style
+/// 0–100 plugins through the normalize pass.
+///
+/// [`with_percent_scale`]: McdaScorePlugin::with_percent_scale
+pub struct McdaScorePlugin {
+    estimator: Estimator,
+    scheme: WeightingScheme,
+    backend: ScoringBackend,
+    adaptive: Option<AdaptiveWeighting>,
+    percent_scale: bool,
+    fallbacks: u64,
+}
+
+impl McdaScorePlugin {
+    pub fn new(estimator: Estimator, scheme: WeightingScheme) -> Self {
+        Self {
+            estimator,
+            scheme,
+            backend: ScoringBackend::Rust(McdaMethod::Topsis),
+            adaptive: None,
+            percent_scale: false,
+            fallbacks: 0,
+        }
+    }
+
+    pub fn with_backend(mut self, backend: ScoringBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn with_adaptive(mut self, adaptive: AdaptiveWeighting) -> Self {
+        self.adaptive = Some(adaptive);
+        self
+    }
+
+    /// Rescale closeness onto 0–100 in the normalize pass, for
+    /// composition with kube-convention plugins.
+    pub fn with_percent_scale(mut self) -> Self {
+        self.percent_scale = true;
+        self
+    }
+
+    /// The weights used for a decision (static scheme or adaptive).
+    fn effective_weights(&self, state: &ClusterState) -> [f64; NUM_CRITERIA] {
+        match &self.adaptive {
+            Some(a) => a.weights(state, self.scheme),
+            None => self.scheme.weights(),
+        }
+    }
+}
+
+impl ScorePlugin for McdaScorePlugin {
+    fn name(&self) -> &'static str {
+        "mcda"
+    }
+
+    fn score(
+        &mut self,
+        state: &ClusterState,
+        pod: &Pod,
+        candidates: &[NodeId],
+    ) -> Vec<f64> {
+        let problem = build_decision_problem(
+            &self.estimator,
+            self.effective_weights(state),
+            state,
+            pod,
+            candidates,
+        );
+        match &mut self.backend {
+            ScoringBackend::Rust(method) => method.scores(&problem),
+            ScoringBackend::Pjrt(engine) => match engine.closeness(&problem) {
+                Ok(s) => s,
+                Err(_) => {
+                    // Degrade gracefully: the artifact math and the
+                    // Rust math are the same TOPSIS.
+                    self.fallbacks += 1;
+                    McdaMethod::Topsis.scores(&problem)
+                }
+            },
+        }
+    }
+
+    fn normalize(
+        &self,
+        _state: &ClusterState,
+        _pod: &Pod,
+        scores: &mut [f64],
+    ) {
+        if self.percent_scale {
+            for s in scores.iter_mut() {
+                *s *= 100.0;
+            }
+        }
+    }
+
+    fn fallbacks(&self) -> u64 {
+        self.fallbacks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, EnergyModelConfig, SchedulerKind};
+    use crate::workload::WorkloadClass;
+
+    fn setup() -> (ClusterState, McdaScorePlugin) {
+        let state = ClusterState::from_config(&ClusterConfig::paper_default());
+        let plug = McdaScorePlugin::new(
+            Estimator::with_defaults(EnergyModelConfig::default()),
+            WeightingScheme::EnergyCentric,
+        );
+        (state, plug)
+    }
+
+    fn pod() -> Pod {
+        Pod::new(0, WorkloadClass::Medium, SchedulerKind::Topsis, 0.0, 2)
+    }
+
+    #[test]
+    fn raw_scores_are_closeness_in_unit_interval() {
+        let (state, mut plug) = setup();
+        let candidates: Vec<usize> = (0..state.nodes().len()).collect();
+        let scores = plug.score(&state, &pod(), &candidates);
+        assert_eq!(scores.len(), candidates.len());
+        for &s in &scores {
+            assert!((0.0..=1.0 + 1e-9).contains(&s), "{scores:?}");
+        }
+        // No percent scale by default: normalize is the identity.
+        let mut normed = scores.clone();
+        plug.normalize(&state, &pod(), &mut normed);
+        assert_eq!(scores, normed);
+    }
+
+    #[test]
+    fn percent_scale_maps_to_0_100() {
+        let (state, plug) = setup();
+        let mut plug = plug.with_percent_scale();
+        let candidates: Vec<usize> = (0..state.nodes().len()).collect();
+        let mut scores = plug.score(&state, &pod(), &candidates);
+        plug.normalize(&state, &pod(), &mut scores);
+        for &s in &scores {
+            assert!((0.0..=100.0 + 1e-6).contains(&s), "{scores:?}");
+        }
+        assert!(scores.iter().any(|&s| s > 1.0), "{scores:?}");
+    }
+
+    #[test]
+    fn matrix_matches_legacy_builder() {
+        // The shared builder must produce exactly what the legacy
+        // monolith's `decision_problem` produces (it delegates here).
+        use crate::scheduler::GreenPodScheduler;
+        let (state, _) = setup();
+        let legacy = GreenPodScheduler::new(
+            Estimator::with_defaults(EnergyModelConfig::default()),
+            WeightingScheme::EnergyCentric,
+        );
+        let candidates = state.feasible_nodes(pod().requests);
+        let a = legacy.decision_problem(&state, &pod(), &candidates);
+        let b = build_decision_problem(
+            &Estimator::with_defaults(EnergyModelConfig::default()),
+            WeightingScheme::EnergyCentric.weights(),
+            &state,
+            &pod(),
+            &candidates,
+        );
+        assert_eq!(a, b);
+    }
+}

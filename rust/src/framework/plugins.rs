@@ -1,0 +1,269 @@
+//! Stock plugins: the default kube-scheduler's documented filter and
+//! scoring behaviour, plus a carbon-aware scorer the monolithic API
+//! could not express.
+//!
+//! The free functions here are the *canonical* scoring math — the
+//! legacy `DefaultK8sScheduler` delegates to them, so the framework
+//! port and the monolith cannot drift apart (the differential property
+//! in `rust/tests/properties.rs` pins them bit-identical).
+
+use crate::cluster::{ClusterState, NodeId, Pod};
+use crate::config::EnergyModelConfig;
+use crate::energy::grams_co2_per_joule;
+use crate::scheduler::Estimator;
+
+use super::{FilterPlugin, ScorePlugin};
+
+/// `LeastAllocated` (kube `NodeResourcesLeastAllocated`): mean over
+/// cpu/mem of the free fraction after placement, scaled to 0–100.
+///
+/// Free-after-placement is clamped at zero (`saturating_sub`), so a pod
+/// larger than the node scores 0 instead of underflowing — the filter
+/// normally removes such nodes, but the scoring math must stay in
+/// range for any input.
+pub fn least_allocated_score(
+    state: &ClusterState,
+    node: NodeId,
+    pod: &Pod,
+) -> f64 {
+    let n = state.node(node);
+    let cpu_free = state.free_cpu(node).saturating_sub(pod.requests.cpu_millis)
+        as f64
+        / n.cpu_millis as f64;
+    let mem_free = state
+        .free_memory(node)
+        .saturating_sub(pod.requests.memory_mib) as f64
+        / n.memory_mib as f64;
+    50.0 * (cpu_free + mem_free)
+}
+
+/// `BalancedAllocation` (kube `NodeResourcesBalancedAllocation`):
+/// 100 − |cpu_fraction − mem_fraction|·100 after placement.
+///
+/// Used-after-placement is capped at capacity, so an over-request can
+/// never push a utilization fraction past 1 and the score out of the
+/// 0–100 range.
+pub fn balanced_allocation_score(
+    state: &ClusterState,
+    node: NodeId,
+    pod: &Pod,
+) -> f64 {
+    let n = state.node(node);
+    let cpu_used = (n.cpu_millis - state.free_cpu(node))
+        .saturating_add(pod.requests.cpu_millis)
+        .min(n.cpu_millis) as f64
+        / n.cpu_millis as f64;
+    let mem_used = (n.memory_mib - state.free_memory(node))
+        .saturating_add(pod.requests.memory_mib)
+        .min(n.memory_mib) as f64
+        / n.memory_mib as f64;
+    100.0 - 100.0 * (cpu_used - mem_used).abs()
+}
+
+/// Filter: kube's `NodeResourcesFit` + readiness — exactly
+/// [`ClusterState::fits`].
+pub struct NodeResourcesFit;
+
+impl FilterPlugin for NodeResourcesFit {
+    fn name(&self) -> &'static str {
+        "node-resources-fit"
+    }
+
+    fn feasible(&self, state: &ClusterState, pod: &Pod, node: NodeId) -> bool {
+        state.fits(node, pod.requests)
+    }
+}
+
+/// Score: [`least_allocated_score`] as a plugin.
+pub struct LeastAllocated;
+
+impl ScorePlugin for LeastAllocated {
+    fn name(&self) -> &'static str {
+        "least-allocated"
+    }
+
+    fn score(
+        &mut self,
+        state: &ClusterState,
+        pod: &Pod,
+        candidates: &[NodeId],
+    ) -> Vec<f64> {
+        candidates
+            .iter()
+            .map(|&id| least_allocated_score(state, id, pod))
+            .collect()
+    }
+}
+
+/// Score: [`balanced_allocation_score`] as a plugin.
+pub struct BalancedAllocation;
+
+impl ScorePlugin for BalancedAllocation {
+    fn name(&self) -> &'static str {
+        "balanced-allocation"
+    }
+
+    fn score(
+        &mut self,
+        state: &ClusterState,
+        pod: &Pod,
+        candidates: &[NodeId],
+    ) -> Vec<f64> {
+        candidates
+            .iter()
+            .map(|&id| balanced_allocation_score(state, id, pod))
+            .collect()
+    }
+}
+
+/// Score: predicted grams of CO₂ for running the pod on each candidate
+/// (estimator energy × the eGRID grid-intensity factor, see
+/// [`grams_co2_per_joule`]), inverted onto 0–100 in the normalize pass
+/// — the carbon-aware placement policy the CODECO far-edge study
+/// evaluates as a "greenness" profile, not expressible under the old
+/// monolithic API.
+pub struct CarbonAware {
+    estimator: Estimator,
+    /// Grid intensity, precomputed once — the config never changes
+    /// after construction.
+    g_per_j: f64,
+}
+
+impl CarbonAware {
+    pub fn new(estimator: Estimator, energy: EnergyModelConfig) -> Self {
+        Self { estimator, g_per_j: grams_co2_per_joule(&energy) }
+    }
+}
+
+impl ScorePlugin for CarbonAware {
+    fn name(&self) -> &'static str {
+        "carbon-aware"
+    }
+
+    /// Raw output: estimated grams CO₂ (a cost — lower is better).
+    fn score(
+        &mut self,
+        state: &ClusterState,
+        pod: &Pod,
+        candidates: &[NodeId],
+    ) -> Vec<f64> {
+        candidates
+            .iter()
+            .map(|&id| {
+                let e = self.estimator.estimate(state, state.node(id), pod);
+                e.energy_j * self.g_per_j
+            })
+            .collect()
+    }
+
+    /// Inverted min–max onto 0–100: the lowest-carbon candidate scores
+    /// 100, the highest 0. A degenerate (all-equal) candidate set
+    /// scores a uniform 100.
+    fn normalize(
+        &self,
+        _state: &ClusterState,
+        _pod: &Pod,
+        scores: &mut [f64],
+    ) {
+        let min = scores.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = scores.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let range = max - min;
+        for s in scores.iter_mut() {
+            *s = if range <= f64::EPSILON * max.abs().max(1.0) {
+                100.0
+            } else {
+                100.0 * (max - *s) / range
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, SchedulerKind};
+    use crate::workload::WorkloadClass;
+
+    fn state() -> ClusterState {
+        ClusterState::from_config(&ClusterConfig::paper_default())
+    }
+
+    fn pod(class: WorkloadClass) -> Pod {
+        Pod::new(0, class, SchedulerKind::DefaultK8s, 0.0, 1)
+    }
+
+    #[test]
+    fn oversized_pod_scores_stay_in_range() {
+        // A pod larger than any node: the clamp must keep both kube
+        // scores inside 0–100 instead of underflowing/overflowing.
+        let s = state();
+        let mut hog = pod(WorkloadClass::Light);
+        hog.requests.cpu_millis = 1_000_000;
+        hog.requests.memory_mib = 1_000_000;
+        for id in 0..s.nodes().len() {
+            let la = least_allocated_score(&s, id, &hog);
+            let ba = balanced_allocation_score(&s, id, &hog);
+            assert!((0.0..=100.0).contains(&la), "node {id}: least {la}");
+            assert!((0.0..=100.0).contains(&ba), "node {id}: balanced {ba}");
+            // Fully over-requested on both axes: no free capacity left.
+            assert_eq!(la, 0.0);
+            assert_eq!(ba, 100.0); // both fractions cap at 1.0 → balanced
+        }
+    }
+
+    #[test]
+    fn feasible_scores_match_unclamped_math() {
+        // For a pod that fits, the clamp is the identity: the scores
+        // are the documented kube formulas.
+        let s = state();
+        let p = pod(WorkloadClass::Light);
+        let n = s.node(0);
+        let la = least_allocated_score(&s, 0, &p);
+        let expect = 50.0
+            * ((s.free_cpu(0) - p.requests.cpu_millis) as f64
+                / n.cpu_millis as f64
+                + (s.free_memory(0) - p.requests.memory_mib) as f64
+                    / n.memory_mib as f64);
+        assert_eq!(la, expect);
+    }
+
+    #[test]
+    fn node_resources_fit_matches_cluster_fits() {
+        let mut s = state();
+        let p = pod(WorkloadClass::Complex);
+        let f = NodeResourcesFit;
+        for id in 0..s.nodes().len() {
+            assert_eq!(f.feasible(&s, &p, id), s.fits(id, p.requests));
+        }
+        s.set_ready(0, false, 0.0);
+        assert!(!f.feasible(&s, &p, 0));
+    }
+
+    #[test]
+    fn carbon_aware_prefers_low_power_nodes() {
+        use crate::config::EnergyModelConfig;
+        let s = state();
+        let p = pod(WorkloadClass::Medium);
+        let energy = EnergyModelConfig::default();
+        let mut plug = CarbonAware::new(
+            Estimator::with_defaults(energy.clone()),
+            energy,
+        );
+        let candidates: Vec<usize> = (0..s.nodes().len()).collect();
+        let mut scores = plug.score(&s, &p, &candidates);
+        plug.normalize(&s, &p, &mut scores);
+        for &v in &scores {
+            assert!((0.0..=100.0).contains(&v), "{scores:?}");
+        }
+        // Category-A nodes (0..3) are the energy-efficient ones — one
+        // of them must be the 100-scoring minimum-carbon choice.
+        let best = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        assert!(best < 3, "best candidate {best}, scores {scores:?}");
+        assert_eq!(scores[best], 100.0);
+    }
+}

@@ -1,0 +1,248 @@
+//! Profile composition and the framework-driven scheduler.
+
+use std::time::Instant;
+
+use crate::cluster::{ClusterState, NodeId, Pod};
+use crate::mcda::argmax;
+use crate::scheduler::{Scheduler, SchedulingDecision};
+use crate::util::rng::Rng;
+
+use super::{FilterPlugin, ScorePlugin};
+
+/// How a profile resolves score ties.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TieBreak {
+    /// Deterministic lowest candidate index among the maxima — the
+    /// GreenPod monolith's `argmax` semantics.
+    LowestIndex,
+    /// Uniform random among candidates within 1e-9 of the best score,
+    /// from the scheduler's seeded RNG — kube-scheduler's `selectHost`
+    /// semantics, as the default-k8s monolith implements them.
+    SeededRandom,
+}
+
+/// A named scheduler composition: filter chain, weighted score plugins,
+/// tie-break policy.
+pub struct SchedulerProfile {
+    pub name: String,
+    pub filters: Vec<Box<dyn FilterPlugin>>,
+    /// `(plugin, weight)` — combined as the weight-normalized sum of
+    /// each plugin's normalized scores.
+    pub scorers: Vec<(Box<dyn ScorePlugin>, f64)>,
+    pub tie_break: TieBreak,
+}
+
+impl SchedulerProfile {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            filters: Vec::new(),
+            scorers: Vec::new(),
+            tie_break: TieBreak::LowestIndex,
+        }
+    }
+
+    pub fn filter(mut self, plugin: Box<dyn FilterPlugin>) -> Self {
+        self.filters.push(plugin);
+        self
+    }
+
+    pub fn score(mut self, plugin: Box<dyn ScorePlugin>, weight: f64) -> Self {
+        self.scorers.push((plugin, weight));
+        self
+    }
+
+    pub fn tie_break(mut self, tie_break: TieBreak) -> Self {
+        self.tie_break = tie_break;
+        self
+    }
+}
+
+/// Drives a [`SchedulerProfile`] through the [`Scheduler`] trait:
+/// filter → score (+ normalize) → weighted combine → select. The
+/// published `SchedulingDecision::scores` are the combined
+/// per-candidate scores, exactly as the legacy monoliths published
+/// theirs.
+pub struct FrameworkScheduler {
+    profile: SchedulerProfile,
+    rng: Rng,
+}
+
+impl FrameworkScheduler {
+    /// `seed` feeds the tie-break RNG (used only by
+    /// [`TieBreak::SeededRandom`]); the stream matches the legacy
+    /// `DefaultK8sScheduler::new(seed)` draw-for-draw.
+    pub fn new(profile: SchedulerProfile, seed: u64) -> Self {
+        Self { profile, rng: Rng::seed_from_u64(seed) }
+    }
+
+    pub fn profile_name(&self) -> &str {
+        &self.profile.name
+    }
+
+    /// PJRT → Rust scoring fallbacks across all score plugins.
+    pub fn pjrt_fallbacks(&self) -> u64 {
+        self.profile.scorers.iter().map(|(p, _)| p.fallbacks()).sum()
+    }
+}
+
+impl Scheduler for FrameworkScheduler {
+    fn name(&self) -> &str {
+        &self.profile.name
+    }
+
+    fn schedule(
+        &mut self,
+        state: &ClusterState,
+        pod: &Pod,
+    ) -> SchedulingDecision {
+        let t0 = Instant::now();
+
+        // Filter: a node survives only if every filter admits it.
+        let candidates: Vec<NodeId> = (0..state.nodes().len())
+            .filter(|&id| {
+                self.profile
+                    .filters
+                    .iter()
+                    .all(|f| f.feasible(state, pod, id))
+            })
+            .collect();
+        if candidates.is_empty() {
+            return SchedulingDecision {
+                node: None,
+                latency: t0.elapsed(),
+                scores: Vec::new(),
+            };
+        }
+
+        // Score: each plugin scores + normalizes; combine by weight.
+        let mut combined = vec![0.0; candidates.len()];
+        let mut total_weight = 0.0;
+        for (plugin, weight) in &mut self.profile.scorers {
+            let mut raw = plugin.score(state, pod, &candidates);
+            // Hard contract on the public extension point: a short
+            // vector would silently zero-bias the tail candidates.
+            assert_eq!(
+                raw.len(),
+                candidates.len(),
+                "plugin {} returned {} scores for {} candidates",
+                plugin.name(),
+                raw.len(),
+                candidates.len()
+            );
+            plugin.normalize(state, pod, &mut raw);
+            for (acc, s) in combined.iter_mut().zip(&raw) {
+                *acc += *weight * s;
+            }
+            total_weight += *weight;
+        }
+        if total_weight > 0.0 {
+            for s in &mut combined {
+                *s /= total_weight;
+            }
+        }
+
+        // Select.
+        let node = match self.profile.tie_break {
+            TieBreak::LowestIndex => {
+                argmax(&combined).map(|i| candidates[i])
+            }
+            TieBreak::SeededRandom => {
+                let best = combined
+                    .iter()
+                    .copied()
+                    .fold(f64::NEG_INFINITY, f64::max);
+                let top: Vec<NodeId> = candidates
+                    .iter()
+                    .zip(&combined)
+                    .filter(|&(_, &s)| (s - best).abs() < 1e-9)
+                    .map(|(&id, _)| id)
+                    .collect();
+                if top.is_empty() {
+                    None
+                } else {
+                    Some(top[self.rng.below(top.len())])
+                }
+            }
+        };
+
+        SchedulingDecision {
+            node,
+            latency: t0.elapsed(),
+            scores: candidates.into_iter().zip(combined).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, SchedulerKind};
+    use crate::framework::{
+        BalancedAllocation, LeastAllocated, NodeResourcesFit,
+    };
+    use crate::workload::WorkloadClass;
+
+    fn state() -> ClusterState {
+        ClusterState::from_config(&ClusterConfig::paper_default())
+    }
+
+    fn pod(id: u64, class: WorkloadClass) -> Pod {
+        Pod::new(id, class, SchedulerKind::DefaultK8s, 0.0, 1)
+    }
+
+    fn k8s_profile() -> SchedulerProfile {
+        SchedulerProfile::new("default-k8s")
+            .filter(Box::new(NodeResourcesFit))
+            .score(Box::new(LeastAllocated), 1.0)
+            .score(Box::new(BalancedAllocation), 1.0)
+            .tie_break(TieBreak::SeededRandom)
+    }
+
+    #[test]
+    fn empty_cluster_unschedulable() {
+        let mut s = state();
+        for id in 0..s.nodes().len() {
+            s.set_ready(id, false, 0.0);
+        }
+        let mut sched = FrameworkScheduler::new(k8s_profile(), 0);
+        let d = sched.schedule(&s, &pod(1, WorkloadClass::Light));
+        assert_eq!(d.node, None);
+        assert!(d.scores.is_empty());
+    }
+
+    #[test]
+    fn combined_scores_cover_candidates_in_range() {
+        let s = state();
+        let mut sched = FrameworkScheduler::new(k8s_profile(), 0);
+        let d = sched.schedule(&s, &pod(1, WorkloadClass::Light));
+        assert_eq!(d.scores.len(), 7);
+        assert!(d.node.is_some());
+        for &(_, v) in &d.scores {
+            assert!((0.0..=100.0).contains(&v), "{:?}", d.scores);
+        }
+    }
+
+    #[test]
+    fn seeded_tie_break_deterministic() {
+        let s = state();
+        let mut a = FrameworkScheduler::new(k8s_profile(), 42);
+        let mut b = FrameworkScheduler::new(k8s_profile(), 42);
+        for i in 0..10 {
+            let p = pod(i, WorkloadClass::Light);
+            assert_eq!(a.schedule(&s, &p).node, b.schedule(&s, &p).node);
+        }
+    }
+
+    #[test]
+    fn zero_scorers_falls_back_to_first_candidate() {
+        // A filter-only profile still binds (uniform zero scores,
+        // lowest-index tie-break) — useful as a "random-fit" baseline.
+        let s = state();
+        let profile = SchedulerProfile::new("filter-only")
+            .filter(Box::new(NodeResourcesFit));
+        let mut sched = FrameworkScheduler::new(profile, 0);
+        let d = sched.schedule(&s, &pod(1, WorkloadClass::Light));
+        assert_eq!(d.node, Some(0));
+    }
+}

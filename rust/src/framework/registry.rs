@@ -1,0 +1,354 @@
+//! Profile registry: name → [`FrameworkScheduler`].
+//!
+//! Built-in profiles (always registered):
+//!
+//! * `greenpod` — NodeResourcesFit + the MCDA plugin (paper pipeline;
+//!   honors the build options' weighting scheme, MCDA method and PJRT
+//!   registry). Port of the legacy `GreenPodScheduler`.
+//! * `default-k8s` — NodeResourcesFit + LeastAllocated +
+//!   BalancedAllocation, equal weight, seeded-random tie-break. Port of
+//!   the legacy `DefaultK8sScheduler`.
+//! * `carbon-aware` — NodeResourcesFit + the CO₂ scorer. Not
+//!   expressible under the old monolithic API.
+//! * `hybrid-topsis-balanced` — TOPSIS closeness (percent-scaled)
+//!   blended 70/30 with BalancedAllocation. Also new with this API.
+//!
+//! `Config::profiles` entries are materialized on top; every driver
+//! (experiment runner, elastic scenarios, `greenpod serve`) constructs
+//! its schedulers exclusively through [`ProfileRegistry::build`].
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::config::{
+    Config, ProfileSpec, ProfileTieBreak, ScorePluginKind, WeightingScheme,
+    BUILTIN_PROFILE_NAMES,
+};
+use crate::mcda::McdaMethod;
+use crate::runtime::{ArtifactRegistry, PjrtTopsisEngine};
+use crate::scheduler::{
+    Estimator, ScoringBackend, DEFAULT_LIGHT_EPOCH_SECS,
+};
+use crate::workload::WorkloadExecutor;
+
+use super::{
+    BalancedAllocation, CarbonAware, FrameworkScheduler, LeastAllocated,
+    McdaScorePlugin, NodeResourcesFit, SchedulerProfile, TieBreak,
+};
+
+/// Everything a profile build needs beyond the profile definition:
+/// seeds, calibration, the MCDA configuration and the optional PJRT
+/// artifact registry.
+#[derive(Clone)]
+pub struct BuildOptions {
+    /// Tie-break RNG seed (stream-compatible with the legacy
+    /// `DefaultK8sScheduler::new(seed)`).
+    pub seed: u64,
+    /// Weighting scheme for the built-in `greenpod` and
+    /// `hybrid-topsis-balanced` profiles.
+    pub scheme: WeightingScheme,
+    /// MCDA method for the built-in `greenpod` profile (ablations).
+    pub mcda_method: McdaMethod,
+    /// When present (and the method is TOPSIS), MCDA plugins score
+    /// through the AOT Pallas kernel via PJRT.
+    pub pjrt: Option<Rc<ArtifactRegistry>>,
+    /// Estimator calibration: seconds per light-epoch.
+    pub light_epoch_secs: f64,
+    /// Estimator contention coefficient β.
+    pub contention_beta: f64,
+}
+
+impl BuildOptions {
+    pub fn new(cfg: &Config, scheme: WeightingScheme) -> Self {
+        Self {
+            seed: cfg.experiment.seed,
+            scheme,
+            mcda_method: McdaMethod::Topsis,
+            pjrt: None,
+            light_epoch_secs: DEFAULT_LIGHT_EPOCH_SECS,
+            contention_beta: cfg.experiment.contention_beta,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Calibrate the estimator from an executor's measured epoch cost.
+    pub fn with_executor(mut self, executor: &WorkloadExecutor) -> Self {
+        self.light_epoch_secs = executor.light_epoch_secs();
+        self
+    }
+
+    pub fn with_method(mut self, method: McdaMethod) -> Self {
+        self.mcda_method = method;
+        self
+    }
+
+    pub fn with_pjrt(mut self, pjrt: Option<Rc<ArtifactRegistry>>) -> Self {
+        self.pjrt = pjrt;
+        self
+    }
+
+    fn estimator(&self, cfg: &Config) -> Estimator {
+        Estimator::new(
+            cfg.energy.clone(),
+            self.light_epoch_secs,
+            self.contention_beta,
+        )
+    }
+
+    /// Scoring backend for an MCDA plugin using `method` — PJRT when an
+    /// artifact registry is attached and the method is the kernel's
+    /// TOPSIS, pure Rust otherwise.
+    fn backend_for(&self, method: McdaMethod) -> ScoringBackend {
+        match (&self.pjrt, method) {
+            (Some(reg), McdaMethod::Topsis) => ScoringBackend::Pjrt(
+                Box::new(PjrtTopsisEngine::new(reg.clone())),
+            ),
+            (_, m) => ScoringBackend::Rust(m),
+        }
+    }
+}
+
+/// Name → profile. Holds the config so user-defined profiles and the
+/// energy model are available at build time.
+pub struct ProfileRegistry {
+    config: Config,
+}
+
+impl ProfileRegistry {
+    pub fn new(config: &Config) -> Self {
+        Self { config: config.clone() }
+    }
+
+    /// All registered profile names: built-ins first, then
+    /// `Config::profiles` in declaration order.
+    pub fn names(&self) -> Vec<String> {
+        BUILTIN_PROFILE_NAMES
+            .iter()
+            .map(|s| s.to_string())
+            .chain(self.config.profiles.iter().map(|p| p.name.clone()))
+            .collect()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        BUILTIN_PROFILE_NAMES.contains(&name)
+            || self.config.profiles.iter().any(|p| p.name == name)
+    }
+
+    /// Materialize a registered profile as a scheduler.
+    pub fn build(
+        &self,
+        name: &str,
+        opts: &BuildOptions,
+    ) -> Result<FrameworkScheduler> {
+        let profile = match name {
+            "greenpod" => SchedulerProfile::new("greenpod")
+                .filter(Box::new(NodeResourcesFit))
+                .score(
+                    Box::new(
+                        McdaScorePlugin::new(
+                            opts.estimator(&self.config),
+                            opts.scheme,
+                        )
+                        .with_backend(opts.backend_for(opts.mcda_method)),
+                    ),
+                    1.0,
+                ),
+            "default-k8s" => SchedulerProfile::new("default-k8s")
+                .filter(Box::new(NodeResourcesFit))
+                .score(Box::new(LeastAllocated), 1.0)
+                .score(Box::new(BalancedAllocation), 1.0)
+                .tie_break(TieBreak::SeededRandom),
+            "carbon-aware" => SchedulerProfile::new("carbon-aware")
+                .filter(Box::new(NodeResourcesFit))
+                .score(
+                    Box::new(CarbonAware::new(
+                        opts.estimator(&self.config),
+                        self.config.energy.clone(),
+                    )),
+                    1.0,
+                ),
+            "hybrid-topsis-balanced" => {
+                SchedulerProfile::new("hybrid-topsis-balanced")
+                    .filter(Box::new(NodeResourcesFit))
+                    .score(
+                        Box::new(
+                            McdaScorePlugin::new(
+                                opts.estimator(&self.config),
+                                opts.scheme,
+                            )
+                            .with_backend(
+                                opts.backend_for(McdaMethod::Topsis),
+                            )
+                            .with_percent_scale(),
+                        ),
+                        0.7,
+                    )
+                    .score(Box::new(BalancedAllocation), 0.3)
+            }
+            other => match self
+                .config
+                .profiles
+                .iter()
+                .find(|p| p.name == other)
+            {
+                Some(spec) => self.from_spec(spec, opts),
+                None => bail!(
+                    "unknown scheduling profile `{other}` (registered: {})",
+                    self.names().join(", ")
+                ),
+            },
+        };
+        Ok(FrameworkScheduler::new(profile, opts.seed))
+    }
+
+    /// Materialize a config-defined profile.
+    fn from_spec(
+        &self,
+        spec: &ProfileSpec,
+        opts: &BuildOptions,
+    ) -> SchedulerProfile {
+        let mut profile = SchedulerProfile::new(spec.name.clone())
+            .filter(Box::new(NodeResourcesFit))
+            .tie_break(match spec.tie_break {
+                ProfileTieBreak::LowestIndex => TieBreak::LowestIndex,
+                ProfileTieBreak::SeededRandom => TieBreak::SeededRandom,
+            });
+        for plugin in &spec.plugins {
+            profile = match &plugin.kind {
+                ScorePluginKind::LeastAllocated => {
+                    profile.score(Box::new(LeastAllocated), plugin.weight)
+                }
+                ScorePluginKind::BalancedAllocation => profile
+                    .score(Box::new(BalancedAllocation), plugin.weight),
+                ScorePluginKind::CarbonAware => profile.score(
+                    Box::new(CarbonAware::new(
+                        opts.estimator(&self.config),
+                        self.config.energy.clone(),
+                    )),
+                    plugin.weight,
+                ),
+                ScorePluginKind::Mcda {
+                    method,
+                    scheme,
+                    percent_scale,
+                } => {
+                    let mut mcda = McdaScorePlugin::new(
+                        opts.estimator(&self.config),
+                        *scheme,
+                    )
+                    .with_backend(opts.backend_for(*method));
+                    if *percent_scale {
+                        mcda = mcda.with_percent_scale();
+                    }
+                    profile.score(Box::new(mcda), plugin.weight)
+                }
+            };
+        }
+        profile
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterState, Pod};
+    use crate::config::SchedulerKind;
+    use crate::scheduler::Scheduler;
+    use crate::workload::WorkloadClass;
+
+    fn registry() -> ProfileRegistry {
+        ProfileRegistry::new(&Config::paper_default())
+    }
+
+    fn opts() -> BuildOptions {
+        BuildOptions::new(
+            &Config::paper_default(),
+            WeightingScheme::EnergyCentric,
+        )
+    }
+
+    #[test]
+    fn builtins_registered() {
+        let r = registry();
+        let names = r.names();
+        assert!(names.len() >= 4);
+        for name in BUILTIN_PROFILE_NAMES {
+            assert!(r.contains(name), "{name} missing");
+        }
+        assert!(!r.contains("nope"));
+        assert!(r.build("nope", &opts()).is_err());
+    }
+
+    #[test]
+    fn every_builtin_schedules_the_paper_cluster() {
+        let r = registry();
+        let state =
+            ClusterState::from_config(&Config::paper_default().cluster);
+        for name in BUILTIN_PROFILE_NAMES {
+            let mut sched = r.build(name, &opts()).unwrap();
+            assert_eq!(sched.name(), name);
+            let pod = Pod::new(
+                0,
+                WorkloadClass::Medium,
+                SchedulerKind::Topsis,
+                0.0,
+                2,
+            );
+            let d = sched.schedule(&state, &pod);
+            assert!(d.node.is_some(), "{name} failed to place");
+            assert_eq!(d.scores.len(), 7, "{name}");
+        }
+    }
+
+    #[test]
+    fn config_defined_profile_builds() {
+        use crate::config::{ProfileSpec, ScorePluginSpec};
+        let mut cfg = Config::paper_default();
+        cfg.profiles.push(ProfileSpec {
+            name: "my-hybrid".into(),
+            tie_break: ProfileTieBreak::LowestIndex,
+            plugins: vec![
+                ScorePluginSpec {
+                    kind: ScorePluginKind::Mcda {
+                        method: McdaMethod::Saw,
+                        scheme: WeightingScheme::General,
+                        percent_scale: true,
+                    },
+                    weight: 0.5,
+                },
+                ScorePluginSpec {
+                    kind: ScorePluginKind::CarbonAware,
+                    weight: 0.5,
+                },
+            ],
+        });
+        cfg.validate().unwrap();
+        let r = ProfileRegistry::new(&cfg);
+        assert!(r.contains("my-hybrid"));
+        let mut sched = r
+            .build("my-hybrid", &BuildOptions::new(&cfg, WeightingScheme::General))
+            .unwrap();
+        let state = ClusterState::from_config(&cfg.cluster);
+        let pod =
+            Pod::new(0, WorkloadClass::Light, SchedulerKind::Topsis, 0.0, 1);
+        assert!(sched.schedule(&state, &pod).node.is_some());
+    }
+
+    #[test]
+    fn carbon_aware_places_on_efficient_category() {
+        use crate::cluster::NodeCategory;
+        let r = registry();
+        let state =
+            ClusterState::from_config(&Config::paper_default().cluster);
+        let mut sched = r.build("carbon-aware", &opts()).unwrap();
+        let pod =
+            Pod::new(0, WorkloadClass::Medium, SchedulerKind::Topsis, 0.0, 2);
+        let d = sched.schedule(&state, &pod);
+        assert_eq!(state.node(d.node.unwrap()).category, NodeCategory::A);
+    }
+}

@@ -18,6 +18,10 @@
 //! * [`scheduler`] — the paper's contribution: the GreenPod TOPSIS
 //!   scheduler (decision-matrix builder, weighting schemes, scoring
 //!   backends) and the default kube-scheduler baseline.
+//! * [`framework`] — the pluggable scheduling framework: kube-style
+//!   Filter / Score / NormalizeScore extension points, weighted profile
+//!   composition, and the profile registry every driver builds its
+//!   schedulers through.
 //! * [`workload`] — Table II workload classes, Table V competition-level
 //!   generators, arrival traces, and the PJRT-backed executor.
 //! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`
@@ -38,6 +42,7 @@ pub mod util;
 pub mod config;
 pub mod energy;
 pub mod experiments;
+pub mod framework;
 pub mod mcda;
 pub mod metrics;
 pub mod runtime;

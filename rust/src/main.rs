@@ -8,13 +8,23 @@
 //! greenpod experiment alloc [--level medium]      # §V.D analysis
 //! greenpod experiment ablation [--level medium]   # MCDA-method ablation
 //! greenpod experiment elastic [--csv] [--events]  # churn/autoscaler scenarios
+//! greenpod experiment profiles [--csv]            # profile comparison grid
 //! greenpod experiment all                         # everything above
+//! greenpod bench sched                            # scheduling microbenchmark
 //! greenpod calibrate [--reps 4]                   # PJRT epoch timings
 //! greenpod serve --trace t.jsonl [--scheme energy-centric]
 //!                [--time-scale 100] [--only topsis|default]
+//!                [--profile NAME]
 //!
 //! global: --config file.json --replications N --seed S
 //! ```
+//!
+//! `serve` emits JSON-lines lifecycle events; every `bound` line
+//! carries the `profile` that placed the pod, so mixed-profile traces
+//! stay attributable. `--profile` picks any registered scheduling
+//! profile (built-ins: greenpod, default-k8s, carbon-aware,
+//! hybrid-topsis-balanced; plus `profiles` entries from `--config`)
+//! for the TOPSIS-half of the stream.
 
 use std::rc::Rc;
 
@@ -25,9 +35,11 @@ use greenpod::config::{
     CompetitionLevel, Config, SchedulerKind, WeightingScheme,
 };
 use greenpod::experiments::{
-    render_fig2, run_ablation, run_alloc_analysis, run_elastic, run_table6,
-    run_table7, ClusterMode, ElasticProcess, ExperimentContext,
+    render_fig2, run_ablation, run_alloc_analysis, run_elastic,
+    run_profiles, run_table6, run_table7, ClusterMode, ElasticProcess,
+    ExperimentContext,
 };
+use greenpod::framework::{BuildOptions, ProfileRegistry};
 use greenpod::metrics::{format_table, format_timeline};
 use greenpod::runtime::{ArtifactRegistry, LinRegRunner};
 use greenpod::scheduler::{
@@ -39,7 +51,7 @@ use greenpod::workload::{ArrivalTrace, WorkloadClass, WorkloadExecutor};
 const FLAGS: &[&str] = &["pjrt", "csv", "events", "help", "version"];
 const KNOWN_OPTS: &[&str] = &[
     "config", "replications", "seed", "section", "optimization", "level",
-    "reps", "trace", "scheme", "time-scale", "only",
+    "reps", "trace", "scheme", "time-scale", "only", "profile",
 ];
 
 const USAGE: &str = "\
@@ -54,12 +66,16 @@ usage:
   greenpod experiment alloc [--level low|medium|high]
   greenpod experiment ablation [--level low|medium|high]
   greenpod experiment elastic [--csv] [--events]
+  greenpod experiment profiles [--csv]
   greenpod experiment all
+  greenpod bench sched
   greenpod calibrate [--reps N]
   greenpod serve --trace FILE|- [--scheme S] [--time-scale X] [--only topsis|default]
+                 [--profile NAME]
 
 global options:
-  --config FILE.json   override paper defaults (partial configs fine)
+  --config FILE.json   override paper defaults (partial configs fine;
+                       `profiles` entries register extra scheduling profiles)
   --replications N     factorial replications per cell
   --seed S             base RNG seed";
 
@@ -79,6 +95,7 @@ fn main() -> Result<()> {
     match args.command(0).unwrap() {
         "show-config" => show_config(&cfg, args.opt("section").unwrap_or("all")),
         "experiment" => run_experiment(&cfg, &args),
+        "bench" => run_bench(&cfg, &args),
         "calibrate" => calibrate(args.opt_parse("reps", 4u32)?),
         "serve" => serve(&cfg, &args),
         other => bail!("unknown command `{other}`\n\n{USAGE}"),
@@ -246,6 +263,14 @@ fn run_experiment(cfg: &Config, args: &Args) -> Result<()> {
                 }
             }
         }
+        "profiles" => {
+            let ctx = make_context(cfg, false)?;
+            let report = run_profiles(&ctx)?;
+            println!("{}", format_table(&report.to_table()));
+            if args.flag("csv") {
+                println!("\nCSV:\n{}", report.to_table().to_csv());
+            }
+        }
         "all" => {
             let ctx = make_context(cfg, false)?;
             let t6 = run_table6(&ctx);
@@ -265,9 +290,81 @@ fn run_experiment(cfg: &Config, args: &Args) -> Result<()> {
             println!();
             let report = run_elastic(&ctx);
             println!("{}", format_table(&report.to_table()));
+            println!();
+            let profiles = run_profiles(&ctx)?;
+            println!("{}", format_table(&profiles.to_table()));
         }
         other => bail!("unknown experiment `{other}`\n\n{USAGE}"),
     }
+    Ok(())
+}
+
+/// `greenpod bench sched` — time scheduling cycles for the legacy
+/// monoliths vs every registered framework profile on the paper
+/// cluster, and emit `BENCH_sched.json` for CI trend tracking.
+fn run_bench(cfg: &Config, args: &Args) -> Result<()> {
+    match args.command(1) {
+        Some("sched") => bench_sched(cfg),
+        other => bail!(
+            "unknown bench target {other:?} (expected `sched`)\n\n{USAGE}"
+        ),
+    }
+}
+
+fn bench_sched(cfg: &Config) -> Result<()> {
+    use greenpod::cluster::{ClusterState, Pod};
+    use greenpod::scheduler::Scheduler;
+    use greenpod::util::bench::Bench;
+    use greenpod::util::json::Json;
+
+    let state = ClusterState::from_config(&cfg.cluster);
+    let pod = Pod::new(0, WorkloadClass::Medium, SchedulerKind::Topsis, 0.0, 4);
+    let mut b = Bench::new();
+
+    // Legacy monoliths (the pre-framework baselines).
+    let mut legacy_topsis = GreenPodScheduler::new(
+        Estimator::with_defaults(cfg.energy.clone()),
+        WeightingScheme::EnergyCentric,
+    );
+    b.bench("sched/monolith/greenpod-topsis", || {
+        legacy_topsis.schedule(&state, &pod).node
+    });
+    let mut legacy_default = DefaultK8sScheduler::new(cfg.experiment.seed);
+    b.bench("sched/monolith/default-k8s", || {
+        legacy_default.schedule(&state, &pod).node
+    });
+
+    // Framework-composed profiles (built-ins + any --config profiles).
+    let registry = ProfileRegistry::new(cfg);
+    let opts = BuildOptions::new(cfg, WeightingScheme::EnergyCentric);
+    for name in registry.names() {
+        let mut sched = registry.build(&name, &opts)?;
+        b.bench(&format!("sched/framework/{name}"), || {
+            sched.schedule(&state, &pod).node
+        });
+    }
+
+    let rows: Vec<Json> = b
+        .results()
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::Str(r.name.clone())),
+                ("mean_s", Json::Num(r.summary.mean)),
+                ("std_s", Json::Num(r.summary.std)),
+                ("p50_s", Json::Num(r.summary.p50)),
+                ("p95_s", Json::Num(r.summary.p95)),
+                ("iters", Json::Num(r.iters as f64)),
+            ])
+        })
+        .collect();
+    let out = Json::obj(vec![
+        ("bench", Json::Str("sched".into())),
+        ("benchmarks", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_sched.json", out.pretty())?;
+    b.finish();
+    eprintln!("wrote BENCH_sched.json");
     Ok(())
 }
 
@@ -301,6 +398,7 @@ fn serve(cfg: &Config, args: &Args) -> Result<()> {
     let scheme: WeightingScheme =
         args.opt("scheme").unwrap_or("energy-centric").parse()?;
     let time_scale: f64 = args.opt_parse("time-scale", 100.0)?;
+    let profile = args.opt("profile").unwrap_or("greenpod");
     let only: Option<SchedulerKind> = match args.opt("only") {
         Some(s) => Some(s.parse()?),
         None => None,
@@ -316,13 +414,14 @@ fn serve(cfg: &Config, args: &Args) -> Result<()> {
     };
     let trace = ArrivalTrace::from_jsonl(&text)?;
     eprintln!(
-        "serving {} pods (scheme {:?}, time_scale {time_scale})",
+        "serving {} pods (profile {profile}, scheme {:?}, time_scale \
+         {time_scale})",
         trace.entries.len(),
         scheme
     );
 
     let mut api = ApiLoop::new(cfg.clone(), WorkloadExecutor::analytic());
-    api.time_scale = time_scale;
+    api.set_time_scale(time_scale)?;
     let (sub_tx, sub_rx) = std::sync::mpsc::channel();
 
     // Feed the trace from a separate thread, honoring inter-arrival
@@ -349,11 +448,23 @@ fn serve(cfg: &Config, args: &Args) -> Result<()> {
         }
     });
 
-    let mut topsis = GreenPodScheduler::new(
-        Estimator::with_defaults(cfg.energy.clone()),
-        scheme,
-    );
-    let mut default = DefaultK8sScheduler::new(cfg.experiment.seed);
+    // Both serve-loop slots come from the profile registry: --profile
+    // picks the scheduler for the Topsis half of the stream; the
+    // DefaultK8s half always runs the ported default-k8s profile.
+    // Note the estimator now calibrates its contention β from the
+    // config (matching what the loop actually realizes), where the old
+    // path hardcoded the 0.35 default — estimates and realized
+    // dynamics agree, as they already did on the experiment path.
+    let registry = ProfileRegistry::new(cfg);
+    let opts = BuildOptions::new(cfg, scheme);
+    // Distinct tie-break streams per slot: the default-k8s half keeps
+    // the legacy seed, while a seeded-random --profile in the Topsis
+    // slot draws an independent stream instead of a seed-coupled copy.
+    let mut topsis = registry.build(
+        profile,
+        &opts.clone().with_seed(cfg.experiment.seed.wrapping_add(1)),
+    )?;
+    let mut default = registry.build("default-k8s", &opts)?;
     api.run(
         sub_rx,
         &mut |ev: ApiEvent| println!("{}", ev.to_json().to_string()),

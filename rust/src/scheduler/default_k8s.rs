@@ -7,10 +7,17 @@
 //! paper contrasts against ([14, 15]). Ties are broken uniformly at
 //! random, as in kube-scheduler's `selectHost`; the RNG is seeded for
 //! replicable experiments.
+//!
+//! The scoring math lives in `framework::plugins` (the canonical
+//! plugin implementations, clamped against over-requests);
+//! this monolith delegates to it and is pinned bit-identical to the
+//! framework's `default-k8s` profile by the differential property
+//! suite.
 
 use std::time::Instant;
 
 use crate::cluster::{ClusterState, Pod};
+use crate::framework::{balanced_allocation_score, least_allocated_score};
 use crate::util::rng::Rng;
 
 use super::{Scheduler, SchedulingDecision};
@@ -23,39 +30,10 @@ impl DefaultK8sScheduler {
     pub fn new(seed: u64) -> Self {
         Self { rng: Rng::seed_from_u64(seed) }
     }
-
-    /// `LeastAllocated`: mean over cpu/mem of free-fraction after
-    /// placement, scaled to 0–100.
-    fn least_allocated(state: &ClusterState, node: usize, pod: &Pod) -> f64 {
-        let n = state.node(node);
-        let cpu_free = (state.free_cpu(node) - pod.requests.cpu_millis) as f64
-            / n.cpu_millis as f64;
-        let mem_free = (state.free_memory(node) - pod.requests.memory_mib)
-            as f64
-            / n.memory_mib as f64;
-        50.0 * (cpu_free + mem_free)
-    }
-
-    /// `BalancedAllocation`: 100 − |cpu_fraction − mem_fraction|·100
-    /// after placement.
-    fn balanced_allocation(
-        state: &ClusterState,
-        node: usize,
-        pod: &Pod,
-    ) -> f64 {
-        let n = state.node(node);
-        let cpu_used = (n.cpu_millis - state.free_cpu(node)
-            + pod.requests.cpu_millis) as f64
-            / n.cpu_millis as f64;
-        let mem_used = (n.memory_mib - state.free_memory(node)
-            + pod.requests.memory_mib) as f64
-            / n.memory_mib as f64;
-        100.0 - 100.0 * (cpu_used - mem_used).abs()
-    }
 }
 
 impl Scheduler for DefaultK8sScheduler {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "default-k8s"
     }
 
@@ -69,8 +47,8 @@ impl Scheduler for DefaultK8sScheduler {
         let scores: Vec<(usize, f64)> = feasible
             .iter()
             .map(|&id| {
-                let s = (Self::least_allocated(state, id, pod)
-                    + Self::balanced_allocation(state, id, pod))
+                let s = (least_allocated_score(state, id, pod)
+                    + balanced_allocation_score(state, id, pod))
                     / 2.0;
                 (id, s)
             })

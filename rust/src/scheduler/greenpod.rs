@@ -18,8 +18,8 @@
 use std::time::Instant;
 
 use crate::cluster::{ClusterState, Pod};
-use crate::config::{WeightingScheme, BENEFIT_MASK, NUM_CRITERIA};
-use crate::mcda::{argmax, Criterion, DecisionProblem, McdaMethod};
+use crate::config::{WeightingScheme, NUM_CRITERIA};
+use crate::mcda::{argmax, DecisionProblem, McdaMethod};
 use crate::runtime::PjrtTopsisEngine;
 
 use super::{AdaptiveWeighting, Estimator, Scheduler, SchedulingDecision};
@@ -85,35 +85,22 @@ impl GreenPodScheduler {
         }
     }
 
-    /// Build the 5-criteria decision problem over the candidate set.
+    /// Build the 5-criteria decision problem over the candidate set
+    /// (delegates to the canonical framework builder, shared with
+    /// [`crate::framework::McdaScorePlugin`]).
     pub fn decision_problem(
         &self,
         state: &ClusterState,
         pod: &Pod,
         candidates: &[usize],
     ) -> DecisionProblem {
-        let weights = self.effective_weights(state);
-        let mut matrix = Vec::with_capacity(candidates.len() * NUM_CRITERIA);
-        for &id in candidates {
-            let e = self.estimator.estimate(state, state.node(id), pod);
-            matrix.extend_from_slice(&[
-                e.exec_time_s,
-                e.energy_j,
-                e.free_cpu_frac,
-                e.free_mem_frac,
-                e.balance,
-            ]);
-        }
-        let criteria = (0..NUM_CRITERIA)
-            .map(|i| {
-                if BENEFIT_MASK[i] > 0.5 {
-                    Criterion::benefit(weights[i])
-                } else {
-                    Criterion::cost(weights[i])
-                }
-            })
-            .collect();
-        DecisionProblem::new(matrix, candidates.len(), criteria)
+        crate::framework::build_decision_problem(
+            &self.estimator,
+            self.effective_weights(state),
+            state,
+            pod,
+            candidates,
+        )
     }
 
     fn score(&mut self, problem: &DecisionProblem) -> Vec<f64> {
@@ -135,7 +122,7 @@ impl GreenPodScheduler {
 }
 
 impl Scheduler for GreenPodScheduler {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "greenpod-topsis"
     }
 

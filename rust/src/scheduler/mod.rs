@@ -11,6 +11,14 @@
 //!
 //! Both schedulers implement [`Scheduler`] and are driven identically by
 //! the simulation engine and the serve loop.
+//!
+//! These two structs are the *legacy monolith* formulations. The
+//! drivers now compose the same pipelines from
+//! [`crate::framework`] extension-point plugins (profiles `greenpod`
+//! and `default-k8s`); the monoliths stay as the executable reference
+//! the differential properties pin the framework against, and they
+//! delegate their scoring math to the canonical framework
+//! implementations so the two paths cannot drift.
 
 mod adaptive;
 mod default_k8s;
@@ -19,7 +27,7 @@ mod greenpod;
 
 pub use adaptive::AdaptiveWeighting;
 pub use default_k8s::DefaultK8sScheduler;
-pub use estimator::{Estimator, NodeEstimate};
+pub use estimator::{Estimator, NodeEstimate, DEFAULT_LIGHT_EPOCH_SECS};
 pub use greenpod::{GreenPodScheduler, ScoringBackend};
 
 use std::time::Duration;
@@ -41,7 +49,9 @@ pub struct SchedulingDecision {
 /// knowledge flows in through `state`), stateful for internal RNG /
 /// scoring backends.
 pub trait Scheduler {
-    fn name(&self) -> &'static str;
+    /// Profile/scheduler name, emitted in `ApiEvent::Bound` JSONL so
+    /// traces are attributable when multiple profiles run at once.
+    fn name(&self) -> &str;
 
     /// Pick a node for `pod` given the current cluster state.
     fn schedule(

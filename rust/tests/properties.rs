@@ -14,6 +14,7 @@ use greenpod::config::{
 use greenpod::mcda::{
     self, Criterion, DecisionProblem, Direction, McdaMethod,
 };
+use greenpod::framework::{BuildOptions, ProfileRegistry};
 use greenpod::scheduler::{
     DefaultK8sScheduler, Estimator, GreenPodScheduler, Scheduler,
 };
@@ -873,5 +874,202 @@ fn prop_batch_mode_equals_event_mode_at_t0() {
             );
         }
         assert_eq!(ev.makespan_s, ba.makespan_s);
+    }
+}
+
+// --------------------------------------------------------------------
+// Framework differential: the profile-composed schedulers must be
+// bit-identical to the pre-refactor monoliths — same chosen node, same
+// per-candidate scores — over random cluster states and pods. This is
+// the contract that makes the registry port a pure refactor.
+
+fn random_scheme(rng: &mut Rng) -> WeightingScheme {
+    WeightingScheme::ALL[rng.below(WeightingScheme::ALL.len())]
+}
+
+fn random_level(rng: &mut Rng) -> CompetitionLevel {
+    CompetitionLevel::ALL[rng.below(CompetitionLevel::ALL.len())]
+}
+
+/// Drive `legacy` and `framework` over the same evolving cluster:
+/// schedule each pod with both, assert identical decisions bitwise,
+/// bind the chosen node, and occasionally flip node readiness.
+fn assert_bit_identical_decisions(
+    legacy: &mut dyn Scheduler,
+    framework: &mut dyn Scheduler,
+    pods: &[Pod],
+    rng: &mut Rng,
+    case: usize,
+) {
+    let config = Config::paper_default();
+    let mut state = ClusterState::from_config(&config.cluster);
+    for pod in pods {
+        // Random churn keeps candidate sets diverse (never all-down:
+        // flips are individually reverted half the time).
+        if rng.chance(0.3) {
+            let node = rng.below(state.nodes().len());
+            let up = rng.chance(0.5);
+            state.set_ready(node, up, 0.0);
+        }
+        let a = legacy.schedule(&state, pod);
+        let b = framework.schedule(&state, pod);
+        assert_eq!(
+            a.node, b.node,
+            "case {case} pod {}: node diverged",
+            pod.id
+        );
+        assert_eq!(
+            a.scores.len(),
+            b.scores.len(),
+            "case {case} pod {}: candidate sets diverged",
+            pod.id
+        );
+        for (&(na, sa), &(nb, sb)) in a.scores.iter().zip(&b.scores) {
+            assert_eq!(na, nb, "case {case} pod {}: candidate order", pod.id);
+            assert_eq!(
+                sa.to_bits(),
+                sb.to_bits(),
+                "case {case} pod {} node {na}: score {sa} != {sb}",
+                pod.id
+            );
+        }
+        if let Some(node) = a.node {
+            state.bind(pod, node, 0.0).unwrap();
+        }
+        // Random releases free capacity so later pods see varied load.
+        if rng.chance(0.2) {
+            if let Some(&id) =
+                pods.iter().map(|p| &p.id).find(|&&id| state.node_of(id).is_some())
+            {
+                state.release(id, 0.0).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_framework_greenpod_profile_bit_identical() {
+    let mut rng = Rng::seed_from_u64(31);
+    let config = Config::paper_default();
+    let executor = WorkloadExecutor::analytic();
+    for case in 0..prop_cases(25) {
+        let scheme = random_scheme(&mut rng);
+        let level = random_level(&mut rng);
+        let seed = rng.next_u64();
+        let pods = generate_pods(level, &config.experiment, seed).pods;
+        let mut legacy = GreenPodScheduler::new(
+            Estimator::new(
+                config.energy.clone(),
+                executor.light_epoch_secs(),
+                config.experiment.contention_beta,
+            ),
+            scheme,
+        );
+        let registry = ProfileRegistry::new(&config);
+        let opts = BuildOptions::new(&config, scheme)
+            .with_seed(seed)
+            .with_executor(&executor);
+        let mut framework = registry.build("greenpod", &opts).unwrap();
+        assert_bit_identical_decisions(
+            &mut legacy,
+            &mut framework,
+            &pods,
+            &mut rng,
+            case,
+        );
+    }
+}
+
+#[test]
+fn prop_framework_default_k8s_profile_bit_identical() {
+    // Includes the seeded-random tie-break: the framework must consume
+    // the RNG stream draw-for-draw like the monolith.
+    let mut rng = Rng::seed_from_u64(32);
+    let config = Config::paper_default();
+    let executor = WorkloadExecutor::analytic();
+    for case in 0..prop_cases(25) {
+        let level = random_level(&mut rng);
+        let seed = rng.next_u64();
+        let pods = generate_pods(level, &config.experiment, seed).pods;
+        let mut legacy = DefaultK8sScheduler::new(seed);
+        let registry = ProfileRegistry::new(&config);
+        let opts = BuildOptions::new(&config, WeightingScheme::General)
+            .with_seed(seed)
+            .with_executor(&executor);
+        let mut framework = registry.build("default-k8s", &opts).unwrap();
+        assert_bit_identical_decisions(
+            &mut legacy,
+            &mut framework,
+            &pods,
+            &mut rng,
+            case,
+        );
+    }
+}
+
+#[test]
+fn prop_framework_engine_run_bit_identical() {
+    // End-to-end: a full event-kernel run with registry-built profiles
+    // must reproduce the legacy-monolith run record-for-record (mixed
+    // Topsis/DefaultK8s pod ownership, arrivals, waits, energy).
+    let mut rng = Rng::seed_from_u64(33);
+    let config = Config::paper_default();
+    let executor = WorkloadExecutor::analytic();
+    for case in 0..prop_cases(15) {
+        let scheme = random_scheme(&mut rng);
+        let level = random_level(&mut rng);
+        let seed = rng.next_u64();
+        let pods = generate_pods(level, &config.experiment, seed).pods;
+        let engine = SimulationEngine::new(
+            &config,
+            SimulationParams::with_beta_and_seed(
+                config.experiment.contention_beta,
+                seed,
+            ),
+            &executor,
+        );
+        let mut lt = GreenPodScheduler::new(
+            Estimator::new(
+                config.energy.clone(),
+                executor.light_epoch_secs(),
+                config.experiment.contention_beta,
+            ),
+            scheme,
+        );
+        let mut ld = DefaultK8sScheduler::new(seed);
+        let legacy = engine.run(pods.clone(), &mut lt, &mut ld);
+
+        let registry = ProfileRegistry::new(&config);
+        let opts = BuildOptions::new(&config, scheme)
+            .with_seed(seed)
+            .with_executor(&executor);
+        let mut ft = registry.build("greenpod", &opts).unwrap();
+        let mut fd = registry.build("default-k8s", &opts).unwrap();
+        let framework = engine.run(pods, &mut ft, &mut fd);
+
+        assert_eq!(
+            legacy.records.len(),
+            framework.records.len(),
+            "case {case} (seed {seed})"
+        );
+        assert_eq!(legacy.unschedulable, framework.unschedulable);
+        for (x, y) in legacy.records.iter().zip(&framework.records) {
+            assert_eq!(x.pod, y.pod, "case {case} (seed {seed})");
+            assert_eq!(x.node, y.node, "case {case} (seed {seed})");
+            assert_eq!(x.start_s, y.start_s);
+            assert_eq!(x.finish_s, y.finish_s);
+            assert_eq!(x.wait_s, y.wait_s);
+            assert_eq!(x.attempts, y.attempts);
+            assert_eq!(x.joules, y.joules, "case {case} pod {}", x.pod);
+        }
+        assert_eq!(legacy.makespan_s, framework.makespan_s);
+        assert_eq!(
+            legacy.meter.total_kj(SchedulerKind::Topsis),
+            framework.meter.total_kj(SchedulerKind::Topsis)
+        );
+        assert_eq!(
+            legacy.meter.total_kj(SchedulerKind::DefaultK8s),
+            framework.meter.total_kj(SchedulerKind::DefaultK8s)
+        );
     }
 }
