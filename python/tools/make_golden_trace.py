@@ -13,7 +13,14 @@ placements exactly and times/energy to 1e-9, twice:
 * golden_trace.expected.json            — fixed paper cluster;
 * golden_trace_autoscaled.expected.json — same trace under the
   ThresholdAutoscaler (scale-out on pending depth 2, 5 s provisioning,
-  2 s cooldown, 10 s idle scale-in, bounds [7, 10], edge template).
+  2 s cooldown, 10 s idle scale-in, bounds [7, 10], edge template);
+* golden_trace_carbon.expected.json     — same trace and policy under a
+  diurnal carbon-intensity signal with carbon scale-down windows
+  (p50 dirty threshold, 0.25 idle tightening, 6 s scale-out deferral):
+  pins the CO2 ledger (per-pod grams + idle grams) and the tightened
+  scale-in timing. The diurnal generator is a piecewise-linear triangle
+  wave (pure arithmetic, no libm), so both languages compute the same
+  sample values bit-for-bit.
 
 Event ordering mirrors the kernel's total order: (time, kind-priority,
 seq) with priorities arrival 0, completed 1, autoscale-tick 2, failed
@@ -72,7 +79,116 @@ GOLDEN_POLICY = {
     "min_nodes": 7,
     "max_nodes": 10,
     "template": EDGE_TEMPLATE,
+    "carbon": None,
 }
+
+# eGRID scalar in g/J (mirrors energy::grams_co2_per_joule).
+CO2_LB_PER_KWH = 0.823
+G_PER_J = CO2_LB_PER_KWH * 453.59237 / 3.6e6
+
+
+class CarbonSignal:
+    """Mirror of energy::signal::CarbonSignal (same float-op order)."""
+
+    def __init__(self, points, shape):
+        assert points, "carbon signal has no samples"
+        self.points = list(points)
+        self.shape = shape
+
+    def constant_value(self):
+        return self.points[0][1] if len(self.points) == 1 else None
+
+    def at(self, t):
+        t0, v0 = self.points[0]
+        if t <= t0:
+            return v0
+        tn, vn = self.points[-1]
+        if t >= tn:
+            return vn
+        for (ts, vs), (te, ve) in zip(self.points, self.points[1:]):
+            if t < te:
+                if self.shape == "step":
+                    return vs
+                return vs + (ve - vs) * ((t - ts) / (te - ts))
+        return vn
+
+    def integral(self, a, b):
+        if b <= a:
+            return 0.0
+        total = 0.0
+        t0, v0 = self.points[0]
+        if a < t0:
+            total += v0 * (min(b, t0) - a)
+        for (ts, vs), (te, ve) in zip(self.points, self.points[1:]):
+            lo = max(a, ts)
+            hi = min(b, te)
+            if hi > lo:
+                if self.shape == "step":
+                    total += vs * (hi - lo)
+                else:
+                    va = vs + (ve - vs) * ((lo - ts) / (te - ts))
+                    vb = vs + (ve - vs) * ((hi - ts) / (te - ts))
+                    total += 0.5 * (va + vb) * (hi - lo)
+        tn, vn = self.points[-1]
+        if b > tn:
+            total += vn * (b - max(a, tn))
+        return total
+
+    def next_transition(self, now, threshold):
+        # Mirrors CarbonSignal::next_transition (same candidate set and
+        # float-op order for linear crossings).
+        dirty_now = self.at(now) > threshold
+        candidates = []
+        for (ts, vs), (te, ve) in zip(self.points, self.points[1:]):
+            if te > now:
+                candidates.append(te)
+            if self.shape == "linear" and ve != vs:
+                cross = ts + (threshold - vs) / (ve - vs) * (te - ts)
+                if now < cross and ts < cross < te:
+                    candidates.append(cross)
+        for t in sorted(candidates):
+            if (self.at(t) > threshold) != dirty_now:
+                return t
+        return None
+
+    def percentile(self, q):
+        vals = sorted(v for _, v in self.points)
+        x = (len(vals) - 1) * min(max(q, 0.0), 1.0)
+        idx = min(int(math.floor(x + 0.5)), len(vals) - 1)
+        return vals[idx]
+
+
+def diurnal_signal(base, swing, period, samples):
+    """Mirror of CarbonSignal::diurnal (triangle wave, linear shape)."""
+    pts = []
+    for k in range(samples + 1):
+        p = k / samples
+        t = period * p
+        tri = 1.0 - abs(2.0 * p - 1.0)
+        v = base * (1.0 + swing * (2.0 * tri - 1.0))
+        pts.append((t, v))
+    return CarbonSignal(pts, "linear")
+
+
+def carbon_window(signal, pct, idle_tighten, defer_s):
+    """Mirror of autoscaler::CarbonWindowConfig::at_percentile."""
+    return {
+        "signal": signal,
+        "dirty_g_per_j": signal.percentile(pct),
+        "idle_tighten": idle_tighten,
+        "defer_scale_out_s": defer_s,
+    }
+
+
+# --- diurnal signal + window policy of the third fixture -------------
+# Mirrors the replay in rust/tests/golden_trace.rs: one 120 s diurnal
+# cycle (clean at 0 and 120, dirtiest at 60; dirty window = (30, 90)),
+# golden threshold policy with p50 windows.
+GOLDEN_CARBON_SIGNAL = diurnal_signal(G_PER_J, 0.5, 120.0, 12)
+GOLDEN_CARBON_POLICY = dict(
+    GOLDEN_POLICY,
+    carbon=carbon_window(GOLDEN_CARBON_SIGNAL, 0.5, 0.25, 6.0),
+)
 
 # --- kernel event priorities (simulation::event::SimEvent::priority) -
 PRIO = {"arrival": 0, "done": 1, "tick": 2, "fail": 3, "join": 4,
@@ -269,6 +385,7 @@ class ThresholdAutoscaler:
         self.pending_fail = []           # deactivated, fail not observed
         self.idle_since = {}             # node id -> first idle time
         self.last_scale_out = -INF
+        self.defer_since = None          # carbon-window deferral start
 
     @staticmethod
     def _p95(samples):
@@ -301,6 +418,12 @@ class ThresholdAutoscaler:
         actions = []
         wake_candidates = []
 
+        # Carbon window: dirty iff the intensity at `now` is strictly
+        # above the window threshold (mirrors CarbonWindowConfig).
+        window = cfg.get("carbon")
+        dirty = (window is not None
+                 and window["signal"].at(now) > window["dirty_g_per_j"])
+
         depth_hit = (cfg["scale_out_pending"] > 0
                      and len(waits) >= cfg["scale_out_pending"])
         pending_p95 = (self._p95(waits)
@@ -308,6 +431,8 @@ class ThresholdAutoscaler:
                        and waits else None)
         wait_hit = (pending_p95 is not None
                     and pending_p95 >= cfg["scale_out_wait_p95_s"])
+        if not (depth_hit or wait_hit):
+            self.defer_since = None
         if (not (depth_hit or wait_hit) and active < cfg["max_nodes"]
                 and pending_p95 is not None):
             # Pending waits grow at unit rate: wake exactly at the p95
@@ -315,7 +440,20 @@ class ThresholdAutoscaler:
             wake_candidates.append(
                 now + (cfg["scale_out_wait_p95_s"] - pending_p95))
         if (depth_hit or wait_hit) and active < cfg["max_nodes"]:
-            if now >= self.last_scale_out + cfg["cooldown_s"]:
+            # Depth-only triggers defer while dirty, up to the bound
+            # (mirrors the Rust deferral; SLO wait-trigger never defers).
+            deferred = False
+            if (window is not None and dirty and not wait_hit
+                    and window["defer_scale_out_s"] > 0.0):
+                if self.defer_since is None:
+                    self.defer_since = now
+                if now < self.defer_since + window["defer_scale_out_s"]:
+                    wake_candidates.append(
+                        self.defer_since + window["defer_scale_out_s"])
+                    deferred = True
+            if deferred:
+                pass
+            elif now >= self.last_scale_out + cfg["cooldown_s"]:
                 ready_at = now + cfg["provision_delay_s"]
                 # Reactivate the lowest-id scaled-in carcass before
                 # growing the node set (mirrors the Rust reuse scan).
@@ -334,16 +472,23 @@ class ThresholdAutoscaler:
                                     ready_at))
                     self.pending_join.append(len(cluster.nodes))
                 self.last_scale_out = now
+                self.defer_since = None
                 active += 1
             else:
                 wake_candidates.append(self.last_scale_out
                                        + cfg["cooldown_s"])
 
-        if math.isfinite(cfg["idle_scale_in_s"]):
+        # Dirty windows tighten the idle timeout (mirrors the Rust
+        # idle_scale_in_s multiplier).
+        if window is not None and dirty:
+            idle_scale_in_s = cfg["idle_scale_in_s"] * window["idle_tighten"]
+        else:
+            idle_scale_in_s = cfg["idle_scale_in_s"]
+        if math.isfinite(idle_scale_in_s):
             removed = []
             for nid in sorted(self.idle_since):
                 eligible_at = (self.idle_since[nid]
-                               + cfg["idle_scale_in_s"])
+                               + idle_scale_in_s)
                 if eligible_at <= now:
                     if active > cfg["min_nodes"]:
                         actions.append(("deactivate", nid, now))
@@ -355,6 +500,16 @@ class ThresholdAutoscaler:
             for nid in removed:
                 self.idle_since.pop(nid, None)
 
+        # Pending carbon-sensitive decisions (idle candidates or an
+        # active deferral) wake at the signal's next dirty-transition
+        # (mirrors the Rust transition wake).
+        if (window is not None
+                and (self.idle_since or self.defer_since is not None)):
+            t = window["signal"].next_transition(
+                now, window["dirty_g_per_j"])
+            if t is not None:
+                wake_candidates.append(t)
+
         wake = None
         for t in wake_candidates:
             if t > now and (wake is None or t < wake):
@@ -362,9 +517,28 @@ class ThresholdAutoscaler:
         return actions, wake
 
 
-def simulate(trace, policy=None):
+def schedule_carbon_aware(cluster, cls, epochs):
+    """Carbon-aware profile decision: the grid intensity is one common
+    factor per cycle, so the inverted min-max ranking reduces to the
+    minimum estimated energy (lowest candidate index on ties) — exactly
+    the FrameworkScheduler's argmax over normalized scores."""
+    req = REQUESTS[cls]
+    candidates = cluster.feasible(req)
+    if not candidates:
+        return None
+    best, best_e = None, None
+    for cid in candidates:
+        e = estimate_row(cluster, cid, cls, epochs)[1]
+        if best_e is None or e < best_e:
+            best, best_e = cid, e
+    return best
+
+
+def simulate(trace, policy=None, carbon=None, billing_horizon_s=None,
+             scheduler="greenpod"):
     """Mirror of SimulationEngine::run for an all-TOPSIS pod set, with
-    optional threshold autoscaling."""
+    optional threshold autoscaling, carbon-intensity metering and a
+    common idle-billing horizon."""
     cluster = Cluster(BASE_NODES)
     # Event queue entries: [at, prio, seq, kind, payload].
     queue = []
@@ -397,19 +571,35 @@ def simulate(trace, policy=None):
         if now <= last_s:
             return
         dt = now - last_s
+        # ∫ intensity dt over [last, now]; None for constant signals
+        # (grams then derive from joules exactly — mirrors the meter).
+        gdt = None
+        if carbon is not None and carbon.constant_value() is None:
+            gdt = carbon.integral(last_s, now)
         for r in running.values():
             r["acc"] += r["watts"] * dt
+            if gdt is not None:
+                r["accg"] += r["watts"] * gdt
         for nid in sorted(ledgers):
             led = ledgers[nid]
             if led[2]:
-                led[3] += max(led[0] - led[1], 0.0) * dt
+                idle_w = max(led[0] - led[1], 0.0)
+                led[3] += idle_w * dt
+                if gdt is not None:
+                    led[4] += idle_w * gdt
         last_s = now
+
+    def ledger_grams(led):
+        if carbon is None:
+            return 0.0
+        cv = carbon.constant_value()
+        return led[3] * cv if cv is not None else led[4]
 
     def node_online(nid, at):
         advance(at)
         if nid not in ledgers:
             ledgers[nid] = [node_idle_watts(cluster.nodes[nid]), 0.0,
-                            False, 0.0]
+                            False, 0.0, 0.0]
         ledgers[nid][2] = True
 
     def node_offline(nid, at):
@@ -452,7 +642,10 @@ def simulate(trace, policy=None):
     def try_place(i, now):
         at, cls, epochs = trace[i]
         attempts[i] += 1
-        node = schedule(cluster, cls, epochs)
+        if scheduler == "carbon-aware":
+            node = schedule_carbon_aware(cluster, cls, epochs)
+        else:
+            node = schedule(cluster, cls, epochs)
         if node is None:
             return False
         req = REQUESTS[cls]
@@ -469,6 +662,7 @@ def simulate(trace, policy=None):
             "claim": claim,
             "start": now,
             "acc": 0.0,
+            "accg": 0.0,
             "node": node,
         }
         push(now + duration, "done", i)
@@ -518,6 +712,10 @@ def simulate(trace, policy=None):
                 "attempts": attempts[i],
                 "joules": r["acc"],
             }
+            if carbon is not None:
+                cv = carbon.constant_value()
+                records[i]["grams"] = (
+                    r["acc"] * cv if cv is not None else r["accg"])
             if pending and not cycle_queued:
                 push(now, "cycle")
                 cycle_queued = True
@@ -540,10 +738,12 @@ def simulate(trace, policy=None):
             autoscale(now)
 
     assert not pending, f"unschedulable pods in golden trace: {pending}"
+    if billing_horizon_s is not None:
+        advance(billing_horizon_s)
     ordered = [records[i] for i in sorted(records)]
     total_kj = sum(r["joules"] for r in ordered) / 1000.0
     idle_kj = sum(ledgers[nid][3] for nid in sorted(ledgers)) / 1000.0
-    return {
+    out = {
         "pods": ordered,
         "makespan_s": makespan,
         "total_kj": total_kj,
@@ -554,6 +754,11 @@ def simulate(trace, policy=None):
         "final_ready_nodes": timeline[-1][1],
         "final_total_nodes": timeline[-1][2],
     }
+    if carbon is not None:
+        out["total_co2_g"] = sum(r["grams"] for r in ordered)
+        out["idle_co2_g"] = sum(
+            ledger_grams(ledgers[nid]) for nid in sorted(ledgers))
+    return out
 
 
 def summarize(tag, sim):
@@ -605,7 +810,8 @@ def main():
         "scheduler": "greenpod-topsis/energy-centric",
         "seed": 42,
         "policy": {k: v for k, v in GOLDEN_POLICY.items()
-                   if k not in ("template", "scale_out_wait_p95_s")},
+                   if k not in ("template", "scale_out_wait_p95_s",
+                                "carbon")},
         "pods": scaled["pods"],
         "makespan_s": scaled["makespan_s"],
         "total_kj": scaled["total_kj"],
@@ -620,6 +826,45 @@ def main():
         json.dump(expected2, f, indent=1)
         f.write("\n")
     summarize("autoscaled golden trace", scaled)
+
+    carbon = simulate(TRACE, policy=GOLDEN_CARBON_POLICY,
+                      carbon=GOLDEN_CARBON_SIGNAL)
+    expected3 = {
+        "engine": "event+threshold-autoscaler+carbon-windows",
+        "scheduler": "greenpod-topsis/energy-centric",
+        "seed": 42,
+        "signal": {
+            "kind": "diurnal",
+            "base_g_per_j": G_PER_J,
+            "swing": 0.5,
+            "period_s": 120.0,
+            "samples": 12,
+        },
+        "window": {
+            "percentile": 0.5,
+            "dirty_g_per_j":
+                GOLDEN_CARBON_POLICY["carbon"]["dirty_g_per_j"],
+            "idle_tighten": 0.25,
+            "defer_scale_out_s": 6.0,
+        },
+        "pods": carbon["pods"],
+        "makespan_s": carbon["makespan_s"],
+        "total_kj": carbon["total_kj"],
+        "idle_kj": carbon["idle_kj"],
+        "total_co2_g": carbon["total_co2_g"],
+        "idle_co2_g": carbon["idle_co2_g"],
+        "scaling": carbon["scaling"],
+        "peak_ready_nodes": carbon["peak_ready_nodes"],
+        "final_ready_nodes": carbon["final_ready_nodes"],
+        "final_total_nodes": carbon["final_total_nodes"],
+    }
+    out3 = os.path.join(data_dir, "golden_trace_carbon.expected.json")
+    with open(out3, "w") as f:
+        json.dump(expected3, f, indent=1)
+        f.write("\n")
+    summarize("carbon golden trace", carbon)
+    print(f"  total CO2 {carbon['total_co2_g']:.4f} g, "
+          f"idle CO2 {carbon['idle_co2_g']:.4f} g")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,146 @@
+"""Cross-validate the pinned assertions of `greenpod experiment carbon`
+(rust/src/experiments/carbon.rs) against the Python engine mirror.
+
+Reproduces the *exact* cells of the Rust experiment — the elastic
+bursty trace (seed 20250710 via the bit-exact xoshiro mirror), the
+elastic threshold policy, the three intensity signals and the
+percentile-derived carbon windows — and checks the orderings the Rust
+tests pin:
+
+* every cell drains all admitted work inside the 300 s billing horizon;
+* on the constant signal the carbon window is inert (identical totals);
+* on the diurnal signal the carbon-windowed run emits strictly fewer
+  total gCO2 than the plain autoscaled run, for both profiles.
+
+Exits non-zero on any violation, so CI catches a drift between the
+Rust experiment and this mirror (which shares its CarbonSignal /
+window / ledger arithmetic with make_golden_trace.py).
+
+Run from the repo root:
+    python3 python/tools/validate_carbon_experiment.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import make_golden_trace as g
+from rng_mirror import Rng
+
+# Mirrors experiments::elastic::BILLING_HORIZON_S.
+BILLING_HORIZON_S = 300.0
+# Mirrors experiments::carbon::WINDOW_{PERCENTILE, IDLE_TIGHTEN, DEFER_S}.
+WINDOW_PERCENTILE = 0.5
+WINDOW_IDLE_TIGHTEN = 0.25
+WINDOW_DEFER_S = 20.0
+# Mirrors ExperimentConfig::default().seed.
+SEED = 20250710
+
+
+def bursty_trace(seed):
+    """Mirror of ElasticProcess::Bursty.trace: TraceSpec{rate 0.3/s,
+    240 s, mix 0.1/0.2/0.7, epochs [2, 2, 1]}, bursts of 28."""
+    rate, duration = 0.3, 240.0
+    p_light, p_medium, p_complex = 0.1, 0.2, 0.7
+    burst = 28
+    rng = Rng(seed)
+    entries = []
+    t = 0.0
+    while True:
+        t += rng.exponential(burst / rate)
+        if t > duration:
+            break
+        for _ in range(burst):
+            total = p_light + p_medium + p_complex
+            pl, pm = p_light / total, p_medium / total
+            x = rng.f64()
+            if x < pl:
+                entries.append((t, "light", 2))
+            elif x < pl + pm:
+                entries.append((t, "medium", 2))
+            else:
+                entries.append((t, "complex", 1))
+    return entries
+
+
+def elastic_policy(carbon=None):
+    """Mirror of experiments::elastic::elastic_policy (+ window)."""
+    return {
+        "scale_out_pending": 3,
+        "scale_out_wait_p95_s": 15.0,
+        "provision_delay_s": 5.0,
+        "cooldown_s": 15.0,
+        "idle_scale_in_s": 20.0,
+        "min_nodes": 7,
+        "max_nodes": 10,
+        "template": g.EDGE_TEMPLATE,
+        "carbon": carbon,
+    }
+
+
+def signals():
+    """Mirror of experiments::carbon::CarbonSignalKind::signal."""
+    base = g.G_PER_J
+    constant = g.CarbonSignal([(0.0, base)], "step")
+    diurnal = g.diurnal_signal(base, 0.5, BILLING_HORIZON_S, 12)
+    trace = g.CarbonSignal(
+        [(0.0, base * 1.3), (60.0, base * 0.6), (120.0, base * 1.4),
+         (180.0, base * 0.7), (240.0, base * 1.0)], "step")
+    return [("constant", constant), ("diurnal", diurnal),
+            ("trace", trace)]
+
+
+def main():
+    trace = bursty_trace(SEED)
+    failures = []
+    print(f"trace: {len(trace)} pods over "
+          f"{trace[0][0]:.2f}..{trace[-1][0]:.2f} s")
+    for name, signal in signals():
+        for profile in ("greenpod", "carbon-aware"):
+            totals = {}
+            for windowed in (False, True):
+                window = (g.carbon_window(signal, WINDOW_PERCENTILE,
+                                          WINDOW_IDLE_TIGHTEN,
+                                          WINDOW_DEFER_S)
+                          if windowed else None)
+                r = g.simulate(trace, policy=elastic_policy(window),
+                               carbon=signal,
+                               billing_horizon_s=BILLING_HORIZON_S,
+                               scheduler=profile)
+                co2 = r["total_co2_g"] + r["idle_co2_g"]
+                totals[windowed] = co2
+                outs = sum(1 for s in r["scaling"]
+                           if s["kind"] in ("scale-out", "activate"))
+                ins = sum(1 for s in r["scaling"]
+                          if s["kind"] == "scale-in")
+                print(f"  {name:9} {profile:13} "
+                      f"{'windowed' if windowed else 'plain':9} "
+                      f"co2={co2:9.4f} g  makespan={r['makespan_s']:6.1f} "
+                      f"out/in={outs}/{ins}")
+                if r["makespan_s"] > BILLING_HORIZON_S:
+                    failures.append(
+                        f"{name}/{profile}/windowed={windowed}: makespan "
+                        f"{r['makespan_s']} past the billing horizon")
+                if not windowed and outs < 1:
+                    failures.append(
+                        f"{name}/{profile}: plain cell never scaled out")
+            if name == "constant" and totals[False] != totals[True]:
+                failures.append(
+                    f"constant/{profile}: window not inert "
+                    f"({totals[False]} vs {totals[True]})")
+            if name == "diurnal" and not totals[True] < totals[False]:
+                failures.append(
+                    f"diurnal/{profile}: windowed {totals[True]} !< "
+                    f"plain {totals[False]}")
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("all carbon-experiment orderings hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,8 +16,8 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
 use crate::cluster::{ClusterState, Pod, PodId};
-use crate::config::{Config, SchedulerKind};
-use crate::energy::EnergyMeter;
+use crate::config::{Config, SchedulerKind, J_PER_KWH};
+use crate::energy::{CarbonSignal, EnergyMeter};
 use crate::scheduler::Scheduler;
 use crate::simulation::contention_factor;
 use crate::util::json::Json;
@@ -46,6 +46,11 @@ pub enum ApiEvent {
         /// scaled by `time_scale` — the serve-loop counterpart of the
         /// event engine's `wait_s`).
         queue_wait_s: f64,
+        /// Grid carbon intensity at bind time (gCO₂/kWh), read off the
+        /// config's carbon signal at the loop's virtual clock — lets
+        /// downstream consumers attribute each placement to a clean or
+        /// dirty grid window.
+        grid_g_per_kwh: f64,
     },
     Unschedulable {
         pod: PodId,
@@ -88,6 +93,7 @@ impl ApiEvent {
                 profile,
                 sched_latency_us,
                 queue_wait_s,
+                grid_g_per_kwh,
             } => Json::obj(vec![
                 ("event", Json::Str("bound".into())),
                 ("pod", Json::Num(*pod as f64)),
@@ -96,6 +102,7 @@ impl ApiEvent {
                 ("profile", Json::Str(profile.clone())),
                 ("sched_latency_us", Json::Num(*sched_latency_us)),
                 ("queue_wait_s", Json::Num(*queue_wait_s)),
+                ("grid_g_per_kwh", Json::Num(*grid_g_per_kwh)),
             ]),
             ApiEvent::Unschedulable { pod, name } => Json::obj(vec![
                 ("event", Json::Str("unschedulable".into())),
@@ -167,11 +174,16 @@ pub struct ApiLoop {
     /// Private: validated once at [`ApiLoop::set_time_scale`], so every
     /// use site can divide/multiply by it without re-guarding.
     time_scale: f64,
+    /// Grid carbon intensity over the loop's virtual clock (wall time
+    /// since `run()` × `time_scale`), from the config's `carbon`
+    /// section.
+    carbon: CarbonSignal,
 }
 
 impl ApiLoop {
     pub fn new(config: Config, executor: WorkloadExecutor) -> Self {
-        Self { config, executor, time_scale: 100.0 }
+        let carbon = config.carbon.signal(&config.energy);
+        Self { config, executor, time_scale: 100.0, carbon }
     }
 
     /// Set the time compression. Rejects non-finite or non-positive
@@ -199,8 +211,10 @@ impl ApiLoop {
         topsis: &mut dyn Scheduler,
         default: &mut dyn Scheduler,
     ) -> anyhow::Result<()> {
+        let run_started = Instant::now();
         let mut state = ClusterState::from_config(&self.config.cluster);
-        let mut meter = EnergyMeter::new();
+        let mut meter =
+            EnergyMeter::new().with_carbon(self.carbon.clone());
         let mut timers: BinaryHeap<Reverse<Running>> = BinaryHeap::new();
         // Pending pods carry their submission instant so Bound events
         // can report queue wait.
@@ -227,8 +241,8 @@ impl ApiLoop {
                 let mut still = Vec::new();
                 for (pod, submitted) in pending.drain(..) {
                     if let Some(pod) = self.try_start(
-                        pod, submitted, &mut state, &mut meter, &mut timers,
-                        &mut seq, on_event, topsis, default,
+                        pod, submitted, run_started, &mut state, &mut meter,
+                        &mut timers, &mut seq, on_event, topsis, default,
                     )? {
                         still.push((pod, submitted));
                     }
@@ -264,8 +278,8 @@ impl ApiLoop {
                     next_id += 1;
                     let submitted = Instant::now();
                     if let Some(pod) = self.try_start(
-                        pod, submitted, &mut state, &mut meter, &mut timers,
-                        &mut seq, on_event, topsis, default,
+                        pod, submitted, run_started, &mut state, &mut meter,
+                        &mut timers, &mut seq, on_event, topsis, default,
                     )? {
                         pending.push((pod, submitted));
                     }
@@ -292,6 +306,7 @@ impl ApiLoop {
         &self,
         pod: Pod,
         submitted: Instant,
+        run_started: Instant,
         state: &mut ClusterState,
         meter: &mut EnergyMeter,
         timers: &mut BinaryHeap<Reverse<Running>>,
@@ -300,13 +315,19 @@ impl ApiLoop {
         topsis: &mut dyn Scheduler,
         default: &mut dyn Scheduler,
     ) -> anyhow::Result<Option<Pod>> {
+        // The loop's virtual clock: wall time since run() start,
+        // compressed by time_scale — the serve-side "what time is it"
+        // that time-varying profiles and the carbon ledger read.
+        let now_s = run_started.elapsed().as_secs_f64() * self.time_scale;
         let (decision, profile) = match pod.scheduler {
-            SchedulerKind::Topsis => {
-                (topsis.schedule(state, &pod), topsis.name().to_string())
-            }
-            SchedulerKind::DefaultK8s => {
-                (default.schedule(state, &pod), default.name().to_string())
-            }
+            SchedulerKind::Topsis => (
+                topsis.schedule_at(state, &pod, now_s),
+                topsis.name().to_string(),
+            ),
+            SchedulerKind::DefaultK8s => (
+                default.schedule_at(state, &pod, now_s),
+                default.name().to_string(),
+            ),
         };
         let Some(node_id) = decision.node else {
             return Ok(Some(pod));
@@ -330,6 +351,7 @@ impl ApiLoop {
             &node,
             share,
             duration,
+            now_s,
         );
 
         on_event(ApiEvent::Bound {
@@ -340,6 +362,7 @@ impl ApiLoop {
             sched_latency_us: decision.latency.as_secs_f64() * 1e6,
             queue_wait_s: submitted.elapsed().as_secs_f64()
                 * self.time_scale,
+            grid_g_per_kwh: self.carbon.at(now_s) * J_PER_KWH,
         });
 
         let due = Instant::now()
@@ -487,12 +510,62 @@ mod tests {
             profile: "greenpod".into(),
             sched_latency_us: 12.5,
             queue_wait_s: 0.25,
+            grid_g_per_kwh: 373.5,
         };
         let j = e.to_json().to_string();
         assert!(j.contains("\"event\":\"bound\""), "{j}");
         assert!(j.contains("\"pod\":3"));
         assert!(j.contains("\"profile\":\"greenpod\""), "{j}");
         assert!(j.contains("\"queue_wait_s\":0.25"), "{j}");
+        assert!(j.contains("\"grid_g_per_kwh\":373.5"), "{j}");
+    }
+
+    #[test]
+    fn bound_events_carry_the_grid_intensity() {
+        // Default config: constant signal at the eGRID scalar, so every
+        // binding reports the same ≈373 g/kWh regardless of wall time.
+        let config = Config::paper_default();
+        let want = config.carbon.signal(&config.energy).at(0.0)
+            * crate::config::J_PER_KWH;
+        let mut api =
+            ApiLoop::new(config.clone(), WorkloadExecutor::analytic());
+        api.set_time_scale(100_000.0).unwrap();
+        let (sub_tx, sub_rx) = std::sync::mpsc::channel();
+        for _ in 0..3 {
+            sub_tx
+                .send(PodSubmission {
+                    entry: TraceEntry {
+                        at_s: 0.0,
+                        class: WorkloadClass::Light,
+                        epochs: 1,
+                    },
+                    scheduler: SchedulerKind::Topsis,
+                })
+                .unwrap();
+        }
+        drop(sub_tx);
+        let mut topsis = GreenPodScheduler::new(
+            Estimator::with_defaults(config.energy.clone()),
+            WeightingScheme::EnergyCentric,
+        );
+        let mut default = DefaultK8sScheduler::new(1);
+        let mut grids = Vec::new();
+        api.run(
+            sub_rx,
+            &mut |e| {
+                if let ApiEvent::Bound { grid_g_per_kwh, .. } = e {
+                    grids.push(grid_g_per_kwh);
+                }
+            },
+            &mut topsis,
+            &mut default,
+        )
+        .unwrap();
+        assert_eq!(grids.len(), 3);
+        for g in grids {
+            assert!((g - want).abs() < 1e-9, "{g} vs {want}");
+            assert!((g - 373.4).abs() < 1.0, "≈eGRID scalar, got {g}");
+        }
     }
 
     #[test]

@@ -33,7 +33,9 @@ mod scheduled;
 mod threshold;
 
 pub use scheduled::ScheduledAutoscaler;
-pub use threshold::{ThresholdAutoscaler, ThresholdConfig};
+pub use threshold::{
+    CarbonWindowConfig, ThresholdAutoscaler, ThresholdConfig,
+};
 
 use crate::cluster::{ClusterState, NodeId};
 use crate::config::NodePoolConfig;

@@ -5,8 +5,73 @@ use std::collections::BTreeMap;
 
 use crate::cluster::NodeId;
 use crate::config::{ClusterConfig, NodePoolConfig};
+use crate::energy::CarbonSignal;
 
 use super::{Autoscaler, Decision, Observation, ScalingAction};
+
+/// Carbon-aware scale-down windows (DESIGN.md §"Carbon signal"): the
+/// policy reads the grid intensity at each decision's virtual time and,
+/// while the grid is **dirty** (intensity strictly above the
+/// threshold), tightens idle scale-in and defers non-urgent scale-out.
+///
+/// * **Scale-in tightening** — the idle timeout is multiplied by
+///   `idle_tighten` (< 1), so idle capacity powers off sooner exactly
+///   when a joule costs the most grams.
+/// * **Bounded scale-out deferral** — a *depth-only* trigger waits up
+///   to `defer_scale_out_s` for the grid to clean up. The p95-wait
+///   trigger (SLO pressure) is never deferred, and an expired deferral
+///   scales out dirty-or-not, so the delay is strictly bounded.
+///
+/// A constant signal is never strictly above its own percentile, so
+/// the window is provably inert there — the carbon experiment pins
+/// constant-signal windowed runs bit-identical to plain ones.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CarbonWindowConfig {
+    /// The intensity signal the windows are evaluated against.
+    pub signal: CarbonSignal,
+    /// Dirty threshold (gCO₂/J): dirty ⇔ `signal.at(now) > this`.
+    pub dirty_g_per_j: f64,
+    /// Multiplier on `idle_scale_in_s` while dirty (0 < x ≤ 1).
+    pub idle_tighten: f64,
+    /// Upper bound (s) on deferring a depth-triggered scale-out while
+    /// dirty (`0` disables deferral).
+    pub defer_scale_out_s: f64,
+}
+
+impl CarbonWindowConfig {
+    /// Build a window whose dirty threshold is the signal's intensity
+    /// at quantile `pct` of its samples. Rejects out-of-range
+    /// parameters: `idle_tighten` outside `(0, 1]` would loosen
+    /// scale-in (or make every idle node instantly eligible), and a
+    /// negative or non-finite deferral bound has no meaning.
+    pub fn at_percentile(
+        signal: CarbonSignal,
+        pct: f64,
+        idle_tighten: f64,
+        defer_scale_out_s: f64,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&pct),
+            "carbon window percentile {pct} must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            idle_tighten > 0.0 && idle_tighten <= 1.0,
+            "carbon window idle_tighten {idle_tighten} must be in (0, 1]"
+        );
+        anyhow::ensure!(
+            defer_scale_out_s.is_finite() && defer_scale_out_s >= 0.0,
+            "carbon window defer_scale_out_s {defer_scale_out_s} must be \
+             a finite non-negative number"
+        );
+        let dirty_g_per_j = signal.percentile(pct);
+        Ok(Self { signal, dirty_g_per_j, idle_tighten, defer_scale_out_s })
+    }
+
+    /// Whether the grid is dirty at virtual time `now_s`.
+    pub fn dirty_at(&self, now_s: f64) -> bool {
+        self.signal.at(now_s) > self.dirty_g_per_j
+    }
+}
 
 /// Threshold-policy knobs. Every disabled trigger has an explicit
 /// sentinel (`0` / `f64::INFINITY`) so a fully disabled config is a
@@ -36,6 +101,9 @@ pub struct ThresholdConfig {
     /// Pool template for provisioned nodes (`count` is ignored — the
     /// policy adds one node per scale-out decision).
     pub template: NodePoolConfig,
+    /// Carbon-aware scale-down windows (`None` = carbon-blind — the
+    /// pre-window policy, bit-for-bit).
+    pub carbon: Option<CarbonWindowConfig>,
 }
 
 impl ThresholdConfig {
@@ -53,7 +121,14 @@ impl ThresholdConfig {
             min_nodes: base,
             max_nodes: base + 3,
             template: Self::edge_template(cluster),
+            carbon: None,
         }
+    }
+
+    /// Attach carbon-aware scale-down windows.
+    pub fn with_carbon_window(mut self, window: CarbonWindowConfig) -> Self {
+        self.carbon = Some(window);
+        self
     }
 
     /// A config whose every trigger is disabled — scale-out can never
@@ -70,6 +145,7 @@ impl ThresholdConfig {
             min_nodes: base,
             max_nodes: base,
             template: Self::edge_template(cluster),
+            carbon: None,
         }
     }
 
@@ -132,6 +208,11 @@ pub struct ThresholdAutoscaler {
     /// deterministic ascending-id iteration).
     idle_since: BTreeMap<NodeId, f64>,
     last_scale_out_s: f64,
+    /// When the current carbon-window deferral of a depth-triggered
+    /// scale-out began (None = no active deferral). Reset on scale-out
+    /// and whenever the trigger clears, so each backlog episode gets at
+    /// most `defer_scale_out_s` of added delay.
+    defer_since: Option<f64>,
 }
 
 impl ThresholdAutoscaler {
@@ -143,6 +224,7 @@ impl ThresholdAutoscaler {
             pending_fail: Vec::new(),
             idle_since: BTreeMap::new(),
             last_scale_out_s: f64::NEG_INFINITY,
+            defer_since: None,
         }
     }
 }
@@ -184,6 +266,11 @@ impl Autoscaler for ThresholdAutoscaler {
         let mut decision = Decision::none();
         let mut wake_candidates: Vec<f64> = Vec::new();
 
+        // Carbon window: is the grid dirty at this decision's time?
+        // (A constant signal is never strictly above its threshold, so
+        // a window over one is provably inert.)
+        let dirty = cfg.carbon.as_ref().map_or(false, |c| c.dirty_at(now));
+
         // Scale-out: queue pressure by depth or by p95 wait, one node
         // per decision, rate-limited by the cooldown, bounded by max.
         let depth_hit = cfg.scale_out_pending > 0
@@ -205,8 +292,32 @@ impl Autoscaler for ThresholdAutoscaler {
                 wake_candidates.push(now + (cfg.scale_out_wait_p95_s - p));
             }
         }
+        if !(depth_hit || wait_hit) {
+            // No trigger: any carbon deferral episode ends with it.
+            self.defer_since = None;
+        }
         if (depth_hit || wait_hit) && active < cfg.max_nodes {
-            if now >= self.last_scale_out_s + cfg.cooldown_s {
+            // Carbon window: a *depth-only* trigger defers while the
+            // grid is dirty, up to the window's bound; the p95-wait
+            // (SLO) trigger always proceeds, and an expired deferral
+            // proceeds dirty-or-not.
+            let deferred = match &cfg.carbon {
+                Some(c)
+                    if dirty && !wait_hit && c.defer_scale_out_s > 0.0 =>
+                {
+                    let since = *self.defer_since.get_or_insert(now);
+                    if now < since + c.defer_scale_out_s {
+                        wake_candidates.push(since + c.defer_scale_out_s);
+                        true
+                    } else {
+                        false
+                    }
+                }
+                _ => false,
+            };
+            if deferred {
+                // Deliberately no action: wake at the deferral bound.
+            } else if now >= self.last_scale_out_s + cfg.cooldown_s {
                 let ready_at_s = now + cfg.provision_delay_s;
                 // Reactivate the lowest-id scaled-in node before
                 // growing the node set — repeated burst/idle phases
@@ -241,6 +352,7 @@ impl Autoscaler for ThresholdAutoscaler {
                     }
                 }
                 self.last_scale_out_s = now;
+                self.defer_since = None;
                 active += 1;
             } else {
                 // Blocked purely by the cooldown: wake at its expiry so
@@ -250,11 +362,17 @@ impl Autoscaler for ThresholdAutoscaler {
         }
 
         // Scale-in: every autoscaled node idle past the timeout, oldest
-        // id first, floored at min_nodes.
-        if cfg.idle_scale_in_s.is_finite() {
+        // id first, floored at min_nodes. In a dirty carbon window the
+        // timeout tightens by the window's multiplier — idle capacity
+        // powers off sooner exactly when a joule costs the most grams.
+        let idle_scale_in_s = match &cfg.carbon {
+            Some(c) if dirty => cfg.idle_scale_in_s * c.idle_tighten,
+            _ => cfg.idle_scale_in_s,
+        };
+        if idle_scale_in_s.is_finite() {
             let mut eligible: Vec<NodeId> = Vec::new();
             for (&id, &since) in &self.idle_since {
-                let eligible_at = since + cfg.idle_scale_in_s;
+                let eligible_at = since + idle_scale_in_s;
                 if eligible_at <= now {
                     if active > cfg.min_nodes {
                         decision
@@ -270,6 +388,23 @@ impl Autoscaler for ThresholdAutoscaler {
             }
             for id in eligible {
                 self.idle_since.remove(&id);
+            }
+        }
+
+        // While a carbon-sensitive decision is pending — idle nodes
+        // whose effective timeout depends on dirtiness, or an active
+        // scale-out deferral waiting for a clean window — wake at the
+        // signal's next dirty-transition, so tightening engages and
+        // deferrals release the moment the grid changes instead of
+        // waiting for an unrelated kernel event. (Finitely many
+        // transitions per signal: the clamped tail never wakes.)
+        if let Some(c) = &cfg.carbon {
+            if !self.idle_since.is_empty() || self.defer_since.is_some() {
+                if let Some(t) =
+                    c.signal.next_transition(now, c.dirty_g_per_j)
+                {
+                    wake_candidates.push(t);
+                }
             }
         }
 
@@ -585,5 +720,220 @@ mod tests {
         assert_eq!(edge.machine_type, "e2-medium");
         let cloud = ThresholdConfig::cloud_template(&cluster);
         assert_eq!(cloud.machine_type, "n2-standard-4");
+    }
+
+    /// Clean for t < 10, dirty (3 > the p25 threshold of 1) after.
+    fn window(defer_s: f64, tighten: f64) -> CarbonWindowConfig {
+        let signal =
+            CarbonSignal::step(vec![(0.0, 1.0), (10.0, 3.0)]).unwrap();
+        let w = CarbonWindowConfig::at_percentile(
+            signal, 0.25, tighten, defer_s,
+        )
+        .unwrap();
+        assert_eq!(w.dirty_g_per_j, 1.0);
+        assert!(!w.dirty_at(5.0));
+        assert!(w.dirty_at(12.0));
+        w
+    }
+
+    #[test]
+    fn bad_window_parameters_rejected() {
+        let signal = CarbonSignal::constant(1e-4);
+        for (pct, tighten, defer) in [
+            (0.5, 0.0, 10.0),   // tighten must be > 0
+            (0.5, 1.5, 10.0),   // tighten must be <= 1
+            (0.5, -0.2, 10.0),  // negative tighten
+            (0.5, 0.5, -1.0),   // negative deferral bound
+            (0.5, 0.5, f64::INFINITY), // unbounded deferral
+            (1.5, 0.5, 10.0),   // percentile out of range
+        ] {
+            assert!(
+                CarbonWindowConfig::at_percentile(
+                    signal.clone(),
+                    pct,
+                    tighten,
+                    defer
+                )
+                .is_err(),
+                "accepted pct={pct} tighten={tighten} defer={defer}"
+            );
+        }
+    }
+
+    #[test]
+    fn carbon_window_defers_depth_trigger_up_to_bound() {
+        let cluster = ClusterConfig::paper_default();
+        let state = ClusterState::from_config(&cluster);
+        let mut cfg = ThresholdConfig::for_cluster(&cluster);
+        cfg.cooldown_s = 0.0;
+        let cfg = cfg.with_carbon_window(window(8.0, 1.0));
+        let mut a = ThresholdAutoscaler::new(cfg, state.nodes().len());
+        let deep = [0.5; 4];
+        // Dirty at 12: the depth trigger is deferred, wake at 12 + 8.
+        let d = a.decide(&Observation {
+            now_s: 12.0,
+            state: &state,
+            pending_wait_s: &deep,
+        });
+        assert!(d.actions.is_empty(), "{:?}", d.actions);
+        assert_eq!(d.wake_at_s, Some(20.0));
+        // Still dirty mid-window: still deferred, same deadline.
+        let d2 = a.decide(&Observation {
+            now_s: 15.0,
+            state: &state,
+            pending_wait_s: &deep,
+        });
+        assert!(d2.actions.is_empty());
+        assert_eq!(d2.wake_at_s, Some(20.0));
+        // Deferral expired: scales out even though still dirty.
+        let d3 = a.decide(&Observation {
+            now_s: 20.0,
+            state: &state,
+            pending_wait_s: &deep,
+        });
+        assert_eq!(d3.actions.len(), 1, "{:?}", d3.actions);
+        assert!(matches!(
+            d3.actions[0],
+            ScalingAction::Provision { .. }
+        ));
+    }
+
+    #[test]
+    fn clean_grid_never_defers() {
+        let cluster = ClusterConfig::paper_default();
+        let state = ClusterState::from_config(&cluster);
+        let cfg = ThresholdConfig::for_cluster(&cluster)
+            .with_carbon_window(window(8.0, 1.0));
+        let mut a = ThresholdAutoscaler::new(cfg, state.nodes().len());
+        // Clean at 2: the depth trigger provisions immediately.
+        let d = a.decide(&Observation {
+            now_s: 2.0,
+            state: &state,
+            pending_wait_s: &[0.5; 4],
+        });
+        assert_eq!(d.actions.len(), 1);
+    }
+
+    #[test]
+    fn slo_pressure_overrides_carbon_deferral() {
+        let cluster = ClusterConfig::paper_default();
+        let state = ClusterState::from_config(&cluster);
+        let mut cfg = ThresholdConfig::for_cluster(&cluster);
+        cfg.scale_out_pending = 0;
+        cfg.scale_out_wait_p95_s = 5.0;
+        let cfg = cfg.with_carbon_window(window(30.0, 1.0));
+        let mut a = ThresholdAutoscaler::new(cfg, state.nodes().len());
+        // Dirty at 12, but the p95-wait (SLO) trigger fired: scale out
+        // immediately, no deferral.
+        let d = a.decide(&Observation {
+            now_s: 12.0,
+            state: &state,
+            pending_wait_s: &[6.0, 7.0],
+        });
+        assert_eq!(d.actions.len(), 1, "{:?}", d.actions);
+    }
+
+    #[test]
+    fn transition_wake_engages_tightening_at_dirty_onset() {
+        // A node goes idle while the grid is clean: the decision wakes
+        // at the signal's dirty onset (t = 10), not just at the
+        // clean-timeout deadline — and the tightened timeout has
+        // already expired there, so the node powers off at the onset.
+        let cluster = ClusterConfig::paper_default();
+        let mut state = ClusterState::from_config(&cluster);
+        let mut cfg = ThresholdConfig::for_cluster(&cluster);
+        cfg.idle_scale_in_s = 10.0;
+        let cfg = cfg.with_carbon_window(window(0.0, 0.3));
+        let template = cfg.template.clone();
+        let base = state.nodes().len();
+        let mut a = ThresholdAutoscaler::new(cfg, base);
+        let id = state.add_node(&template, 0.0);
+        state.set_ready(id, true, 5.0);
+        // Clean at 5: plain timeout says 15, but the dirty onset at 10
+        // is earlier — wake there.
+        let d = a.decide(&Observation {
+            now_s: 5.0,
+            state: &state,
+            pending_wait_s: &[],
+        });
+        assert!(d.actions.is_empty());
+        assert_eq!(d.wake_at_s, Some(10.0));
+        // At the onset the tightened timeout (3 s, expired at 8) makes
+        // the node immediately eligible.
+        let d2 = a.decide(&Observation {
+            now_s: 10.0,
+            state: &state,
+            pending_wait_s: &[],
+        });
+        assert_eq!(
+            d2.actions,
+            vec![ScalingAction::Deactivate { node: id, at_s: 10.0 }]
+        );
+    }
+
+    #[test]
+    fn dirty_window_tightens_idle_scale_in() {
+        let cluster = ClusterConfig::paper_default();
+        let mut state = ClusterState::from_config(&cluster);
+        let mut cfg = ThresholdConfig::for_cluster(&cluster);
+        cfg.idle_scale_in_s = 10.0;
+        let cfg = cfg.with_carbon_window(window(0.0, 0.3));
+        let template = cfg.template.clone();
+        let base = state.nodes().len();
+        let mut a = ThresholdAutoscaler::new(cfg, base);
+        let id = state.add_node(&template, 0.0);
+        state.set_ready(id, true, 12.0);
+        // First sighting at 12 (dirty): the 10 s timeout tightens to
+        // 3 s — wake at 15, deactivate there.
+        let d = a.decide(&Observation {
+            now_s: 12.0,
+            state: &state,
+            pending_wait_s: &[],
+        });
+        assert!(d.actions.is_empty());
+        assert_eq!(d.wake_at_s, Some(15.0));
+        let d2 = a.decide(&Observation {
+            now_s: 15.0,
+            state: &state,
+            pending_wait_s: &[],
+        });
+        assert_eq!(
+            d2.actions,
+            vec![ScalingAction::Deactivate { node: id, at_s: 15.0 }]
+        );
+    }
+
+    #[test]
+    fn constant_signal_window_is_inert() {
+        // A window over a constant signal can never be dirty (strict
+        // >), so the windowed policy decides exactly like the plain one.
+        let cluster = ClusterConfig::paper_default();
+        let state = ClusterState::from_config(&cluster);
+        let plain_cfg = ThresholdConfig::for_cluster(&cluster);
+        let windowed_cfg = plain_cfg.clone().with_carbon_window(
+            CarbonWindowConfig::at_percentile(
+                CarbonSignal::constant(1e-4),
+                0.5,
+                0.25,
+                30.0,
+            )
+            .unwrap(),
+        );
+        let mut plain = ThresholdAutoscaler::new(plain_cfg, state.nodes().len());
+        let mut windowed =
+            ThresholdAutoscaler::new(windowed_cfg, state.nodes().len());
+        for (now, waits) in [
+            (1.0, &[0.5_f64; 4][..]),
+            (2.0, &[0.5; 4][..]),
+            (30.0, &[][..]),
+            (31.0, &[9.0; 5][..]),
+        ] {
+            let obs = Observation {
+                now_s: now,
+                state: &state,
+                pending_wait_s: waits,
+            };
+            assert_eq!(plain.decide(&obs), windowed.decide(&obs), "t={now}");
+        }
     }
 }

@@ -1,0 +1,190 @@
+//! Carbon-intensity configuration — the `carbon` section of a config
+//! file, materialized as an [`CarbonSignal`] for the meter, the
+//! carbon-aware profile and the autoscaler's carbon windows.
+//!
+//! The config speaks **gCO₂ per kWh** (the unit eGRID publishes, ≈373
+//! for the paper's US-average factor); the engine's signal speaks
+//! gCO₂ per joule. The default mode is `constant`, which derives the
+//! intensity from the energy model's `co2_lb_per_kwh` — exactly the
+//! legacy scalar path, so an absent section changes nothing.
+
+use anyhow::{ensure, Result};
+
+use crate::energy::{grams_co2_per_joule, CarbonSignal, SignalShape};
+
+use super::EnergyModelConfig;
+
+/// Joules per kWh (the unit bridge between config and signal space —
+/// the same constant `grams_co2_per_joule` converts with).
+pub use crate::energy::J_PER_KWH;
+
+/// One sample of a configured intensity trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CarbonPoint {
+    pub at_s: f64,
+    pub g_per_kwh: f64,
+}
+
+/// Which intensity signal the run uses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CarbonMode {
+    /// Flat grid at the energy model's eGRID factor (the default; the
+    /// legacy scalar path, bit-for-bit).
+    Constant,
+    /// Synthetic diurnal cycle (piecewise-linear triangle wave; see
+    /// [`CarbonSignal::diurnal`]).
+    Diurnal {
+        base_g_per_kwh: f64,
+        /// Relative swing around the base, in `[0, 1]`.
+        swing: f64,
+        period_s: f64,
+        samples: u32,
+    },
+    /// Explicit intensity trace.
+    Trace { shape: SignalShape, points: Vec<CarbonPoint> },
+}
+
+/// The `carbon` config section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CarbonConfig {
+    pub mode: CarbonMode,
+}
+
+impl Default for CarbonConfig {
+    fn default() -> Self {
+        Self { mode: CarbonMode::Constant }
+    }
+}
+
+impl CarbonConfig {
+    /// Build the runtime signal. Errors surface everything
+    /// [`CarbonSignal`]'s constructors reject: non-finite or
+    /// non-monotonic timestamps, negative or non-finite intensities,
+    /// empty traces, out-of-range diurnal parameters.
+    pub fn build_signal(
+        &self,
+        energy: &EnergyModelConfig,
+    ) -> Result<CarbonSignal> {
+        match &self.mode {
+            CarbonMode::Constant => {
+                Ok(CarbonSignal::constant(grams_co2_per_joule(energy)))
+            }
+            CarbonMode::Diurnal { base_g_per_kwh, swing, period_s, samples } => {
+                ensure!(
+                    base_g_per_kwh.is_finite(),
+                    "carbon: base_g_per_kwh {base_g_per_kwh} is not finite"
+                );
+                CarbonSignal::diurnal(
+                    base_g_per_kwh / J_PER_KWH,
+                    *swing,
+                    *period_s,
+                    *samples,
+                )
+            }
+            CarbonMode::Trace { shape, points } => {
+                let points: Vec<(f64, f64)> = points
+                    .iter()
+                    .map(|p| (p.at_s, p.g_per_kwh / J_PER_KWH))
+                    .collect();
+                match shape {
+                    SignalShape::Step => CarbonSignal::step(points),
+                    SignalShape::Linear => CarbonSignal::linear(points),
+                }
+            }
+        }
+    }
+
+    /// The runtime signal of a validated config. Panics on an invalid
+    /// section — [`CarbonConfig::validate`] (called by
+    /// `Config::validate`) is the error path.
+    pub fn signal(&self, energy: &EnergyModelConfig) -> CarbonSignal {
+        self.build_signal(energy)
+            .expect("Config::validate admits only representable carbon signals")
+    }
+
+    pub fn validate(&self, energy: &EnergyModelConfig) -> Result<()> {
+        self.build_signal(energy).map(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_the_scalar_path() {
+        let energy = EnergyModelConfig::default();
+        let s = CarbonConfig::default().signal(&energy);
+        assert_eq!(s.constant_value(), Some(grams_co2_per_joule(&energy)));
+    }
+
+    #[test]
+    fn diurnal_converts_units() {
+        let energy = EnergyModelConfig::default();
+        let cfg = CarbonConfig {
+            mode: CarbonMode::Diurnal {
+                base_g_per_kwh: 360.0,
+                swing: 0.5,
+                period_s: 86400.0,
+                samples: 24,
+            },
+        };
+        cfg.validate(&energy).unwrap();
+        let s = cfg.signal(&energy);
+        // Peak at half period: 360 * 1.5 g/kWh in g/J.
+        let peak = s.at(43200.0);
+        assert!(
+            (peak - 540.0 / J_PER_KWH).abs() < 1e-12,
+            "peak {peak}"
+        );
+    }
+
+    #[test]
+    fn one_sample_trace_is_a_constant() {
+        let energy = EnergyModelConfig::default();
+        let cfg = CarbonConfig {
+            mode: CarbonMode::Trace {
+                shape: SignalShape::Linear,
+                points: vec![CarbonPoint { at_s: 0.0, g_per_kwh: 400.0 }],
+            },
+        };
+        cfg.validate(&energy).unwrap();
+        let s = cfg.signal(&energy);
+        assert_eq!(s.constant_value(), Some(400.0 / J_PER_KWH));
+        assert_eq!(s.at(0.0), s.at(1e6));
+    }
+
+    #[test]
+    fn bad_traces_rejected() {
+        let energy = EnergyModelConfig::default();
+        let mk = |points: Vec<CarbonPoint>| CarbonConfig {
+            mode: CarbonMode::Trace { shape: SignalShape::Step, points },
+        };
+        assert!(mk(vec![]).validate(&energy).is_err());
+        assert!(mk(vec![
+            CarbonPoint { at_s: f64::NAN, g_per_kwh: 1.0 },
+        ])
+        .validate(&energy)
+        .is_err());
+        assert!(mk(vec![
+            CarbonPoint { at_s: 10.0, g_per_kwh: 1.0 },
+            CarbonPoint { at_s: 5.0, g_per_kwh: 1.0 },
+        ])
+        .validate(&energy)
+        .is_err());
+        assert!(mk(vec![
+            CarbonPoint { at_s: 0.0, g_per_kwh: -3.0 },
+        ])
+        .validate(&energy)
+        .is_err());
+        let bad_diurnal = CarbonConfig {
+            mode: CarbonMode::Diurnal {
+                base_g_per_kwh: 300.0,
+                swing: 2.0,
+                period_s: 60.0,
+                samples: 8,
+            },
+        };
+        assert!(bad_diurnal.validate(&energy).is_err());
+    }
+}

@@ -11,6 +11,7 @@
 //! (`greenpod experiment table6 --config my.json`) and every run can
 //! record the exact configuration it used.
 
+mod carbon;
 mod cluster;
 mod energy;
 mod experiment;
@@ -18,6 +19,7 @@ mod profile;
 mod serial;
 mod weights;
 
+pub use carbon::{CarbonConfig, CarbonMode, CarbonPoint, J_PER_KWH};
 pub use cluster::{ClusterConfig, NodePoolConfig};
 pub use energy::EnergyModelConfig;
 pub use experiment::{
@@ -35,6 +37,9 @@ pub struct Config {
     pub cluster: ClusterConfig,
     pub energy: EnergyModelConfig,
     pub experiment: ExperimentConfig,
+    /// Grid carbon-intensity signal (`constant` by default — the
+    /// legacy eGRID scalar path, bit-for-bit).
+    pub carbon: CarbonConfig,
     /// User-defined scheduling profiles, registered alongside the
     /// framework built-ins (see `framework::ProfileRegistry`).
     pub profiles: Vec<ProfileSpec>,
@@ -65,6 +70,7 @@ impl Config {
         self.cluster.validate()?;
         self.energy.validate()?;
         self.experiment.validate()?;
+        self.carbon.validate(&self.energy)?;
         profile::validate_profiles(&self.profiles)?;
         Ok(())
     }

@@ -21,11 +21,13 @@
 use anyhow::{anyhow, Result};
 
 use crate::cluster::NodeCategory;
+use crate::energy::SignalShape;
 use crate::util::json::Json;
 
 use super::{
-    ClusterConfig, Config, EnergyModelConfig, ExperimentConfig,
-    NodePoolConfig, ProfileSpec, ScorePluginKind, ScorePluginSpec,
+    CarbonConfig, CarbonMode, CarbonPoint, ClusterConfig, Config,
+    EnergyModelConfig, ExperimentConfig, NodePoolConfig, ProfileSpec,
+    ScorePluginKind, ScorePluginSpec,
 };
 
 // ------------------------------------------------------------ helpers
@@ -72,10 +74,54 @@ pub fn config_from_json(text: &str) -> Result<Config> {
     if let Some(x) = v.get("experiment") {
         cfg.experiment = experiment_from_json(x)?;
     }
+    if let Some(c) = v.get("carbon") {
+        cfg.carbon = carbon_from_json(c)?;
+    }
     if let Some(p) = v.get("profiles") {
         cfg.profiles = profiles_from_json(p)?;
     }
     Ok(cfg)
+}
+
+fn carbon_from_json(v: &Json) -> Result<CarbonConfig> {
+    let mode = match v.get("mode").and_then(Json::as_str).unwrap_or("constant")
+    {
+        "constant" => CarbonMode::Constant,
+        "diurnal" => CarbonMode::Diurnal {
+            base_g_per_kwh: v.req_f64("base_g_per_kwh")?,
+            swing: get_f64(v, "swing", 0.5)?,
+            period_s: v.req_f64("period_s")?,
+            samples: u32::try_from(get_u64(v, "samples", 24)?).map_err(
+                |_| anyhow!("carbon `samples` does not fit in 32 bits"),
+            )?,
+        },
+        "trace" => {
+            let shape: SignalShape = v
+                .get("shape")
+                .and_then(Json::as_str)
+                .unwrap_or("step")
+                .parse()?;
+            let points = v
+                .req("points")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("carbon `points` is not an array"))?
+                .iter()
+                .map(|p| {
+                    Ok(CarbonPoint {
+                        at_s: p.req_f64("at_s")?,
+                        g_per_kwh: p.req_f64("g_per_kwh")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            CarbonMode::Trace { shape, points }
+        }
+        other => {
+            return Err(anyhow!(
+                "unknown carbon mode `{other}` (constant|diurnal|trace)"
+            ))
+        }
+    };
+    Ok(CarbonConfig { mode })
 }
 
 fn profiles_from_json(v: &Json) -> Result<Vec<ProfileSpec>> {
@@ -214,8 +260,44 @@ pub fn config_to_json(cfg: &Config) -> Json {
         ("cluster", cluster_to_json(&cfg.cluster)),
         ("energy", energy_to_json(&cfg.energy)),
         ("experiment", experiment_to_json(&cfg.experiment)),
+        ("carbon", carbon_to_json(&cfg.carbon)),
         ("profiles", profiles_to_json(&cfg.profiles)),
     ])
+}
+
+pub fn carbon_to_json(c: &CarbonConfig) -> Json {
+    match &c.mode {
+        CarbonMode::Constant => {
+            Json::obj(vec![("mode", Json::Str("constant".into()))])
+        }
+        CarbonMode::Diurnal { base_g_per_kwh, swing, period_s, samples } => {
+            Json::obj(vec![
+                ("mode", Json::Str("diurnal".into())),
+                ("base_g_per_kwh", Json::Num(*base_g_per_kwh)),
+                ("swing", Json::Num(*swing)),
+                ("period_s", Json::Num(*period_s)),
+                ("samples", Json::Num(*samples as f64)),
+            ])
+        }
+        CarbonMode::Trace { shape, points } => Json::obj(vec![
+            ("mode", Json::Str("trace".into())),
+            ("shape", Json::Str(shape.label().into())),
+            (
+                "points",
+                Json::Arr(
+                    points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("at_s", Json::Num(p.at_s)),
+                                ("g_per_kwh", Json::Num(p.g_per_kwh)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    }
 }
 
 pub fn profiles_to_json(profiles: &[ProfileSpec]) -> Json {
@@ -379,6 +461,79 @@ mod tests {
                 [{"plugin": "warp-drive"}]}]}"#,
         )
         .is_err());
+    }
+
+    #[test]
+    fn carbon_sections_parse_and_roundtrip() {
+        for text in [
+            r#"{"carbon": {"mode": "constant"}}"#,
+            r#"{"carbon": {"mode": "diurnal", "base_g_per_kwh": 373.4,
+                 "swing": 0.4, "period_s": 86400, "samples": 48}}"#,
+            r#"{"carbon": {"mode": "trace", "shape": "linear", "points":
+                 [{"at_s": 0, "g_per_kwh": 450},
+                  {"at_s": 3600, "g_per_kwh": 210}]}}"#,
+        ] {
+            let cfg = config_from_json(text).unwrap();
+            cfg.validate().unwrap();
+            // Dump → parse is the identity on the carbon section.
+            let back =
+                config_from_json(&config_to_json(&cfg).pretty()).unwrap();
+            assert_eq!(cfg.carbon, back.carbon, "{text}");
+        }
+        // Absent section keeps the constant (scalar-path) default.
+        let cfg = config_from_json("{}").unwrap();
+        assert_eq!(cfg.carbon, super::super::CarbonConfig::default());
+    }
+
+    #[test]
+    fn carbon_bad_sections_rejected() {
+        // Unknown mode and missing required fields fail at parse time.
+        assert!(config_from_json(
+            r#"{"carbon": {"mode": "lunar"}}"#
+        )
+        .is_err());
+        assert!(config_from_json(
+            r#"{"carbon": {"mode": "diurnal", "swing": 0.4}}"#
+        )
+        .is_err());
+        assert!(config_from_json(
+            r#"{"carbon": {"mode": "trace", "shape": "cubic",
+                 "points": [{"at_s": 0, "g_per_kwh": 1}]}}"#
+        )
+        .is_err());
+        // Out-of-range sample counts error instead of wrapping.
+        assert!(config_from_json(
+            r#"{"carbon": {"mode": "diurnal", "base_g_per_kwh": 300,
+                 "period_s": 60, "samples": 4294967320}}"#
+        )
+        .is_err());
+        // Non-monotonic or non-finite timestamps parse but fail
+        // validation (the signal constructor is the single gate).
+        let bad = config_from_json(
+            r#"{"carbon": {"mode": "trace", "points":
+                 [{"at_s": 10, "g_per_kwh": 400},
+                  {"at_s": 5, "g_per_kwh": 300}]}}"#,
+        )
+        .unwrap();
+        assert!(bad.validate().is_err());
+        let inf = config_from_json(
+            r#"{"carbon": {"mode": "trace", "points":
+                 [{"at_s": 1e999, "g_per_kwh": 400}]}}"#,
+        )
+        .unwrap();
+        assert!(inf.validate().is_err());
+    }
+
+    #[test]
+    fn carbon_one_sample_trace_validates_as_constant() {
+        let cfg = config_from_json(
+            r#"{"carbon": {"mode": "trace", "points":
+                 [{"at_s": 0, "g_per_kwh": 360}]}}"#,
+        )
+        .unwrap();
+        cfg.validate().unwrap();
+        let s = cfg.carbon.signal(&cfg.energy);
+        assert_eq!(s.constant_value(), Some(360.0 / super::super::J_PER_KWH));
     }
 
     #[test]

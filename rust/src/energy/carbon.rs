@@ -8,13 +8,17 @@
 
 use crate::config::EnergyModelConfig;
 
+/// Joules per kWh — the single unit bridge between the config's
+/// g/kWh surface and the engine's g/J signal space.
+pub const J_PER_KWH: f64 = 3.6e6;
+
 /// Grid carbon intensity as grams CO₂ per joule, derived from the
 /// config's eGRID emission factor (lb CO₂ per kWh). The carbon-aware
 /// scheduling profile scores candidates with this; Table VII's
 /// annual-tonnage arithmetic uses the same factor at MWh scale.
 pub fn grams_co2_per_joule(cfg: &EnergyModelConfig) -> f64 {
-    // lb → g (453.59237), kWh → J (3.6e6).
-    cfg.co2_lb_per_kwh * 453.59237 / 3.6e6
+    // lb → g (453.59237), kWh → J.
+    cfg.co2_lb_per_kwh * 453.59237 / J_PER_KWH
 }
 
 /// Extrapolation parameters (defaults = the paper's §V.E inputs).

@@ -19,7 +19,9 @@ use std::collections::{BTreeMap, HashMap};
 
 use crate::cluster::{Node, PodId};
 use crate::config::{EnergyModelConfig, SchedulerKind};
-use crate::energy::{node_idle_watts, pod_idle_claim_watts, pod_power_watts};
+use crate::energy::{
+    node_idle_watts, pod_idle_claim_watts, pod_power_watts, CarbonSignal,
+};
 use crate::workload::WorkloadClass;
 
 /// Energy record for one completed pod.
@@ -33,6 +35,10 @@ pub struct PodEnergy {
     pub duration_s: f64,
     /// Attributed energy (joules, at the wall).
     pub joules: f64,
+    /// Grid CO₂ attributed over the execution (grams): power integrated
+    /// against the meter's [`CarbonSignal`]. Under a constant signal
+    /// this is exactly `joules * g_per_j` — the legacy scalar path.
+    pub grams: f64,
 }
 
 /// A pod currently accumulating energy (interval-integration mode).
@@ -47,6 +53,9 @@ struct RunningEntry {
     idle_claim_watts: f64,
     started_s: f64,
     acc_joules: f64,
+    /// Time-varying-signal grams (unused — and left at zero — under a
+    /// constant signal, where grams derive from `acc_joules` exactly).
+    acc_grams: f64,
 }
 
 /// A powered-on node's idle-floor ledger: integrates the node's
@@ -60,6 +69,9 @@ struct NodeLedger {
     claimed_watts: f64,
     online: bool,
     acc_joules: f64,
+    /// Time-varying-signal grams (zero under a constant signal, where
+    /// grams derive from `acc_joules` exactly).
+    acc_grams: f64,
 }
 
 /// The run-wide energy ledger.
@@ -69,6 +81,9 @@ pub struct EnergyMeter {
     running: HashMap<PodId, RunningEntry>,
     /// Per-node idle ledgers (BTreeMap: deterministic iteration).
     nodes: BTreeMap<usize, NodeLedger>,
+    /// Grid intensity the CO₂ ledger integrates against (default: a
+    /// zero constant — carbon metering off).
+    carbon: CarbonSignal,
     /// Virtual time up to which all running pods are integrated.
     last_s: f64,
 }
@@ -78,8 +93,21 @@ impl EnergyMeter {
         Self::default()
     }
 
+    /// Attach the grid-intensity signal the CO₂ ledger integrates
+    /// against. Set before any accrual (the engine does this at run
+    /// start); a constant signal keeps grams exactly `joules × g`.
+    pub fn with_carbon(mut self, carbon: CarbonSignal) -> Self {
+        self.carbon = carbon;
+        self
+    }
+
+    pub fn carbon(&self) -> &CarbonSignal {
+        &self.carbon
+    }
+
     /// Record a pod execution: `share` is the CPU fraction of `node` the
-    /// pod occupied for `duration_s` seconds.
+    /// pod occupied for `duration_s` seconds starting at virtual time
+    /// `at_s` (the CO₂ ledger integrates the signal over that window).
     #[allow(clippy::too_many_arguments)]
     pub fn record(
         &mut self,
@@ -90,8 +118,14 @@ impl EnergyMeter {
         node: &Node,
         share: f64,
         duration_s: f64,
+        at_s: f64,
     ) -> f64 {
-        let joules = pod_power_watts(cfg, node, share) * duration_s;
+        let watts = pod_power_watts(cfg, node, share);
+        let joules = watts * duration_s;
+        let grams = match self.carbon.constant_value() {
+            Some(g) => joules * g,
+            None => watts * self.carbon.integral(at_s, at_s + duration_s),
+        };
         self.records.push(PodEnergy {
             pod,
             class,
@@ -99,6 +133,7 @@ impl EnergyMeter {
             node: node.id,
             duration_s,
             joules,
+            grams,
         });
         joules
     }
@@ -133,6 +168,7 @@ impl EnergyMeter {
                 idle_claim_watts,
                 started_s: at_s,
                 acc_joules: 0.0,
+                acc_grams: 0.0,
             },
         );
     }
@@ -140,19 +176,34 @@ impl EnergyMeter {
     /// Integrate every running pod's power — and every online node's
     /// unattributed idle floor — over `[last, now]` and move the
     /// integration frontier to `now`. Idempotent at equal times; never
-    /// moves the frontier backwards.
+    /// moves the frontier backwards. Grams integrate alongside joules
+    /// against the carbon signal; a constant signal is factored out of
+    /// the loop entirely (grams derive from joules at read time, so the
+    /// scalar path stays bit-identical).
     pub fn advance(&mut self, now_s: f64) {
         if now_s <= self.last_s {
             return;
         }
         let dt = now_s - self.last_s;
+        // ∫ intensity dt over [last, now] (g·s/J), None for constants.
+        let gdt = match self.carbon.constant_value() {
+            Some(_) => None,
+            None => Some(self.carbon.integral(self.last_s, now_s)),
+        };
         for entry in self.running.values_mut() {
             entry.acc_joules += entry.watts * dt;
+            if let Some(gdt) = gdt {
+                entry.acc_grams += entry.watts * gdt;
+            }
         }
         for ledger in self.nodes.values_mut() {
             if ledger.online {
-                ledger.acc_joules +=
-                    (ledger.idle_watts - ledger.claimed_watts).max(0.0) * dt;
+                let idle_watts =
+                    (ledger.idle_watts - ledger.claimed_watts).max(0.0);
+                ledger.acc_joules += idle_watts * dt;
+                if let Some(gdt) = gdt {
+                    ledger.acc_grams += idle_watts * gdt;
+                }
             }
         }
         self.last_s = now_s;
@@ -174,6 +225,7 @@ impl EnergyMeter {
             claimed_watts: 0.0,
             online: false,
             acc_joules: 0.0,
+            acc_grams: 0.0,
         });
         ledger.online = true;
     }
@@ -204,6 +256,10 @@ impl EnergyMeter {
         if let Some(ledger) = self.nodes.get_mut(&entry.node) {
             ledger.claimed_watts -= entry.idle_claim_watts;
         }
+        let grams = match self.carbon.constant_value() {
+            Some(g) => entry.acc_joules * g,
+            None => entry.acc_grams,
+        };
         self.records.push(PodEnergy {
             pod,
             class: entry.class,
@@ -211,6 +267,7 @@ impl EnergyMeter {
             node: entry.node,
             duration_s: at_s - entry.started_s,
             joules: entry.acc_joules,
+            grams,
         });
         entry.acc_joules
     }
@@ -231,6 +288,34 @@ impl EnergyMeter {
     /// Unattributed idle energy (J) accrued by one node.
     pub fn node_idle_joules(&self, node: usize) -> f64 {
         self.nodes.get(&node).map_or(0.0, |l| l.acc_joules)
+    }
+
+    /// Grid CO₂ of one node ledger (grams).
+    fn ledger_grams(&self, l: &NodeLedger) -> f64 {
+        match self.carbon.constant_value() {
+            Some(g) => l.acc_joules * g,
+            None => l.acc_grams,
+        }
+    }
+
+    /// Grid CO₂ of the unattributed node-idle energy (grams) — the
+    /// idle floor integrated against the carbon signal.
+    pub fn idle_co2_g(&self) -> f64 {
+        self.nodes.values().map(|l| self.ledger_grams(l)).sum()
+    }
+
+    /// Unattributed idle CO₂ (grams) accrued by one node.
+    pub fn node_idle_co2_g(&self, node: usize) -> f64 {
+        self.nodes.get(&node).map_or(0.0, |l| self.ledger_grams(l))
+    }
+
+    /// Grid CO₂ (grams) attributed to pods owned by `kind`.
+    pub fn total_co2_g(&self, kind: SchedulerKind) -> f64 {
+        self.records
+            .iter()
+            .filter(|r| r.scheduler == kind)
+            .map(|r| r.grams)
+            .sum()
     }
 
     pub fn records(&self) -> &[PodEnergy] {
@@ -322,9 +407,9 @@ mod tests {
         let mut m = EnergyMeter::new();
         let n = node(0, 0.45);
         let j1 = m.record(&cfg, 1, WorkloadClass::Light,
-                          SchedulerKind::Topsis, &n, 0.1, 10.0);
+                          SchedulerKind::Topsis, &n, 0.1, 10.0, 0.0);
         let j2 = m.record(&cfg, 2, WorkloadClass::Light,
-                          SchedulerKind::Topsis, &n, 0.1, 10.0);
+                          SchedulerKind::Topsis, &n, 0.1, 10.0, 0.0);
         assert!(j1 > 0.0);
         assert!((m.total_kj(SchedulerKind::Topsis)
             - (j1 + j2) / 1000.0).abs() < 1e-12);
@@ -341,9 +426,9 @@ mod tests {
         let a = node(0, 0.45);
         let c = node(1, 1.6);
         let ja = m.record(&cfg, 1, WorkloadClass::Medium,
-                          SchedulerKind::Topsis, &a, 0.25, 20.0);
+                          SchedulerKind::Topsis, &a, 0.25, 20.0, 0.0);
         let jc = m.record(&cfg, 2, WorkloadClass::Medium,
-                          SchedulerKind::DefaultK8s, &c, 0.25, 20.0);
+                          SchedulerKind::DefaultK8s, &c, 0.25, 20.0, 0.0);
         assert!(ja < jc, "A-node energy {ja} !< C-node energy {jc}");
     }
 
@@ -354,7 +439,7 @@ mod tests {
 
         let mut single = EnergyMeter::new();
         let want = single.record(&cfg, 1, WorkloadClass::Medium,
-                                 SchedulerKind::Topsis, &n, 0.25, 12.5);
+                                 SchedulerKind::Topsis, &n, 0.25, 12.5, 0.0);
 
         // Same pod integrated across several uneven event intervals.
         let mut meter = EnergyMeter::new();
@@ -387,7 +472,7 @@ mod tests {
         let j = meter.finish(1, 10.0);
         let mut single = EnergyMeter::new();
         let want = single.record(&cfg, 1, WorkloadClass::Light,
-                                 SchedulerKind::Topsis, &n, 0.1, 10.0);
+                                 SchedulerKind::Topsis, &n, 0.1, 10.0, 0.0);
         assert!((j - want).abs() < 1e-9 * want);
     }
 
@@ -407,9 +492,9 @@ mod tests {
         let j2 = meter.finish(2, 8.0);
         let mut oracle = EnergyMeter::new();
         let w1 = oracle.record(&cfg, 1, WorkloadClass::Light,
-                               SchedulerKind::Topsis, &a, 0.1, 5.0);
+                               SchedulerKind::Topsis, &a, 0.1, 5.0, 0.0);
         let w2 = oracle.record(&cfg, 2, WorkloadClass::Light,
-                               SchedulerKind::DefaultK8s, &c, 0.1, 6.0);
+                               SchedulerKind::DefaultK8s, &c, 0.1, 6.0, 0.0);
         assert!((j1 - w1).abs() < 1e-9 * w1);
         assert!((j2 - w2).abs() < 1e-9 * w2);
     }
@@ -484,7 +569,7 @@ mod tests {
         let mut m = EnergyMeter::new();
         let n = node(0, 1.0);
         m.record(&cfg, 1, WorkloadClass::Light, SchedulerKind::Topsis,
-                 &n, 0.1, 10.0);
+                 &n, 0.1, 10.0, 0.0);
         assert_eq!(m.idle_kj(), 0.0);
     }
 
@@ -494,12 +579,112 @@ mod tests {
         let mut m = EnergyMeter::new();
         let n = node(0, 1.0);
         m.record(&cfg, 1, WorkloadClass::Light, SchedulerKind::Topsis,
-                 &n, 0.1, 5.0);
+                 &n, 0.1, 5.0, 0.0);
         m.record(&cfg, 2, WorkloadClass::Complex, SchedulerKind::Topsis,
-                 &n, 0.5, 40.0);
+                 &n, 0.5, 40.0, 0.0);
         let per = m.per_class_kj(SchedulerKind::Topsis);
         assert!(per[&WorkloadClass::Complex] > per[&WorkloadClass::Light]);
         let dur = m.per_class_duration(SchedulerKind::Topsis);
         assert_eq!(dur[&WorkloadClass::Complex], 40.0);
+    }
+
+    #[test]
+    fn constant_signal_grams_are_exactly_joules_times_scalar() {
+        // The scalar-path contract: under a constant signal the grams
+        // ledger is bit-identical to multiplying joules by the scalar.
+        let cfg = EnergyModelConfig::default();
+        let g = crate::energy::grams_co2_per_joule(&cfg);
+        let n = node(0, 0.45);
+        let mut m =
+            EnergyMeter::new().with_carbon(CarbonSignal::constant(g));
+        m.node_online(&cfg, &n, 0.0);
+        m.start(&cfg, 1, WorkloadClass::Medium, SchedulerKind::Topsis,
+                &n, 0.25, 0.0);
+        for t in [2.0, 7.5, 11.0] {
+            m.advance(t);
+        }
+        let joules = m.finish(1, 14.0);
+        m.advance(20.0);
+        let rec = &m.records()[0];
+        assert_eq!(rec.grams.to_bits(), (rec.joules * g).to_bits());
+        assert_eq!(rec.joules, joules);
+        assert_eq!(
+            m.node_idle_co2_g(0).to_bits(),
+            (m.node_idle_joules(0) * g).to_bits()
+        );
+        assert_eq!(
+            m.total_co2_g(SchedulerKind::Topsis).to_bits(),
+            rec.grams.to_bits()
+        );
+    }
+
+    #[test]
+    fn varying_signal_integrates_grams_per_interval() {
+        // Step signal: intensity 2 g/J for the first 10 s, 0 after —
+        // a pod spanning the step accrues grams only in the dirty half.
+        let cfg = EnergyModelConfig::default();
+        let n = node(0, 1.0);
+        let signal =
+            CarbonSignal::step(vec![(0.0, 2.0), (10.0, 0.0)]).unwrap();
+        let mut m = EnergyMeter::new().with_carbon(signal);
+        m.start(&cfg, 1, WorkloadClass::Light, SchedulerKind::Topsis,
+                &n, 0.1, 0.0);
+        m.advance(10.0);
+        let joules = m.finish(1, 20.0);
+        let rec = &m.records()[0];
+        let watts = joules / 20.0;
+        let want = watts * 2.0 * 10.0;
+        assert!(
+            (rec.grams - want).abs() < 1e-9 * want,
+            "{} vs {want}",
+            rec.grams
+        );
+    }
+
+    #[test]
+    fn grams_additive_across_interval_splits() {
+        // Integrating through many event boundaries must agree with one
+        // whole-interval integration to float rounding.
+        let cfg = EnergyModelConfig::default();
+        let n = node(0, 1.0);
+        let signal = CarbonSignal::linear(vec![
+            (0.0, 1.0),
+            (6.0, 3.0),
+            (15.0, 0.5),
+        ])
+        .unwrap();
+        let run = |splits: &[f64]| {
+            let mut m = EnergyMeter::new().with_carbon(signal.clone());
+            m.start(&cfg, 1, WorkloadClass::Light, SchedulerKind::Topsis,
+                    &n, 0.1, 0.0);
+            for &t in splits {
+                m.advance(t);
+            }
+            m.finish(1, 18.0);
+            m.records()[0].grams
+        };
+        let whole = run(&[]);
+        let split = run(&[1.0, 2.5, 6.0, 9.9, 15.0, 17.0]);
+        assert!(whole > 0.0);
+        assert!(
+            (whole - split).abs() < 1e-9 * whole,
+            "{whole} vs {split}"
+        );
+    }
+
+    #[test]
+    fn single_shot_integrates_signal_over_its_window() {
+        let cfg = EnergyModelConfig::default();
+        let n = node(0, 1.0);
+        let signal =
+            CarbonSignal::step(vec![(0.0, 2.0), (10.0, 0.0)]).unwrap();
+        let mut m = EnergyMeter::new().with_carbon(signal.clone());
+        // Runs 5 s dirty + 5 s clean: half the dirty-rate grams.
+        let joules = m.record(&cfg, 1, WorkloadClass::Light,
+                              SchedulerKind::Topsis, &n, 0.1, 10.0, 5.0);
+        let watts = joules / 10.0;
+        let want = watts * signal.integral(5.0, 15.0);
+        let got = m.records()[0].grams;
+        assert!((got - want).abs() < 1e-9 * want, "{got} vs {want}");
     }
 }

@@ -1,13 +1,18 @@
 //! Energy substrate: the Dayarathna blade-server power model (the
-//! paper's own model, §V.E), per-node energy metering, and the carbon /
-//! cost arithmetic behind Table VII.
+//! paper's own model, §V.E), per-node energy metering, the carbon /
+//! cost arithmetic behind Table VII, and the time-varying grid
+//! carbon-intensity signal (DESIGN.md §"Carbon signal").
 
 mod carbon;
 mod meter;
 mod power;
+mod signal;
 
-pub use carbon::{grams_co2_per_joule, ImpactAssessment, ImpactParams};
+pub use carbon::{
+    grams_co2_per_joule, ImpactAssessment, ImpactParams, J_PER_KWH,
+};
 pub use meter::{EnergyMeter, PodEnergy};
+pub use signal::{CarbonSignal, SignalShape};
 pub use power::{
     blade_power_watts, node_idle_watts, node_power_watts,
     pod_idle_claim_watts, pod_power_watts,

@@ -1,0 +1,442 @@
+//! Time-varying grid carbon intensity — the signal the carbon-aware
+//! scheduling profile, the energy meter's CO₂ ledger and the
+//! autoscaler's carbon windows all read (DESIGN.md §"Carbon signal").
+//!
+//! A [`CarbonSignal`] is a sampled intensity series: `(t_s, gCO₂/J)`
+//! points over virtual time, interpolated as a step function or
+//! piecewise-linearly, and *clamped* at both endpoints (before the
+//! first sample and after the last the signal holds the boundary
+//! value). A one-sample series is exactly a constant — and constants
+//! are algebraically factored out of every integral, so the
+//! constant-signal path reproduces the legacy scalar
+//! [`grams_co2_per_joule`] arithmetic bit-for-bit (the differential
+//! property in `rust/tests/properties.rs` pins this).
+//!
+//! The synthetic diurnal generator is a piecewise-linear triangle wave
+//! (clean at phase 0, dirtiest at half period) rather than a sinusoid:
+//! real grid curves are not sinusoids either, and pure arithmetic keeps
+//! the Python oracle (`python/tools/make_golden_trace.py`) reproducible
+//! bit-for-bit across languages — no libm in the loop.
+//!
+//! [`grams_co2_per_joule`]: crate::energy::grams_co2_per_joule
+
+use anyhow::{ensure, Result};
+
+/// How a [`CarbonSignal`] interpolates between samples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SignalShape {
+    /// Each sample's intensity holds until the next sample.
+    Step,
+    /// Linear interpolation between neighboring samples.
+    Linear,
+}
+
+impl SignalShape {
+    pub fn label(self) -> &'static str {
+        match self {
+            SignalShape::Step => "step",
+            SignalShape::Linear => "linear",
+        }
+    }
+}
+
+impl std::str::FromStr for SignalShape {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "step" => Ok(SignalShape::Step),
+            "linear" => Ok(SignalShape::Linear),
+            other => anyhow::bail!("unknown signal shape `{other}` (step|linear)"),
+        }
+    }
+}
+
+/// Grid carbon intensity over virtual time (gCO₂ per joule).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CarbonSignal {
+    /// `(t_s, g_per_j)` samples, strictly increasing in time, non-empty.
+    points: Vec<(f64, f64)>,
+    shape: SignalShape,
+}
+
+impl Default for CarbonSignal {
+    /// A zero-intensity constant — carbon metering off.
+    fn default() -> Self {
+        Self::constant(0.0)
+    }
+}
+
+impl CarbonSignal {
+    /// A flat signal: `at` returns exactly `g_per_j` everywhere, and
+    /// the meter derives grams as `joules * g_per_j` with no integral
+    /// in the loop — the legacy scalar path, bit-for-bit.
+    pub fn constant(g_per_j: f64) -> Self {
+        Self { points: vec![(0.0, g_per_j)], shape: SignalShape::Step }
+    }
+
+    /// The energy model's eGRID scalar as a constant signal.
+    pub fn from_energy(cfg: &crate::config::EnergyModelConfig) -> Self {
+        Self::constant(super::grams_co2_per_joule(cfg))
+    }
+
+    fn series(
+        points: Vec<(f64, f64)>,
+        shape: SignalShape,
+    ) -> Result<Self> {
+        ensure!(!points.is_empty(), "carbon signal has no samples");
+        for (i, &(t, v)) in points.iter().enumerate() {
+            ensure!(
+                t.is_finite(),
+                "carbon signal sample {i}: timestamp {t} is not finite"
+            );
+            ensure!(
+                v.is_finite() && v >= 0.0,
+                "carbon signal sample {i}: intensity {v} must be a \
+                 finite non-negative number"
+            );
+            if i > 0 {
+                ensure!(
+                    t > points[i - 1].0,
+                    "carbon signal sample {i}: timestamp {t} does not \
+                     increase over {}",
+                    points[i - 1].0
+                );
+            }
+        }
+        Ok(Self { points, shape })
+    }
+
+    /// A step series: each sample's intensity holds until the next.
+    pub fn step(points: Vec<(f64, f64)>) -> Result<Self> {
+        Self::series(points, SignalShape::Step)
+    }
+
+    /// A piecewise-linear series.
+    pub fn linear(points: Vec<(f64, f64)>) -> Result<Self> {
+        Self::series(points, SignalShape::Linear)
+    }
+
+    /// Synthetic diurnal cycle over one period: a piecewise-linear
+    /// triangle wave from `base * (1 - swing)` at t = 0 (the clean
+    /// phase) up to `base * (1 + swing)` at half period and back.
+    /// Outside `[0, period_s]` the signal clamps to the clean endpoint
+    /// values. `samples + 1` evenly spaced points are generated;
+    /// `samples` must be even so half period is a sample point and the
+    /// documented peak is actually reached.
+    pub fn diurnal(
+        base_g_per_j: f64,
+        swing: f64,
+        period_s: f64,
+        samples: u32,
+    ) -> Result<Self> {
+        ensure!(
+            base_g_per_j.is_finite() && base_g_per_j >= 0.0,
+            "diurnal base intensity {base_g_per_j} must be finite and \
+             non-negative"
+        );
+        ensure!(
+            (0.0..=1.0).contains(&swing),
+            "diurnal swing {swing} must be in [0, 1]"
+        );
+        ensure!(
+            period_s.is_finite() && period_s > 0.0,
+            "diurnal period {period_s} must be a finite positive number"
+        );
+        ensure!(
+            samples >= 2 && samples % 2 == 0,
+            "diurnal needs an even sample count >= 2 (got {samples}) so \
+             the half-period peak is sampled"
+        );
+        let points = (0..=samples)
+            .map(|k| {
+                let p = k as f64 / samples as f64;
+                let t = period_s * p;
+                // Triangle: 0 at p = 0, 1 at p = 0.5, 0 at p = 1.
+                let tri = 1.0 - (2.0 * p - 1.0).abs();
+                let v = base_g_per_j * (1.0 + swing * (2.0 * tri - 1.0));
+                (t, v)
+            })
+            .collect();
+        Self::series(points, SignalShape::Linear)
+    }
+
+    /// `Some(g)` when the series is a single sample — the degenerate
+    /// case that behaves, and is metered, exactly as a constant.
+    pub fn constant_value(&self) -> Option<f64> {
+        if self.points.len() == 1 {
+            Some(self.points[0].1)
+        } else {
+            None
+        }
+    }
+
+    /// The samples, in time order.
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.points
+    }
+
+    pub fn shape(&self) -> SignalShape {
+        self.shape
+    }
+
+    /// Intensity at virtual time `t_s` (gCO₂/J). Clamped: before the
+    /// first sample it returns the first intensity, after the last the
+    /// last.
+    pub fn at(&self, t_s: f64) -> f64 {
+        let (t0, v0) = self.points[0];
+        if t_s <= t0 {
+            return v0;
+        }
+        let &(tn, vn) = self.points.last().expect("non-empty");
+        if t_s >= tn {
+            return vn;
+        }
+        for w in self.points.windows(2) {
+            let (ts, vs) = w[0];
+            let (te, ve) = w[1];
+            if t_s < te {
+                return match self.shape {
+                    SignalShape::Step => vs,
+                    SignalShape::Linear => {
+                        vs + (ve - vs) * ((t_s - ts) / (te - ts))
+                    }
+                };
+            }
+        }
+        vn
+    }
+
+    /// `∫ intensity dt` over `[a_s, b_s]` (g·s/J — multiply by watts
+    /// for grams). Zero when `b_s <= a_s`. Clamped tails integrate at
+    /// the boundary intensities. Additive across interval splits to
+    /// float rounding (property-tested).
+    pub fn integral(&self, a_s: f64, b_s: f64) -> f64 {
+        if b_s <= a_s {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        let (t0, v0) = self.points[0];
+        if a_s < t0 {
+            total += v0 * (b_s.min(t0) - a_s);
+        }
+        for w in self.points.windows(2) {
+            let (ts, vs) = w[0];
+            let (te, ve) = w[1];
+            let lo = a_s.max(ts);
+            let hi = b_s.min(te);
+            if hi > lo {
+                total += match self.shape {
+                    SignalShape::Step => vs * (hi - lo),
+                    SignalShape::Linear => {
+                        let va = vs + (ve - vs) * ((lo - ts) / (te - ts));
+                        let vb = vs + (ve - vs) * ((hi - ts) / (te - ts));
+                        0.5 * (va + vb) * (hi - lo)
+                    }
+                };
+            }
+        }
+        let &(tn, vn) = self.points.last().expect("non-empty");
+        if b_s > tn {
+            total += vn * (b_s - a_s.max(tn));
+        }
+        total
+    }
+
+    /// Earliest time strictly after `now_s` at which the signal's
+    /// dirtiness with respect to `threshold` (strictly above vs not)
+    /// changes, or `None` when it never changes again (constant
+    /// signals, and any time past the last crossing — the clamped tail
+    /// holds its value forever). The autoscaler's carbon windows wake
+    /// at this instant so tightening and deferral release do not wait
+    /// for an unrelated kernel event.
+    ///
+    /// Candidates are the sample timestamps plus, for linear shapes,
+    /// the in-segment threshold crossings; the first candidate whose
+    /// dirtiness differs from `now_s`'s is returned. A rising linear
+    /// segment reports the transition at its end sample (the crossing
+    /// point itself sits exactly *at* the threshold, which is clean
+    /// under the strict comparison) — conservative by part of one
+    /// segment, never early.
+    pub fn next_transition(&self, now_s: f64, threshold: f64) -> Option<f64> {
+        let dirty_now = self.at(now_s) > threshold;
+        let mut candidates: Vec<f64> = Vec::new();
+        for w in self.points.windows(2) {
+            let (ts, vs) = w[0];
+            let (te, ve) = w[1];
+            if te > now_s {
+                candidates.push(te);
+            }
+            if self.shape == SignalShape::Linear && ve != vs {
+                let cross = ts + (threshold - vs) / (ve - vs) * (te - ts);
+                if cross > now_s && cross > ts && cross < te {
+                    candidates.push(cross);
+                }
+            }
+        }
+        candidates.sort_by(f64::total_cmp);
+        candidates
+            .into_iter()
+            .find(|&t| (self.at(t) > threshold) != dirty_now)
+    }
+
+    /// Intensity at quantile `q` of the sample values (nearest-rank,
+    /// round-half-away indexing — the same percentile convention as
+    /// `metrics::Summary`). The autoscaler's carbon windows derive
+    /// their "dirty" threshold from this.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let mut vals: Vec<f64> =
+            self.points.iter().map(|&(_, v)| v).collect();
+        vals.sort_by(f64::total_cmp);
+        let x = (vals.len() - 1) as f64 * q.clamp(0.0, 1.0);
+        let idx = ((x + 0.5).floor() as usize).min(vals.len() - 1);
+        vals[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step3() -> CarbonSignal {
+        CarbonSignal::step(vec![(0.0, 4.0), (10.0, 2.0), (20.0, 6.0)])
+            .unwrap()
+    }
+
+    fn linear3() -> CarbonSignal {
+        CarbonSignal::linear(vec![(0.0, 4.0), (10.0, 2.0), (20.0, 6.0)])
+            .unwrap()
+    }
+
+    #[test]
+    fn constant_everywhere() {
+        let s = CarbonSignal::constant(3.5);
+        assert_eq!(s.constant_value(), Some(3.5));
+        for t in [-5.0, 0.0, 1e9] {
+            assert_eq!(s.at(t), 3.5);
+        }
+        assert_eq!(s.integral(2.0, 7.0), 3.5 * 5.0);
+    }
+
+    #[test]
+    fn lookups_clamp_at_endpoints() {
+        for s in [step3(), linear3()] {
+            assert_eq!(s.at(-100.0), 4.0);
+            assert_eq!(s.at(0.0), 4.0);
+            assert_eq!(s.at(20.0), 6.0);
+            assert_eq!(s.at(1e6), 6.0);
+            assert_eq!(s.constant_value(), None);
+        }
+    }
+
+    #[test]
+    fn step_holds_left_sample() {
+        let s = step3();
+        assert_eq!(s.at(5.0), 4.0);
+        assert_eq!(s.at(10.0), 2.0);
+        assert_eq!(s.at(19.999), 2.0);
+    }
+
+    #[test]
+    fn linear_interpolates_between_samples() {
+        let s = linear3();
+        assert!((s.at(5.0) - 3.0).abs() < 1e-12);
+        assert!((s.at(15.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn integral_matches_hand_arithmetic() {
+        let s = step3();
+        // 4·10 + 2·10 = 60 over the sampled span.
+        assert!((s.integral(0.0, 20.0) - 60.0).abs() < 1e-12);
+        // Clamped tails: 5 s before at 4, 5 s after at 6.
+        assert!((s.integral(-5.0, 25.0) - (20.0 + 60.0 + 30.0)).abs()
+            < 1e-12);
+        let l = linear3();
+        // Trapezoids: (4+2)/2·10 + (2+6)/2·10 = 70.
+        assert!((l.integral(0.0, 20.0) - 70.0).abs() < 1e-12);
+        assert_eq!(l.integral(5.0, 5.0), 0.0);
+        assert_eq!(l.integral(9.0, 3.0), 0.0);
+    }
+
+    #[test]
+    fn diurnal_is_clean_dirty_clean() {
+        let s = CarbonSignal::diurnal(100.0, 0.5, 240.0, 12).unwrap();
+        assert_eq!(s.points().len(), 13);
+        assert!((s.at(0.0) - 50.0).abs() < 1e-9);
+        assert!((s.at(120.0) - 150.0).abs() < 1e-9);
+        assert!((s.at(240.0) - 50.0).abs() < 1e-9);
+        // Clamps to the clean endpoint beyond the period.
+        assert!((s.at(1e4) - 50.0).abs() < 1e-9);
+        // Monotone rise to the peak, fall after.
+        assert!(s.at(60.0) > s.at(30.0));
+        assert!(s.at(200.0) < s.at(150.0));
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let s = step3();
+        assert_eq!(s.percentile(0.0), 2.0);
+        assert_eq!(s.percentile(0.5), 4.0);
+        assert_eq!(s.percentile(1.0), 6.0);
+        assert_eq!(CarbonSignal::constant(7.0).percentile(0.9), 7.0);
+    }
+
+    #[test]
+    fn bad_series_rejected() {
+        assert!(CarbonSignal::step(vec![]).is_err());
+        assert!(CarbonSignal::step(vec![(0.0, f64::NAN)]).is_err());
+        assert!(CarbonSignal::step(vec![(f64::INFINITY, 1.0)]).is_err());
+        assert!(CarbonSignal::step(vec![(0.0, -1.0)]).is_err());
+        // Non-monotone and duplicate timestamps.
+        assert!(
+            CarbonSignal::step(vec![(5.0, 1.0), (2.0, 1.0)]).is_err()
+        );
+        assert!(
+            CarbonSignal::linear(vec![(5.0, 1.0), (5.0, 2.0)]).is_err()
+        );
+        assert!(CarbonSignal::diurnal(1.0, 1.5, 10.0, 4).is_err());
+        assert!(CarbonSignal::diurnal(1.0, 0.5, 0.0, 4).is_err());
+        assert!(CarbonSignal::diurnal(1.0, 0.5, 10.0, 1).is_err());
+        // Odd sample counts would clip the half-period peak.
+        assert!(CarbonSignal::diurnal(1.0, 0.5, 10.0, 11).is_err());
+        assert!(CarbonSignal::diurnal(f64::NAN, 0.5, 10.0, 4).is_err());
+    }
+
+    #[test]
+    fn next_transition_finds_step_and_linear_crossings() {
+        // Step 4 → 2 → 6 with threshold 3: dirty on [0, 10) and
+        // [20, ∞); transitions at 10 (→clean) and 20 (→dirty).
+        let s = step3();
+        assert_eq!(s.next_transition(0.0, 3.0), Some(10.0));
+        assert_eq!(s.next_transition(12.0, 3.0), Some(20.0));
+        // Clamped tail: dirty forever, no further transition.
+        assert_eq!(s.next_transition(25.0, 3.0), None);
+        // Threshold above every sample: never dirty, never transitions.
+        assert_eq!(s.next_transition(0.0, 10.0), None);
+
+        // Linear 4 → 2 → 6: falls through 3 at t = 5 (exact crossing),
+        // rises through it inside [10, 20] — reported at the segment
+        // end (conservative under the strict comparison).
+        let l = linear3();
+        let down = l.next_transition(0.0, 3.0).unwrap();
+        assert!((down - 5.0).abs() < 1e-12, "{down}");
+        assert_eq!(l.next_transition(6.0, 3.0), Some(20.0));
+
+        // Constants never transition.
+        assert_eq!(
+            CarbonSignal::constant(2.0).next_transition(0.0, 1.0),
+            None
+        );
+    }
+
+    #[test]
+    fn one_sample_series_is_constant() {
+        let s = CarbonSignal::linear(vec![(30.0, 2.5)]).unwrap();
+        assert_eq!(s.constant_value(), Some(2.5));
+        for t in [0.0, 30.0, 500.0] {
+            assert_eq!(s.at(t), 2.5);
+        }
+        assert_eq!(s.integral(0.0, 4.0), 2.5 * 4.0);
+    }
+}

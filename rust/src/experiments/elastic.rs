@@ -124,6 +124,7 @@ pub fn elastic_policy(cluster: &ClusterConfig) -> ThresholdConfig {
         min_nodes: base,
         max_nodes: base + EXTRA_NODES,
         template: ThresholdConfig::edge_template(cluster),
+        carbon: None,
     }
 }
 
@@ -295,6 +296,8 @@ fn run_scenario_cell(
         cluster,
         energy: base.energy.clone(),
         experiment: base.experiment.clone(),
+        carbon: base.carbon.clone(),
+        profiles: base.profiles.clone(),
     };
 
     let executor = WorkloadExecutor::analytic();

@@ -3,6 +3,7 @@
 
 mod ablation;
 mod alloc;
+mod carbon;
 mod elastic;
 mod fig2;
 mod profiles;
@@ -12,6 +13,10 @@ mod table7;
 
 pub use ablation::{run_ablation, AblationResult};
 pub use alloc::{run_alloc_analysis, AllocAnalysis};
+pub use carbon::{
+    carbon_window, run_carbon, CarbonCell, CarbonReport, CarbonSignalKind,
+    WINDOW_DEFER_S, WINDOW_IDLE_TIGHTEN, WINDOW_PERCENTILE,
+};
 pub use elastic::{
     churn_schedule, elastic_policy, run_elastic, ClusterMode, ElasticCell,
     ElasticProcess, ElasticityReport, BILLING_HORIZON_S, EXTRA_NODES,

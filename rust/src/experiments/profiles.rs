@@ -12,7 +12,6 @@
 use anyhow::Result;
 
 use crate::config::{SchedulerKind, WeightingScheme};
-use crate::energy::grams_co2_per_joule;
 use crate::framework::ProfileRegistry;
 use crate::metrics::{Summary, Table};
 use crate::simulation::{RunResult, SimulationEngine, SimulationParams};
@@ -37,7 +36,10 @@ pub struct ProfileCell {
     pub idle_kj: f64,
     /// pod_kj + idle_kj — the comparable total.
     pub total_kj: f64,
-    /// Estimated grid CO₂ of the total (grams).
+    /// Grid CO₂ of the total (grams), from the meter's signal-integrated
+    /// ledger (pod attribution + idle floor). Under the default
+    /// constant signal this is exactly the legacy `total × eGRID`
+    /// conversion.
     pub co2_g: f64,
     pub wait_p50_s: f64,
     pub wait_p95_s: f64,
@@ -153,7 +155,8 @@ pub fn run_profiles(ctx: &ExperimentContext) -> Result<ProfilesReport> {
                 pod_kj,
                 idle_kj,
                 total_kj,
-                co2_g: total_kj * 1000.0 * grams_co2_per_joule(&base.energy),
+                co2_g: result.meter.total_co2_g(SchedulerKind::Topsis)
+                    + result.meter.idle_co2_g(),
                 wait_p50_s: waits.p50,
                 wait_p95_s: waits.p95,
                 slo_miss: result

@@ -11,7 +11,7 @@ use crate::config::{WeightingScheme, BENEFIT_MASK, NUM_CRITERIA};
 use crate::mcda::{Criterion, DecisionProblem, McdaMethod};
 use crate::scheduler::{AdaptiveWeighting, Estimator, ScoringBackend};
 
-use super::ScorePlugin;
+use super::{CycleCtx, ScorePlugin};
 
 /// Build the paper's 5-criteria decision problem over a candidate set:
 /// one estimator row per candidate (exec time, energy, free cores,
@@ -114,6 +114,7 @@ impl ScorePlugin for McdaScorePlugin {
 
     fn score(
         &mut self,
+        _ctx: &CycleCtx,
         state: &ClusterState,
         pod: &Pod,
         candidates: &[NodeId],
@@ -180,7 +181,8 @@ mod tests {
     fn raw_scores_are_closeness_in_unit_interval() {
         let (state, mut plug) = setup();
         let candidates: Vec<usize> = (0..state.nodes().len()).collect();
-        let scores = plug.score(&state, &pod(), &candidates);
+        let scores =
+            plug.score(&CycleCtx::default(), &state, &pod(), &candidates);
         assert_eq!(scores.len(), candidates.len());
         for &s in &scores {
             assert!((0.0..=1.0 + 1e-9).contains(&s), "{scores:?}");
@@ -196,7 +198,8 @@ mod tests {
         let (state, plug) = setup();
         let mut plug = plug.with_percent_scale();
         let candidates: Vec<usize> = (0..state.nodes().len()).collect();
-        let mut scores = plug.score(&state, &pod(), &candidates);
+        let mut scores =
+            plug.score(&CycleCtx::default(), &state, &pod(), &candidates);
         plug.normalize(&state, &pod(), &mut scores);
         for &s in &scores {
             assert!((0.0..=100.0 + 1e-6).contains(&s), "{scores:?}");

@@ -51,6 +51,21 @@ pub use registry::{BuildOptions, ProfileRegistry};
 
 use crate::cluster::{ClusterState, NodeId, Pod};
 
+/// Per-cycle context handed to score plugins (kube's CycleState,
+/// reduced to what the stock plugins consume): the scheduling cycle's
+/// virtual timestamp. Drivers with a clock — the event engine, the
+/// serve loop — thread it in through [`Scheduler::schedule_at`];
+/// clock-less `schedule` calls reuse the scheduler's last bound
+/// timestamp (0.0 before any `schedule_at`). Time-varying plugins like
+/// [`CarbonAware`] read the grid intensity at `now_s`.
+///
+/// [`Scheduler::schedule_at`]: crate::scheduler::Scheduler::schedule_at
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CycleCtx {
+    /// Virtual time of the scheduling cycle (seconds).
+    pub now_s: f64,
+}
+
 /// Filter extension point: one candidate node in, admit/reject out
 /// (kube's Filter). A node survives only if *every* filter in the
 /// profile admits it.
@@ -77,9 +92,11 @@ pub trait ScorePlugin {
     fn name(&self) -> &'static str;
 
     /// Raw score for every candidate, in candidate order (the returned
-    /// vector has `candidates.len()` entries).
+    /// vector has `candidates.len()` entries). `ctx` carries the
+    /// scheduling cycle's virtual timestamp.
     fn score(
         &mut self,
+        ctx: &CycleCtx,
         state: &ClusterState,
         pod: &Pod,
         candidates: &[NodeId],

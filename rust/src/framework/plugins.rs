@@ -8,11 +8,10 @@
 //! in `rust/tests/properties.rs` pins them bit-identical).
 
 use crate::cluster::{ClusterState, NodeId, Pod};
-use crate::config::EnergyModelConfig;
-use crate::energy::grams_co2_per_joule;
+use crate::energy::CarbonSignal;
 use crate::scheduler::Estimator;
 
-use super::{FilterPlugin, ScorePlugin};
+use super::{CycleCtx, FilterPlugin, ScorePlugin};
 
 /// `LeastAllocated` (kube `NodeResourcesLeastAllocated`): mean over
 /// cpu/mem of the free fraction after placement, scaled to 0–100.
@@ -84,6 +83,7 @@ impl ScorePlugin for LeastAllocated {
 
     fn score(
         &mut self,
+        _ctx: &CycleCtx,
         state: &ClusterState,
         pod: &Pod,
         candidates: &[NodeId],
@@ -105,6 +105,7 @@ impl ScorePlugin for BalancedAllocation {
 
     fn score(
         &mut self,
+        _ctx: &CycleCtx,
         state: &ClusterState,
         pod: &Pod,
         candidates: &[NodeId],
@@ -117,21 +118,21 @@ impl ScorePlugin for BalancedAllocation {
 }
 
 /// Score: predicted grams of CO₂ for running the pod on each candidate
-/// (estimator energy × the eGRID grid-intensity factor, see
-/// [`grams_co2_per_joule`]), inverted onto 0–100 in the normalize pass
-/// — the carbon-aware placement policy the CODECO far-edge study
-/// evaluates as a "greenness" profile, not expressible under the old
-/// monolithic API.
+/// (estimator energy × the grid intensity *at the scheduling cycle's
+/// virtual timestamp*, [`CarbonSignal::at`]), inverted onto 0–100 in
+/// the normalize pass — the carbon-aware placement policy the CODECO
+/// far-edge study evaluates as a "greenness" profile, not expressible
+/// under the old monolithic API. A constant signal reproduces the
+/// pre-signal scalar scoring bit-for-bit (differential-tested).
 pub struct CarbonAware {
     estimator: Estimator,
-    /// Grid intensity, precomputed once — the config never changes
-    /// after construction.
-    g_per_j: f64,
+    /// Grid intensity over virtual time.
+    signal: CarbonSignal,
 }
 
 impl CarbonAware {
-    pub fn new(estimator: Estimator, energy: EnergyModelConfig) -> Self {
-        Self { estimator, g_per_j: grams_co2_per_joule(&energy) }
+    pub fn new(estimator: Estimator, signal: CarbonSignal) -> Self {
+        Self { estimator, signal }
     }
 }
 
@@ -140,18 +141,22 @@ impl ScorePlugin for CarbonAware {
         "carbon-aware"
     }
 
-    /// Raw output: estimated grams CO₂ (a cost — lower is better).
+    /// Raw output: estimated grams CO₂ at the cycle's grid intensity
+    /// (a cost — lower is better).
     fn score(
         &mut self,
+        ctx: &CycleCtx,
         state: &ClusterState,
         pod: &Pod,
         candidates: &[NodeId],
     ) -> Vec<f64> {
+        // One intensity per cycle: all candidates share the clock.
+        let g_per_j = self.signal.at(ctx.now_s);
         candidates
             .iter()
             .map(|&id| {
                 let e = self.estimator.estimate(state, state.node(id), pod);
-                e.energy_j * self.g_per_j
+                e.energy_j * g_per_j
             })
             .collect()
     }
@@ -247,10 +252,10 @@ mod tests {
         let energy = EnergyModelConfig::default();
         let mut plug = CarbonAware::new(
             Estimator::with_defaults(energy.clone()),
-            energy,
+            CarbonSignal::from_energy(&energy),
         );
         let candidates: Vec<usize> = (0..s.nodes().len()).collect();
-        let mut scores = plug.score(&s, &p, &candidates);
+        let mut scores = plug.score(&CycleCtx::default(), &s, &p, &candidates);
         plug.normalize(&s, &p, &mut scores);
         for &v in &scores {
             assert!((0.0..=100.0).contains(&v), "{scores:?}");
@@ -265,5 +270,38 @@ mod tests {
             .0;
         assert!(best < 3, "best candidate {best}, scores {scores:?}");
         assert_eq!(scores[best], 100.0);
+    }
+
+    #[test]
+    fn carbon_aware_raw_scores_track_the_cycle_time() {
+        // Raw grams scale with the intensity at the cycle timestamp:
+        // dirty-hour estimates are (intensity ratio) × clean-hour ones.
+        use crate::config::EnergyModelConfig;
+        let s = state();
+        let p = pod(WorkloadClass::Medium);
+        let energy = EnergyModelConfig::default();
+        let signal = CarbonSignal::step(vec![(0.0, 1e-4), (100.0, 3e-4)])
+            .unwrap();
+        let mut plug = CarbonAware::new(
+            Estimator::with_defaults(energy),
+            signal,
+        );
+        let candidates: Vec<usize> = (0..s.nodes().len()).collect();
+        let clean = plug.score(
+            &CycleCtx { now_s: 50.0 },
+            &s,
+            &p,
+            &candidates,
+        );
+        let dirty = plug.score(
+            &CycleCtx { now_s: 150.0 },
+            &s,
+            &p,
+            &candidates,
+        );
+        for (c, d) in clean.iter().zip(&dirty) {
+            assert!(*c > 0.0);
+            assert!((d / c - 3.0).abs() < 1e-9, "{c} vs {d}");
+        }
     }
 }

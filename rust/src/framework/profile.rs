@@ -7,7 +7,7 @@ use crate::mcda::argmax;
 use crate::scheduler::{Scheduler, SchedulingDecision};
 use crate::util::rng::Rng;
 
-use super::{FilterPlugin, ScorePlugin};
+use super::{CycleCtx, FilterPlugin, ScorePlugin};
 
 /// How a profile resolves score ties.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,9 +63,18 @@ impl SchedulerProfile {
 /// published `SchedulingDecision::scores` are the combined
 /// per-candidate scores, exactly as the legacy monoliths published
 /// theirs.
+///
+/// Time-aware drivers bind the scheduling cycle's virtual timestamp
+/// via [`Scheduler::schedule_at`]; it is handed to every score plugin
+/// as [`CycleCtx::now_s`]. Plain [`Scheduler::schedule`] calls reuse
+/// the last bound timestamp (0.0 before any), so clock-less callers
+/// and time-invariant plugins behave exactly as before the clock
+/// existed.
 pub struct FrameworkScheduler {
     profile: SchedulerProfile,
     rng: Rng,
+    /// Virtual time of the current scheduling cycle.
+    now_s: f64,
 }
 
 impl FrameworkScheduler {
@@ -73,7 +82,7 @@ impl FrameworkScheduler {
     /// [`TieBreak::SeededRandom`]); the stream matches the legacy
     /// `DefaultK8sScheduler::new(seed)` draw-for-draw.
     pub fn new(profile: SchedulerProfile, seed: u64) -> Self {
-        Self { profile, rng: Rng::seed_from_u64(seed) }
+        Self { profile, rng: Rng::seed_from_u64(seed), now_s: 0.0 }
     }
 
     pub fn profile_name(&self) -> &str {
@@ -116,10 +125,11 @@ impl Scheduler for FrameworkScheduler {
         }
 
         // Score: each plugin scores + normalizes; combine by weight.
+        let ctx = CycleCtx { now_s: self.now_s };
         let mut combined = vec![0.0; candidates.len()];
         let mut total_weight = 0.0;
         for (plugin, weight) in &mut self.profile.scorers {
-            let mut raw = plugin.score(state, pod, &candidates);
+            let mut raw = plugin.score(&ctx, state, pod, &candidates);
             // Hard contract on the public extension point: a short
             // vector would silently zero-bias the tail candidates.
             assert_eq!(
@@ -171,6 +181,16 @@ impl Scheduler for FrameworkScheduler {
             latency: t0.elapsed(),
             scores: candidates.into_iter().zip(combined).collect(),
         }
+    }
+
+    fn schedule_at(
+        &mut self,
+        state: &ClusterState,
+        pod: &Pod,
+        now_s: f64,
+    ) -> SchedulingDecision {
+        self.now_s = now_s;
+        self.schedule(state, pod)
     }
 }
 
@@ -232,6 +252,42 @@ mod tests {
             let p = pod(i, WorkloadClass::Light);
             assert_eq!(a.schedule(&s, &p).node, b.schedule(&s, &p).node);
         }
+    }
+
+    #[test]
+    fn schedule_at_threads_the_cycle_clock_to_plugins() {
+        use std::cell::Cell;
+        use std::rc::Rc;
+
+        struct Probe(Rc<Cell<f64>>);
+        impl ScorePlugin for Probe {
+            fn name(&self) -> &'static str {
+                "probe"
+            }
+
+            fn score(
+                &mut self,
+                ctx: &CycleCtx,
+                _state: &ClusterState,
+                _pod: &Pod,
+                candidates: &[NodeId],
+            ) -> Vec<f64> {
+                self.0.set(ctx.now_s);
+                vec![0.0; candidates.len()]
+            }
+        }
+
+        let seen = Rc::new(Cell::new(f64::NAN));
+        let profile = SchedulerProfile::new("probe")
+            .filter(Box::new(NodeResourcesFit))
+            .score(Box::new(Probe(seen.clone())), 1.0);
+        let s = state();
+        let mut sched = FrameworkScheduler::new(profile, 0);
+        sched.schedule_at(&s, &pod(1, WorkloadClass::Light), 42.5);
+        assert_eq!(seen.get(), 42.5);
+        // A plain schedule() reuses the last bound timestamp.
+        sched.schedule(&s, &pod(2, WorkloadClass::Light));
+        assert_eq!(seen.get(), 42.5);
     }
 
     #[test]

@@ -25,6 +25,7 @@ use crate::config::{
     Config, ProfileSpec, ProfileTieBreak, ScorePluginKind, WeightingScheme,
     BUILTIN_PROFILE_NAMES,
 };
+use crate::energy::CarbonSignal;
 use crate::mcda::McdaMethod;
 use crate::runtime::{ArtifactRegistry, PjrtTopsisEngine};
 use crate::scheduler::{
@@ -57,6 +58,10 @@ pub struct BuildOptions {
     pub light_epoch_secs: f64,
     /// Estimator contention coefficient β.
     pub contention_beta: f64,
+    /// Grid carbon-intensity signal for the `carbon-aware` plugin
+    /// (default: the config's `carbon` section — a constant at the
+    /// eGRID scalar unless configured otherwise).
+    pub carbon: CarbonSignal,
 }
 
 impl BuildOptions {
@@ -68,7 +73,15 @@ impl BuildOptions {
             pjrt: None,
             light_epoch_secs: DEFAULT_LIGHT_EPOCH_SECS,
             contention_beta: cfg.experiment.contention_beta,
+            carbon: cfg.carbon.signal(&cfg.energy),
         }
+    }
+
+    /// Override the carbon-intensity signal (the carbon experiment
+    /// crosses several signals over one config).
+    pub fn with_carbon(mut self, carbon: CarbonSignal) -> Self {
+        self.carbon = carbon;
+        self
     }
 
     pub fn with_seed(mut self, seed: u64) -> Self {
@@ -168,7 +181,7 @@ impl ProfileRegistry {
                 .score(
                     Box::new(CarbonAware::new(
                         opts.estimator(&self.config),
-                        self.config.energy.clone(),
+                        opts.carbon.clone(),
                     )),
                     1.0,
                 ),
@@ -228,7 +241,7 @@ impl ProfileRegistry {
                 ScorePluginKind::CarbonAware => profile.score(
                     Box::new(CarbonAware::new(
                         opts.estimator(&self.config),
-                        self.config.energy.clone(),
+                        opts.carbon.clone(),
                     )),
                     plugin.weight,
                 ),

@@ -9,6 +9,7 @@
 //! greenpod experiment ablation [--level medium]   # MCDA-method ablation
 //! greenpod experiment elastic [--csv] [--events]  # churn/autoscaler scenarios
 //! greenpod experiment profiles [--csv]            # profile comparison grid
+//! greenpod experiment carbon [--csv]              # carbon-signal × window grid
 //! greenpod experiment all                         # everything above
 //! greenpod bench sched                            # scheduling microbenchmark
 //! greenpod calibrate [--reps 4]                   # PJRT epoch timings
@@ -35,7 +36,7 @@ use greenpod::config::{
     CompetitionLevel, Config, SchedulerKind, WeightingScheme,
 };
 use greenpod::experiments::{
-    render_fig2, run_ablation, run_alloc_analysis, run_elastic,
+    render_fig2, run_ablation, run_alloc_analysis, run_carbon, run_elastic,
     run_profiles, run_table6, run_table7, ClusterMode, ElasticProcess,
     ExperimentContext,
 };
@@ -67,6 +68,7 @@ usage:
   greenpod experiment ablation [--level low|medium|high]
   greenpod experiment elastic [--csv] [--events]
   greenpod experiment profiles [--csv]
+  greenpod experiment carbon [--csv]
   greenpod experiment all
   greenpod bench sched
   greenpod calibrate [--reps N]
@@ -271,6 +273,14 @@ fn run_experiment(cfg: &Config, args: &Args) -> Result<()> {
                 println!("\nCSV:\n{}", report.to_table().to_csv());
             }
         }
+        "carbon" => {
+            let ctx = make_context(cfg, false)?;
+            let report = run_carbon(&ctx)?;
+            println!("{}", format_table(&report.to_table()));
+            if args.flag("csv") {
+                println!("\nCSV:\n{}", report.to_table().to_csv());
+            }
+        }
         "all" => {
             let ctx = make_context(cfg, false)?;
             let t6 = run_table6(&ctx);
@@ -293,6 +303,9 @@ fn run_experiment(cfg: &Config, args: &Args) -> Result<()> {
             println!();
             let profiles = run_profiles(&ctx)?;
             println!("{}", format_table(&profiles.to_table()));
+            println!();
+            let carbon = run_carbon(&ctx)?;
+            println!("{}", format_table(&carbon.to_table()));
         }
         other => bail!("unknown experiment `{other}`\n\n{USAGE}"),
     }

@@ -59,4 +59,20 @@ pub trait Scheduler {
         state: &ClusterState,
         pod: &Pod,
     ) -> SchedulingDecision;
+
+    /// Time-aware entry point: drivers with a virtual clock — the
+    /// discrete-event engine, the serve loop — pass the scheduling
+    /// cycle's timestamp so time-varying policies (the carbon-aware
+    /// profile's intensity lookup) can read it. Schedulers that do not
+    /// consume time fall through to [`Scheduler::schedule`], so the
+    /// default keeps every pre-clock implementation bit-identical.
+    fn schedule_at(
+        &mut self,
+        state: &ClusterState,
+        pod: &Pod,
+        now_s: f64,
+    ) -> SchedulingDecision {
+        let _ = now_s;
+        self.schedule(state, pod)
+    }
 }

@@ -35,7 +35,7 @@ use std::collections::{HashMap, VecDeque};
 use crate::autoscaler::{Autoscaler, AutoscalerPolicy, Observation, ScalingAction};
 use crate::cluster::{ClusterState, NodeId, Pod, PodPhase};
 use crate::config::{Config, SchedulerKind};
-use crate::energy::EnergyMeter;
+use crate::energy::{CarbonSignal, EnergyMeter};
 use crate::scheduler::Scheduler;
 use crate::simulation::event::{EventQueue, SimEvent, VirtualClock};
 use crate::simulation::{
@@ -73,6 +73,11 @@ pub struct SimulationParams {
     /// totals comparable at equal admitted work (the elasticity
     /// experiments set this; plain experiment cells do not).
     pub billing_horizon_s: Option<f64>,
+    /// Grid carbon-intensity signal the meter's CO₂ ledger integrates
+    /// against and the scheduling clock exposes (`None` = the config's
+    /// eGRID scalar as a constant — bit-identical to the pre-signal
+    /// engine, which the differential property pins).
+    pub carbon: Option<CarbonSignal>,
 }
 
 impl Default for SimulationParams {
@@ -83,6 +88,7 @@ impl Default for SimulationParams {
             node_events: Vec::new(),
             autoscaler: None,
             billing_horizon_s: None,
+            carbon: None,
         }
     }
 }
@@ -97,6 +103,12 @@ impl SimulationParams {
     /// Attach an autoscaling policy.
     pub fn with_autoscaler(mut self, policy: AutoscalerPolicy) -> Self {
         self.autoscaler = Some(policy);
+        self
+    }
+
+    /// Attach a time-varying carbon-intensity signal.
+    pub fn with_carbon(mut self, carbon: CarbonSignal) -> Self {
+        self.carbon = Some(carbon);
         self
     }
 }
@@ -127,10 +139,17 @@ struct RunState {
 }
 
 impl RunState {
-    fn new(config: &Config, n_pods: usize) -> Self {
+    fn new(config: &Config, params: &SimulationParams, n_pods: usize) -> Self {
+        // The meter's CO₂ ledger integrates against the run's signal;
+        // absent an explicit one, the config's (constant by default —
+        // exactly the scalar grams_co2_per_joule path).
+        let carbon = params
+            .carbon
+            .clone()
+            .unwrap_or_else(|| config.carbon.signal(&config.energy));
         Self {
             state: ClusterState::from_config(&config.cluster),
-            meter: EnergyMeter::new(),
+            meter: EnergyMeter::new().with_carbon(carbon),
             records: Vec::with_capacity(n_pods),
             queue: EventQueue::new(),
             pending: VecDeque::new(),
@@ -216,7 +235,7 @@ impl<'a> SimulationEngine<'a> {
         topsis: &mut dyn Scheduler,
         default: &mut dyn Scheduler,
     ) -> RunResult {
-        let mut rs = RunState::new(self.config, pods.len());
+        let mut rs = RunState::new(self.config, &self.params, pods.len());
         let mut clock = VirtualClock::default();
 
         // Idle-floor metering starts with the configured cluster: every
@@ -396,7 +415,7 @@ impl<'a> SimulationEngine<'a> {
         for p in &mut pods {
             p.arrival_s = 0.0;
         }
-        let mut rs = RunState::new(self.config, pods.len());
+        let mut rs = RunState::new(self.config, &self.params, pods.len());
 
         // Synchronous placement pass at t = 0.
         rs.events.push(EventRecord { at_s: 0.0, kind: "batch-submit" });
@@ -462,9 +481,16 @@ impl<'a> SimulationEngine<'a> {
         topsis: &mut dyn Scheduler,
         default: &mut dyn Scheduler,
     ) -> bool {
+        // Time-aware dispatch: the cycle's virtual timestamp reaches
+        // clock-consuming profiles (carbon-aware intensity lookups);
+        // the default trait impl keeps everything else bit-identical.
         let decision = match pods[i].scheduler {
-            SchedulerKind::Topsis => topsis.schedule(&rs.state, &pods[i]),
-            SchedulerKind::DefaultK8s => default.schedule(&rs.state, &pods[i]),
+            SchedulerKind::Topsis => {
+                topsis.schedule_at(&rs.state, &pods[i], now)
+            }
+            SchedulerKind::DefaultK8s => {
+                default.schedule_at(&rs.state, &pods[i], now)
+            }
         };
         rs.sched_latency_us[i] += decision.latency.as_secs_f64() * 1e6;
         rs.attempts[i] += 1;
@@ -707,6 +733,7 @@ mod tests {
             min_nodes: 7,
             max_nodes: 10,
             template: ThresholdConfig::edge_template(&config.cluster),
+            carbon: None,
         };
         let params = SimulationParams::with_beta_and_seed(0.35, 1)
             .with_autoscaler(AutoscalerPolicy::Threshold(policy));

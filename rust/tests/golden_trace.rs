@@ -17,8 +17,11 @@
 
 use std::collections::HashMap;
 
-use greenpod::autoscaler::{AutoscalerPolicy, ThresholdConfig};
+use greenpod::autoscaler::{
+    AutoscalerPolicy, CarbonWindowConfig, ThresholdConfig,
+};
 use greenpod::config::{Config, SchedulerKind, WeightingScheme};
+use greenpod::energy::{grams_co2_per_joule, CarbonSignal};
 use greenpod::scheduler::{DefaultK8sScheduler, Estimator, GreenPodScheduler};
 use greenpod::simulation::{RunResult, SimulationEngine, SimulationParams};
 use greenpod::util::json::Json;
@@ -42,13 +45,25 @@ fn golden_policy(cfg: &Config) -> ThresholdConfig {
         min_nodes: 7,
         max_nodes: 10,
         template: ThresholdConfig::edge_template(&cfg.cluster),
+        carbon: None,
     }
+}
+
+/// The carbon fixture's signal — mirrored by `GOLDEN_CARBON_SIGNAL` in
+/// `python/tools/make_golden_trace.py`: one 120 s diurnal cycle around
+/// the eGRID scalar (clean at 0 and 120 s, dirtiest at 60 s).
+fn golden_carbon_signal(cfg: &Config) -> CarbonSignal {
+    CarbonSignal::diurnal(grams_co2_per_joule(&cfg.energy), 0.5, 120.0, 12)
+        .expect("valid diurnal parameters")
 }
 
 /// Replay the committed trace with the golden configuration: paper
 /// defaults, all pods TOPSIS-owned, energy-centric profile, seed 42 —
-/// optionally under the autoscaled fixture's threshold policy.
-fn replay_with(autoscaled: bool) -> RunResult {
+/// optionally under a threshold policy and a carbon-intensity signal.
+fn replay_with(
+    policy: Option<ThresholdConfig>,
+    carbon: Option<CarbonSignal>,
+) -> RunResult {
     let cfg = Config::paper_default();
     let executor = WorkloadExecutor::analytic();
     let text = std::fs::read_to_string(data_path("golden_trace.jsonl"))
@@ -59,9 +74,11 @@ fn replay_with(autoscaled: bool) -> RunResult {
         cfg.experiment.contention_beta,
         42,
     );
-    if autoscaled {
-        params = params
-            .with_autoscaler(AutoscalerPolicy::Threshold(golden_policy(&cfg)));
+    if let Some(policy) = policy {
+        params = params.with_autoscaler(AutoscalerPolicy::Threshold(policy));
+    }
+    if let Some(carbon) = carbon {
+        params = params.with_carbon(carbon);
     }
     let engine = SimulationEngine::new(&cfg, params, &executor);
     let mut topsis = GreenPodScheduler::new(
@@ -77,7 +94,7 @@ fn replay_with(autoscaled: bool) -> RunResult {
 }
 
 fn replay() -> RunResult {
-    replay_with(false)
+    replay_with(None, None)
 }
 
 fn assert_close(what: &str, got: f64, want: f64) {
@@ -191,19 +208,9 @@ fn golden_trace_matches_checked_in_expectations() {
         .all(|s| s.ready_nodes == 7 && s.total_nodes == 7));
 }
 
-#[test]
-fn autoscaled_golden_trace_matches_checked_in_expectations() {
-    let result = replay_with(true);
-    assert!(
-        result.unschedulable.is_empty(),
-        "autoscaled golden trace must fully complete: {:?}",
-        result.unschedulable
-    );
-
-    let expected = load_fixture("golden_trace_autoscaled.expected.json");
-    assert_matches_fixture(&result, &expected);
-
-    // Scaling actions: exact kinds, nodes and order; times to 1e-9.
+/// Assert one fixture's scaling actions: exact kinds, nodes and order;
+/// times to 1e-9.
+fn assert_scaling_matches(result: &RunResult, expected: &Json) {
     let want_scaling = expected
         .get("scaling")
         .and_then(Json::as_arr)
@@ -234,6 +241,21 @@ fn autoscaled_golden_trace_matches_checked_in_expectations() {
             want.req_f64("effective_at_s").unwrap(),
         );
     }
+}
+
+#[test]
+fn autoscaled_golden_trace_matches_checked_in_expectations() {
+    let cfg = Config::paper_default();
+    let result = replay_with(Some(golden_policy(&cfg)), None);
+    assert!(
+        result.unschedulable.is_empty(),
+        "autoscaled golden trace must fully complete: {:?}",
+        result.unschedulable
+    );
+
+    let expected = load_fixture("golden_trace_autoscaled.expected.json");
+    assert_matches_fixture(&result, &expected);
+    assert_scaling_matches(&result, &expected);
 
     // Idle-energy attribution and the node-count envelope.
     assert_close(
@@ -269,6 +291,88 @@ fn autoscaled_golden_trace_matches_checked_in_expectations() {
     assert!(result.records.iter().any(|r| r.node >= 7));
     assert!(result.scaling.iter().any(|s| s.kind == "scale-out"));
     assert!(result.scaling.iter().any(|s| s.kind == "scale-in"));
+}
+
+#[test]
+fn carbon_golden_trace_matches_checked_in_expectations() {
+    // Same trace and threshold policy as the autoscaled fixture, under
+    // a diurnal intensity signal with carbon scale-down windows (p50
+    // dirty threshold, 0.25 idle tightening, 6 s deferral bound).
+    let cfg = Config::paper_default();
+    let signal = golden_carbon_signal(&cfg);
+    let policy = golden_policy(&cfg).with_carbon_window(
+        CarbonWindowConfig::at_percentile(signal.clone(), 0.5, 0.25, 6.0)
+            .expect("valid window parameters"),
+    );
+    let result = replay_with(Some(policy), Some(signal.clone()));
+    assert!(
+        result.unschedulable.is_empty(),
+        "carbon golden trace must fully complete: {:?}",
+        result.unschedulable
+    );
+
+    let expected = load_fixture("golden_trace_carbon.expected.json");
+    assert_matches_fixture(&result, &expected);
+    assert_scaling_matches(&result, &expected);
+
+    // The CO₂ ledger: per-pod grams and the run totals against the
+    // oracle's signal-integrated arithmetic.
+    let grams_by_pod: HashMap<u64, f64> = result
+        .meter
+        .records()
+        .iter()
+        .map(|r| (r.pod, r.grams))
+        .collect();
+    for e in expected.get("pods").and_then(Json::as_arr).unwrap() {
+        let id = e.get("pod").and_then(Json::as_u64).expect("pod id");
+        assert_close(
+            &format!("pod {id} grams"),
+            grams_by_pod[&id],
+            e.req_f64("grams").unwrap(),
+        );
+    }
+    assert_close(
+        "total_co2_g",
+        result.meter.total_co2_g(SchedulerKind::Topsis),
+        expected.req_f64("total_co2_g").unwrap(),
+    );
+    assert_close(
+        "idle_co2_g",
+        result.meter.idle_co2_g(),
+        expected.req_f64("idle_co2_g").unwrap(),
+    );
+    assert_close(
+        "idle_kj",
+        result.idle_kj(),
+        expected.req_f64("idle_kj").unwrap(),
+    );
+
+    // The window actually engaged: the dirty-phase idle tightening
+    // scales node 7 in earlier than the carbon-blind autoscaled replay
+    // (49.5 s vs 57 s), which is exactly the idle-CO₂ saving.
+    let blind = replay_with(Some(golden_policy(&cfg)), Some(signal));
+    let at = |r: &RunResult| {
+        r.scaling
+            .iter()
+            .find(|s| s.kind == "scale-in")
+            .expect("scale-in")
+            .at_s
+    };
+    assert!(
+        at(&result) < at(&blind),
+        "windowed scale-in {} !< blind {}",
+        at(&result),
+        at(&blind)
+    );
+    assert!(result.meter.idle_co2_g() < blind.meter.idle_co2_g());
+    // Placements are untouched by the window in this scenario: the
+    // saving is pure idle-floor carbon.
+    assert_eq!(result.records.len(), blind.records.len());
+    for (a, b) in result.records.iter().zip(&blind.records) {
+        assert_eq!(a.pod, b.pod);
+        assert_eq!(a.node, b.node);
+        assert_eq!(a.joules, b.joules);
+    }
 }
 
 #[test]

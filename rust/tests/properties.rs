@@ -11,6 +11,9 @@ use greenpod::config::{
     ClusterConfig, CompetitionLevel, Config, ExperimentConfig,
     SchedulerKind, WeightingScheme,
 };
+use greenpod::energy::{
+    grams_co2_per_joule, CarbonSignal, EnergyMeter, SignalShape,
+};
 use greenpod::mcda::{
     self, Criterion, DecisionProblem, Direction, McdaMethod,
 };
@@ -529,6 +532,7 @@ fn random_threshold_policy(
         } else {
             ThresholdConfig::cloud_template(cluster)
         },
+        carbon: None,
     }
 }
 
@@ -698,6 +702,7 @@ fn prop_autoscaler_scale_out_threshold_monotone() {
                 min_nodes: base,
                 max_nodes: base + 4,
                 template: ThresholdConfig::edge_template(&config.cluster),
+                carbon: None,
             };
             run_autoscaled_case(
                 &config,
@@ -874,6 +879,239 @@ fn prop_batch_mode_equals_event_mode_at_t0() {
             );
         }
         assert_eq!(ev.makespan_s, ba.makespan_s);
+    }
+}
+
+// --------------------------------------------------------------------
+// Carbon-signal properties (DESIGN.md §"Carbon signal").
+
+/// A random step/linear intensity series: 1–10 samples, strictly
+/// increasing timestamps, non-negative finite intensities.
+fn random_signal(rng: &mut Rng) -> CarbonSignal {
+    let n = 1 + rng.below(10);
+    let mut t = rng.range_f64(0.0, 10.0);
+    let mut points = Vec::with_capacity(n);
+    for _ in 0..n {
+        points.push((t, rng.range_f64(0.0, 5.0)));
+        t += rng.range_f64(0.1, 20.0);
+    }
+    if rng.chance(0.5) {
+        CarbonSignal::step(points).expect("valid series")
+    } else {
+        CarbonSignal::linear(points).expect("valid series")
+    }
+}
+
+#[test]
+fn prop_carbon_signal_clamps_and_interpolates_within_bounds() {
+    let mut rng = Rng::seed_from_u64(34);
+    for case in 0..prop_cases(200) {
+        let s = random_signal(&mut rng);
+        let (t0, v0) = s.points()[0];
+        let &(tn, vn) = s.points().last().unwrap();
+        // Endpoint clamping is exact.
+        assert_eq!(s.at(t0 - rng.range_f64(0.0, 50.0)).to_bits(),
+                   v0.to_bits(), "case {case}");
+        assert_eq!(s.at(tn + rng.range_f64(0.0, 50.0)).to_bits(),
+                   vn.to_bits(), "case {case}");
+        // Interior lookups stay within the bracketing samples' bounds
+        // (step: exactly the left sample; linear: between both).
+        for _ in 0..20 {
+            let t = rng.range_f64(t0, tn.max(t0 + 1e-9));
+            let v = s.at(t);
+            assert!(v.is_finite() && v >= 0.0, "case {case}: at({t}) = {v}");
+            let Some(i) = (0..s.points().len() - 1)
+                .find(|&i| t >= s.points()[i].0 && t < s.points()[i + 1].0)
+            else {
+                continue;
+            };
+            let (_, va) = s.points()[i];
+            let (_, vb) = s.points()[i + 1];
+            match s.shape() {
+                SignalShape::Step => {
+                    assert_eq!(v.to_bits(), va.to_bits(), "case {case}")
+                }
+                SignalShape::Linear => assert!(
+                    v >= va.min(vb) - 1e-12 && v <= va.max(vb) + 1e-12,
+                    "case {case}: at({t}) = {v} outside [{va}, {vb}]"
+                ),
+            }
+        }
+        // percentile endpoints are the sample extremes.
+        let lo = s
+            .points()
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(f64::INFINITY, f64::min);
+        let hi = s
+            .points()
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(s.percentile(0.0), lo);
+        assert_eq!(s.percentile(1.0), hi);
+    }
+}
+
+#[test]
+fn prop_carbon_integral_nonnegative_and_additive() {
+    let mut rng = Rng::seed_from_u64(35);
+    for case in 0..prop_cases(200) {
+        let s = random_signal(&mut rng);
+        let mut ts = [
+            rng.range_f64(-20.0, 80.0),
+            rng.range_f64(-20.0, 80.0),
+            rng.range_f64(-20.0, 80.0),
+        ];
+        ts.sort_by(f64::total_cmp);
+        let [a, b, c] = ts;
+        let whole = s.integral(a, c);
+        let split = s.integral(a, b) + s.integral(b, c);
+        assert!(whole >= 0.0, "case {case}: negative integral {whole}");
+        assert!(
+            (whole - split).abs() <= 1e-9 * whole.abs().max(1e-12),
+            "case {case}: [{a}, {c}] = {whole} but split sum {split}"
+        );
+        // Reversed bounds integrate to zero.
+        assert_eq!(s.integral(c, a), 0.0);
+    }
+}
+
+#[test]
+fn prop_carbon_ledger_nonnegative_and_additive_across_splits() {
+    // The meter's grams ledger agrees across any interval splitting:
+    // one whole-interval advance vs many random event boundaries.
+    let mut rng = Rng::seed_from_u64(36);
+    let config = Config::paper_default();
+    let state = ClusterState::from_config(&config.cluster);
+    let node = state.node(0).clone();
+    for case in 0..prop_cases(100) {
+        let signal = random_signal(&mut rng);
+        let start = rng.range_f64(0.0, 30.0);
+        let dur = rng.range_f64(1.0, 60.0);
+        let mut splits: Vec<f64> = (0..rng.below(6))
+            .map(|_| start + rng.range_f64(0.0, dur))
+            .collect();
+        splits.sort_by(f64::total_cmp);
+        let run = |splits: &[f64]| -> (f64, f64) {
+            let mut m = EnergyMeter::new().with_carbon(signal.clone());
+            m.start(
+                &config.energy,
+                1,
+                greenpod::workload::WorkloadClass::Light,
+                SchedulerKind::Topsis,
+                &node,
+                0.25,
+                start,
+            );
+            for &t in splits {
+                m.advance(t);
+            }
+            let joules = m.finish(1, start + dur);
+            (joules, m.records()[0].grams)
+        };
+        let (wj, wg) = run(&[]);
+        let (sj, sg) = run(&splits);
+        assert!(wg >= 0.0 && sg >= 0.0, "case {case}: negative grams");
+        assert!(
+            (wj - sj).abs() <= 1e-9 * wj.abs().max(1e-12),
+            "case {case}: joules {wj} vs split {sj}"
+        );
+        assert!(
+            (wg - sg).abs() <= 1e-9 * wg.abs().max(1e-12),
+            "case {case}: grams {wg} vs split {sg}"
+        );
+    }
+}
+
+#[test]
+fn prop_constant_carbon_signal_is_bit_identical_to_scalar_path() {
+    // The differential the carbon subsystem is pinned by (like the
+    // PR 3 monolith differentials): under a constant signal, the
+    // carbon-aware profile and the grams ledger reproduce the legacy
+    // scalar grams_co2_per_joule path exactly — record-for-record
+    // engine runs, grams = joules × g bit-for-bit. A two-sample series
+    // with equal values exercises the *integral* path and must agree
+    // with the scalar to rounding.
+    let mut rng = Rng::seed_from_u64(37);
+    let config = Config::paper_default();
+    let executor = WorkloadExecutor::analytic();
+    let g = grams_co2_per_joule(&config.energy);
+    for case in 0..prop_cases(10) {
+        let level = random_level(&mut rng);
+        let seed = rng.next_u64();
+        let pods = generate_pods(level, &config.experiment, seed).pods;
+        let registry = ProfileRegistry::new(&config);
+        let opts = BuildOptions::new(&config, WeightingScheme::EnergyCentric)
+            .with_seed(seed)
+            .with_executor(&executor);
+        let run = |carbon: Option<CarbonSignal>| -> RunResult {
+            let mut params = SimulationParams::with_beta_and_seed(
+                config.experiment.contention_beta,
+                seed,
+            );
+            if let Some(c) = carbon {
+                params = params.with_carbon(c);
+            }
+            let engine = SimulationEngine::new(&config, params, &executor);
+            let mut topsis = registry.build("carbon-aware", &opts).unwrap();
+            let mut default = registry.build("default-k8s", &opts).unwrap();
+            engine.run(pods.clone(), &mut topsis, &mut default)
+        };
+        // None defaults to the config's constant; an explicit constant
+        // and a flat two-sample series must not perturb anything.
+        let scalar = run(None);
+        let constant = run(Some(CarbonSignal::constant(g)));
+        let flat_series = run(Some(
+            CarbonSignal::step(vec![(0.0, g), (1e6, g)]).unwrap(),
+        ));
+        for (tag, other) in
+            [("constant", &constant), ("flat-series", &flat_series)]
+        {
+            assert_eq!(
+                scalar.records.len(),
+                other.records.len(),
+                "case {case} ({tag}, seed {seed})"
+            );
+            for (x, y) in scalar.records.iter().zip(&other.records) {
+                assert_eq!(x.pod, y.pod, "case {case} ({tag})");
+                assert_eq!(x.node, y.node, "case {case} ({tag})");
+                assert_eq!(x.start_s, y.start_s);
+                assert_eq!(x.finish_s, y.finish_s);
+                assert_eq!(x.joules, y.joules);
+                assert_eq!(x.attempts, y.attempts);
+            }
+            assert_eq!(scalar.events, other.events, "case {case} ({tag})");
+            assert_eq!(scalar.makespan_s, other.makespan_s);
+        }
+        // The grams ledger: single-sample signals are the scalar path
+        // bit-for-bit; the flat series integrates to it within
+        // rounding.
+        for r in scalar.meter.records().iter().chain(constant.meter.records())
+        {
+            assert_eq!(
+                r.grams.to_bits(),
+                (r.joules * g).to_bits(),
+                "case {case}: pod {} grams drifted off the scalar path",
+                r.pod
+            );
+        }
+        for r in flat_series.meter.records() {
+            let want = r.joules * g;
+            assert!(
+                (r.grams - want).abs() <= 1e-9 * want.abs().max(1e-12),
+                "case {case}: pod {} integral {} vs scalar {want}",
+                r.pod,
+                r.grams
+            );
+        }
+        for n in 0..config.cluster.total_nodes() {
+            assert_eq!(
+                scalar.meter.node_idle_co2_g(n).to_bits(),
+                (scalar.meter.node_idle_joules(n) * g).to_bits(),
+                "case {case}: node {n} idle grams"
+            );
+        }
     }
 }
 
