@@ -21,6 +21,15 @@ placements exactly and times/energy to 1e-9, twice:
   scale-in timing. The diurnal generator is a piecewise-linear triangle
   wave (pure arithmetic, no libm), so both languages compute the same
   sample values bit-for-bit.
+* golden_trace_federation.expected.json — same trace through the
+  2-region federation engine (rust/src/federation/): two paper
+  clusters under phase-shifted diurnal signals (region "east" phase 0,
+  region "west" phase 0.5), carbon-greedy dispatch, no autoscaler.
+  Pins the per-pod region assignment, placements, joules and grams,
+  and the per-region energy/CO2 totals. The federation mirror
+  (`simulate_federation`) replays the merged (time, kind-priority,
+  seq) event order with per-region cluster/meter state, exactly like
+  the Rust engine.
 
 Event ordering mirrors the kernel's total order: (time, kind-priority,
 seq) with priorities arrival 0, completed 1, autoscale-tick 2, failed
@@ -761,6 +770,339 @@ def simulate(trace, policy=None, carbon=None, billing_horizon_s=None,
     return out
 
 
+def phase_shifted_diurnal(base, swing, period, samples, phase):
+    """Mirror of experiments::federation::phase_shifted_diurnal: the
+    diurnal triangle evaluated at (p + phase) mod 1 — same float ops,
+    so both languages produce identical sample values."""
+    pts = []
+    for k in range(samples + 1):
+        p = k / samples
+        t = period * p
+        pe = p + phase
+        if pe >= 1.0:
+            pe -= 1.0
+        tri = 1.0 - abs(2.0 * pe - 1.0)
+        v = base * (1.0 + swing * (2.0 * tri - 1.0))
+        pts.append((t, v))
+    return CarbonSignal(pts, "linear")
+
+
+def fed_has_capacity(cluster, pending_cpu, pending_mem, req):
+    """Mirror of federation::RegionSnapshot::has_capacity (integer
+    aggregate headroom over Ready nodes minus pending claims)."""
+    free_cpu = 0
+    free_mem = 0
+    for i in range(len(cluster.nodes)):
+        if cluster.ready[i]:
+            free_cpu += cluster.free_cpu(i)
+            free_mem += cluster.free_mem(i)
+    return (free_cpu >= pending_cpu + req[0]
+            and free_mem >= pending_mem + req[1])
+
+
+def fed_least_pending(regs):
+    """Lowest-index region with the minimal pending count (strict <)."""
+    best = 0
+    for i in range(1, len(regs)):
+        if len(regs[i]["pending"]) < len(regs[best]["pending"]):
+            best = i
+    return best
+
+
+def simulate_federation(trace, regions, dispatch="carbon-greedy",
+                        billing_horizon_s=None, scheduler="greenpod"):
+    """Mirror of federation::FederationEngine::run: one merged (time,
+    kind-priority, seq) event order over per-region cluster/meter
+    state; the dispatcher resolves each arrival's region at pop time
+    and the decision is final. `regions` is a list of dicts with keys
+    `name`, `signal` and optional `policy` (a GOLDEN_POLICY-style
+    threshold dict)."""
+    regs = []
+    for spec in regions:
+        regs.append({
+            "name": spec["name"],
+            "signal": spec["signal"],
+            "cluster": Cluster(BASE_NODES),
+            "pending": deque(),
+            "pending_cpu": 0,
+            "pending_mem": 0,
+            "running": {},
+            "records": {},
+            "ledgers": {},
+            "last_s": 0.0,
+            "makespan": 0.0,
+            "cycle_queued": False,
+            "scaling": [],
+            "timeline": [],
+            "next_tick": None,
+            "autoscaler": (ThresholdAutoscaler(spec["policy"],
+                                               len(BASE_NODES))
+                           if spec.get("policy") else None),
+        })
+    queue = []
+    seq = 0
+
+    def push(at, kind, region, payload=None):
+        nonlocal seq
+        queue.append([at, PRIO[kind], seq, kind, region, payload])
+        seq += 1
+
+    attempts = [0] * len(trace)
+    assignments = []
+    rr_next = [0]
+
+    def advance(reg, now):
+        if now <= reg["last_s"]:
+            return
+        dt = now - reg["last_s"]
+        carbon = reg["signal"]
+        gdt = None
+        if carbon is not None and carbon.constant_value() is None:
+            gdt = carbon.integral(reg["last_s"], now)
+        for r in reg["running"].values():
+            r["acc"] += r["watts"] * dt
+            if gdt is not None:
+                r["accg"] += r["watts"] * gdt
+        for nid in sorted(reg["ledgers"]):
+            led = reg["ledgers"][nid]
+            if led[2]:
+                idle_w = max(led[0] - led[1], 0.0)
+                led[3] += idle_w * dt
+                if gdt is not None:
+                    led[4] += idle_w * gdt
+        reg["last_s"] = now
+
+    def node_online(reg, nid, at):
+        advance(reg, at)
+        if nid not in reg["ledgers"]:
+            reg["ledgers"][nid] = [
+                node_idle_watts(reg["cluster"].nodes[nid]), 0.0, False,
+                0.0, 0.0,
+            ]
+        reg["ledgers"][nid][2] = True
+
+    def node_offline(reg, nid, at):
+        advance(reg, at)
+        if nid in reg["ledgers"]:
+            reg["ledgers"][nid][2] = False
+
+    def sample(reg, now):
+        reg["timeline"].append(
+            (now, reg["cluster"].ready_count(), len(reg["cluster"].nodes)))
+
+    def dispatch_pod(now, cls):
+        if dispatch == "round-robin":
+            r = rr_next[0] % len(regs)
+            rr_next[0] += 1
+            return r
+        if dispatch == "least-pending":
+            return fed_least_pending(regs)
+        # carbon-greedy: cleanest region with capacity (strictly lower
+        # intensity wins, lowest index on ties); least-pending when
+        # every region is full. Mirrors dispatch::CarbonGreedy.
+        req = REQUESTS[cls]
+        best, best_g = None, None
+        for i, reg in enumerate(regs):
+            if not fed_has_capacity(reg["cluster"], reg["pending_cpu"],
+                                    reg["pending_mem"], req):
+                continue
+            g = reg["signal"].at(now)
+            if best is None or g < best_g:
+                best, best_g = i, g
+        if best is not None:
+            return best
+        return fed_least_pending(regs)
+
+    def autoscale(ridx, now):
+        reg = regs[ridx]
+        waits = [now - trace[i][0] for i in reg["pending"]]
+        actions, wake = reg["autoscaler"].decide(now, reg["cluster"], waits)
+        for action in actions:
+            if action[0] == "provision":
+                _tag, template, ready_at = action
+                nid = reg["cluster"].add_node(template)
+                at = max(ready_at, now)
+                push(at, "join", ridx, nid)
+                sample(reg, now)
+                reg["scaling"].append({"at_s": now, "kind": "scale-out",
+                                       "node": nid, "effective_at_s": at})
+            elif action[0] == "activate":
+                _tag, nid, ready_at = action
+                at = max(ready_at, now)
+                push(at, "join", ridx, nid)
+                reg["scaling"].append({"at_s": now, "kind": "activate",
+                                       "node": nid, "effective_at_s": at})
+            else:
+                _tag, nid, at_s = action
+                at = max(at_s, now)
+                push(at, "fail", ridx, nid)
+                reg["scaling"].append({"at_s": now, "kind": "scale-in",
+                                       "node": nid, "effective_at_s": at})
+        if (wake is not None and wake > now
+                and (reg["next_tick"] is None or wake < reg["next_tick"])):
+            push(wake, "tick", ridx)
+            reg["next_tick"] = wake
+
+    def try_place(ridx, i, now):
+        reg = regs[ridx]
+        cluster = reg["cluster"]
+        at, cls, epochs = trace[i]
+        attempts[i] += 1
+        if scheduler == "carbon-aware":
+            node = schedule_carbon_aware(cluster, cls, epochs)
+        else:
+            node = schedule(cluster, cls, epochs)
+        if node is None:
+            return False
+        req = REQUESTS[cls]
+        cluster.bind(node, req)
+        base = executor_base_secs(cluster, node, cls, epochs)
+        share = req[0] / cluster.nodes[node][1]
+        factor = contention_factor(cluster.util(node), share)
+        duration = base * factor
+        claim = pod_idle_claim_watts(cluster.nodes[node], share)
+        if node in reg["ledgers"]:
+            reg["ledgers"][node][1] += claim
+        reg["running"][i] = {
+            "watts": pod_power_watts(cluster.nodes[node], share),
+            "claim": claim,
+            "start": now,
+            "acc": 0.0,
+            "accg": 0.0,
+            "node": node,
+        }
+        push(now + duration, "done", ridx, i)
+        return True
+
+    def complete(ridx, i, now):
+        reg = regs[ridx]
+        reg["makespan"] = max(reg["makespan"], now)
+        r = reg["running"].pop(i)
+        reg["cluster"].release(r["node"], REQUESTS[trace[i][1]])
+        advance(reg, now)  # no-op; mirrors meter.finish's advance
+        if r["node"] in reg["ledgers"]:
+            reg["ledgers"][r["node"]][1] -= r["claim"]
+        carbon = reg["signal"]
+        cv = carbon.constant_value() if carbon is not None else None
+        reg["records"][i] = {
+            "pod": i,
+            "class": trace[i][1],
+            "region": reg["name"],
+            "node": r["node"],
+            "arrival_s": trace[i][0],
+            "start_s": r["start"],
+            "finish_s": now,
+            "wait_s": r["start"] - trace[i][0],
+            "attempts": attempts[i],
+            "joules": r["acc"],
+            "grams": (r["acc"] * cv if cv is not None else r["accg"])
+            if carbon is not None else 0.0,
+        }
+
+    # Run start: idle metering + t = 0 samples per region, arrivals
+    # seeded in pod order (same seq assignment as the Rust engine),
+    # then the per-region t = 0 autoscaler consults, in region order.
+    for reg in regs:
+        for nid in range(len(reg["cluster"].nodes)):
+            if reg["cluster"].ready[nid]:
+                node_online(reg, nid, 0.0)
+        sample(reg, 0.0)
+    for i, (at, _cls, _ep) in enumerate(trace):
+        push(at, "arrival", 0, i)
+    for ridx, reg in enumerate(regs):
+        if reg["autoscaler"]:
+            autoscale(ridx, 0.0)
+
+    final_clock = 0.0
+    while queue:
+        queue.sort(key=lambda e: (e[0], e[1], e[2]))
+        at, _p, _s, kind, region, payload = queue.pop(0)
+        now = at
+        final_clock = max(final_clock, now)
+        is_tick = kind == "tick"
+        if kind == "arrival":
+            region = dispatch_pod(now, trace[payload][1])
+            reg = regs[region]
+            advance(reg, now)
+            reg["pending"].append(payload)
+            req = REQUESTS[trace[payload][1]]
+            reg["pending_cpu"] += req[0]
+            reg["pending_mem"] += req[1]
+            assignments.append(
+                {"pod": payload, "region": region, "at_s": now})
+            if not reg["cycle_queued"]:
+                push(now, "cycle", region)
+                reg["cycle_queued"] = True
+        else:
+            reg = regs[region]
+            advance(reg, now)
+            if kind == "cycle":
+                reg["cycle_queued"] = False
+                for _ in range(len(reg["pending"])):
+                    i = reg["pending"].popleft()
+                    if try_place(region, i, now):
+                        req = REQUESTS[trace[i][1]]
+                        reg["pending_cpu"] -= req[0]
+                        reg["pending_mem"] -= req[1]
+                    else:
+                        reg["pending"].append(i)
+            elif kind == "done":
+                complete(region, payload, now)
+                if reg["pending"] and not reg["cycle_queued"]:
+                    push(now, "cycle", region)
+                    reg["cycle_queued"] = True
+            elif kind == "join":
+                reg["cluster"].ready[payload] = True
+                node_online(reg, payload, now)
+                sample(reg, now)
+                if reg["pending"] and not reg["cycle_queued"]:
+                    push(now, "cycle", region)
+                    reg["cycle_queued"] = True
+            elif kind == "fail":
+                reg["cluster"].ready[payload] = False
+                node_offline(reg, payload, now)
+                sample(reg, now)
+            elif kind == "tick":
+                reg["next_tick"] = None
+        if regs[region]["autoscaler"] and (
+                is_tick or not regs[region]["cycle_queued"]):
+            autoscale(region, now)
+
+    # Close out every region's meter over one common window (mirrors
+    # the Rust engine's end-of-run advance).
+    end = (final_clock if billing_horizon_s is None
+           else max(billing_horizon_s, final_clock))
+    for reg in regs:
+        advance(reg, end)
+
+    out_regions = []
+    for reg in regs:
+        ordered = [reg["records"][i] for i in sorted(reg["records"])]
+        out_regions.append({
+            "name": reg["name"],
+            "pods": ordered,
+            "unschedulable": sorted(reg["pending"]),
+            "makespan_s": reg["makespan"],
+            "total_kj": sum(r["joules"] for r in ordered) / 1000.0,
+            "idle_kj": sum(reg["ledgers"][n][3]
+                           for n in sorted(reg["ledgers"])) / 1000.0,
+            "total_co2_g": sum(r["grams"] for r in ordered),
+            "idle_co2_g": sum(
+                (reg["ledgers"][n][3] * reg["signal"].constant_value()
+                 if reg["signal"].constant_value() is not None
+                 else reg["ledgers"][n][4])
+                for n in sorted(reg["ledgers"])),
+            "scaling": reg["scaling"],
+            "timeline": reg["timeline"],
+        })
+    return {
+        "regions": out_regions,
+        "assignments": assignments,
+        "makespan_s": max((r["makespan_s"] for r in out_regions),
+                          default=0.0),
+    }
+
+
 def summarize(tag, sim):
     waited = sum(1 for p in sim["pods"] if p["wait_s"] > 0.0)
     print(f"{tag}: {len(sim['pods'])} pods, {waited} queued, "
@@ -775,6 +1117,34 @@ def summarize(tag, sim):
         print(f"  pod {p['pod']:2} {p['class']:7} -> node {p['node']} "
               f"start {p['start_s']:7.3f} wait {p['wait_s']:6.3f} "
               f"x{p['attempts']} {p['joules']:9.2f} J")
+
+
+# --- the 2-region federation fixture ---------------------------------
+# Mirrors rust/tests/golden_trace.rs: region "east" under the golden
+# diurnal signal (phase 0), region "west" phase-shifted by half a
+# period (dirty when east is clean), carbon-greedy dispatch, greenpod
+# scheduling, no autoscaler.
+def golden_federation_regions():
+    return [
+        {"name": "east", "signal": diurnal_signal(G_PER_J, 0.5, 120.0, 12)},
+        {"name": "west",
+         "signal": phase_shifted_diurnal(G_PER_J, 0.5, 120.0, 12, 0.5)},
+    ]
+
+
+def summarize_federation(tag, sim):
+    total = sum(len(r["pods"]) for r in sim["regions"])
+    print(f"{tag}: {total} pods over {len(sim['regions'])} regions, "
+          f"makespan {sim['makespan_s']:.3f}s")
+    for r in sim["regions"]:
+        print(f"  {r['name']}: {len(r['pods'])} pods, "
+              f"total {r['total_kj']:.4f} kJ, idle {r['idle_kj']:.4f} kJ, "
+              f"CO2 {r['total_co2_g']:.4f}+{r['idle_co2_g']:.4f} g")
+        for p in r["pods"]:
+            print(f"    pod {p['pod']:2} {p['class']:7} -> node "
+                  f"{p['node']} start {p['start_s']:7.3f} "
+                  f"wait {p['wait_s']:6.3f} x{p['attempts']} "
+                  f"{p['joules']:9.2f} J {p['grams']:7.4f} g")
 
 
 def main():
@@ -865,6 +1235,47 @@ def main():
     summarize("carbon golden trace", carbon)
     print(f"  total CO2 {carbon['total_co2_g']:.4f} g, "
           f"idle CO2 {carbon['idle_co2_g']:.4f} g")
+
+    fed = simulate_federation(TRACE, golden_federation_regions(),
+                              dispatch="carbon-greedy",
+                              scheduler="greenpod")
+    all_pods = sorted(
+        (p for r in fed["regions"] for p in r["pods"]),
+        key=lambda p: p["pod"])
+    assert len(all_pods) == len(TRACE), "federation dropped pods"
+    expected4 = {
+        "engine": "federation-2-region",
+        "scheduler": "greenpod-topsis/energy-centric",
+        "seed": 42,
+        "dispatch": "carbon-greedy",
+        "signal": {
+            "kind": "diurnal-phase-shifted",
+            "base_g_per_j": G_PER_J,
+            "swing": 0.5,
+            "period_s": 120.0,
+            "samples": 12,
+            "phases": [0.0, 0.5],
+        },
+        "pods": all_pods,
+        "makespan_s": fed["makespan_s"],
+        "regions": [
+            {
+                "name": r["name"],
+                "pods": len(r["pods"]),
+                "makespan_s": r["makespan_s"],
+                "total_kj": r["total_kj"],
+                "idle_kj": r["idle_kj"],
+                "total_co2_g": r["total_co2_g"],
+                "idle_co2_g": r["idle_co2_g"],
+            }
+            for r in fed["regions"]
+        ],
+    }
+    out4 = os.path.join(data_dir, "golden_trace_federation.expected.json")
+    with open(out4, "w") as f:
+        json.dump(expected4, f, indent=1)
+        f.write("\n")
+    summarize_federation("federation golden trace", fed)
 
 
 if __name__ == "__main__":

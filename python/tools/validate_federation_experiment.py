@@ -1,0 +1,123 @@
+"""Cross-validate the pinned assertions of `greenpod experiment
+federation` (rust/src/experiments/federation.rs) against the Python
+engine mirror.
+
+Reproduces the exact cells of the Rust experiment — the elastic bursty
+trace (seed 20250710 via the bit-exact xoshiro mirror), {1, 2, 3}
+paper-cluster regions under phase-shifted diurnal signals (region j of
+n shifted by j/n of the 300 s period), the three dispatch policies and
+both profiles — and checks the orderings the Rust tests pin:
+
+* every cell admits all work (no unschedulable pods) and drains inside
+  the 300 s billing horizon;
+* with one region, every dispatch policy produces identical totals
+  (all dispatchers degenerate to region 0);
+* with >= 2 regions, carbon-greedy dispatch emits no more total gCO2
+  than round-robin at equal admitted work, for both profiles.
+
+Exits non-zero on any violation, so CI catches a drift between the
+Rust experiment and this mirror (which shares its federation engine
+arithmetic with make_golden_trace.py).
+
+Run from the repo root:
+    python3 python/tools/validate_federation_experiment.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import make_golden_trace as g
+from validate_carbon_experiment import bursty_trace
+
+# Mirrors experiments::elastic::BILLING_HORIZON_S.
+BILLING_HORIZON_S = 300.0
+# Mirrors experiments::federation::{FED_SWING, FED_SAMPLES,
+# FED_REGION_NAMES}.
+FED_SWING = 0.8
+FED_SAMPLES = 12
+FED_REGION_NAMES = ["region-a", "region-b", "region-c"]
+# Mirrors ExperimentConfig::default().seed.
+SEED = 20250710
+
+DISPATCHES = ["round-robin", "least-pending", "carbon-greedy"]
+PROFILES = ["greenpod", "carbon-aware"]
+
+
+def builtin_regions(n):
+    """Mirror of experiments::federation::builtin_specs."""
+    return [
+        {"name": FED_REGION_NAMES[j],
+         "signal": g.phase_shifted_diurnal(
+             g.G_PER_J, FED_SWING, BILLING_HORIZON_S, FED_SAMPLES, j / n)}
+        for j in range(n)
+    ]
+
+
+def cell_totals(sim):
+    total_co2 = sum(r["total_co2_g"] + r["idle_co2_g"]
+                    for r in sim["regions"])
+    total_kj = sum(r["total_kj"] + r["idle_kj"] for r in sim["regions"])
+    unsched = sum(len(r["unschedulable"]) for r in sim["regions"])
+    completed = sum(len(r["pods"]) for r in sim["regions"])
+    return total_co2, total_kj, completed, unsched
+
+
+def main():
+    trace = bursty_trace(SEED)
+    failures = []
+    print(f"trace: {len(trace)} pods over "
+          f"{trace[0][0]:.2f}..{trace[-1][0]:.2f} s")
+    for n in (1, 2, 3):
+        regions = builtin_regions(n)
+        for profile in PROFILES:
+            co2 = {}
+            for dispatch in DISPATCHES:
+                sim = g.simulate_federation(
+                    trace, regions, dispatch=dispatch,
+                    billing_horizon_s=BILLING_HORIZON_S,
+                    scheduler=profile)
+                total_co2, total_kj, completed, unsched = cell_totals(sim)
+                co2[dispatch] = total_co2
+                split = "/".join(
+                    str(len(r["pods"])) for r in sim["regions"])
+                print(f"  {n}r {profile:13} {dispatch:13} "
+                      f"co2={total_co2:9.4f} g  kj={total_kj:8.3f}  "
+                      f"pods={split}  makespan={sim['makespan_s']:6.1f}")
+                if unsched:
+                    failures.append(
+                        f"{n}r/{profile}/{dispatch}: {unsched} "
+                        f"unschedulable pods")
+                if completed + unsched != len(trace):
+                    failures.append(
+                        f"{n}r/{profile}/{dispatch}: pods lost "
+                        f"({completed} + {unsched} != {len(trace)})")
+                if sim["makespan_s"] > BILLING_HORIZON_S:
+                    failures.append(
+                        f"{n}r/{profile}/{dispatch}: makespan "
+                        f"{sim['makespan_s']} past the billing horizon")
+            if n == 1:
+                if not (co2["round-robin"] == co2["least-pending"]
+                        == co2["carbon-greedy"]):
+                    failures.append(
+                        f"1r/{profile}: dispatch policies diverge on a "
+                        f"single region: {co2}")
+            else:
+                if not (co2["carbon-greedy"]
+                        <= co2["round-robin"] * (1.0 + 1e-9)):
+                    failures.append(
+                        f"{n}r/{profile}: carbon-greedy "
+                        f"{co2['carbon-greedy']} !<= round-robin "
+                        f"{co2['round-robin']}")
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("all federation-experiment orderings hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

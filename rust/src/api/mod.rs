@@ -62,6 +62,16 @@ pub enum ApiEvent {
         duration_s: f64,
         joules: f64,
     },
+    /// A federation dispatch decision: an arriving pod routed to a
+    /// named region by the federation dispatcher *before* in-cluster
+    /// placement — emitted when replaying federation results
+    /// (`greenpod experiment federation --events`). The JSONL `region`
+    /// field attributes every line to its cluster.
+    Dispatched {
+        pod: PodId,
+        region: String,
+        at_s: f64,
+    },
     /// A cluster-scaling action (autoscaler scale-out/scale-in or a
     /// scheduled churn change), in the same JSONL vocabulary as the
     /// pod lifecycle — emitted when replaying simulation results that
@@ -84,6 +94,9 @@ pub enum ApiEvent {
 
 impl ApiEvent {
     /// JSON-lines rendering (the `serve` subcommand's output format).
+    /// Every id/count field goes through the lossless [`Json::Uint`]
+    /// variant: `u64` pod ids routed through `Json::Num`'s f64 were
+    /// silently corrupted at and above 2⁵³ (regression-tested below).
     pub fn to_json(&self) -> Json {
         match self {
             ApiEvent::Bound {
@@ -96,7 +109,7 @@ impl ApiEvent {
                 grid_g_per_kwh,
             } => Json::obj(vec![
                 ("event", Json::Str("bound".into())),
-                ("pod", Json::Num(*pod as f64)),
+                ("pod", Json::Uint(*pod)),
                 ("name", Json::Str(name.clone())),
                 ("node", Json::Str(node.clone())),
                 ("profile", Json::Str(profile.clone())),
@@ -106,32 +119,38 @@ impl ApiEvent {
             ]),
             ApiEvent::Unschedulable { pod, name } => Json::obj(vec![
                 ("event", Json::Str("unschedulable".into())),
-                ("pod", Json::Num(*pod as f64)),
+                ("pod", Json::Uint(*pod)),
                 ("name", Json::Str(name.clone())),
             ]),
             ApiEvent::Completed { pod, name, duration_s, joules } => {
                 Json::obj(vec![
                     ("event", Json::Str("completed".into())),
-                    ("pod", Json::Num(*pod as f64)),
+                    ("pod", Json::Uint(*pod)),
                     ("name", Json::Str(name.clone())),
                     ("duration_s", Json::Num(*duration_s)),
                     ("joules", Json::Num(*joules)),
                 ])
             }
+            ApiEvent::Dispatched { pod, region, at_s } => Json::obj(vec![
+                ("event", Json::Str("dispatched".into())),
+                ("pod", Json::Uint(*pod)),
+                ("region", Json::Str(region.clone())),
+                ("at_s", Json::Num(*at_s)),
+            ]),
             ApiEvent::Scaled { at_s, action, node, ready_nodes } => {
                 Json::obj(vec![
                     ("event", Json::Str("scaled".into())),
                     ("at_s", Json::Num(*at_s)),
                     ("action", Json::Str(action.clone())),
-                    ("node", Json::Num(*node as f64)),
-                    ("ready_nodes", Json::Num(*ready_nodes as f64)),
+                    ("node", Json::Uint(*node as u64)),
+                    ("ready_nodes", Json::Uint(*ready_nodes as u64)),
                 ])
             }
             ApiEvent::Drained { completed, unschedulable, total_kj } => {
                 Json::obj(vec![
                     ("event", Json::Str("drained".into())),
-                    ("completed", Json::Num(*completed as f64)),
-                    ("unschedulable", Json::Num(*unschedulable as f64)),
+                    ("completed", Json::Uint(*completed)),
+                    ("unschedulable", Json::Uint(*unschedulable)),
                     ("total_kj", Json::Num(*total_kj)),
                 ])
             }
@@ -518,6 +537,50 @@ mod tests {
         assert!(j.contains("\"profile\":\"greenpod\""), "{j}");
         assert!(j.contains("\"queue_wait_s\":0.25"), "{j}");
         assert!(j.contains("\"grid_g_per_kwh\":373.5"), "{j}");
+    }
+
+    #[test]
+    fn pod_ids_above_2_pow_53_serialize_losslessly() {
+        // The f64 path corrupted ids >= 2^53; the Uint path must carry
+        // every digit through emission *and* a parse round-trip.
+        let id: PodId = (1u64 << 53) + 1;
+        assert_ne!((id as f64) as u64, id, "id must exceed f64 precision");
+        for e in [
+            ApiEvent::Completed {
+                pod: id,
+                name: "p".into(),
+                duration_s: 1.0,
+                joules: 2.0,
+            },
+            ApiEvent::Unschedulable { pod: id, name: "p".into() },
+            ApiEvent::Dispatched {
+                pod: id,
+                region: "eu-west".into(),
+                at_s: 0.5,
+            },
+        ] {
+            let line = e.to_json().to_string();
+            assert!(
+                line.contains(&format!("\"pod\":{id}")),
+                "{line}"
+            );
+            let back = Json::parse(&line).unwrap();
+            assert_eq!(back.get("pod").and_then(Json::as_u64), Some(id));
+        }
+    }
+
+    #[test]
+    fn dispatched_event_json_shape() {
+        let e = ApiEvent::Dispatched {
+            pod: 4,
+            region: "region-b".into(),
+            at_s: 12.25,
+        };
+        let j = e.to_json().to_string();
+        assert!(j.contains("\"event\":\"dispatched\""), "{j}");
+        assert!(j.contains("\"pod\":4"), "{j}");
+        assert!(j.contains("\"region\":\"region-b\""), "{j}");
+        assert!(j.contains("\"at_s\":12.25"), "{j}");
     }
 
     #[test]

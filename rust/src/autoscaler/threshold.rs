@@ -160,6 +160,40 @@ impl ThresholdConfig {
             .clone()
     }
 
+    /// Materialize a config-file autoscaler section (`federation`
+    /// region entries) around `cluster`: the serialized knobs plus the
+    /// cluster-derived bounds (`[base, base + max_extra_nodes]`), the
+    /// edge template, and — when the section carries a `window` — a
+    /// [`CarbonWindowConfig`] whose dirty threshold derives from
+    /// `signal` at the configured percentile.
+    pub fn from_region(
+        cfg: &crate::config::RegionAutoscalerConfig,
+        cluster: &ClusterConfig,
+        signal: &CarbonSignal,
+    ) -> anyhow::Result<Self> {
+        let base = cluster.total_nodes();
+        let carbon = match &cfg.window {
+            Some(w) => Some(CarbonWindowConfig::at_percentile(
+                signal.clone(),
+                w.percentile,
+                w.idle_tighten,
+                w.defer_scale_out_s,
+            )?),
+            None => None,
+        };
+        Ok(Self {
+            scale_out_pending: cfg.scale_out_pending,
+            scale_out_wait_p95_s: cfg.scale_out_wait_p95_s,
+            provision_delay_s: cfg.provision_delay_s,
+            cooldown_s: cfg.cooldown_s,
+            idle_scale_in_s: cfg.idle_scale_in_s,
+            min_nodes: base,
+            max_nodes: base + cfg.max_extra_nodes,
+            template: Self::edge_template(cluster),
+            carbon,
+        })
+    }
+
     /// The cluster's high-capacity cloud template: the pool with the
     /// most vCPUs (lowest power scale, then first, on ties —
     /// `min_by` over the inverted key keeps the first minimal element,
@@ -178,10 +212,18 @@ impl ThresholdConfig {
     }
 }
 
-/// p95 via `metrics::Summary`, so scaling triggers and the reported
-/// wait distributions agree on what "p95" means by construction.
-fn p95(samples: &[f64]) -> f64 {
-    crate::metrics::Summary::of(samples).p95
+/// p95 via the shared `util::stats` nearest-rank helper — the same
+/// function `metrics::Summary` resolves through, so scaling triggers
+/// and the reported wait distributions agree on what "p95" means by
+/// construction. `None` on an empty window makes the empty-window
+/// skip *structural*: the previous path went through
+/// `Summary::of(&[])`, whose all-zero stats cannot distinguish "no
+/// waiting pods" from "p95 wait = 0", and only an inline emptiness
+/// guard at the call site kept that ambiguity out of the trigger.
+/// Now the helper itself cannot be misread — an empty window never
+/// fires (or suppresses) the SLO trigger (regression-tested below).
+fn p95(samples: &[f64]) -> Option<f64> {
+    crate::util::stats::nearest_rank(samples, 0.95)
 }
 
 /// Run-scoped state of the threshold policy.
@@ -275,10 +317,11 @@ impl Autoscaler for ThresholdAutoscaler {
         // per decision, rate-limited by the cooldown, bounded by max.
         let depth_hit = cfg.scale_out_pending > 0
             && obs.pending_wait_s.len() >= cfg.scale_out_pending;
-        let pending_p95 = if cfg.scale_out_wait_p95_s.is_finite()
-            && !obs.pending_wait_s.is_empty()
-        {
-            Some(p95(obs.pending_wait_s))
+        // An empty pending window yields `None` (p95 skips it), never
+        // a zero that a `scale_out_wait_p95_s` of 0 would misread as
+        // an SLO breach — "no waiting pods" is not "p95 wait = 0".
+        let pending_p95 = if cfg.scale_out_wait_p95_s.is_finite() {
+            p95(obs.pending_wait_s)
         } else {
             None
         };
@@ -900,6 +943,103 @@ mod tests {
         assert_eq!(
             d2.actions,
             vec![ScalingAction::Deactivate { node: id, at_s: 15.0 }]
+        );
+    }
+
+    #[test]
+    fn empty_wait_window_never_fires_the_slo_trigger() {
+        // A zero wait threshold with *no* pending pods must not scale
+        // out: an empty sample window is "no signal", not "p95 = 0 ≥
+        // threshold". (Summary::of(&[]) returns all-zero stats; the
+        // old call site dodged that ambiguity only via an inline
+        // emptiness guard — this pins the now-structural skip.)
+        let cluster = ClusterConfig::paper_default();
+        let state = ClusterState::from_config(&cluster);
+        let mut cfg = ThresholdConfig::for_cluster(&cluster);
+        cfg.scale_out_pending = 0;
+        cfg.scale_out_wait_p95_s = 0.0;
+        let mut a = ThresholdAutoscaler::new(cfg, state.nodes().len());
+        for now in [0.0, 1.0, 100.0] {
+            let d = a.decide(&Observation {
+                now_s: now,
+                state: &state,
+                pending_wait_s: &[],
+            });
+            assert!(d.actions.is_empty(), "t={now}: {:?}", d.actions);
+        }
+        // The instant a pod actually waits, the trigger fires.
+        let d = a.decide(&Observation {
+            now_s: 101.0,
+            state: &state,
+            pending_wait_s: &[0.0],
+        });
+        assert_eq!(d.actions.len(), 1);
+    }
+
+    #[test]
+    fn empty_wait_window_never_suppresses_scale_in() {
+        // The converse direction: an empty window carries no SLO
+        // pressure, so a long-idle autoscaled node still scales in on
+        // schedule even under a hair-trigger wait threshold.
+        let cluster = ClusterConfig::paper_default();
+        let mut state = ClusterState::from_config(&cluster);
+        let mut cfg = ThresholdConfig::for_cluster(&cluster);
+        cfg.scale_out_pending = 0;
+        cfg.scale_out_wait_p95_s = 0.0;
+        cfg.idle_scale_in_s = 5.0;
+        let template = cfg.template.clone();
+        let base = state.nodes().len();
+        let mut a = ThresholdAutoscaler::new(cfg, base);
+        let id = state.add_node(&template, 0.0);
+        state.set_ready(id, true, 0.0);
+        let seen = a.decide(&Observation {
+            now_s: 0.0,
+            state: &state,
+            pending_wait_s: &[],
+        });
+        assert!(seen.actions.is_empty());
+        let d = a.decide(&Observation {
+            now_s: 5.0,
+            state: &state,
+            pending_wait_s: &[],
+        });
+        assert_eq!(
+            d.actions,
+            vec![ScalingAction::Deactivate { node: id, at_s: 5.0 }]
+        );
+    }
+
+    #[test]
+    fn from_region_config_derives_bounds_and_window() {
+        use crate::config::{CarbonWindowParams, RegionAutoscalerConfig};
+        let cluster = ClusterConfig::paper_default();
+        let base = cluster.total_nodes();
+        let signal =
+            CarbonSignal::step(vec![(0.0, 1.0), (10.0, 3.0)]).unwrap();
+        let mut rc = RegionAutoscalerConfig::default();
+        rc.max_extra_nodes = 2;
+        rc.window = Some(CarbonWindowParams {
+            percentile: 0.25,
+            idle_tighten: 0.5,
+            defer_scale_out_s: 4.0,
+        });
+        let cfg =
+            ThresholdConfig::from_region(&rc, &cluster, &signal).unwrap();
+        assert_eq!(cfg.min_nodes, base);
+        assert_eq!(cfg.max_nodes, base + 2);
+        assert_eq!(cfg.template.machine_type, "e2-medium");
+        let w = cfg.carbon.expect("window built");
+        assert_eq!(w.dirty_g_per_j, 1.0);
+        assert_eq!(w.idle_tighten, 0.5);
+        assert_eq!(w.defer_scale_out_s, 4.0);
+        // Out-of-range window parameters surface the constructor error.
+        rc.window = Some(CarbonWindowParams {
+            percentile: 1.5,
+            idle_tighten: 0.5,
+            defer_scale_out_s: 4.0,
+        });
+        assert!(
+            ThresholdConfig::from_region(&rc, &cluster, &signal).is_err()
         );
     }
 

@@ -1,0 +1,304 @@
+//! Multi-cluster federation configuration — the `federation` section
+//! of a config file: named region entries, each carrying its own
+//! cluster topology, carbon-intensity signal and (optional) autoscaler
+//! knobs, plus the dispatch policy that routes arriving pods between
+//! regions (DESIGN.md §"Federation").
+//!
+//! This module is pure data + validation; `federation::RegionSpec::
+//! from_federation_config` materializes the runtime region specs and
+//! `autoscaler::ThresholdConfig::from_region` builds the per-region
+//! scaling policy around the region's cluster and signal.
+
+use anyhow::{ensure, Result};
+
+use super::{CarbonConfig, ClusterConfig, EnergyModelConfig};
+
+/// How the federation dispatcher routes each arriving pod to a region
+/// (before the region's own scheduling profile places it on a node).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchKind {
+    /// Cycle through regions in index order, blind to state.
+    RoundRobin,
+    /// The region with the fewest pending (dispatched, unplaced) pods.
+    LeastPending,
+    /// The currently cleanest region (lowest `signal.at(now)`) that
+    /// still has headroom for the pod; falls back to least-pending
+    /// when every region is full.
+    CarbonGreedy,
+}
+
+impl DispatchKind {
+    pub const ALL: [DispatchKind; 3] = [
+        DispatchKind::RoundRobin,
+        DispatchKind::LeastPending,
+        DispatchKind::CarbonGreedy,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            DispatchKind::RoundRobin => "round-robin",
+            DispatchKind::LeastPending => "least-pending",
+            DispatchKind::CarbonGreedy => "carbon-greedy",
+        }
+    }
+}
+
+impl std::str::FromStr for DispatchKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "round-robin" => Ok(DispatchKind::RoundRobin),
+            "least-pending" => Ok(DispatchKind::LeastPending),
+            "carbon-greedy" => Ok(DispatchKind::CarbonGreedy),
+            other => anyhow::bail!(
+                "unknown dispatch policy `{other}` \
+                 (round-robin|least-pending|carbon-greedy)"
+            ),
+        }
+    }
+}
+
+/// Carbon scale-down window knobs of a region autoscaler (the
+/// percentile-derived `CarbonWindowConfig` parameters).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CarbonWindowParams {
+    /// Quantile of the region signal's samples that sets the dirty
+    /// threshold, in `[0, 1]`.
+    pub percentile: f64,
+    /// Idle scale-in multiplier while dirty, in `(0, 1]`.
+    pub idle_tighten: f64,
+    /// Bound (s) on deferring depth-triggered scale-out while dirty.
+    pub defer_scale_out_s: f64,
+}
+
+/// Serializable per-region autoscaler knobs. Cluster-derived values
+/// (node bounds, the edge template) are filled in by
+/// `autoscaler::ThresholdConfig::from_region` at build time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionAutoscalerConfig {
+    /// Depth trigger (`0` disables).
+    pub scale_out_pending: usize,
+    /// Wait trigger (`f64::INFINITY`, the default when absent,
+    /// disables; the JSON dump encodes the sentinel by omission).
+    pub scale_out_wait_p95_s: f64,
+    pub provision_delay_s: f64,
+    pub cooldown_s: f64,
+    /// Idle scale-in timeout. Must be **finite** (validated): JSON
+    /// cannot encode the `INFINITY` sentinel the runtime
+    /// `ThresholdConfig` uses, so "no idle scale-in" is expressed
+    /// with a horizon-exceeding finite timeout instead.
+    pub idle_scale_in_s: f64,
+    /// Nodes the policy may add beyond the region's base cluster
+    /// (bounds become `[base, base + max_extra_nodes]`).
+    pub max_extra_nodes: usize,
+    /// Optional carbon scale-down windows over the region's signal.
+    pub window: Option<CarbonWindowParams>,
+}
+
+impl Default for RegionAutoscalerConfig {
+    /// The elastic-experiment threshold policy's knobs.
+    fn default() -> Self {
+        Self {
+            scale_out_pending: 3,
+            scale_out_wait_p95_s: f64::INFINITY,
+            provision_delay_s: 5.0,
+            cooldown_s: 15.0,
+            idle_scale_in_s: 20.0,
+            max_extra_nodes: 3,
+            window: None,
+        }
+    }
+}
+
+impl RegionAutoscalerConfig {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.provision_delay_s.is_finite()
+                && self.provision_delay_s >= 0.0,
+            "autoscaler provision_delay_s {} must be a finite \
+             non-negative number",
+            self.provision_delay_s
+        );
+        ensure!(
+            self.cooldown_s.is_finite() && self.cooldown_s >= 0.0,
+            "autoscaler cooldown_s {} must be a finite non-negative \
+             number",
+            self.cooldown_s
+        );
+        ensure!(
+            self.scale_out_wait_p95_s >= 0.0,
+            "autoscaler scale_out_wait_p95_s {} must be non-negative",
+            self.scale_out_wait_p95_s
+        );
+        // Finite by requirement: JSON cannot encode the `INFINITY`
+        // disable sentinel, so a config-file region expresses "no idle
+        // scale-in" with a horizon-exceeding finite timeout instead.
+        ensure!(
+            self.idle_scale_in_s.is_finite() && self.idle_scale_in_s >= 0.0,
+            "autoscaler idle_scale_in_s {} must be a finite non-negative \
+             number",
+            self.idle_scale_in_s
+        );
+        if let Some(w) = &self.window {
+            ensure!(
+                (0.0..=1.0).contains(&w.percentile),
+                "carbon window percentile {} must be in [0, 1]",
+                w.percentile
+            );
+            ensure!(
+                w.idle_tighten > 0.0 && w.idle_tighten <= 1.0,
+                "carbon window idle_tighten {} must be in (0, 1]",
+                w.idle_tighten
+            );
+            ensure!(
+                w.defer_scale_out_s.is_finite()
+                    && w.defer_scale_out_s >= 0.0,
+                "carbon window defer_scale_out_s {} must be a finite \
+                 non-negative number",
+                w.defer_scale_out_s
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One named region: its own cluster topology and carbon signal, plus
+/// optional autoscaling.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionConfig {
+    pub name: String,
+    pub cluster: ClusterConfig,
+    pub carbon: CarbonConfig,
+    pub autoscaler: Option<RegionAutoscalerConfig>,
+}
+
+impl RegionConfig {
+    /// A paper-default cluster under a constant (eGRID-scalar) signal.
+    pub fn named(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            cluster: ClusterConfig::paper_default(),
+            carbon: CarbonConfig::default(),
+            autoscaler: None,
+        }
+    }
+}
+
+/// The `federation` config section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FederationConfig {
+    pub dispatch: DispatchKind,
+    pub regions: Vec<RegionConfig>,
+}
+
+impl FederationConfig {
+    pub fn validate(&self, energy: &EnergyModelConfig) -> Result<()> {
+        ensure!(
+            !self.regions.is_empty(),
+            "federation section has no regions"
+        );
+        for (i, r) in self.regions.iter().enumerate() {
+            ensure!(
+                !r.name.is_empty(),
+                "federation region {i} has an empty name"
+            );
+            ensure!(
+                !self.regions[..i].iter().any(|p| p.name == r.name),
+                "federation region name `{}` is not unique",
+                r.name
+            );
+            r.cluster.validate().map_err(|e| {
+                anyhow::anyhow!("federation region `{}`: {e}", r.name)
+            })?;
+            r.carbon.validate(energy).map_err(|e| {
+                anyhow::anyhow!("federation region `{}`: {e}", r.name)
+            })?;
+            if let Some(a) = &r.autoscaler {
+                a.validate().map_err(|e| {
+                    anyhow::anyhow!("federation region `{}`: {e}", r.name)
+                })?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_kinds_roundtrip_labels() {
+        for kind in DispatchKind::ALL {
+            assert_eq!(kind.label().parse::<DispatchKind>().unwrap(), kind);
+        }
+        assert!("warp-routing".parse::<DispatchKind>().is_err());
+    }
+
+    #[test]
+    fn valid_two_region_section() {
+        let fc = FederationConfig {
+            dispatch: DispatchKind::CarbonGreedy,
+            regions: vec![
+                RegionConfig::named("us-east"),
+                RegionConfig {
+                    autoscaler: Some(RegionAutoscalerConfig::default()),
+                    ..RegionConfig::named("eu-west")
+                },
+            ],
+        };
+        fc.validate(&EnergyModelConfig::default()).unwrap();
+    }
+
+    #[test]
+    fn empty_duplicate_and_bad_regions_rejected() {
+        let energy = EnergyModelConfig::default();
+        let empty = FederationConfig {
+            dispatch: DispatchKind::RoundRobin,
+            regions: vec![],
+        };
+        assert!(empty.validate(&energy).is_err());
+
+        let dup = FederationConfig {
+            dispatch: DispatchKind::RoundRobin,
+            regions: vec![
+                RegionConfig::named("same"),
+                RegionConfig::named("same"),
+            ],
+        };
+        assert!(dup.validate(&energy).is_err());
+
+        let unnamed = FederationConfig {
+            dispatch: DispatchKind::RoundRobin,
+            regions: vec![RegionConfig::named("")],
+        };
+        assert!(unnamed.validate(&energy).is_err());
+
+        let mut bad_window = RegionConfig::named("w");
+        bad_window.autoscaler = Some(RegionAutoscalerConfig {
+            window: Some(CarbonWindowParams {
+                percentile: 2.0,
+                idle_tighten: 0.5,
+                defer_scale_out_s: 1.0,
+            }),
+            ..RegionAutoscalerConfig::default()
+        });
+        let fc = FederationConfig {
+            dispatch: DispatchKind::CarbonGreedy,
+            regions: vec![bad_window],
+        };
+        assert!(fc.validate(&energy).is_err());
+    }
+
+    #[test]
+    fn autoscaler_knob_ranges_enforced() {
+        let mut a = RegionAutoscalerConfig::default();
+        a.validate().unwrap();
+        a.provision_delay_s = f64::NAN;
+        assert!(a.validate().is_err());
+        a.provision_delay_s = 5.0;
+        a.cooldown_s = -1.0;
+        assert!(a.validate().is_err());
+    }
+}

@@ -15,6 +15,7 @@ mod carbon;
 mod cluster;
 mod energy;
 mod experiment;
+mod federation;
 mod profile;
 mod serial;
 mod weights;
@@ -24,6 +25,10 @@ pub use cluster::{ClusterConfig, NodePoolConfig};
 pub use energy::EnergyModelConfig;
 pub use experiment::{
     CompetitionLevel, ExperimentConfig, PodMix, SchedulerKind,
+};
+pub use federation::{
+    CarbonWindowParams, DispatchKind, FederationConfig,
+    RegionAutoscalerConfig, RegionConfig,
 };
 pub use profile::{
     ProfileSpec, ProfileTieBreak, ScorePluginKind, ScorePluginSpec,
@@ -43,6 +48,10 @@ pub struct Config {
     /// User-defined scheduling profiles, registered alongside the
     /// framework built-ins (see `framework::ProfileRegistry`).
     pub profiles: Vec<ProfileSpec>,
+    /// Multi-cluster federation: named regions with per-region cluster
+    /// / carbon / autoscaler configuration, plus the dispatch policy
+    /// (`None` = the single-cluster paper setup).
+    pub federation: Option<FederationConfig>,
 }
 
 impl Config {
@@ -72,6 +81,9 @@ impl Config {
         self.experiment.validate()?;
         self.carbon.validate(&self.energy)?;
         profile::validate_profiles(&self.profiles)?;
+        if let Some(fed) = &self.federation {
+            fed.validate(&self.energy)?;
+        }
         Ok(())
     }
 }

@@ -25,9 +25,11 @@ use crate::energy::SignalShape;
 use crate::util::json::Json;
 
 use super::{
-    CarbonConfig, CarbonMode, CarbonPoint, ClusterConfig, Config,
-    EnergyModelConfig, ExperimentConfig, NodePoolConfig, ProfileSpec,
-    ScorePluginKind, ScorePluginSpec,
+    CarbonConfig, CarbonMode, CarbonPoint, CarbonWindowParams,
+    ClusterConfig, Config, DispatchKind, EnergyModelConfig,
+    ExperimentConfig, FederationConfig, NodePoolConfig, ProfileSpec,
+    RegionAutoscalerConfig, RegionConfig, ScorePluginKind,
+    ScorePluginSpec,
 };
 
 // ------------------------------------------------------------ helpers
@@ -80,7 +82,115 @@ pub fn config_from_json(text: &str) -> Result<Config> {
     if let Some(p) = v.get("profiles") {
         cfg.profiles = profiles_from_json(p)?;
     }
+    if let Some(f) = v.get("federation") {
+        cfg.federation = Some(federation_from_json(f)?);
+    }
     Ok(cfg)
+}
+
+fn federation_from_json(v: &Json) -> Result<FederationConfig> {
+    // Same typo-guard principle as the region sub-sections: a present
+    // but wrong-typed `dispatch` must error, not silently fall back
+    // to the round-robin default.
+    let dispatch: DispatchKind = match v.get("dispatch") {
+        None => DispatchKind::RoundRobin,
+        Some(d) => d
+            .as_str()
+            .ok_or_else(|| anyhow!("federation `dispatch` is not a string"))?
+            .parse()?,
+    };
+    let regions = v
+        .req("regions")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("federation `regions` is not an array"))?
+        .iter()
+        .map(region_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(FederationConfig { dispatch, regions })
+}
+
+fn region_from_json(v: &Json) -> Result<RegionConfig> {
+    let name = v.req_str("name")?.to_string();
+    let mut region = RegionConfig::named(&name);
+    // Every sub-section must be an object when present: the section
+    // parsers default *missing keys*, so a typo like `"carbon":
+    // "diurnal"` would otherwise silently yield the paper defaults
+    // (constant signal, 7-node cluster) instead of erroring.
+    for (key, val) in [
+        ("cluster", v.get("cluster")),
+        ("carbon", v.get("carbon")),
+        ("autoscaler", v.get("autoscaler")),
+    ] {
+        if let Some(val) = val {
+            if val.as_obj().is_none() {
+                return Err(anyhow!(
+                    "region `{name}`: `{key}` is not an object"
+                ));
+            }
+        }
+    }
+    if let Some(c) = v.get("cluster") {
+        region.cluster = cluster_from_json(c)
+            .map_err(|e| anyhow!("region `{name}`: {e}"))?;
+    }
+    if let Some(c) = v.get("carbon") {
+        region.carbon = carbon_from_json(c)
+            .map_err(|e| anyhow!("region `{name}`: {e}"))?;
+    }
+    if let Some(a) = v.get("autoscaler") {
+        region.autoscaler = Some(
+            region_autoscaler_from_json(a)
+                .map_err(|e| anyhow!("region `{name}`: {e}"))?,
+        );
+    }
+    Ok(region)
+}
+
+fn region_autoscaler_from_json(v: &Json) -> Result<RegionAutoscalerConfig> {
+    // Reject non-object sections outright: `get_f64` falls back to
+    // defaults on *missing keys*, so a typo like `"autoscaler": 5` or
+    // `"window": "p50"` would otherwise silently enable the feature
+    // with default knobs instead of erroring.
+    if v.as_obj().is_none() {
+        return Err(anyhow!("`autoscaler` is not an object"));
+    }
+    let d = RegionAutoscalerConfig::default();
+    let window = match v.get("window") {
+        None => None,
+        Some(w) => {
+            if w.as_obj().is_none() {
+                return Err(anyhow!("autoscaler `window` is not an object"));
+            }
+            Some(CarbonWindowParams {
+                percentile: get_f64(w, "percentile", 0.5)?,
+                idle_tighten: get_f64(w, "idle_tighten", 0.25)?,
+                defer_scale_out_s: get_f64(w, "defer_scale_out_s", 20.0)?,
+            })
+        }
+    };
+    Ok(RegionAutoscalerConfig {
+        scale_out_pending: get_u64(
+            v,
+            "scale_out_pending",
+            d.scale_out_pending as u64,
+        )? as usize,
+        // Absent = the disabled sentinel (`INFINITY` is not JSON).
+        scale_out_wait_p95_s: get_f64(
+            v,
+            "scale_out_wait_p95_s",
+            f64::INFINITY,
+        )?,
+        provision_delay_s: get_f64(
+            v, "provision_delay_s", d.provision_delay_s)?,
+        cooldown_s: get_f64(v, "cooldown_s", d.cooldown_s)?,
+        idle_scale_in_s: get_f64(v, "idle_scale_in_s", d.idle_scale_in_s)?,
+        max_extra_nodes: get_u64(
+            v,
+            "max_extra_nodes",
+            d.max_extra_nodes as u64,
+        )? as usize,
+        window,
+    })
 }
 
 fn carbon_from_json(v: &Json) -> Result<CarbonConfig> {
@@ -256,13 +366,68 @@ fn experiment_from_json(v: &Json) -> Result<ExperimentConfig> {
 // ------------------------------------------------------------- dumps
 
 pub fn config_to_json(cfg: &Config) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("cluster", cluster_to_json(&cfg.cluster)),
         ("energy", energy_to_json(&cfg.energy)),
         ("experiment", experiment_to_json(&cfg.experiment)),
         ("carbon", carbon_to_json(&cfg.carbon)),
         ("profiles", profiles_to_json(&cfg.profiles)),
+    ];
+    if let Some(fed) = &cfg.federation {
+        pairs.push(("federation", federation_to_json(fed)));
+    }
+    Json::obj(pairs)
+}
+
+pub fn federation_to_json(f: &FederationConfig) -> Json {
+    Json::obj(vec![
+        ("dispatch", Json::Str(f.dispatch.label().into())),
+        (
+            "regions",
+            Json::Arr(f.regions.iter().map(region_to_json).collect()),
+        ),
     ])
+}
+
+fn region_to_json(r: &RegionConfig) -> Json {
+    let mut pairs = vec![
+        ("name", Json::Str(r.name.clone())),
+        ("cluster", cluster_to_json(&r.cluster)),
+        ("carbon", carbon_to_json(&r.carbon)),
+    ];
+    if let Some(a) = &r.autoscaler {
+        pairs.push(("autoscaler", region_autoscaler_to_json(a)));
+    }
+    Json::obj(pairs)
+}
+
+fn region_autoscaler_to_json(a: &RegionAutoscalerConfig) -> Json {
+    let mut pairs = vec![
+        ("scale_out_pending", Json::Uint(a.scale_out_pending as u64)),
+        ("provision_delay_s", Json::Num(a.provision_delay_s)),
+        ("cooldown_s", Json::Num(a.cooldown_s)),
+        ("idle_scale_in_s", Json::Num(a.idle_scale_in_s)),
+        ("max_extra_nodes", Json::Uint(a.max_extra_nodes as u64)),
+    ];
+    // JSON has no infinity: the disabled wait trigger is encoded by
+    // omission (the parser's default is `INFINITY`).
+    if a.scale_out_wait_p95_s.is_finite() {
+        pairs.push((
+            "scale_out_wait_p95_s",
+            Json::Num(a.scale_out_wait_p95_s),
+        ));
+    }
+    if let Some(w) = &a.window {
+        pairs.push((
+            "window",
+            Json::obj(vec![
+                ("percentile", Json::Num(w.percentile)),
+                ("idle_tighten", Json::Num(w.idle_tighten)),
+                ("defer_scale_out_s", Json::Num(w.defer_scale_out_s)),
+            ]),
+        ));
+    }
+    Json::obj(pairs)
 }
 
 pub fn carbon_to_json(c: &CarbonConfig) -> Json {
@@ -276,7 +441,7 @@ pub fn carbon_to_json(c: &CarbonConfig) -> Json {
                 ("base_g_per_kwh", Json::Num(*base_g_per_kwh)),
                 ("swing", Json::Num(*swing)),
                 ("period_s", Json::Num(*period_s)),
-                ("samples", Json::Num(*samples as f64)),
+                ("samples", Json::Uint(*samples as u64)),
             ])
         }
         CarbonMode::Trace { shape, points } => Json::obj(vec![
@@ -363,9 +528,9 @@ pub fn cluster_to_json(c: &ClusterConfig) -> Json {
                              Json::Str(p.category.label().into())),
                             ("machine_type",
                              Json::Str(p.machine_type.clone())),
-                            ("count", Json::Num(p.count as f64)),
-                            ("cpu_millis", Json::Num(p.cpu_millis as f64)),
-                            ("memory_mib", Json::Num(p.memory_mib as f64)),
+                            ("count", Json::Uint(p.count as u64)),
+                            ("cpu_millis", Json::Uint(p.cpu_millis)),
+                            ("memory_mib", Json::Uint(p.memory_mib)),
                             ("speed_factor", Json::Num(p.speed_factor)),
                             ("power_scale", Json::Num(p.power_scale)),
                         ])
@@ -400,20 +565,26 @@ pub fn energy_to_json(e: &EnergyModelConfig) -> Json {
 }
 
 pub fn experiment_to_json(x: &ExperimentConfig) -> Json {
+    // Every integer field dumps as `Json::Uint` so dump → parse is the
+    // identity at the `Json` value level too (the parser produces
+    // `Uint` for integer literals). The seed in particular is a full
+    // u64: `Json::Num`'s f64 would corrupt seeds >= 2^53 and silently
+    // change the reloaded run.
     Json::obj(vec![
-        ("replications", Json::Num(x.replications as f64)),
-        ("seed", Json::Num(x.seed as f64)),
+        ("replications", Json::Uint(x.replications as u64)),
+        ("seed", Json::Uint(x.seed)),
         ("arrival_jitter_s", Json::Num(x.arrival_jitter_s)),
         ("contention_beta", Json::Num(x.contention_beta)),
-        ("epochs_light", Json::Num(x.epochs_light as f64)),
-        ("epochs_medium", Json::Num(x.epochs_medium as f64)),
-        ("epochs_complex", Json::Num(x.epochs_complex as f64)),
+        ("epochs_light", Json::Uint(x.epochs_light as u64)),
+        ("epochs_medium", Json::Uint(x.epochs_medium as u64)),
+        ("epochs_complex", Json::Uint(x.epochs_complex as u64)),
     ])
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::DispatchKind;
 
     #[test]
     fn custom_pools_parse() {
@@ -534,6 +705,118 @@ mod tests {
         cfg.validate().unwrap();
         let s = cfg.carbon.signal(&cfg.energy);
         assert_eq!(s.constant_value(), Some(360.0 / super::super::J_PER_KWH));
+    }
+
+    #[test]
+    fn federation_section_parses_and_roundtrips() {
+        let text = r#"{"federation": {
+            "dispatch": "carbon-greedy",
+            "regions": [
+                {"name": "us-east",
+                 "carbon": {"mode": "diurnal", "base_g_per_kwh": 373.4,
+                            "period_s": 86400, "samples": 24}},
+                {"name": "eu-west",
+                 "cluster": {"pools": [
+                     {"category": "A", "count": 4, "cpu_millis": 2000,
+                      "memory_mib": 4096, "speed_factor": 0.7,
+                      "power_scale": 0.45}]},
+                 "autoscaler": {"scale_out_pending": 2,
+                                "scale_out_wait_p95_s": 12.5,
+                                "max_extra_nodes": 2,
+                                "window": {"percentile": 0.5,
+                                           "idle_tighten": 0.25,
+                                           "defer_scale_out_s": 10}}}
+            ]}}"#;
+        let cfg = config_from_json(text).unwrap();
+        cfg.validate().unwrap();
+        let fed = cfg.federation.as_ref().unwrap();
+        assert_eq!(fed.dispatch, DispatchKind::CarbonGreedy);
+        assert_eq!(fed.regions.len(), 2);
+        assert_eq!(fed.regions[0].name, "us-east");
+        // Absent sections keep the paper defaults.
+        assert_eq!(fed.regions[0].cluster.total_nodes(), 7);
+        assert!(fed.regions[0].autoscaler.is_none());
+        assert_eq!(fed.regions[1].cluster.total_nodes(), 4);
+        let a = fed.regions[1].autoscaler.as_ref().unwrap();
+        assert_eq!(a.scale_out_pending, 2);
+        assert_eq!(a.scale_out_wait_p95_s, 12.5);
+        assert_eq!(a.max_extra_nodes, 2);
+        assert_eq!(a.window.as_ref().unwrap().percentile, 0.5);
+        // Dump → parse is the identity on the federation section.
+        let back = config_from_json(&config_to_json(&cfg).pretty()).unwrap();
+        assert_eq!(cfg.federation, back.federation);
+        // Absent section stays absent (and absent from the dump).
+        let plain = config_from_json("{}").unwrap();
+        assert!(plain.federation.is_none());
+        assert!(!config_to_json(&plain).pretty().contains("federation"));
+    }
+
+    #[test]
+    fn federation_disabled_wait_trigger_roundtrips_by_omission() {
+        // No `scale_out_wait_p95_s` key = the INFINITY sentinel; the
+        // dump omits non-finite values, so the identity holds.
+        let text = r#"{"federation": {"regions": [
+            {"name": "solo", "autoscaler": {}}]}}"#;
+        let cfg = config_from_json(text).unwrap();
+        cfg.validate().unwrap();
+        let a = cfg.federation.as_ref().unwrap().regions[0]
+            .autoscaler
+            .as_ref()
+            .unwrap();
+        assert!(a.scale_out_wait_p95_s.is_infinite());
+        let dumped = config_to_json(&cfg).pretty();
+        assert!(!dumped.contains("scale_out_wait_p95_s"), "{dumped}");
+        let back = config_from_json(&dumped).unwrap();
+        assert_eq!(cfg.federation, back.federation);
+    }
+
+    #[test]
+    fn federation_bad_sections_rejected() {
+        // Unknown dispatch policy fails at parse time.
+        assert!(config_from_json(
+            r#"{"federation": {"dispatch": "telepathy",
+                 "regions": [{"name": "x"}]}}"#
+        )
+        .is_err());
+        // A wrong-typed dispatch value errors rather than silently
+        // falling back to round-robin.
+        assert!(config_from_json(
+            r#"{"federation": {"dispatch": 5,
+                 "regions": [{"name": "x"}]}}"#
+        )
+        .is_err());
+        // Missing regions array fails at parse time.
+        assert!(config_from_json(r#"{"federation": {}}"#).is_err());
+        // Duplicate names parse but fail validation.
+        let dup = config_from_json(
+            r#"{"federation": {"regions":
+                 [{"name": "a"}, {"name": "a"}]}}"#,
+        )
+        .unwrap();
+        assert!(dup.validate().is_err());
+        // Non-object sub-sections error instead of silently falling
+        // back to defaults (constant signal, paper cluster, default
+        // autoscaler knobs).
+        for bad in [
+            r#"{"federation": {"regions":
+                 [{"name": "a", "autoscaler": 5}]}}"#,
+            r#"{"federation": {"regions":
+                 [{"name": "a", "autoscaler": {"window": "p50"}}]}}"#,
+            r#"{"federation": {"regions":
+                 [{"name": "a", "carbon": "diurnal"}]}}"#,
+            r#"{"federation": {"regions":
+                 [{"name": "a", "cluster": 17}]}}"#,
+        ] {
+            assert!(config_from_json(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn seeds_above_2_pow_53_roundtrip_losslessly() {
+        let mut cfg = crate::config::Config::paper_default();
+        cfg.experiment.seed = (1u64 << 53) + 1;
+        let back = config_from_json(&config_to_json(&cfg).pretty()).unwrap();
+        assert_eq!(back.experiment.seed, cfg.experiment.seed);
     }
 
     #[test]

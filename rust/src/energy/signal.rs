@@ -280,17 +280,15 @@ impl CarbonSignal {
             .find(|&t| (self.at(t) > threshold) != dirty_now)
     }
 
-    /// Intensity at quantile `q` of the sample values (nearest-rank,
-    /// round-half-away indexing — the same percentile convention as
-    /// `metrics::Summary`). The autoscaler's carbon windows derive
-    /// their "dirty" threshold from this.
+    /// Intensity at quantile `q` of the sample values — the shared
+    /// nearest-rank convention of `util::stats`, so this, `metrics::
+    /// Summary` and the autoscaler's wait-p95 trigger agree on what a
+    /// percentile means by construction. The autoscaler's carbon
+    /// windows derive their "dirty" threshold from this.
     pub fn percentile(&self, q: f64) -> f64 {
-        let mut vals: Vec<f64> =
-            self.points.iter().map(|&(_, v)| v).collect();
-        vals.sort_by(f64::total_cmp);
-        let x = (vals.len() - 1) as f64 * q.clamp(0.0, 1.0);
-        let idx = ((x + 0.5).floor() as usize).min(vals.len() - 1);
-        vals[idx]
+        let vals: Vec<f64> = self.points.iter().map(|&(_, v)| v).collect();
+        crate::util::stats::nearest_rank(&vals, q)
+            .expect("carbon signal is non-empty by construction")
     }
 }
 

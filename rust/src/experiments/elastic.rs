@@ -292,13 +292,7 @@ fn run_scenario_cell(
             ));
         }
     }
-    let config = Config {
-        cluster,
-        energy: base.energy.clone(),
-        experiment: base.experiment.clone(),
-        carbon: base.carbon.clone(),
-        profiles: base.profiles.clone(),
-    };
+    let config = Config { cluster, ..base.clone() };
 
     let executor = WorkloadExecutor::analytic();
     let engine = SimulationEngine::new(&config, params, &executor);

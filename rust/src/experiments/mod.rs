@@ -5,6 +5,7 @@ mod ablation;
 mod alloc;
 mod carbon;
 mod elastic;
+mod federation;
 mod fig2;
 mod profiles;
 mod runner;
@@ -21,6 +22,10 @@ pub use elastic::{
     churn_schedule, elastic_policy, run_elastic, ClusterMode, ElasticCell,
     ElasticProcess, ElasticityReport, BILLING_HORIZON_S, EXTRA_NODES,
     SLO_WAIT_S,
+};
+pub use federation::{
+    phase_shifted_diurnal, run_federation, FederationCell,
+    FederationReport, FED_REGION_NAMES, FED_SAMPLES, FED_SWING,
 };
 pub use fig2::render_fig2;
 pub use profiles::{run_profiles, ProfileCell, ProfilesReport};

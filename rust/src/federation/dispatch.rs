@@ -1,0 +1,341 @@
+//! The federation's dispatch extension point: route each arriving pod
+//! to a region, *before* the region's own scheduling profile places it
+//! on a node.
+//!
+//! A [`Dispatcher`] is consulted exactly once per pod, at the pod's
+//! arrival event, with a read-only [`RegionSnapshot`] of every
+//! region's live state; the decision is final (no re-dispatch — a pod
+//! that cannot be placed waits in its region's pending queue). All
+//! three shipped policies are deterministic: ties resolve to the
+//! lowest region index, so a run is a pure function of the trace and
+//! the seeds.
+
+use crate::cluster::{ClusterState, Pod};
+use crate::config::DispatchKind;
+use crate::energy::CarbonSignal;
+
+/// Read-only view of one region at a dispatch decision.
+pub struct RegionSnapshot<'a> {
+    /// Region index (the dispatcher's return vocabulary).
+    pub index: usize,
+    pub name: &'a str,
+    /// Live cluster state (readiness, per-node allocation).
+    pub state: &'a ClusterState,
+    /// Pods dispatched to the region and not yet bound.
+    pub pending_pods: usize,
+    /// Σ CPU requests of those pending pods (millicores).
+    pub pending_cpu_millis: u64,
+    /// Σ memory requests of those pending pods (MiB).
+    pub pending_memory_mib: u64,
+    /// Pods currently executing in the region.
+    pub running_pods: usize,
+    /// The region's grid carbon-intensity signal.
+    pub carbon: &'a CarbonSignal,
+}
+
+impl RegionSnapshot<'_> {
+    /// Whether the region still has headroom for `pod`: aggregate free
+    /// CPU and memory across Ready nodes, minus what the region's
+    /// already-dispatched pending pods will claim, covers the pod's
+    /// requests. Aggregate headroom is a deliberate over-approximation
+    /// of per-node bin-packing — a dispatch heuristic, not a placement
+    /// guarantee (an unplaceable pod simply waits in the region
+    /// queue). Integer arithmetic keeps it exactly mirrorable by the
+    /// Python oracle.
+    pub fn has_capacity(&self, pod: &Pod) -> bool {
+        let mut free_cpu = 0u64;
+        let mut free_mem = 0u64;
+        for id in 0..self.state.nodes().len() {
+            if self.state.node(id).ready {
+                free_cpu += self.state.free_cpu(id);
+                free_mem += self.state.free_memory(id);
+            }
+        }
+        free_cpu >= self.pending_cpu_millis + pod.requests.cpu_millis
+            && free_mem >= self.pending_memory_mib + pod.requests.memory_mib
+    }
+
+    /// The region's grid intensity at virtual time `now_s` (gCO₂/J).
+    pub fn intensity_at(&self, now_s: f64) -> f64 {
+        self.carbon.at(now_s)
+    }
+}
+
+/// The dispatch extension point.
+pub trait Dispatcher {
+    /// Policy name, for tables and JSONL attribution.
+    fn name(&self) -> &'static str;
+
+    /// Route an arriving pod: returns the index of the chosen region
+    /// (must be `< regions.len()`; the engine asserts it).
+    fn dispatch(
+        &mut self,
+        now_s: f64,
+        pod: &Pod,
+        regions: &[RegionSnapshot],
+    ) -> usize;
+}
+
+/// Cycle through regions in index order, blind to state — the
+/// baseline every smarter policy is measured against.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Dispatcher for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn dispatch(
+        &mut self,
+        _now_s: f64,
+        _pod: &Pod,
+        regions: &[RegionSnapshot],
+    ) -> usize {
+        let r = self.next % regions.len();
+        self.next += 1;
+        r
+    }
+}
+
+/// The region with the fewest pending (dispatched, unplaced) pods —
+/// join-shortest-queue over dispatch backlog; lowest index on ties.
+#[derive(Debug, Default)]
+pub struct LeastPending;
+
+impl LeastPending {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Dispatcher for LeastPending {
+    fn name(&self) -> &'static str {
+        "least-pending"
+    }
+
+    fn dispatch(
+        &mut self,
+        _now_s: f64,
+        _pod: &Pod,
+        regions: &[RegionSnapshot],
+    ) -> usize {
+        least_pending_index(regions)
+    }
+}
+
+/// Lowest-index region with the minimal pending count (strict `<`
+/// keeps the first minimum — the tie-break every policy shares).
+fn least_pending_index(regions: &[RegionSnapshot]) -> usize {
+    let mut best = 0;
+    for i in 1..regions.len() {
+        if regions[i].pending_pods < regions[best].pending_pods {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Price each region at `signal.at(now)` and send the pod to the
+/// currently **cleanest region with capacity** (strictly lower
+/// intensity wins; lowest index on ties). When no region has headroom
+/// the pod must queue somewhere — it falls back to the least-pending
+/// region, spreading backlog instead of piling it onto the clean
+/// region's queue.
+#[derive(Debug, Default)]
+pub struct CarbonGreedy;
+
+impl CarbonGreedy {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Dispatcher for CarbonGreedy {
+    fn name(&self) -> &'static str {
+        "carbon-greedy"
+    }
+
+    fn dispatch(
+        &mut self,
+        now_s: f64,
+        pod: &Pod,
+        regions: &[RegionSnapshot],
+    ) -> usize {
+        let mut best: Option<(usize, f64)> = None;
+        for r in regions {
+            if !r.has_capacity(pod) {
+                continue;
+            }
+            let g = r.intensity_at(now_s);
+            match best {
+                Some((_, bg)) if g >= bg => {}
+                _ => best = Some((r.index, g)),
+            }
+        }
+        match best {
+            Some((i, _)) => i,
+            None => least_pending_index(regions),
+        }
+    }
+}
+
+/// Materialize a config-file dispatch policy.
+pub fn build_dispatcher(kind: DispatchKind) -> Box<dyn Dispatcher> {
+    match kind {
+        DispatchKind::RoundRobin => Box::new(RoundRobin::new()),
+        DispatchKind::LeastPending => Box::new(LeastPending::new()),
+        DispatchKind::CarbonGreedy => Box::new(CarbonGreedy::new()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, SchedulerKind};
+    use crate::workload::WorkloadClass;
+
+    fn pod(class: WorkloadClass) -> Pod {
+        Pod::new(0, class, SchedulerKind::Topsis, 0.0, 1)
+    }
+
+    /// Two paper clusters with distinct constant signals and
+    /// configurable pending backlog.
+    fn states() -> (ClusterState, ClusterState) {
+        let cfg = ClusterConfig::paper_default();
+        (ClusterState::from_config(&cfg), ClusterState::from_config(&cfg))
+    }
+
+    fn snaps<'a>(
+        a: &'a ClusterState,
+        b: &'a ClusterState,
+        pending: [usize; 2],
+        pending_cpu: [u64; 2],
+        carbon: &'a [CarbonSignal; 2],
+    ) -> [RegionSnapshot<'a>; 2] {
+        [
+            RegionSnapshot {
+                index: 0,
+                name: "a",
+                state: a,
+                pending_pods: pending[0],
+                pending_cpu_millis: pending_cpu[0],
+                pending_memory_mib: 0,
+                running_pods: 0,
+                carbon: &carbon[0],
+            },
+            RegionSnapshot {
+                index: 1,
+                name: "b",
+                state: b,
+                pending_pods: pending[1],
+                pending_cpu_millis: pending_cpu[1],
+                pending_memory_mib: 0,
+                running_pods: 0,
+                carbon: &carbon[1],
+            },
+        ]
+    }
+
+    #[test]
+    fn round_robin_cycles_regions() {
+        let (a, b) = states();
+        let sig = [CarbonSignal::constant(1.0), CarbonSignal::constant(1.0)];
+        let s = snaps(&a, &b, [0, 0], [0, 0], &sig);
+        let mut rr = RoundRobin::new();
+        let order: Vec<usize> = (0..5)
+            .map(|_| rr.dispatch(0.0, &pod(WorkloadClass::Light), &s))
+            .collect();
+        assert_eq!(order, vec![0, 1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn least_pending_picks_shortest_queue_lowest_index_on_ties() {
+        let (a, b) = states();
+        let sig = [CarbonSignal::constant(1.0), CarbonSignal::constant(1.0)];
+        let mut lp = LeastPending::new();
+        let s = snaps(&a, &b, [3, 1], [0, 0], &sig);
+        assert_eq!(lp.dispatch(0.0, &pod(WorkloadClass::Light), &s), 1);
+        let s = snaps(&a, &b, [2, 2], [0, 0], &sig);
+        assert_eq!(lp.dispatch(0.0, &pod(WorkloadClass::Light), &s), 0);
+    }
+
+    #[test]
+    fn carbon_greedy_prefers_cleanest_region_with_capacity() {
+        let (a, b) = states();
+        // Region 1 is cleaner.
+        let sig = [CarbonSignal::constant(3.0), CarbonSignal::constant(1.0)];
+        let mut cg = CarbonGreedy::new();
+        let s = snaps(&a, &b, [0, 0], [0, 0], &sig);
+        assert_eq!(cg.dispatch(0.0, &pod(WorkloadClass::Complex), &s), 1);
+        // Clean region full (pending claims its whole CPU pool):
+        // fall through to the dirty one.
+        let full = a.nodes().iter().map(|n| n.cpu_millis).sum::<u64>();
+        let s = snaps(&a, &b, [0, 16], [0, full], &sig);
+        assert_eq!(cg.dispatch(0.0, &pod(WorkloadClass::Complex), &s), 0);
+        // Every region full: least-pending fallback.
+        let s = snaps(&a, &b, [9, 16], [full, full], &sig);
+        assert_eq!(cg.dispatch(0.0, &pod(WorkloadClass::Complex), &s), 0);
+        // Equal intensity: lowest index wins.
+        let sig = [CarbonSignal::constant(2.0), CarbonSignal::constant(2.0)];
+        let s = snaps(&a, &b, [0, 0], [0, 0], &sig);
+        assert_eq!(cg.dispatch(0.0, &pod(WorkloadClass::Light), &s), 0);
+    }
+
+    #[test]
+    fn capacity_heuristic_counts_pending_and_readiness() {
+        let cfg = ClusterConfig::paper_default();
+        let mut state = ClusterState::from_config(&cfg);
+        let sig = CarbonSignal::constant(1.0);
+        let complex = pod(WorkloadClass::Complex);
+        let mut snap = RegionSnapshot {
+            index: 0,
+            name: "a",
+            state: &state,
+            pending_pods: 0,
+            pending_cpu_millis: 0,
+            pending_memory_mib: 0,
+            running_pods: 0,
+            carbon: &sig,
+        };
+        assert!(snap.has_capacity(&complex));
+        // Pending claims eat the headroom.
+        let total = state.nodes().iter().map(|n| n.cpu_millis).sum::<u64>();
+        snap.pending_cpu_millis = total;
+        assert!(!snap.has_capacity(&complex));
+        snap.pending_cpu_millis = total - complex.requests.cpu_millis;
+        assert!(snap.has_capacity(&complex));
+        // NotReady nodes do not count toward headroom.
+        drop(snap);
+        for id in 0..state.nodes().len() {
+            state.set_ready(id, false, 0.0);
+        }
+        let snap = RegionSnapshot {
+            index: 0,
+            name: "a",
+            state: &state,
+            pending_pods: 0,
+            pending_cpu_millis: 0,
+            pending_memory_mib: 0,
+            running_pods: 0,
+            carbon: &sig,
+        };
+        assert!(!snap.has_capacity(&complex));
+    }
+
+    #[test]
+    fn config_kinds_build_their_dispatchers() {
+        for kind in DispatchKind::ALL {
+            let d = build_dispatcher(kind);
+            assert_eq!(d.name(), kind.label());
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Multi-cluster federation (DESIGN.md §"Federation"): N per-region
+//! event kernels — each with its own `ClusterState`, `EnergyMeter`,
+//! regional `CarbonSignal` and optional `ThresholdAutoscaler` — run
+//! under **one shared virtual clock** with a merged `(time,
+//! kind-priority, seq)` event order, plus a [`Dispatcher`] extension
+//! point that routes each arriving pod to a region *before* the
+//! region's own scheduling profile places it on a node.
+//!
+//! This is the ROADMAP's "async multi-cluster" item and the paper's
+//! §V.E extrapolation made a real simulated federation: the related
+//! work's observation (CODECO, arXiv:2606.12136) that greenness-driven
+//! scheduling only pays off when the dispatcher can choose *between*
+//! sites is exactly what the [`CarbonGreedy`] policy exercises against
+//! phase-shifted per-region grid signals.
+//!
+//! Determinism and differential contracts:
+//! * the merged queue is [`crate::simulation::FedEventQueue`] — the
+//!   kernel's total order with a region tag that never participates in
+//!   the comparison;
+//! * a **1-region federation is record-for-record bit-identical to the
+//!   plain [`SimulationEngine`] run** (same placements, times, joules,
+//!   grams, events, scaling, node timeline) — the engine mirrors
+//!   `SimulationEngine::run` operation-for-operation, and the property
+//!   suite pins it (`prop_federation_single_region_bit_identical...`);
+//! * per-region CO₂ ledgers integrate each region's signal exactly as
+//!   the single-cluster meter does, so the federation golden fixture
+//!   (`golden_trace_federation.expected.json`) cross-validates against
+//!   the Python oracle to 1e-9.
+//!
+//! [`SimulationEngine`]: crate::simulation::SimulationEngine
+
+mod dispatch;
+mod engine;
+mod result;
+
+pub use dispatch::{
+    build_dispatcher, CarbonGreedy, Dispatcher, LeastPending,
+    RegionSnapshot, RoundRobin,
+};
+pub use engine::{
+    FederationEngine, FederationParams, RegionSchedulers, RegionSpec,
+};
+pub use result::{FederationResult, RegionAssignment, RegionResult};

@@ -1,0 +1,130 @@
+//! Aggregated federation results: one [`RunResult`] per region plus
+//! the dispatch assignment log, with federation-wide roll-ups (total
+//! joules/gCO₂, queue-wait stats, scaling counts) the experiment
+//! drivers and the JSONL event stream read.
+
+use crate::api::ApiEvent;
+use crate::cluster::PodId;
+use crate::config::SchedulerKind;
+use crate::metrics::Summary;
+use crate::simulation::RunResult;
+
+/// One dispatch decision: pod → region, at the pod's arrival time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionAssignment {
+    pub pod: PodId,
+    /// Index into [`FederationResult::regions`].
+    pub region: usize,
+    pub at_s: f64,
+}
+
+/// One region's outcome: its name and its own complete [`RunResult`]
+/// (records, meter/CO₂ ledger, events, scaling, node timeline).
+#[derive(Debug)]
+pub struct RegionResult {
+    pub name: String,
+    pub run: RunResult,
+}
+
+/// The outcome of one federated run.
+#[derive(Debug)]
+pub struct FederationResult {
+    /// Per-region results, in region order.
+    pub regions: Vec<RegionResult>,
+    /// Dispatch log, in arrival order (every admitted pod exactly
+    /// once — the conservation property pins this).
+    pub assignments: Vec<RegionAssignment>,
+}
+
+impl FederationResult {
+    /// Look up one region by name (panics if absent).
+    pub fn region(&self, name: &str) -> &RegionResult {
+        self.regions
+            .iter()
+            .find(|r| r.name == name)
+            .expect("region in federation")
+    }
+
+    /// Completed pods across all regions.
+    pub fn completed(&self) -> usize {
+        self.regions.iter().map(|r| r.run.records.len()).sum()
+    }
+
+    /// Unschedulable pods across all regions.
+    pub fn unschedulable(&self) -> usize {
+        self.regions.iter().map(|r| r.run.unschedulable.len()).sum()
+    }
+
+    /// Pod-attributed energy (kJ) for `kind`, summed over regions.
+    pub fn total_kj(&self, kind: SchedulerKind) -> f64 {
+        self.regions.iter().map(|r| r.run.meter.total_kj(kind)).sum()
+    }
+
+    /// Unattributed node-idle energy (kJ), summed over regions.
+    pub fn idle_kj(&self) -> f64 {
+        self.regions.iter().map(|r| r.run.idle_kj()).sum()
+    }
+
+    /// Pod-attributed CO₂ (grams, each region's ledger integrated
+    /// against its own signal), summed over regions.
+    pub fn pod_co2_g(&self, kind: SchedulerKind) -> f64 {
+        self.regions
+            .iter()
+            .map(|r| r.run.meter.total_co2_g(kind))
+            .sum()
+    }
+
+    /// Idle-floor CO₂ (grams), summed over regions.
+    pub fn idle_co2_g(&self) -> f64 {
+        self.regions.iter().map(|r| r.run.meter.idle_co2_g()).sum()
+    }
+
+    /// pod + idle grams — the comparable federation-wide CO₂ total.
+    pub fn total_co2_g(&self, kind: SchedulerKind) -> f64 {
+        self.pod_co2_g(kind) + self.idle_co2_g()
+    }
+
+    /// Queue-wait distribution for `kind` across every region's
+    /// completed pods.
+    pub fn queue_wait_summary(&self, kind: SchedulerKind) -> Summary {
+        let waits: Vec<f64> = self
+            .regions
+            .iter()
+            .flat_map(|r| {
+                r.run
+                    .records
+                    .iter()
+                    .filter(|rec| rec.scheduler == kind)
+                    .map(|rec| rec.wait_s)
+            })
+            .collect();
+        Summary::of(&waits)
+    }
+
+    /// Scaling actions of one kind across all regions.
+    pub fn scaling_count(&self, kind: &str) -> usize {
+        self.regions.iter().map(|r| r.run.scaling_count(kind)).sum()
+    }
+
+    /// Latest completion across regions.
+    pub fn makespan_s(&self) -> f64 {
+        self.regions
+            .iter()
+            .map(|r| r.run.makespan_s)
+            .fold(0.0, f64::max)
+    }
+
+    /// The dispatch log as JSONL-ready [`ApiEvent::Dispatched`] events
+    /// (region indexes resolved to names) — what `greenpod experiment
+    /// federation --events` streams.
+    pub fn dispatched_events(&self) -> Vec<ApiEvent> {
+        self.assignments
+            .iter()
+            .map(|a| ApiEvent::Dispatched {
+                pod: a.pod,
+                region: self.regions[a.region].name.clone(),
+                at_s: a.at_s,
+            })
+            .collect()
+    }
+}

@@ -30,6 +30,10 @@
 //!   a CPU-contention model.
 //! * [`autoscaler`] — queue-driven cluster autoscaling policies that
 //!   grow/shrink the simulated cluster through the event kernel.
+//! * [`federation`] — multi-cluster federation: N per-region event
+//!   kernels under one shared virtual clock, a pluggable dispatcher
+//!   routing arriving pods between regions, and per-region carbon
+//!   signals/ledgers.
 //! * [`metrics`] — Table IV metrics collection and paper-style reports.
 //! * [`experiments`] — drivers regenerating every table and figure of the
 //!   paper's evaluation (Table VI, Fig 2, Table VII, §V.D, ablations).
@@ -42,6 +46,7 @@ pub mod util;
 pub mod config;
 pub mod energy;
 pub mod experiments;
+pub mod federation;
 pub mod framework;
 pub mod mcda;
 pub mod metrics;

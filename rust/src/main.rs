@@ -10,6 +10,7 @@
 //! greenpod experiment elastic [--csv] [--events]  # churn/autoscaler scenarios
 //! greenpod experiment profiles [--csv]            # profile comparison grid
 //! greenpod experiment carbon [--csv]              # carbon-signal × window grid
+//! greenpod experiment federation [--csv] [--events] # multi-cluster dispatch grid
 //! greenpod experiment all                         # everything above
 //! greenpod bench sched                            # scheduling microbenchmark
 //! greenpod calibrate [--reps 4]                   # PJRT epoch timings
@@ -37,8 +38,8 @@ use greenpod::config::{
 };
 use greenpod::experiments::{
     render_fig2, run_ablation, run_alloc_analysis, run_carbon, run_elastic,
-    run_profiles, run_table6, run_table7, ClusterMode, ElasticProcess,
-    ExperimentContext,
+    run_federation, run_profiles, run_table6, run_table7, ClusterMode,
+    ElasticProcess, ExperimentContext,
 };
 use greenpod::framework::{BuildOptions, ProfileRegistry};
 use greenpod::metrics::{format_table, format_timeline};
@@ -69,6 +70,7 @@ usage:
   greenpod experiment elastic [--csv] [--events]
   greenpod experiment profiles [--csv]
   greenpod experiment carbon [--csv]
+  greenpod experiment federation [--csv] [--events]
   greenpod experiment all
   greenpod bench sched
   greenpod calibrate [--reps N]
@@ -281,6 +283,22 @@ fn run_experiment(cfg: &Config, args: &Args) -> Result<()> {
                 println!("\nCSV:\n{}", report.to_table().to_csv());
             }
         }
+        "federation" => {
+            let ctx = make_context(cfg, false)?;
+            let report = run_federation(&ctx)?;
+            println!("{}", format_table(&report.to_table()));
+            if args.flag("csv") {
+                println!("\nCSV:\n{}", report.to_table().to_csv());
+            }
+            if args.flag("events") {
+                // The headline cell's dispatch log (max regions,
+                // carbon-greedy, greenpod): one JSONL line per pod,
+                // `region` field attributing it to its cluster.
+                for ev in &report.headline_dispatches {
+                    println!("{}", ev.to_json().to_string());
+                }
+            }
+        }
         "all" => {
             let ctx = make_context(cfg, false)?;
             let t6 = run_table6(&ctx);
@@ -306,6 +324,9 @@ fn run_experiment(cfg: &Config, args: &Args) -> Result<()> {
             println!();
             let carbon = run_carbon(&ctx)?;
             println!("{}", format_table(&carbon.to_table()));
+            println!();
+            let federation = run_federation(&ctx)?;
+            println!("{}", format_table(&federation.to_table()));
         }
         other => bail!("unknown experiment `{other}`\n\n{USAGE}"),
     }
@@ -367,7 +388,7 @@ fn bench_sched(cfg: &Config) -> Result<()> {
                 ("std_s", Json::Num(r.summary.std)),
                 ("p50_s", Json::Num(r.summary.p50)),
                 ("p95_s", Json::Num(r.summary.p95)),
-                ("iters", Json::Num(r.iters as f64)),
+                ("iters", Json::Uint(r.iters as u64)),
             ])
         })
         .collect();

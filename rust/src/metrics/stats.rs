@@ -1,5 +1,6 @@
 //! Summary statistics over metric samples.
 
+use crate::util::stats::nearest_rank_index;
 
 /// Mean / spread / percentiles of a sample set.
 #[derive(Debug, Clone, PartialEq)]
@@ -26,10 +27,11 @@ impl Summary {
             / n as f64;
         let mut sorted = samples.to_vec();
         sorted.sort_by(|a, b| a.total_cmp(b));
-        let pct = |p: f64| {
-            let idx = ((n as f64 - 1.0) * p).round() as usize;
-            sorted[idx.min(n - 1)]
-        };
+        // Percentiles resolve through the one shared nearest-rank
+        // helper (util::stats) — the autoscaler's wait-p95 trigger and
+        // the carbon signal's quantile use the same function, so
+        // "p95" means one thing everywhere.
+        let pct = |p: f64| sorted[nearest_rank_index(n, p)];
         Self {
             n,
             mean,

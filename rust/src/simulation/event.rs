@@ -169,6 +169,77 @@ impl EventQueue {
     }
 }
 
+/// A region-tagged scheduled event — the merged total order of the
+/// multi-cluster federation (`crate::federation`). Ordering is exactly
+/// [`ScheduledEvent`]'s `(time, kind-priority, seq)`; the region tag
+/// only routes the popped event to its cluster's state and never
+/// participates in the comparison, so a 1-region federation pops in
+/// bit-identical order to a plain [`EventQueue`] fed the same pushes
+/// (the differential property in `rust/tests/properties.rs` pins the
+/// whole-engine consequence of this).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FedScheduledEvent {
+    pub at: f64,
+    pub seq: u64,
+    /// Index of the owning cluster (meaningless for `PodArrival`,
+    /// whose region the dispatcher resolves at pop time).
+    pub region: usize,
+    pub event: SimEvent,
+}
+
+impl FedScheduledEvent {
+    /// The untagged kernel event — ordering delegates to this, so the
+    /// two queues share one comparator by construction.
+    fn untagged(&self) -> ScheduledEvent {
+        ScheduledEvent { at: self.at, seq: self.seq, event: self.event }
+    }
+}
+
+impl Eq for FedScheduledEvent {}
+
+impl Ord for FedScheduledEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.untagged().cmp(&other.untagged())
+    }
+}
+
+impl PartialOrd for FedScheduledEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic min-queue of [`FedScheduledEvent`]s: one shared
+/// virtual-time order interleaving every cluster's kernel events.
+#[derive(Debug, Default)]
+pub struct FedEventQueue {
+    heap: BinaryHeap<Reverse<FedScheduledEvent>>,
+    seq: u64,
+}
+
+impl FedEventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue `event` for `region` at time `at`; kind priority then
+    /// insertion order break ties, across all regions.
+    pub fn push(&mut self, at: f64, region: usize, event: SimEvent) {
+        self.heap.push(Reverse(FedScheduledEvent {
+            at,
+            seq: self.seq,
+            region,
+            event,
+        }));
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event (lowest `(at, priority, seq)`).
+    pub fn pop(&mut self) -> Option<FedScheduledEvent> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -279,6 +350,62 @@ mod tests {
         q.push(9.0, SimEvent::NodeFailed { node: 2 });
         assert_eq!(q.pop().unwrap().event, SimEvent::NodeFailed { node: 2 });
         assert_eq!(q.pop().unwrap().event, SimEvent::NodeJoined { node: 2 });
+    }
+
+    #[test]
+    fn fed_queue_orders_across_regions_like_one_kernel() {
+        // Region tags never perturb the (time, priority, seq) order:
+        // a same-instant completion in region 1 still precedes a
+        // scheduling cycle in region 0, and equal-kind ties stay FIFO
+        // across regions.
+        let mut q = FedEventQueue::new();
+        q.push(1.0, 0, SimEvent::SchedulingCycle);
+        q.push(1.0, 1, SimEvent::PodCompleted { pod: 9 });
+        q.push(1.0, 2, SimEvent::PodArrival { pod: 0 });
+        q.push(1.0, 0, SimEvent::PodArrival { pod: 1 });
+        let order: Vec<(usize, &'static str)> =
+            std::iter::from_fn(|| q.pop().map(|e| (e.region, e.event.kind())))
+                .collect();
+        assert_eq!(
+            order,
+            vec![
+                (2, "pod-arrival"),
+                (0, "pod-arrival"),
+                (1, "pod-completed"),
+                (0, "scheduling-cycle"),
+            ]
+        );
+    }
+
+    #[test]
+    fn fed_queue_single_region_matches_plain_queue_order() {
+        // The degenerate federation: identical pushes into both queues
+        // must pop in identical order — the kernel-level half of the
+        // 1-region bit-identity differential.
+        let pushes = [
+            (2.0, SimEvent::PodArrival { pod: 0 }),
+            (1.0, SimEvent::SchedulingCycle),
+            (1.0, SimEvent::PodCompleted { pod: 3 }),
+            (2.0, SimEvent::NodeFailed { node: 1 }),
+            (1.0, SimEvent::AutoscaleTick),
+        ];
+        let mut plain = EventQueue::new();
+        let mut fed = FedEventQueue::new();
+        for &(at, ev) in &pushes {
+            plain.push(at, ev);
+            fed.push(at, 0, ev);
+        }
+        loop {
+            match (plain.pop(), fed.pop()) {
+                (None, None) => break,
+                (Some(p), Some(f)) => {
+                    assert_eq!(p.at, f.at);
+                    assert_eq!(p.seq, f.seq);
+                    assert_eq!(p.event, f.event);
+                }
+                other => panic!("queue lengths diverged: {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -13,7 +13,10 @@ mod results;
 
 pub use contention::contention_factor;
 pub use engine::{NodeChange, SimulationEngine, SimulationParams};
-pub use event::{EventQueue, ScheduledEvent, SimEvent, VirtualClock};
+pub use event::{
+    EventQueue, FedEventQueue, FedScheduledEvent, ScheduledEvent, SimEvent,
+    VirtualClock,
+};
 pub use results::{
     EventRecord, NodeCountSample, PodRecord, RunResult, ScalingRecord,
 };

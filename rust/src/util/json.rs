@@ -12,11 +12,26 @@ use anyhow::{anyhow, bail, Result};
 
 /// A JSON value. Objects are ordered (BTreeMap) so emission is
 /// deterministic.
+///
+/// Integers have a dedicated lossless variant: [`Json::Uint`] holds a
+/// `u64` exactly, where routing an id through [`Json::Num`]'s `f64`
+/// would silently corrupt values at or above 2⁵³ (the JSONL event
+/// stream carries `u64` pod ids — regression-tested in `api`). The
+/// parser produces `Uint` for any unsigned integer literal without a
+/// fraction or exponent, so round-trips preserve every digit.
+///
+/// Caveat: the derived equality is structural — `Num(7.0) != Uint(7)`
+/// even though both emit `7`. Compare parsed trees to parsed trees
+/// (or go through the [`Json::as_f64`]/[`Json::as_u64`] accessors,
+/// which handle both variants); emitters that want value-level
+/// dump → parse identity use `Uint` for integer fields.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    /// A non-negative integer, kept exact (no f64 round-trip).
+    Uint(u64),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
@@ -25,21 +40,31 @@ pub enum Json {
 impl Json {
     // ------------------------------------------------------ accessors
 
+    /// Numeric view. `Uint` converts (rounding above 2⁵³, as any f64
+    /// consumer must accept); use [`Json::as_u64`] where exactness
+    /// matters.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
+            Json::Uint(x) => Some(*x as f64),
             _ => None,
         }
     }
 
+    /// Exact integer view: `Uint` verbatim; `Num` only when it holds a
+    /// representable non-negative integer.
     pub fn as_u64(&self) -> Option<u64> {
-        self.as_f64().and_then(|x| {
-            if x >= 0.0 && x.fract() == 0.0 && x <= u64::MAX as f64 {
-                Some(x as u64)
-            } else {
-                None
+        match self {
+            Json::Uint(x) => Some(*x),
+            Json::Num(x)
+                if *x >= 0.0
+                    && x.fract() == 0.0
+                    && *x <= u64::MAX as f64 =>
+            {
+                Some(*x as u64)
             }
-        })
+            _ => None,
+        }
     }
 
     pub fn as_usize(&self) -> Option<usize> {
@@ -140,6 +165,9 @@ impl Json {
                 } else {
                     let _ = write!(out, "{x}");
                 }
+            }
+            Json::Uint(x) => {
+                let _ = write!(out, "{x}");
             }
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(a) => {
@@ -283,6 +311,16 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let text = std::str::from_utf8(&self.b[start..self.i])?;
+        // Unsigned integer literals stay exact (ids above 2⁵³ would be
+        // corrupted by an f64 round-trip); anything fractional,
+        // exponential, negative or beyond u64 takes the f64 path.
+        if !text.starts_with('-')
+            && !text.contains(&['.', 'e', 'E'][..])
+        {
+            if let Ok(u) = text.parse::<u64>() {
+                return Ok(Json::Uint(u));
+            }
+        }
         Ok(Json::Num(text.parse::<f64>().map_err(|e| {
             anyhow!("bad number `{text}` at offset {start}: {e}")
         })?))
@@ -455,5 +493,48 @@ mod tests {
     fn integers_emit_without_decimal_point() {
         assert_eq!(Json::Num(42.0).to_string(), "42");
         assert_eq!(Json::Num(2.5).to_string(), "2.5");
+        assert_eq!(Json::Uint(42).to_string(), "42");
+    }
+
+    #[test]
+    fn uint_is_lossless_beyond_2_pow_53() {
+        // 2⁵³ + 1 is the first integer an f64 cannot represent; the
+        // Uint path must carry it (and u64::MAX) digit-for-digit.
+        let over = (1u64 << 53) + 1;
+        for x in [over, u64::MAX, (1u64 << 60) + 3] {
+            let v = Json::Uint(x);
+            assert_eq!(v.to_string(), x.to_string());
+            let back = Json::parse(&v.to_string()).unwrap();
+            assert_eq!(back, Json::Uint(x));
+            assert_eq!(back.as_u64(), Some(x));
+        }
+        // The f64 path really would have corrupted it.
+        assert_ne!((over as f64) as u64, over);
+        // Exactness also survives nesting and pretty-printing.
+        let obj = Json::obj(vec![("pod", Json::Uint(over))]);
+        assert!(obj.pretty().contains(&over.to_string()));
+        assert_eq!(
+            Json::parse(&obj.pretty()).unwrap().req("pod").unwrap(),
+            &Json::Uint(over)
+        );
+    }
+
+    #[test]
+    fn parser_keeps_integers_exact_and_floats_floating() {
+        assert_eq!(Json::parse("9007199254740993").unwrap().as_u64(),
+                   Some(9007199254740993));
+        assert_eq!(Json::parse("7").unwrap(), Json::Uint(7));
+        // Fractions, exponents and negatives take the f64 path.
+        assert_eq!(Json::parse("7.0").unwrap(), Json::Num(7.0));
+        assert_eq!(Json::parse("7e0").unwrap(), Json::Num(7.0));
+        assert_eq!(Json::parse("-7").unwrap(), Json::Num(-7.0));
+        // Beyond u64 falls back to f64 rather than erroring.
+        assert_eq!(
+            Json::parse("99999999999999999999999").unwrap(),
+            Json::Num(1e23)
+        );
+        // Uint interoperates with the f64 accessors.
+        assert_eq!(Json::Uint(3).as_f64(), Some(3.0));
+        assert_eq!(Json::Uint(5).as_usize(), Some(5));
     }
 }

@@ -9,3 +9,4 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod rng;
+pub mod stats;

@@ -1,0 +1,70 @@
+//! Shared numeric helpers.
+//!
+//! The nearest-rank percentile had drifted into three hand-rolled
+//! copies — `metrics::Summary`'s closure, `energy::CarbonSignal::
+//! percentile`'s inline indexing, and the autoscaler's wait-p95
+//! trigger (via a full `Summary` construction). All three used the
+//! same convention by coincidence; this module makes it one function
+//! so they agree by construction. A property test
+//! (`prop_nearest_rank_matches_legacy_percentile_formulas`) pins the
+//! unified helper bit-identical to each retired call-site formula.
+//!
+//! Convention: **nearest rank, round half up** — the sorted sample at
+//! index `floor((n - 1) · q + 0.5)`, clamped to `[0, n - 1]`. For the
+//! non-negative indexes that arise here this is exactly `f64::round`
+//! (round half away from zero), which is what `Summary` used to apply.
+
+/// Nearest-rank index into a sorted sample set of length `n` at
+/// quantile `q` (clamped to `[0, 1]`). `n` must be non-zero.
+pub fn nearest_rank_index(n: usize, q: f64) -> usize {
+    debug_assert!(n > 0, "nearest_rank_index of an empty sample set");
+    let x = (n as f64 - 1.0) * q.clamp(0.0, 1.0);
+    ((x + 0.5).floor() as usize).min(n - 1)
+}
+
+/// Nearest-rank percentile of an unsorted sample set; `None` when the
+/// set is empty — callers must decide what an empty window means
+/// (the autoscaler's SLO trigger treats it as "no signal", never as
+/// "p95 = 0").
+pub fn nearest_rank(samples: &[f64], q: f64) -> Option<f64> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    Some(sorted[nearest_rank_index(sorted.len(), q)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_convention() {
+        // n = 5: q 0 → 0, 0.5 → 2, 0.95 → 4, 1 → 4.
+        assert_eq!(nearest_rank_index(5, 0.0), 0);
+        assert_eq!(nearest_rank_index(5, 0.5), 2);
+        assert_eq!(nearest_rank_index(5, 0.95), 4);
+        assert_eq!(nearest_rank_index(5, 1.0), 4);
+        // Half-up: (2 - 1) * 0.5 = 0.5 rounds to index 1.
+        assert_eq!(nearest_rank_index(2, 0.5), 1);
+        // Out-of-range quantiles clamp.
+        assert_eq!(nearest_rank_index(3, -1.0), 0);
+        assert_eq!(nearest_rank_index(3, 7.0), 2);
+        assert_eq!(nearest_rank_index(1, 0.5), 0);
+    }
+
+    #[test]
+    fn percentile_over_unsorted_samples() {
+        let s = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(nearest_rank(&s, 0.0), Some(1.0));
+        assert_eq!(nearest_rank(&s, 0.5), Some(3.0));
+        assert_eq!(nearest_rank(&s, 1.0), Some(5.0));
+        assert_eq!(nearest_rank(&[7.5], 0.95), Some(7.5));
+    }
+
+    #[test]
+    fn empty_is_none_not_zero() {
+        assert_eq!(nearest_rank(&[], 0.95), None);
+    }
+}

@@ -22,6 +22,11 @@ use greenpod::autoscaler::{
 };
 use greenpod::config::{Config, SchedulerKind, WeightingScheme};
 use greenpod::energy::{grams_co2_per_joule, CarbonSignal};
+use greenpod::experiments::phase_shifted_diurnal;
+use greenpod::federation::{
+    CarbonGreedy, FederationEngine, FederationParams, FederationResult,
+    RegionSchedulers, RegionSpec,
+};
 use greenpod::scheduler::{DefaultK8sScheduler, Estimator, GreenPodScheduler};
 use greenpod::simulation::{RunResult, SimulationEngine, SimulationParams};
 use greenpod::util::json::Json;
@@ -373,6 +378,257 @@ fn carbon_golden_trace_matches_checked_in_expectations() {
         assert_eq!(a.node, b.node);
         assert_eq!(a.joules, b.joules);
     }
+}
+
+/// The federation fixture's regions — mirrored by
+/// `golden_federation_regions` in `python/tools/make_golden_trace.py`:
+/// "east" under the golden diurnal signal (phase 0), "west" shifted by
+/// half a period (dirty when east is clean), no autoscaler.
+fn golden_federation_specs(cfg: &Config) -> Vec<RegionSpec> {
+    let base = grams_co2_per_joule(&cfg.energy);
+    vec![
+        RegionSpec::new("east", cfg.clone())
+            .with_carbon(golden_carbon_signal(cfg)),
+        RegionSpec::new("west", cfg.clone())
+            .with_carbon(phase_shifted_diurnal(base, 0.5, 120.0, 12, 0.5)),
+    ]
+}
+
+/// The golden scheduler pair of one federation region — the same
+/// build as `replay_with`'s single-cluster schedulers.
+fn golden_region_schedulers(
+    cfg: &Config,
+    executor: &WorkloadExecutor,
+) -> RegionSchedulers {
+    RegionSchedulers {
+        topsis: Box::new(GreenPodScheduler::new(
+            Estimator::new(
+                cfg.energy.clone(),
+                executor.light_epoch_secs(),
+                cfg.experiment.contention_beta,
+            ),
+            WeightingScheme::EnergyCentric,
+        )),
+        default: Box::new(DefaultK8sScheduler::new(42)),
+    }
+}
+
+/// Replay the committed trace through the 2-region federation with
+/// carbon-greedy dispatch.
+fn replay_federation() -> FederationResult {
+    let cfg = Config::paper_default();
+    let executor = WorkloadExecutor::analytic();
+    let text = std::fs::read_to_string(data_path("golden_trace.jsonl"))
+        .expect("committed golden trace");
+    let trace = ArrivalTrace::from_jsonl(&text).expect("parse golden trace");
+    let pods = trace.to_pods(SchedulerKind::Topsis);
+    let specs = golden_federation_specs(&cfg);
+    let engine = FederationEngine::new(
+        &specs,
+        FederationParams::with_beta_and_seed(
+            cfg.experiment.contention_beta,
+            42,
+        ),
+        &executor,
+    );
+    let mut scheds: Vec<RegionSchedulers> = specs
+        .iter()
+        .map(|_| golden_region_schedulers(&cfg, &executor))
+        .collect();
+    let mut dispatcher = CarbonGreedy::new();
+    engine.run(pods, &mut dispatcher, &mut scheds)
+}
+
+#[test]
+fn federation_golden_trace_matches_checked_in_expectations() {
+    let result = replay_federation();
+    assert_eq!(result.unschedulable(), 0);
+
+    let expected = load_fixture("golden_trace_federation.expected.json");
+
+    // Per-pod: region assignment, placement, times, joules and grams.
+    let mut by_pod: HashMap<
+        u64,
+        (&str, &greenpod::simulation::PodRecord, f64),
+    > = HashMap::new();
+    for reg in &result.regions {
+        let grams: HashMap<u64, f64> = reg
+            .run
+            .meter
+            .records()
+            .iter()
+            .map(|r| (r.pod, r.grams))
+            .collect();
+        for rec in &reg.run.records {
+            by_pod.insert(rec.pod, (&reg.name, rec, grams[&rec.pod]));
+        }
+    }
+    let pods = expected
+        .get("pods")
+        .and_then(Json::as_arr)
+        .expect("`pods` array");
+    assert_eq!(by_pod.len(), pods.len(), "pod count drifted");
+    for e in pods {
+        let id = e.get("pod").and_then(Json::as_u64).expect("pod id");
+        let &(region, rec, grams) = by_pod
+            .get(&id)
+            .unwrap_or_else(|| panic!("pod {id} missing from replay"));
+        assert_eq!(
+            region,
+            e.req_str("region").unwrap(),
+            "pod {id} routed to the wrong region"
+        );
+        assert_eq!(
+            rec.node,
+            e.get("node").and_then(Json::as_usize).unwrap(),
+            "pod {id} node"
+        );
+        assert_eq!(
+            rec.attempts,
+            e.get("attempts").and_then(Json::as_u64).unwrap() as u32,
+            "pod {id} attempts"
+        );
+        assert_close(
+            &format!("pod {id} start_s"),
+            rec.start_s,
+            e.req_f64("start_s").unwrap(),
+        );
+        assert_close(
+            &format!("pod {id} finish_s"),
+            rec.finish_s,
+            e.req_f64("finish_s").unwrap(),
+        );
+        assert_close(
+            &format!("pod {id} wait_s"),
+            rec.wait_s,
+            e.req_f64("wait_s").unwrap(),
+        );
+        assert_close(
+            &format!("pod {id} joules"),
+            rec.joules,
+            e.req_f64("joules").unwrap(),
+        );
+        assert_close(
+            &format!("pod {id} grams"),
+            grams,
+            e.req_f64("grams").unwrap(),
+        );
+    }
+    assert_close(
+        "makespan_s",
+        result.makespan_s(),
+        expected.req_f64("makespan_s").unwrap(),
+    );
+
+    // Per-region roll-ups: energy and the signal-integrated ledgers.
+    let regions = expected
+        .get("regions")
+        .and_then(Json::as_arr)
+        .expect("`regions` array");
+    assert_eq!(result.regions.len(), regions.len());
+    for (got, want) in result.regions.iter().zip(regions) {
+        let name = want.req_str("name").unwrap();
+        assert_eq!(got.name, name);
+        assert_eq!(
+            got.run.records.len(),
+            want.get("pods").and_then(Json::as_usize).unwrap(),
+            "region {name} pod count"
+        );
+        assert_close(
+            &format!("region {name} makespan_s"),
+            got.run.makespan_s,
+            want.req_f64("makespan_s").unwrap(),
+        );
+        assert_close(
+            &format!("region {name} total_kj"),
+            got.run.meter.total_kj(SchedulerKind::Topsis),
+            want.req_f64("total_kj").unwrap(),
+        );
+        assert_close(
+            &format!("region {name} idle_kj"),
+            got.run.idle_kj(),
+            want.req_f64("idle_kj").unwrap(),
+        );
+        assert_close(
+            &format!("region {name} total_co2_g"),
+            got.run.meter.total_co2_g(SchedulerKind::Topsis),
+            want.req_f64("total_co2_g").unwrap(),
+        );
+        assert_close(
+            &format!("region {name} idle_co2_g"),
+            got.run.meter.idle_co2_g(),
+            want.req_f64("idle_co2_g").unwrap(),
+        );
+    }
+
+    // The scenario actually exercises the federation: both regions ran
+    // work (carbon-greedy spills to west when east fills), and every
+    // assignment points at the region that completed the pod.
+    for reg in &result.regions {
+        assert!(!reg.run.records.is_empty(), "{} ran nothing", reg.name);
+    }
+    assert_eq!(
+        result.assignments.len(),
+        result.completed(),
+        "every admitted pod dispatched exactly once"
+    );
+}
+
+#[test]
+fn single_region_federation_is_bit_identical_to_plain_engine() {
+    // The degenerate federation on the golden scenario: one region
+    // under the golden carbon signal *and* the golden threshold
+    // policy must reproduce the plain engine's run bit-for-bit —
+    // records, events, scaling, timeline, energy and grams.
+    let cfg = Config::paper_default();
+    let executor = WorkloadExecutor::analytic();
+    let signal = golden_carbon_signal(&cfg);
+    let plain =
+        replay_with(Some(golden_policy(&cfg)), Some(signal.clone()));
+
+    let text = std::fs::read_to_string(data_path("golden_trace.jsonl"))
+        .expect("committed golden trace");
+    let trace = ArrivalTrace::from_jsonl(&text).expect("parse golden trace");
+    let pods = trace.to_pods(SchedulerKind::Topsis);
+    let specs = vec![RegionSpec::new("solo", cfg.clone())
+        .with_carbon(signal)
+        .with_autoscaler(AutoscalerPolicy::Threshold(golden_policy(&cfg)))];
+    let engine = FederationEngine::new(
+        &specs,
+        FederationParams::with_beta_and_seed(
+            cfg.experiment.contention_beta,
+            42,
+        ),
+        &executor,
+    );
+    let mut scheds = vec![golden_region_schedulers(&cfg, &executor)];
+    let mut dispatcher = CarbonGreedy::new();
+    let fed = engine.run(pods, &mut dispatcher, &mut scheds);
+
+    assert_eq!(fed.regions.len(), 1);
+    let run = &fed.regions[0].run;
+    assert_eq!(plain.records.len(), run.records.len());
+    for (x, y) in plain.records.iter().zip(&run.records) {
+        assert_eq!(x.pod, y.pod);
+        assert_eq!(x.node, y.node);
+        assert_eq!(x.start_s.to_bits(), y.start_s.to_bits());
+        assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits());
+        assert_eq!(x.joules.to_bits(), y.joules.to_bits());
+        assert_eq!(x.attempts, y.attempts);
+    }
+    assert_eq!(plain.events, run.events);
+    assert_eq!(plain.scaling, run.scaling);
+    assert_eq!(plain.node_timeline, run.node_timeline);
+    assert_eq!(plain.makespan_s.to_bits(), run.makespan_s.to_bits());
+    assert_eq!(
+        plain.meter.total_co2_g(SchedulerKind::Topsis).to_bits(),
+        run.meter.total_co2_g(SchedulerKind::Topsis).to_bits()
+    );
+    assert_eq!(
+        plain.meter.idle_co2_g().to_bits(),
+        run.meter.idle_co2_g().to_bits()
+    );
+    assert_eq!(plain.idle_kj().to_bits(), run.idle_kj().to_bits());
 }
 
 #[test]

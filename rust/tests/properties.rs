@@ -8,9 +8,14 @@
 use greenpod::autoscaler::{AutoscalerPolicy, ThresholdConfig};
 use greenpod::cluster::{ClusterState, Pod};
 use greenpod::config::{
-    ClusterConfig, CompetitionLevel, Config, ExperimentConfig,
-    SchedulerKind, WeightingScheme,
+    ClusterConfig, CompetitionLevel, Config, DispatchKind,
+    ExperimentConfig, SchedulerKind, WeightingScheme,
 };
+use greenpod::federation::{
+    build_dispatcher, FederationEngine, FederationParams,
+    FederationResult, RegionSchedulers, RegionSpec,
+};
+use greenpod::metrics::Summary;
 use greenpod::energy::{
     grams_co2_per_joule, CarbonSignal, EnergyMeter, SignalShape,
 };
@@ -1309,5 +1314,354 @@ fn prop_framework_engine_run_bit_identical() {
             legacy.meter.total_kj(SchedulerKind::DefaultK8s),
             framework.meter.total_kj(SchedulerKind::DefaultK8s)
         );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Percentile unification (the util::stats nearest-rank helper —
+// DESIGN.md §"Federation" bugfix sweep).
+
+#[test]
+fn prop_nearest_rank_matches_legacy_percentile_formulas() {
+    // Three hand-rolled percentile implementations had drifted into
+    // metrics::Summary, energy::CarbonSignal::percentile and the
+    // autoscaler's wait-p95 path. The unified util::stats helper must
+    // be bit-identical to each retired call-site formula over random
+    // samples and quantiles — and the consumers must actually resolve
+    // through it.
+    let mut rng = Rng::seed_from_u64(23);
+    for case in 0..prop_cases(300) {
+        let n = 1 + rng.below(200);
+        let samples: Vec<f64> =
+            (0..n).map(|_| rng.range_f64(0.01, 100.0)).collect();
+        let q = match rng.below(4) {
+            0 => 0.0,
+            1 => 0.5,
+            2 => 0.95,
+            _ => rng.range_f64(0.0, 1.0),
+        };
+        let mut sorted = samples.clone();
+        sorted.sort_by(f64::total_cmp);
+        // Retired metrics::Summary closure: round() then clamp.
+        let legacy_summary = {
+            let idx = ((n as f64 - 1.0) * q).round() as usize;
+            sorted[idx.min(n - 1)]
+        };
+        // Retired energy::signal inline indexing: floor(x + 0.5).
+        let legacy_signal = {
+            let x = (n as f64 - 1.0) * q.clamp(0.0, 1.0);
+            let idx = ((x + 0.5).floor() as usize).min(n - 1);
+            sorted[idx]
+        };
+        let unified =
+            greenpod::util::stats::nearest_rank(&samples, q).unwrap();
+        assert_eq!(
+            unified.to_bits(),
+            legacy_summary.to_bits(),
+            "case {case}: unified {unified} vs Summary formula \
+             {legacy_summary} (n {n}, q {q})"
+        );
+        assert_eq!(
+            unified.to_bits(),
+            legacy_signal.to_bits(),
+            "case {case}: unified {unified} vs signal formula \
+             {legacy_signal} (n {n}, q {q})"
+        );
+        // The live consumers go through the same helper.
+        let s = Summary::of(&samples);
+        assert_eq!(
+            s.p95.to_bits(),
+            greenpod::util::stats::nearest_rank(&samples, 0.95)
+                .unwrap()
+                .to_bits(),
+            "case {case}: Summary p95 drifted"
+        );
+        let signal = CarbonSignal::step(
+            samples
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (i as f64, v))
+                .collect(),
+        )
+        .unwrap();
+        assert_eq!(
+            signal.percentile(q).to_bits(),
+            unified.to_bits(),
+            "case {case}: CarbonSignal percentile drifted"
+        );
+    }
+    // The empty window stays a distinct state, never "p95 = 0".
+    assert_eq!(greenpod::util::stats::nearest_rank(&[], 0.95), None);
+}
+
+// ---------------------------------------------------------------------
+// Federation properties (rust/src/federation/ — DESIGN.md
+// §"Federation").
+
+fn federation_schedulers(
+    config: &Config,
+    seed: u64,
+    n: usize,
+) -> Vec<RegionSchedulers> {
+    (0..n)
+        .map(|_| RegionSchedulers {
+            topsis: Box::new(GreenPodScheduler::new(
+                Estimator::with_defaults(config.energy.clone()),
+                WeightingScheme::EnergyCentric,
+            )),
+            default: Box::new(DefaultK8sScheduler::new(seed)),
+        })
+        .collect()
+}
+
+fn random_dispatch(rng: &mut Rng) -> DispatchKind {
+    match rng.below(3) {
+        0 => DispatchKind::RoundRobin,
+        1 => DispatchKind::LeastPending,
+        _ => DispatchKind::CarbonGreedy,
+    }
+}
+
+fn random_region_signal(rng: &mut Rng) -> CarbonSignal {
+    if rng.chance(0.5) {
+        CarbonSignal::diurnal(
+            rng.range_f64(1e-5, 5e-4),
+            rng.range_f64(0.1, 0.9),
+            rng.range_f64(60.0, 400.0),
+            12,
+        )
+        .expect("valid diurnal")
+    } else {
+        CarbonSignal::constant(rng.range_f64(0.0, 5e-4))
+    }
+}
+
+#[test]
+fn prop_federation_single_region_is_bit_identical_to_plain_engine() {
+    // The degenerate-federation contract: one region — any dispatch
+    // policy, with or without an autoscaler, constant or diurnal
+    // signal — reproduces the plain engine's run record-for-record,
+    // bit-for-bit: placements, times, joules, grams, events, scaling,
+    // node timeline. The merged queue degenerates to the kernel queue
+    // and every dispatch resolves to region 0.
+    let mut rng = Rng::seed_from_u64(21);
+    let config = Config::paper_default();
+    let executor = WorkloadExecutor::analytic();
+    for case in 0..prop_cases(10) {
+        let level = random_level(&mut rng);
+        let process = random_process(&mut rng);
+        let seed = rng.next_u64();
+        let pods =
+            generate_pods_with(level, &config.experiment, seed, process).pods;
+        let policy = if rng.chance(0.5) {
+            Some(AutoscalerPolicy::Threshold(random_threshold_policy(
+                &mut rng,
+                &config.cluster,
+            )))
+        } else {
+            None
+        };
+        let signal = random_region_signal(&mut rng);
+
+        let params = SimulationParams {
+            contention_beta: config.experiment.contention_beta,
+            seed,
+            node_events: Vec::new(),
+            autoscaler: policy.clone(),
+            billing_horizon_s: None,
+            carbon: Some(signal.clone()),
+        };
+        let engine = SimulationEngine::new(&config, params, &executor);
+        let mut topsis = GreenPodScheduler::new(
+            Estimator::with_defaults(config.energy.clone()),
+            WeightingScheme::EnergyCentric,
+        );
+        let mut default = DefaultK8sScheduler::new(seed);
+        let plain = engine.run(pods.clone(), &mut topsis, &mut default);
+
+        let mut spec =
+            RegionSpec::new("solo", config.clone()).with_carbon(signal);
+        if let Some(p) = policy {
+            spec = spec.with_autoscaler(p);
+        }
+        let specs = vec![spec];
+        let fed_engine = FederationEngine::new(
+            &specs,
+            FederationParams::with_beta_and_seed(
+                config.experiment.contention_beta,
+                seed,
+            ),
+            &executor,
+        );
+        let mut scheds = federation_schedulers(&config, seed, 1);
+        let mut dispatcher = build_dispatcher(random_dispatch(&mut rng));
+        let fed = fed_engine.run(pods, dispatcher.as_mut(), &mut scheds);
+
+        assert_eq!(fed.regions.len(), 1, "case {case}");
+        let run = &fed.regions[0].run;
+        assert_eq!(
+            plain.records.len(),
+            run.records.len(),
+            "case {case} (seed {seed})"
+        );
+        for (x, y) in plain.records.iter().zip(&run.records) {
+            assert_eq!(x.pod, y.pod, "case {case} (seed {seed})");
+            assert_eq!(x.node, y.node, "case {case} (seed {seed})");
+            assert_eq!(x.start_s.to_bits(), y.start_s.to_bits());
+            assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits());
+            assert_eq!(x.wait_s.to_bits(), y.wait_s.to_bits());
+            assert_eq!(x.attempts, y.attempts);
+            assert_eq!(
+                x.joules.to_bits(),
+                y.joules.to_bits(),
+                "case {case} pod {}",
+                x.pod
+            );
+        }
+        assert_eq!(plain.unschedulable, run.unschedulable, "case {case}");
+        assert_eq!(plain.events, run.events, "case {case}");
+        assert_eq!(plain.scaling, run.scaling, "case {case}");
+        assert_eq!(plain.node_timeline, run.node_timeline, "case {case}");
+        assert_eq!(plain.makespan_s.to_bits(), run.makespan_s.to_bits());
+        for kind in [SchedulerKind::Topsis, SchedulerKind::DefaultK8s] {
+            assert_eq!(
+                plain.meter.total_kj(kind).to_bits(),
+                run.meter.total_kj(kind).to_bits(),
+                "case {case}"
+            );
+            assert_eq!(
+                plain.meter.total_co2_g(kind).to_bits(),
+                run.meter.total_co2_g(kind).to_bits(),
+                "case {case}"
+            );
+        }
+        assert_eq!(plain.idle_kj().to_bits(), run.idle_kj().to_bits());
+        assert_eq!(
+            plain.meter.idle_co2_g().to_bits(),
+            run.meter.idle_co2_g().to_bits()
+        );
+    }
+}
+
+#[test]
+fn prop_federation_dispatcher_conservation() {
+    // Across random federations — 1 to 3 regions, every dispatch
+    // policy, mixed signals, autoscalers on a coin flip — every
+    // admitted pod is routed to exactly one region, every region's
+    // outcome covers exactly its assigned pods, and per-region
+    // completed/unschedulable counts sum to the trace totals.
+    let mut rng = Rng::seed_from_u64(22);
+    let config = Config::paper_default();
+    let executor = WorkloadExecutor::analytic();
+    for case in 0..prop_cases(10) {
+        let n_regions = 1 + rng.below(3);
+        let dispatch = random_dispatch(&mut rng);
+        let level = random_level(&mut rng);
+        let process = random_process(&mut rng);
+        let seed = rng.next_u64();
+        let pods =
+            generate_pods_with(level, &config.experiment, seed, process).pods;
+        let n_pods = pods.len();
+        let specs: Vec<RegionSpec> = (0..n_regions)
+            .map(|j| {
+                let mut spec = RegionSpec::new(
+                    &format!("r{j}"),
+                    config.clone(),
+                )
+                .with_carbon(random_region_signal(&mut rng));
+                if rng.chance(0.3) {
+                    spec = spec.with_autoscaler(AutoscalerPolicy::Threshold(
+                        random_threshold_policy(&mut rng, &config.cluster),
+                    ));
+                }
+                spec
+            })
+            .collect();
+        let engine = FederationEngine::new(
+            &specs,
+            FederationParams::with_beta_and_seed(
+                config.experiment.contention_beta,
+                seed,
+            ),
+            &executor,
+        );
+        let mut scheds = federation_schedulers(&config, seed, n_regions);
+        let mut dispatcher = build_dispatcher(dispatch);
+        let fed: FederationResult =
+            engine.run(pods, dispatcher.as_mut(), &mut scheds);
+
+        // Every admitted pod dispatched to exactly one region.
+        assert_eq!(
+            fed.assignments.len(),
+            n_pods,
+            "case {case} ({dispatch:?}, seed {seed})"
+        );
+        let mut assigned: Vec<u64> =
+            fed.assignments.iter().map(|a| a.pod).collect();
+        assigned.sort_unstable();
+        assigned.dedup();
+        assert_eq!(assigned.len(), n_pods, "case {case}: double dispatch");
+        for a in &fed.assignments {
+            assert!(a.region < n_regions, "case {case}: {a:?}");
+        }
+
+        // Conservation: completed + unschedulable across regions
+        // covers the trace exactly once.
+        assert_eq!(
+            fed.completed() + fed.unschedulable(),
+            n_pods,
+            "case {case} ({dispatch:?}, seed {seed}): pods lost"
+        );
+        let mut outcomes: Vec<u64> = fed
+            .regions
+            .iter()
+            .flat_map(|r| {
+                r.run
+                    .records
+                    .iter()
+                    .map(|rec| rec.pod)
+                    .chain(r.run.unschedulable.iter().copied())
+            })
+            .collect();
+        outcomes.sort_unstable();
+        outcomes.dedup();
+        assert_eq!(
+            outcomes.len(),
+            n_pods,
+            "case {case}: duplicate pod outcome across regions"
+        );
+
+        // Every region's outcome matches its assignments — a pod never
+        // completes in a region it was not dispatched to.
+        for (ri, reg) in fed.regions.iter().enumerate() {
+            let arrivals = reg
+                .run
+                .events
+                .iter()
+                .filter(|e| e.kind == "pod-arrival")
+                .count();
+            let owned = fed
+                .assignments
+                .iter()
+                .filter(|a| a.region == ri)
+                .count();
+            assert_eq!(
+                arrivals, owned,
+                "case {case}: region {ri} arrival log vs assignments"
+            );
+            assert_eq!(
+                reg.run.records.len() + reg.run.unschedulable.len(),
+                owned,
+                "case {case}: region {ri} outcome vs assignments"
+            );
+            for rec in &reg.run.records {
+                let a = fed
+                    .assignments
+                    .iter()
+                    .find(|a| a.pod == rec.pod)
+                    .expect("assignment for completed pod");
+                assert_eq!(a.region, ri, "case {case}: pod {}", rec.pod);
+            }
+        }
     }
 }
