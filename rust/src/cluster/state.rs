@@ -1,8 +1,16 @@
 //! Live cluster state: allocatable accounting + bind/release, the
 //! invariant-bearing core the schedulers and the simulation share.
+//!
+//! Million-pod hot path (DESIGN.md §"Hot path"): every mutation stamps
+//! the touched node with a globally fresh version
+//! ([`ClusterState::node_version`]), so score plugins can reuse
+//! last-cycle per-node work for clean nodes; feasibility is served from
+//! log2-bucketed free-capacity indices (a range probe, not an O(nodes)
+//! scan), pinned bit-identical to the reference linear scan
+//! ([`ClusterState::feasible_nodes_scan`]) by the property suite.
 
-use std::collections::HashMap;
-
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::{Node, NodeCategory, NodeId, Pod, PodId, ResourceRequests};
 use crate::config::ClusterConfig;
@@ -18,12 +26,92 @@ pub enum ClusterEvent {
     NodeAdded { node: NodeId, at_s: f64 },
 }
 
+/// Most events retained for [`ClusterState::drain_events`]. Consumers
+/// that want the stream drain it as they go; an undrained state keeps
+/// only the newest `EVENT_RETENTION_CAP` events instead of growing
+/// O(pods) over a trace-scale run.
+pub const EVENT_RETENTION_CAP: usize = 4096;
+
+/// Monotone global version source. Every node mutation — in any
+/// `ClusterState` instance — draws a fresh value, so two nodes (or one
+/// node at two times, or a state and its clone after divergence) never
+/// share a version unless their content is byte-identical. That makes
+/// version equality a sound cache key across instances.
+static NODE_VERSION_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Next globally unique version (always ≥ 1, so 0 is a safe
+/// never-matches sentinel for caches).
+fn fresh_version() -> u64 {
+    NODE_VERSION_COUNTER.fetch_add(1, Ordering::Relaxed) + 1
+}
+
 /// Per-node live allocation.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 struct Alloc {
     cpu_millis: u64,
     memory_mib: u64,
     pods: u32,
+}
+
+/// Buckets for the free-capacity indices: bucket `b` holds nodes whose
+/// free amount `v` has `bucket_of(v) == b` (i.e. `v`'s bit length;
+/// bucket 0 is exactly `v == 0`). 64-bit values need 65 buckets.
+const FREE_BUCKETS: usize = 65;
+
+fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// A log2-bucketed index over one free-resource axis, maintained O(1)
+/// per bind/release. `feasible_nodes` probes only the buckets that can
+/// hold a satisfying amount: every node with `free >= req` lives in a
+/// bucket `>= bucket_of(req)` (values below `req` have strictly fewer
+/// or equal bits), so the probe's superset is exact on bucket
+/// boundaries and cheap to enumerate.
+#[derive(Debug, Clone)]
+struct FreeIndex {
+    buckets: Vec<Vec<NodeId>>,
+    /// Per node: (bucket, position within the bucket) for O(1)
+    /// swap-remove maintenance.
+    slot: Vec<(u32, u32)>,
+}
+
+impl FreeIndex {
+    fn new() -> Self {
+        Self { buckets: vec![Vec::new(); FREE_BUCKETS], slot: Vec::new() }
+    }
+
+    /// Register node `id` (ids are dense and append-only).
+    fn insert(&mut self, id: NodeId, free: u64) {
+        debug_assert_eq!(self.slot.len(), id);
+        let b = bucket_of(free);
+        self.slot.push((b as u32, self.buckets[b].len() as u32));
+        self.buckets[b].push(id);
+    }
+
+    /// Move node `id` to the bucket of its new free amount.
+    fn update(&mut self, id: NodeId, free: u64) {
+        let b = bucket_of(free) as u32;
+        let (old_b, pos) = self.slot[id];
+        if old_b == b {
+            return;
+        }
+        let removed = self.buckets[old_b as usize].swap_remove(pos as usize);
+        debug_assert_eq!(removed, id);
+        // The entry swapped into the vacated position (if any) moved.
+        if let Some(&moved) = self.buckets[old_b as usize].get(pos as usize) {
+            self.slot[moved] = (old_b, pos);
+        }
+        self.slot[id] = (b, self.buckets[b as usize].len() as u32);
+        self.buckets[b as usize].push(id);
+    }
+
+    /// Size of the probe superset for `min` (every node with
+    /// `free >= min` is counted; some counted nodes may still fall
+    /// short within the boundary bucket).
+    fn superset_len(&self, min: u64) -> usize {
+        self.buckets[bucket_of(min)..].iter().map(Vec::len).sum()
+    }
 }
 
 /// The cluster: fixed node set + mutable allocation state.
@@ -37,7 +125,22 @@ pub struct ClusterState {
     nodes: Vec<Node>,
     alloc: Vec<Alloc>,
     bound: HashMap<PodId, (NodeId, ResourceRequests)>,
-    events: Vec<ClusterEvent>,
+    events: VecDeque<ClusterEvent>,
+    /// Events ever emitted (retained + dropped + drained) — the cursor
+    /// consumers compare against to detect drops.
+    events_emitted: u64,
+    /// Per-node cache-invalidation stamp (globally unique per
+    /// mutation; see [`NODE_VERSION_COUNTER`]).
+    node_version: Vec<u64>,
+    /// Count of mutations applied to this instance (bind / release /
+    /// set_ready / add_node) — the engines' "did anything change since
+    /// the last cycle" signal.
+    mutations: u64,
+    ready_count: usize,
+    total_alloc_cpu: u64,
+    total_cap_cpu: u64,
+    free_cpu_index: FreeIndex,
+    free_mem_index: FreeIndex,
 }
 
 impl ClusterState {
@@ -65,7 +168,30 @@ impl ClusterState {
             }
         }
         let alloc = vec![Alloc::default(); nodes.len()];
-        Self { nodes, alloc, bound: HashMap::new(), events: Vec::new() }
+        let mut state = Self {
+            nodes,
+            alloc,
+            bound: HashMap::new(),
+            events: VecDeque::new(),
+            events_emitted: 0,
+            node_version: Vec::new(),
+            mutations: 0,
+            ready_count: 0,
+            total_alloc_cpu: 0,
+            total_cap_cpu: 0,
+            free_cpu_index: FreeIndex::new(),
+            free_mem_index: FreeIndex::new(),
+        };
+        for id in 0..state.nodes.len() {
+            let node = &state.nodes[id];
+            state.node_version.push(fresh_version());
+            state.ready_count += node.ready as usize;
+            state.total_cap_cpu += node.cpu_millis;
+            let (cpu, mem) = (node.cpu_millis, node.memory_mib);
+            state.free_cpu_index.insert(id, cpu);
+            state.free_mem_index.insert(id, mem);
+        }
+        state
     }
 
     pub fn nodes(&self) -> &[Node] {
@@ -76,8 +202,53 @@ impl ClusterState {
         &self.nodes[id]
     }
 
-    pub fn events(&self) -> &[ClusterEvent] {
-        &self.events
+    /// Remove and return the retained event backlog (oldest first).
+    /// Consumers that need the full stream drain after every batch of
+    /// mutations; at most [`EVENT_RETENTION_CAP`] events are retained
+    /// between drains (oldest dropped first).
+    pub fn drain_events(&mut self) -> Vec<ClusterEvent> {
+        self.events.drain(..).collect()
+    }
+
+    /// Events currently retained (≤ [`EVENT_RETENTION_CAP`]).
+    pub fn retained_events(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Total events ever emitted by this instance. A consumer whose
+    /// drained count falls behind this cursor by more than the
+    /// retention cap has missed (dropped) events.
+    pub fn events_emitted(&self) -> u64 {
+        self.events_emitted
+    }
+
+    fn push_event(&mut self, ev: ClusterEvent) {
+        if self.events.len() == EVENT_RETENTION_CAP {
+            self.events.pop_front();
+        }
+        self.events.push_back(ev);
+        self.events_emitted += 1;
+    }
+
+    /// Record a mutation of node `id`: stamp a globally fresh version
+    /// (invalidating every cache holding the old one) and count it.
+    fn touch(&mut self, id: NodeId) {
+        self.node_version[id] = fresh_version();
+        self.mutations += 1;
+    }
+
+    /// Cache-invalidation stamp for node `id`. Equal stamps — across
+    /// clones, times and instances — guarantee identical node content
+    /// (spec, readiness and allocation); any mutation draws a new,
+    /// never-reused stamp.
+    pub fn node_version(&self, id: NodeId) -> u64 {
+        self.node_version[id]
+    }
+
+    /// Mutations applied to this instance so far. Unchanged between
+    /// two observations ⇒ no node changed in between.
+    pub fn mutations(&self) -> u64 {
+        self.mutations
     }
 
     /// Free CPU on a node (millicores).
@@ -91,13 +262,23 @@ impl ClusterState {
     }
 
     /// Requested-CPU utilization fraction of a node, in `[0, 1]`.
+    /// A zero-capacity node reads as 0 utilization, not NaN.
     pub fn cpu_utilization(&self, id: NodeId) -> f64 {
-        self.alloc[id].cpu_millis as f64 / self.nodes[id].cpu_millis as f64
+        let cap = self.nodes[id].cpu_millis;
+        if cap == 0 {
+            return 0.0;
+        }
+        self.alloc[id].cpu_millis as f64 / cap as f64
     }
 
     /// Requested-memory utilization fraction of a node, in `[0, 1]`.
+    /// A zero-capacity node reads as 0 utilization, not NaN.
     pub fn memory_utilization(&self, id: NodeId) -> f64 {
-        self.alloc[id].memory_mib as f64 / self.nodes[id].memory_mib as f64
+        let cap = self.nodes[id].memory_mib;
+        if cap == 0 {
+            return 0.0;
+        }
+        self.alloc[id].memory_mib as f64 / cap as f64
     }
 
     /// Number of pods currently bound to `id`.
@@ -118,8 +299,59 @@ impl ClusterState {
             && self.free_memory(id) >= requests.memory_mib
     }
 
-    /// Ready nodes where `requests` fit — the scheduler's candidate set.
+    /// Ready nodes where `requests` fit — the scheduler's candidate
+    /// set, ascending node ids. Served from the free-capacity indices;
+    /// membership and order are pinned bit-identical to
+    /// [`Self::feasible_nodes_scan`] by the property suite.
     pub fn feasible_nodes(&self, requests: ResourceRequests) -> Vec<NodeId> {
+        let mut out = Vec::new();
+        self.feasible_nodes_into(requests, &mut out);
+        out
+    }
+
+    /// [`Self::feasible_nodes`] into a caller-owned buffer (cleared
+    /// first), so the steady-state scheduling cycle allocates nothing.
+    pub fn feasible_nodes_into(
+        &self,
+        requests: ResourceRequests,
+        out: &mut Vec<NodeId>,
+    ) {
+        out.clear();
+        let n = self.nodes.len();
+        let by_cpu = self.free_cpu_index.superset_len(requests.cpu_millis);
+        let by_mem = self.free_mem_index.superset_len(requests.memory_mib);
+        // Probe the more selective axis; the full `fits` re-check
+        // covers the other axis, readiness and the boundary bucket.
+        let (index, min_free, superset) = if by_cpu <= by_mem {
+            (&self.free_cpu_index, requests.cpu_millis, by_cpu)
+        } else {
+            (&self.free_mem_index, requests.memory_mib, by_mem)
+        };
+        // A probe visiting most of the cluster gains nothing over the
+        // scan and would still pay the sort; cross over at half.
+        if superset * 2 > n {
+            out.extend((0..n).filter(|&id| self.fits(id, requests)));
+            return;
+        }
+        for bucket in &index.buckets[bucket_of(min_free)..] {
+            for &id in bucket {
+                if self.fits(id, requests) {
+                    out.push(id);
+                }
+            }
+        }
+        // Buckets are maintenance-ordered; ascending ids are part of
+        // the scheduling contract (ties break toward low ids).
+        out.sort_unstable();
+    }
+
+    /// Reference implementation: the pre-index linear scan (kept for
+    /// the differential property and as the crossover fallback's
+    /// definition of truth).
+    pub fn feasible_nodes_scan(
+        &self,
+        requests: ResourceRequests,
+    ) -> Vec<NodeId> {
         (0..self.nodes.len())
             .filter(|&id| self.fits(id, requests))
             .collect()
@@ -148,8 +380,13 @@ impl ClusterState {
         a.cpu_millis += pod.requests.cpu_millis;
         a.memory_mib += pod.requests.memory_mib;
         a.pods += 1;
+        self.total_alloc_cpu += pod.requests.cpu_millis;
         self.bound.insert(pod.id, (node, pod.requests));
-        self.events.push(ClusterEvent::Bound { pod: pod.id, node, at_s });
+        self.touch(node);
+        let (free_cpu, free_mem) = (self.free_cpu(node), self.free_memory(node));
+        self.free_cpu_index.update(node, free_cpu);
+        self.free_mem_index.update(node, free_mem);
+        self.push_event(ClusterEvent::Bound { pod: pod.id, node, at_s });
         Ok(())
     }
 
@@ -163,15 +400,29 @@ impl ClusterState {
         a.cpu_millis -= req.cpu_millis;
         a.memory_mib -= req.memory_mib;
         a.pods -= 1;
-        self.events.push(ClusterEvent::Released { pod, node, at_s });
+        self.total_alloc_cpu -= req.cpu_millis;
+        self.touch(node);
+        let (free_cpu, free_mem) = (self.free_cpu(node), self.free_memory(node));
+        self.free_cpu_index.update(node, free_cpu);
+        self.free_mem_index.update(node, free_mem);
+        self.push_event(ClusterEvent::Released { pod, node, at_s });
         Ok(node)
     }
 
     /// Failure injection: flip a node's readiness. Running pods keep
     /// their reservation (kube semantics: NotReady gates *new* bindings).
+    /// Readiness does not move index entries — `fits` re-checks it.
     pub fn set_ready(&mut self, node: NodeId, ready: bool, at_s: f64) {
+        if self.nodes[node].ready != ready {
+            if ready {
+                self.ready_count += 1;
+            } else {
+                self.ready_count -= 1;
+            }
+        }
         self.nodes[node].ready = ready;
-        self.events.push(ClusterEvent::NodeReady { node, ready, at_s });
+        self.touch(node);
+        self.push_event(ClusterEvent::NodeReady { node, ready, at_s });
     }
 
     /// Provision a new node from a pool template (autoscaler
@@ -201,13 +452,18 @@ impl ClusterState {
             ready: false,
         });
         self.alloc.push(Alloc::default());
-        self.events.push(ClusterEvent::NodeAdded { node: id, at_s });
+        self.node_version.push(fresh_version());
+        self.mutations += 1;
+        self.total_cap_cpu += pool.cpu_millis;
+        self.free_cpu_index.insert(id, pool.cpu_millis);
+        self.free_mem_index.insert(id, pool.memory_mib);
+        self.push_event(ClusterEvent::NodeAdded { node: id, at_s });
         id
     }
 
-    /// Number of Ready nodes right now.
+    /// Number of Ready nodes right now (O(1), maintained on flips).
     pub fn ready_nodes(&self) -> usize {
-        self.nodes.iter().filter(|n| n.ready).count()
+        self.ready_count
     }
 
     /// Pods bound per category — §V.D's allocation analysis.
@@ -219,18 +475,21 @@ impl ClusterState {
         out
     }
 
-    /// Cluster-wide requested-CPU utilization in `[0, 1]`.
+    /// Cluster-wide requested-CPU utilization in `[0, 1]` (O(1),
+    /// maintained on bind/release/add). An empty or zero-capacity
+    /// cluster reads as 0, not NaN.
     pub fn total_cpu_utilization(&self) -> f64 {
-        let used: u64 = self.alloc.iter().map(|a| a.cpu_millis).sum();
-        let cap: u64 = self.nodes.iter().map(|n| n.cpu_millis).sum();
-        used as f64 / cap as f64
+        if self.total_cap_cpu == 0 {
+            return 0.0;
+        }
+        self.total_alloc_cpu as f64 / self.total_cap_cpu as f64
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::SchedulerKind;
+    use crate::config::{NodePoolConfig, SchedulerKind};
     use crate::workload::WorkloadClass;
 
     fn state() -> ClusterState {
@@ -262,7 +521,15 @@ mod tests {
         assert_eq!(n, 5);
         assert_eq!(s.free_cpu(5), 4000);
         assert_eq!(s.node_of(1), None);
-        assert_eq!(s.events().len(), 2);
+        assert_eq!(s.retained_events(), 2);
+        assert_eq!(s.events_emitted(), 2);
+        let evs = s.drain_events();
+        assert!(matches!(evs[0], ClusterEvent::Bound { pod: 1, node: 5, .. }));
+        assert!(
+            matches!(evs[1], ClusterEvent::Released { pod: 1, node: 5, .. })
+        );
+        assert_eq!(s.retained_events(), 0);
+        assert_eq!(s.events_emitted(), 2);
     }
 
     #[test]
@@ -319,8 +586,9 @@ mod tests {
         assert!(s.fits(id, WorkloadClass::Light.requests()));
         assert_eq!(s.free_cpu(id), pool.cpu_millis);
         assert_eq!(s.free_memory(id), pool.memory_mib);
+        let evs = s.drain_events();
         assert!(matches!(
-            s.events()[0],
+            evs[0],
             ClusterEvent::NodeAdded { node: 7, at_s: _ }
         ));
     }
@@ -334,5 +602,145 @@ mod tests {
         let h = s.pods_per_category();
         assert_eq!(h[&NodeCategory::A], 2);
         assert_eq!(h[&NodeCategory::C], 1);
+    }
+
+    #[test]
+    fn event_buffer_stays_bounded_over_long_runs() {
+        // Regression: the retained buffer used to grow by one entry per
+        // bind/release for the whole run — O(pods) memory at trace
+        // scale. It must now stay capped, with the cursor still
+        // counting everything ever emitted.
+        let mut s = state();
+        let rounds = EVENT_RETENTION_CAP as u64 * 3;
+        for i in 0..rounds {
+            let p = pod(i, WorkloadClass::Light);
+            s.bind(&p, 0, 0.0).unwrap();
+            s.release(i, 0.0).unwrap();
+        }
+        assert_eq!(s.retained_events(), EVENT_RETENTION_CAP);
+        assert_eq!(s.events_emitted(), rounds * 2);
+        let drained = s.drain_events();
+        assert_eq!(drained.len(), EVENT_RETENTION_CAP);
+        assert_eq!(s.retained_events(), 0);
+        // The retained tail is the *newest* events.
+        assert!(matches!(
+            drained.last(),
+            Some(ClusterEvent::Released { pod, .. }) if *pod == rounds - 1
+        ));
+        // Draining as you go loses nothing.
+        let mut seen = 0usize;
+        let mut t = state();
+        for i in 0..rounds {
+            let p = pod(i, WorkloadClass::Light);
+            t.bind(&p, 0, 0.0).unwrap();
+            t.release(i, 0.0).unwrap();
+            seen += t.drain_events().len();
+        }
+        assert_eq!(seen as u64, t.events_emitted());
+    }
+
+    #[test]
+    fn zero_capacity_utilization_is_zero_not_nan() {
+        // Regression: a zero-capacity node (constructible from a raw
+        // pool template, e.g. a federation region scaled to nothing)
+        // used to divide by zero into NaN and poison every downstream
+        // mean/score.
+        let cfg = ClusterConfig {
+            pools: vec![NodePoolConfig {
+                category: NodeCategory::A,
+                machine_type: "null".into(),
+                count: 1,
+                cpu_millis: 0,
+                memory_mib: 0,
+                speed_factor: 1.0,
+                power_scale: 1.0,
+            }],
+            schedulable_default_pool: true,
+        };
+        let s = ClusterState::from_config(&cfg);
+        assert_eq!(s.cpu_utilization(0), 0.0);
+        assert_eq!(s.memory_utilization(0), 0.0);
+        assert_eq!(s.total_cpu_utilization(), 0.0);
+
+        // Empty node set: the cluster-wide mean must also be 0.
+        let empty = ClusterState::from_config(&ClusterConfig {
+            pools: Vec::new(),
+            schedulable_default_pool: true,
+        });
+        assert_eq!(empty.total_cpu_utilization(), 0.0);
+
+        // The guarded paths leave nonzero capacity untouched.
+        let mut s = state();
+        s.bind(&pod(1, WorkloadClass::Complex), 0, 0.0).unwrap();
+        assert_eq!(s.cpu_utilization(0), 1000.0 / 2000.0);
+        assert!(s.total_cpu_utilization() > 0.0);
+    }
+
+    #[test]
+    fn feasible_index_matches_scan_under_churn() {
+        let mut s = state();
+        let reqs = [
+            ResourceRequests { cpu_millis: 250, memory_mib: 512 },
+            ResourceRequests { cpu_millis: 1000, memory_mib: 2048 },
+            ResourceRequests { cpu_millis: 0, memory_mib: 0 },
+            // Oversized on each axis, and on both: always empty.
+            ResourceRequests { cpu_millis: 1_000_000, memory_mib: 1 },
+            ResourceRequests { cpu_millis: 1, memory_mib: 1_000_000 },
+            ResourceRequests { cpu_millis: u64::MAX, memory_mib: u64::MAX },
+        ];
+        let check = |s: &ClusterState| {
+            for req in reqs {
+                assert_eq!(
+                    s.feasible_nodes(req),
+                    s.feasible_nodes_scan(req),
+                    "req {req:?}"
+                );
+            }
+        };
+        check(&s);
+        s.bind(&pod(1, WorkloadClass::Complex), 0, 0.0).unwrap();
+        s.bind(&pod(2, WorkloadClass::Medium), 5, 0.0).unwrap();
+        check(&s);
+        s.set_ready(3, false, 0.0);
+        check(&s);
+        let pool = ClusterConfig::paper_default().pools[2].clone();
+        let id = s.add_node(&pool, 1.0);
+        check(&s);
+        s.set_ready(id, true, 2.0);
+        check(&s);
+        s.release(1, 3.0).unwrap();
+        check(&s);
+        assert!(s
+            .feasible_nodes(ResourceRequests {
+                cpu_millis: u64::MAX,
+                memory_mib: u64::MAX
+            })
+            .is_empty());
+    }
+
+    #[test]
+    fn node_versions_stamp_every_mutation() {
+        let mut s = state();
+        let v0 = s.node_version(0);
+        let m0 = s.mutations();
+        s.bind(&pod(1, WorkloadClass::Light), 0, 0.0).unwrap();
+        assert_ne!(s.node_version(0), v0);
+        assert_eq!(s.mutations(), m0 + 1);
+        let v1 = s.node_version(0);
+        s.set_ready(0, false, 0.0);
+        assert_ne!(s.node_version(0), v1);
+        // Untouched nodes keep their stamp.
+        let v5 = s.node_version(5);
+        s.release(1, 0.0).unwrap();
+        assert_eq!(s.node_version(5), v5);
+
+        // Clone divergence: after the original mutates, the two
+        // instances never share a stamp for the mutated node — the
+        // global counter makes stale cross-instance cache hits
+        // impossible.
+        let clone = s.clone();
+        assert_eq!(clone.node_version(0), s.node_version(0));
+        s.set_ready(0, true, 1.0);
+        assert_ne!(clone.node_version(0), s.node_version(0));
     }
 }

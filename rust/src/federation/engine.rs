@@ -173,6 +173,13 @@ struct RegionRun {
     /// signal).
     pending_cpu_millis: u64,
     pending_memory_mib: u64,
+    /// Arena for the region autoscaler's pending-wait vector.
+    waits_buf: Vec<f64>,
+    /// `state.mutations()` as of the end of the region's previous
+    /// scheduling cycle (`u64::MAX` = no cycle yet, never matches).
+    last_cycle_mutations: u64,
+    /// Whether any pod arrived in this region since its previous cycle.
+    arrivals_since_cycle: bool,
 }
 
 impl RegionRun {
@@ -192,6 +199,9 @@ impl RegionRun {
             autoscaler: None,
             pending_cpu_millis: 0,
             pending_memory_mib: 0,
+            waits_buf: Vec::new(),
+            last_cycle_mutations: u64::MAX,
+            arrivals_since_cycle: false,
         }
     }
 
@@ -310,6 +320,7 @@ impl<'a> FederationEngine<'a> {
                     run.meter.advance(now);
                     run.events.push(EventRecord { at_s: now, kind });
                     run.pending.push_back(pod);
+                    run.arrivals_since_cycle = true;
                     run.pending_cpu_millis += pods[pod].requests.cpu_millis;
                     run.pending_memory_mib += pods[pod].requests.memory_mib;
                     assignments.push(RegionAssignment {
@@ -332,16 +343,29 @@ impl<'a> FederationEngine<'a> {
                     match event {
                         SimEvent::SchedulingCycle => {
                             fed[r].cycle_queued = false;
-                            self.drain_pending(
-                                &mut fed[r],
-                                r,
-                                now,
-                                &mut pods,
-                                &mut scheds[r],
-                                &mut queue,
-                                &mut sched_latency_us,
-                                &mut attempts,
-                            );
+                            // Same no-change short-circuit as the plain
+                            // engine's cycle (see its comment); skipping
+                            // is placement-neutral, and the 1-region ≡
+                            // plain differential keeps both guards in
+                            // lockstep.
+                            let unchanged = !fed[r].arrivals_since_cycle
+                                && fed[r].last_cycle_mutations
+                                    == fed[r].state.mutations();
+                            if !unchanged {
+                                self.drain_pending(
+                                    &mut fed[r],
+                                    r,
+                                    now,
+                                    &mut pods,
+                                    &mut scheds[r],
+                                    &mut queue,
+                                    &mut sched_latency_us,
+                                    &mut attempts,
+                                );
+                            }
+                            fed[r].last_cycle_mutations =
+                                fed[r].state.mutations();
+                            fed[r].arrivals_since_cycle = false;
                         }
                         SimEvent::PodCompleted { pod } => {
                             self.complete(
@@ -457,13 +481,15 @@ impl<'a> FederationEngine<'a> {
         let Some(mut policy) = run.autoscaler.take() else {
             return;
         };
-        let waits: Vec<f64> =
-            run.pending.iter().map(|&i| now - pods[i].arrival_s).collect();
+        let mut waits = std::mem::take(&mut run.waits_buf);
+        waits.clear();
+        waits.extend(run.pending.iter().map(|&i| now - pods[i].arrival_s));
         let decision = policy.decide(&Observation {
             now_s: now,
             state: &run.state,
             pending_wait_s: &waits,
         });
+        run.waits_buf = waits;
         for action in decision.actions {
             match action {
                 ScalingAction::Provision { template, ready_at_s } => {

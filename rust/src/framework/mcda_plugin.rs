@@ -9,9 +9,11 @@
 use crate::cluster::{ClusterState, NodeId, Pod};
 use crate::config::{WeightingScheme, BENEFIT_MASK, NUM_CRITERIA};
 use crate::mcda::{Criterion, DecisionProblem, McdaMethod};
-use crate::scheduler::{AdaptiveWeighting, Estimator, ScoringBackend};
+use crate::scheduler::{
+    AdaptiveWeighting, Estimator, NodeEstimate, ScoringBackend,
+};
 
-use super::{CycleCtx, ScorePlugin};
+use super::{CycleCtx, RowCache, ScorePlugin};
 
 /// Build the paper's 5-criteria decision problem over a candidate set:
 /// one estimator row per candidate (exec time, energy, free cores,
@@ -67,6 +69,15 @@ pub struct McdaScorePlugin {
     adaptive: Option<AdaptiveWeighting>,
     percent_scale: bool,
     fallbacks: u64,
+    /// Version-stamped estimator rows (PreScore; see [`RowCache`]).
+    /// Only the rows are cacheable — TOPSIS normalization couples
+    /// candidates, so closeness is recombined every decision.
+    cache: RowCache,
+    rows: Vec<NodeEstimate>,
+    /// Arena buffers threaded through `DecisionProblem` and reclaimed
+    /// after scoring, so steady-state cycles reuse their capacity.
+    matrix: Vec<f64>,
+    criteria: Vec<Criterion>,
 }
 
 impl McdaScorePlugin {
@@ -78,6 +89,10 @@ impl McdaScorePlugin {
             adaptive: None,
             percent_scale: false,
             fallbacks: 0,
+            cache: RowCache::default(),
+            rows: Vec::new(),
+            matrix: Vec::new(),
+            criteria: Vec::new(),
         }
     }
 
@@ -114,30 +129,65 @@ impl ScorePlugin for McdaScorePlugin {
 
     fn score(
         &mut self,
-        _ctx: &CycleCtx,
+        ctx: &CycleCtx,
         state: &ClusterState,
         pod: &Pod,
         candidates: &[NodeId],
-    ) -> Vec<f64> {
-        let problem = build_decision_problem(
+        out: &mut Vec<f64>,
+    ) {
+        let weights = self.effective_weights(state);
+        // PreScore: estimator rows, served from the version-stamped
+        // cache when the cycle allows reuse. The matrix assembly below
+        // is the same per-row float sequence as
+        // [`build_decision_problem`], so the two paths are
+        // bit-identical (the differential property pins this).
+        self.cache.fill(
             &self.estimator,
-            self.effective_weights(state),
             state,
             pod,
             candidates,
+            ctx.reuse_rows,
+            &mut self.rows,
         );
+        let mut matrix = std::mem::take(&mut self.matrix);
+        matrix.clear();
+        for e in &self.rows {
+            matrix.extend_from_slice(&[
+                e.exec_time_s,
+                e.energy_j,
+                e.free_cpu_frac,
+                e.free_mem_frac,
+                e.balance,
+            ]);
+        }
+        let mut criteria = std::mem::take(&mut self.criteria);
+        criteria.clear();
+        criteria.extend((0..NUM_CRITERIA).map(|i| {
+            if BENEFIT_MASK[i] > 0.5 {
+                Criterion::benefit(weights[i])
+            } else {
+                Criterion::cost(weights[i])
+            }
+        }));
+        let problem = DecisionProblem::new(matrix, candidates.len(), criteria);
+        out.clear();
         match &mut self.backend {
-            ScoringBackend::Rust(method) => method.scores(&problem),
+            ScoringBackend::Rust(method) => {
+                out.extend(method.scores(&problem));
+            }
             ScoringBackend::Pjrt(engine) => match engine.closeness(&problem) {
-                Ok(s) => s,
+                Ok(s) => out.extend(s),
                 Err(_) => {
                     // Degrade gracefully: the artifact math and the
                     // Rust math are the same TOPSIS.
                     self.fallbacks += 1;
-                    McdaMethod::Topsis.scores(&problem)
+                    out.extend(McdaMethod::Topsis.scores(&problem));
                 }
             },
         }
+        // Reclaim the arena buffers for the next cycle.
+        self.matrix = problem.matrix;
+        self.criteria = problem.criteria;
     }
 
     fn normalize(
@@ -181,8 +231,8 @@ mod tests {
     fn raw_scores_are_closeness_in_unit_interval() {
         let (state, mut plug) = setup();
         let candidates: Vec<usize> = (0..state.nodes().len()).collect();
-        let scores =
-            plug.score(&CycleCtx::default(), &state, &pod(), &candidates);
+        let mut scores = Vec::new();
+        plug.score(&CycleCtx::default(), &state, &pod(), &candidates, &mut scores);
         assert_eq!(scores.len(), candidates.len());
         for &s in &scores {
             assert!((0.0..=1.0 + 1e-9).contains(&s), "{scores:?}");
@@ -198,8 +248,8 @@ mod tests {
         let (state, plug) = setup();
         let mut plug = plug.with_percent_scale();
         let candidates: Vec<usize> = (0..state.nodes().len()).collect();
-        let mut scores =
-            plug.score(&CycleCtx::default(), &state, &pod(), &candidates);
+        let mut scores = Vec::new();
+        plug.score(&CycleCtx::default(), &state, &pod(), &candidates, &mut scores);
         plug.normalize(&state, &pod(), &mut scores);
         for &s in &scores {
             assert!((0.0..=100.0 + 1e-6).contains(&s), "{scores:?}");

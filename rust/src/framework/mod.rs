@@ -38,6 +38,7 @@
 
 mod mcda_plugin;
 mod plugins;
+mod prescore;
 mod profile;
 mod registry;
 
@@ -46,6 +47,7 @@ pub use plugins::{
     balanced_allocation_score, least_allocated_score, BalancedAllocation,
     CarbonAware, LeastAllocated, NodeResourcesFit,
 };
+pub use prescore::{RowCache, RowKey};
 pub use profile::{FrameworkScheduler, SchedulerProfile, TieBreak};
 pub use registry::{BuildOptions, ProfileRegistry};
 
@@ -64,6 +66,13 @@ use crate::cluster::{ClusterState, NodeId, Pod};
 pub struct CycleCtx {
     /// Virtual time of the scheduling cycle (seconds).
     pub now_s: f64,
+    /// Whether estimator-backed plugins may serve version-clean rows
+    /// from their [`RowCache`] instead of recomputing (DESIGN.md
+    /// §"Hot path"). Cache hits are bit-identical to recomputation, so
+    /// this only trades CPU — never placement bits. Defaults to
+    /// `false` (full rescore), the conservative reference path the
+    /// incremental≡full differential property compares against.
+    pub reuse_rows: bool,
 }
 
 /// Filter extension point: one candidate node in, admit/reject out
@@ -74,6 +83,24 @@ pub trait FilterPlugin {
 
     /// Whether `pod` may be placed on `node` right now.
     fn feasible(&self, state: &ClusterState, pod: &Pod, node: NodeId) -> bool;
+
+    /// Optional bulk admission (kube's PreFilter, inverted): fill
+    /// `out` with *exactly* the nodes this filter admits, ascending by
+    /// id, and return `true` — or return `false` (the default) to fall
+    /// back to per-node [`feasible`] probing. Lets an index-backed
+    /// filter like [`NodeResourcesFit`] produce the candidate set as a
+    /// range probe instead of an O(nodes) scan. Implementations must
+    /// guarantee `out` equals the set `feasible` would admit.
+    ///
+    /// [`feasible`]: FilterPlugin::feasible
+    fn prefilter(
+        &self,
+        _state: &ClusterState,
+        _pod: &Pod,
+        _out: &mut Vec<NodeId>,
+    ) -> bool {
+        false
+    }
 }
 
 /// Score extension point (kube's Score + NormalizeScore).
@@ -91,16 +118,20 @@ pub trait FilterPlugin {
 pub trait ScorePlugin {
     fn name(&self) -> &'static str;
 
-    /// Raw score for every candidate, in candidate order (the returned
-    /// vector has `candidates.len()` entries). `ctx` carries the
-    /// scheduling cycle's virtual timestamp.
+    /// Raw score for every candidate, written into `out` in candidate
+    /// order (`out` is cleared first and ends with `candidates.len()`
+    /// entries). The out-parameter lets the driver reuse one buffer
+    /// across cycles — the steady-state hot path allocates nothing.
+    /// `ctx` carries the scheduling cycle's virtual timestamp and the
+    /// row-reuse flag.
     fn score(
         &mut self,
         ctx: &CycleCtx,
         state: &ClusterState,
         pod: &Pod,
         candidates: &[NodeId],
-    ) -> Vec<f64>;
+        out: &mut Vec<f64>,
+    );
 
     /// Optional NormalizeScore pass: rescale this plugin's raw scores
     /// onto the 0–100 convention. Default: identity.

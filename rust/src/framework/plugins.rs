@@ -9,9 +9,9 @@
 
 use crate::cluster::{ClusterState, NodeId, Pod};
 use crate::energy::CarbonSignal;
-use crate::scheduler::Estimator;
+use crate::scheduler::{Estimator, NodeEstimate};
 
-use super::{CycleCtx, FilterPlugin, ScorePlugin};
+use super::{CycleCtx, FilterPlugin, RowCache, ScorePlugin};
 
 /// `LeastAllocated` (kube `NodeResourcesLeastAllocated`): mean over
 /// cpu/mem of the free fraction after placement, scaled to 0–100.
@@ -71,6 +71,19 @@ impl FilterPlugin for NodeResourcesFit {
     fn feasible(&self, state: &ClusterState, pod: &Pod, node: NodeId) -> bool {
         state.fits(node, pod.requests)
     }
+
+    /// Bulk admission off the free-capacity indices: a range probe
+    /// instead of an O(nodes) scan, pinned to the same membership and
+    /// order as per-node [`ClusterState::fits`] probing.
+    fn prefilter(
+        &self,
+        state: &ClusterState,
+        pod: &Pod,
+        out: &mut Vec<NodeId>,
+    ) -> bool {
+        state.feasible_nodes_into(pod.requests, out);
+        true
+    }
 }
 
 /// Score: [`least_allocated_score`] as a plugin.
@@ -87,11 +100,14 @@ impl ScorePlugin for LeastAllocated {
         state: &ClusterState,
         pod: &Pod,
         candidates: &[NodeId],
-    ) -> Vec<f64> {
-        candidates
-            .iter()
-            .map(|&id| least_allocated_score(state, id, pod))
-            .collect()
+        out: &mut Vec<f64>,
+    ) {
+        out.clear();
+        out.extend(
+            candidates
+                .iter()
+                .map(|&id| least_allocated_score(state, id, pod)),
+        );
     }
 }
 
@@ -109,11 +125,14 @@ impl ScorePlugin for BalancedAllocation {
         state: &ClusterState,
         pod: &Pod,
         candidates: &[NodeId],
-    ) -> Vec<f64> {
-        candidates
-            .iter()
-            .map(|&id| balanced_allocation_score(state, id, pod))
-            .collect()
+        out: &mut Vec<f64>,
+    ) {
+        out.clear();
+        out.extend(
+            candidates
+                .iter()
+                .map(|&id| balanced_allocation_score(state, id, pod)),
+        );
     }
 }
 
@@ -128,11 +147,19 @@ pub struct CarbonAware {
     estimator: Estimator,
     /// Grid intensity over virtual time.
     signal: CarbonSignal,
+    /// Version-stamped estimator rows (PreScore; see [`RowCache`]).
+    cache: RowCache,
+    rows: Vec<NodeEstimate>,
 }
 
 impl CarbonAware {
     pub fn new(estimator: Estimator, signal: CarbonSignal) -> Self {
-        Self { estimator, signal }
+        Self {
+            estimator,
+            signal,
+            cache: RowCache::default(),
+            rows: Vec::new(),
+        }
     }
 }
 
@@ -142,23 +169,29 @@ impl ScorePlugin for CarbonAware {
     }
 
     /// Raw output: estimated grams CO₂ at the cycle's grid intensity
-    /// (a cost — lower is better).
+    /// (a cost — lower is better). Rows come through the PreScore
+    /// cache; the time-varying intensity multiplies in afterwards, so
+    /// row reuse never freezes the clock.
     fn score(
         &mut self,
         ctx: &CycleCtx,
         state: &ClusterState,
         pod: &Pod,
         candidates: &[NodeId],
-    ) -> Vec<f64> {
+        out: &mut Vec<f64>,
+    ) {
         // One intensity per cycle: all candidates share the clock.
         let g_per_j = self.signal.at(ctx.now_s);
-        candidates
-            .iter()
-            .map(|&id| {
-                let e = self.estimator.estimate(state, state.node(id), pod);
-                e.energy_j * g_per_j
-            })
-            .collect()
+        self.cache.fill(
+            &self.estimator,
+            state,
+            pod,
+            candidates,
+            ctx.reuse_rows,
+            &mut self.rows,
+        );
+        out.clear();
+        out.extend(self.rows.iter().map(|e| e.energy_j * g_per_j));
     }
 
     /// Inverted min–max onto 0–100: the lowest-carbon candidate scores
@@ -242,6 +275,10 @@ mod tests {
         }
         s.set_ready(0, false, 0.0);
         assert!(!f.feasible(&s, &p, 0));
+        // Bulk admission agrees with per-node probing, order included.
+        let mut bulk = Vec::new();
+        assert!(f.prefilter(&s, &p, &mut bulk));
+        assert_eq!(bulk, s.feasible_nodes_scan(p.requests));
     }
 
     #[test]
@@ -255,7 +292,8 @@ mod tests {
             CarbonSignal::from_energy(&energy),
         );
         let candidates: Vec<usize> = (0..s.nodes().len()).collect();
-        let mut scores = plug.score(&CycleCtx::default(), &s, &p, &candidates);
+        let mut scores = Vec::new();
+        plug.score(&CycleCtx::default(), &s, &p, &candidates, &mut scores);
         plug.normalize(&s, &p, &mut scores);
         for &v in &scores {
             assert!((0.0..=100.0).contains(&v), "{scores:?}");
@@ -287,17 +325,20 @@ mod tests {
             signal,
         );
         let candidates: Vec<usize> = (0..s.nodes().len()).collect();
-        let clean = plug.score(
-            &CycleCtx { now_s: 50.0 },
+        let (mut clean, mut dirty) = (Vec::new(), Vec::new());
+        plug.score(
+            &CycleCtx { now_s: 50.0, ..CycleCtx::default() },
             &s,
             &p,
             &candidates,
+            &mut clean,
         );
-        let dirty = plug.score(
-            &CycleCtx { now_s: 150.0 },
+        plug.score(
+            &CycleCtx { now_s: 150.0, ..CycleCtx::default() },
             &s,
             &p,
             &candidates,
+            &mut dirty,
         );
         for (c, d) in clean.iter().zip(&dirty) {
             assert!(*c > 0.0);

@@ -1,0 +1,175 @@
+//! PreScore: per-cycle estimator-row computation, cached across
+//! cycles by node version (DESIGN.md §"Hot path").
+//!
+//! `Estimator::estimate` is a pure function of (node spec + allocation
+//! + readiness, pod *shape*, estimator params). [`RowKey`] captures
+//! the pod shape and [`crate::cluster::ClusterState::node_version`]
+//! captures everything node-side, so a (key, version) hit can reuse
+//! the last computed row bit-for-bit. TOPSIS normalization couples
+//! candidates to each other, so only estimator *rows* are cacheable
+//! here — final scores are always recombined per decision.
+
+use crate::cluster::{ClusterState, NodeId, Pod};
+use crate::scheduler::{Estimator, NodeEstimate};
+use crate::workload::WorkloadClass;
+
+/// The pod-side inputs `Estimator::estimate` reads: two pods with
+/// equal keys produce identical rows on the same node state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowKey {
+    class: WorkloadClass,
+    epochs: u32,
+    cpu_millis: u64,
+    memory_mib: u64,
+}
+
+impl RowKey {
+    pub fn of(pod: &Pod) -> Self {
+        Self {
+            class: pod.class,
+            epochs: pod.epochs,
+            cpu_millis: pod.requests.cpu_millis,
+            memory_mib: pod.requests.memory_mib,
+        }
+    }
+}
+
+/// Version-stamped estimator rows for one scoring plugin. One
+/// instance lives inside each estimator-backed `ScorePlugin`; across
+/// scheduling cycles it recomputes rows only for nodes whose version
+/// changed (dirty nodes) while the pod shape stays the same.
+#[derive(Debug, Default)]
+pub struct RowCache {
+    /// Pod shape the cached rows were computed for.
+    key: Option<RowKey>,
+    /// Per node id: last computed row (valid iff versions[id] matches
+    /// the state's current stamp for that node).
+    rows: Vec<NodeEstimate>,
+    /// Per node id: `state.node_version(id)` at computation time.
+    /// 0 never matches a real stamp (stamps start at 1).
+    versions: Vec<u64>,
+}
+
+impl RowCache {
+    /// Fill `out` with one estimator row per candidate (same order).
+    /// With `reuse` set, rows for (shape, version)-clean nodes come
+    /// from the cache — bit-identical to recomputation because the
+    /// estimator is pure; with `reuse` unset every row is recomputed
+    /// (the full-rescore reference path the differential property
+    /// compares against).
+    pub fn fill(
+        &mut self,
+        estimator: &Estimator,
+        state: &ClusterState,
+        pod: &Pod,
+        candidates: &[NodeId],
+        reuse: bool,
+        out: &mut Vec<NodeEstimate>,
+    ) {
+        let key = RowKey::of(pod);
+        if !reuse || self.key != Some(key) {
+            // Shape change (or reuse disabled): every stamp becomes
+            // the never-matches sentinel, forcing recomputation.
+            self.versions.clear();
+            self.key = Some(key);
+        }
+        let n = state.nodes().len();
+        self.versions.resize(n, 0);
+        self.rows.resize(
+            n,
+            NodeEstimate {
+                node: 0,
+                exec_time_s: 0.0,
+                energy_j: 0.0,
+                free_cpu_frac: 0.0,
+                free_mem_frac: 0.0,
+                balance: 0.0,
+            },
+        );
+        out.clear();
+        for &id in candidates {
+            if self.versions[id] != state.node_version(id) {
+                self.rows[id] = estimator.estimate(state, state.node(id), pod);
+                self.versions[id] = state.node_version(id);
+            }
+            out.push(self.rows[id]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, EnergyModelConfig, SchedulerKind};
+    use crate::scheduler::Estimator;
+
+    fn fixtures() -> (ClusterState, Estimator) {
+        let state = ClusterState::from_config(&ClusterConfig::paper_default());
+        (state, Estimator::with_defaults(EnergyModelConfig::default()))
+    }
+
+    fn pod(id: u64, class: WorkloadClass, epochs: u32) -> Pod {
+        Pod::new(id, class, SchedulerKind::Topsis, 0.0, epochs)
+    }
+
+    fn rows_eq(a: &[NodeEstimate], b: &[NodeEstimate]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| {
+                x.node == y.node
+                    && x.exec_time_s.to_bits() == y.exec_time_s.to_bits()
+                    && x.energy_j.to_bits() == y.energy_j.to_bits()
+                    && x.free_cpu_frac.to_bits() == y.free_cpu_frac.to_bits()
+                    && x.free_mem_frac.to_bits() == y.free_mem_frac.to_bits()
+                    && x.balance.to_bits() == y.balance.to_bits()
+            })
+    }
+
+    #[test]
+    fn cached_rows_bit_identical_to_recompute_across_churn() {
+        let (mut state, est) = fixtures();
+        let p = pod(1, WorkloadClass::Medium, 4);
+        let candidates = state.feasible_nodes(p.requests);
+        let mut cache = RowCache::default();
+        let (mut cached, mut fresh) = (Vec::new(), Vec::new());
+
+        cache.fill(&est, &state, &p, &candidates, true, &mut cached);
+        RowCache::default().fill(&est, &state, &p, &candidates, true, &mut fresh);
+        assert!(rows_eq(&cached, &fresh));
+
+        // Mutate two nodes; clean nodes must serve cache hits that
+        // still match full recomputation bitwise.
+        state.bind(&pod(2, WorkloadClass::Complex, 4), 0, 0.0).unwrap();
+        state.set_ready(5, false, 0.0);
+        let candidates = state.feasible_nodes(p.requests);
+        cache.fill(&est, &state, &p, &candidates, true, &mut cached);
+        RowCache::default().fill(&est, &state, &p, &candidates, true, &mut fresh);
+        assert!(rows_eq(&cached, &fresh));
+    }
+
+    #[test]
+    fn shape_change_invalidates_rows() {
+        let (state, est) = fixtures();
+        let candidates = state.feasible_nodes(
+            pod(1, WorkloadClass::Light, 2).requests,
+        );
+        let mut cache = RowCache::default();
+        let (mut light, mut complex, mut fresh) =
+            (Vec::new(), Vec::new(), Vec::new());
+        cache.fill(
+            &est,
+            &state,
+            &pod(1, WorkloadClass::Light, 2),
+            &candidates,
+            true,
+            &mut light,
+        );
+        // Same cache, different pod shape: rows must be for the new
+        // shape, not stale Light rows.
+        let p2 = pod(2, WorkloadClass::Complex, 9);
+        let cand2 = state.feasible_nodes(p2.requests);
+        cache.fill(&est, &state, &p2, &cand2, true, &mut complex);
+        RowCache::default().fill(&est, &state, &p2, &cand2, true, &mut fresh);
+        assert!(rows_eq(&complex, &fresh));
+        assert!(!rows_eq(&light, &complex));
+    }
+}

@@ -75,6 +75,20 @@ pub struct FrameworkScheduler {
     rng: Rng,
     /// Virtual time of the current scheduling cycle.
     now_s: f64,
+    /// Whether score plugins may serve version-clean estimator rows
+    /// from their caches ([`CycleCtx::reuse_rows`]). On by default —
+    /// cache hits are bit-identical to recomputation; the differential
+    /// property runs one scheduler with this off as the full-rescore
+    /// reference.
+    incremental: bool,
+    // Arena buffers reused across decisions so the steady-state cycle
+    // allocates nothing (the published `SchedulingDecision::scores`
+    // vector is the one remaining per-decision allocation — it
+    // escapes into the caller).
+    candidates: Vec<NodeId>,
+    combined: Vec<f64>,
+    raw: Vec<f64>,
+    top: Vec<NodeId>,
 }
 
 impl FrameworkScheduler {
@@ -82,11 +96,27 @@ impl FrameworkScheduler {
     /// [`TieBreak::SeededRandom`]); the stream matches the legacy
     /// `DefaultK8sScheduler::new(seed)` draw-for-draw.
     pub fn new(profile: SchedulerProfile, seed: u64) -> Self {
-        Self { profile, rng: Rng::seed_from_u64(seed), now_s: 0.0 }
+        Self {
+            profile,
+            rng: Rng::seed_from_u64(seed),
+            now_s: 0.0,
+            incremental: true,
+            candidates: Vec::new(),
+            combined: Vec::new(),
+            raw: Vec::new(),
+            top: Vec::new(),
+        }
     }
 
     pub fn profile_name(&self) -> &str {
         &self.profile.name
+    }
+
+    /// Toggle row reuse (see [`CycleCtx::reuse_rows`]). `false` forces
+    /// a full rescore every decision — the reference path the
+    /// incremental≡full differential property compares against.
+    pub fn set_incremental(&mut self, on: bool) {
+        self.incremental = on;
     }
 
     /// PJRT → Rust scoring fallbacks across all score plugins.
@@ -108,15 +138,35 @@ impl Scheduler for FrameworkScheduler {
         let t0 = Instant::now();
 
         // Filter: a node survives only if every filter admits it.
-        let candidates: Vec<NodeId> = (0..state.nodes().len())
-            .filter(|&id| {
-                self.profile
-                    .filters
-                    .iter()
-                    .all(|f| f.feasible(state, pod, id))
-            })
-            .collect();
+        // When a filter offers bulk admission (PreFilter — e.g. the
+        // index-backed NodeResourcesFit), its output seeds the
+        // candidate set and only the *other* filters re-probe per
+        // node; otherwise fall back to the full scan.
+        let mut candidates = std::mem::take(&mut self.candidates);
+        candidates.clear();
+        let filters = &self.profile.filters;
+        let bulk = filters
+            .iter()
+            .position(|f| f.prefilter(state, pod, &mut candidates));
+        match bulk {
+            Some(k) => {
+                if filters.len() > 1 {
+                    candidates.retain(|&id| {
+                        filters
+                            .iter()
+                            .enumerate()
+                            .all(|(j, f)| j == k || f.feasible(state, pod, id))
+                    });
+                }
+            }
+            None => {
+                candidates.extend((0..state.nodes().len()).filter(|&id| {
+                    filters.iter().all(|f| f.feasible(state, pod, id))
+                }));
+            }
+        }
         if candidates.is_empty() {
+            self.candidates = candidates;
             return SchedulingDecision {
                 node: None,
                 latency: t0.elapsed(),
@@ -125,11 +175,15 @@ impl Scheduler for FrameworkScheduler {
         }
 
         // Score: each plugin scores + normalizes; combine by weight.
-        let ctx = CycleCtx { now_s: self.now_s };
-        let mut combined = vec![0.0; candidates.len()];
+        // `raw` and `combined` are arena buffers — no allocation once
+        // their high-water capacity is reached.
+        let ctx = CycleCtx { now_s: self.now_s, reuse_rows: self.incremental };
+        self.combined.clear();
+        self.combined.resize(candidates.len(), 0.0);
+        let mut raw = std::mem::take(&mut self.raw);
         let mut total_weight = 0.0;
         for (plugin, weight) in &mut self.profile.scorers {
-            let mut raw = plugin.score(&ctx, state, pod, &candidates);
+            plugin.score(&ctx, state, pod, &candidates, &mut raw);
             // Hard contract on the public extension point: a short
             // vector would silently zero-bias the tail candidates.
             assert_eq!(
@@ -141,46 +195,52 @@ impl Scheduler for FrameworkScheduler {
                 candidates.len()
             );
             plugin.normalize(state, pod, &mut raw);
-            for (acc, s) in combined.iter_mut().zip(&raw) {
+            for (acc, s) in self.combined.iter_mut().zip(&raw) {
                 *acc += *weight * s;
             }
             total_weight += *weight;
         }
         if total_weight > 0.0 {
-            for s in &mut combined {
+            for s in &mut self.combined {
                 *s /= total_weight;
             }
         }
+        self.raw = raw;
 
         // Select.
         let node = match self.profile.tie_break {
             TieBreak::LowestIndex => {
-                argmax(&combined).map(|i| candidates[i])
+                argmax(&self.combined).map(|i| candidates[i])
             }
             TieBreak::SeededRandom => {
-                let best = combined
+                let best = self
+                    .combined
                     .iter()
                     .copied()
                     .fold(f64::NEG_INFINITY, f64::max);
-                let top: Vec<NodeId> = candidates
-                    .iter()
-                    .zip(&combined)
-                    .filter(|&(_, &s)| (s - best).abs() < 1e-9)
-                    .map(|(&id, _)| id)
-                    .collect();
-                if top.is_empty() {
+                self.top.clear();
+                self.top.extend(
+                    candidates
+                        .iter()
+                        .zip(&self.combined)
+                        .filter(|&(_, &s)| (s - best).abs() < 1e-9)
+                        .map(|(&id, _)| id),
+                );
+                if self.top.is_empty() {
                     None
                 } else {
-                    Some(top[self.rng.below(top.len())])
+                    Some(self.top[self.rng.below(self.top.len())])
                 }
             }
         };
 
-        SchedulingDecision {
-            node,
-            latency: t0.elapsed(),
-            scores: candidates.into_iter().zip(combined).collect(),
-        }
+        let scores = candidates
+            .iter()
+            .copied()
+            .zip(self.combined.iter().copied())
+            .collect();
+        self.candidates = candidates;
+        SchedulingDecision { node, latency: t0.elapsed(), scores }
     }
 
     fn schedule_at(
@@ -271,9 +331,11 @@ mod tests {
                 _state: &ClusterState,
                 _pod: &Pod,
                 candidates: &[NodeId],
-            ) -> Vec<f64> {
+                out: &mut Vec<f64>,
+            ) {
                 self.0.set(ctx.now_s);
-                vec![0.0; candidates.len()]
+                out.clear();
+                out.resize(candidates.len(), 0.0);
             }
         }
 
@@ -288,6 +350,47 @@ mod tests {
         // A plain schedule() reuses the last bound timestamp.
         sched.schedule(&s, &pod(2, WorkloadClass::Light));
         assert_eq!(seen.get(), 42.5);
+    }
+
+    #[test]
+    fn bulk_prefilter_composes_with_other_filters() {
+        // The index-backed prefilter seeds the candidate set; every
+        // other filter must still get its per-node veto, and the final
+        // set must equal the all-filters reference scan, order included.
+        struct OddOnly;
+        impl FilterPlugin for OddOnly {
+            fn name(&self) -> &'static str {
+                "odd-only"
+            }
+
+            fn feasible(
+                &self,
+                _state: &ClusterState,
+                _pod: &Pod,
+                node: NodeId,
+            ) -> bool {
+                node % 2 == 1
+            }
+        }
+
+        let mut s = state();
+        s.set_ready(3, false, 0.0);
+        let p = pod(1, WorkloadClass::Light);
+        let profile = SchedulerProfile::new("odd")
+            .filter(Box::new(NodeResourcesFit))
+            .filter(Box::new(OddOnly))
+            .score(Box::new(LeastAllocated), 1.0);
+        let mut sched = FrameworkScheduler::new(profile, 0);
+        let d = sched.schedule(&s, &p);
+        let expect: Vec<NodeId> = s
+            .feasible_nodes_scan(p.requests)
+            .into_iter()
+            .filter(|id| id % 2 == 1)
+            .collect();
+        let got: Vec<NodeId> = d.scores.iter().map(|&(id, _)| id).collect();
+        assert_eq!(got, expect);
+        assert!(!expect.is_empty());
+        assert!(expect.contains(&d.node.unwrap()));
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! greenpod experiment carbon [--csv]              # carbon-signal × window grid
 //! greenpod experiment federation [--csv] [--events] # multi-cluster dispatch grid
 //! greenpod experiment all                         # everything above
-//! greenpod bench sched                            # scheduling microbenchmark
+//! greenpod bench sched [--grid small|full]        # scheduling microbenchmark + scaling curves
 //! greenpod calibrate [--reps 4]                   # PJRT epoch timings
 //! greenpod serve --trace t.jsonl [--scheme energy-centric]
 //!                [--time-scale 100] [--only topsis|default]
@@ -53,7 +53,7 @@ use greenpod::workload::{ArrivalTrace, WorkloadClass, WorkloadExecutor};
 const FLAGS: &[&str] = &["pjrt", "csv", "events", "help", "version"];
 const KNOWN_OPTS: &[&str] = &[
     "config", "replications", "seed", "section", "optimization", "level",
-    "reps", "trace", "scheme", "time-scale", "only", "profile",
+    "reps", "trace", "scheme", "time-scale", "only", "profile", "grid",
 ];
 
 const USAGE: &str = "\
@@ -72,7 +72,7 @@ usage:
   greenpod experiment carbon [--csv]
   greenpod experiment federation [--csv] [--events]
   greenpod experiment all
-  greenpod bench sched
+  greenpod bench sched [--grid small|full]
   greenpod calibrate [--reps N]
   greenpod serve --trace FILE|- [--scheme S] [--time-scale X] [--only topsis|default]
                  [--profile NAME]
@@ -335,21 +335,34 @@ fn run_experiment(cfg: &Config, args: &Args) -> Result<()> {
 
 /// `greenpod bench sched` — time scheduling cycles for the legacy
 /// monoliths vs every registered framework profile on the paper
-/// cluster, and emit `BENCH_sched.json` for CI trend tracking.
+/// cluster, then sweep a scaling curve (node count × pending-queue
+/// depth) over synthetic near-full clusters, and emit
+/// `BENCH_sched.json` for CI trend tracking.
 fn run_bench(cfg: &Config, args: &Args) -> Result<()> {
     match args.command(1) {
-        Some("sched") => bench_sched(cfg),
+        Some("sched") => bench_sched(cfg, args.opt("grid").unwrap_or("full")),
         other => bail!(
             "unknown bench target {other:?} (expected `sched`)\n\n{USAGE}"
         ),
     }
 }
 
-fn bench_sched(cfg: &Config) -> Result<()> {
-    use greenpod::cluster::{ClusterState, Pod};
+fn bench_sched(cfg: &Config, grid: &str) -> Result<()> {
+    use greenpod::cluster::{
+        ClusterState, NodeCategory, Pod, ResourceRequests,
+    };
+    use greenpod::config::{ClusterConfig, NodePoolConfig};
     use greenpod::scheduler::Scheduler;
     use greenpod::util::bench::Bench;
     use greenpod::util::json::Json;
+
+    // Scaling-curve grid: node counts × pending-queue depths. `small`
+    // keeps CI fast; `full` is the paper-style sweep up to 100k nodes.
+    let (node_counts, depths): (&[usize], &[usize]) = match grid {
+        "small" => (&[1_000, 10_000], &[64]),
+        "full" => (&[1_000, 10_000, 100_000], &[64, 512]),
+        other => bail!("unknown --grid `{other}` (expected small|full)"),
+    };
 
     let state = ClusterState::from_config(&cfg.cluster);
     let pod = Pod::new(0, WorkloadClass::Medium, SchedulerKind::Topsis, 0.0, 4);
@@ -378,6 +391,94 @@ fn bench_sched(cfg: &Config) -> Result<()> {
         });
     }
 
+    // Scaling curves: one homogeneous pool of `n` nodes, all but 8
+    // loaded to near-capacity so a probe pod's feasible set is O(1) —
+    // the indexed Filter rejects the loaded nodes without visiting
+    // them. Each measured "cycle" drains a deep pending queue (8 binds
+    // succeed, the rest fail fast), then releases everything so every
+    // iteration sees the same state.
+    let mut curves: Vec<Json> = Vec::new();
+    for &n in node_counts {
+        let pool = ClusterConfig {
+            pools: vec![NodePoolConfig {
+                category: NodeCategory::B,
+                machine_type: "bench".into(),
+                count: n,
+                cpu_millis: 4_000,
+                memory_mib: 16_384,
+                speed_factor: 1.0,
+                power_scale: 1.0,
+            }],
+            schedulable_default_pool: true,
+        };
+        let mut curve_state = ClusterState::from_config(&pool);
+        let free_nodes = 8usize.min(n);
+        let mut filler =
+            Pod::new(0, WorkloadClass::Medium, SchedulerKind::Topsis, 0.0, 4);
+        filler.requests =
+            ResourceRequests { cpu_millis: 3_500, memory_mib: 15_360 };
+        for id in free_nodes..n {
+            filler.id = (id - free_nodes) as u64;
+            curve_state
+                .bind(&filler, id, 0.0)
+                .expect("filler pod fits an empty bench node");
+        }
+        for profile in ["greenpod", "default-k8s"] {
+            for &depth in depths {
+                let probes: Vec<Pod> = (0..depth)
+                    .map(|j| {
+                        let mut p = Pod::new(
+                            1_000_000 + j as u64,
+                            WorkloadClass::Medium,
+                            SchedulerKind::Topsis,
+                            0.0,
+                            4,
+                        );
+                        p.requests = ResourceRequests {
+                            cpu_millis: 2_500,
+                            memory_mib: 9_000,
+                        };
+                        p
+                    })
+                    .collect();
+                let mut sched = registry.build(profile, &opts)?;
+                let mut placed: Vec<u64> = Vec::new();
+                let name = format!(
+                    "sched/curve/{profile}/nodes={n}/pending={depth}"
+                );
+                b.bench(&name, || {
+                    for p in &probes {
+                        if let Some(node) =
+                            sched.schedule(&curve_state, p).node
+                        {
+                            curve_state
+                                .bind(p, node, 0.0)
+                                .expect("scheduler picked a feasible node");
+                            placed.push(p.id);
+                        }
+                    }
+                    let bound = placed.len();
+                    for id in placed.drain(..) {
+                        curve_state
+                            .release(id, 0.0)
+                            .expect("probe pod was bound");
+                    }
+                    bound
+                });
+                let r = b.results().last().expect("bench just recorded");
+                curves.push(Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("profile", Json::Str(profile.into())),
+                    ("nodes", Json::Uint(n as u64)),
+                    ("pending", Json::Uint(depth as u64)),
+                    ("ns_per_cycle", Json::Num(r.summary.mean * 1e9)),
+                    ("p50_ns", Json::Num(r.summary.p50 * 1e9)),
+                    ("iters", Json::Uint(r.iters as u64)),
+                ]));
+            }
+        }
+    }
+
     let rows: Vec<Json> = b
         .results()
         .iter()
@@ -395,6 +496,7 @@ fn bench_sched(cfg: &Config) -> Result<()> {
     let out = Json::obj(vec![
         ("bench", Json::Str("sched".into())),
         ("benchmarks", Json::Arr(rows)),
+        ("curves", Json::Arr(curves)),
     ]);
     std::fs::write("BENCH_sched.json", out.pretty())?;
     b.finish();

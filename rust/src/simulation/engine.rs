@@ -78,6 +78,13 @@ pub struct SimulationParams {
     /// eGRID scalar as a constant — bit-identical to the pre-signal
     /// engine, which the differential property pins).
     pub carbon: Option<CarbonSignal>,
+    /// Differential-testing knob: run every scheduling cycle even when
+    /// no node changed and no pod arrived since the previous cycle,
+    /// instead of short-circuiting the provably-futile retry pass.
+    /// The skip is placement-neutral by construction (an unchanged
+    /// cluster re-fails every pending pod identically); the regression
+    /// test pins forced ≡ guarded bitwise.
+    pub force_full_cycles: bool,
 }
 
 impl Default for SimulationParams {
@@ -89,6 +96,7 @@ impl Default for SimulationParams {
             autoscaler: None,
             billing_horizon_s: None,
             carbon: None,
+            force_full_cycles: false,
         }
     }
 }
@@ -136,6 +144,14 @@ struct RunState {
     next_tick: Option<f64>,
     makespan: f64,
     cycle_queued: bool,
+    /// Arena for the autoscaler's pending-wait vector (rebuilt each
+    /// consultation into the same allocation).
+    waits_buf: Vec<f64>,
+    /// `state.mutations()` as of the end of the previous scheduling
+    /// cycle (`u64::MAX` = no cycle yet, never matches).
+    last_cycle_mutations: u64,
+    /// Whether any pod arrived since the previous scheduling cycle.
+    arrivals_since_cycle: bool,
 }
 
 impl RunState {
@@ -162,6 +178,9 @@ impl RunState {
             next_tick: None,
             makespan: 0.0,
             cycle_queued: false,
+            waits_buf: Vec::new(),
+            last_cycle_mutations: u64::MAX,
+            arrivals_since_cycle: false,
         }
     }
 
@@ -291,11 +310,29 @@ impl<'a> SimulationEngine<'a> {
             match ev.event {
                 SimEvent::PodArrival { pod } => {
                     rs.pending.push_back(pod);
+                    rs.arrivals_since_cycle = true;
                     rs.request_cycle(now);
                 }
                 SimEvent::SchedulingCycle => {
                     rs.cycle_queued = false;
-                    self.drain_pending(&mut rs, now, &mut pods, topsis, default);
+                    // Short-circuit a provably-futile retry pass: if no
+                    // node changed and nothing arrived since the last
+                    // cycle, every pending pod re-fails identically.
+                    // (Today every cycle request follows a mutation or
+                    // an arrival, so this guard is structural — it
+                    // keeps future cycle sources, e.g. periodic
+                    // re-syncs, from going quadratic in the backlog.)
+                    let unchanged = !rs.arrivals_since_cycle
+                        && rs.last_cycle_mutations == rs.state.mutations();
+                    if !unchanged || self.params.force_full_cycles {
+                        self.drain_pending(
+                            &mut rs, now, &mut pods, topsis, default,
+                        );
+                    }
+                    // Record *after* draining: the cycle's own binds
+                    // must not look like fresh mutations next time.
+                    rs.last_cycle_mutations = rs.state.mutations();
+                    rs.arrivals_since_cycle = false;
                 }
                 SimEvent::PodCompleted { pod } => {
                     self.complete(&mut rs, now, &mut pods, pod);
@@ -346,13 +383,15 @@ impl<'a> SimulationEngine<'a> {
         pods: &[Pod],
         policy: &mut dyn Autoscaler,
     ) {
-        let waits: Vec<f64> =
-            rs.pending.iter().map(|&i| now - pods[i].arrival_s).collect();
+        let mut waits = std::mem::take(&mut rs.waits_buf);
+        waits.clear();
+        waits.extend(rs.pending.iter().map(|&i| now - pods[i].arrival_s));
         let decision = policy.decide(&Observation {
             now_s: now,
             state: &rs.state,
             pending_wait_s: &waits,
         });
+        rs.waits_buf = waits;
         for action in decision.actions {
             match action {
                 ScalingAction::Provision { template, ready_at_s } => {
@@ -809,6 +848,69 @@ mod tests {
         assert_eq!(plain.makespan_s, noop.makespan_s);
         assert!(noop.scaling.is_empty());
         assert_eq!(plain.node_timeline, noop.node_timeline);
+    }
+
+    #[test]
+    fn forced_full_cycles_are_bit_identical_to_guarded() {
+        use crate::autoscaler::{AutoscalerPolicy, ThresholdConfig};
+        use crate::workload::WorkloadClass;
+
+        // The no-change short-circuit must be placement-neutral: the
+        // same backlog-heavy autoscaled run with every cycle forced
+        // must match the guarded run bitwise, record for record.
+        let config = Config::paper_default();
+        let executor = WorkloadExecutor::analytic();
+        let mut pods = Vec::new();
+        for i in 0..18u64 {
+            let at = 0.25 * (i / 6) as f64;
+            pods.push(Pod::new(
+                i,
+                WorkloadClass::Complex,
+                SchedulerKind::Topsis,
+                at,
+                1,
+            ));
+        }
+        let policy = || ThresholdConfig {
+            scale_out_pending: 2,
+            scale_out_wait_p95_s: f64::INFINITY,
+            provision_delay_s: 5.0,
+            cooldown_s: 2.0,
+            idle_scale_in_s: 10.0,
+            min_nodes: 7,
+            max_nodes: 10,
+            template: ThresholdConfig::edge_template(&config.cluster),
+            carbon: None,
+        };
+        let run = |force: bool| {
+            let mut params = SimulationParams::with_beta_and_seed(0.35, 1)
+                .with_autoscaler(AutoscalerPolicy::Threshold(policy()));
+            params.force_full_cycles = force;
+            let engine = SimulationEngine::new(&config, params, &executor);
+            let mut topsis = GreenPodScheduler::new(
+                Estimator::with_defaults(config.energy.clone()),
+                WeightingScheme::EnergyCentric,
+            );
+            let mut default = DefaultK8sScheduler::new(1);
+            engine.run(pods.clone(), &mut topsis, &mut default)
+        };
+        let guarded = run(false);
+        let forced = run(true);
+        assert_eq!(guarded.records.len(), forced.records.len());
+        for (x, y) in guarded.records.iter().zip(&forced.records) {
+            assert_eq!(x.pod, y.pod);
+            assert_eq!(x.node, y.node);
+            assert_eq!(x.start_s, y.start_s);
+            assert_eq!(x.finish_s, y.finish_s);
+            assert_eq!(x.attempts, y.attempts);
+            assert_eq!(x.joules.to_bits(), y.joules.to_bits());
+        }
+        assert_eq!(guarded.events, forced.events);
+        assert_eq!(guarded.node_timeline, forced.node_timeline);
+        assert_eq!(
+            guarded.makespan_s.to_bits(),
+            forced.makespan_s.to_bits()
+        );
     }
 
     #[test]

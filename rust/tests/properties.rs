@@ -1317,6 +1317,187 @@ fn prop_framework_engine_run_bit_identical() {
     }
 }
 
+#[test]
+fn prop_incremental_scoring_bit_identical_to_full_rescore() {
+    // The hot-path pin: a scheduler reusing version-stamped estimator
+    // rows across cycles (incremental, the default) must place every
+    // pod on the same node with bit-identical published scores as a
+    // twin forced to rescore from scratch each decision — across all
+    // built-in profiles, churn (readiness flips, autoscaler-style
+    // joins, releases), varying pod shapes, and back-to-back decisions
+    // with no intervening mutation (the pure cache-hit path).
+    let mut rng = Rng::seed_from_u64(41);
+    let config = Config::paper_default();
+    let profiles =
+        ["greenpod", "default-k8s", "carbon-aware", "hybrid-topsis-balanced"];
+    for case in 0..prop_cases(12) {
+        for profile in profiles {
+            let seed = rng.next_u64();
+            let registry = ProfileRegistry::new(&config);
+            let opts = BuildOptions::new(&config, random_scheme(&mut rng))
+                .with_seed(seed);
+            let mut inc = registry.build(profile, &opts).unwrap();
+            let mut full = registry.build(profile, &opts).unwrap();
+            full.set_incremental(false);
+
+            let mut state = ClusterState::from_config(&config.cluster);
+            let mut bound: Vec<u64> = Vec::new();
+            let mut id = 0u64;
+            let mut now = 0.0;
+            for _step in 0..60 {
+                now += 7.5;
+                // Churn between decisions: readiness flips (up-biased
+                // so the cluster never drains), joins, releases.
+                if rng.chance(0.25) {
+                    let node = rng.below(state.nodes().len());
+                    state.set_ready(node, rng.chance(0.7), now);
+                }
+                if rng.chance(0.1) {
+                    let n = state.add_node(&config.cluster.pools[0], now);
+                    state.set_ready(n, true, now);
+                }
+                if rng.chance(0.3) && !bound.is_empty() {
+                    let idx = rng.below(bound.len());
+                    state.release(bound.swap_remove(idx), now).unwrap();
+                }
+                let class = [
+                    WorkloadClass::Light,
+                    WorkloadClass::Medium,
+                    WorkloadClass::Complex,
+                ][rng.below(3)];
+                let pod = Pod::new(
+                    id,
+                    class,
+                    SchedulerKind::Topsis,
+                    now,
+                    1 + rng.below(4) as u32,
+                );
+                id += 1;
+                // Repeat = same pod shape with zero mutations in
+                // between: the incremental twin serves the whole row
+                // set from cache and must still agree.
+                let repeats = if rng.chance(0.3) { 2 } else { 1 };
+                let mut choice = None;
+                for _ in 0..repeats {
+                    let a = inc.schedule_at(&state, &pod, now);
+                    let b = full.schedule_at(&state, &pod, now);
+                    assert_eq!(
+                        a.node, b.node,
+                        "case {case} {profile} pod {}: node diverged",
+                        pod.id
+                    );
+                    assert_eq!(
+                        a.scores.len(),
+                        b.scores.len(),
+                        "case {case} {profile} pod {}: candidate sets",
+                        pod.id
+                    );
+                    for (&(na, sa), &(nb, sb)) in
+                        a.scores.iter().zip(&b.scores)
+                    {
+                        assert_eq!(
+                            na, nb,
+                            "case {case} {profile}: candidate order"
+                        );
+                        assert_eq!(
+                            sa.to_bits(),
+                            sb.to_bits(),
+                            "case {case} {profile} pod {} node {na}: \
+                             {sa} != {sb}",
+                            pod.id
+                        );
+                    }
+                    choice = a.node;
+                }
+                if let Some(node) = choice {
+                    state.bind(&pod, node, now).unwrap();
+                    bound.push(pod.id);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_indexed_feasibility_matches_scan() {
+    // The log2-bucket free-capacity indices must answer exactly the
+    // same (sorted) feasible set as the reference O(nodes) scan for
+    // any request shape — zero, typical, axis-skewed, oversized (a pod
+    // bigger than every node: empty set, not a panic) — over
+    // arbitrarily churned clusters.
+    use greenpod::cluster::ResourceRequests;
+    let mut rng = Rng::seed_from_u64(42);
+    let config = Config::paper_default();
+    for case in 0..prop_cases(80) {
+        let mut state = ClusterState::from_config(&config.cluster);
+        let mut bound: Vec<u64> = Vec::new();
+        let mut id = 0u64;
+        for step in 0..80 {
+            match rng.below(10) {
+                0 => {
+                    let node = rng.below(state.nodes().len());
+                    state.set_ready(node, rng.chance(0.6), 0.0);
+                }
+                1 => {
+                    let pool = rng.below(config.cluster.pools.len());
+                    let n =
+                        state.add_node(&config.cluster.pools[pool], 0.0);
+                    if rng.chance(0.7) {
+                        state.set_ready(n, true, 0.0);
+                    }
+                }
+                2 | 3 => {
+                    if !bound.is_empty() {
+                        let idx = rng.below(bound.len());
+                        state
+                            .release(bound.swap_remove(idx), 0.0)
+                            .unwrap();
+                    }
+                }
+                _ => {
+                    let class = [
+                        WorkloadClass::Light,
+                        WorkloadClass::Medium,
+                        WorkloadClass::Complex,
+                    ][rng.below(3)];
+                    let pod =
+                        Pod::new(id, class, SchedulerKind::Topsis, 0.0, 1);
+                    id += 1;
+                    let node = rng.below(state.nodes().len());
+                    if state.bind(&pod, node, 0.0).is_ok() {
+                        bound.push(pod.id);
+                    }
+                }
+            }
+            let req = match rng.below(5) {
+                0 => ResourceRequests { cpu_millis: 0, memory_mib: 0 },
+                1 => ResourceRequests {
+                    cpu_millis: 1_000_000,
+                    memory_mib: 1_000_000,
+                },
+                2 => ResourceRequests {
+                    cpu_millis: rng.next_u64() % 5_000,
+                    memory_mib: 1,
+                },
+                3 => ResourceRequests {
+                    cpu_millis: 1,
+                    memory_mib: rng.next_u64() % 20_000,
+                },
+                _ => ResourceRequests {
+                    cpu_millis: rng.next_u64() % 3_000,
+                    memory_mib: rng.next_u64() % 10_000,
+                },
+            };
+            assert_eq!(
+                state.feasible_nodes(req),
+                state.feasible_nodes_scan(req),
+                "case {case} step {step}: index diverged from scan \
+                 ({req:?})"
+            );
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // Percentile unification (the util::stats nearest-rank helper —
 // DESIGN.md §"Federation" bugfix sweep).
@@ -1470,6 +1651,7 @@ fn prop_federation_single_region_is_bit_identical_to_plain_engine() {
             autoscaler: policy.clone(),
             billing_horizon_s: None,
             carbon: Some(signal.clone()),
+            force_full_cycles: false,
         };
         let engine = SimulationEngine::new(&config, params, &executor);
         let mut topsis = GreenPodScheduler::new(
