@@ -16,9 +16,7 @@ use std::collections::HashMap;
 
 use greenpod::cluster::NodeCategory;
 use greenpod::config::{Config, SchedulerKind, WeightingScheme};
-use greenpod::scheduler::{
-    DefaultK8sScheduler, Estimator, GreenPodScheduler,
-};
+use greenpod::framework::{BuildOptions, ProfileRegistry};
 use greenpod::simulation::{SimulationEngine, SimulationParams};
 use greenpod::workload::{
     ArrivalTrace, TraceSpec, WorkloadClass, WorkloadExecutor,
@@ -76,13 +74,12 @@ fn main() -> anyhow::Result<()> {
     // scheduler per run, so the comparison is apples-to-apples).
     let mut report: Vec<(&str, f64, f64, HashMap<NodeCategory, u32>)> =
         Vec::new();
+    let registry = ProfileRegistry::new(&cfg);
+    let opts = BuildOptions::new(&cfg, WeightingScheme::EnergyCentric);
     for kind in [SchedulerKind::Topsis, SchedulerKind::DefaultK8s] {
         let pods = trace.to_pods(kind);
-        let mut topsis = GreenPodScheduler::new(
-            Estimator::with_defaults(cfg.energy.clone()),
-            WeightingScheme::EnergyCentric,
-        );
-        let mut default = DefaultK8sScheduler::new(cfg.experiment.seed);
+        let mut topsis = registry.build("greenpod", &opts)?;
+        let mut default = registry.build("default-k8s", &opts)?;
         let result = engine.run(pods, &mut topsis, &mut default);
         anyhow::ensure!(
             result.unschedulable.is_empty(),

@@ -19,11 +19,9 @@ use greenpod::cluster::ClusterState;
 use greenpod::config::{
     CompetitionLevel, Config, SchedulerKind, WeightingScheme,
 };
-use greenpod::runtime::{ArtifactRegistry, LinRegRunner, PjrtTopsisEngine};
-use greenpod::scheduler::{
-    DefaultK8sScheduler, Estimator, GreenPodScheduler, Scheduler,
-    ScoringBackend,
-};
+use greenpod::framework::{BuildOptions, ProfileRegistry};
+use greenpod::runtime::{ArtifactRegistry, LinRegRunner};
+use greenpod::scheduler::Scheduler;
 use greenpod::workload::generate_pods;
 
 fn main() -> anyhow::Result<()> {
@@ -39,14 +37,11 @@ fn main() -> anyhow::Result<()> {
     // --- L3: schedule the medium-competition pod set, scoring through
     // the AOT Pallas TOPSIS kernel.
     let mut state = ClusterState::from_config(&cfg.cluster);
-    let mut topsis = GreenPodScheduler::new(
-        Estimator::with_defaults(cfg.energy.clone()),
-        WeightingScheme::EnergyCentric,
-    )
-    .with_backend(ScoringBackend::Pjrt(Box::new(PjrtTopsisEngine::new(
-        registry.clone(),
-    ))));
-    let mut default = DefaultK8sScheduler::new(cfg.experiment.seed);
+    let profiles = ProfileRegistry::new(&cfg);
+    let opts = BuildOptions::new(&cfg, WeightingScheme::EnergyCentric)
+        .with_pjrt(Some(registry.clone()));
+    let mut topsis = profiles.build("greenpod", &opts)?;
+    let mut default = profiles.build("default-k8s", &opts)?;
 
     let set = generate_pods(
         CompetitionLevel::Medium,
@@ -78,9 +73,9 @@ fn main() -> anyhow::Result<()> {
         placements.push((pod.clone(), node));
     }
     anyhow::ensure!(
-        topsis.pjrt_fallbacks == 0,
+        topsis.pjrt_fallbacks() == 0,
         "PJRT scoring fell back {} times",
-        topsis.pjrt_fallbacks
+        topsis.pjrt_fallbacks()
     );
     println!(
         "mean scheduling latency: {:.1} µs (PJRT TOPSIS backend)",

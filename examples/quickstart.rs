@@ -7,9 +7,10 @@
 
 use greenpod::cluster::ClusterState;
 use greenpod::config::{Config, SchedulerKind, WeightingScheme};
-use greenpod::scheduler::{
-    DefaultK8sScheduler, Estimator, GreenPodScheduler, Scheduler,
+use greenpod::framework::{
+    build_decision_problem, BuildOptions, ProfileRegistry,
 };
+use greenpod::scheduler::{Estimator, Scheduler};
 use greenpod::workload::WorkloadClass;
 
 fn main() -> anyhow::Result<()> {
@@ -25,11 +26,14 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let mut greenpod_sched = GreenPodScheduler::new(
-        Estimator::with_defaults(cfg.energy.clone()),
-        WeightingScheme::EnergyCentric,
-    );
-    let mut default_sched = DefaultK8sScheduler::new(cfg.experiment.seed);
+    let registry = ProfileRegistry::new(&cfg);
+    let opts = BuildOptions::new(&cfg, WeightingScheme::EnergyCentric);
+    let mut greenpod_sched = registry.build("greenpod", &opts)?;
+    let mut default_sched = registry.build("default-k8s", &opts)?;
+    // The estimator + weights behind the `greenpod` profile, used below
+    // to display the decision matrix the profile scores.
+    let estimator = Estimator::with_defaults(cfg.energy.clone());
+    let weights = WeightingScheme::EnergyCentric.weights();
 
     println!("\nplacing one pod of each class (energy-centric profile):");
     for (i, class) in WorkloadClass::ALL.into_iter().enumerate() {
@@ -43,7 +47,9 @@ fn main() -> anyhow::Result<()> {
 
         // Show the decision matrix GreenPod evaluates.
         let candidates = state.feasible_nodes(pod.requests);
-        let problem = greenpod_sched.decision_problem(&state, &pod, &candidates);
+        let problem = build_decision_problem(
+            &estimator, weights, &state, &pod, &candidates,
+        );
         println!(
             "\n{} pod ({}m CPU / {} MiB): decision matrix",
             class.label(),

@@ -7,9 +7,7 @@
 
 use greenpod::api::{ApiEvent, ApiLoop, PodSubmission};
 use greenpod::config::{Config, SchedulerKind, WeightingScheme};
-use greenpod::scheduler::{
-    DefaultK8sScheduler, Estimator, GreenPodScheduler,
-};
+use greenpod::framework::{BuildOptions, ProfileRegistry};
 use greenpod::workload::{ArrivalTrace, TraceSpec, WorkloadExecutor};
 
 fn main() -> anyhow::Result<()> {
@@ -46,11 +44,10 @@ fn main() -> anyhow::Result<()> {
         }
     });
 
-    let mut topsis = GreenPodScheduler::new(
-        Estimator::with_defaults(cfg.energy.clone()),
-        WeightingScheme::EnergyCentric,
-    );
-    let mut default = DefaultK8sScheduler::new(cfg.experiment.seed);
+    let registry = ProfileRegistry::new(&cfg);
+    let opts = BuildOptions::new(&cfg, WeightingScheme::EnergyCentric);
+    let mut topsis = registry.build("greenpod", &opts)?;
+    let mut default = registry.build("default-k8s", &opts)?;
 
     let mut bound = 0u64;
     api.run(

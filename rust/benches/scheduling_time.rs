@@ -1,21 +1,24 @@
 //! Bench: per-pod scheduling latency — the paper's "scheduling time
-//! (ms)" overhead metric (Table IV), GreenPod TOPSIS vs the default
-//! scheduler, swept over cluster sizes (the paper's 6-node Table I
+//! (ms)" overhead metric (Table IV), every registered framework
+//! profile swept over cluster sizes (the paper's 6-node Table I
 //! cluster up to 96 nodes).
 
 use greenpod::cluster::ClusterState;
 use greenpod::config::{
     ClusterConfig, Config, SchedulerKind, WeightingScheme,
 };
-use greenpod::scheduler::{
-    DefaultK8sScheduler, Estimator, GreenPodScheduler, Scheduler,
+use greenpod::framework::{
+    build_decision_problem, BuildOptions, ProfileRegistry,
 };
+use greenpod::scheduler::{Estimator, Scheduler};
 use greenpod::util::bench::Bench;
 use greenpod::workload::WorkloadClass;
 
 fn main() {
     let cfg = Config::paper_default();
     let mut b = Bench::new();
+    let registry = ProfileRegistry::new(&cfg);
+    let opts = BuildOptions::new(&cfg, WeightingScheme::EnergyCentric);
 
     for scale in [1usize, 4, 16] {
         let cluster = ClusterConfig::scaled(scale);
@@ -29,27 +32,8 @@ fn main() {
             4,
         );
 
-        let mut greenpod_sched = GreenPodScheduler::new(
-            Estimator::with_defaults(cfg.energy.clone()),
-            WeightingScheme::EnergyCentric,
-        );
-        b.bench(&format!("schedule/greenpod-topsis/{n_nodes}-nodes"), || {
-            greenpod_sched.schedule(&state, &pod).node
-        });
-
-        let mut default_sched = DefaultK8sScheduler::new(1);
-        b.bench(&format!("schedule/default-k8s/{n_nodes}-nodes"), || {
-            default_sched.schedule(&state, &pod).node
-        });
-
-        // The same pipelines composed from framework plugins, plus the
-        // profiles only the framework can express — overhead of the
-        // extension-point indirection should be noise.
-        let registry = greenpod::framework::ProfileRegistry::new(&cfg);
-        let opts = greenpod::framework::BuildOptions::new(
-            &cfg,
-            WeightingScheme::EnergyCentric,
-        );
+        // Every registered profile (the `profile-greenpod` series
+        // continues the retired monolith's `greenpod-topsis` numbers).
         for name in registry.names() {
             let mut sched = registry.build(&name, &opts).unwrap();
             b.bench(&format!("schedule/profile-{name}/{n_nodes}-nodes"), || {
@@ -63,13 +47,12 @@ fn main() {
     let state = ClusterState::from_config(&ClusterConfig::scaled(16));
     let pod = greenpod::cluster::Pod::new(
         0, WorkloadClass::Medium, SchedulerKind::Topsis, 0.0, 4);
-    let greenpod_sched = GreenPodScheduler::new(
-        Estimator::with_defaults(cfg.energy.clone()),
-        WeightingScheme::EnergyCentric,
-    );
+    let estimator = Estimator::with_defaults(cfg.energy.clone());
+    let weights = WeightingScheme::EnergyCentric.weights();
     let candidates = state.feasible_nodes(pod.requests);
     b.bench("schedule/decision-matrix-only/96-nodes", || {
-        greenpod_sched.decision_problem(&state, &pod, &candidates).n
+        build_decision_problem(&estimator, weights, &state, &pod, &candidates)
+            .n
     });
 
     b.finish();

@@ -6,7 +6,7 @@ use greenpod::config::{
     ClusterConfig, CompetitionLevel, Config, WeightingScheme,
 };
 use greenpod::experiments::{run_once, ExperimentContext};
-use greenpod::scheduler::{DefaultK8sScheduler, Estimator, GreenPodScheduler};
+use greenpod::framework::{BuildOptions, ProfileRegistry};
 use greenpod::simulation::{SimulationEngine, SimulationParams};
 use greenpod::util::bench::Bench;
 use greenpod::workload::{ArrivalTrace, TraceSpec, WorkloadExecutor};
@@ -44,16 +44,16 @@ fn main() {
         SimulationParams::with_beta_and_seed(0.35, 3),
         &executor,
     );
+    let registry = ProfileRegistry::new(&big);
+    let opts = BuildOptions::new(&big, WeightingScheme::EnergyCentric)
+        .with_seed(3);
     b.bench(
         &format!("simulation/stress/24-nodes/{n_pods}-pods"),
         || {
             let pods =
                 trace.to_pods(greenpod::config::SchedulerKind::Topsis);
-            let mut topsis = GreenPodScheduler::new(
-                Estimator::with_defaults(big.energy.clone()),
-                WeightingScheme::EnergyCentric,
-            );
-            let mut default = DefaultK8sScheduler::new(3);
+            let mut topsis = registry.build("greenpod", &opts).unwrap();
+            let mut default = registry.build("default-k8s", &opts).unwrap();
             engine.run(pods, &mut topsis, &mut default).records.len()
         },
     );

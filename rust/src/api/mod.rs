@@ -402,10 +402,24 @@ impl ApiLoop {
 mod tests {
     use super::*;
     use crate::config::WeightingScheme;
-    use crate::scheduler::{
-        DefaultK8sScheduler, Estimator, GreenPodScheduler,
+    use crate::framework::{
+        BuildOptions, FrameworkScheduler, ProfileRegistry,
     };
     use crate::workload::WorkloadClass;
+
+    /// Registry-built scheduler pair (seed 1, matching the retired
+    /// monolith constructions these tests used).
+    fn scheds(
+        config: &Config,
+        scheme: WeightingScheme,
+    ) -> (FrameworkScheduler, FrameworkScheduler) {
+        let registry = ProfileRegistry::new(config);
+        let opts = BuildOptions::new(config, scheme).with_seed(1);
+        (
+            registry.build("greenpod", &opts).expect("built-in"),
+            registry.build("default-k8s", &opts).expect("built-in"),
+        )
+    }
 
     #[test]
     fn serve_loop_processes_submissions() {
@@ -434,11 +448,8 @@ mod tests {
         }
         drop(sub_tx);
 
-        let mut topsis = GreenPodScheduler::new(
-            Estimator::with_defaults(config.energy.clone()),
-            WeightingScheme::EnergyCentric,
-        );
-        let mut default = DefaultK8sScheduler::new(1);
+        let (mut topsis, mut default) =
+            scheds(&config, WeightingScheme::EnergyCentric);
         let mut events = Vec::new();
         api.run(sub_rx, &mut |e| events.push(e), &mut topsis, &mut default)
             .unwrap();
@@ -485,11 +496,8 @@ mod tests {
                 .unwrap();
         }
         drop(sub_tx);
-        let mut topsis = GreenPodScheduler::new(
-            Estimator::with_defaults(config.energy.clone()),
-            WeightingScheme::General,
-        );
-        let mut default = DefaultK8sScheduler::new(1);
+        let (mut topsis, mut default) =
+            scheds(&config, WeightingScheme::General);
         let mut completed = 0;
         api.run(
             sub_rx,
@@ -607,11 +615,8 @@ mod tests {
                 .unwrap();
         }
         drop(sub_tx);
-        let mut topsis = GreenPodScheduler::new(
-            Estimator::with_defaults(config.energy.clone()),
-            WeightingScheme::EnergyCentric,
-        );
-        let mut default = DefaultK8sScheduler::new(1);
+        let (mut topsis, mut default) =
+            scheds(&config, WeightingScheme::EnergyCentric);
         let mut grids = Vec::new();
         api.run(
             sub_rx,
@@ -668,11 +673,8 @@ mod tests {
                 .unwrap();
         }
         drop(sub_tx);
-        let mut topsis = GreenPodScheduler::new(
-            Estimator::with_defaults(config.energy.clone()),
-            WeightingScheme::General,
-        );
-        let mut default = DefaultK8sScheduler::new(1);
+        let (mut topsis, mut default) =
+            scheds(&config, WeightingScheme::General);
         let mut waits = Vec::new();
         api.run(
             sub_rx,

@@ -32,7 +32,7 @@ pub use federation::{
 };
 pub use profile::{
     ProfileSpec, ProfileTieBreak, ScorePluginKind, ScorePluginSpec,
-    BUILTIN_PROFILE_NAMES,
+    BUILTIN_PROFILE_NAMES, LEGACY_PROFILE_ALIASES,
 };
 pub use weights::{WeightingScheme, BENEFIT_MASK, CRITERIA_NAMES, NUM_CRITERIA};
 

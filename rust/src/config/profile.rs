@@ -14,6 +14,14 @@ use super::WeightingScheme;
 pub const BUILTIN_PROFILE_NAMES: [&str; 4] =
     ["greenpod", "default-k8s", "carbon-aware", "hybrid-topsis-balanced"];
 
+/// Deprecated scheduler names from the retired monolith era, mapped to
+/// the framework profile that replaced each. The registry resolves
+/// these on `build`/`contains` so monolith-era configs and `--profile`
+/// flags keep working; they are reserved like built-ins, so
+/// config-defined profiles may not shadow them either.
+pub const LEGACY_PROFILE_ALIASES: [(&str, &str); 1] =
+    [("greenpod-topsis", "greenpod")];
+
 /// Tie-break policy of a configured profile.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ProfileTieBreak {
@@ -95,6 +103,13 @@ impl ProfileSpec {
             self.name
         );
         anyhow::ensure!(
+            !LEGACY_PROFILE_ALIASES
+                .iter()
+                .any(|(legacy, _)| *legacy == self.name),
+            "profile name `{}` shadows a deprecated built-in alias",
+            self.name
+        );
+        anyhow::ensure!(
             !self.plugins.is_empty(),
             "profile `{}` has no score plugins",
             self.name
@@ -150,6 +165,11 @@ mod tests {
     fn builtin_shadowing_rejected() {
         assert!(spec("greenpod").validate().is_err());
         assert!(spec("default-k8s").validate().is_err());
+    }
+
+    #[test]
+    fn legacy_alias_shadowing_rejected() {
+        assert!(spec("greenpod-topsis").validate().is_err());
     }
 
     #[test]

@@ -635,6 +635,40 @@ mod tests {
     }
 
     #[test]
+    fn legacy_scheduler_name_resolves_across_config_roundtrip() {
+        // Monolith-era back-compat: `greenpod-topsis` is not a config
+        // field, but a registry built from any config — including one
+        // that went through a dump → parse round-trip — must keep
+        // resolving the deprecated name to the `greenpod` profile.
+        use crate::config::WeightingScheme;
+        use crate::framework::{BuildOptions, ProfileRegistry};
+        use crate::scheduler::Scheduler;
+        let cfg = config_from_json(
+            r#"{"profiles": [
+                {"name": "my-hybrid",
+                 "plugins": [{"plugin": "least-allocated"}]}
+            ]}"#,
+        )
+        .unwrap();
+        cfg.validate().unwrap();
+        let back = config_from_json(&config_to_json(&cfg).pretty()).unwrap();
+        back.validate().unwrap();
+        let registry = ProfileRegistry::new(&back);
+        assert!(registry.contains("greenpod-topsis"));
+        let opts =
+            BuildOptions::new(&back, WeightingScheme::EnergyCentric);
+        let sched = registry.build("greenpod-topsis", &opts).unwrap();
+        assert_eq!(sched.name(), "greenpod");
+        // And a config profile may not shadow the deprecated alias.
+        let shadow = config_from_json(
+            r#"{"profiles": [{"name": "greenpod-topsis",
+                "plugins": [{"plugin": "least-allocated"}]}]}"#,
+        )
+        .unwrap();
+        assert!(shadow.validate().is_err());
+    }
+
+    #[test]
     fn carbon_sections_parse_and_roundtrip() {
         for text in [
             r#"{"carbon": {"mode": "constant"}}"#,

@@ -204,8 +204,8 @@ pub fn run_once(
 
 /// Shared run mechanics for uniform and mixed deployments. Schedulers
 /// are composed through the profile registry — the framework profiles
-/// are pinned bit-identical to the legacy monoliths, so every pinned
-/// table/figure is unchanged.
+/// were pinned bit-identical to the legacy monoliths before those were
+/// retired, so every pinned table/figure is unchanged.
 fn run_pods(
     ctx: &ExperimentContext,
     pods: Vec<crate::cluster::Pod>,

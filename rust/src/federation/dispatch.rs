@@ -43,15 +43,23 @@ impl RegionSnapshot<'_> {
     /// queue). Integer arithmetic keeps it exactly mirrorable by the
     /// Python oracle.
     pub fn has_capacity(&self, pod: &Pod) -> bool {
+        let mut ready = 0usize;
         let mut free_cpu = 0u64;
         let mut free_mem = 0u64;
         for id in 0..self.state.nodes().len() {
             if self.state.node(id).ready {
+                ready += 1;
                 free_cpu += self.state.free_cpu(id);
                 free_mem += self.state.free_memory(id);
             }
         }
-        free_cpu >= self.pending_cpu_millis + pod.requests.cpu_millis
+        // Zero-capacity guard (the aggregate analogue of the
+        // NaN-guarded utilization ratios): with no Ready node the
+        // aggregate comparison alone would wave a zero-request pod
+        // through (`0 >= 0`), routing it to a region that cannot bind
+        // anything.
+        ready > 0
+            && free_cpu >= self.pending_cpu_millis + pod.requests.cpu_millis
             && free_mem >= self.pending_memory_mib + pod.requests.memory_mib
     }
 
@@ -329,6 +337,62 @@ mod tests {
             carbon: &sig,
         };
         assert!(!snap.has_capacity(&complex));
+    }
+
+    #[test]
+    fn zero_capacity_region_has_no_headroom_even_for_zero_request_pod() {
+        let cfg = ClusterConfig::paper_default();
+        let mut state = ClusterState::from_config(&cfg);
+        for id in 0..state.nodes().len() {
+            state.set_ready(id, false, 0.0);
+        }
+        let sig = CarbonSignal::constant(1.0);
+        let snap = RegionSnapshot {
+            index: 0,
+            name: "a",
+            state: &state,
+            pending_pods: 0,
+            pending_cpu_millis: 0,
+            pending_memory_mib: 0,
+            running_pods: 0,
+            carbon: &sig,
+        };
+        // A pod with zero requests would pass the aggregate comparison
+        // (`0 >= 0`) without the Ready-node guard, and carbon-greedy
+        // would route it to a region that cannot bind anything.
+        let mut zero = pod(WorkloadClass::Light);
+        zero.requests.cpu_millis = 0;
+        zero.requests.memory_mib = 0;
+        assert!(!snap.has_capacity(&zero));
+        // Carbon-greedy therefore falls back to least-pending instead
+        // of picking the clean-but-empty region.
+        let full = ClusterState::from_config(&cfg);
+        let clean = CarbonSignal::constant(0.5);
+        let dirty = CarbonSignal::constant(5.0);
+        let s = [
+            RegionSnapshot {
+                index: 0,
+                name: "empty-clean",
+                state: &state,
+                pending_pods: 0,
+                pending_cpu_millis: 0,
+                pending_memory_mib: 0,
+                running_pods: 0,
+                carbon: &clean,
+            },
+            RegionSnapshot {
+                index: 1,
+                name: "ready-dirty",
+                state: &full,
+                pending_pods: 0,
+                pending_cpu_millis: 0,
+                pending_memory_mib: 0,
+                running_pods: 0,
+                carbon: &dirty,
+            },
+        ];
+        let mut cg = CarbonGreedy::new();
+        assert_eq!(cg.dispatch(0.0, &zero, &s), 1);
     }
 
     #[test]

@@ -1,24 +1,24 @@
 //! The federation engine: N per-region event kernels under one shared
-//! virtual clock and merged event order.
+//! virtual clock and merged event order — **the one event loop in the
+//! tree**.
 //!
-//! [`FederationEngine::run`] mirrors `SimulationEngine::run`
-//! **operation-for-operation** — same seeding order (arrivals in pod
-//! order first), same per-event meter advance, same autoscaler
-//! consultation rule (at t = 0 and after every event that leaves no
-//! same-instant scheduling cycle outstanding in its region), same
-//! placement/completion arithmetic — with every piece of mutable state
-//! split per region and events routed by the merged queue's region
-//! tag. The one federation-specific step is arrival handling: the
+//! `SimulationEngine::run` is a thin wrapper around a 1-region
+//! federation: the merged queue degenerates to the plain kernel queue
+//! (identical `(time, priority, seq)` assignments), every dispatch
+//! resolves to region 0, and all arithmetic is the same float ops in
+//! the same order — so the delegation is record-for-record
+//! bit-identical to the retired standalone loop, pinned by the
+//! golden-fixture replays and
+//! `prop_federation_single_region_is_bit_identical_to_plain_engine`.
+//!
+//! The loop seeds arrivals in pod order, then each region's node-churn
+//! schedule in region order; advances the meter at every event; and
+//! consults each region's autoscaler at t = 0 and after every event
+//! that leaves no same-instant scheduling cycle outstanding in its
+//! region. The one federation-specific step is arrival handling: the
 //! [`Dispatcher`] resolves the pod's region at the arrival event's pop
 //! (seeing every region's live state), after which the pod belongs to
 //! that region's pending queue for good.
-//!
-//! Consequence, pinned by the property suite: a **1-region federation
-//! is record-for-record bit-identical to the plain engine** — the
-//! merged queue degenerates to the kernel queue (identical `(time,
-//! priority, seq)` assignments), every dispatch resolves to region 0,
-//! and all remaining arithmetic is the same float ops in the same
-//! order.
 
 use std::collections::{HashMap, VecDeque};
 
@@ -30,8 +30,9 @@ use crate::config::{Config, FederationConfig, SchedulerKind};
 use crate::energy::{CarbonSignal, EnergyMeter};
 use crate::scheduler::Scheduler;
 use crate::simulation::{
-    contention_factor, EventRecord, FedEventQueue, NodeCountSample,
-    PodRecord, RunResult, ScalingRecord, SimEvent, VirtualClock,
+    contention_factor, EventRecord, FedEventQueue, NodeChange,
+    NodeCountSample, PodRecord, RunResult, ScalingRecord, SimEvent,
+    VirtualClock,
 };
 use crate::workload::WorkloadExecutor;
 
@@ -47,6 +48,9 @@ pub struct RegionSpec {
     pub config: Config,
     pub carbon: CarbonSignal,
     pub autoscaler: Option<AutoscalerPolicy>,
+    /// Scheduled node-membership changes for this region (churn
+    /// injection; empty = the fixed configured cluster).
+    pub node_events: Vec<NodeChange>,
 }
 
 impl RegionSpec {
@@ -59,6 +63,7 @@ impl RegionSpec {
             config,
             carbon,
             autoscaler: None,
+            node_events: Vec::new(),
         }
     }
 
@@ -71,6 +76,12 @@ impl RegionSpec {
     /// Attach an autoscaling policy.
     pub fn with_autoscaler(mut self, policy: AutoscalerPolicy) -> Self {
         self.autoscaler = Some(policy);
+        self
+    }
+
+    /// Attach a node-churn schedule.
+    pub fn with_node_events(mut self, events: Vec<NodeChange>) -> Self {
+        self.node_events = events;
         self
     }
 
@@ -107,6 +118,7 @@ impl RegionSpec {
                     config,
                     carbon,
                     autoscaler,
+                    node_events: Vec::new(),
                 })
             })
             .collect()
@@ -121,9 +133,8 @@ pub struct RegionSchedulers {
 }
 
 /// Engine-level knobs (the federated counterpart of
-/// `SimulationParams`; node-churn injection stays a single-cluster
-/// feature — federated membership changes come from the per-region
-/// autoscalers).
+/// `SimulationParams`; per-region node churn lives on
+/// [`RegionSpec::node_events`]).
 #[derive(Debug, Clone)]
 pub struct FederationParams {
     pub contention_beta: f64,
@@ -134,11 +145,23 @@ pub struct FederationParams {
     /// compare over one window. `None` = each region bills to the
     /// run's final virtual time.
     pub billing_horizon_s: Option<f64>,
+    /// Differential-testing knob: run every scheduling cycle even when
+    /// no node changed and no pod arrived in the region since its
+    /// previous cycle, instead of short-circuiting the provably-futile
+    /// retry pass. The skip is placement-neutral by construction (an
+    /// unchanged cluster re-fails every pending pod identically); the
+    /// regression test pins forced ≡ guarded bitwise.
+    pub force_full_cycles: bool,
 }
 
 impl Default for FederationParams {
     fn default() -> Self {
-        Self { contention_beta: 0.35, seed: 0, billing_horizon_s: None }
+        Self {
+            contention_beta: 0.35,
+            seed: 0,
+            billing_horizon_s: None,
+            force_full_cycles: false,
+        }
     }
 }
 
@@ -180,6 +203,10 @@ struct RegionRun {
     last_cycle_mutations: u64,
     /// Whether any pod arrived in this region since its previous cycle.
     arrivals_since_cycle: bool,
+    /// Scheduling cycles that drained the pending queue.
+    cycles_run: u64,
+    /// Scheduling cycles short-circuited by the no-change guard.
+    cycles_skipped: u64,
 }
 
 impl RegionRun {
@@ -202,6 +229,8 @@ impl RegionRun {
             waits_buf: Vec::new(),
             last_cycle_mutations: u64::MAX,
             arrivals_since_cycle: false,
+            cycles_run: 0,
+            cycles_skipped: 0,
         }
     }
 
@@ -237,9 +266,27 @@ impl<'a> FederationEngine<'a> {
     /// shared clock.
     pub fn run(
         &self,
-        mut pods: Vec<Pod>,
+        pods: Vec<Pod>,
         dispatcher: &mut dyn Dispatcher,
         scheds: &mut [RegionSchedulers],
+    ) -> FederationResult {
+        let mut pairs: Vec<(&mut dyn Scheduler, &mut dyn Scheduler)> = scheds
+            .iter_mut()
+            .map(|s| {
+                (s.topsis.as_mut() as &mut dyn Scheduler, s.default.as_mut())
+            })
+            .collect();
+        self.run_refs(pods, dispatcher, &mut pairs)
+    }
+
+    /// The event loop proper, over borrowed `(topsis, default)`
+    /// scheduler pairs — the entry point `SimulationEngine::run` uses
+    /// to delegate a 1-region run without boxing its schedulers.
+    pub(crate) fn run_refs(
+        &self,
+        mut pods: Vec<Pod>,
+        dispatcher: &mut dyn Dispatcher,
+        scheds: &mut [(&mut dyn Scheduler, &mut dyn Scheduler)],
     ) -> FederationResult {
         assert_eq!(
             scheds.len(),
@@ -268,12 +315,25 @@ impl<'a> FederationEngine<'a> {
             fed[r].sample_nodes(0.0);
         }
 
-        // Seed arrivals in pod order — the same `(time, priority,
-        // seq)` assignments as the plain engine's queue. The region
-        // tag of an arrival is resolved by the dispatcher at pop time
-        // (0 here is a placeholder, never read).
+        // Seed arrivals in pod order — the kernel's `(time, priority,
+        // seq)` assignments. The region tag of an arrival is resolved
+        // by the dispatcher at pop time (0 here is a placeholder,
+        // never read).
         for (i, p) in pods.iter().enumerate() {
             queue.push(p.arrival_s, 0, SimEvent::PodArrival { pod: i });
+        }
+        // Then each region's churn schedule, in region order. The
+        // total order guarantees same-timestamp arrivals precede
+        // membership changes however the events were pushed.
+        for (r, spec) in self.regions.iter().enumerate() {
+            for ch in &spec.node_events {
+                let ev = if ch.up {
+                    SimEvent::NodeJoined { node: ch.node }
+                } else {
+                    SimEvent::NodeFailed { node: ch.node }
+                };
+                queue.push(ch.at_s, r, ev);
+            }
         }
 
         // Each region's autoscaler decides once at t = 0, in region
@@ -343,15 +403,20 @@ impl<'a> FederationEngine<'a> {
                     match event {
                         SimEvent::SchedulingCycle => {
                             fed[r].cycle_queued = false;
-                            // Same no-change short-circuit as the plain
-                            // engine's cycle (see its comment); skipping
-                            // is placement-neutral, and the 1-region ≡
-                            // plain differential keeps both guards in
-                            // lockstep.
+                            // Short-circuit a provably-futile retry
+                            // pass: if no node changed and nothing
+                            // arrived in this region since its last
+                            // cycle, every pending pod re-fails
+                            // identically. (Today every cycle request
+                            // follows a mutation or an arrival, so the
+                            // guard is structural — the skip/run
+                            // counters on `RunResult` make it
+                            // observable.)
                             let unchanged = !fed[r].arrivals_since_cycle
                                 && fed[r].last_cycle_mutations
                                     == fed[r].state.mutations();
-                            if !unchanged {
+                            if !unchanged || self.params.force_full_cycles {
+                                fed[r].cycles_run += 1;
                                 self.drain_pending(
                                     &mut fed[r],
                                     r,
@@ -362,7 +427,12 @@ impl<'a> FederationEngine<'a> {
                                     &mut sched_latency_us,
                                     &mut attempts,
                                 );
+                            } else {
+                                fed[r].cycles_skipped += 1;
                             }
+                            // Record *after* draining: the cycle's own
+                            // binds must not look like fresh mutations
+                            // next time.
                             fed[r].last_cycle_mutations =
                                 fed[r].state.mutations();
                             fed[r].arrivals_since_cycle = false;
@@ -461,6 +531,8 @@ impl<'a> FederationEngine<'a> {
                     events: run.events,
                     scaling: run.scaling,
                     node_timeline: run.node_timeline,
+                    cycles_run: run.cycles_run,
+                    cycles_skipped: run.cycles_skipped,
                 },
             });
         }
@@ -544,7 +616,7 @@ impl<'a> FederationEngine<'a> {
         region: usize,
         now: f64,
         pods: &mut [Pod],
-        scheds: &mut RegionSchedulers,
+        scheds: &mut (&mut dyn Scheduler, &mut dyn Scheduler),
         queue: &mut FedEventQueue,
         sched_latency_us: &mut [f64],
         attempts: &mut [u32],
@@ -583,17 +655,17 @@ impl<'a> FederationEngine<'a> {
         i: usize,
         now: f64,
         pods: &mut [Pod],
-        scheds: &mut RegionSchedulers,
+        scheds: &mut (&mut dyn Scheduler, &mut dyn Scheduler),
         queue: &mut FedEventQueue,
         sched_latency_us: &mut [f64],
         attempts: &mut [u32],
     ) -> bool {
         let decision = match pods[i].scheduler {
             SchedulerKind::Topsis => {
-                scheds.topsis.schedule_at(&run.state, &pods[i], now)
+                scheds.0.schedule_at(&run.state, &pods[i], now)
             }
             SchedulerKind::DefaultK8s => {
-                scheds.default.schedule_at(&run.state, &pods[i], now)
+                scheds.1.schedule_at(&run.state, &pods[i], now)
             }
         };
         sched_latency_us[i] += decision.latency.as_secs_f64() * 1e6;
@@ -859,6 +931,7 @@ mod tests {
                 contention_beta: 0.35,
                 seed: 5,
                 billing_horizon_s: Some(horizon),
+                ..FederationParams::default()
             },
             &executor,
         );

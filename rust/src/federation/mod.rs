@@ -17,11 +17,11 @@
 //! * the merged queue is [`crate::simulation::FedEventQueue`] — the
 //!   kernel's total order with a region tag that never participates in
 //!   the comparison;
-//! * a **1-region federation is record-for-record bit-identical to the
-//!   plain [`SimulationEngine`] run** (same placements, times, joules,
-//!   grams, events, scaling, node timeline) — the engine mirrors
-//!   `SimulationEngine::run` operation-for-operation, and the property
-//!   suite pins it (`prop_federation_single_region_bit_identical...`);
+//! * this is **the one event loop in the tree**:
+//!   [`SimulationEngine::run`] is a thin wrapper that builds a
+//!   1-region federation, and the property suite pins the wrapper
+//!   record-for-record bit-identical to a hand-assembled solo region
+//!   (`prop_federation_single_region_is_bit_identical_to_plain_engine`);
 //! * per-region CO₂ ledgers integrate each region's signal exactly as
 //!   the single-cluster meter does, so the federation golden fixture
 //!   (`golden_trace_federation.expected.json`) cross-validates against

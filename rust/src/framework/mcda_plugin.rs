@@ -2,9 +2,9 @@
 //! decision-matrix / scoring-backend stage, behind the framework's
 //! extension-point API.
 //!
-//! [`build_decision_problem`] is the canonical matrix builder; the
-//! legacy `GreenPodScheduler` delegates to it, so the monolith and the
-//! plugin share one implementation and stay bit-identical.
+//! [`build_decision_problem`] is the canonical (and, since the
+//! monolith schedulers' retirement, only) matrix builder — the plugin,
+//! the benches and any external caller share one implementation.
 
 use crate::cluster::{ClusterState, NodeId, Pod};
 use crate::config::{WeightingScheme, BENEFIT_MASK, NUM_CRITERIA};
@@ -258,24 +258,34 @@ mod tests {
     }
 
     #[test]
-    fn matrix_matches_legacy_builder() {
-        // The shared builder must produce exactly what the legacy
-        // monolith's `decision_problem` produces (it delegates here).
-        use crate::scheduler::GreenPodScheduler;
-        let (state, _) = setup();
-        let legacy = GreenPodScheduler::new(
-            Estimator::with_defaults(EnergyModelConfig::default()),
-            WeightingScheme::EnergyCentric,
-        );
+    fn plugin_scores_match_direct_matrix_and_method() {
+        // Self-consistency of the one remaining pipeline (this test
+        // pinned the plugin against the retired monolith's
+        // `decision_problem` until the monolith was deleted): scoring
+        // through the plugin must equal building the matrix with
+        // `build_decision_problem` and running TOPSIS on it directly,
+        // bit for bit.
+        let (state, mut plug) = setup();
         let candidates = state.feasible_nodes(pod().requests);
-        let a = legacy.decision_problem(&state, &pod(), &candidates);
-        let b = build_decision_problem(
+        let mut scores = Vec::new();
+        plug.score(
+            &CycleCtx::default(),
+            &state,
+            &pod(),
+            &candidates,
+            &mut scores,
+        );
+        let problem = build_decision_problem(
             &Estimator::with_defaults(EnergyModelConfig::default()),
             WeightingScheme::EnergyCentric.weights(),
             &state,
             &pod(),
             &candidates,
         );
-        assert_eq!(a, b);
+        let direct = McdaMethod::Topsis.scores(&problem);
+        assert_eq!(scores.len(), direct.len());
+        for (i, (a, b)) in scores.iter().zip(&direct).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "candidate {i}: {a} vs {b}");
+        }
     }
 }

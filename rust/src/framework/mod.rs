@@ -20,19 +20,19 @@
 //! * [`SchedulerProfile`] — a named composition: filter chain, weighted
 //!   score plugins, and a tie-break policy. [`FrameworkScheduler`]
 //!   drives a profile through the existing [`Scheduler`] trait, so the
-//!   simulation engine, the `run_batch` oracle and the api loop need no
-//!   changes to run any profile.
+//!   event loop and the api loop need no changes to run any profile.
 //! * [`ProfileRegistry`] — name → profile. Ships the built-in profiles
-//!   (the two ported legacy schedulers plus compositions the old API
-//!   could not express) and materializes user-defined profiles from
-//!   `Config::profiles`.
+//!   (the two ports of the retired monolith schedulers plus
+//!   compositions the old API could not express) and materializes
+//!   user-defined profiles from `Config::profiles`.
 //!
-//! The ported pipelines are pinned **bit-identical** to the legacy
-//! monoliths (`GreenPodScheduler`, `DefaultK8sScheduler`) by the
-//! differential properties in `rust/tests/properties.rs`: same chosen
-//! node, same per-candidate scores, across randomized cluster states —
-//! the legacy structs now delegate their scoring math to the canonical
-//! plugin implementations here, so the two paths cannot drift.
+//! The ported pipelines were pinned **bit-identical** to the monolith
+//! schedulers (`GreenPodScheduler`, `DefaultK8sScheduler`) by
+//! differential properties for two PRs before the monoliths were
+//! deleted; the profiles here are now the only formulation, and the
+//! properties in `rust/tests/properties.rs` continue as framework
+//! self-consistency checks (alias resolution, tie-break stream
+//! determinism, incremental-vs-full rescoring).
 //!
 //! [`Scheduler`]: crate::scheduler::Scheduler
 

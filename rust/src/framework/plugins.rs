@@ -2,10 +2,10 @@
 //! scoring behaviour, plus a carbon-aware scorer the monolithic API
 //! could not express.
 //!
-//! The free functions here are the *canonical* scoring math — the
-//! legacy `DefaultK8sScheduler` delegates to them, so the framework
-//! port and the monolith cannot drift apart (the differential property
-//! in `rust/tests/properties.rs` pins them bit-identical).
+//! The free functions here are the *canonical* scoring math — since
+//! the retirement of the `DefaultK8sScheduler` monolith (which
+//! delegated to them), the framework's `default-k8s` profile is their
+//! only consumer and the single formulation in the tree.
 
 use crate::cluster::{ClusterState, NodeId, Pod};
 use crate::energy::CarbonSignal;

@@ -93,8 +93,9 @@ pub struct FrameworkScheduler {
 
 impl FrameworkScheduler {
     /// `seed` feeds the tie-break RNG (used only by
-    /// [`TieBreak::SeededRandom`]); the stream matches the legacy
-    /// `DefaultK8sScheduler::new(seed)` draw-for-draw.
+    /// [`TieBreak::SeededRandom`]); the stream matches the retired
+    /// `DefaultK8sScheduler::new(seed)` monolith draw-for-draw, so
+    /// seeded traces recorded before the retirement still replay.
     pub fn new(profile: SchedulerProfile, seed: u64) -> Self {
         Self {
             profile,

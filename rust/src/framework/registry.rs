@@ -4,14 +4,20 @@
 //!
 //! * `greenpod` — NodeResourcesFit + the MCDA plugin (paper pipeline;
 //!   honors the build options' weighting scheme, MCDA method and PJRT
-//!   registry). Port of the legacy `GreenPodScheduler`.
+//!   registry). Port of the retired `GreenPodScheduler` monolith.
 //! * `default-k8s` — NodeResourcesFit + LeastAllocated +
 //!   BalancedAllocation, equal weight, seeded-random tie-break. Port of
-//!   the legacy `DefaultK8sScheduler`.
+//!   the retired `DefaultK8sScheduler` monolith.
 //! * `carbon-aware` — NodeResourcesFit + the CO₂ scorer. Not
 //!   expressible under the old monolithic API.
 //! * `hybrid-topsis-balanced` — TOPSIS closeness (percent-scaled)
 //!   blended 70/30 with BalancedAllocation. Also new with this API.
+//!
+//! **Deprecated aliases.** Configs and `--profile` flags written
+//! against the monolith era may still name `greenpod-topsis` (the
+//! retired `GreenPodScheduler`'s reported name); the registry resolves
+//! it to the `greenpod` profile so old invocations keep working. New
+//! code should use the profile names above.
 //!
 //! `Config::profiles` entries are materialized on top; every driver
 //! (experiment runner, elastic scenarios, `greenpod serve`) constructs
@@ -23,7 +29,7 @@ use anyhow::{bail, Result};
 
 use crate::config::{
     Config, ProfileSpec, ProfileTieBreak, ScorePluginKind, WeightingScheme,
-    BUILTIN_PROFILE_NAMES,
+    BUILTIN_PROFILE_NAMES, LEGACY_PROFILE_ALIASES,
 };
 use crate::energy::CarbonSignal;
 use crate::mcda::McdaMethod;
@@ -126,6 +132,17 @@ impl BuildOptions {
     }
 }
 
+/// Resolve a deprecated monolith-era scheduler name to its framework
+/// profile (identity for every other name). The alias table lives in
+/// [`crate::config::LEGACY_PROFILE_ALIASES`], next to the reserved
+/// built-in names, so config validation rejects shadowing it.
+fn resolve_alias(name: &str) -> &str {
+    LEGACY_PROFILE_ALIASES
+        .iter()
+        .find(|(legacy, _)| *legacy == name)
+        .map_or(name, |(_, canonical)| canonical)
+}
+
 /// Name → profile. Holds the config so user-defined profiles and the
 /// energy model are available at build time.
 pub struct ProfileRegistry {
@@ -148,17 +165,19 @@ impl ProfileRegistry {
     }
 
     pub fn contains(&self, name: &str) -> bool {
+        let name = resolve_alias(name);
         BUILTIN_PROFILE_NAMES.contains(&name)
             || self.config.profiles.iter().any(|p| p.name == name)
     }
 
-    /// Materialize a registered profile as a scheduler.
+    /// Materialize a registered profile as a scheduler. Deprecated
+    /// monolith names resolve through [`LEGACY_PROFILE_ALIASES`].
     pub fn build(
         &self,
         name: &str,
         opts: &BuildOptions,
     ) -> Result<FrameworkScheduler> {
-        let profile = match name {
+        let profile = match resolve_alias(name) {
             "greenpod" => SchedulerProfile::new("greenpod")
                 .filter(Box::new(NodeResourcesFit))
                 .score(
@@ -363,5 +382,179 @@ mod tests {
             Pod::new(0, WorkloadClass::Medium, SchedulerKind::Topsis, 0.0, 2);
         let d = sched.schedule(&state, &pod);
         assert_eq!(state.node(d.node.unwrap()).category, NodeCategory::A);
+    }
+
+    #[test]
+    fn legacy_monolith_name_resolves_to_framework_profile() {
+        // Deprecated alias back-compat: the retired GreenPodScheduler
+        // reported "greenpod-topsis"; old configs/flags naming it must
+        // build the `greenpod` profile, decision-for-decision.
+        let r = registry();
+        assert!(r.contains("greenpod-topsis"));
+        assert!(!r.names().iter().any(|n| n == "greenpod-topsis"));
+        let state =
+            ClusterState::from_config(&Config::paper_default().cluster);
+        let mut legacy = r.build("greenpod-topsis", &opts()).unwrap();
+        let mut canonical = r.build("greenpod", &opts()).unwrap();
+        assert_eq!(legacy.name(), "greenpod");
+        for i in 0..5 {
+            let pod = Pod::new(
+                i,
+                WorkloadClass::Medium,
+                SchedulerKind::Topsis,
+                0.0,
+                2,
+            );
+            assert_eq!(
+                legacy.schedule(&state, &pod).node,
+                canonical.schedule(&state, &pod).node
+            );
+        }
+    }
+
+    // Behavior pins relocated from the retired monolith schedulers'
+    // unit tests — the framework profiles are now the only
+    // implementations of these semantics.
+
+    fn build(name: &str, scheme: WeightingScheme) -> FrameworkScheduler {
+        registry()
+            .build(
+                name,
+                &BuildOptions::new(&Config::paper_default(), scheme),
+            )
+            .unwrap()
+    }
+
+    #[test]
+    fn energy_centric_greenpod_prefers_category_a() {
+        use crate::cluster::NodeCategory;
+        let state =
+            ClusterState::from_config(&Config::paper_default().cluster);
+        let mut sched = build("greenpod", WeightingScheme::EnergyCentric);
+        let pod =
+            Pod::new(1, WorkloadClass::Medium, SchedulerKind::Topsis, 0.0, 2);
+        let d = sched.schedule(&state, &pod);
+        assert_eq!(
+            state.node(d.node.unwrap()).category,
+            NodeCategory::A,
+            "scores: {:?}",
+            d.scores
+        );
+    }
+
+    #[test]
+    fn performance_centric_greenpod_prefers_fast_nodes() {
+        let state =
+            ClusterState::from_config(&Config::paper_default().cluster);
+        let mut sched =
+            build("greenpod", WeightingScheme::PerformanceCentric);
+        let pod =
+            Pod::new(1, WorkloadClass::Medium, SchedulerKind::Topsis, 0.0, 2);
+        let d = sched.schedule(&state, &pod);
+        let node = state.node(d.node.unwrap());
+        // B (1.0) or C (1.1) — never the slow A machines.
+        assert!(node.speed_factor >= 1.0, "chose {:?}", node.name);
+    }
+
+    #[test]
+    fn greenpod_respects_filter_and_reports_unschedulable_when_full() {
+        let mut state =
+            ClusterState::from_config(&Config::paper_default().cluster);
+        let mut sched = build("greenpod", WeightingScheme::EnergyCentric);
+        // Exhaust all three A nodes' memory so they are infeasible.
+        for id in [0usize, 1, 2] {
+            let mut hog = Pod::new(
+                50 + id as u64,
+                WorkloadClass::Light,
+                SchedulerKind::Topsis,
+                0.0,
+                2,
+            );
+            hog.requests.cpu_millis = 100;
+            hog.requests.memory_mib = state.free_memory(id) - 256;
+            state.bind(&hog, id, 0.0).unwrap();
+        }
+        let pod = Pod::new(
+            1,
+            WorkloadClass::Complex,
+            SchedulerKind::Topsis,
+            0.0,
+            2,
+        );
+        use crate::cluster::NodeCategory;
+        let d = sched.schedule(&state, &pod);
+        assert_ne!(state.node(d.node.unwrap()).category, NodeCategory::A);
+        // Now fill every node entirely: unschedulable, no scores.
+        for id in 0..state.nodes().len() {
+            let mut hog = Pod::new(
+                80 + id as u64,
+                WorkloadClass::Light,
+                SchedulerKind::Topsis,
+                0.0,
+                2,
+            );
+            hog.requests.cpu_millis = state.free_cpu(id);
+            hog.requests.memory_mib = state.free_memory(id);
+            state.bind(&hog, id, 0.0).unwrap();
+        }
+        let d = sched.schedule(&state, &pod);
+        assert_eq!(d.node, None);
+        assert!(d.scores.is_empty());
+    }
+
+    #[test]
+    fn greenpod_scores_one_per_candidate_in_unit_interval() {
+        let state =
+            ClusterState::from_config(&Config::paper_default().cluster);
+        let mut sched = build("greenpod", WeightingScheme::General);
+        let pod =
+            Pod::new(1, WorkloadClass::Light, SchedulerKind::Topsis, 0.0, 2);
+        let d = sched.schedule(&state, &pod);
+        assert_eq!(d.scores.len(), 7);
+        for &(_, c) in &d.scores {
+            assert!((0.0..=1.0 + 1e-9).contains(&c), "{:?}", d.scores);
+        }
+    }
+
+    #[test]
+    fn saw_method_also_picks_a_node() {
+        let cfg = Config::paper_default();
+        let mut sched = registry()
+            .build(
+                "greenpod",
+                &BuildOptions::new(&cfg, WeightingScheme::EnergyCentric)
+                    .with_method(McdaMethod::Saw),
+            )
+            .unwrap();
+        let state = ClusterState::from_config(&cfg.cluster);
+        let pod =
+            Pod::new(1, WorkloadClass::Medium, SchedulerKind::Topsis, 0.0, 2);
+        assert!(sched.schedule(&state, &pod).node.is_some());
+    }
+
+    #[test]
+    fn default_k8s_spreads_to_least_allocated() {
+        let mut state =
+            ClusterState::from_config(&Config::paper_default().cluster);
+        let mut sched = build("default-k8s", WeightingScheme::EnergyCentric);
+        // Load node 3 (B) heavily; the next pod must not land there
+        // while emptier same-shape nodes exist.
+        let p = |id, class| {
+            Pod::new(id, class, SchedulerKind::DefaultK8s, 0.0, 1)
+        };
+        state.bind(&p(1, WorkloadClass::Complex), 3, 0.0).unwrap();
+        state.bind(&p(2, WorkloadClass::Medium), 3, 0.0).unwrap();
+        let d = sched.schedule(&state, &p(3, WorkloadClass::Light));
+        assert_ne!(d.node, Some(3));
+        // And on the empty cluster, every feasible node is scored on
+        // the kube 0–100 convention.
+        let fresh =
+            ClusterState::from_config(&Config::paper_default().cluster);
+        let d = sched.schedule(&fresh, &p(4, WorkloadClass::Light));
+        assert_eq!(d.scores.len(), 7);
+        assert!(d.node.is_some());
+        for &(_, score) in &d.scores {
+            assert!((0.0..=100.0).contains(&score));
+        }
     }
 }

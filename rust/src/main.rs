@@ -44,9 +44,6 @@ use greenpod::experiments::{
 use greenpod::framework::{BuildOptions, ProfileRegistry};
 use greenpod::metrics::{format_table, format_timeline};
 use greenpod::runtime::{ArtifactRegistry, LinRegRunner};
-use greenpod::scheduler::{
-    DefaultK8sScheduler, Estimator, GreenPodScheduler,
-};
 use greenpod::util::cli::Args;
 use greenpod::workload::{ArrivalTrace, WorkloadClass, WorkloadExecutor};
 
@@ -333,11 +330,11 @@ fn run_experiment(cfg: &Config, args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `greenpod bench sched` — time scheduling cycles for the legacy
-/// monoliths vs every registered framework profile on the paper
-/// cluster, then sweep a scaling curve (node count × pending-queue
-/// depth) over synthetic near-full clusters, and emit
-/// `BENCH_sched.json` for CI trend tracking.
+/// `greenpod bench sched` — time scheduling cycles for every
+/// registered framework profile on the paper cluster, then sweep a
+/// scaling curve (node count × pending-queue depth) over synthetic
+/// near-full clusters, and emit `BENCH_sched.json` for CI trend
+/// tracking.
 fn run_bench(cfg: &Config, args: &Args) -> Result<()> {
     match args.command(1) {
         Some("sched") => bench_sched(cfg, args.opt("grid").unwrap_or("full")),
@@ -368,20 +365,9 @@ fn bench_sched(cfg: &Config, grid: &str) -> Result<()> {
     let pod = Pod::new(0, WorkloadClass::Medium, SchedulerKind::Topsis, 0.0, 4);
     let mut b = Bench::new();
 
-    // Legacy monoliths (the pre-framework baselines).
-    let mut legacy_topsis = GreenPodScheduler::new(
-        Estimator::with_defaults(cfg.energy.clone()),
-        WeightingScheme::EnergyCentric,
-    );
-    b.bench("sched/monolith/greenpod-topsis", || {
-        legacy_topsis.schedule(&state, &pod).node
-    });
-    let mut legacy_default = DefaultK8sScheduler::new(cfg.experiment.seed);
-    b.bench("sched/monolith/default-k8s", || {
-        legacy_default.schedule(&state, &pod).node
-    });
-
     // Framework-composed profiles (built-ins + any --config profiles).
+    // The `sched/monolith/*` series ended when the monolith schedulers
+    // were retired; `sched/framework/*` is the continuing baseline.
     let registry = ProfileRegistry::new(cfg);
     let opts = BuildOptions::new(cfg, WeightingScheme::EnergyCentric);
     for name in registry.names() {

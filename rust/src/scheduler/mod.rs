@@ -1,38 +1,42 @@
-//! Schedulers — the paper's contribution lives here.
+//! Scheduler abstractions — the trait every profile is driven through,
+//! plus the estimator feeding the decision matrix.
 //!
-//! * [`GreenPodScheduler`] — the TOPSIS-based multi-criteria scheduler:
-//!   filter → decision matrix (5 criteria) → MCDA scoring → bind target.
-//! * [`DefaultK8sScheduler`] — the baseline: the documented default
-//!   kube-scheduler scoring path (LeastAllocated + BalancedAllocation).
+//! The concrete scheduler implementations live in [`crate::framework`]:
+//! kube-style Filter/Score plugins composed into weighted profiles and
+//! driven by `FrameworkScheduler` through the [`Scheduler`] trait. The
+//! legacy monolith structs (`GreenPodScheduler`, `DefaultK8sScheduler`)
+//! are retired — the framework profiles `greenpod` and `default-k8s`
+//! were pinned bit-identical to them for two PRs and are now the
+//! canonical (and only) formulations; `ProfileRegistry` still accepts
+//! the old `greenpod-topsis` name as a deprecated alias.
+//!
 //! * [`estimator`] — per-(node, pod) execution-time and energy
 //!   predictions feeding the decision matrix.
 //! * [`AdaptiveWeighting`] — the paper's "adaptive weighting module"
 //!   (§III.A): interpolates between profiles based on cluster load.
-//!
-//! Both schedulers implement [`Scheduler`] and are driven identically by
-//! the simulation engine and the serve loop.
-//!
-//! These two structs are the *legacy monolith* formulations. The
-//! drivers now compose the same pipelines from
-//! [`crate::framework`] extension-point plugins (profiles `greenpod`
-//! and `default-k8s`); the monoliths stay as the executable reference
-//! the differential properties pin the framework against, and they
-//! delegate their scoring math to the canonical framework
-//! implementations so the two paths cannot drift.
+//! * [`ScoringBackend`] — how an MCDA scorer turns a decision matrix
+//!   into scores: pure-Rust MCDA or the AOT Pallas kernel via PJRT.
 
 mod adaptive;
-mod default_k8s;
 pub mod estimator;
-mod greenpod;
 
 pub use adaptive::AdaptiveWeighting;
-pub use default_k8s::DefaultK8sScheduler;
 pub use estimator::{Estimator, NodeEstimate, DEFAULT_LIGHT_EPOCH_SECS};
-pub use greenpod::{GreenPodScheduler, ScoringBackend};
 
 use std::time::Duration;
 
 use crate::cluster::{ClusterState, NodeId, Pod};
+use crate::mcda::McdaMethod;
+use crate::runtime::PjrtTopsisEngine;
+
+/// How an MCDA scorer turns a decision matrix into scores.
+pub enum ScoringBackend {
+    /// Pure-Rust MCDA (`McdaMethod::Topsis` is the paper's method; other
+    /// methods are ablation baselines).
+    Rust(McdaMethod),
+    /// The AOT-compiled fused Pallas kernel, executed via PJRT.
+    Pjrt(Box<PjrtTopsisEngine>),
+}
 
 /// Outcome of one scheduling decision.
 #[derive(Debug, Clone)]

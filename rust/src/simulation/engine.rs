@@ -1,47 +1,38 @@
-//! The discrete-event simulation engine.
+//! The simulation engine — a thin front over the one event loop.
 //!
-//! Built on the kernel in [`super::event`]: a virtual clock and a
-//! total-ordered event queue over `PodArrival`, `SchedulingCycle`,
-//! `PodCompleted`, `NodeJoined` and `NodeFailed` events. Arriving pods
-//! enter a FIFO pending queue; a `SchedulingCycle` (requested by
-//! arrivals, completions and node joins, at most one outstanding per
-//! timestamp) drains that queue through the owning schedulers — the
-//! same retry semantics as kube-scheduler's backoff queue, collapsed to
-//! event-driven time. Energy is integrated interval-by-interval as the
-//! clock advances (see [`EnergyMeter::advance`]), and per-pod queue
-//! wait, scheduling latency and attempt counts are recorded into
-//! [`RunResult`].
+//! Since the engine collapse ([`crate::federation::FederationEngine`]
+//! is the single discrete-event loop in the tree),
+//! [`SimulationEngine::run`] delegates to a **1-region federation**:
+//! the merged queue degenerates to the plain kernel queue (identical
+//! `(time, kind-priority, seq)` assignments), every dispatch resolves
+//! to region 0, and all arithmetic is the same float ops in the same
+//! order — so the delegation is record-for-record bit-identical to the
+//! retired standalone loop, pinned by the golden-fixture replays and
+//! `prop_federation_single_region_is_bit_identical_to_plain_engine`.
 //!
-//! [`SimulationEngine::run_batch`] is an independent re-implementation
-//! of the same scheduling semantics without the event queue (whole
-//! deployment submitted at t = 0, one synchronous FIFO pass,
-//! completion-driven retries with the kernel's same-timestamp
-//! coalescing) — a differential-testing oracle: with all arrivals at
-//! t = 0 the two modes must produce identical placements
-//! (property-tested in `rust/tests/properties.rs`).
+//! [`SimulationEngine::run_batch`] — the paper's burst deployment
+//! without arrival dynamics — is the same event loop with every
+//! arrival forced to t = 0 on a fixed cluster (no churn, no
+//! autoscaler, no billing horizon). It is no longer an independent
+//! re-implementation: folding it onto the real queue means the
+//! kernel's same-timestamp kind-priority ordering (arrivals before
+//! completions before the cycle) applies to batch runs too, instead of
+//! being hand-mirrored outside the kernel.
 //!
 //! Event mode can additionally run a cluster autoscaler
-//! (`SimulationParams::autoscaler`, DESIGN.md §"Autoscaler"): the
-//! policy is consulted after every event except arrivals and grows or
-//! shrinks the cluster by emitting `NodeJoined` / `NodeFailed` through
-//! the same kernel as churn injection. The energy meter attributes the
-//! idle floor of every Ready node (`EnergyMeter::node_online`), so
-//! scale-in shows up as measured savings. Batch mode ignores both
-//! `node_events` and the autoscaler — it is the fixed-cluster legacy
-//! oracle.
+//! (`SimulationParams::autoscaler`, DESIGN.md §"Autoscaler") and a
+//! node-churn schedule (`SimulationParams::node_events`); both flow
+//! into the region spec unchanged.
 
-use std::collections::{HashMap, VecDeque};
-
-use crate::autoscaler::{Autoscaler, AutoscalerPolicy, Observation, ScalingAction};
-use crate::cluster::{ClusterState, NodeId, Pod, PodPhase};
-use crate::config::{Config, SchedulerKind};
-use crate::energy::{CarbonSignal, EnergyMeter};
-use crate::scheduler::Scheduler;
-use crate::simulation::event::{EventQueue, SimEvent, VirtualClock};
-use crate::simulation::{
-    contention_factor, EventRecord, NodeCountSample, PodRecord, RunResult,
-    ScalingRecord,
+use crate::autoscaler::AutoscalerPolicy;
+use crate::cluster::{NodeId, Pod};
+use crate::config::Config;
+use crate::energy::CarbonSignal;
+use crate::federation::{
+    FederationEngine, FederationParams, RegionSpec, RoundRobin,
 };
+use crate::scheduler::Scheduler;
+use crate::simulation::RunResult;
 use crate::workload::WorkloadExecutor;
 
 /// A scheduled node-membership change (cluster churn injection).
@@ -121,116 +112,8 @@ impl SimulationParams {
     }
 }
 
-/// Bookkeeping for a bound, executing pod (indexed by pod *index*).
-struct RunningPod {
-    node: NodeId,
-    start_s: f64,
-}
-
-/// Mutable per-run state threaded through the event handlers.
-struct RunState {
-    state: ClusterState,
-    meter: EnergyMeter,
-    records: Vec<PodRecord>,
-    queue: EventQueue,
-    pending: VecDeque<usize>,
-    running: HashMap<usize, RunningPod>,
-    sched_latency_us: Vec<f64>,
-    attempts: Vec<u32>,
-    events: Vec<EventRecord>,
-    scaling: Vec<ScalingRecord>,
-    node_timeline: Vec<NodeCountSample>,
-    /// Fire time of the earliest pending `AutoscaleTick`, for dedupe.
-    next_tick: Option<f64>,
-    makespan: f64,
-    cycle_queued: bool,
-    /// Arena for the autoscaler's pending-wait vector (rebuilt each
-    /// consultation into the same allocation).
-    waits_buf: Vec<f64>,
-    /// `state.mutations()` as of the end of the previous scheduling
-    /// cycle (`u64::MAX` = no cycle yet, never matches).
-    last_cycle_mutations: u64,
-    /// Whether any pod arrived since the previous scheduling cycle.
-    arrivals_since_cycle: bool,
-}
-
-impl RunState {
-    fn new(config: &Config, params: &SimulationParams, n_pods: usize) -> Self {
-        // The meter's CO₂ ledger integrates against the run's signal;
-        // absent an explicit one, the config's (constant by default —
-        // exactly the scalar grams_co2_per_joule path).
-        let carbon = params
-            .carbon
-            .clone()
-            .unwrap_or_else(|| config.carbon.signal(&config.energy));
-        Self {
-            state: ClusterState::from_config(&config.cluster),
-            meter: EnergyMeter::new().with_carbon(carbon),
-            records: Vec::with_capacity(n_pods),
-            queue: EventQueue::new(),
-            pending: VecDeque::new(),
-            running: HashMap::new(),
-            sched_latency_us: vec![0.0; n_pods],
-            attempts: vec![0; n_pods],
-            events: Vec::new(),
-            scaling: Vec::new(),
-            node_timeline: Vec::new(),
-            next_tick: None,
-            makespan: 0.0,
-            cycle_queued: false,
-            waits_buf: Vec::new(),
-            last_cycle_mutations: u64::MAX,
-            arrivals_since_cycle: false,
-        }
-    }
-
-    /// Request a scheduling cycle at `now` unless one is already
-    /// outstanding (any outstanding cycle is at the current timestamp
-    /// and fires before any strictly later event, so the flag is safe).
-    fn request_cycle(&mut self, now: f64) {
-        if !self.cycle_queued {
-            self.queue.push(now, SimEvent::SchedulingCycle);
-            self.cycle_queued = true;
-        }
-    }
-
-    /// Append a node-count sample (after a membership change).
-    fn sample_nodes(&mut self, at_s: f64) {
-        self.node_timeline.push(NodeCountSample {
-            at_s,
-            ready_nodes: self.state.ready_nodes(),
-            total_nodes: self.state.nodes().len(),
-        });
-    }
-
-    fn into_result(
-        mut self,
-        pods: &mut [Pod],
-        pjrt_fallbacks: u64,
-    ) -> RunResult {
-        let unschedulable = self
-            .pending
-            .iter()
-            .map(|&i| {
-                pods[i].phase = PodPhase::Unschedulable;
-                pods[i].id
-            })
-            .collect();
-        RunResult {
-            records: std::mem::take(&mut self.records),
-            meter: self.meter,
-            unschedulable,
-            makespan_s: self.makespan,
-            pjrt_fallbacks,
-            events: self.events,
-            scaling: self.scaling,
-            node_timeline: self.node_timeline,
-        }
-    }
-}
-
-/// The simulation engine. Owns the cluster state and the energy meter
-/// for the duration of one run.
+/// The single-cluster simulation engine: a 1-region view over the
+/// federation event loop.
 pub struct SimulationEngine<'a> {
     config: &'a Config,
     params: SimulationParams,
@@ -248,203 +131,54 @@ impl<'a> SimulationEngine<'a> {
 
     /// Event mode: pods arrive per their `arrival_s`; pods tagged
     /// `Topsis` are placed by `topsis`, the rest by `default`.
+    /// Delegates to a 1-region federation — the one event loop.
     pub fn run(
         &self,
-        mut pods: Vec<Pod>,
+        pods: Vec<Pod>,
         topsis: &mut dyn Scheduler,
         default: &mut dyn Scheduler,
     ) -> RunResult {
-        let mut rs = RunState::new(self.config, &self.params, pods.len());
-        let mut clock = VirtualClock::default();
-
-        // Idle-floor metering starts with the configured cluster: every
-        // Ready node draws its idle power from t = 0 until it fails or
-        // is scaled in (`EnergyMeter::node_online`).
-        for id in 0..rs.state.nodes().len() {
-            if rs.state.node(id).ready {
-                let node = rs.state.node(id).clone();
-                rs.meter.node_online(&self.config.energy, &node, 0.0);
-            }
+        // The region's CO₂ ledger integrates against the run's signal;
+        // absent an explicit one, the config's (constant by default —
+        // exactly the scalar grams_co2_per_joule path).
+        let mut spec = RegionSpec::new("cluster", self.config.clone())
+            .with_node_events(self.params.node_events.clone());
+        if let Some(carbon) = &self.params.carbon {
+            spec = spec.with_carbon(carbon.clone());
         }
-        rs.sample_nodes(0.0);
-
-        // Seed the queue: arrivals first (insertion order = pod order),
-        // then the churn schedule. The kernel's `(time, kind-priority,
-        // seq)` order guarantees same-timestamp arrivals precede
-        // membership changes however the events were pushed.
-        for (i, p) in pods.iter().enumerate() {
-            rs.queue.push(p.arrival_s, SimEvent::PodArrival { pod: i });
+        if let Some(policy) = &self.params.autoscaler {
+            spec = spec.with_autoscaler(policy.clone());
         }
-        for ch in &self.params.node_events {
-            let ev = if ch.up {
-                SimEvent::NodeJoined { node: ch.node }
-            } else {
-                SimEvent::NodeFailed { node: ch.node }
-            };
-            rs.queue.push(ch.at_s, ev);
-        }
-
-        // The autoscaler decides once at t = 0 (so schedules and
-        // wake-ups that start immediately are honored) and then after
-        // every event that leaves no same-instant scheduling cycle
-        // outstanding — if a cycle is queued at this timestamp, the
-        // pending queue is about to be retried and the cycle's own
-        // consultation follows, so the policy only ever reacts to
-        // backlog the scheduler actually failed to place. The policy's
-        // own wake-up ticks are always honored (the scheduled-churn
-        // replay depends on firing exactly on time, before the cycle).
-        let mut autoscaler = self
-            .params
-            .autoscaler
-            .as_ref()
-            .map(|p| p.build(rs.state.nodes().len()));
-        if let Some(policy) = autoscaler.as_deref_mut() {
-            self.autoscale(&mut rs, 0.0, &pods, policy);
-        }
-
-        while let Some(ev) = rs.queue.pop() {
-            let now = clock.advance_to(ev.at);
-            rs.meter.advance(now);
-            rs.events.push(EventRecord { at_s: now, kind: ev.event.kind() });
-            let is_tick = matches!(ev.event, SimEvent::AutoscaleTick);
-            match ev.event {
-                SimEvent::PodArrival { pod } => {
-                    rs.pending.push_back(pod);
-                    rs.arrivals_since_cycle = true;
-                    rs.request_cycle(now);
-                }
-                SimEvent::SchedulingCycle => {
-                    rs.cycle_queued = false;
-                    // Short-circuit a provably-futile retry pass: if no
-                    // node changed and nothing arrived since the last
-                    // cycle, every pending pod re-fails identically.
-                    // (Today every cycle request follows a mutation or
-                    // an arrival, so this guard is structural — it
-                    // keeps future cycle sources, e.g. periodic
-                    // re-syncs, from going quadratic in the backlog.)
-                    let unchanged = !rs.arrivals_since_cycle
-                        && rs.last_cycle_mutations == rs.state.mutations();
-                    if !unchanged || self.params.force_full_cycles {
-                        self.drain_pending(
-                            &mut rs, now, &mut pods, topsis, default,
-                        );
-                    }
-                    // Record *after* draining: the cycle's own binds
-                    // must not look like fresh mutations next time.
-                    rs.last_cycle_mutations = rs.state.mutations();
-                    rs.arrivals_since_cycle = false;
-                }
-                SimEvent::PodCompleted { pod } => {
-                    self.complete(&mut rs, now, &mut pods, pod);
-                    if !rs.pending.is_empty() {
-                        rs.request_cycle(now);
-                    }
-                }
-                SimEvent::NodeJoined { node } => {
-                    rs.state.set_ready(node, true, now);
-                    let joined = rs.state.node(node).clone();
-                    rs.meter.node_online(&self.config.energy, &joined, now);
-                    rs.sample_nodes(now);
-                    if !rs.pending.is_empty() {
-                        rs.request_cycle(now);
-                    }
-                }
-                SimEvent::NodeFailed { node } => {
-                    rs.state.set_ready(node, false, now);
-                    rs.meter.node_offline(node, now);
-                    rs.sample_nodes(now);
-                }
-                SimEvent::AutoscaleTick => {
-                    rs.next_tick = None;
-                }
-            }
-            if is_tick || !rs.cycle_queued {
-                if let Some(policy) = autoscaler.as_deref_mut() {
-                    self.autoscale(&mut rs, now, &pods, policy);
-                }
-            }
-        }
-
-        // Bill still-powered nodes' idle out to the common horizon
-        // (no-op when the horizon already passed or none is set).
-        if let Some(horizon) = self.params.billing_horizon_s {
-            rs.meter.advance(horizon);
-        }
-
-        rs.into_result(&mut pods, 0)
+        let specs = [spec];
+        let engine = FederationEngine::new(
+            &specs,
+            FederationParams {
+                contention_beta: self.params.contention_beta,
+                seed: self.params.seed,
+                billing_horizon_s: self.params.billing_horizon_s,
+                force_full_cycles: self.params.force_full_cycles,
+            },
+            self.executor,
+        );
+        // With one region, round-robin dispatch is the identity.
+        let mut dispatcher = RoundRobin::new();
+        let result =
+            engine.run_refs(pods, &mut dispatcher, &mut [(topsis, default)]);
+        result
+            .regions
+            .into_iter()
+            .next()
+            .expect("1-region federation yields one region")
+            .run
     }
 
-    /// One autoscaler consultation: observe, apply the decision's
-    /// actions in order, and (de-duplicated) schedule its wake-up.
-    fn autoscale(
-        &self,
-        rs: &mut RunState,
-        now: f64,
-        pods: &[Pod],
-        policy: &mut dyn Autoscaler,
-    ) {
-        let mut waits = std::mem::take(&mut rs.waits_buf);
-        waits.clear();
-        waits.extend(rs.pending.iter().map(|&i| now - pods[i].arrival_s));
-        let decision = policy.decide(&Observation {
-            now_s: now,
-            state: &rs.state,
-            pending_wait_s: &waits,
-        });
-        rs.waits_buf = waits;
-        for action in decision.actions {
-            match action {
-                ScalingAction::Provision { template, ready_at_s } => {
-                    let node = rs.state.add_node(&template, now);
-                    let at = ready_at_s.max(now);
-                    rs.queue.push(at, SimEvent::NodeJoined { node });
-                    // Sample so the timeline shows the booting node
-                    // (total > ready until its NodeJoined fires).
-                    rs.sample_nodes(now);
-                    rs.scaling.push(ScalingRecord {
-                        at_s: now,
-                        kind: "scale-out",
-                        node,
-                        effective_at_s: at,
-                    });
-                }
-                ScalingAction::Activate { node, at_s } => {
-                    let at = at_s.max(now);
-                    rs.queue.push(at, SimEvent::NodeJoined { node });
-                    rs.scaling.push(ScalingRecord {
-                        at_s: now,
-                        kind: "activate",
-                        node,
-                        effective_at_s: at,
-                    });
-                }
-                ScalingAction::Deactivate { node, at_s } => {
-                    let at = at_s.max(now);
-                    rs.queue.push(at, SimEvent::NodeFailed { node });
-                    rs.scaling.push(ScalingRecord {
-                        at_s: now,
-                        kind: "scale-in",
-                        node,
-                        effective_at_s: at,
-                    });
-                }
-            }
-        }
-        if let Some(wake) = decision.wake_at_s {
-            if wake > now && rs.next_tick.map_or(true, |t| wake < t) {
-                rs.queue.push(wake, SimEvent::AutoscaleTick);
-                rs.next_tick = Some(wake);
-            }
-        }
-    }
-
-    /// Batch mode (differential oracle, and the paper's burst
-    /// deployment without arrival dynamics): every pod is submitted at
-    /// t = 0 regardless of `arrival_s`, placed in one synchronous FIFO
-    /// pass; completions then release capacity chronologically —
-    /// coalescing equal timestamps exactly like the event kernel's
-    /// single outstanding cycle — each group retrying the pending
-    /// queue once.
+    /// Batch mode (the paper's burst deployment without arrival
+    /// dynamics): every pod is submitted at t = 0 regardless of
+    /// `arrival_s` and the run executes on the fixed configured
+    /// cluster — node churn, the autoscaler and the billing horizon do
+    /// not apply. Same event loop as [`SimulationEngine::run`], so the
+    /// kernel's same-timestamp coalescing and kind-priority ordering
+    /// hold here too.
     pub fn run_batch(
         &self,
         mut pods: Vec<Pod>,
@@ -454,161 +188,41 @@ impl<'a> SimulationEngine<'a> {
         for p in &mut pods {
             p.arrival_s = 0.0;
         }
-        let mut rs = RunState::new(self.config, &self.params, pods.len());
-
-        // Synchronous placement pass at t = 0.
-        rs.events.push(EventRecord { at_s: 0.0, kind: "batch-submit" });
-        for i in 0..pods.len() {
-            if !self.try_place(&mut rs, i, 0.0, &mut pods, topsis, default) {
-                rs.pending.push_back(i);
-            }
-        }
-
-        // Completion-driven retries (the queue holds only completions).
-        // Same-time completions are coalesced before the retry pass —
-        // mirroring the event kernel, where one SchedulingCycle fires
-        // after every completion at a given timestamp.
-        while let Some(first) = rs.queue.pop() {
-            let now = first.at;
-            rs.meter.advance(now);
-            let mut group = vec![first];
-            while rs.queue.peek().is_some_and(|e| e.at == now) {
-                group.push(rs.queue.pop().expect("peeked"));
-            }
-            for ev in group {
-                rs.events
-                    .push(EventRecord { at_s: now, kind: ev.event.kind() });
-                let SimEvent::PodCompleted { pod } = ev.event else {
-                    unreachable!("batch mode queues only completions");
-                };
-                self.complete(&mut rs, now, &mut pods, pod);
-            }
-            self.drain_pending(&mut rs, now, &mut pods, topsis, default);
-        }
-
-        rs.into_result(&mut pods, 0)
-    }
-
-    /// One scheduling cycle: try every pending pod once, FIFO. A later
-    /// small pod may fit where an earlier big one does not, so the
-    /// whole queue is scanned; failures keep their queue order.
-    fn drain_pending(
-        &self,
-        rs: &mut RunState,
-        now: f64,
-        pods: &mut [Pod],
-        topsis: &mut dyn Scheduler,
-        default: &mut dyn Scheduler,
-    ) {
-        let n = rs.pending.len();
-        for _ in 0..n {
-            let i = rs.pending.pop_front().expect("pending non-empty");
-            if !self.try_place(rs, i, now, pods, topsis, default) {
-                rs.pending.push_back(i);
-            }
-        }
-    }
-
-    /// Attempt to place and start pod `i` at time `now`. Returns false
-    /// if it remains pending.
-    fn try_place(
-        &self,
-        rs: &mut RunState,
-        i: usize,
-        now: f64,
-        pods: &mut [Pod],
-        topsis: &mut dyn Scheduler,
-        default: &mut dyn Scheduler,
-    ) -> bool {
-        // Time-aware dispatch: the cycle's virtual timestamp reaches
-        // clock-consuming profiles (carbon-aware intensity lookups);
-        // the default trait impl keeps everything else bit-identical.
-        let decision = match pods[i].scheduler {
-            SchedulerKind::Topsis => {
-                topsis.schedule_at(&rs.state, &pods[i], now)
-            }
-            SchedulerKind::DefaultK8s => {
-                default.schedule_at(&rs.state, &pods[i], now)
-            }
-        };
-        rs.sched_latency_us[i] += decision.latency.as_secs_f64() * 1e6;
-        rs.attempts[i] += 1;
-        let Some(node_id) = decision.node else {
-            return false;
-        };
-
-        rs.state.bind(&pods[i], node_id, now).expect("scheduler chose fit");
-        pods[i].phase = PodPhase::Running;
-
-        let node = rs.state.node(node_id).clone();
-        let outcome = self
-            .executor
-            .execute(&pods[i], &node, self.params.seed ^ pods[i].id)
-            .expect("workload execution");
-        let share =
-            pods[i].requests.cpu_millis as f64 / node.cpu_millis as f64;
-        let factor = contention_factor(
-            self.params.contention_beta,
-            rs.state.cpu_utilization(node_id),
-            share,
+        let fixed = SimulationEngine::new(
+            self.config,
+            SimulationParams {
+                node_events: Vec::new(),
+                autoscaler: None,
+                billing_horizon_s: None,
+                ..self.params.clone()
+            },
+            self.executor,
         );
-        let duration = outcome.base_secs * factor;
-
-        rs.meter.start(
-            &self.config.energy,
-            pods[i].id,
-            pods[i].class,
-            pods[i].scheduler,
-            &node,
-            share,
-            now,
-        );
-        rs.running.insert(i, RunningPod { node: node_id, start_s: now });
-        rs.queue.push(now + duration, SimEvent::PodCompleted { pod: i });
-        true
-    }
-
-    /// Handle a completion: release the reservation, close the energy
-    /// interval, and emit the pod's lifecycle record.
-    fn complete(
-        &self,
-        rs: &mut RunState,
-        now: f64,
-        pods: &mut [Pod],
-        i: usize,
-    ) {
-        rs.makespan = rs.makespan.max(now);
-        rs.state
-            .release(pods[i].id, now)
-            .expect("completion of bound pod");
-        pods[i].phase = PodPhase::Succeeded;
-        let run = rs.running.remove(&i).expect("completion of running pod");
-        let joules = rs.meter.finish(pods[i].id, now);
-        rs.records.push(PodRecord {
-            pod: pods[i].id,
-            class: pods[i].class,
-            scheduler: pods[i].scheduler,
-            node: run.node,
-            node_category: rs.state.node(run.node).category,
-            arrival_s: pods[i].arrival_s,
-            start_s: run.start_s,
-            finish_s: now,
-            sched_latency_us: rs.sched_latency_us[i],
-            attempts: rs.attempts[i],
-            joules,
-            wait_s: run.start_s - pods[i].arrival_s,
-        });
+        fixed.run(pods, topsis, default)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{CompetitionLevel, WeightingScheme};
-    use crate::scheduler::{
-        DefaultK8sScheduler, Estimator, GreenPodScheduler,
-    };
+    use crate::config::{CompetitionLevel, SchedulerKind, WeightingScheme};
+    use crate::framework::{BuildOptions, FrameworkScheduler, ProfileRegistry};
     use crate::workload::generate_pods;
+
+    /// Registry-built scheduler pair — the framework profiles are the
+    /// only scheduler implementations since the monolith retirement.
+    fn build_scheds(
+        config: &Config,
+        seed: u64,
+    ) -> (FrameworkScheduler, FrameworkScheduler) {
+        let registry = ProfileRegistry::new(config);
+        let opts = BuildOptions::new(config, WeightingScheme::EnergyCentric)
+            .with_seed(seed);
+        (
+            registry.build("greenpod", &opts).expect("built-in"),
+            registry.build("default-k8s", &opts).expect("built-in"),
+        )
+    }
 
     fn run_level(level: CompetitionLevel, seed: u64) -> RunResult {
         let config = Config::paper_default();
@@ -619,11 +233,7 @@ mod tests {
             &executor,
         );
         let pods = generate_pods(level, &config.experiment, seed).pods;
-        let mut topsis = GreenPodScheduler::new(
-            Estimator::with_defaults(config.energy.clone()),
-            WeightingScheme::EnergyCentric,
-        );
-        let mut default = DefaultK8sScheduler::new(seed);
+        let (mut topsis, mut default) = build_scheds(&config, seed);
         engine.run(pods, &mut topsis, &mut default)
     }
 
@@ -722,11 +332,7 @@ mod tests {
         );
         let pods =
             generate_pods(CompetitionLevel::Low, &config.experiment, 1).pods;
-        let mut topsis = GreenPodScheduler::new(
-            Estimator::with_defaults(config.energy.clone()),
-            WeightingScheme::EnergyCentric,
-        );
-        let mut default = DefaultK8sScheduler::new(1);
+        let (mut topsis, mut default) = build_scheds(&config, 1);
         let r = engine.run(pods, &mut topsis, &mut default);
         assert_eq!(r.records.len(), 8);
         assert!(r.unschedulable.is_empty());
@@ -777,11 +383,7 @@ mod tests {
         let params = SimulationParams::with_beta_and_seed(0.35, 1)
             .with_autoscaler(AutoscalerPolicy::Threshold(policy));
         let engine = SimulationEngine::new(&config, params, &executor);
-        let mut topsis = GreenPodScheduler::new(
-            Estimator::with_defaults(config.energy.clone()),
-            WeightingScheme::EnergyCentric,
-        );
-        let mut default = DefaultK8sScheduler::new(1);
+        let (mut topsis, mut default) = build_scheds(&config, 1);
         let r = engine.run(pods, &mut topsis, &mut default);
 
         assert_eq!(r.records.len(), 18);
@@ -814,18 +416,9 @@ mod tests {
         let executor = WorkloadExecutor::analytic();
         let pods =
             generate_pods(CompetitionLevel::High, &config.experiment, 9).pods;
-        let mk = || {
-            (
-                GreenPodScheduler::new(
-                    Estimator::with_defaults(config.energy.clone()),
-                    WeightingScheme::EnergyCentric,
-                ),
-                DefaultK8sScheduler::new(9),
-            )
-        };
         let run = |params: SimulationParams| {
             let engine = SimulationEngine::new(&config, params, &executor);
-            let (mut t, mut d) = mk();
+            let (mut t, mut d) = build_scheds(&config, 9);
             engine.run(pods.clone(), &mut t, &mut d)
         };
         let plain = run(SimulationParams::with_beta_and_seed(0.35, 9));
@@ -857,7 +450,9 @@ mod tests {
 
         // The no-change short-circuit must be placement-neutral: the
         // same backlog-heavy autoscaled run with every cycle forced
-        // must match the guarded run bitwise, record for record.
+        // must match the guarded run bitwise, record for record —
+        // through the delegated path, since the single guard now lives
+        // in the federation loop.
         let config = Config::paper_default();
         let executor = WorkloadExecutor::analytic();
         let mut pods = Vec::new();
@@ -887,11 +482,7 @@ mod tests {
                 .with_autoscaler(AutoscalerPolicy::Threshold(policy()));
             params.force_full_cycles = force;
             let engine = SimulationEngine::new(&config, params, &executor);
-            let mut topsis = GreenPodScheduler::new(
-                Estimator::with_defaults(config.energy.clone()),
-                WeightingScheme::EnergyCentric,
-            );
-            let mut default = DefaultK8sScheduler::new(1);
+            let (mut topsis, mut default) = build_scheds(&config, 1);
             engine.run(pods.clone(), &mut topsis, &mut default)
         };
         let guarded = run(false);
@@ -911,6 +502,20 @@ mod tests {
             guarded.makespan_s.to_bits(),
             forced.makespan_s.to_bits()
         );
+        // The skip/run counters make the guard observable: forcing
+        // disables skipping entirely, and both runs fire the same
+        // total number of cycles (their event logs are equal).
+        assert_eq!(forced.cycles_skipped, 0);
+        assert_eq!(
+            guarded.cycles_run + guarded.cycles_skipped,
+            forced.cycles_run
+        );
+        let fired = guarded
+            .events
+            .iter()
+            .filter(|e| e.kind == "scheduling-cycle")
+            .count() as u64;
+        assert_eq!(guarded.cycles_run + guarded.cycles_skipped, fired);
     }
 
     #[test]
@@ -927,17 +532,8 @@ mod tests {
         for p in &mut pods {
             p.arrival_s = 0.0;
         }
-        let mk = || {
-            (
-                GreenPodScheduler::new(
-                    Estimator::with_defaults(config.energy.clone()),
-                    WeightingScheme::EnergyCentric,
-                ),
-                DefaultK8sScheduler::new(5),
-            )
-        };
-        let (mut t1, mut d1) = mk();
-        let (mut t2, mut d2) = mk();
+        let (mut t1, mut d1) = build_scheds(&config, 5);
+        let (mut t2, mut d2) = build_scheds(&config, 5);
         let ev = engine.run(pods.clone(), &mut t1, &mut d1);
         let ba = engine.run_batch(pods, &mut t2, &mut d2);
         assert_eq!(ev.records.len(), ba.records.len());
@@ -948,5 +544,8 @@ mod tests {
             assert_eq!(x.finish_s, y.finish_s);
             assert!((x.joules - y.joules).abs() <= 1e-9 * x.joules.abs());
         }
+        // Folded onto the one event loop, batch mode at t = 0 is the
+        // event run verbatim — events and all.
+        assert_eq!(ev.events, ba.events);
     }
 }

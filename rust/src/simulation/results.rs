@@ -79,9 +79,17 @@ pub struct RunResult {
     pub events: Vec<EventRecord>,
     /// Autoscaler actions, in decision order (empty without a policy).
     pub scaling: Vec<ScalingRecord>,
-    /// Ready/total node counts over the run (event mode; empty in the
-    /// batch oracle).
+    /// Ready/total node counts over the run (sampled at t = 0 and at
+    /// every membership change; batch mode carries just the t = 0
+    /// sample of its fixed cluster).
     pub node_timeline: Vec<NodeCountSample>,
+    /// Scheduling cycles that actually drained the pending queue.
+    pub cycles_run: u64,
+    /// Scheduling cycles short-circuited by the no-change guard
+    /// (`cycles_run + cycles_skipped` = cycles fired; the guard is
+    /// structural today, so this stays 0 unless a future cycle source
+    /// fires without a preceding mutation or arrival).
+    pub cycles_skipped: u64,
 }
 
 impl RunResult {

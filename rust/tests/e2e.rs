@@ -12,11 +12,27 @@ use greenpod::experiments::{
     run_ablation, run_alloc_analysis, run_cell, run_once, run_table6,
     run_table7, ExperimentContext,
 };
-use greenpod::scheduler::{
-    AdaptiveWeighting, DefaultK8sScheduler, Estimator, GreenPodScheduler,
-    Scheduler,
+use greenpod::framework::{
+    BuildOptions, FrameworkScheduler, McdaScorePlugin, NodeResourcesFit,
+    ProfileRegistry, SchedulerProfile,
 };
+use greenpod::scheduler::{AdaptiveWeighting, Estimator, Scheduler};
 use greenpod::workload::{WorkloadClass, WorkloadExecutor};
+
+/// Registry-built pair of framework profiles (the only scheduler
+/// implementations since the monolith retirement).
+fn scheds(
+    config: &Config,
+    scheme: WeightingScheme,
+    seed: u64,
+) -> (FrameworkScheduler, FrameworkScheduler) {
+    let registry = ProfileRegistry::new(config);
+    let opts = BuildOptions::new(config, scheme).with_seed(seed);
+    (
+        registry.build("greenpod", &opts).expect("built-in"),
+        registry.build("default-k8s", &opts).expect("built-in"),
+    )
+}
 
 fn fast_ctx(reps: u32) -> ExperimentContext {
     let mut cfg = Config::paper_default();
@@ -84,10 +100,7 @@ fn ablation_all_methods() {
 fn node_failure_and_recovery() {
     let config = Config::paper_default();
     let mut state = ClusterState::from_config(&config.cluster);
-    let mut sched = GreenPodScheduler::new(
-        Estimator::with_defaults(config.energy.clone()),
-        WeightingScheme::EnergyCentric,
-    );
+    let (mut sched, _) = scheds(&config, WeightingScheme::EnergyCentric, 7);
 
     // Kill all A nodes (the energy-centric favorites).
     state.set_ready(0, false, 0.0);
@@ -114,8 +127,7 @@ fn node_failure_and_recovery() {
 /// the pure-Rust scorer and counts fallbacks.
 #[test]
 fn pjrt_fallback_on_missing_artifacts() {
-    use greenpod::runtime::{ArtifactRegistry, PjrtTopsisEngine};
-    use greenpod::scheduler::ScoringBackend;
+    use greenpod::runtime::ArtifactRegistry;
 
     // A registry over an empty temp dir: manifest parse fails at open,
     // so simulate the later failure mode instead — a manifest whose
@@ -140,19 +152,16 @@ fn pjrt_fallback_on_missing_artifacts() {
 
     let config = Config::paper_default();
     let state = ClusterState::from_config(&config.cluster);
-    let mut sched = GreenPodScheduler::new(
-        Estimator::with_defaults(config.energy.clone()),
-        WeightingScheme::EnergyCentric,
-    )
-    .with_backend(ScoringBackend::Pjrt(Box::new(PjrtTopsisEngine::new(
-        reg,
-    ))));
+    let registry = ProfileRegistry::new(&config);
+    let opts = BuildOptions::new(&config, WeightingScheme::EnergyCentric)
+        .with_pjrt(Some(reg));
+    let mut sched = registry.build("greenpod", &opts).unwrap();
 
     let pod =
         Pod::new(0, WorkloadClass::Medium, SchedulerKind::Topsis, 0.0, 2);
     let d = sched.schedule(&state, &pod);
     assert!(d.node.is_some(), "fallback must still place the pod");
-    assert_eq!(sched.pjrt_fallbacks, 1);
+    assert_eq!(sched.pjrt_fallbacks(), 1);
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -161,12 +170,23 @@ fn pjrt_fallback_on_missing_artifacts() {
 fn adaptive_scheduler_places_pods() {
     let config = Config::paper_default();
     let executor = WorkloadExecutor::analytic();
-    let mut topsis = GreenPodScheduler::new(
-        Estimator::with_defaults(config.energy.clone()),
-        WeightingScheme::EnergyCentric,
-    )
-    .with_adaptive(AdaptiveWeighting::default());
-    let mut default = DefaultK8sScheduler::new(7);
+    // Adaptive weighting is a plugin-level knob, so this profile is
+    // hand-assembled rather than registry-built.
+    let profile = SchedulerProfile::new("greenpod-adaptive")
+        .filter(Box::new(NodeResourcesFit))
+        .score(
+            Box::new(
+                McdaScorePlugin::new(
+                    Estimator::with_defaults(config.energy.clone()),
+                    WeightingScheme::EnergyCentric,
+                )
+                .with_adaptive(AdaptiveWeighting::default()),
+            ),
+            1.0,
+        );
+    let mut topsis = FrameworkScheduler::new(profile, 7);
+    let (_, mut default) =
+        scheds(&config, WeightingScheme::EnergyCentric, 7);
     let engine = greenpod::simulation::SimulationEngine::new(
         &config,
         greenpod::simulation::SimulationParams::with_beta_and_seed(0.35, 7),

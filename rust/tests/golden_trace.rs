@@ -27,7 +27,7 @@ use greenpod::federation::{
     CarbonGreedy, FederationEngine, FederationParams, FederationResult,
     RegionSchedulers, RegionSpec,
 };
-use greenpod::scheduler::{DefaultK8sScheduler, Estimator, GreenPodScheduler};
+use greenpod::framework::{BuildOptions, FrameworkScheduler, ProfileRegistry};
 use greenpod::simulation::{RunResult, SimulationEngine, SimulationParams};
 use greenpod::util::json::Json;
 use greenpod::workload::{ArrivalTrace, WorkloadExecutor};
@@ -86,16 +86,26 @@ fn replay_with(
         params = params.with_carbon(carbon);
     }
     let engine = SimulationEngine::new(&cfg, params, &executor);
-    let mut topsis = GreenPodScheduler::new(
-        Estimator::new(
-            cfg.energy.clone(),
-            executor.light_epoch_secs(),
-            cfg.experiment.contention_beta,
-        ),
-        WeightingScheme::EnergyCentric,
-    );
-    let mut default = DefaultK8sScheduler::new(42);
+    let (mut topsis, mut default) = golden_schedulers(&cfg, &executor);
     engine.run(pods, &mut topsis, &mut default)
+}
+
+/// The golden scheduler pair: the framework `greenpod` / `default-k8s`
+/// profiles (pinned bit-identical to the retired monoliths before
+/// their removal), energy-centric, seed 42, estimator calibrated from
+/// the executor — exactly what the Python oracle mirrors.
+fn golden_schedulers(
+    cfg: &Config,
+    executor: &WorkloadExecutor,
+) -> (FrameworkScheduler, FrameworkScheduler) {
+    let registry = ProfileRegistry::new(cfg);
+    let opts = BuildOptions::new(cfg, WeightingScheme::EnergyCentric)
+        .with_seed(42)
+        .with_executor(executor);
+    (
+        registry.build("greenpod", &opts).expect("built-in"),
+        registry.build("default-k8s", &opts).expect("built-in"),
+    )
 }
 
 fn replay() -> RunResult {
@@ -400,16 +410,10 @@ fn golden_region_schedulers(
     cfg: &Config,
     executor: &WorkloadExecutor,
 ) -> RegionSchedulers {
+    let (topsis, default) = golden_schedulers(cfg, executor);
     RegionSchedulers {
-        topsis: Box::new(GreenPodScheduler::new(
-            Estimator::new(
-                cfg.energy.clone(),
-                executor.light_epoch_secs(),
-                cfg.experiment.contention_beta,
-            ),
-            WeightingScheme::EnergyCentric,
-        )),
-        default: Box::new(DefaultK8sScheduler::new(42)),
+        topsis: Box::new(topsis),
+        default: Box::new(default),
     }
 }
 
@@ -576,10 +580,13 @@ fn federation_golden_trace_matches_checked_in_expectations() {
 
 #[test]
 fn single_region_federation_is_bit_identical_to_plain_engine() {
-    // The degenerate federation on the golden scenario: one region
+    // Post-collapse delegation differential: `SimulationEngine::run`
+    // is now a thin wrapper that builds a 1-region federation, so this
+    // pins the *wrapper's* SimulationParams→RegionSpec mapping against
+    // a hand-assembled federation of the same scenario — one region
     // under the golden carbon signal *and* the golden threshold
-    // policy must reproduce the plain engine's run bit-for-bit —
-    // records, events, scaling, timeline, energy and grams.
+    // policy, bit-for-bit: records, events, scaling, timeline, energy
+    // and grams.
     let cfg = Config::paper_default();
     let executor = WorkloadExecutor::analytic();
     let signal = golden_carbon_signal(&cfg);
