@@ -552,6 +552,7 @@ mod tests {
         // The f64 path corrupted ids >= 2^53; the Uint path must carry
         // every digit through emission *and* a parse round-trip.
         let id: PodId = (1u64 << 53) + 1;
+        // greenpod-lint: allow(lossy-id-cast) reason="deliberate corruption proof: the assert documents exactly the f64 round-trip loss the Uint path prevents"
         assert_ne!((id as f64) as u64, id, "id must exceed f64 precision");
         for e in [
             ApiEvent::Completed {

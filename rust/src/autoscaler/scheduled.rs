@@ -11,6 +11,7 @@
 //! kernel with churn injection without a parallel code path.
 
 use crate::simulation::NodeChange;
+use crate::util::stats::total_order;
 
 use super::{Autoscaler, Decision, Observation, ScalingAction};
 
@@ -24,7 +25,7 @@ pub struct ScheduledAutoscaler {
 
 impl ScheduledAutoscaler {
     pub fn new(mut schedule: Vec<NodeChange>) -> Self {
-        schedule.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        schedule.sort_by(|a, b| total_order(&a.at_s, &b.at_s));
         Self { schedule, next: 0 }
     }
 }

@@ -6,6 +6,7 @@ use std::collections::BTreeMap;
 use crate::cluster::NodeId;
 use crate::config::{ClusterConfig, NodePoolConfig};
 use crate::energy::CarbonSignal;
+use crate::util::stats::total_order;
 
 use super::{Autoscaler, Decision, Observation, ScalingAction};
 
@@ -155,7 +156,7 @@ impl ThresholdConfig {
         cluster
             .pools
             .iter()
-            .min_by(|a, b| a.power_scale.total_cmp(&b.power_scale))
+            .min_by(|a, b| total_order(&a.power_scale, &b.power_scale))
             .expect("cluster has pools")
             .clone()
     }
@@ -205,7 +206,7 @@ impl ThresholdConfig {
             .min_by(|a, b| {
                 b.cpu_millis
                     .cmp(&a.cpu_millis)
-                    .then(a.power_scale.total_cmp(&b.power_scale))
+                    .then(total_order(&a.power_scale, &b.power_scale))
             })
             .expect("cluster has pools")
             .clone()
@@ -454,7 +455,7 @@ impl Autoscaler for ThresholdAutoscaler {
         decision.wake_at_s = wake_candidates
             .into_iter()
             .filter(|&t| t > now)
-            .min_by(f64::total_cmp);
+            .min_by(|a, b| total_order(a, b));
         decision
     }
 }

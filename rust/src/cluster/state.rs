@@ -9,7 +9,7 @@
 //! scan), pinned bit-identical to the reference linear scan
 //! ([`ClusterState::feasible_nodes_scan`]) by the property suite.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::{Node, NodeCategory, NodeId, Pod, PodId, ResourceRequests};
@@ -124,7 +124,9 @@ impl FreeIndex {
 pub struct ClusterState {
     nodes: Vec<Node>,
     alloc: Vec<Alloc>,
-    bound: HashMap<PodId, (NodeId, ResourceRequests)>,
+    /// Bound-pod ledger. BTreeMap so `pods_per_category` (and any
+    /// future walk) iterates in pod-id order, never hash order.
+    bound: BTreeMap<PodId, (NodeId, ResourceRequests)>,
     events: VecDeque<ClusterEvent>,
     /// Events ever emitted (retained + dropped + drained) — the cursor
     /// consumers compare against to detect drops.
@@ -171,7 +173,7 @@ impl ClusterState {
         let mut state = Self {
             nodes,
             alloc,
-            bound: HashMap::new(),
+            bound: BTreeMap::new(),
             events: VecDeque::new(),
             events_emitted: 0,
             node_version: Vec::new(),
@@ -466,9 +468,10 @@ impl ClusterState {
         self.ready_count
     }
 
-    /// Pods bound per category — §V.D's allocation analysis.
-    pub fn pods_per_category(&self) -> HashMap<NodeCategory, u32> {
-        let mut out = HashMap::new();
+    /// Pods bound per category — §V.D's allocation analysis. Ordered
+    /// map: derived report rows render in category order, every run.
+    pub fn pods_per_category(&self) -> BTreeMap<NodeCategory, u32> {
+        let mut out = BTreeMap::new();
         for (&_pod, &(node, _)) in &self.bound {
             *out.entry(self.nodes[node].category).or_insert(0) += 1;
         }

@@ -306,8 +306,11 @@ fn cluster_from_json(v: &Json) -> Result<ClusterConfig> {
                         .unwrap_or("custom")
                         .to_string(),
                     count: p.req_usize("count")?,
-                    cpu_millis: p.req_f64("cpu_millis")? as u64,
-                    memory_mib: p.req_f64("memory_mib")? as u64,
+                    // Lossless u64 path: capacities are integer fields
+                    // (a fractional value is a config error, not
+                    // something to truncate silently).
+                    cpu_millis: p.req_u64("cpu_millis")?,
+                    memory_mib: p.req_u64("memory_mib")?,
                     speed_factor: p.req_f64("speed_factor")?,
                     power_scale: p.req_f64("power_scale")?,
                 })

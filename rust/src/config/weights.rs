@@ -25,8 +25,10 @@ pub const CRITERIA_NAMES: [&str; NUM_CRITERIA] = [
 /// benefits. 1.0 = benefit, 0.0 = cost (the kernel-side convention).
 pub const BENEFIT_MASK: [f64; NUM_CRITERIA] = [0.0, 0.0, 1.0, 1.0, 1.0];
 
-/// A scheduling profile from §IV.D.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// A scheduling profile from §IV.D. `Ord` follows declaration order —
+/// the paper's Table VI reporting order — so ordered maps keyed by
+/// scheme render rows in paper order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum WeightingScheme {
     General,
     EnergyCentric,
@@ -108,7 +110,11 @@ mod tests {
     #[test]
     fn performance_centric_prioritizes_exec_time() {
         let w = WeightingScheme::PerformanceCentric.weights();
-        assert_eq!(w[0], *w.iter().max_by(|a, b| a.total_cmp(b)).unwrap());
+        let max = *w
+            .iter()
+            .max_by(|a, b| crate::util::stats::total_order(a, b))
+            .unwrap();
+        assert_eq!(w[0], max);
     }
 
     #[test]

@@ -14,8 +14,7 @@
 //!   pod's lifetime (DVFS, carbon-intensity curves) without touching
 //!   the engine.
 
-use std::collections::{BTreeMap, HashMap};
-
+use std::collections::BTreeMap;
 
 use crate::cluster::{Node, PodId};
 use crate::config::{EnergyModelConfig, SchedulerKind};
@@ -78,7 +77,9 @@ struct NodeLedger {
 #[derive(Debug, Clone, Default)]
 pub struct EnergyMeter {
     records: Vec<PodEnergy>,
-    running: HashMap<PodId, RunningEntry>,
+    /// Pods mid-integration (BTreeMap: `advance` walks every entry, so
+    /// the walk order must be deterministic).
+    running: BTreeMap<PodId, RunningEntry>,
     /// Per-node idle ledgers (BTreeMap: deterministic iteration).
     nodes: BTreeMap<usize, NodeLedger>,
     /// Grid intensity the CO₂ ledger integrates against (default: a
@@ -348,12 +349,13 @@ impl EnergyMeter {
     }
 
     /// Per-class mean energy (kJ/pod) for one scheduler — §V.D's
-    /// workload analysis.
+    /// workload analysis. Ordered map: report rows derived from this
+    /// render in class order, identically on every run.
     pub fn per_class_kj(
         &self,
         kind: SchedulerKind,
-    ) -> HashMap<WorkloadClass, f64> {
-        let mut sums: HashMap<WorkloadClass, (f64, usize)> = HashMap::new();
+    ) -> BTreeMap<WorkloadClass, f64> {
+        let mut sums: BTreeMap<WorkloadClass, (f64, usize)> = BTreeMap::new();
         for r in self.records.iter().filter(|r| r.scheduler == kind) {
             let e = sums.entry(r.class).or_insert((0.0, 0));
             e.0 += r.joules;
@@ -369,8 +371,8 @@ impl EnergyMeter {
     pub fn per_class_duration(
         &self,
         kind: SchedulerKind,
-    ) -> HashMap<WorkloadClass, f64> {
-        let mut sums: HashMap<WorkloadClass, (f64, usize)> = HashMap::new();
+    ) -> BTreeMap<WorkloadClass, f64> {
+        let mut sums: BTreeMap<WorkloadClass, (f64, usize)> = BTreeMap::new();
         for r in self.records.iter().filter(|r| r.scheduler == kind) {
             let e = sums.entry(r.class).or_insert((0.0, 0));
             e.0 += r.duration_s;
@@ -586,6 +588,41 @@ mod tests {
         assert!(per[&WorkloadClass::Complex] > per[&WorkloadClass::Light]);
         let dur = m.per_class_duration(SchedulerKind::Topsis);
         assert_eq!(dur[&WorkloadClass::Complex], 40.0);
+    }
+
+    #[test]
+    fn per_class_tables_are_insertion_order_independent() {
+        // Regression for the unordered-iter sweep: the per-class
+        // report maps must walk in class order and be byte-identical
+        // regardless of the order pods were recorded in.
+        let cfg = EnergyModelConfig::default();
+        let n = node(0, 1.0);
+        let fwd = [
+            WorkloadClass::Complex,
+            WorkloadClass::Light,
+            WorkloadClass::Medium,
+        ];
+        let mut m1 = EnergyMeter::new();
+        for (i, class) in fwd.into_iter().enumerate() {
+            m1.record(&cfg, i as u64, class, SchedulerKind::Topsis,
+                      &n, 0.1, 10.0, 0.0);
+        }
+        let mut m2 = EnergyMeter::new();
+        for (i, class) in fwd.into_iter().rev().enumerate() {
+            m2.record(&cfg, 10 + i as u64, class, SchedulerKind::Topsis,
+                      &n, 0.1, 10.0, 0.0);
+        }
+        let kj = m1.per_class_kj(SchedulerKind::Topsis);
+        let keys: Vec<WorkloadClass> = kj.keys().copied().collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+        assert_eq!(keys.len(), 3);
+        assert_eq!(kj, m2.per_class_kj(SchedulerKind::Topsis));
+        assert_eq!(
+            m1.per_class_duration(SchedulerKind::Topsis),
+            m2.per_class_duration(SchedulerKind::Topsis)
+        );
     }
 
     #[test]

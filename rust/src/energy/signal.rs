@@ -274,7 +274,7 @@ impl CarbonSignal {
                 }
             }
         }
-        candidates.sort_by(f64::total_cmp);
+        candidates.sort_by(crate::util::stats::total_order);
         candidates
             .into_iter()
             .find(|&t| (self.at(t) > threshold) != dirty_now)

@@ -1,8 +1,9 @@
 //! §V.D — node-allocation and per-workload analysis: where does each
 //! strategy place pods, and which workload class saves the most energy?
 
-use std::collections::HashMap;
-
+// Ordered maps end to end: the allocation tables iterate these when
+// rendering, so the row contents must not depend on hash order.
+use std::collections::BTreeMap;
 
 use crate::cluster::NodeCategory;
 use crate::config::{
@@ -19,12 +20,12 @@ pub struct AllocAnalysis {
     pub level: CompetitionLevel,
     /// profile → category → pods placed there by TOPSIS.
     pub topsis_alloc:
-        HashMap<WeightingScheme, HashMap<NodeCategory, u32>>,
+        BTreeMap<WeightingScheme, BTreeMap<NodeCategory, u32>>,
     /// Default-scheduler allocation histogram (profile-independent in
     /// expectation; measured from the same runs).
-    pub default_alloc: HashMap<NodeCategory, u32>,
+    pub default_alloc: BTreeMap<NodeCategory, u32>,
     /// Energy-centric per-class optimization % (savings by workload).
-    pub per_class_optimization: HashMap<WorkloadClass, f64>,
+    pub per_class_optimization: BTreeMap<WorkloadClass, f64>,
 }
 
 /// Run §V.D's analysis at one level (replications from config).
@@ -34,10 +35,10 @@ pub fn run_alloc_analysis(
 ) -> AllocAnalysis {
     let executor = WorkloadExecutor::analytic();
     let reps = ctx.config.experiment.replications;
-    let mut topsis_alloc: HashMap<_, HashMap<NodeCategory, u32>> =
-        HashMap::new();
-    let mut default_alloc: HashMap<NodeCategory, u32> = HashMap::new();
-    let mut class_sum: HashMap<WorkloadClass, (f64, f64)> = HashMap::new();
+    let mut topsis_alloc: BTreeMap<_, BTreeMap<NodeCategory, u32>> =
+        BTreeMap::new();
+    let mut default_alloc: BTreeMap<NodeCategory, u32> = BTreeMap::new();
+    let mut class_sum: BTreeMap<WorkloadClass, (f64, f64)> = BTreeMap::new();
 
     for scheme in WeightingScheme::ALL {
         let entry = topsis_alloc.entry(scheme).or_default();
@@ -156,5 +157,51 @@ mod tests {
             .contains("Energy-centric"));
         assert!(crate::metrics::format_table(&a.per_class_table())
             .contains("Medium"));
+    }
+
+    #[test]
+    fn tables_are_insertion_order_independent() {
+        // Regression for the unordered-iter sweep: two analyses with
+        // identical content built in opposite insertion orders must
+        // render byte-identical tables — report rows may not depend
+        // on map iteration order.
+        let empty = AllocAnalysis {
+            level: CompetitionLevel::Low,
+            topsis_alloc: BTreeMap::new(),
+            default_alloc: BTreeMap::new(),
+            per_class_optimization: BTreeMap::new(),
+        };
+        let (mut fwd, mut rev) = (empty.clone(), empty);
+        let cats = [NodeCategory::A, NodeCategory::B, NodeCategory::C];
+        for scheme in WeightingScheme::ALL {
+            let e = fwd.topsis_alloc.entry(scheme).or_default();
+            for (i, c) in cats.iter().enumerate() {
+                e.insert(*c, i as u32);
+            }
+        }
+        for scheme in WeightingScheme::ALL.into_iter().rev() {
+            let e = rev.topsis_alloc.entry(scheme).or_default();
+            for (i, c) in cats.iter().enumerate().rev() {
+                e.insert(*c, i as u32);
+            }
+        }
+        for (i, c) in cats.iter().enumerate() {
+            fwd.default_alloc.insert(*c, 7 + i as u32);
+            fwd.per_class_optimization
+                .insert(WorkloadClass::ALL[i], i as f64);
+        }
+        for (i, c) in cats.iter().enumerate().rev() {
+            rev.default_alloc.insert(*c, 7 + i as u32);
+            rev.per_class_optimization
+                .insert(WorkloadClass::ALL[i], i as f64);
+        }
+        assert_eq!(
+            crate::metrics::format_table(&fwd.to_table()),
+            crate::metrics::format_table(&rev.to_table())
+        );
+        assert_eq!(
+            crate::metrics::format_table(&fwd.per_class_table()),
+            crate::metrics::format_table(&rev.per_class_table())
+        );
     }
 }

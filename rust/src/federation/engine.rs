@@ -20,7 +20,7 @@
 //! (seeing every region's live state), after which the pod belongs to
 //! that region's pending queue for good.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::autoscaler::{
     Autoscaler, AutoscalerPolicy, Observation, ScalingAction,
@@ -183,7 +183,9 @@ struct RegionRun {
     meter: EnergyMeter,
     records: Vec<PodRecord>,
     pending: VecDeque<usize>,
-    running: HashMap<usize, RunningPod>,
+    /// BTreeMap rather than HashMap: never iterated today, but an
+    /// ordered map keeps any future walk deterministic by default.
+    running: BTreeMap<usize, RunningPod>,
     events: Vec<EventRecord>,
     scaling: Vec<ScalingRecord>,
     node_timeline: Vec<NodeCountSample>,
@@ -216,7 +218,7 @@ impl RegionRun {
             meter: EnergyMeter::new().with_carbon(spec.carbon.clone()),
             records: Vec::new(),
             pending: VecDeque::new(),
-            running: HashMap::new(),
+            running: BTreeMap::new(),
             events: Vec::new(),
             scaling: Vec::new(),
             node_timeline: Vec::new(),

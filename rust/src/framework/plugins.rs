@@ -303,7 +303,7 @@ mod tests {
         let best = scores
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.total_cmp(b.1))
+            .max_by(|a, b| crate::util::stats::total_order(a.1, b.1))
             .unwrap()
             .0;
         assert!(best < 3, "best candidate {best}, scores {scores:?}");

@@ -136,6 +136,7 @@ impl Scheduler for FrameworkScheduler {
         state: &ClusterState,
         pod: &Pod,
     ) -> SchedulingDecision {
+        // greenpod-lint: allow(wall-clock-in-kernel) reason="bench-only decision-latency metric; the reading feeds latency_us reporting and never reaches placement, virtual time, or energy results"
         let t0 = Instant::now();
 
         // Filter: a node survives only if every filter admits it.

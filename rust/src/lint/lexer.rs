@@ -1,0 +1,387 @@
+//! A small Rust lexer for the in-tree lint pass: spanned tokens plus
+//! the comment stream (the allow-annotation carrier).
+//!
+//! This is not a compiler front-end — it knows exactly enough Rust
+//! lexical structure for token-level rules to be trustworthy: nested
+//! block comments, string/raw-string/char literals (so `"HashMap"` in
+//! a test never reads as a type use), lifetimes vs. char literals, and
+//! numeric literals with suffixes. Everything else is a one-byte
+//! punctuation token; rules match identifier sequences, not grammar.
+//! In the house style of `util::json`: hand-rolled, offline, no
+//! dependencies.
+
+/// Lexical class of a [`Token`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (`fn`, `as`, `HashMap`, `r#type`).
+    Ident,
+    /// `'a`, `'static`, `'_`.
+    Lifetime,
+    /// Numeric literal, suffix included (`42`, `2.5`, `1u64`, `0xff`).
+    Number,
+    /// String literal of any flavor (`"…"`, `r#"…"#`, `b"…"`).
+    Str,
+    /// Char or byte-char literal (`'x'`, `b'\n'`).
+    Char,
+    /// Any other single byte (`.`, `:`, `(`, …).
+    Punct(u8),
+}
+
+/// One token with its byte range and 1-based source position.
+#[derive(Debug, Clone, Copy)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub start: usize,
+    pub end: usize,
+    pub line: usize,
+    pub col: usize,
+}
+
+impl Token {
+    /// The token's source text.
+    pub fn text<'a>(&self, src: &'a str) -> &'a str {
+        &src[self.start..self.end]
+    }
+
+    /// True for an identifier token spelling exactly `word`.
+    pub fn is_ident(&self, src: &str, word: &str) -> bool {
+        self.kind == TokenKind::Ident && self.text(src) == word
+    }
+}
+
+/// One comment (line or block, doc or plain), full text span.
+#[derive(Debug, Clone, Copy)]
+pub struct Comment {
+    pub start: usize,
+    pub end: usize,
+    pub line: usize,
+    pub col: usize,
+}
+
+impl Comment {
+    pub fn text<'a>(&self, src: &'a str) -> &'a str {
+        &src[self.start..self.end]
+    }
+}
+
+/// The lexed file: code tokens and comments, each in source order.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+fn ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_' || c >= 0x80
+}
+
+fn ident_continue(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_' || c >= 0x80
+}
+
+/// Lex `src` into tokens + comments. Never fails: unterminated
+/// constructs run to end of input (the lint pass only ever sees code
+/// rustc already accepted, so this is a non-issue in practice).
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    // Byte offset of each line start; position lookups binary-search
+    // this, so consuming multi-line constructs needs no line counter.
+    let mut line_starts = vec![0usize];
+    for (i, &c) in b.iter().enumerate() {
+        if c == b'\n' {
+            line_starts.push(i + 1);
+        }
+    }
+    let pos = |off: usize| {
+        let line = line_starts.partition_point(|&s| s <= off);
+        (line, off - line_starts[line - 1] + 1)
+    };
+
+    let mut tokens = Vec::new();
+    let mut comments = Vec::new();
+    let mut push = |kind: TokenKind, start: usize, end: usize| {
+        let (line, col) = pos(start);
+        tokens.push(Token { kind, start, end, line, col });
+    };
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        let start = i;
+        match c {
+            b' ' | b'\t' | b'\r' | b'\n' => i += 1,
+            // Line comment (`//`, `///`, `//!`).
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                let (line, col) = pos(start);
+                comments.push(Comment { start, end: i, line, col });
+            }
+            // Block comment, nested per Rust.
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                let mut depth = 1usize;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                let (line, col) = pos(start);
+                comments.push(Comment { start, end: i, line, col });
+            }
+            b'"' => {
+                i = string_end(b, i);
+                push(TokenKind::Str, start, i);
+            }
+            // Raw strings and raw identifiers.
+            b'r' if matches!(b.get(i + 1), Some(&b'"') | Some(&b'#')) => {
+                if b.get(i + 1) == Some(&b'#')
+                    && b.get(i + 2).is_some_and(|&c| ident_start(c))
+                {
+                    i += 2; // r#ident
+                    while i < b.len() && ident_continue(b[i]) {
+                        i += 1;
+                    }
+                    push(TokenKind::Ident, start, i);
+                } else {
+                    i = raw_string_end(b, i + 1);
+                    push(TokenKind::Str, start, i);
+                }
+            }
+            // Byte-string / byte-char / byte-raw-string prefixes.
+            b'b' if matches!(b.get(i + 1), Some(&b'"') | Some(&b'\'')) => {
+                if b[i + 1] == b'"' {
+                    i = string_end(b, i + 1);
+                    push(TokenKind::Str, start, i);
+                } else {
+                    i = char_end(b, i + 1);
+                    push(TokenKind::Char, start, i);
+                }
+            }
+            b'b' if b.get(i + 1) == Some(&b'r')
+                && matches!(b.get(i + 2), Some(&b'"') | Some(&b'#')) =>
+            {
+                i = raw_string_end(b, i + 2);
+                push(TokenKind::Str, start, i);
+            }
+            // Lifetime or char literal.
+            b'\'' => {
+                let next = b.get(i + 1).copied();
+                let after = b.get(i + 2).copied();
+                if next.is_some_and(|c| c != b'\\' && ident_start(c))
+                    && after != Some(b'\'')
+                {
+                    i += 2;
+                    while i < b.len() && ident_continue(b[i]) {
+                        i += 1;
+                    }
+                    push(TokenKind::Lifetime, start, i);
+                } else {
+                    i = char_end(b, i);
+                    push(TokenKind::Char, start, i);
+                }
+            }
+            c if ident_start(c) => {
+                while i < b.len() && ident_continue(b[i]) {
+                    i += 1;
+                }
+                push(TokenKind::Ident, start, i);
+            }
+            c if c.is_ascii_digit() => {
+                i += 1;
+                loop {
+                    while i < b.len() && ident_continue(b[i]) {
+                        i += 1;
+                    }
+                    // `2.5` continues through the dot; `1..n` and
+                    // `a.1.total_cmp` stop at it.
+                    if b.get(i) == Some(&b'.')
+                        && b.get(i + 1).is_some_and(|c| c.is_ascii_digit())
+                    {
+                        i += 1;
+                    } else {
+                        break;
+                    }
+                }
+                push(TokenKind::Number, start, i);
+            }
+            c => {
+                i += 1;
+                if c < 0x80 {
+                    push(TokenKind::Punct(c), start, i);
+                }
+            }
+        }
+    }
+    Lexed { tokens, comments }
+}
+
+/// Past-the-end offset of a `"…"` string starting at `i` (the quote).
+fn string_end(b: &[u8], mut i: usize) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'"' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Past-the-end offset of a raw string; `i` is at the first `#` or the
+/// opening quote.
+fn raw_string_end(b: &[u8], mut i: usize) -> usize {
+    let mut hashes = 0usize;
+    while b.get(i) == Some(&b'#') {
+        hashes += 1;
+        i += 1;
+    }
+    if b.get(i) != Some(&b'"') {
+        return i; // not actually a raw string; treat as consumed
+    }
+    i += 1;
+    while i < b.len() {
+        if b[i] == b'"'
+            && b[i + 1..].len() >= hashes
+            && b[i + 1..i + 1 + hashes].iter().all(|&c| c == b'#')
+        {
+            return i + 1 + hashes;
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Past-the-end offset of a char literal starting at `i` (the quote).
+fn char_end(b: &[u8], mut i: usize) -> usize {
+    i += 1;
+    if b.get(i) == Some(&b'\\') {
+        i += 2; // the backslash and the escaped byte (`\u{…}` scans on)
+    }
+    while i < b.len() {
+        if b[i] == b'\'' {
+            return i + 1;
+        }
+        i += 1;
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokenKind::Ident)
+            .map(|t| t.text(src).to_string())
+            .collect()
+    }
+
+    #[test]
+    fn idents_numbers_puncts_with_positions() {
+        let src = "let x = a.1.cmp(&b);\nlet y = 2.5;";
+        let lexed = lex(src);
+        assert_eq!(idents(src), ["let", "x", "a", "cmp", "b", "let", "y"]);
+        let x = &lexed.tokens[1];
+        assert_eq!((x.line, x.col), (1, 5));
+        let y = lexed
+            .tokens
+            .iter()
+            .find(|t| t.is_ident(src, "y"))
+            .unwrap();
+        assert_eq!((y.line, y.col), (2, 5));
+        // `a.1.cmp`: the tuple index must not swallow `.cmp`.
+        assert!(lexed
+            .tokens
+            .iter()
+            .any(|t| t.kind == TokenKind::Number && t.text(src) == "1"));
+        assert!(lexed
+            .tokens
+            .iter()
+            .any(|t| t.kind == TokenKind::Number && t.text(src) == "2.5"));
+    }
+
+    #[test]
+    fn strings_and_chars_are_opaque() {
+        let src = r#"let s = "HashMap::new()"; let c = '"'; let d = 'x';"#;
+        assert_eq!(idents(src), ["let", "s", "let", "c", "let", "d"]);
+        let kinds: Vec<TokenKind> =
+            lex(src).tokens.iter().map(|t| t.kind).collect();
+        assert_eq!(
+            kinds.iter().filter(|k| **k == TokenKind::Str).count(),
+            1
+        );
+        assert_eq!(
+            kinds.iter().filter(|k| **k == TokenKind::Char).count(),
+            2
+        );
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let src = "let s = r#\"a \" HashMap \"#; let t = \"\\\"Instant\\\"\";";
+        assert_eq!(idents(src), ["let", "s", "let", "t"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { '_' }";
+        let lexed = lex(src);
+        let lifetimes: Vec<&str> = lexed
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokenKind::Lifetime)
+            .map(|t| t.text(src))
+            .collect();
+        assert_eq!(lifetimes, ["'a", "'a"]);
+        assert!(lexed
+            .tokens
+            .iter()
+            .any(|t| t.kind == TokenKind::Char && t.text(src) == "'_'"));
+    }
+
+    #[test]
+    fn comments_collected_not_tokenized() {
+        let src = "// HashMap here\nlet a = 1; /* Instant::now()\n/* nested */ */ let b = 2;";
+        let lexed = lex(src);
+        assert_eq!(idents(src), ["let", "a", "let", "b"]);
+        assert_eq!(lexed.comments.len(), 2);
+        assert_eq!(lexed.comments[0].line, 1);
+        assert!(lexed.comments[0].text(src).contains("HashMap"));
+        assert!(lexed.comments[1].text(src).contains("nested"));
+        // `b` sits on line 3, after the multi-line block comment.
+        let b = lexed
+            .tokens
+            .iter()
+            .find(|t| t.is_ident(src, "b"))
+            .unwrap();
+        assert_eq!(b.line, 3);
+    }
+
+    #[test]
+    fn raw_identifiers_and_suffixed_numbers() {
+        let src = "let r#type = 1u64; let h = 0xff_u8;";
+        assert_eq!(idents(src), ["let", "r#type", "let", "h"]);
+        let lexed = lex(src);
+        assert!(lexed
+            .tokens
+            .iter()
+            .any(|t| t.kind == TokenKind::Number && t.text(src) == "1u64"));
+    }
+
+    #[test]
+    fn escaped_quote_char_literal_does_not_derail() {
+        let src = r"let q = '\''; let n = '\n'; let u = '\u{41}'; done";
+        assert_eq!(idents(src), ["let", "q", "let", "n", "let", "u", "done"]);
+    }
+}

@@ -1,0 +1,248 @@
+//! greenpod lint: the in-tree determinism & numeric-safety static
+//! analysis (`greenpod lint [--deny] [--json]`).
+//!
+//! Every headline this repro ships is pinned by bit-identical golden
+//! fixtures, and the last three bugfix sweeps were all silent
+//! determinism or numeric hazards: u64 ids corrupted through f64,
+//! drifted percentile copies, nondeterministic report rows. This pass
+//! encodes that bug history as five token-level rules and runs over
+//! every file under `rust/src/` in CI, so the next instance fails at
+//! review time instead of in a fixture diff:
+//!
+//! | rule                   | scope  | catches                        |
+//! |------------------------|--------|--------------------------------|
+//! | `unordered-iter`       | kernel | `HashMap`/`HashSet` use        |
+//! | `wall-clock-in-kernel` | kernel | `Instant::now`, `SystemTime`   |
+//! | `lossy-id-cast`        | all    | id/count ↔ f64 `as` round-trips|
+//! | `float-cmp-unwrap`     | all    | float orderings outside the    |
+//! |                        |        | shared `util::stats::total_order`|
+//! | `banned-path`          | all    | retired monolith schedulers    |
+//!
+//! Scope: a file's first directory under `src/` decides whether the
+//! kernel-only rules apply. `api`, `util`, `runtime`, `experiments`
+//! and `lint` itself are *tool* modules (wall-clock and std hash maps
+//! are fine there); everything else — the simulation kernel and the
+//! layers that feed it — is *kernel*, including files sitting
+//! directly under `src/`.
+//!
+//! Suppression is never silent: see [`rules`] for the
+//! `// greenpod-lint: allow(<rule>) reason="…"` grammar. This module
+//! is analysis only — it never edits files, and the lexer
+//! ([`lexer`]) is hand-rolled in the house style of [`crate::util::json`]
+//! so the workspace still builds offline with zero new dependencies.
+
+pub mod lexer;
+mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Module class for rule scoping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// Simulation kernel and the layers feeding it: must be virtual-
+    /// time deterministic end to end.
+    Kernel,
+    /// Offline tooling (CLI plumbing, benches, experiment drivers):
+    /// wall clocks and hash maps are fine as long as they cannot
+    /// reach results.
+    Tool,
+}
+
+/// First-level directories under `src/` classed as tool modules.
+const TOOL_MODULES: [&str; 5] =
+    ["api", "experiments", "lint", "runtime", "util"];
+
+/// Source files that must stay deleted (PR 7 retired the monolith
+/// schedulers; the federation engine is the one event loop). Paths
+/// relative to the linted source root.
+const BANNED_FILES: [&str; 2] =
+    ["scheduler/greenpod.rs", "scheduler/default_k8s.rs"];
+
+/// One lint violation, `file:line:col`-addressable (1-based).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub col: usize,
+    pub message: String,
+}
+
+impl Finding {
+    /// The one-line human rendering: `path:line:col: rule: message`.
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}:{}: {}: {}",
+            self.path, self.line, self.col, self.rule, self.message
+        )
+    }
+}
+
+/// Classify a path (kernel vs. tool) by its first directory under
+/// `src/`. Files directly under `src/` (`lib.rs`, `main.rs`) are held
+/// to the stricter kernel rules.
+pub fn scope_of(path: &str) -> Scope {
+    let rel = path.rsplit_once("src/").map_or(path, |(_, r)| r);
+    match rel.split_once('/') {
+        Some((first, _)) if TOOL_MODULES.contains(&first) => Scope::Tool,
+        _ => Scope::Kernel,
+    }
+}
+
+/// Lint one file's source text. `path` decides scope and labels the
+/// spans; it accepts both repo-relative (`rust/src/…`) and bare
+/// (`simulation/event.rs`) forms.
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    rules::check_source(path, scope_of(path), src)
+}
+
+/// The result of linting a source tree.
+#[derive(Debug)]
+pub struct Report {
+    /// All findings, sorted by (path, line, col, rule).
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable rendering for `greenpod lint --json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("files_scanned", Json::Uint(self.files_scanned as u64)),
+            (
+                "findings",
+                Json::Arr(
+                    self.findings
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("rule", Json::Str(f.rule.to_string())),
+                                ("path", Json::Str(f.path.clone())),
+                                ("line", Json::Uint(f.line as u64)),
+                                ("col", Json::Uint(f.col as u64)),
+                                (
+                                    "message",
+                                    Json::Str(f.message.clone()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Lint every `.rs` file under `root` (sorted walk, so output order
+/// never depends on directory enumeration), plus the banned-file
+/// checks relative to `root`.
+pub fn lint_tree(root: &Path) -> Result<Report> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)
+        .with_context(|| format!("walking {}", root.display()))?;
+    files.sort();
+    let mut findings = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f)
+            .with_context(|| format!("reading {}", f.display()))?;
+        findings.extend(lint_source(&display_path(f), &src));
+    }
+    for banned in BANNED_FILES {
+        let p = root.join(banned);
+        if p.exists() {
+            findings.push(Finding {
+                rule: "banned-path",
+                path: display_path(&p),
+                line: 1,
+                col: 1,
+                message: "retired monolith scheduler file must stay \
+                          deleted — the federation engine is the one \
+                          event loop"
+                    .to_string(),
+            });
+        }
+    }
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.col, a.rule)
+            .cmp(&(b.path.as_str(), b.line, b.col, b.rule))
+    });
+    Ok(Report { findings, files_scanned: files.len() })
+}
+
+fn display_path(p: &Path) -> String {
+    p.to_string_lossy().replace('\\', "/")
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_classification() {
+        assert_eq!(scope_of("rust/src/simulation/event.rs"), Scope::Kernel);
+        assert_eq!(scope_of("rust/src/federation/engine.rs"), Scope::Kernel);
+        assert_eq!(scope_of("rust/src/config/serial.rs"), Scope::Kernel);
+        assert_eq!(scope_of("rust/src/util/bench.rs"), Scope::Tool);
+        assert_eq!(scope_of("rust/src/api/mod.rs"), Scope::Tool);
+        assert_eq!(scope_of("rust/src/lint/lexer.rs"), Scope::Tool);
+        // Bare relative paths work too.
+        assert_eq!(scope_of("experiments/alloc.rs"), Scope::Tool);
+        // Files directly under src/ are held to kernel rules.
+        assert_eq!(scope_of("rust/src/lib.rs"), Scope::Kernel);
+        assert_eq!(scope_of("rust/src/main.rs"), Scope::Kernel);
+    }
+
+    #[test]
+    fn render_is_span_addressable() {
+        let f = Finding {
+            rule: "unordered-iter",
+            path: "rust/src/energy/meter.rs".to_string(),
+            line: 81,
+            col: 14,
+            message: "m".to_string(),
+        };
+        assert_eq!(
+            f.render(),
+            "rust/src/energy/meter.rs:81:14: unordered-iter: m"
+        );
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let r = Report {
+            findings: vec![Finding {
+                rule: "banned-path",
+                path: "x.rs".to_string(),
+                line: 1,
+                col: 2,
+                message: "m".to_string(),
+            }],
+            files_scanned: 3,
+        };
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"files_scanned\":3"), "{j}");
+        assert!(j.contains("\"rule\":\"banned-path\""), "{j}");
+        assert!(j.contains("\"line\":1"), "{j}");
+    }
+}

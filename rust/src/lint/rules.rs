@@ -1,0 +1,633 @@
+//! The five greenpod lint rules plus the allow-annotation pipeline.
+//!
+//! Each rule is a token-level pattern over [`super::lexer`] output —
+//! grounded in this repo's actual bug history (2^53 id corruption,
+//! drifted percentile copies, nondeterministic report rows), not a
+//! general Rust style guide. Suppression is explicit and audited:
+//!
+//! ```text
+//! // greenpod-lint: allow(<rule>) reason="why this site is safe"
+//! ```
+//!
+//! A trailing annotation covers its own line; an own-line annotation
+//! covers the next code line (consecutive own-line annotations stack
+//! onto the same line). The reason is mandatory, and an allow that
+//! suppresses nothing is itself an error (`unused-allow`), so stale
+//! annotations cannot accumulate.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{lex, Lexed, Token, TokenKind};
+use super::{Finding, Scope};
+
+/// Rules that may appear inside `allow(…)`.
+pub(super) const RULE_NAMES: [&str; 5] = [
+    "banned-path",
+    "float-cmp-unwrap",
+    "lossy-id-cast",
+    "unordered-iter",
+    "wall-clock-in-kernel",
+];
+
+/// Lint one file's source. `path` is the display path used in spans
+/// and for scope/exemption decisions.
+pub(super) fn check_source(
+    path: &str,
+    scope: Scope,
+    src: &str,
+) -> Vec<Finding> {
+    let lexed = lex(src);
+    let mut findings = Vec::new();
+    rule_unordered_iter(path, scope, src, &lexed.tokens, &mut findings);
+    rule_wall_clock_in_kernel(path, scope, src, &lexed.tokens, &mut findings);
+    rule_lossy_id_cast(path, src, &lexed.tokens, &mut findings);
+    rule_float_cmp_unwrap(path, src, &lexed.tokens, &mut findings);
+    rule_banned_ident(path, src, &lexed.tokens, &mut findings);
+
+    let mut allows = collect_allows(path, src, &lexed, &mut findings);
+    let mut kept = Vec::with_capacity(findings.len());
+    for f in findings {
+        let mut suppressed = false;
+        for a in allows.iter_mut() {
+            if a.rule == f.rule && a.target == Some(f.line) {
+                a.used = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            kept.push(f);
+        }
+    }
+    for a in &allows {
+        if !a.used {
+            kept.push(Finding {
+                rule: "unused-allow",
+                path: path.to_string(),
+                line: a.line,
+                col: a.col,
+                message: format!(
+                    "allow({}) suppresses nothing — unused allows are \
+                     errors; remove it or move it to the violating line",
+                    a.rule
+                ),
+            });
+        }
+    }
+    kept.sort_by(|a, b| (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule)));
+    kept
+}
+
+fn finding(
+    rule: &'static str,
+    path: &str,
+    at: &Token,
+    message: String,
+) -> Finding {
+    Finding {
+        rule,
+        path: path.to_string(),
+        line: at.line,
+        col: at.col,
+        message,
+    }
+}
+
+fn is_punct(t: &Token, c: u8) -> bool {
+    t.kind == TokenKind::Punct(c)
+}
+
+// ------------------------------------------------------------- rules
+
+/// `unordered-iter`: the std hash collections in kernel modules.
+/// Their iteration order is seeded per-process, so any map that feeds
+/// an event, a score tie-break, or a report row silently breaks
+/// reproducibility. The fix is the BTree equivalent (the kernel's
+/// maps are small; the ordered walk is also what the golden fixtures
+/// pin), sorting before iterating, or an allow with a proof that the
+/// order cannot reach results.
+fn rule_unordered_iter(
+    path: &str,
+    scope: Scope,
+    src: &str,
+    toks: &[Token],
+    out: &mut Vec<Finding>,
+) {
+    if scope != Scope::Kernel {
+        return;
+    }
+    for t in toks {
+        if t.kind != TokenKind::Ident {
+            continue;
+        }
+        let name = t.text(src);
+        if name == "HashMap" || name == "HashSet" {
+            out.push(finding(
+                "unordered-iter",
+                path,
+                t,
+                format!(
+                    "`{name}` in a kernel module: iteration order is \
+                     nondeterministic and can reach results — use the \
+                     BTree equivalent or sort before iterating"
+                ),
+            ));
+        }
+    }
+}
+
+/// `wall-clock-in-kernel`: `Instant::now()` / `SystemTime` in kernel
+/// modules. The kernel runs on virtual time; a wall-clock read that
+/// reaches placement or energy accounting makes runs irreproducible.
+/// Bench timing that never feeds results carries an allow.
+fn rule_wall_clock_in_kernel(
+    path: &str,
+    scope: Scope,
+    src: &str,
+    toks: &[Token],
+    out: &mut Vec<Finding>,
+) {
+    if scope != Scope::Kernel {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokenKind::Ident {
+            continue;
+        }
+        let name = t.text(src);
+        let instant_now = name == "Instant"
+            && toks.get(i + 1).is_some_and(|t| is_punct(t, b':'))
+            && toks.get(i + 2).is_some_and(|t| is_punct(t, b':'))
+            && toks.get(i + 3).is_some_and(|t| t.is_ident(src, "now"));
+        if instant_now || name == "SystemTime" || name == "UNIX_EPOCH" {
+            let what = if instant_now { "Instant::now" } else { name };
+            out.push(finding(
+                "wall-clock-in-kernel",
+                path,
+                t,
+                format!(
+                    "`{what}` in a kernel module: the kernel runs on \
+                     virtual time — wall-clock reads are banned outside \
+                     api/util (bench-only timing needs an allow)"
+                ),
+            ));
+        }
+    }
+}
+
+/// `lossy-id-cast`: the 2^53 class of bug PR 5 fixed by hand. Three
+/// shapes: an id-like integer cast to `f64`, any `as f64` inside a
+/// `Json::Num(..)` argument (exact integers must serialize through
+/// `Json::Uint`), and a float accessor chained straight into an
+/// integer `as` cast on the parse side.
+fn rule_lossy_id_cast(
+    path: &str,
+    src: &str,
+    toks: &[Token],
+    out: &mut Vec<Finding>,
+) {
+    let in_num = json_num_spans(src, toks);
+    for (i, t) in toks.iter().enumerate() {
+        if !t.is_ident(src, "as") {
+            continue;
+        }
+        let Some(next) = toks.get(i + 1) else { continue };
+        if next.kind != TokenKind::Ident {
+            continue;
+        }
+        match next.text(src) {
+            "f64" => {
+                let prev_id = i
+                    .checked_sub(1)
+                    .map(|j| &toks[j])
+                    .filter(|p| p.kind == TokenKind::Ident)
+                    .map(|p| p.text(src))
+                    .filter(|n| id_like(n));
+                if let Some(id) = prev_id {
+                    out.push(finding(
+                        "lossy-id-cast",
+                        path,
+                        t,
+                        format!(
+                            "`{id} as f64`: 64-bit ids/counts lose \
+                             exactness above 2^53 — keep ids integral \
+                             end to end (serialize with `Json::Uint`)"
+                        ),
+                    ));
+                } else if in_num[i] {
+                    out.push(finding(
+                        "lossy-id-cast",
+                        path,
+                        t,
+                        "integer cast to f64 inside `Json::Num(..)` — \
+                         exact integers must serialize via `Json::Uint`"
+                            .to_string(),
+                    ));
+                }
+            }
+            "u64" | "u32" | "u16" | "u8" | "usize" | "i64" | "i32" => {
+                if float_accessor_feeds(src, toks, i) {
+                    out.push(finding(
+                        "lossy-id-cast",
+                        path,
+                        t,
+                        "float accessor chained into an integer `as` \
+                         cast: the f64 round-trip corrupts values above \
+                         2^53 — parse through the lossless `as_u64` path"
+                            .to_string(),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+fn id_like(name: &str) -> bool {
+    name == "id"
+        || name == "ids"
+        || name == "seq"
+        || name.ends_with("_id")
+        || name.ends_with("_ids")
+        || name.ends_with("_seq")
+}
+
+/// For each token index: is it inside the argument list of a
+/// `Json::Num(…)` call (any nesting level)?
+fn json_num_spans(src: &str, toks: &[Token]) -> Vec<bool> {
+    let mut stack: Vec<bool> = Vec::new();
+    let mut out = vec![false; toks.len()];
+    for i in 0..toks.len() {
+        out[i] = stack.iter().any(|&inside| inside);
+        if is_punct(&toks[i], b'(') {
+            let is_num = i >= 4
+                && toks[i - 1].is_ident(src, "Num")
+                && is_punct(&toks[i - 2], b':')
+                && is_punct(&toks[i - 3], b':')
+                && toks[i - 4].is_ident(src, "Json");
+            stack.push(is_num);
+        } else if is_punct(&toks[i], b')') {
+            stack.pop();
+        }
+    }
+    out
+}
+
+/// Does the expression feeding the `as` at token `i` end in a float
+/// accessor (`as_f64()`, `req_f64(..)`), possibly via `.unwrap()` /
+/// `.expect(..)` / `?`? Walks back over closing punctuation and those
+/// combinators only, so plain numeric math never matches.
+fn float_accessor_feeds(src: &str, toks: &[Token], i: usize) -> bool {
+    let mut j = i;
+    let mut steps = 0;
+    while j > 0 && steps < 12 {
+        j -= 1;
+        steps += 1;
+        let t = &toks[j];
+        let skip = matches!(
+            t.kind,
+            TokenKind::Punct(b'(')
+                | TokenKind::Punct(b')')
+                | TokenKind::Punct(b'.')
+                | TokenKind::Punct(b'?')
+                | TokenKind::Str
+        ) || t.is_ident(src, "unwrap")
+            || t.is_ident(src, "expect");
+        if skip {
+            continue;
+        }
+        return t.is_ident(src, "as_f64") || t.is_ident(src, "req_f64");
+    }
+    false
+}
+
+/// `float-cmp-unwrap`: ad-hoc float ordering. Every `.partial_cmp`
+/// call site and every raw `total_cmp` must route through the one
+/// shared helper, `crate::util::stats::total_order`, so event order,
+/// score tie-breaks and percentile sorts all agree on a single total
+/// order (NaN included). `util/stats.rs` itself is the helper's home
+/// and is exempt.
+fn rule_float_cmp_unwrap(
+    path: &str,
+    src: &str,
+    toks: &[Token],
+    out: &mut Vec<Finding>,
+) {
+    if path.ends_with("util/stats.rs") {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokenKind::Ident {
+            continue;
+        }
+        let name = t.text(src);
+        let method_call =
+            i > 0 && is_punct(&toks[i - 1], b'.');
+        if name == "partial_cmp" && method_call {
+            out.push(finding(
+                "float-cmp-unwrap",
+                path,
+                t,
+                "float ordering via `partial_cmp` — route through \
+                 `crate::util::stats::total_order` so every float sort \
+                 agrees on one total order"
+                    .to_string(),
+            ));
+        } else if name == "total_cmp" {
+            out.push(finding(
+                "float-cmp-unwrap",
+                path,
+                t,
+                "raw `total_cmp` call site — use the shared \
+                 `crate::util::stats::total_order` helper instead of \
+                 scattering float orderings"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// `banned-path` (identifier half): references to the monolith
+/// schedulers PR 7 retired. The file-existence half lives in
+/// [`super::lint_tree`].
+fn rule_banned_ident(
+    path: &str,
+    src: &str,
+    toks: &[Token],
+    out: &mut Vec<Finding>,
+) {
+    for t in toks {
+        if t.kind != TokenKind::Ident {
+            continue;
+        }
+        let name = t.text(src);
+        if name == "GreenPodScheduler" || name == "DefaultK8sScheduler" {
+            out.push(finding(
+                "banned-path",
+                path,
+                t,
+                format!(
+                    "`{name}` is a retired monolith scheduler — the \
+                     federation engine is the one event loop; route new \
+                     behavior through framework plugins"
+                ),
+            ));
+        }
+    }
+}
+
+// ------------------------------------------------- allow annotations
+
+struct Allow {
+    rule: String,
+    line: usize,
+    col: usize,
+    /// The code line this allow covers (`None`: nothing follows).
+    target: Option<usize>,
+    used: bool,
+}
+
+/// Parse every `greenpod-lint:` line comment into an [`Allow`];
+/// malformed annotations become `malformed-allow` findings.
+fn collect_allows(
+    path: &str,
+    src: &str,
+    lexed: &Lexed,
+    findings: &mut Vec<Finding>,
+) -> Vec<Allow> {
+    let code_lines: BTreeSet<usize> =
+        lexed.tokens.iter().map(|t| t.line).collect();
+    let mut allows = Vec::new();
+    for c in &lexed.comments {
+        let text = c.text(src);
+        if !text.starts_with("//") {
+            continue; // only line comments carry annotations
+        }
+        let body = text
+            .trim_start_matches('/')
+            .trim_start_matches('!')
+            .trim();
+        let Some(rest) = body.strip_prefix("greenpod-lint:") else {
+            continue;
+        };
+        match parse_allow(rest.trim_start()) {
+            Ok(rule) => {
+                let trailing = lexed
+                    .tokens
+                    .iter()
+                    .any(|t| t.line == c.line && t.start < c.start);
+                let target = if trailing {
+                    Some(c.line)
+                } else {
+                    code_lines.range(c.line + 1..).next().copied()
+                };
+                allows.push(Allow {
+                    rule,
+                    line: c.line,
+                    col: c.col,
+                    target,
+                    used: false,
+                });
+            }
+            Err(why) => findings.push(Finding {
+                rule: "malformed-allow",
+                path: path.to_string(),
+                line: c.line,
+                col: c.col,
+                message: format!(
+                    "{why} — expected `// greenpod-lint: \
+                     allow(<rule>) reason=\"…\"`"
+                ),
+            }),
+        }
+    }
+    allows
+}
+
+fn parse_allow(s: &str) -> Result<String, String> {
+    let s = s
+        .strip_prefix("allow(")
+        .ok_or_else(|| "missing `allow(<rule>)`".to_string())?;
+    let close = s
+        .find(')')
+        .ok_or_else(|| "unclosed `allow(`".to_string())?;
+    let rule = s[..close].trim();
+    if !RULE_NAMES.contains(&rule) {
+        return Err(format!("unknown rule `{rule}`"));
+    }
+    let s = s[close + 1..].trim_start();
+    let s = s
+        .strip_prefix("reason=\"")
+        .ok_or_else(|| "missing mandatory `reason=\"…\"`".to_string())?;
+    let end = s
+        .find('"')
+        .ok_or_else(|| "unterminated reason string".to_string())?;
+    if s[..end].trim().is_empty() {
+        return Err("empty reason".to_string());
+    }
+    if !s[end + 1..].trim().is_empty() {
+        return Err("trailing text after reason".to_string());
+    }
+    Ok(rule.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lint_source;
+    use super::*;
+
+    const KERNEL: &str = "rust/src/simulation/fixture.rs";
+    const TOOL: &str = "rust/src/util/fixture.rs";
+
+    fn rules_of(path: &str, src: &str) -> Vec<&'static str> {
+        lint_source(path, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn unordered_iter_kernel_only() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(rules_of(KERNEL, src), ["unordered-iter"]);
+        assert!(rules_of(TOOL, src).is_empty());
+        // Inside a string it is data, not a type use.
+        assert!(rules_of(KERNEL, "let s = \"HashMap\";\n").is_empty());
+    }
+
+    #[test]
+    fn wall_clock_flags_now_not_import() {
+        let src = "use std::time::Instant;\nlet t = Instant::now();\n";
+        let out = lint_source(KERNEL, src);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, "wall-clock-in-kernel");
+        assert_eq!((out[0].line, out[0].col), (2, 9));
+        assert!(rules_of(TOOL, src).is_empty());
+    }
+
+    #[test]
+    fn lossy_id_cast_shapes() {
+        assert_eq!(
+            rules_of(TOOL, "let x = pod_id as f64;\n"),
+            ["lossy-id-cast"]
+        );
+        assert_eq!(
+            rules_of(TOOL, "let j = Json::Num(n as f64);\n"),
+            ["lossy-id-cast"]
+        );
+        assert_eq!(
+            rules_of(TOOL, "let n = v.as_f64().unwrap() as u64;\n"),
+            ["lossy-id-cast"]
+        );
+        assert_eq!(
+            rules_of(TOOL, "let c = p.req_f64(\"cpu_millis\")? as u64;\n"),
+            ["lossy-id-cast"]
+        );
+        // Legitimate numeric math does not fire.
+        assert!(rules_of(TOOL, "let r = cpu_millis as f64 / 8.0;\n")
+            .is_empty());
+        assert!(rules_of(TOOL, "let j = Json::Num(self.at_s);\n")
+            .is_empty());
+        // A lossless integer helper chained into `as` stays clean.
+        assert!(rules_of(TOOL, "let n = get_u64(v, \"k\", 3u64)? as usize;\n")
+            .is_empty());
+        assert!(rules_of(TOOL, "let e = x.as_u64().unwrap() as u32;\n")
+            .is_empty());
+    }
+
+    #[test]
+    fn float_cmp_flags_call_sites_not_defs() {
+        assert_eq!(
+            rules_of(KERNEL, "v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n"),
+            ["float-cmp-unwrap"]
+        );
+        assert_eq!(
+            rules_of(TOOL, "v.sort_by(|a, b| a.total_cmp(b));\n"),
+            ["float-cmp-unwrap"]
+        );
+        // Trait impl definition position is fine.
+        let def = "fn partial_cmp(&self, o: &Self) -> Option<Ordering> {\n\
+                   Some(self.cmp(o)) }\n";
+        assert!(rules_of(KERNEL, def).is_empty());
+        // The helper's own home is exempt.
+        assert!(rules_of(
+            "rust/src/util/stats.rs",
+            "pub fn total_order(a: &f64, b: &f64) -> Ordering { a.total_cmp(b) }\n"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn banned_ident_everywhere() {
+        let src = "let s = GreenPodScheduler::new();\n";
+        assert_eq!(rules_of(KERNEL, src), ["banned-path"]);
+        assert_eq!(rules_of(TOOL, src), ["banned-path"]);
+    }
+
+    #[test]
+    fn allow_trailing_and_own_line() {
+        let trailing = "use std::collections::HashMap; \
+             // greenpod-lint: allow(unordered-iter) reason=\"test\"\n";
+        assert!(rules_of(KERNEL, trailing).is_empty());
+        let own_line = "// greenpod-lint: allow(unordered-iter) \
+             reason=\"never iterated\"\nuse std::collections::HashMap;\n";
+        assert!(rules_of(KERNEL, own_line).is_empty());
+    }
+
+    #[test]
+    fn own_line_allows_stack() {
+        let src = "// greenpod-lint: allow(unordered-iter) reason=\"a\"\n\
+                   // greenpod-lint: allow(wall-clock-in-kernel) reason=\"b\"\n\
+                   let (m, t): (HashMap<u8, u8>, _) = f(Instant::now());\n";
+        assert!(rules_of(KERNEL, src).is_empty());
+    }
+
+    #[test]
+    fn unused_allow_is_an_error() {
+        let src = "// greenpod-lint: allow(unordered-iter) reason=\"x\"\n\
+                   let a = 1;\n";
+        let out = lint_source(KERNEL, src);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, "unused-allow");
+        assert_eq!(out[0].line, 1);
+    }
+
+    #[test]
+    fn malformed_allows() {
+        for src in [
+            "// greenpod-lint: allow(unordered-iter)\nlet a = 1;\n",
+            "// greenpod-lint: allow(no-such-rule) reason=\"x\"\nlet a = 1;\n",
+            "// greenpod-lint: allow(unordered-iter) reason=\"\"\nlet a = 1;\n",
+            "// greenpod-lint: deny(unordered-iter) reason=\"x\"\nlet a = 1;\n",
+        ] {
+            let out = lint_source(KERNEL, src);
+            assert_eq!(out.len(), 1, "src: {src}");
+            assert_eq!(out[0].rule, "malformed-allow", "src: {src}");
+        }
+    }
+
+    #[test]
+    fn allow_does_not_leak_to_other_lines_or_rules() {
+        let src = "// greenpod-lint: allow(unordered-iter) reason=\"x\"\n\
+                   use std::collections::HashMap;\n\
+                   use std::collections::HashSet;\n";
+        let out = lint_source(KERNEL, src);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, "unordered-iter");
+        assert_eq!(out[0].line, 3);
+        let wrong_rule =
+            "// greenpod-lint: allow(wall-clock-in-kernel) reason=\"x\"\n\
+             use std::collections::HashMap;\n";
+        let out = lint_source(KERNEL, wrong_rule);
+        assert_eq!(out.len(), 2); // the violation and the unused allow
+    }
+
+    #[test]
+    fn findings_sorted_by_span() {
+        let src = "use std::collections::{HashMap, HashSet};\n\
+                   let t = Instant::now();\n";
+        let out = lint_source(KERNEL, src);
+        let spans: Vec<(usize, usize)> =
+            out.iter().map(|f| (f.line, f.col)).collect();
+        let mut sorted = spans.clone();
+        sorted.sort();
+        assert_eq!(spans, sorted);
+        assert_eq!(out.len(), 3);
+    }
+}

@@ -13,6 +13,7 @@
 //! greenpod experiment federation [--csv] [--events] # multi-cluster dispatch grid
 //! greenpod experiment all                         # everything above
 //! greenpod bench sched [--grid small|full]        # scheduling microbenchmark + scaling curves
+//! greenpod lint [--deny] [--json]                 # determinism/numeric-safety static analysis
 //! greenpod calibrate [--reps 4]                   # PJRT epoch timings
 //! greenpod serve --trace t.jsonl [--scheme energy-centric]
 //!                [--time-scale 100] [--only topsis|default]
@@ -47,7 +48,8 @@ use greenpod::runtime::{ArtifactRegistry, LinRegRunner};
 use greenpod::util::cli::Args;
 use greenpod::workload::{ArrivalTrace, WorkloadClass, WorkloadExecutor};
 
-const FLAGS: &[&str] = &["pjrt", "csv", "events", "help", "version"];
+const FLAGS: &[&str] =
+    &["pjrt", "csv", "events", "deny", "json", "help", "version"];
 const KNOWN_OPTS: &[&str] = &[
     "config", "replications", "seed", "section", "optimization", "level",
     "reps", "trace", "scheme", "time-scale", "only", "profile", "grid",
@@ -70,6 +72,7 @@ usage:
   greenpod experiment federation [--csv] [--events]
   greenpod experiment all
   greenpod bench sched [--grid small|full]
+  greenpod lint [--deny] [--json]
   greenpod calibrate [--reps N]
   greenpod serve --trace FILE|- [--scheme S] [--time-scale X] [--only topsis|default]
                  [--profile NAME]
@@ -90,6 +93,12 @@ fn main() -> Result<()> {
     if args.flag("version") {
         println!("greenpod {}", env!("CARGO_PKG_VERSION"));
         return Ok(());
+    }
+
+    // `lint` is config-independent: run it before config loading so a
+    // broken --config file can't mask lint findings (CI runs both).
+    if args.command(0) == Some("lint") {
+        return run_lint(&args);
     }
 
     let cfg = load_config(&args)?;
@@ -487,6 +496,36 @@ fn bench_sched(cfg: &Config, grid: &str) -> Result<()> {
     std::fs::write("BENCH_sched.json", out.pretty())?;
     b.finish();
     eprintln!("wrote BENCH_sched.json");
+    Ok(())
+}
+
+/// `greenpod lint [--deny] [--json]` — the in-tree determinism &
+/// numeric-safety static analysis over `rust/src/` (rules, scoping
+/// and the allow grammar are documented on [`greenpod::lint`]).
+fn run_lint(args: &Args) -> Result<()> {
+    // Resolve the source root whether we run from the repo root or
+    // from inside `rust/` (plain `cargo run`).
+    let root = if std::path::Path::new("rust/src").is_dir() {
+        std::path::Path::new("rust/src")
+    } else {
+        std::path::Path::new("src")
+    };
+    let report = greenpod::lint::lint_tree(root)?;
+    if args.flag("json") {
+        println!("{}", report.to_json().to_string());
+    } else {
+        for f in &report.findings {
+            println!("{}", f.render());
+        }
+        eprintln!(
+            "lint: {} finding(s) across {} file(s)",
+            report.findings.len(),
+            report.files_scanned
+        );
+    }
+    if args.flag("deny") && !report.clean() {
+        bail!("lint --deny: {} finding(s)", report.findings.len());
+    }
     Ok(())
 }
 

@@ -77,7 +77,7 @@ mod tests {
         // Same ranking in both.
         let rank = |s: &[f64]| {
             let mut idx: Vec<usize> = (0..s.len()).collect();
-            idx.sort_by(|&x, &y| s[y].total_cmp(&s[x]));
+            idx.sort_by(|&x, &y| crate::util::stats::total_order(&s[y], &s[x]));
             idx
         };
         assert_eq!(rank(&a), rank(&b));

@@ -100,7 +100,7 @@ pub fn topsis_closeness_into(p: &DecisionProblem, out: &mut Vec<f64>) {
 pub fn topsis_rank(p: &DecisionProblem) -> Vec<usize> {
     let scores = topsis_closeness(p);
     let mut idx: Vec<usize> = (0..p.n).collect();
-    idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
+    idx.sort_by(|&a, &b| crate::util::stats::total_order(&scores[b], &scores[a]));
     idx
 }
 

@@ -1,6 +1,6 @@
 //! Summary statistics over metric samples.
 
-use crate::util::stats::nearest_rank_index;
+use crate::util::stats::{nearest_rank_index, total_order};
 
 /// Mean / spread / percentiles of a sample set.
 #[derive(Debug, Clone, PartialEq)]
@@ -26,7 +26,7 @@ impl Summary {
         let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
             / n as f64;
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.total_cmp(b));
+        sorted.sort_by(total_order);
         // Percentiles resolve through the one shared nearest-rank
         // helper (util::stats) — the autoscaler's wait-p95 trigger and
         // the carbon signal's quantile use the same function, so

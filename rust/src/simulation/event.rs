@@ -91,8 +91,7 @@ impl Eq for ScheduledEvent {}
 
 impl Ord for ScheduledEvent {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.at
-            .total_cmp(&other.at)
+        crate::util::stats::total_order(&self.at, &other.at)
             .then_with(|| self.event.priority().cmp(&other.event.priority()))
             .then_with(|| self.seq.cmp(&other.seq))
     }

@@ -1,7 +1,7 @@
 //! Per-run results: everything the metrics/report layer and the
 //! experiment drivers need from one simulated deployment.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cluster::{NodeCategory, PodId};
 use crate::config::SchedulerKind;
@@ -213,11 +213,12 @@ impl RunResult {
     }
 
     /// Allocation histogram per node category for one scheduler (§V.D).
+    /// Ordered map: the derived report rows render in category order.
     pub fn allocations(
         &self,
         kind: SchedulerKind,
-    ) -> HashMap<NodeCategory, u32> {
-        let mut out = HashMap::new();
+    ) -> BTreeMap<NodeCategory, u32> {
+        let mut out = BTreeMap::new();
         for r in self.records.iter().filter(|r| r.scheduler == kind) {
             *out.entry(r.node_category).or_insert(0) += 1;
         }
@@ -228,8 +229,8 @@ impl RunResult {
     pub fn completion_by_class(
         &self,
         kind: SchedulerKind,
-    ) -> HashMap<WorkloadClass, f64> {
-        let mut sums: HashMap<WorkloadClass, (f64, usize)> = HashMap::new();
+    ) -> BTreeMap<WorkloadClass, f64> {
+        let mut sums: BTreeMap<WorkloadClass, (f64, usize)> = BTreeMap::new();
         for r in self.records.iter().filter(|r| r.scheduler == kind) {
             let e = sums.entry(r.class).or_insert((0.0, 0));
             e.0 += r.finish_s - r.arrival_s;

@@ -121,6 +121,14 @@ impl Json {
             .ok_or_else(|| anyhow!("field `{key}` is not a number"))
     }
 
+    /// Exact-integer field access: no f64 round-trip for `Uint`, so
+    /// 64-bit ids/counts survive above 2^53 (`lossy-id-cast`'s fix).
+    pub fn req_u64(&self, key: &str) -> Result<u64> {
+        self.req(key)?
+            .as_u64()
+            .ok_or_else(|| anyhow!("field `{key}` is not an integer"))
+    }
+
     pub fn req_usize(&self, key: &str) -> Result<usize> {
         self.req(key)?
             .as_usize()

@@ -13,6 +13,14 @@
 //! index `floor((n - 1) · q + 0.5)`, clamped to `[0, n - 1]`. For the
 //! non-negative indexes that arise here this is exactly `f64::round`
 //! (round half away from zero), which is what `Summary` used to apply.
+//!
+//! [`total_order`] is the same consolidation applied to float
+//! comparison: every `sort_by` / `min_by` / `max_by` over f64 routes
+//! through this one helper (the `float-cmp-unwrap` lint rule enforces
+//! it), so event ordering, score tie-breaks and percentile sorts all
+//! agree on a single total order instead of scattering `total_cmp` /
+//! `partial_cmp().unwrap()` variants that diverge the day one of them
+//! meets a NaN.
 
 /// Nearest-rank index into a sorted sample set of length `n` at
 /// quantile `q` (clamped to `[0, 1]`). `n` must be non-zero.
@@ -20,6 +28,19 @@ pub fn nearest_rank_index(n: usize, q: f64) -> usize {
     debug_assert!(n > 0, "nearest_rank_index of an empty sample set");
     let x = (n as f64 - 1.0) * q.clamp(0.0, 1.0);
     ((x + 0.5).floor() as usize).min(n - 1)
+}
+
+/// The one float comparator for the whole tree: IEEE 754 `totalOrder`
+/// (`-NaN < -∞ < … < -0 < +0 < … < +∞ < +NaN`). On non-NaN inputs it
+/// agrees bit-for-bit with the `partial_cmp().unwrap()` and bare
+/// `total_cmp` call sites it replaced (a property test pins this); on
+/// NaN it is still total, so a poisoned sample can never panic a sort
+/// or flip comparison transitivity mid-run.
+///
+/// The reference signature coerces directly into the std adaptors:
+/// `v.sort_by(total_order)`, `xs.iter().min_by(|a, b| total_order(a, b))`.
+pub fn total_order(a: &f64, b: &f64) -> std::cmp::Ordering {
+    a.total_cmp(b)
 }
 
 /// Nearest-rank percentile of an unsorted sample set; `None` when the
@@ -31,7 +52,7 @@ pub fn nearest_rank(samples: &[f64], q: f64) -> Option<f64> {
         return None;
     }
     let mut sorted = samples.to_vec();
-    sorted.sort_by(f64::total_cmp);
+    sorted.sort_by(total_order);
     Some(sorted[nearest_rank_index(sorted.len(), q)])
 }
 
@@ -66,5 +87,25 @@ mod tests {
     #[test]
     fn empty_is_none_not_zero() {
         assert_eq!(nearest_rank(&[], 0.95), None);
+    }
+
+    #[test]
+    fn total_order_is_total_and_nan_safe() {
+        use std::cmp::Ordering;
+        assert_eq!(total_order(&1.0, &2.0), Ordering::Less);
+        assert_eq!(total_order(&2.0, &1.0), Ordering::Greater);
+        assert_eq!(total_order(&1.5, &1.5), Ordering::Equal);
+        // IEEE totalOrder: -0 < +0, NaN sorts to the outside instead
+        // of panicking or breaking transitivity.
+        assert_eq!(total_order(&-0.0, &0.0), Ordering::Less);
+        assert_eq!(total_order(&f64::NAN, &f64::INFINITY), Ordering::Greater);
+        assert_eq!(
+            total_order(&-f64::NAN, &f64::NEG_INFINITY),
+            Ordering::Less
+        );
+        let mut v = vec![2.0, f64::NAN, -1.0, 0.5];
+        v.sort_by(total_order);
+        assert_eq!(&v[..3], &[-1.0, 0.5, 2.0]);
+        assert!(v[3].is_nan());
     }
 }

@@ -41,7 +41,9 @@ impl TraceEntry {
         Json::obj(vec![
             ("at_s", Json::Num(self.at_s)),
             ("class", Json::Str(self.class.label_lower().into())),
-            ("epochs", Json::Num(self.epochs as f64)),
+            // Uint keeps the integer exact through dump → parse (the
+            // same bytes for in-range values, but no f64 round-trip).
+            ("epochs", Json::Uint(u64::from(self.epochs))),
         ])
     }
 }

@@ -1,0 +1,14 @@
+//! `banned-path` fixture (identifier half): references to the retired
+//! monolith schedulers fire; the annotated twin stays clean.
+
+pub fn legacy() {
+    let g = GreenPodScheduler::new(42);
+    let d = DefaultK8sScheduler::new(42);
+    run(g, d);
+}
+
+pub fn twin() {
+    // greenpod-lint: allow(banned-path) reason="fixture twin: historical reference kept for a doc example"
+    let g = GreenPodScheduler::new(42);
+    drop(g);
+}

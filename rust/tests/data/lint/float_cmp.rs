@@ -1,0 +1,15 @@
+//! `float-cmp-unwrap` fixture: ad-hoc orderings fire; the annotated
+//! twin stays clean.
+
+pub fn sort_scores(v: &mut [f64]) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn max_score(v: &[f64]) -> Option<&f64> {
+    v.iter().max_by(|a, b| a.total_cmp(b))
+}
+
+pub fn twin(v: &mut [f64]) {
+    // greenpod-lint: allow(float-cmp-unwrap) reason="fixture twin: suppressed ad-hoc float ordering"
+    v.sort_by(|a, b| a.total_cmp(b));
+}

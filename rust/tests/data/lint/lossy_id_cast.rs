@@ -1,0 +1,18 @@
+//! `lossy-id-cast` fixture: all three shapes fire; legitimate math
+//! and the annotated twin stay clean.
+
+pub fn shapes(pod_id: u64, count: u64, v: &Json) -> (f64, Json, u64) {
+    let a = pod_id as f64;
+    let b = Json::Num(count as f64);
+    let c = v.as_f64().unwrap() as u64;
+    (a, b, c)
+}
+
+pub fn clean_math(cpu_millis: u64) -> f64 {
+    cpu_millis as f64 / 8.0
+}
+
+pub fn twin(node_id: u64) -> f64 {
+    // greenpod-lint: allow(lossy-id-cast) reason="fixture twin: deliberate precision loss, proven harmless"
+    node_id as f64
+}

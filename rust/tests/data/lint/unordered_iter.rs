@@ -1,0 +1,7 @@
+//! `unordered-iter` fixture: the seeded violation below must fire at
+//! exactly one span; the annotated twin stays clean.
+
+use std::collections::HashMap;
+
+// greenpod-lint: allow(unordered-iter) reason="fixture twin: the annotation must suppress this hash-set use"
+use std::collections::HashSet;

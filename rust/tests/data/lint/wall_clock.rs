@@ -1,0 +1,15 @@
+//! `wall-clock-in-kernel` fixture: `Instant::now()` in kernel scope
+//! fires; the plain import and the annotated twin stay clean.
+
+use std::time::Instant;
+
+pub fn stamp() -> std::time::Duration {
+    let t0 = Instant::now();
+    t0.elapsed()
+}
+
+pub fn stamp_allowed() -> std::time::Duration {
+    // greenpod-lint: allow(wall-clock-in-kernel) reason="fixture twin: bench-style timing that never reaches results"
+    let t0 = Instant::now();
+    t0.elapsed()
+}

@@ -1,0 +1,161 @@
+//! Integration tests for `greenpod lint` (L2): every rule fires on
+//! its seeded-violation fixture at exactly the expected spans while
+//! the annotated twin in the same file stays clean, the full pass
+//! over `rust/src/` reports zero findings (the same gate CI runs via
+//! `greenpod lint --deny`), and the file-existence half of
+//! `banned-path` flags a resurrected monolith scheduler file.
+
+use std::fs;
+use std::path::Path;
+
+use greenpod::lint::{lint_source, lint_tree};
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/data/lint")
+        .join(name);
+    fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+/// 1-based column of `needle` on 1-based `line` of `src`.
+fn col_of(src: &str, line: usize, needle: &str) -> usize {
+    let text = src
+        .lines()
+        .nth(line - 1)
+        .unwrap_or_else(|| panic!("fixture has no line {line}"));
+    text.find(needle).map(|i| i + 1).unwrap_or_else(|| {
+        panic!("`{needle}` not on line {line}: {text}")
+    })
+}
+
+/// Lint `name` under a kernel-scoped label and assert it produces
+/// exactly `expected` findings of `rule`, each pinned to the span of
+/// the named token. The fixture's annotated twin contributing zero
+/// findings (including no `unused-allow`) falls out of the exact
+/// length check.
+fn check_fixture(name: &str, rule: &str, expected: &[(usize, &str)]) {
+    let src = fixture(name);
+    let label = format!("rust/src/fixtures/{name}");
+    let out = lint_source(&label, &src);
+    let rendered: Vec<String> =
+        out.iter().map(|f| f.render()).collect();
+    assert_eq!(
+        out.len(),
+        expected.len(),
+        "{name}: expected {} finding(s), got {rendered:?}",
+        expected.len()
+    );
+    for (f, (line, token)) in out.iter().zip(expected) {
+        assert_eq!(f.rule, rule, "{name}: {}", f.render());
+        assert_eq!(f.path, label, "{name}: {}", f.render());
+        assert_eq!(f.line, *line, "{name}: {}", f.render());
+        assert_eq!(
+            f.col,
+            col_of(&src, *line, token),
+            "{name}: {}",
+            f.render()
+        );
+    }
+}
+
+#[test]
+fn unordered_iter_fixture_fires_at_its_span() {
+    check_fixture(
+        "unordered_iter.rs",
+        "unordered-iter",
+        &[(4, "HashMap")],
+    );
+}
+
+#[test]
+fn wall_clock_fixture_fires_at_its_span() {
+    check_fixture(
+        "wall_clock.rs",
+        "wall-clock-in-kernel",
+        &[(7, "Instant")],
+    );
+}
+
+#[test]
+fn lossy_id_cast_fixture_fires_all_three_shapes() {
+    check_fixture(
+        "lossy_id_cast.rs",
+        "lossy-id-cast",
+        &[(5, "as f64"), (6, "as f64"), (7, "as u64")],
+    );
+}
+
+#[test]
+fn float_cmp_fixture_fires_at_both_call_sites() {
+    check_fixture(
+        "float_cmp.rs",
+        "float-cmp-unwrap",
+        &[(5, "partial_cmp"), (9, "total_cmp")],
+    );
+}
+
+#[test]
+fn banned_path_fixture_fires_on_both_idents() {
+    check_fixture(
+        "banned_path.rs",
+        "banned-path",
+        &[(5, "GreenPodScheduler"), (6, "DefaultK8sScheduler")],
+    );
+}
+
+#[test]
+fn kernel_only_rules_stay_quiet_in_tool_scope() {
+    // The same seeded violations under a tool-module label: the
+    // kernel-only rules must not fire, so the only findings left are
+    // the twins' now-unused allows.
+    for name in ["unordered_iter.rs", "wall_clock.rs"] {
+        let src = fixture(name);
+        let out = lint_source(&format!("rust/src/util/{name}"), &src);
+        assert_eq!(out.len(), 1, "{name}: {out:?}");
+        assert_eq!(out[0].rule, "unused-allow", "{name}: {out:?}");
+    }
+}
+
+#[test]
+fn lint_repo_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = lint_tree(&root).expect("lint walk over rust/src");
+    assert!(
+        report.files_scanned > 40,
+        "only {} files scanned — wrong root?",
+        report.files_scanned
+    );
+    assert!(
+        report.clean(),
+        "rust/src must lint clean (CI runs `greenpod lint --deny`):\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| f.render())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn banned_file_reappearance_is_flagged() {
+    let dir = std::env::temp_dir()
+        .join(format!("greenpod-lint-banned-{}", std::process::id()));
+    let sched = dir.join("scheduler");
+    fs::create_dir_all(&sched).expect("temp tree");
+    fs::write(sched.join("greenpod.rs"), "// resurrected\n").unwrap();
+    fs::write(dir.join("lib.rs"), "pub mod scheduler;\n").unwrap();
+    let report = lint_tree(&dir).expect("lint walk over temp tree");
+    fs::remove_dir_all(&dir).ok();
+    assert_eq!(report.files_scanned, 2);
+    assert_eq!(report.findings.len(), 1, "{:?}", report.findings);
+    let f = &report.findings[0];
+    assert_eq!(f.rule, "banned-path");
+    assert!(
+        f.path.ends_with("scheduler/greenpod.rs"),
+        "{}",
+        f.render()
+    );
+    assert_eq!((f.line, f.col), (1, 1));
+}

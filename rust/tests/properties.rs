@@ -30,6 +30,7 @@ use greenpod::simulation::{
     NodeChange, RunResult, SimulationEngine, SimulationParams,
 };
 use greenpod::util::rng::Rng;
+use greenpod::util::stats::total_order;
 use greenpod::workload::{
     generate_pods, generate_pods_with, ArrivalProcess, ArrivalTrace,
     TraceSpec, WorkloadClass, WorkloadExecutor,
@@ -1857,4 +1858,63 @@ fn prop_federation_dispatcher_conservation() {
             }
         }
     }
+}
+
+/// The PR-8 float-ordering sweep rerouted every ad-hoc comparator
+/// (`partial_cmp().unwrap()`, bare `total_cmp`) through
+/// `util::stats::total_order`. This pins the reroute as bit-identical
+/// on non-NaN inputs: sorting any NaN-free corpus with the shared
+/// helper yields exactly the sequence either ad-hoc comparator
+/// produced, so no golden fixture can move.
+#[test]
+fn prop_total_order_bit_identical_to_ad_hoc_comparators_off_nan() {
+    let mut rng = Rng::seed_from_u64(0x70a1_0bde);
+    for case in 0..prop_cases(200) {
+        let n = 2 + rng.below(64);
+        // Mix continuous draws with quantized duplicates so the Equal
+        // arm is exercised; no NaN and no -0.0 in this corpus.
+        let v: Vec<f64> = (0..n)
+            .map(|_| {
+                if rng.chance(0.3) {
+                    rng.below(8) as f64
+                } else {
+                    rng.range_f64(-1e9, 1e9)
+                }
+            })
+            .collect();
+        let mut by_helper = v.clone();
+        by_helper.sort_by(total_order);
+        let mut by_partial = v.clone();
+        by_partial.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut by_total = v;
+        by_total.sort_by(|a, b| a.total_cmp(b));
+        for i in 0..n {
+            assert_eq!(
+                by_helper[i].to_bits(),
+                by_partial[i].to_bits(),
+                "case {case} idx {i}: diverges from partial_cmp"
+            );
+            assert_eq!(
+                by_helper[i].to_bits(),
+                by_total[i].to_bits(),
+                "case {case} idx {i}: diverges from total_cmp"
+            );
+        }
+    }
+
+    // And off the non-NaN corpus the helper stays total: sorting with
+    // NaN present cannot panic, and NaN sorts after every number.
+    let mut v = vec![
+        f64::NAN,
+        1.0,
+        f64::NEG_INFINITY,
+        -1.0,
+        f64::INFINITY,
+        0.0,
+    ];
+    v.sort_by(total_order);
+    assert!(v[..5].iter().all(|x| !x.is_nan()));
+    assert!(v[5].is_nan());
+    assert_eq!(v[0], f64::NEG_INFINITY);
+    assert_eq!(v[4], f64::INFINITY);
 }
