@@ -1,0 +1,119 @@
+"""Generate rust/tests/data/trace_10k_slice.jsonl — the CI trace-replay
+fixture: a seeded 1-in-100-per-class slice of the ~1.05M-pod SURF-Lisa
+synthetic trace that `greenpod trace replay --full` streams
+(TraceSpec::surf_lisa(100.0, 10_500.0), seed 20250710 — the default
+experiment seed — through DownSampler { keep_every: 100, seed: 7 }).
+
+The slice pairs with the paper cluster: `--full` runs against
+ClusterConfig::scaled(80) (560 nodes) and scaled(80).downsampled(100)
+is exactly the paper's Table I cluster, so replaying this fixture on
+the default config keeps offered load per node comparable to the full
+run while fitting in a CI smoke test.
+
+Everything is mirrored bit-exactly through rng_mirror (xoshiro256**),
+and the serialization below replicates util::json::Json's compact
+writer byte for byte, so no Rust toolchain is needed to regenerate
+the fixture. `trace_fixture_in_sync_with_generators` in
+rust/tests/properties.rs regenerates the same slice in-process and
+compares bytes — if the Rust generators, this mirror, or the file
+drift apart, that test fails.
+
+Run from the repo root:
+    python3 python/tools/make_trace_fixture.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from rng_mirror import Rng
+
+# Mirrors the `greenpod trace replay --full` constants in main.rs.
+RATE_PER_S = 100.0
+DURATION_S = 10_500.0
+TRACE_SEED = 20250710  # ExperimentConfig::default().seed
+KEEP_EVERY = 100
+SAMPLE_SEED = 7
+
+# TraceSpec::surf_lisa — class mix and per-class epochs.
+P_LIGHT, P_MEDIUM, P_COMPLEX = 0.8668, 0.0932, 0.0400
+CLASSES = ("light", "medium", "complex")
+EPOCHS = (2, 4, 8)
+
+OUT = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)),
+    "..", "..", "rust", "tests", "data", "trace_10k_slice.jsonl",
+)
+
+HEADER = """\
+# trace_10k_slice.jsonl — seeded 1-in-100-per-class slice of the
+# `greenpod trace replay --full` synthetic trace: SynthTrace::poisson(
+# TraceSpec::surf_lisa(100.0, 10500.0), seed 20250710) filtered by
+# DownSampler { keep_every: 100, seed: 7 }. Pinned byte-for-byte by
+# `trace_fixture_in_sync_with_generators` in rust/tests/properties.rs.
+# Regenerate: python3 python/tools/make_trace_fixture.py
+"""
+
+
+def fmt_f64(x):
+    """Replicate util::json::Json::Num's writer: integral values in
+    (-1e15, 1e15) print as i64, everything else via Rust's shortest
+    round-trip `{}` Display — which matches Python's repr for finite
+    doubles in the positional range [1e-4, 1e16)."""
+    if abs(x) < 1e15 and x == int(x):
+        return str(int(x))
+    assert 1e-4 <= abs(x) < 1e16, f"at_s {x!r} outside positional range"
+    return repr(x)
+
+
+def synth_downsampled_entries():
+    """SynthTrace::poisson + DownSampler, fused (both are streaming
+    filters, so fusing them changes nothing observable)."""
+    srng = Rng(SAMPLE_SEED)
+    offsets = [srng.below(KEEP_EVERY) for _ in range(3)]
+    counts = [0, 0, 0]
+
+    rng = Rng(TRACE_SEED)
+    total = P_LIGHT + P_MEDIUM + P_COMPLEX
+    pl, pm = P_LIGHT / total, P_MEDIUM / total
+    mean_gap = 1.0 / RATE_PER_S
+
+    t = 0.0
+    seen = 0
+    kept = []
+    while True:
+        t += rng.exponential(mean_gap)
+        if t > DURATION_S:
+            break
+        x = rng.f64()
+        ci = 0 if x < pl else (1 if x < pl + pm else 2)
+        seen += 1
+        keep = counts[ci] % KEEP_EVERY == offsets[ci]
+        counts[ci] += 1
+        if keep:
+            kept.append((t, ci))
+    return seen, kept
+
+
+def main():
+    seen, kept = synth_downsampled_entries()
+    lines = [HEADER]
+    for t, ci in kept:
+        # Byte-for-byte TraceEntry::to_json().to_string(): Json::obj is
+        # a BTreeMap, so keys come out alphabetical, and the compact
+        # writer emits no whitespace.
+        lines.append(
+            '{"at_s":%s,"class":"%s","epochs":%d}\n'
+            % (fmt_f64(t), CLASSES[ci], EPOCHS[ci])
+        )
+    with open(OUT, "w") as f:
+        f.write("".join(lines))
+    print(
+        f"wrote {os.path.normpath(OUT)}: {len(kept)} entries "
+        f"(sliced from {seen}, span {kept[-1][0]:.1f} s)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -112,6 +112,19 @@ impl ClusterConfig {
         cfg
     }
 
+    /// This cluster with every pool's node count divided by `k`
+    /// (ceiling, so no pool vanishes) — the capacity-side companion of
+    /// the trace down-sampler: replaying every k-th pod against 1/k of
+    /// the machines keeps the offered load per node comparable.
+    pub fn downsampled(&self, k: usize) -> Self {
+        assert!(k > 0, "downsampled(0)");
+        let mut cfg = self.clone();
+        for pool in &mut cfg.pools {
+            pool.count = pool.count.div_ceil(k);
+        }
+        cfg
+    }
+
     pub fn total_nodes(&self) -> usize {
         self.pools.iter().map(|p| p.count).sum()
     }
@@ -187,6 +200,24 @@ mod tests {
     #[test]
     fn scaled_multiplies_counts() {
         assert_eq!(ClusterConfig::scaled(4).total_nodes(), 28);
+    }
+
+    #[test]
+    fn downsampled_ceil_divides_and_keeps_every_pool() {
+        // Paper pools are 3/2/1/1: k=2 → 2/1/1/1, and even k ≫ counts
+        // leaves one node per pool (the cluster never vanishes).
+        let cfg = ClusterConfig::paper_default();
+        let half = cfg.downsampled(2);
+        let counts: Vec<usize> = half.pools.iter().map(|p| p.count).collect();
+        assert_eq!(counts, [2, 1, 1, 1]);
+        let tiny = cfg.downsampled(100);
+        assert!(tiny.pools.iter().all(|p| p.count == 1));
+        assert!(tiny.validate().is_ok());
+        // Round-trips with scaled for exact multiples.
+        assert_eq!(
+            ClusterConfig::scaled(6).downsampled(6),
+            ClusterConfig::paper_default()
+        );
     }
 
     #[test]

@@ -52,6 +52,16 @@ fn get_u64(obj: &Json, key: &str, default: u64) -> Result<u64> {
     }
 }
 
+/// 32-bit counter fields (replications, epochs). A `get_u64(..)? as
+/// u32` here would silently truncate out-of-range values — the same
+/// bug the trace parser's `epochs` had — so reject them instead (the
+/// `lossy-id-cast` lint now fences the narrowing-cast shape).
+fn get_u32(obj: &Json, key: &str, default: u32) -> Result<u32> {
+    let raw = get_u64(obj, key, u64::from(default))?;
+    u32::try_from(raw)
+        .map_err(|_| anyhow!("field `{key}` ({raw}) does not fit in 32 bits"))
+}
+
 fn category_from_str(s: &str) -> Result<NodeCategory> {
     match s {
         "A" => Ok(NodeCategory::A),
@@ -201,8 +211,8 @@ fn carbon_from_json(v: &Json) -> Result<CarbonConfig> {
             base_g_per_kwh: v.req_f64("base_g_per_kwh")?,
             swing: get_f64(v, "swing", 0.5)?,
             period_s: v.req_f64("period_s")?,
-            samples: u32::try_from(get_u64(v, "samples", 24)?).map_err(
-                |_| anyhow!("carbon `samples` does not fit in 32 bits"),
+            samples: get_u32(v, "samples", 24).map_err(
+                |e| anyhow!("carbon `samples`: {e}"),
             )?,
         },
         "trace" => {
@@ -352,17 +362,13 @@ fn energy_from_json(v: &Json) -> Result<EnergyModelConfig> {
 fn experiment_from_json(v: &Json) -> Result<ExperimentConfig> {
     let d = ExperimentConfig::default();
     Ok(ExperimentConfig {
-        replications: get_u64(v, "replications", d.replications as u64)?
-            as u32,
+        replications: get_u32(v, "replications", d.replications)?,
         seed: get_u64(v, "seed", d.seed)?,
         arrival_jitter_s: get_f64(v, "arrival_jitter_s", d.arrival_jitter_s)?,
         contention_beta: get_f64(v, "contention_beta", d.contention_beta)?,
-        epochs_light: get_u64(v, "epochs_light", d.epochs_light as u64)?
-            as u32,
-        epochs_medium: get_u64(v, "epochs_medium", d.epochs_medium as u64)?
-            as u32,
-        epochs_complex: get_u64(
-            v, "epochs_complex", d.epochs_complex as u64)? as u32,
+        epochs_light: get_u32(v, "epochs_light", d.epochs_light)?,
+        epochs_medium: get_u32(v, "epochs_medium", d.epochs_medium)?,
+        epochs_complex: get_u32(v, "epochs_complex", d.epochs_complex)?,
     })
 }
 
@@ -715,6 +721,29 @@ mod tests {
                  "period_s": 60, "samples": 4294967320}}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn experiment_u32_fields_reject_out_of_range() {
+        // (2^32 + 7) used to truncate to 7 through `as u32` — every
+        // 32-bit experiment field must reject it with the key named.
+        for key in
+            ["replications", "epochs_light", "epochs_medium", "epochs_complex"]
+        {
+            let err = config_from_json(&format!(
+                r#"{{"experiment": {{"{key}": 4294967303}}}}"#
+            ))
+            .unwrap_err()
+            .to_string();
+            assert!(err.contains(key), "{key}: {err}");
+            assert!(err.contains("does not fit in 32 bits"), "{err}");
+        }
+        // The largest representable value still parses exactly.
+        let cfg = config_from_json(
+            r#"{"experiment": {"epochs_light": 4294967295}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.experiment.epochs_light, u32::MAX);
         // Non-monotonic or non-finite timestamps parse but fail
         // validation (the signal constructor is the single gate).
         let bad = config_from_json(

@@ -8,6 +8,7 @@ mod elastic;
 mod federation;
 mod fig2;
 mod profiles;
+mod replay;
 mod runner;
 mod table6;
 mod table7;
@@ -29,6 +30,7 @@ pub use federation::{
 };
 pub use fig2::render_fig2;
 pub use profiles::{run_profiles, ProfileCell, ProfilesReport};
+pub use replay::{run_trace_replay, ReplaySummary};
 pub use runner::{run_cell, run_once, run_uniform, CellResult, ExperimentContext};
 pub use table6::{run_table6, Table6, Table6Row};
 pub use table7::{run_table7, Table7};

@@ -38,6 +38,7 @@ use crate::workload::WorkloadExecutor;
 
 use super::dispatch::{Dispatcher, RegionSnapshot};
 use super::result::{FederationResult, RegionAssignment, RegionResult};
+use super::source::ArrivalSource;
 
 /// One federated cluster: its own full config (cluster topology +
 /// energy model), regional carbon-intensity signal, and optional
@@ -281,15 +282,54 @@ impl<'a> FederationEngine<'a> {
         self.run_refs(pods, dispatcher, &mut pairs)
     }
 
-    /// The event loop proper, over borrowed `(topsis, default)`
+    /// Streaming entry point: pods are pulled lazily from `source` in
+    /// nondecreasing arrival order, admitted into the merged queue as
+    /// virtual time reaches them, and their pod-vector slots recycled
+    /// at completion — bit-identical to [`Self::run`] on the same
+    /// arrivals (the admission argument lives on
+    /// [`crate::federation::ArrivalSource`]; the differential property
+    /// pins the whole-engine consequence), with peak live pods bounded
+    /// by the in-flight count instead of the trace length. Errors
+    /// surface source failures (I/O, malformed or out-of-order
+    /// entries); an in-memory run cannot fail.
+    pub fn run_source(
+        &self,
+        source: &mut dyn ArrivalSource,
+        dispatcher: &mut dyn Dispatcher,
+        scheds: &mut [RegionSchedulers],
+    ) -> anyhow::Result<FederationResult> {
+        let mut pairs: Vec<(&mut dyn Scheduler, &mut dyn Scheduler)> = scheds
+            .iter_mut()
+            .map(|s| {
+                (s.topsis.as_mut() as &mut dyn Scheduler, s.default.as_mut())
+            })
+            .collect();
+        self.run_loop(Vec::new(), Some(source), dispatcher, &mut pairs)
+    }
+
+    /// The eager event loop, over borrowed `(topsis, default)`
     /// scheduler pairs — the entry point `SimulationEngine::run` uses
     /// to delegate a 1-region run without boxing its schedulers.
     pub(crate) fn run_refs(
         &self,
-        mut pods: Vec<Pod>,
+        pods: Vec<Pod>,
         dispatcher: &mut dyn Dispatcher,
         scheds: &mut [(&mut dyn Scheduler, &mut dyn Scheduler)],
     ) -> FederationResult {
+        self.run_loop(pods, None, dispatcher, scheds)
+            .expect("in-memory arrivals cannot fail")
+    }
+
+    /// The event loop proper. `pods` seeds the eager path; `source`,
+    /// when present, feeds arrivals lazily through [`SourcePump`]
+    /// (then `pods` starts empty and grows/recycles per admission).
+    fn run_loop(
+        &self,
+        mut pods: Vec<Pod>,
+        mut source: Option<&mut dyn ArrivalSource>,
+        dispatcher: &mut dyn Dispatcher,
+        scheds: &mut [(&mut dyn Scheduler, &mut dyn Scheduler)],
+    ) -> anyhow::Result<FederationResult> {
         assert_eq!(
             scheds.len(),
             self.regions.len(),
@@ -320,7 +360,8 @@ impl<'a> FederationEngine<'a> {
         // Seed arrivals in pod order — the kernel's `(time, priority,
         // seq)` assignments. The region tag of an arrival is resolved
         // by the dispatcher at pop time (0 here is a placeholder,
-        // never read).
+        // never read). Streaming runs skip this: the pump admits each
+        // arrival just before it is due instead.
         for (i, p) in pods.iter().enumerate() {
             queue.push(p.arrival_s, 0, SimEvent::PodArrival { pod: i });
         }
@@ -348,7 +389,22 @@ impl<'a> FederationEngine<'a> {
             self.autoscale(&mut fed[r], r, 0.0, &pods, &mut queue);
         }
 
-        while let Some(ev) = queue.pop() {
+        let streaming = source.is_some();
+        let mut pump = SourcePump::new();
+        let mut peak_live_pods = pods.len();
+        loop {
+            if let Some(src) = source.as_deref_mut() {
+                pump.admit_due(
+                    src,
+                    &mut queue,
+                    &mut pods,
+                    &mut sched_latency_us,
+                    &mut attempts,
+                )?;
+                peak_live_pods =
+                    peak_live_pods.max(pods.len() - pump.free_slots.len());
+            }
+            let Some(ev) = queue.pop() else { break };
             let now = clock.advance_to(ev.at);
             let is_tick = matches!(ev.event, SimEvent::AutoscaleTick);
             let region = match ev.event {
@@ -448,6 +504,13 @@ impl<'a> FederationEngine<'a> {
                                 &sched_latency_us,
                                 &attempts,
                             );
+                            // A completed pod's record is final: its
+                            // slot can host the next streamed arrival,
+                            // keeping the live vector bounded by
+                            // in-flight pods.
+                            if streaming {
+                                pump.free_slots.push(pod);
+                            }
                             if !fed[r].pending.is_empty()
                                 && !fed[r].cycle_queued
                             {
@@ -538,7 +601,11 @@ impl<'a> FederationEngine<'a> {
                 },
             });
         }
-        FederationResult { regions: regions_out, assignments }
+        Ok(FederationResult {
+            regions: regions_out,
+            assignments,
+            peak_live_pods,
+        })
     }
 
     /// One region autoscaler consultation (mirrors the plain engine's
@@ -739,6 +806,79 @@ impl<'a> FederationEngine<'a> {
             joules,
             wait_s: rp.start_s - pods[i].arrival_s,
         });
+    }
+}
+
+/// Streaming-arrival bookkeeping for `run_loop`: admits source pods
+/// into the merged queue as they come due, and recycles the pod-vector
+/// slots of completed pods so a replay's live vector stays bounded by
+/// the in-flight count instead of the trace length.
+struct SourcePump {
+    /// Pod-vector slots of completed pods, ready for reuse.
+    free_slots: Vec<usize>,
+    /// Last admitted arrival time (monotonicity guard).
+    last_at: f64,
+}
+
+impl SourcePump {
+    fn new() -> Self {
+        Self { free_slots: Vec::new(), last_at: 0.0 }
+    }
+
+    /// Admit every source pod due at or before the queue's head (or
+    /// the single next pod when the queue is empty). Pushed before
+    /// that pop, an admitted arrival lands in the identical `(time,
+    /// kind-priority)` slot the eager seeding would give it, and
+    /// same-slot arrivals keep source order because `seq` is monotone
+    /// in admission order — so the pop sequence matches the eager run
+    /// exactly (the differential property pins this).
+    fn admit_due(
+        &mut self,
+        src: &mut dyn ArrivalSource,
+        queue: &mut FedEventQueue,
+        pods: &mut Vec<Pod>,
+        sched_latency_us: &mut Vec<f64>,
+        attempts: &mut Vec<u32>,
+    ) -> anyhow::Result<()> {
+        loop {
+            let Some(at) = src.peek_at()? else { return Ok(()) };
+            anyhow::ensure!(
+                at.is_finite() && at >= 0.0,
+                "arrival source yielded an invalid time {at}"
+            );
+            anyhow::ensure!(
+                at >= self.last_at,
+                "arrival source times must be nondecreasing: {at} after {}",
+                self.last_at
+            );
+            let due = match queue.peek() {
+                None => true,
+                Some(head) => at <= head.at,
+            };
+            if !due {
+                return Ok(());
+            }
+            self.last_at = at;
+            let pod = src.next_pod()?.ok_or_else(|| {
+                anyhow::anyhow!("arrival source ended between peek and next")
+            })?;
+            let slot = match self.free_slots.pop() {
+                Some(s) => {
+                    pods[s] = pod;
+                    sched_latency_us[s] = 0.0;
+                    attempts[s] = 0;
+                    s
+                }
+                None => {
+                    pods.push(pod);
+                    sched_latency_us.push(0.0);
+                    attempts.push(0);
+                    pods.len() - 1
+                }
+            };
+            queue
+                .push(pods[slot].arrival_s, 0, SimEvent::PodArrival { pod: slot });
+        }
     }
 }
 

@@ -32,6 +32,7 @@
 mod dispatch;
 mod engine;
 mod result;
+mod source;
 
 pub use dispatch::{
     build_dispatcher, CarbonGreedy, Dispatcher, LeastPending,
@@ -41,3 +42,4 @@ pub use engine::{
     FederationEngine, FederationParams, RegionSchedulers, RegionSpec,
 };
 pub use result::{FederationResult, RegionAssignment, RegionResult};
+pub use source::{ArrivalSource, VecArrivalSource};

@@ -34,6 +34,14 @@ pub struct FederationResult {
     /// Dispatch log, in arrival order (every admitted pod exactly
     /// once — the conservation property pins this).
     pub assignments: Vec<RegionAssignment>,
+    /// High-water mark of the engine's live pod vector. Eager runs
+    /// materialize every pod up front, so this equals the trace
+    /// length; streaming runs ([`FederationEngine::run_source`])
+    /// recycle completed slots, so it is bounded by the in-flight pod
+    /// count — the memory claim the bounded-replay test asserts.
+    ///
+    /// [`FederationEngine::run_source`]: super::FederationEngine::run_source
+    pub peak_live_pods: usize,
 }
 
 impl FederationResult {

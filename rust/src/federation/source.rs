@@ -1,0 +1,93 @@
+//! The lazy arrival source — the streaming counterpart of the eager
+//! `Vec<Pod>` the engine has always taken.
+//!
+//! [`FederationEngine::run_source`] pulls pods from an
+//! [`ArrivalSource`] *as virtual time reaches them* instead of seeding
+//! every arrival up front, so a multi-million-pod trace replays
+//! without materializing its pod vector. The contract that keeps the
+//! two paths bit-identical (pinned by
+//! `prop_stream_replay_is_bit_identical_to_eager`):
+//!
+//! * `peek_at` reports the next pod's arrival time without consuming
+//!   it; `next_pod` consumes exactly that pod. Times must be finite,
+//!   non-negative and **nondecreasing** — the engine validates both
+//!   and errors on violation (never silently clamps).
+//! * The engine admits a source pod into the event queue the moment
+//!   its arrival time is less than or equal to the queue head's fire
+//!   time. Pushed before that pop, the arrival lands in the same
+//!   `(time, kind-priority)` slot the eager seeding would give it, and
+//!   same-slot arrivals keep source order because the queue's `seq`
+//!   tie-break is monotone in admission order — so the pop sequence,
+//!   and therefore every downstream float op, is identical.
+//!
+//! [`FederationEngine::run_source`]: super::FederationEngine::run_source
+
+use crate::cluster::Pod;
+
+/// A pull-based stream of pods in nondecreasing `arrival_s` order.
+pub trait ArrivalSource {
+    /// Arrival time of the next pod, without consuming it
+    /// (`Ok(None)` = the stream is exhausted).
+    fn peek_at(&mut self) -> anyhow::Result<Option<f64>>;
+
+    /// Consume the next pod. Returns the pod whose time the last
+    /// `peek_at` reported.
+    fn next_pod(&mut self) -> anyhow::Result<Option<Pod>>;
+}
+
+/// An in-memory arrival source over an already-sorted pod vector —
+/// the degenerate stream used by differential tests to pin streaming
+/// against eager on identical inputs.
+pub struct VecArrivalSource {
+    pods: std::vec::IntoIter<Pod>,
+    next: Option<Pod>,
+}
+
+impl VecArrivalSource {
+    /// Wrap `pods` (must already be in nondecreasing `arrival_s`
+    /// order; the engine rejects violations).
+    pub fn new(pods: Vec<Pod>) -> Self {
+        Self { pods: pods.into_iter(), next: None }
+    }
+
+    fn fill(&mut self) {
+        if self.next.is_none() {
+            self.next = self.pods.next();
+        }
+    }
+}
+
+impl ArrivalSource for VecArrivalSource {
+    fn peek_at(&mut self) -> anyhow::Result<Option<f64>> {
+        self.fill();
+        Ok(self.next.as_ref().map(|p| p.arrival_s))
+    }
+
+    fn next_pod(&mut self) -> anyhow::Result<Option<Pod>> {
+        self.fill();
+        Ok(self.next.take())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedulerKind;
+    use crate::workload::WorkloadClass;
+
+    #[test]
+    fn vec_source_peeks_without_consuming() {
+        let pods = vec![
+            Pod::new(0, WorkloadClass::Light, SchedulerKind::Topsis, 1.0, 2),
+            Pod::new(1, WorkloadClass::Medium, SchedulerKind::Topsis, 3.5, 4),
+        ];
+        let mut src = VecArrivalSource::new(pods);
+        assert_eq!(src.peek_at().unwrap(), Some(1.0));
+        assert_eq!(src.peek_at().unwrap(), Some(1.0));
+        assert_eq!(src.next_pod().unwrap().unwrap().id, 0);
+        assert_eq!(src.peek_at().unwrap(), Some(3.5));
+        assert_eq!(src.next_pod().unwrap().unwrap().id, 1);
+        assert_eq!(src.peek_at().unwrap(), None);
+        assert!(src.next_pod().unwrap().is_none());
+    }
+}

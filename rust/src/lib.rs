@@ -28,6 +28,10 @@
 //!   produced by `make artifacts` and executes them on the hot path.
 //! * [`simulation`] — deterministic discrete-event simulation engine with
 //!   a CPU-contention model.
+//! * [`trace`] — trace replay: generic workload/cluster trace
+//!   interfaces, a streaming chunked ingester, an Alibaba-v2017 column
+//!   adapter, seeded down-sampling, and trace synthesis feeding the
+//!   federation engine's lazy arrival source.
 //! * [`autoscaler`] — queue-driven cluster autoscaling policies that
 //!   grow/shrink the simulated cluster through the event kernel.
 //! * [`federation`] — multi-cluster federation: N per-region event
@@ -69,6 +73,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod scheduler;
 pub mod simulation;
+pub mod trace;
 pub mod workload;
 
 pub use config::ExperimentConfig;

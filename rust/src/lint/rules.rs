@@ -174,17 +174,22 @@ fn rule_wall_clock_in_kernel(
     }
 }
 
-/// `lossy-id-cast`: the 2^53 class of bug PR 5 fixed by hand. Three
+/// `lossy-id-cast`: the 2^53 class of bug PR 5 fixed by hand, plus
+/// the 2^32 truncation twin PR 9 fixed in the trace parser. Four
 /// shapes: an id-like integer cast to `f64`, any `as f64` inside a
 /// `Json::Num(..)` argument (exact integers must serialize through
-/// `Json::Uint`), and a float accessor chained straight into an
-/// integer `as` cast on the parse side.
+/// `Json::Uint`), a float accessor chained straight into an integer
+/// `as` cast on the parse side, and a `u64` accessor chained into a
+/// narrowing `as` cast (`as u32` silently drops the high bits —
+/// `u32::try_from` rejects them instead).
 fn rule_lossy_id_cast(
     path: &str,
     src: &str,
     toks: &[Token],
     out: &mut Vec<Finding>,
 ) {
+    const FLOAT_ACCESSORS: &[&str] = &["as_f64", "req_f64"];
+    const U64_ACCESSORS: &[&str] = &["as_u64", "req_u64", "get_u64"];
     let in_num = json_num_spans(src, toks);
     for (i, t) in toks.iter().enumerate() {
         if !t.is_ident(src, "as") {
@@ -224,8 +229,9 @@ fn rule_lossy_id_cast(
                     ));
                 }
             }
-            "u64" | "u32" | "u16" | "u8" | "usize" | "i64" | "i32" => {
-                if float_accessor_feeds(src, toks, i) {
+            target @ ("u64" | "u32" | "u16" | "u8" | "usize" | "i64"
+            | "i32" | "i16" | "i8") => {
+                if accessor_feeds(src, toks, i, FLOAT_ACCESSORS) {
                     out.push(finding(
                         "lossy-id-cast",
                         path,
@@ -234,6 +240,22 @@ fn rule_lossy_id_cast(
                          cast: the f64 round-trip corrupts values above \
                          2^53 — parse through the lossless `as_u64` path"
                             .to_string(),
+                    ));
+                } else if matches!(
+                    target,
+                    "u32" | "u16" | "u8" | "i32" | "i16" | "i8"
+                ) && accessor_feeds(src, toks, i, U64_ACCESSORS)
+                {
+                    out.push(finding(
+                        "lossy-id-cast",
+                        path,
+                        t,
+                        format!(
+                            "`u64` accessor chained into `as {target}` \
+                             silently truncates out-of-range values — \
+                             reject them with `{target}::try_from` \
+                             instead"
+                        ),
                     ));
                 }
             }
@@ -272,30 +294,57 @@ fn json_num_spans(src: &str, toks: &[Token]) -> Vec<bool> {
     out
 }
 
-/// Does the expression feeding the `as` at token `i` end in a float
-/// accessor (`as_f64()`, `req_f64(..)`), possibly via `.unwrap()` /
-/// `.expect(..)` / `?`? Walks back over closing punctuation and those
-/// combinators only, so plain numeric math never matches.
-fn float_accessor_feeds(src: &str, toks: &[Token], i: usize) -> bool {
+/// Does the expression feeding the `as` at token `i` end in a call to
+/// one of `names` (e.g. `as_f64()`, `req_u64(..)`), possibly via
+/// `.unwrap()` / `.expect(..)` / `.ok_or_else(..)` / `?`? Walks back
+/// skipping `(`/`.`/`?`, string literals and the error-handling
+/// combinators; a `)` jumps straight to its balanced matching `(` so
+/// closure arguments (`.ok_or_else(|| anyhow!("…"))`) cannot hide the
+/// accessor. Plain numeric math never matches.
+fn accessor_feeds(
+    src: &str,
+    toks: &[Token],
+    i: usize,
+    names: &[&str],
+) -> bool {
+    const COMBINATORS: &[&str] =
+        &["unwrap", "expect", "ok_or", "ok_or_else", "map_err"];
     let mut j = i;
     let mut steps = 0;
-    while j > 0 && steps < 12 {
-        j -= 1;
+    while j > 0 && steps < 64 {
         steps += 1;
+        j -= 1;
         let t = &toks[j];
+        if is_punct(t, b')') {
+            // Jump to the matching `(`; an unbalanced prefix (we ran
+            // off the front) cannot feed an accessor call.
+            let mut depth = 1usize;
+            while depth > 0 {
+                if j == 0 {
+                    return false;
+                }
+                j -= 1;
+                if is_punct(&toks[j], b')') {
+                    depth += 1;
+                } else if is_punct(&toks[j], b'(') {
+                    depth -= 1;
+                }
+            }
+            continue;
+        }
         let skip = matches!(
             t.kind,
             TokenKind::Punct(b'(')
-                | TokenKind::Punct(b')')
                 | TokenKind::Punct(b'.')
                 | TokenKind::Punct(b'?')
                 | TokenKind::Str
-        ) || t.is_ident(src, "unwrap")
-            || t.is_ident(src, "expect");
+        ) || (t.kind == TokenKind::Ident
+            && COMBINATORS.contains(&t.text(src)));
         if skip {
             continue;
         }
-        return t.is_ident(src, "as_f64") || t.is_ident(src, "req_f64");
+        return t.kind == TokenKind::Ident
+            && names.contains(&t.text(src));
     }
     false
 }
@@ -524,11 +573,34 @@ mod tests {
             .is_empty());
         assert!(rules_of(TOOL, "let j = Json::Num(self.at_s);\n")
             .is_empty());
-        // A lossless integer helper chained into `as` stays clean.
+        // A lossless integer helper chained into a same-width (or
+        // widening) `as` stays clean …
         assert!(rules_of(TOOL, "let n = get_u64(v, \"k\", 3u64)? as usize;\n")
             .is_empty());
-        assert!(rules_of(TOOL, "let e = x.as_u64().unwrap() as u32;\n")
+        assert!(rules_of(TOOL, "let n = x.as_u64().unwrap() as u64;\n")
             .is_empty());
+        // … but chained into a *narrowing* `as` it truncates — the
+        // trace parser's `epochs` bug (PR 9). The walker is
+        // paren-aware, so a closure combinator cannot hide the
+        // accessor.
+        assert_eq!(
+            rules_of(TOOL, "let e = x.as_u64().unwrap() as u32;\n"),
+            ["lossy-id-cast"]
+        );
+        assert_eq!(
+            rules_of(TOOL, "let e = v.req_u64(\"epochs\")? as u16;\n"),
+            ["lossy-id-cast"]
+        );
+        assert_eq!(
+            rules_of(
+                TOOL,
+                "let e = x.as_u64().ok_or_else(|| anyhow!(\"int\"))? as i32;\n"
+            ),
+            ["lossy-id-cast"]
+        );
+        // Narrowing ordinary integer math is not the parser shape.
+        assert!(rules_of(TOOL, "let n = (count % 7) as u32;\n").is_empty());
+        assert!(rules_of(TOOL, "let n = x.len().min(9) as u32;\n").is_empty());
     }
 
     #[test]

@@ -15,12 +15,24 @@
 //! greenpod bench sched [--grid small|full]        # scheduling microbenchmark + scaling curves
 //! greenpod lint [--deny] [--json]                 # determinism/numeric-safety static analysis
 //! greenpod calibrate [--reps 4]                   # PJRT epoch timings
+//! greenpod trace info --trace FILE                # streamed marginals (rate/mix/epochs/burst)
+//! greenpod trace sample --trace FILE --keep-every K [--out FILE|-]
+//! greenpod trace synth --trace FILE [--out FILE|-] # fit marginals, emit synthetic trace
+//! greenpod trace replay (--trace FILE | --full)   # stream a trace through the engine
 //! greenpod serve --trace t.jsonl [--scheme energy-centric]
 //!                [--time-scale 100] [--only topsis|default]
 //!                [--profile NAME]
 //!
 //! global: --config file.json --replications N --seed S
 //! ```
+//!
+//! `trace` subcommands stream: a multi-million-pod trace flows through
+//! a bounded chunk buffer (`--chunk`) and the federation engine's lazy
+//! arrival source without ever materializing a pod vector. `--format
+//! alibaba` reads Alibaba-v2017 `batch_task` tables (`--machines`
+//! feeds the matching machine-event table as node churn), `--keep-every
+//! K` down-samples pods and cluster capacity together, and `replay
+//! --full` reproduces the heavy ~1M-pod SURF-Lisa-shaped run.
 //!
 //! `serve` emits JSON-lines lifecycle events; every `bound` line
 //! carries the `profile` that placed the pod, so mixed-profile traces
@@ -45,14 +57,16 @@ use greenpod::experiments::{
 use greenpod::framework::{BuildOptions, ProfileRegistry};
 use greenpod::metrics::{format_table, format_timeline};
 use greenpod::runtime::{ArtifactRegistry, LinRegRunner};
+use greenpod::trace::WorkloadTrace;
 use greenpod::util::cli::Args;
 use greenpod::workload::{ArrivalTrace, WorkloadClass, WorkloadExecutor};
 
 const FLAGS: &[&str] =
-    &["pjrt", "csv", "events", "deny", "json", "help", "version"];
+    &["pjrt", "csv", "events", "deny", "json", "help", "version", "full"];
 const KNOWN_OPTS: &[&str] = &[
     "config", "replications", "seed", "section", "optimization", "level",
     "reps", "trace", "scheme", "time-scale", "only", "profile", "grid",
+    "format", "chunk", "keep-every", "out", "machines", "nodes",
 ];
 
 const USAGE: &str = "\
@@ -74,8 +88,23 @@ usage:
   greenpod bench sched [--grid small|full]
   greenpod lint [--deny] [--json]
   greenpod calibrate [--reps N]
+  greenpod trace info --trace FILE [--format jsonl|csv|alibaba] [--chunk N] [--json]
+  greenpod trace sample --trace FILE --keep-every K [--out FILE|-]
+  greenpod trace synth --trace FILE [--out FILE|-]
+  greenpod trace replay (--trace FILE | --full) [--keep-every K]
+                 [--machines FILE] [--nodes SCALE] [--chunk N] [--json]
   greenpod serve --trace FILE|- [--scheme S] [--time-scale X] [--only topsis|default]
                  [--profile NAME]
+
+trace options:
+  --format F           jsonl | csv | alibaba (default: by file extension)
+  --chunk N            streaming buffer, entries (default 4096)
+  --keep-every K       keep every K-th pod per class, seeded by --seed;
+                       replay also divides cluster capacity by K
+  --machines FILE      Alibaba machine-event table replayed as node churn
+  --full               replay the built-in ~1M-pod SURF-Lisa synthetic trace
+  --nodes SCALE        cluster scale multiplier for --full (default 80)
+  --out FILE|-         JSONL destination (default stdout)
 
 global options:
   --config FILE.json   override paper defaults (partial configs fine;
@@ -107,6 +136,7 @@ fn main() -> Result<()> {
         "experiment" => run_experiment(&cfg, &args),
         "bench" => run_bench(&cfg, &args),
         "calibrate" => calibrate(args.opt_parse("reps", 4u32)?),
+        "trace" => run_trace(&cfg, &args),
         "serve" => serve(&cfg, &args),
         other => bail!("unknown command `{other}`\n\n{USAGE}"),
     }
@@ -474,6 +504,56 @@ fn bench_sched(cfg: &Config, grid: &str) -> Result<()> {
         }
     }
 
+    // Trace-replay throughput: stream a synthetic SURF-Lisa trace
+    // through the federation engine's lazy arrival source — the
+    // `trace replay` hot path, end to end (generate, admit, schedule,
+    // complete, meter). `ns_per_pod` is the trend-tracked figure;
+    // `peak_live_pods` pins that streaming kept memory bounded.
+    let trace_cell = {
+        use greenpod::experiments::run_trace_replay;
+        use greenpod::trace::{SynthTrace, TraceOwnership};
+        use greenpod::workload::TraceSpec;
+
+        let (rate, duration, scale) = match grid {
+            "small" => (10.0, 120.0, 2),
+            _ => (50.0, 600.0, 8),
+        };
+        let mut replay_cfg = cfg.clone();
+        replay_cfg.cluster = ClusterConfig::scaled(scale);
+        let ctx = ExperimentContext::new(replay_cfg);
+        let seed = cfg.experiment.seed;
+        let (mut pods, mut peak_live, mut peak_buffered) = (0usize, 0, 0);
+        b.bench("sched/trace-replay/stream", || {
+            let spec = TraceSpec::surf_lisa(rate, duration);
+            let mut synth = SynthTrace::poisson(spec, seed);
+            let s = run_trace_replay(
+                &ctx,
+                &mut synth,
+                TraceOwnership::RoundRobin,
+                Vec::new(),
+            )
+            .expect("synthetic replay cannot fail");
+            pods = s.pods;
+            peak_live = s.peak_live_pods;
+            peak_buffered = s.peak_buffered;
+            s.completed
+        });
+        let r = b.results().last().expect("bench just recorded");
+        let ns_per_pod = if pods == 0 {
+            0.0
+        } else {
+            r.summary.mean * 1e9 / pods as f64
+        };
+        Json::obj(vec![
+            ("name", Json::Str(r.name.clone())),
+            ("pods", Json::Uint(pods as u64)),
+            ("peak_live_pods", Json::Uint(peak_live as u64)),
+            ("peak_buffered", Json::Uint(peak_buffered as u64)),
+            ("ns_per_pod", Json::Num(ns_per_pod)),
+            ("iters", Json::Uint(r.iters as u64)),
+        ])
+    };
+
     let rows: Vec<Json> = b
         .results()
         .iter()
@@ -492,6 +572,7 @@ fn bench_sched(cfg: &Config, grid: &str) -> Result<()> {
         ("bench", Json::Str("sched".into())),
         ("benchmarks", Json::Arr(rows)),
         ("curves", Json::Arr(curves)),
+        ("trace", trace_cell),
     ]);
     std::fs::write("BENCH_sched.json", out.pretty())?;
     b.finish();
@@ -552,6 +633,260 @@ fn calibrate(reps: u32) -> Result<()> {
     Ok(())
 }
 
+/// Open the `--trace` file as a streaming [`WorkloadTrace`]:
+/// `--format` picks jsonl / csv / alibaba, defaulting to the file
+/// extension; `--chunk` bounds the reader's buffer.
+fn open_trace(args: &Args) -> Result<Box<dyn WorkloadTrace>> {
+    use greenpod::trace::{AlibabaTaskReader, ChunkedTraceReader, TraceFormat};
+
+    let path = args
+        .opt("trace")
+        .ok_or_else(|| anyhow::anyhow!("trace needs --trace FILE\n\n{USAGE}"))?;
+    let chunk: usize = args.opt_parse("chunk", 4096usize)?;
+    match args.opt("format") {
+        Some("alibaba") => {
+            let file = std::fs::File::open(path).map_err(|e| {
+                anyhow::anyhow!("open trace `{path}`: {e}")
+            })?;
+            Ok(Box::new(AlibabaTaskReader::new(std::io::BufReader::new(
+                file,
+            ))))
+        }
+        Some(f) => {
+            let format: TraceFormat = f.parse()?;
+            let file = std::fs::File::open(path).map_err(|e| {
+                anyhow::anyhow!("open trace `{path}`: {e}")
+            })?;
+            Ok(Box::new(ChunkedTraceReader::new(
+                std::io::BufReader::new(file),
+                format,
+                chunk,
+            )?))
+        }
+        None => Ok(Box::new(ChunkedTraceReader::open(path, chunk)?)),
+    }
+}
+
+/// Stream a trace's entries to `--out` (default stdout) as JSONL.
+fn write_trace(
+    trace: &mut dyn WorkloadTrace,
+    out: Option<&str>,
+) -> Result<usize> {
+    use std::io::Write;
+
+    let mut sink: Box<dyn Write> = match out {
+        Some(p) if p != "-" => Box::new(std::io::BufWriter::new(
+            std::fs::File::create(p)
+                .map_err(|e| anyhow::anyhow!("create `{p}`: {e}"))?,
+        )),
+        _ => Box::new(std::io::stdout().lock()),
+    };
+    let mut n = 0usize;
+    while let Some(e) = trace.next_entry()? {
+        writeln!(sink, "{}", e.to_json().to_string())?;
+        n += 1;
+    }
+    sink.flush()?;
+    Ok(n)
+}
+
+/// `greenpod trace {info,sample,synth,replay}` — streaming trace
+/// tooling over [`greenpod::trace`] (DESIGN.md §"Trace replay").
+fn run_trace(cfg: &Config, args: &Args) -> Result<()> {
+    use greenpod::config::ClusterConfig;
+    use greenpod::experiments::run_trace_replay;
+    use greenpod::trace::{
+        fit_marginals, machine_events_to_node_changes, AlibabaMachineReader,
+        DownSampler, SynthTrace, TraceOwnership,
+    };
+    use greenpod::util::json::Json;
+    use greenpod::workload::TraceSpec;
+
+    let seed = cfg.experiment.seed;
+    let sub = args
+        .command(1)
+        .ok_or_else(|| anyhow::anyhow!("trace needs a subcommand\n\n{USAGE}"))?;
+    match sub {
+        "info" => {
+            let mut t = open_trace(args)?;
+            let fit = fit_marginals(&mut *t)?;
+            let s = &fit.spec;
+            if args.flag("json") {
+                let obj = Json::obj(vec![
+                    ("entries", Json::Uint(fit.entries as u64)),
+                    ("duration_s", Json::Num(s.duration_s)),
+                    ("rate_per_s", Json::Num(s.rate_per_s)),
+                    ("burst_size", Json::Uint(fit.burst_size as u64)),
+                    ("p_light", Json::Num(s.p_light)),
+                    ("p_medium", Json::Num(s.p_medium)),
+                    ("p_complex", Json::Num(s.p_complex)),
+                    (
+                        "epochs",
+                        Json::Arr(
+                            s.epochs
+                                .iter()
+                                .map(|&e| Json::Uint(u64::from(e)))
+                                .collect(),
+                        ),
+                    ),
+                    ("peak_buffered", Json::Uint(t.peak_buffered() as u64)),
+                ]);
+                println!("{}", obj.to_string());
+            } else {
+                println!(
+                    "{} entries over {:.1} s ({:.3} arrivals/s, burst \
+                     size {})",
+                    fit.entries, s.duration_s, s.rate_per_s, fit.burst_size
+                );
+                println!(
+                    "class mix: light {:.2}% / medium {:.2}% / complex \
+                     {:.2}%",
+                    100.0 * s.p_light,
+                    100.0 * s.p_medium,
+                    100.0 * s.p_complex
+                );
+                println!(
+                    "epochs (per-class mode): light {} / medium {} / \
+                     complex {}",
+                    s.epochs[0], s.epochs[1], s.epochs[2]
+                );
+                println!(
+                    "peak buffered entries: {} (streamed)",
+                    t.peak_buffered()
+                );
+            }
+        }
+        "sample" => {
+            let k: usize = args.opt_parse("keep-every", 10usize)?;
+            let mut inner = open_trace(args)?;
+            let mut sampler = DownSampler::new(&mut *inner, k, seed);
+            let n = write_trace(&mut sampler, args.opt("out"))?;
+            eprintln!(
+                "kept {n} of every {k} per class (seed {seed}); pair with \
+                 a cluster downsampled by {k}"
+            );
+        }
+        "synth" => {
+            let mut t = open_trace(args)?;
+            let fit = fit_marginals(&mut *t)?;
+            eprintln!(
+                "fitted: {:.3} arrivals/s over {:.1} s, burst {}, mix \
+                 {:.3}/{:.3}/{:.3}, epochs {:?}",
+                fit.spec.rate_per_s,
+                fit.spec.duration_s,
+                fit.burst_size,
+                fit.spec.p_light,
+                fit.spec.p_medium,
+                fit.spec.p_complex,
+                fit.spec.epochs
+            );
+            let mut synth = SynthTrace::from_fit(&fit, seed);
+            let n = write_trace(&mut synth, args.opt("out"))?;
+            eprintln!("emitted {n} synthetic entries (seed {seed})");
+        }
+        "replay" => {
+            let mut config = cfg.clone();
+            let keep: usize = args.opt_parse("keep-every", 1usize)?;
+            anyhow::ensure!(keep >= 1, "--keep-every must be at least 1");
+            if args.flag("full") {
+                let scale: usize = args.opt_parse("nodes", 80usize)?;
+                anyhow::ensure!(scale >= 1, "--nodes must be at least 1");
+                config.cluster = ClusterConfig::scaled(scale);
+            } else if keep > 1 {
+                config.cluster = config.cluster.downsampled(keep);
+            }
+            let node_events = match args.opt("machines") {
+                Some(p) => {
+                    let file = std::fs::File::open(p).map_err(|e| {
+                        anyhow::anyhow!("open machine events `{p}`: {e}")
+                    })?;
+                    let mut events = AlibabaMachineReader::new(
+                        std::io::BufReader::new(file),
+                    );
+                    machine_events_to_node_changes(
+                        &mut events,
+                        config.cluster.total_nodes(),
+                    )?
+                }
+                None => Vec::new(),
+            };
+            let ctx = ExperimentContext::new(config);
+            let summary = if args.flag("full") {
+                // The heavy run: a ~1.05M-pod SURF-Lisa-composition
+                // Poisson trace, streamed straight from the generator.
+                let spec = TraceSpec::surf_lisa(100.0, 10_500.0);
+                let mut synth = SynthTrace::poisson(spec, seed);
+                run_trace_replay(
+                    &ctx,
+                    &mut synth,
+                    TraceOwnership::RoundRobin,
+                    node_events,
+                )?
+            } else if keep > 1 {
+                let mut inner = open_trace(args)?;
+                let mut sampler = DownSampler::new(&mut *inner, keep, seed);
+                run_trace_replay(
+                    &ctx,
+                    &mut sampler,
+                    TraceOwnership::RoundRobin,
+                    node_events,
+                )?
+            } else {
+                let mut inner = open_trace(args)?;
+                run_trace_replay(
+                    &ctx,
+                    &mut *inner,
+                    TraceOwnership::RoundRobin,
+                    node_events,
+                )?
+            };
+            println!(
+                "replayed {} pods: {} completed, {} unschedulable",
+                summary.pods, summary.completed, summary.unschedulable
+            );
+            println!(
+                "makespan {:.1} s; energy {:.3} kJ; {:.2} g CO2; wait \
+                 mean {:.2} s, p95 {:.2} s",
+                summary.makespan_s,
+                summary.total_kj,
+                summary.total_co2_g,
+                summary.wait_mean_s,
+                summary.wait_p95_s
+            );
+            println!(
+                "peak live pods {}; peak buffered entries {}",
+                summary.peak_live_pods, summary.peak_buffered
+            );
+            if args.flag("json") {
+                let obj = Json::obj(vec![
+                    ("pods", Json::Uint(summary.pods as u64)),
+                    ("completed", Json::Uint(summary.completed as u64)),
+                    (
+                        "unschedulable",
+                        Json::Uint(summary.unschedulable as u64),
+                    ),
+                    (
+                        "peak_live_pods",
+                        Json::Uint(summary.peak_live_pods as u64),
+                    ),
+                    (
+                        "peak_buffered",
+                        Json::Uint(summary.peak_buffered as u64),
+                    ),
+                    ("makespan_s", Json::Num(summary.makespan_s)),
+                    ("total_kj", Json::Num(summary.total_kj)),
+                    ("total_co2_g", Json::Num(summary.total_co2_g)),
+                    ("wait_mean_s", Json::Num(summary.wait_mean_s)),
+                    ("wait_p95_s", Json::Num(summary.wait_p95_s)),
+                ]);
+                println!("{}", obj.to_string());
+            }
+        }
+        other => bail!("unknown trace subcommand `{other}`\n\n{USAGE}"),
+    }
+    Ok(())
+}
+
 fn serve(cfg: &Config, args: &Args) -> Result<()> {
     let trace_path = args
         .opt("trace")
@@ -591,7 +926,13 @@ fn serve(cfg: &Config, args: &Args) -> Result<()> {
     let feeder = std::thread::spawn(move || {
         let mut prev = 0.0f64;
         for (i, e) in entries.into_iter().enumerate() {
-            let gap = ((e.at_s - prev) / time_scale).max(0.0);
+            // `from_jsonl` rejects out-of-order and non-finite `at_s`
+            // and `set_time_scale` rejects non-positive scales, so the
+            // gap is a real non-negative delay — the old `.max(0.0)`
+            // clamp here silently reordered unsorted traces instead of
+            // surfacing them.
+            let gap = (e.at_s - prev) / time_scale;
+            debug_assert!(gap.is_finite() && gap >= 0.0, "gap {gap}");
             prev = e.at_s;
             if gap > 0.0 {
                 std::thread::sleep(std::time::Duration::from_secs_f64(

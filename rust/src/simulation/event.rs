@@ -237,6 +237,13 @@ impl FedEventQueue {
     pub fn pop(&mut self) -> Option<FedScheduledEvent> {
         self.heap.pop().map(|Reverse(e)| e)
     }
+
+    /// Peek at the earliest event without removing it — the streaming
+    /// arrival pump compares the next source arrival against this to
+    /// decide whether it is due for admission.
+    pub fn peek(&self) -> Option<&FedScheduledEvent> {
+        self.heap.peek().map(|Reverse(e)| e)
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,388 @@
+//! Alibaba-cluster-trace-v2017-shaped column adapters.
+//!
+//! The 2017 trace ships workload and machine membership as separate
+//! headerless CSV tables; these readers map each onto the repo's
+//! trace interfaces:
+//!
+//! * `batch_task.csv` → [`AlibabaTaskReader`] ([`WorkloadTrace`]).
+//!   Columns: `start_ts,end_ts,job_id,task_id,instance_num,status,
+//!   plan_cpu,plan_mem`. `plan_cpu` is percent-of-one-core (50 = half
+//!   a core), i.e. `plan_cpu × 10` millicores, snapped to the nearest
+//!   paper class (Light 200 m / Medium 500 m / Complex 1000 m, ties to
+//!   the smaller); work size is `end_ts - start_ts` rebased into
+//!   epochs at 100 s per epoch; `instance_num` expands a task row into
+//!   that many identical submissions. Timestamps are rebased to the
+//!   first task's `start_ts`.
+//! * `machine_events.csv` → [`AlibabaMachineReader`] ([`ClusterTrace`]).
+//!   Columns: `timestamp,machine_id,event_type` with `add` = up and
+//!   `remove`/`softerror`/`harderror` = down, rebased to the table's
+//!   own first timestamp. Feed the result through
+//!   [`machine_events_to_node_changes`] to target a simulated cluster.
+//!
+//! Rows with empty essential fields (the public trace has gaps) are
+//! skipped and counted — check [`AlibabaTaskReader::skipped`] after
+//! draining rather than treating the trace as complete.
+//!
+//! [`machine_events_to_node_changes`]: super::machine_events_to_node_changes
+
+use std::collections::VecDeque;
+use std::io::BufRead;
+
+use super::interface::{ClusterTrace, MachineEvent, WorkloadTrace};
+use crate::workload::{TraceEntry, WorkloadClass};
+
+/// Seconds of traced runtime mapped to one simulated epoch.
+const SECS_PER_EPOCH: f64 = 100.0;
+
+/// Snap a millicore request to the nearest paper class (ties to the
+/// smaller class — the energy-conservative choice).
+fn class_for_millis(millis: f64) -> WorkloadClass {
+    let mut best = WorkloadClass::Light;
+    let mut best_d = (millis - 200.0).abs();
+    for (class, m) in
+        [(WorkloadClass::Medium, 500.0), (WorkloadClass::Complex, 1000.0)]
+    {
+        let d = (millis - m).abs();
+        if d < best_d {
+            best = class;
+            best_d = d;
+        }
+    }
+    best
+}
+
+fn field<'a>(
+    fields: &[&'a str],
+    idx: usize,
+    name: &str,
+) -> anyhow::Result<&'a str> {
+    fields.get(idx).copied().ok_or_else(|| {
+        anyhow::anyhow!("missing column {idx} ({name})")
+    })
+}
+
+/// Streaming reader over an Alibaba `batch_task` table.
+pub struct AlibabaTaskReader<R: BufRead> {
+    reader: R,
+    line: String,
+    line_no: usize,
+    /// Trace epoch: the first task's `start_ts`.
+    base_ts: Option<f64>,
+    last_at: f64,
+    /// Expanded instances of the current task row.
+    pending: VecDeque<TraceEntry>,
+    peak: usize,
+    skipped: usize,
+    done: bool,
+}
+
+impl<R: BufRead> AlibabaTaskReader<R> {
+    pub fn new(reader: R) -> Self {
+        Self {
+            reader,
+            line: String::new(),
+            line_no: 0,
+            base_ts: None,
+            last_at: 0.0,
+            pending: VecDeque::new(),
+            peak: 0,
+            skipped: 0,
+            done: false,
+        }
+    }
+
+    /// Rows dropped for empty essential fields so far.
+    pub fn skipped(&self) -> usize {
+        self.skipped
+    }
+
+    /// Parse one task row into its expanded instances, or `None` if
+    /// the row has gaps and should be skipped.
+    fn parse_row(&mut self, row: &str) -> anyhow::Result<Option<()>> {
+        let fields: Vec<&str> = row.split(',').map(str::trim).collect();
+        let start = field(&fields, 0, "start_ts")?;
+        let end = field(&fields, 1, "end_ts")?;
+        let instances = field(&fields, 4, "instance_num")?;
+        let plan_cpu = field(&fields, 6, "plan_cpu")?;
+        if start.is_empty()
+            || end.is_empty()
+            || instances.is_empty()
+            || plan_cpu.is_empty()
+        {
+            self.skipped += 1;
+            return Ok(None);
+        }
+        let start: f64 = start
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad start_ts `{start}`: {e}"))?;
+        let end: f64 = end
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad end_ts `{end}`: {e}"))?;
+        let instances: usize = instances.parse().map_err(|e| {
+            anyhow::anyhow!("bad instance_num `{instances}`: {e}")
+        })?;
+        let plan_cpu: f64 = plan_cpu.parse().map_err(|e| {
+            anyhow::anyhow!("bad plan_cpu `{plan_cpu}`: {e}")
+        })?;
+        anyhow::ensure!(
+            start.is_finite() && end.is_finite() && end >= start,
+            "task runs backwards: start_ts {start}, end_ts {end}"
+        );
+        anyhow::ensure!(
+            plan_cpu.is_finite() && plan_cpu >= 0.0,
+            "`plan_cpu` must be finite and non-negative, got {plan_cpu}"
+        );
+        let base = *self.base_ts.get_or_insert(start);
+        let at_s = start - base;
+        anyhow::ensure!(
+            at_s >= 0.0 && at_s >= self.last_at,
+            "start_ts {start} is out of order — sort the task table by \
+             start_ts first"
+        );
+        let epochs_f = ((end - start) / SECS_PER_EPOCH).round().max(1.0);
+        anyhow::ensure!(
+            epochs_f <= f64::from(u32::MAX),
+            "task duration {} s does not fit the epoch budget",
+            end - start
+        );
+        // Lossless by the bound just checked.
+        let epochs = epochs_f as u32;
+        let class = class_for_millis(plan_cpu * 10.0);
+        self.last_at = at_s;
+        for _ in 0..instances {
+            self.pending.push_back(TraceEntry { at_s, class, epochs });
+        }
+        self.peak = self.peak.max(self.pending.len());
+        Ok(Some(()))
+    }
+}
+
+impl<R: BufRead> WorkloadTrace for AlibabaTaskReader<R> {
+    fn next_entry(&mut self) -> anyhow::Result<Option<TraceEntry>> {
+        while self.pending.is_empty() && !self.done {
+            self.line.clear();
+            let n = self.reader.read_line(&mut self.line).map_err(|e| {
+                anyhow::anyhow!(
+                    "task table line {}: read error: {e}",
+                    self.line_no + 1
+                )
+            })?;
+            if n == 0 {
+                self.done = true;
+                break;
+            }
+            self.line_no += 1;
+            let row = self.line.trim().to_string();
+            if row.is_empty() || row.starts_with('#') {
+                continue;
+            }
+            self.parse_row(&row).map_err(|e| {
+                anyhow::anyhow!("task table line {}: {e}", self.line_no)
+            })?;
+        }
+        Ok(self.pending.pop_front())
+    }
+
+    fn peak_buffered(&self) -> usize {
+        self.peak
+    }
+}
+
+/// Streaming reader over an Alibaba `machine_events` table.
+pub struct AlibabaMachineReader<R: BufRead> {
+    reader: R,
+    line: String,
+    line_no: usize,
+    base_ts: Option<f64>,
+    done: bool,
+}
+
+impl<R: BufRead> AlibabaMachineReader<R> {
+    pub fn new(reader: R) -> Self {
+        Self {
+            reader,
+            line: String::new(),
+            line_no: 0,
+            base_ts: None,
+            done: false,
+        }
+    }
+
+    fn parse_row(&mut self, row: &str) -> anyhow::Result<MachineEvent> {
+        let fields: Vec<&str> = row.split(',').map(str::trim).collect();
+        let ts = field(&fields, 0, "timestamp")?;
+        let machine = field(&fields, 1, "machine_id")?;
+        let event = field(&fields, 2, "event_type")?;
+        let ts: f64 = ts
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad timestamp `{ts}`: {e}"))?;
+        anyhow::ensure!(ts.is_finite(), "non-finite timestamp {ts}");
+        anyhow::ensure!(!machine.is_empty(), "empty machine_id");
+        let up = match event.to_ascii_lowercase().as_str() {
+            "add" => true,
+            "remove" | "softerror" | "harderror" => false,
+            other => anyhow::bail!("unknown event_type `{other}`"),
+        };
+        let base = *self.base_ts.get_or_insert(ts);
+        let at_s = ts - base;
+        anyhow::ensure!(
+            at_s >= 0.0,
+            "timestamp {ts} is out of order — sort the event table first"
+        );
+        Ok(MachineEvent { at_s, machine: machine.to_string(), up })
+    }
+}
+
+impl<R: BufRead> ClusterTrace for AlibabaMachineReader<R> {
+    fn next_event(&mut self) -> anyhow::Result<Option<MachineEvent>> {
+        while !self.done {
+            self.line.clear();
+            let n = self.reader.read_line(&mut self.line).map_err(|e| {
+                anyhow::anyhow!(
+                    "machine table line {}: read error: {e}",
+                    self.line_no + 1
+                )
+            })?;
+            if n == 0 {
+                self.done = true;
+                break;
+            }
+            self.line_no += 1;
+            let row = self.line.trim().to_string();
+            if row.is_empty() || row.starts_with('#') {
+                continue;
+            }
+            return self
+                .parse_row(&row)
+                .map(Some)
+                .map_err(|e| {
+                    anyhow::anyhow!(
+                        "machine table line {}: {e}",
+                        self.line_no
+                    )
+                });
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulation::NodeChange;
+    use crate::trace::machine_events_to_node_changes;
+
+    fn tasks(text: &str) -> AlibabaTaskReader<&[u8]> {
+        AlibabaTaskReader::new(text.as_bytes())
+    }
+
+    fn drain(r: &mut dyn WorkloadTrace) -> Vec<TraceEntry> {
+        let mut out = Vec::new();
+        while let Some(e) = r.next_entry().unwrap() {
+            out.push(e);
+        }
+        out
+    }
+
+    #[test]
+    fn task_rows_map_to_classes_epochs_and_rebased_times() {
+        // start,end,job,task,instances,status,plan_cpu,plan_mem
+        let text = "\
+100,300,j1,t1,1,Terminated,25,0.5
+160,1260,j1,t2,2,Terminated,55,1.0
+200,250,j2,t1,1,Terminated,100,2.0
+";
+        let entries = drain(&mut tasks(text));
+        // Row 2 expands to two instances.
+        assert_eq!(entries.len(), 4);
+        // Rebased to the first start_ts (100).
+        assert_eq!(entries[0].at_s, 0.0);
+        assert_eq!(entries[1].at_s, 60.0);
+        assert_eq!(entries[2].at_s, 60.0);
+        assert_eq!(entries[3].at_s, 100.0);
+        // 25 → 250 m → Light; 55 → 550 m → Medium; 100 → 1000 m → Complex.
+        assert_eq!(entries[0].class, WorkloadClass::Light);
+        assert_eq!(entries[1].class, WorkloadClass::Medium);
+        assert_eq!(entries[3].class, WorkloadClass::Complex);
+        // 200 s → 2 epochs; 1100 s → 11; 50 s rounds to 1 (floor at 1).
+        assert_eq!(entries[0].epochs, 2);
+        assert_eq!(entries[1].epochs, 11);
+        assert_eq!(entries[3].epochs, 1);
+    }
+
+    #[test]
+    fn class_snap_ties_go_to_the_smaller_class() {
+        // 350 m is equidistant from 200 and 500; 750 m from 500 and 1000.
+        assert_eq!(class_for_millis(350.0), WorkloadClass::Light);
+        assert_eq!(class_for_millis(750.0), WorkloadClass::Medium);
+        assert_eq!(class_for_millis(0.0), WorkloadClass::Light);
+        assert_eq!(class_for_millis(5000.0), WorkloadClass::Complex);
+    }
+
+    #[test]
+    fn gappy_rows_are_skipped_and_counted() {
+        let text = "\
+100,300,j1,t1,1,Terminated,25,0.5
+110,,j1,t2,1,Waiting,,0.5
+120,280,j1,t3,1,Terminated,30,0.5
+";
+        let mut r = tasks(text);
+        let entries = drain(&mut r);
+        assert_eq!(entries.len(), 2);
+        assert_eq!(r.skipped(), 1);
+    }
+
+    #[test]
+    fn malformed_task_rows_carry_line_numbers() {
+        let err = tasks("100,300,j1,t1,1,T,abc,0.5\n")
+            .next_entry()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("task table line 1"), "{err}");
+        assert!(err.contains("bad plan_cpu"), "{err}");
+        // Out of order after rebase.
+        let text = "200,300,j1,t1,1,T,25,0.5\n100,300,j1,t2,1,T,25,0.5\n";
+        let mut r = tasks(text);
+        assert!(r.next_entry().is_ok());
+        let err = r.next_entry().unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("out of order"), "{err}");
+        // Backwards task.
+        let err = tasks("100,50,j1,t1,1,T,25,0.5\n")
+            .next_entry()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("runs backwards"), "{err}");
+    }
+
+    #[test]
+    fn machine_events_parse_rebase_and_feed_node_changes() {
+        let text = "\
+5000,m_1,add
+5000,m_2,add
+5100,m_1,softerror
+5200,m_1,add
+5300,m_2,remove
+5400,m_3,harderror
+";
+        let mut r = AlibabaMachineReader::new(text.as_bytes());
+        let changes = machine_events_to_node_changes(&mut r, 2).unwrap();
+        // m_1/m_2 baseline adds emit nothing; m_3 is beyond node_count.
+        assert_eq!(
+            changes,
+            vec![
+                NodeChange { at_s: 100.0, node: 0, up: false },
+                NodeChange { at_s: 200.0, node: 0, up: true },
+                NodeChange { at_s: 300.0, node: 1, up: false },
+            ]
+        );
+    }
+
+    #[test]
+    fn unknown_machine_event_rejected() {
+        let mut r = AlibabaMachineReader::new("5000,m_1,explode\n".as_bytes());
+        let err = r.next_event().unwrap_err().to_string();
+        assert!(err.contains("machine table line 1"), "{err}");
+        assert!(err.contains("unknown event_type"), "{err}");
+    }
+}

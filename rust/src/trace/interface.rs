@@ -1,0 +1,196 @@
+//! The trace interfaces: workload traces (pod submissions) and
+//! cluster traces (machine-membership events) are separate streams —
+//! the Alibaba trace ships them as separate tables, and the engine
+//! consumes them through separate channels (an [`ArrivalSource`] vs
+//! `RegionSpec::with_node_events`).
+//!
+//! Both interfaces are pull-based and fallible: a streaming reader
+//! surfaces I/O and parse errors on the entry they occur at, not at
+//! open time. Workload implementations also report their buffering
+//! high-water mark so the bounded-memory property can assert that a
+//! chunked reader never held more than its chunk.
+//!
+//! [`ArrivalSource`]: crate::federation::ArrivalSource
+
+use std::collections::BTreeMap;
+
+use crate::cluster::NodeId;
+use crate::simulation::NodeChange;
+use crate::workload::TraceEntry;
+
+/// A pull-based stream of [`TraceEntry`]s in nondecreasing `at_s`
+/// order. The ordering contract is the producer's: readers validate
+/// it line by line, and the engine re-validates at admission.
+pub trait WorkloadTrace {
+    /// The next entry, or `Ok(None)` once the trace is exhausted.
+    fn next_entry(&mut self) -> anyhow::Result<Option<TraceEntry>>;
+
+    /// High-water mark of entries this trace has held in memory at
+    /// once. A streaming reader reports its chunk occupancy; an
+    /// in-memory trace reports its full length.
+    fn peak_buffered(&self) -> usize;
+}
+
+/// A `&mut` to a workload trace is itself a workload trace, so
+/// adapters like [`DownSampler`] can borrow or own interchangeably.
+///
+/// [`DownSampler`]: super::DownSampler
+impl<W: WorkloadTrace + ?Sized> WorkloadTrace for &mut W {
+    fn next_entry(&mut self) -> anyhow::Result<Option<TraceEntry>> {
+        (**self).next_entry()
+    }
+
+    fn peak_buffered(&self) -> usize {
+        (**self).peak_buffered()
+    }
+}
+
+/// One machine-membership transition in a cluster trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineEvent {
+    /// Seconds since the trace epoch.
+    pub at_s: f64,
+    /// Trace-native machine identifier (opaque string).
+    pub machine: String,
+    /// `true` = the machine (re)joined, `false` = it left or failed.
+    pub up: bool,
+}
+
+/// A pull-based stream of [`MachineEvent`]s in nondecreasing `at_s`
+/// order.
+pub trait ClusterTrace {
+    /// The next event, or `Ok(None)` once the trace is exhausted.
+    fn next_event(&mut self) -> anyhow::Result<Option<MachineEvent>>;
+}
+
+/// An already-materialized workload trace — the degenerate
+/// implementation differential tests pin streaming against.
+pub struct InMemoryTrace {
+    entries: std::vec::IntoIter<TraceEntry>,
+    len: usize,
+}
+
+impl InMemoryTrace {
+    /// Wrap `entries` (must already be in nondecreasing `at_s` order,
+    /// as `ArrivalTrace` guarantees for its own constructors).
+    pub fn new(entries: Vec<TraceEntry>) -> Self {
+        let len = entries.len();
+        Self { entries: entries.into_iter(), len }
+    }
+}
+
+impl WorkloadTrace for InMemoryTrace {
+    fn next_entry(&mut self) -> anyhow::Result<Option<TraceEntry>> {
+        Ok(self.entries.next())
+    }
+
+    fn peak_buffered(&self) -> usize {
+        self.len
+    }
+}
+
+/// Map a cluster trace's machine events onto the simulated cluster's
+/// node indices: the first `node_count` distinct machine ids seen are
+/// assigned node ids in first-seen order, events for later machines
+/// are dropped (the replayed cluster is smaller than the traced one),
+/// and only *transitions* are emitted — a machine's initial `add` is
+/// its baseline (the simulated node already exists), and repeated
+/// same-direction events are collapsed.
+pub fn machine_events_to_node_changes(
+    trace: &mut dyn ClusterTrace,
+    node_count: usize,
+) -> anyhow::Result<Vec<NodeChange>> {
+    let mut index: BTreeMap<String, (NodeId, bool)> = BTreeMap::new();
+    let mut changes = Vec::new();
+    while let Some(ev) = trace.next_event()? {
+        anyhow::ensure!(
+            ev.at_s.is_finite() && ev.at_s >= 0.0,
+            "machine event for {} has invalid time {}",
+            ev.machine,
+            ev.at_s
+        );
+        if !index.contains_key(&ev.machine) {
+            if index.len() >= node_count {
+                continue;
+            }
+            // First sighting: the simulated node starts up, so an
+            // initial `add` is a no-op baseline and an initial
+            // `remove` is a real transition.
+            let id = index.len();
+            index.insert(ev.machine.clone(), (id, true));
+        }
+        let (node, state) =
+            index.get_mut(&ev.machine).expect("machine indexed above");
+        if ev.up != *state {
+            *state = ev.up;
+            changes.push(NodeChange { at_s: ev.at_s, node: *node, up: ev.up });
+        }
+    }
+    Ok(changes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadClass;
+
+    struct VecClusterTrace(std::vec::IntoIter<MachineEvent>);
+
+    impl ClusterTrace for VecClusterTrace {
+        fn next_event(&mut self) -> anyhow::Result<Option<MachineEvent>> {
+            Ok(self.0.next())
+        }
+    }
+
+    fn ev(at_s: f64, machine: &str, up: bool) -> MachineEvent {
+        MachineEvent { at_s, machine: machine.into(), up }
+    }
+
+    #[test]
+    fn in_memory_trace_streams_and_reports_len() {
+        let entries = vec![
+            TraceEntry { at_s: 0.5, class: WorkloadClass::Light, epochs: 2 },
+            TraceEntry { at_s: 1.5, class: WorkloadClass::Medium, epochs: 4 },
+        ];
+        let mut t = InMemoryTrace::new(entries);
+        assert_eq!(t.peak_buffered(), 2);
+        assert_eq!(t.next_entry().unwrap().unwrap().at_s, 0.5);
+        assert_eq!(t.next_entry().unwrap().unwrap().at_s, 1.5);
+        assert!(t.next_entry().unwrap().is_none());
+        // Exhaustion does not change the high-water mark.
+        assert_eq!(t.peak_buffered(), 2);
+    }
+
+    #[test]
+    fn machine_events_index_transition_and_truncate() {
+        let events = vec![
+            ev(0.0, "m_a", true),  // baseline add: no change emitted
+            ev(1.0, "m_b", true),  // baseline add
+            ev(2.0, "m_a", false), // real transition: node 0 down
+            ev(2.0, "m_a", false), // repeat collapsed
+            ev(3.0, "m_c", false), // first sighting as down: transition
+            ev(4.0, "m_d", true),  // beyond node_count: dropped
+            ev(5.0, "m_a", true),  // node 0 back up
+        ];
+        let mut trace = VecClusterTrace(events.into_iter());
+        let changes = machine_events_to_node_changes(&mut trace, 3).unwrap();
+        assert_eq!(
+            changes,
+            vec![
+                NodeChange { at_s: 2.0, node: 0, up: false },
+                NodeChange { at_s: 3.0, node: 2, up: false },
+                NodeChange { at_s: 5.0, node: 0, up: true },
+            ]
+        );
+    }
+
+    #[test]
+    fn machine_events_reject_invalid_time() {
+        let mut trace =
+            VecClusterTrace(vec![ev(f64::NAN, "m", true)].into_iter());
+        let err = machine_events_to_node_changes(&mut trace, 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("invalid time"), "{err}");
+    }
+}

@@ -1,0 +1,55 @@
+//! Trace replay (DESIGN.md §"Trace replay"): a generic trace
+//! interface decoupling *workload* traces (pod submissions) from
+//! *cluster* traces (machine-membership events), with streaming
+//! ingestion so multi-million-pod traces replay through the federation
+//! engine without ever materializing a pod vector.
+//!
+//! The pieces, bottom-up:
+//!
+//! * [`WorkloadTrace`] / [`ClusterTrace`] — the pull-based interfaces.
+//!   A workload trace yields [`TraceEntry`]s in nondecreasing `at_s`
+//!   order; a cluster trace yields [`MachineEvent`]s. Every
+//!   implementation reports its buffering high-water mark
+//!   ([`WorkloadTrace::peak_buffered`]) — what the bounded-memory
+//!   property asserts against the chunk size.
+//! * [`ChunkedTraceReader`] — the streaming ingester: JSONL or CSV,
+//!   pulled through a bounded chunk buffer, every malformed /
+//!   non-finite / out-of-order line rejected with its line number
+//!   (the same contract as `ArrivalTrace::from_jsonl`, minus the
+//!   materialized vector).
+//! * [`StreamArrivals`] — adapts any workload trace into the engine's
+//!   [`ArrivalSource`], assigning sequential pod ids and per-index
+//!   scheduler ownership exactly like `ArrivalTrace::to_pods` /
+//!   `to_pods_round_robin`, so streaming replay is bit-identical to
+//!   the eager path on the same entries.
+//! * [`AlibabaTaskReader`] / [`AlibabaMachineReader`] — a column
+//!   adapter for Alibaba-cluster-trace-v2017-shaped CSVs (batch task
+//!   table + machine event table).
+//! * [`DownSampler`] — seeded deterministic per-class k-slicing, with
+//!   [`crate::config::ClusterConfig::downsampled`] as the
+//!   capacity-side companion.
+//! * [`fit_marginals`] / [`SynthTrace`] — trace synthesis: fit a
+//!   [`TraceSpec`] (rate, class mix, burst shape) to a trace's
+//!   marginals in one streaming pass, then generate an arbitrarily
+//!   long synthetic trace bit-identical to `ArrivalTrace::poisson` /
+//!   `bursty` on the same spec and seed — but streamed, entry by
+//!   entry.
+//!
+//! [`ArrivalSource`]: crate::federation::ArrivalSource
+//! [`TraceEntry`]: crate::workload::TraceEntry
+//! [`TraceSpec`]: crate::workload::TraceSpec
+
+mod alibaba;
+mod interface;
+mod sample;
+mod stream;
+mod synth;
+
+pub use alibaba::{AlibabaMachineReader, AlibabaTaskReader};
+pub use interface::{
+    machine_events_to_node_changes, ClusterTrace, InMemoryTrace,
+    MachineEvent, WorkloadTrace,
+};
+pub use sample::DownSampler;
+pub use stream::{ChunkedTraceReader, StreamArrivals, TraceFormat, TraceOwnership};
+pub use synth::{fit_marginals, SynthTrace, TraceFit};

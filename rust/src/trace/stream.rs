@@ -1,0 +1,393 @@
+//! Streaming chunked ingestion: JSONL/CSV → entry stream → engine
+//! events, without ever materializing the trace.
+//!
+//! [`ChunkedTraceReader`] pulls lines through a bounded chunk buffer
+//! (the bounded-memory property asserts `peak_buffered() <= chunk`),
+//! applying the exact validation contract of
+//! `ArrivalTrace::from_jsonl`: malformed, non-finite, negative and
+//! out-of-order timestamps are rejected with their line number at the
+//! entry they occur on. [`StreamArrivals`] then adapts any
+//! [`WorkloadTrace`] into the engine's [`ArrivalSource`], assigning
+//! sequential pod ids and per-index ownership exactly like
+//! `ArrivalTrace::to_pods` / `to_pods_round_robin` — which is what
+//! makes streaming replay bit-identical to the eager path.
+//!
+//! [`ArrivalSource`]: crate::federation::ArrivalSource
+
+use std::collections::VecDeque;
+use std::io::BufRead;
+use std::str::FromStr;
+
+use super::interface::WorkloadTrace;
+use crate::cluster::Pod;
+use crate::config::SchedulerKind;
+use crate::federation::ArrivalSource;
+use crate::util::json::Json;
+use crate::workload::TraceEntry;
+
+/// On-disk trace encodings the chunked reader understands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// One `TraceEntry` JSON object per line (`ArrivalTrace::to_jsonl`).
+    Jsonl,
+    /// Comma-separated with a `at_s,class[,epochs]` header line.
+    Csv,
+}
+
+impl TraceFormat {
+    /// Infer the format from a file extension (`.jsonl` / `.csv`).
+    pub fn from_path(path: &str) -> anyhow::Result<Self> {
+        match path.rsplit('.').next() {
+            Some("jsonl") => Ok(Self::Jsonl),
+            Some("csv") => Ok(Self::Csv),
+            _ => anyhow::bail!(
+                "cannot infer trace format from `{path}` — expected a \
+                 .jsonl or .csv extension (or pass --format)"
+            ),
+        }
+    }
+}
+
+impl FromStr for TraceFormat {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "jsonl" => Ok(Self::Jsonl),
+            "csv" => Ok(Self::Csv),
+            other => {
+                anyhow::bail!("unknown trace format `{other}` (jsonl|csv)")
+            }
+        }
+    }
+}
+
+/// A streaming trace reader: pulls `chunk` lines at a time from any
+/// [`BufRead`], so a multi-million-entry trace replays with at most
+/// `chunk` entries resident.
+pub struct ChunkedTraceReader<R: BufRead> {
+    reader: R,
+    format: TraceFormat,
+    chunk: usize,
+    buf: VecDeque<TraceEntry>,
+    line: String,
+    line_no: usize,
+    last_at: f64,
+    peak: usize,
+    header_seen: bool,
+    done: bool,
+}
+
+impl ChunkedTraceReader<std::io::BufReader<std::fs::File>> {
+    /// Open `path`, inferring the format from its extension.
+    pub fn open(path: &str, chunk: usize) -> anyhow::Result<Self> {
+        let format = TraceFormat::from_path(path)?;
+        let file = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("open trace `{path}`: {e}"))?;
+        Self::new(std::io::BufReader::new(file), format, chunk)
+    }
+}
+
+impl<R: BufRead> ChunkedTraceReader<R> {
+    pub fn new(reader: R, format: TraceFormat, chunk: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(chunk > 0, "trace chunk size must be positive");
+        Ok(Self {
+            reader,
+            format,
+            chunk,
+            buf: VecDeque::new(),
+            line: String::new(),
+            line_no: 0,
+            last_at: 0.0,
+            peak: 0,
+            header_seen: false,
+            done: false,
+        })
+    }
+
+    /// Pull lines until the chunk buffer is full or the input ends.
+    fn refill(&mut self) -> anyhow::Result<()> {
+        while self.buf.len() < self.chunk && !self.done {
+            self.line.clear();
+            let n = self.reader.read_line(&mut self.line).map_err(|e| {
+                anyhow::anyhow!("trace line {}: read error: {e}", self.line_no + 1)
+            })?;
+            if n == 0 {
+                self.done = true;
+                break;
+            }
+            self.line_no += 1;
+            let line = self.line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if self.format == TraceFormat::Csv && !self.header_seen {
+                self.header_seen = true;
+                Self::check_csv_header(line)
+                    .map_err(|e| anyhow::anyhow!("trace line {}: {e}", self.line_no))?;
+                continue;
+            }
+            let entry = match self.format {
+                TraceFormat::Jsonl => {
+                    Json::parse(line).and_then(|v| TraceEntry::from_json(&v))
+                }
+                TraceFormat::Csv => Self::parse_csv_row(line),
+            }
+            .map_err(|e| anyhow::anyhow!("trace line {}: {e}", self.line_no))?;
+            anyhow::ensure!(
+                entry.at_s >= self.last_at,
+                "trace line {}: at_s {} is out of order (previous entry \
+                 at {}) — sort the trace by at_s first",
+                self.line_no,
+                entry.at_s,
+                self.last_at
+            );
+            self.last_at = entry.at_s;
+            self.buf.push_back(entry);
+            self.peak = self.peak.max(self.buf.len());
+        }
+        Ok(())
+    }
+
+    fn check_csv_header(line: &str) -> anyhow::Result<()> {
+        let cols: Vec<&str> = line.split(',').map(str::trim).collect();
+        anyhow::ensure!(
+            cols == ["at_s", "class"] || cols == ["at_s", "class", "epochs"],
+            "bad CSV header `{line}` — expected `at_s,class[,epochs]`"
+        );
+        Ok(())
+    }
+
+    fn parse_csv_row(line: &str) -> anyhow::Result<TraceEntry> {
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        anyhow::ensure!(
+            fields.len() == 2 || fields.len() == 3,
+            "expected 2 or 3 CSV fields, got {}",
+            fields.len()
+        );
+        let at_s: f64 = fields[0]
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad at_s `{}`: {e}", fields[0]))?;
+        anyhow::ensure!(
+            at_s.is_finite() && at_s >= 0.0,
+            "`at_s` must be finite and non-negative, got {at_s}"
+        );
+        let epochs = match fields.get(2) {
+            None => 2,
+            Some(f) => f
+                .parse::<u32>()
+                .map_err(|e| anyhow::anyhow!("bad epochs `{f}`: {e}"))?,
+        };
+        Ok(TraceEntry { at_s, class: fields[1].parse()?, epochs })
+    }
+}
+
+impl<R: BufRead> WorkloadTrace for ChunkedTraceReader<R> {
+    fn next_entry(&mut self) -> anyhow::Result<Option<TraceEntry>> {
+        if self.buf.is_empty() {
+            self.refill()?;
+        }
+        Ok(self.buf.pop_front())
+    }
+
+    fn peak_buffered(&self) -> usize {
+        self.peak
+    }
+}
+
+/// How streamed pods are assigned to schedulers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceOwnership {
+    /// Every pod owned by one scheduler (`ArrivalTrace::to_pods`).
+    Fixed(SchedulerKind),
+    /// Even index → TOPSIS, odd → default
+    /// (`ArrivalTrace::to_pods_round_robin` and the `serve` split).
+    RoundRobin,
+}
+
+/// Adapts a [`WorkloadTrace`] into the engine's [`ArrivalSource`],
+/// assigning sequential ids from 0 — the exact pods the eager
+/// materializers build, one at a time.
+///
+/// [`ArrivalSource`]: crate::federation::ArrivalSource
+pub struct StreamArrivals<W: WorkloadTrace> {
+    trace: W,
+    ownership: TraceOwnership,
+    next_id: u64,
+    pending: Option<Pod>,
+}
+
+impl<W: WorkloadTrace> StreamArrivals<W> {
+    pub fn new(trace: W, ownership: TraceOwnership) -> Self {
+        Self { trace, ownership, next_id: 0, pending: None }
+    }
+
+    /// Buffering high-water mark of the underlying trace.
+    pub fn peak_buffered(&self) -> usize {
+        self.trace.peak_buffered()
+    }
+
+    fn fill(&mut self) -> anyhow::Result<()> {
+        if self.pending.is_none() {
+            if let Some(e) = self.trace.next_entry()? {
+                let kind = match self.ownership {
+                    TraceOwnership::Fixed(k) => k,
+                    TraceOwnership::RoundRobin => {
+                        if self.next_id % 2 == 0 {
+                            SchedulerKind::Topsis
+                        } else {
+                            SchedulerKind::DefaultK8s
+                        }
+                    }
+                };
+                self.pending = Some(Pod::new(
+                    self.next_id,
+                    e.class,
+                    kind,
+                    e.at_s,
+                    e.epochs,
+                ));
+                self.next_id += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<W: WorkloadTrace> ArrivalSource for StreamArrivals<W> {
+    fn peek_at(&mut self) -> anyhow::Result<Option<f64>> {
+        self.fill()?;
+        Ok(self.pending.as_ref().map(|p| p.arrival_s))
+    }
+
+    fn next_pod(&mut self) -> anyhow::Result<Option<Pod>> {
+        self.fill()?;
+        Ok(self.pending.take())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{ArrivalTrace, TraceSpec};
+
+    fn reader(
+        text: &str,
+        format: TraceFormat,
+        chunk: usize,
+    ) -> ChunkedTraceReader<&[u8]> {
+        ChunkedTraceReader::new(text.as_bytes(), format, chunk).unwrap()
+    }
+
+    fn drain(
+        r: &mut dyn WorkloadTrace,
+    ) -> anyhow::Result<Vec<TraceEntry>> {
+        let mut out = Vec::new();
+        while let Some(e) = r.next_entry()? {
+            out.push(e);
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn jsonl_stream_matches_eager_parse_with_bounded_buffer() {
+        let spec = TraceSpec::surf_lisa(4.0, 200.0);
+        let trace = ArrivalTrace::poisson(&spec, 17);
+        let text = trace.to_jsonl();
+        let mut r = reader(&text, TraceFormat::Jsonl, 64);
+        let streamed = drain(&mut r).unwrap();
+        assert_eq!(streamed.len(), trace.entries.len());
+        for (s, e) in streamed.iter().zip(&trace.entries) {
+            assert_eq!(s.at_s, e.at_s);
+            assert_eq!(s.class, e.class);
+            assert_eq!(s.epochs, e.epochs);
+        }
+        assert!(r.peak_buffered() <= 64, "peak {}", r.peak_buffered());
+        assert!(trace.entries.len() > 64, "fixture too small to exercise chunking");
+    }
+
+    #[test]
+    fn csv_parses_with_and_without_epochs() {
+        let text = "at_s,class,epochs\n0.5,light,3\n1.0,complex,8\n";
+        let mut r = reader(text, TraceFormat::Csv, 16);
+        let entries = drain(&mut r).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].epochs, 3);
+        let text = "at_s,class\n# comment\n0.5,medium\n";
+        let mut r = reader(text, TraceFormat::Csv, 16);
+        let entries = drain(&mut r).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].epochs, 2); // default
+    }
+
+    #[test]
+    fn malformed_lines_carry_line_numbers() {
+        // Bad JSON on line 2.
+        let text = "{\"at_s\":0.5,\"class\":\"light\"}\nnot json\n";
+        let mut r = reader(text, TraceFormat::Jsonl, 8);
+        assert!(r.next_entry().is_ok());
+        let err = r.next_entry().unwrap_err().to_string();
+        assert!(err.contains("trace line 2"), "{err}");
+        // Out-of-order across a chunk boundary (chunk = 1).
+        let text = "{\"at_s\":2.0,\"class\":\"light\"}\n\
+                    {\"at_s\":1.0,\"class\":\"light\"}\n";
+        let mut r = reader(text, TraceFormat::Jsonl, 1);
+        assert!(r.next_entry().is_ok());
+        let err = r.next_entry().unwrap_err().to_string();
+        assert!(err.contains("out of order"), "{err}");
+        // Bad CSV header.
+        let mut r = reader("time,kind\n0.5,light\n", TraceFormat::Csv, 8);
+        let err = r.next_entry().unwrap_err().to_string();
+        assert!(err.contains("bad CSV header"), "{err}");
+        // Negative / non-finite CSV timestamps.
+        let mut r = reader("at_s,class\n-1.0,light\n", TraceFormat::Csv, 8);
+        assert!(r.next_entry().is_err());
+        let mut r = reader("at_s,class\ninf,light\n", TraceFormat::Csv, 8);
+        assert!(r.next_entry().is_err());
+        // CSV epochs overflow is a parse error, not a truncation.
+        let big = format!("at_s,class,epochs\n0.5,light,{}\n", (1u64 << 32) + 7);
+        let mut r = reader(&big, TraceFormat::Csv, 8);
+        let err = r.next_entry().unwrap_err().to_string();
+        assert!(err.contains("bad epochs"), "{err}");
+    }
+
+    #[test]
+    fn stream_arrivals_matches_eager_materializers() {
+        let spec = TraceSpec::surf_lisa(2.0, 50.0);
+        let trace = ArrivalTrace::poisson(&spec, 9);
+        let eager = trace.to_pods_round_robin();
+        let mut src = StreamArrivals::new(
+            super::super::InMemoryTrace::new(trace.entries.clone()),
+            TraceOwnership::RoundRobin,
+        );
+        for want in &eager {
+            assert_eq!(src.peek_at().unwrap(), Some(want.arrival_s));
+            let got = src.next_pod().unwrap().unwrap();
+            assert_eq!(got.id, want.id);
+            assert_eq!(got.class, want.class);
+            assert_eq!(got.scheduler, want.scheduler);
+            assert_eq!(got.arrival_s, want.arrival_s);
+            assert_eq!(got.epochs, want.epochs);
+        }
+        assert!(src.next_pod().unwrap().is_none());
+        // Fixed ownership mirrors to_pods.
+        let eager = trace.to_pods(SchedulerKind::Topsis);
+        let mut src = StreamArrivals::new(
+            super::super::InMemoryTrace::new(trace.entries.clone()),
+            TraceOwnership::Fixed(SchedulerKind::Topsis),
+        );
+        for want in &eager {
+            let got = src.next_pod().unwrap().unwrap();
+            assert_eq!((got.id, got.scheduler), (want.id, want.scheduler));
+        }
+    }
+
+    #[test]
+    fn format_inference() {
+        assert_eq!(TraceFormat::from_path("a/b.jsonl").unwrap(), TraceFormat::Jsonl);
+        assert_eq!(TraceFormat::from_path("t.csv").unwrap(), TraceFormat::Csv);
+        assert!(TraceFormat::from_path("t.txt").is_err());
+        assert_eq!("csv".parse::<TraceFormat>().unwrap(), TraceFormat::Csv);
+        assert!("tsv".parse::<TraceFormat>().is_err());
+    }
+}

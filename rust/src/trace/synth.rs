@@ -1,0 +1,287 @@
+//! Trace synthesis: fit generator parameters to a trace's marginals,
+//! then stream an arbitrarily long synthetic trace from them.
+//!
+//! [`fit_marginals`] makes one streaming pass over any
+//! [`WorkloadTrace`] and recovers a [`TraceSpec`] — arrival rate from
+//! count over span, class mix from class frequencies, per-class
+//! epochs from the per-class mode — plus the burst shape (mean
+//! same-timestamp group size). [`SynthTrace`] then generates from a
+//! spec entry by entry, replicating `ArrivalTrace::poisson` /
+//! `bursty`'s RNG sequence *exactly*, so the synthetic stream is
+//! bit-identical to the eager generator on the same spec and seed
+//! while holding at most one burst in memory — this is what lets
+//! `greenpod trace replay --full` push a million-pod trace through
+//! the engine without materializing it.
+
+use std::collections::BTreeMap;
+
+use super::interface::WorkloadTrace;
+use super::sample::class_index;
+use crate::util::rng::Rng;
+use crate::workload::{TraceEntry, TraceSpec};
+
+/// Generator parameters recovered from a trace by [`fit_marginals`].
+#[derive(Debug, Clone)]
+pub struct TraceFit {
+    /// Rate, duration, class mix and per-class epochs.
+    pub spec: TraceSpec,
+    /// Mean same-timestamp group size, rounded (1 = no bursts).
+    pub burst_size: usize,
+    /// Entries in the fitted trace.
+    pub entries: usize,
+}
+
+/// Fit a [`TraceFit`] to a trace's marginals in one streaming pass.
+///
+/// Per-class epochs use the mode, smallest value winning ties
+/// (BTreeMap iteration order + strictly-greater replacement), so the
+/// fit is deterministic. Classes absent from the trace keep the
+/// paper's default epochs and get probability zero.
+pub fn fit_marginals(
+    trace: &mut dyn WorkloadTrace,
+) -> anyhow::Result<TraceFit> {
+    let mut counts = [0usize; 3];
+    let mut epoch_counts: [BTreeMap<u32, usize>; 3] = Default::default();
+    let mut groups = 0usize;
+    let mut last_at = -1.0;
+    while let Some(e) = trace.next_entry()? {
+        let i = class_index(e.class);
+        counts[i] += 1;
+        *epoch_counts[i].entry(e.epochs).or_insert(0) += 1;
+        if e.at_s != last_at {
+            groups += 1;
+            last_at = e.at_s;
+        }
+    }
+    let n = counts.iter().sum::<usize>();
+    anyhow::ensure!(n > 0, "cannot fit an empty trace");
+    anyhow::ensure!(
+        last_at > 0.0,
+        "cannot fit a rate: the trace spans zero seconds"
+    );
+    let mut epochs = [2u32, 4, 8];
+    for (slot, modes) in epochs.iter_mut().zip(&epoch_counts) {
+        let mut best: Option<(u32, usize)> = None;
+        for (&value, &count) in modes {
+            if best.is_none_or(|(_, c)| count > c) {
+                best = Some((value, count));
+            }
+        }
+        if let Some((value, _)) = best {
+            *slot = value;
+        }
+    }
+    Ok(TraceFit {
+        spec: TraceSpec {
+            rate_per_s: n as f64 / last_at,
+            duration_s: last_at,
+            p_light: counts[0] as f64 / n as f64,
+            p_medium: counts[1] as f64 / n as f64,
+            p_complex: counts[2] as f64 / n as f64,
+            epochs,
+        },
+        // Round half up: a trace of b-sized bursts has n/groups = b
+        // exactly, and mixed traces land on the nearest integer.
+        burst_size: (n + groups / 2) / groups,
+        entries: n,
+    })
+}
+
+/// A streaming generator over a [`TraceSpec`]: the same entries as
+/// `ArrivalTrace::poisson` / `bursty` (bit-identical — pinned by the
+/// differential tests below), produced one at a time with at most one
+/// burst buffered.
+pub struct SynthTrace {
+    spec: TraceSpec,
+    burst: usize,
+    rng: Rng,
+    t: f64,
+    pending: std::collections::VecDeque<TraceEntry>,
+    peak: usize,
+    done: bool,
+}
+
+impl SynthTrace {
+    /// Streaming counterpart of `ArrivalTrace::poisson`.
+    pub fn poisson(spec: TraceSpec, seed: u64) -> Self {
+        // A 1-burst bursty stream *is* a Poisson stream: the gap mean
+        // `1/rate` and the single class draw per arrival consume the
+        // RNG identically.
+        Self::bursty(spec, 1, seed)
+    }
+
+    /// Streaming counterpart of `ArrivalTrace::bursty`.
+    pub fn bursty(spec: TraceSpec, burst_size: usize, seed: u64) -> Self {
+        spec.assert_valid();
+        Self {
+            burst: burst_size.max(1),
+            rng: Rng::seed_from_u64(seed),
+            t: 0.0,
+            pending: std::collections::VecDeque::new(),
+            peak: 0,
+            done: false,
+            spec,
+        }
+    }
+
+    /// Generate from a fitted trace's parameters.
+    pub fn from_fit(fit: &TraceFit, seed: u64) -> Self {
+        Self::bursty(fit.spec.clone(), fit.burst_size, seed)
+    }
+}
+
+impl WorkloadTrace for SynthTrace {
+    fn next_entry(&mut self) -> anyhow::Result<Option<TraceEntry>> {
+        if self.pending.is_empty() && !self.done {
+            self.t += self
+                .rng
+                .exponential(self.burst as f64 / self.spec.rate_per_s);
+            if self.t > self.spec.duration_s {
+                self.done = true;
+            } else {
+                for _ in 0..self.burst {
+                    let (class, epochs) =
+                        self.spec.sample_class(&mut self.rng);
+                    self.pending.push_back(TraceEntry {
+                        at_s: self.t,
+                        class,
+                        epochs,
+                    });
+                }
+                self.peak = self.peak.max(self.pending.len());
+            }
+        }
+        Ok(self.pending.pop_front())
+    }
+
+    fn peak_buffered(&self) -> usize {
+        self.peak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::InMemoryTrace;
+    use crate::workload::{ArrivalTrace, WorkloadClass};
+
+    fn drain(t: &mut dyn WorkloadTrace) -> Vec<TraceEntry> {
+        let mut out = Vec::new();
+        while let Some(e) = t.next_entry().unwrap() {
+            out.push(e);
+        }
+        out
+    }
+
+    fn assert_bitwise_eq(a: &[TraceEntry], b: &[TraceEntry]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.at_s.to_bits(), y.at_s.to_bits());
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.epochs, y.epochs);
+        }
+    }
+
+    #[test]
+    fn synth_poisson_bit_identical_to_eager() {
+        let spec = TraceSpec::surf_lisa(3.0, 300.0);
+        let eager = ArrivalTrace::poisson(&spec, 42);
+        let mut synth = SynthTrace::poisson(spec, 42);
+        let streamed = drain(&mut synth);
+        assert_bitwise_eq(&streamed, &eager.entries);
+        assert_eq!(synth.peak_buffered(), 1);
+    }
+
+    #[test]
+    fn synth_bursty_bit_identical_to_eager() {
+        let spec = TraceSpec::surf_lisa(3.0, 300.0);
+        let eager = ArrivalTrace::bursty(&spec, 5, 11);
+        let mut synth = SynthTrace::bursty(spec, 5, 11);
+        let streamed = drain(&mut synth);
+        assert_bitwise_eq(&streamed, &eager.entries);
+        // At most one burst resident at a time.
+        assert_eq!(synth.peak_buffered(), 5);
+    }
+
+    #[test]
+    fn fit_recovers_bursty_marginals() {
+        let spec = TraceSpec::surf_lisa(4.0, 500.0);
+        let trace = ArrivalTrace::bursty(&spec, 4, 13);
+        let n = trace.entries.len();
+        let fit = fit_marginals(&mut InMemoryTrace::new(trace.entries))
+            .unwrap();
+        assert_eq!(fit.entries, n);
+        assert_eq!(fit.burst_size, 4);
+        assert_eq!(fit.spec.epochs, [2, 4, 8]);
+        assert!(
+            (fit.spec.rate_per_s - 4.0).abs() < 0.8,
+            "rate {}",
+            fit.spec.rate_per_s
+        );
+        assert!(
+            (fit.spec.p_light - 0.8668).abs() < 0.05,
+            "p_light {}",
+            fit.spec.p_light
+        );
+        // The fitted spec generates a valid stream of similar size.
+        let resynth = drain(&mut SynthTrace::from_fit(&fit, 99));
+        let m = resynth.len() as f64;
+        assert!((m - n as f64).abs() < 0.35 * n as f64, "resynth {m} vs {n}");
+    }
+
+    #[test]
+    fn fit_on_poisson_finds_no_bursts() {
+        let spec = TraceSpec::surf_lisa(2.0, 400.0);
+        let trace = ArrivalTrace::poisson(&spec, 3);
+        let fit = fit_marginals(&mut InMemoryTrace::new(trace.entries))
+            .unwrap();
+        assert_eq!(fit.burst_size, 1);
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_traces() {
+        let err = fit_marginals(&mut InMemoryTrace::new(Vec::new()))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("empty"), "{err}");
+        // Every entry at t = 0 → no rate is recoverable.
+        let flat = vec![
+            TraceEntry { at_s: 0.0, class: WorkloadClass::Light, epochs: 2 };
+            5
+        ];
+        let err = fit_marginals(&mut InMemoryTrace::new(flat))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("zero seconds"), "{err}");
+    }
+
+    #[test]
+    fn fit_epochs_mode_prefers_majority_then_smallest() {
+        let e = |at_s: f64, epochs: u32| TraceEntry {
+            at_s,
+            class: WorkloadClass::Light,
+            epochs,
+        };
+        // 6 is the mode; 3 and 9 tie at two occurrences each.
+        let trace =
+            vec![e(1.0, 9), e(2.0, 6), e(3.0, 3), e(4.0, 6), e(5.0, 6)];
+        let fit =
+            fit_marginals(&mut InMemoryTrace::new(trace)).unwrap();
+        assert_eq!(fit.spec.epochs[0], 6);
+        // On a tie the smallest value wins (deterministic fit).
+        let tied = vec![e(1.0, 9), e(2.0, 3), e(3.0, 9), e(4.0, 3)];
+        let fit = fit_marginals(&mut InMemoryTrace::new(tied)).unwrap();
+        assert_eq!(fit.spec.epochs[0], 3);
+        // Absent classes keep defaults and probability zero.
+        assert_eq!(fit.spec.epochs[1], 4);
+        assert_eq!(fit.spec.p_medium, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "rate must be positive")]
+    fn synth_rejects_degenerate_spec() {
+        let spec =
+            TraceSpec { rate_per_s: 0.0, ..TraceSpec::surf_lisa(1.0, 10.0) };
+        let _ = SynthTrace::poisson(spec, 1);
+    }
+}

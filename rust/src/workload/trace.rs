@@ -23,16 +23,32 @@ pub struct TraceEntry {
 
 impl TraceEntry {
     /// Parse from a JSON object: `{"at_s": 0.5, "class": "light",
-    /// "epochs": 2}` (`epochs` optional, default 2).
+    /// "epochs": 2}` (`epochs` optional, default 2). Rejects
+    /// non-finite or negative `at_s` (a NaN here would poison the
+    /// event queue's time ordering) and `epochs` outside `u32` (a
+    /// plain `as u32` would silently truncate — the same 2^53-class
+    /// hazard the `lossy-id-cast` lint fences).
     pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let at_s = v.req_f64("at_s")?;
+        anyhow::ensure!(
+            at_s.is_finite() && at_s >= 0.0,
+            "`at_s` must be finite and non-negative, got {at_s}"
+        );
         Ok(Self {
-            at_s: v.req_f64("at_s")?,
+            at_s,
             class: v.req_str("class")?.parse()?,
             epochs: match v.get("epochs") {
                 None => 2,
-                Some(e) => e.as_u64().ok_or_else(|| {
-                    anyhow::anyhow!("`epochs` is not an integer")
-                })? as u32,
+                Some(e) => {
+                    let raw = e.as_u64().ok_or_else(|| {
+                        anyhow::anyhow!("`epochs` is not an integer")
+                    })?;
+                    u32::try_from(raw).map_err(|_| {
+                        anyhow::anyhow!(
+                            "`epochs` {raw} does not fit in 32 bits"
+                        )
+                    })?
+                }
             },
         })
     }
@@ -85,8 +101,37 @@ pub struct ArrivalTrace {
 }
 
 impl TraceSpec {
+    /// Panic on degenerate specs before any arithmetic: a rate ≤ 0
+    /// divides into a non-finite mean inter-arrival gap and an
+    /// all-zero class mix divides 0/0 into NaN probabilities — the
+    /// same contract `ArrivalProcess::Poisson` already asserts.
+    pub fn assert_valid(&self) {
+        assert!(
+            self.rate_per_s.is_finite() && self.rate_per_s > 0.0,
+            "trace rate must be positive and finite, got {}",
+            self.rate_per_s
+        );
+        assert!(
+            self.duration_s.is_finite() && self.duration_s >= 0.0,
+            "trace duration must be finite and non-negative, got {}",
+            self.duration_s
+        );
+        let probs = [self.p_light, self.p_medium, self.p_complex];
+        assert!(
+            probs.iter().all(|p| p.is_finite() && *p >= 0.0),
+            "class-mix probabilities must be finite and non-negative, \
+             got {probs:?}"
+        );
+        assert!(
+            probs.iter().sum::<f64>() > 0.0,
+            "class mix is all zero — cannot normalize probabilities"
+        );
+    }
+
     /// Sample one class/epochs pair from the (normalized) mix.
-    fn sample_class(&self, rng: &mut Rng) -> (WorkloadClass, u32) {
+    /// The caller guarantees [`Self::assert_valid`] held, so `total`
+    /// is positive and the divisions below are finite.
+    pub(crate) fn sample_class(&self, rng: &mut Rng) -> (WorkloadClass, u32) {
         let total = self.p_light + self.p_medium + self.p_complex;
         let (pl, pm) = (self.p_light / total, self.p_medium / total);
         let x: f64 = rng.f64();
@@ -103,6 +148,7 @@ impl TraceSpec {
 impl ArrivalTrace {
     /// Sample a Poisson trace (seeded, deterministic).
     pub fn poisson(spec: &TraceSpec, seed: u64) -> Self {
+        spec.assert_valid();
         let mut rng = Rng::seed_from_u64(seed);
         let mut entries = Vec::new();
         let mut t = 0.0;
@@ -123,6 +169,7 @@ impl ArrivalTrace {
     /// simultaneous arrivals with classes drawn from the mix — the
     /// synchronized-sensor-fleet shape of AIoT deployments.
     pub fn bursty(spec: &TraceSpec, burst_size: usize, seed: u64) -> Self {
+        spec.assert_valid();
         let burst = burst_size.max(1);
         let mut rng = Rng::seed_from_u64(seed);
         let mut entries = Vec::new();
@@ -140,9 +187,13 @@ impl ArrivalTrace {
         Self { entries }
     }
 
-    /// Parse a JSON-lines trace (one `TraceEntry` per line).
+    /// Parse a JSON-lines trace (one `TraceEntry` per line). Entries
+    /// must arrive in nondecreasing `at_s` order — an out-of-order
+    /// line is rejected at parse time with its line number (sort the
+    /// trace first), instead of flowing a negative inter-arrival gap
+    /// into the event queue and the serve feeder.
     pub fn from_jsonl(text: &str) -> anyhow::Result<Self> {
-        let mut entries = Vec::new();
+        let mut entries: Vec<TraceEntry> = Vec::new();
         for (i, line) in text.lines().enumerate() {
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
@@ -150,9 +201,20 @@ impl ArrivalTrace {
             }
             let v = Json::parse(line)
                 .map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 1))?;
-            entries.push(TraceEntry::from_json(&v).map_err(|e| {
+            let e = TraceEntry::from_json(&v).map_err(|e| {
                 anyhow::anyhow!("trace line {}: {e}", i + 1)
-            })?);
+            })?;
+            if let Some(prev) = entries.last() {
+                anyhow::ensure!(
+                    e.at_s >= prev.at_s,
+                    "trace line {}: at_s {} is out of order (previous \
+                     entry at {}) — sort the trace by at_s first",
+                    i + 1,
+                    e.at_s,
+                    prev.at_s
+                );
+            }
+            entries.push(e);
         }
         anyhow::ensure!(!entries.is_empty(), "trace is empty");
         Ok(Self { entries })
@@ -237,6 +299,74 @@ mod tests {
     fn jsonl_rejects_garbage() {
         assert!(ArrivalTrace::from_jsonl("not json").is_err());
         assert!(ArrivalTrace::from_jsonl("").is_err());
+    }
+
+    #[test]
+    fn epochs_overflow_rejected_not_truncated() {
+        // 2^32 + 7 used to truncate to 7 through `as u32`; it must be
+        // an error now, and the message must carry the line number.
+        let text = format!(
+            "{{\"at_s\":0.5,\"class\":\"light\",\"epochs\":{}}}",
+            (1u64 << 32) + 7
+        );
+        let err = ArrivalTrace::from_jsonl(&text).unwrap_err().to_string();
+        assert!(err.contains("trace line 1"), "{err}");
+        assert!(err.contains("does not fit in 32 bits"), "{err}");
+        // The largest representable value still parses exactly.
+        let max = format!(
+            "{{\"at_s\":0.5,\"class\":\"light\",\"epochs\":{}}}",
+            u32::MAX
+        );
+        let t = ArrivalTrace::from_jsonl(&max).unwrap();
+        assert_eq!(t.entries[0].epochs, u32::MAX);
+        // Non-integer epochs stay rejected.
+        let frac = "{\"at_s\":0.5,\"class\":\"light\",\"epochs\":1.5}";
+        assert!(ArrivalTrace::from_jsonl(frac).is_err());
+    }
+
+    #[test]
+    fn invalid_at_s_rejected_at_parse_time() {
+        // Negative, non-finite (JSON has no NaN literal, but an
+        // overflowing literal parses to infinity), and out-of-order
+        // timestamps are all parse errors with line numbers — none of
+        // them may reach the event queue's time ordering.
+        let neg = "{\"at_s\":-1.0,\"class\":\"light\"}";
+        let err = ArrivalTrace::from_jsonl(neg).unwrap_err().to_string();
+        assert!(err.contains("finite and non-negative"), "{err}");
+        let inf = "{\"at_s\":1e999,\"class\":\"light\"}";
+        assert!(ArrivalTrace::from_jsonl(inf).is_err());
+        let unsorted = "{\"at_s\":2.0,\"class\":\"light\"}\n\
+                        {\"at_s\":1.0,\"class\":\"medium\"}";
+        let err =
+            ArrivalTrace::from_jsonl(unsorted).unwrap_err().to_string();
+        assert!(err.contains("trace line 2"), "{err}");
+        assert!(err.contains("out of order"), "{err}");
+        // Equal timestamps (a burst) remain legal.
+        let tied = "{\"at_s\":1.0,\"class\":\"light\"}\n\
+                    {\"at_s\":1.0,\"class\":\"medium\"}";
+        assert_eq!(ArrivalTrace::from_jsonl(tied).unwrap().entries.len(), 2);
+    }
+
+    #[test]
+    fn degenerate_specs_panic_instead_of_nan() {
+        use std::panic::catch_unwind;
+        let zero_rate = TraceSpec { rate_per_s: 0.0, ..TraceSpec::surf_lisa(1.0, 10.0) };
+        assert!(catch_unwind(|| ArrivalTrace::poisson(&zero_rate, 1)).is_err());
+        let neg_rate =
+            TraceSpec { rate_per_s: -2.0, ..TraceSpec::surf_lisa(1.0, 10.0) };
+        assert!(catch_unwind(|| ArrivalTrace::bursty(&neg_rate, 3, 1)).is_err());
+        let zero_mix = TraceSpec {
+            p_light: 0.0,
+            p_medium: 0.0,
+            p_complex: 0.0,
+            ..TraceSpec::surf_lisa(1.0, 10.0)
+        };
+        assert!(catch_unwind(|| ArrivalTrace::poisson(&zero_mix, 1)).is_err());
+        let nan_mix = TraceSpec {
+            p_light: f64::NAN,
+            ..TraceSpec::surf_lisa(1.0, 10.0)
+        };
+        assert!(catch_unwind(|| ArrivalTrace::poisson(&nan_mix, 1)).is_err());
     }
 
     #[test]

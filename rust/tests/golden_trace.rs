@@ -654,3 +654,98 @@ fn golden_trace_replay_is_deterministic() {
     }
     assert_eq!(a.makespan_s, b.makespan_s);
 }
+
+/// The trace-replay CI fixture (`tests/data/trace_10k_slice.jsonl`) is
+/// a seeded 1-in-100-per-class slice of the ~1.05M-pod synthetic trace
+/// `greenpod trace replay --full` streams, generated by the Python RNG
+/// mirror (`python/tools/make_trace_fixture.py`). Regenerating the
+/// same slice in-process and comparing byte-for-byte pins three
+/// things at once: the SynthTrace/DownSampler RNG streams, the
+/// Json compact writer, and the mirror itself — none can drift
+/// without this failing.
+#[test]
+fn trace_fixture_in_sync_with_generators() {
+    use greenpod::trace::{DownSampler, SynthTrace, WorkloadTrace};
+    use greenpod::workload::TraceSpec;
+
+    let config = Config::paper_default();
+    // The fixture's trace seed is the default experiment seed, so the
+    // slice is literally a sample of the `--full` run.
+    assert_eq!(config.experiment.seed, 20250710);
+    let mut synth = DownSampler::new(
+        SynthTrace::poisson(
+            TraceSpec::surf_lisa(100.0, 10_500.0),
+            config.experiment.seed,
+        ),
+        100,
+        7,
+    );
+
+    let path = data_path("trace_10k_slice.jsonl");
+    let text = std::fs::read_to_string(&path).expect("fixture present");
+    let mut fixture_lines =
+        text.lines().filter(|l| !l.starts_with('#')).enumerate();
+    let mut n = 0usize;
+    while let Some(e) = synth.next_entry().expect("synth cannot fail") {
+        let (i, line) = fixture_lines.next().unwrap_or_else(|| {
+            panic!("fixture ends at entry {n}; generator has more")
+        });
+        assert_eq!(
+            line,
+            e.to_json().to_string(),
+            "fixture line {} diverges from the generators — regenerate \
+             with python3 python/tools/make_trace_fixture.py",
+            i + 1
+        );
+        n += 1;
+    }
+    assert_eq!(
+        fixture_lines.next(),
+        None,
+        "fixture has more lines than the generators produce"
+    );
+    assert_eq!(n, 10_509, "fixture entry count");
+}
+
+/// Replay the sliced fixture end to end through the streaming reader
+/// and the federation engine on the default (paper Table I) cluster —
+/// which is exactly `ClusterConfig::scaled(80).downsampled(100)`, the
+/// capacity-side companion of the fixture's 1-in-100 pod slice.
+#[test]
+fn trace_fixture_replays_on_default_cluster() {
+    use greenpod::config::ClusterConfig;
+    use greenpod::experiments::{run_trace_replay, ExperimentContext};
+    use greenpod::trace::{ChunkedTraceReader, TraceOwnership};
+
+    let config = Config::paper_default();
+    assert_eq!(
+        ClusterConfig::scaled(80).downsampled(100),
+        config.cluster,
+        "fixture/capacity pairing drifted: scaled(80)/100 != default"
+    );
+
+    let path = data_path("trace_10k_slice.jsonl");
+    let mut reader =
+        ChunkedTraceReader::open(path.to_str().expect("utf-8 path"), 4096)
+            .expect("fixture opens");
+    let ctx = ExperimentContext::new(config);
+    let s = run_trace_replay(
+        &ctx,
+        &mut reader,
+        TraceOwnership::RoundRobin,
+        Vec::new(),
+    )
+    .expect("fixture replays");
+    assert_eq!(s.pods, 10_509);
+    assert_eq!(s.completed + s.unschedulable, s.pods);
+    assert!(s.completed > 0, "nothing completed");
+    // The chunked reader never buffered more than one chunk.
+    assert!(
+        s.peak_buffered <= 4096,
+        "peak buffered {} exceeds the chunk",
+        s.peak_buffered
+    );
+    assert!(s.peak_live_pods < s.pods, "streaming held the whole trace");
+    assert!(s.total_kj.is_finite() && s.total_kj > 0.0);
+    assert!(s.makespan_s >= 10_400.0, "trace spans ~10.5k seconds");
+}

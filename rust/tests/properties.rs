@@ -29,11 +29,16 @@ use greenpod::scheduler::Scheduler;
 use greenpod::simulation::{
     NodeChange, RunResult, SimulationEngine, SimulationParams,
 };
+use greenpod::experiments::{run_trace_replay, ExperimentContext};
+use greenpod::trace::{
+    ChunkedTraceReader, DownSampler, InMemoryTrace, StreamArrivals,
+    SynthTrace, TraceFormat, TraceOwnership, WorkloadTrace,
+};
 use greenpod::util::rng::Rng;
 use greenpod::util::stats::total_order;
 use greenpod::workload::{
     generate_pods, generate_pods_with, ArrivalProcess, ArrivalTrace,
-    TraceSpec, WorkloadClass, WorkloadExecutor,
+    TraceEntry, TraceSpec, WorkloadClass, WorkloadExecutor,
 };
 
 /// Case-count knob: `GREENPOD_PROP_CASES` scales every property's
@@ -1917,4 +1922,295 @@ fn prop_total_order_bit_identical_to_ad_hoc_comparators_off_nan() {
     assert!(v[5].is_nan());
     assert_eq!(v[0], f64::NEG_INFINITY);
     assert_eq!(v[4], f64::INFINITY);
+}
+
+/// Drain any workload trace into a vector (test helper).
+fn drain_trace(t: &mut dyn WorkloadTrace) -> Vec<TraceEntry> {
+    let mut out = Vec::new();
+    while let Some(e) = t.next_entry().expect("valid trace") {
+        out.push(e);
+    }
+    out
+}
+
+#[test]
+fn prop_streaming_arrivals_bit_identical_to_eager_run() {
+    // The lazy-arrival contract: feeding a federation through
+    // `run_source(StreamArrivals)` must reproduce the eager
+    // `run(Vec<Pod>)` on the same trace record-for-record,
+    // bit-for-bit — placements, times, joules, grams, events, node
+    // timeline — across 1-3 regions, every dispatch policy, both
+    // ownership modes and mixed carbon signals. Only the memory
+    // high-water mark may differ: streaming recycles pod slots, so
+    // its peak is at most the eager trace length.
+    let mut rng = Rng::seed_from_u64(0x57ea);
+    let config = Config::paper_default();
+    let executor = WorkloadExecutor::analytic();
+    for case in 0..prop_cases(10) {
+        let spec = TraceSpec::surf_lisa(
+            rng.range_f64(0.2, 3.0),
+            rng.range_f64(30.0, 300.0),
+        );
+        let seed = rng.next_u64();
+        let trace = if rng.chance(0.5) {
+            ArrivalTrace::poisson(&spec, seed)
+        } else {
+            ArrivalTrace::bursty(&spec, 1 + rng.below(4), seed)
+        };
+        let ownership = if rng.chance(0.5) {
+            TraceOwnership::RoundRobin
+        } else {
+            TraceOwnership::Fixed(SchedulerKind::Topsis)
+        };
+        let pods = match ownership {
+            TraceOwnership::RoundRobin => trace.to_pods_round_robin(),
+            TraceOwnership::Fixed(kind) => trace.to_pods(kind),
+        };
+        let n_regions = 1 + rng.below(3);
+        let specs: Vec<RegionSpec> = (0..n_regions)
+            .map(|i| {
+                RegionSpec::new(&format!("r{i}"), config.clone())
+                    .with_carbon(random_region_signal(&mut rng))
+            })
+            .collect();
+        let params = FederationParams::with_beta_and_seed(
+            config.experiment.contention_beta,
+            seed,
+        );
+        let engine = FederationEngine::new(&specs, params, &executor);
+        let dispatch = random_dispatch(&mut rng);
+
+        let mut scheds = federation_schedulers(&config, seed, n_regions);
+        let mut dispatcher = build_dispatcher(dispatch);
+        let eager = engine.run(pods, dispatcher.as_mut(), &mut scheds);
+
+        let n = trace.entries.len();
+        let mut mem = InMemoryTrace::new(trace.entries);
+        let mut source = StreamArrivals::new(&mut mem, ownership);
+        let mut scheds = federation_schedulers(&config, seed, n_regions);
+        let mut dispatcher = build_dispatcher(dispatch);
+        let streamed = engine
+            .run_source(&mut source, dispatcher.as_mut(), &mut scheds)
+            .expect("in-memory traces cannot fail");
+
+        assert_eq!(eager.regions.len(), streamed.regions.len());
+        for (ri, (a, b)) in
+            eager.regions.iter().zip(&streamed.regions).enumerate()
+        {
+            let (a, b) = (&a.run, &b.run);
+            assert_eq!(
+                a.records.len(),
+                b.records.len(),
+                "case {case} region {ri} (seed {seed})"
+            );
+            for (x, y) in a.records.iter().zip(&b.records) {
+                assert_eq!(x.pod, y.pod, "case {case} (seed {seed})");
+                assert_eq!(x.node, y.node, "case {case} pod {}", x.pod);
+                assert_eq!(x.start_s.to_bits(), y.start_s.to_bits());
+                assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits());
+                assert_eq!(x.wait_s.to_bits(), y.wait_s.to_bits());
+                assert_eq!(x.attempts, y.attempts);
+                assert_eq!(
+                    x.joules.to_bits(),
+                    y.joules.to_bits(),
+                    "case {case} pod {}",
+                    x.pod
+                );
+            }
+            assert_eq!(a.unschedulable, b.unschedulable, "case {case}");
+            assert_eq!(a.events, b.events, "case {case}");
+            assert_eq!(a.node_timeline, b.node_timeline, "case {case}");
+            assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+            for kind in [SchedulerKind::Topsis, SchedulerKind::DefaultK8s] {
+                assert_eq!(
+                    a.meter.total_kj(kind).to_bits(),
+                    b.meter.total_kj(kind).to_bits(),
+                    "case {case}"
+                );
+                assert_eq!(
+                    a.meter.total_co2_g(kind).to_bits(),
+                    b.meter.total_co2_g(kind).to_bits(),
+                    "case {case}"
+                );
+            }
+            assert_eq!(
+                a.meter.idle_co2_g().to_bits(),
+                b.meter.idle_co2_g().to_bits(),
+                "case {case}"
+            );
+        }
+        // Streaming recycles slots; eager holds the whole trace.
+        assert_eq!(eager.peak_live_pods, n, "case {case}");
+        assert!(
+            streamed.peak_live_pods <= n,
+            "case {case}: streamed peak {} > trace length {n}",
+            streamed.peak_live_pods
+        );
+    }
+}
+
+#[test]
+fn prop_down_sampler_deterministic_ordered_one_in_k() {
+    // Across random traces and keep-rates: the same seed always
+    // selects the same slice (bit-identical), the slice is an
+    // order-preserving subsequence, and each class keeps its
+    // one-in-k share — floor(m/k) or ceil(m/k) of m entries, so no
+    // class is ever silently dropped by a sampling phase.
+    let mut rng = Rng::seed_from_u64(0xd057);
+    for case in 0..prop_cases(30) {
+        let spec = TraceSpec::surf_lisa(
+            rng.range_f64(0.5, 4.0),
+            rng.range_f64(40.0, 250.0),
+        );
+        let trace = ArrivalTrace::poisson(&spec, rng.next_u64());
+        let keep = 1 + rng.below(8);
+        let seed = rng.next_u64();
+
+        let mut a = DownSampler::new(
+            InMemoryTrace::new(trace.entries.clone()),
+            keep,
+            seed,
+        );
+        let mut b = DownSampler::new(
+            InMemoryTrace::new(trace.entries.clone()),
+            keep,
+            seed,
+        );
+        let (xs, ys) = (drain_trace(&mut a), drain_trace(&mut b));
+        assert_eq!(xs.len(), ys.len(), "case {case}");
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(x.at_s.to_bits(), y.at_s.to_bits(), "case {case}");
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.epochs, y.epochs);
+        }
+
+        // Order-preserving subsequence of the input.
+        let mut it = trace.entries.iter();
+        for x in &xs {
+            assert!(
+                it.any(|e| e.at_s.to_bits() == x.at_s.to_bits()
+                    && e.class == x.class
+                    && e.epochs == x.epochs),
+                "case {case}: kept entry not a subsequence match"
+            );
+        }
+
+        // Per-class one-in-k share.
+        for class in [
+            WorkloadClass::Light,
+            WorkloadClass::Medium,
+            WorkloadClass::Complex,
+        ] {
+            let m =
+                trace.entries.iter().filter(|e| e.class == class).count();
+            let kept = xs.iter().filter(|e| e.class == class).count();
+            assert!(
+                kept >= m / keep && kept <= m.div_ceil(keep),
+                "case {case}: class {class:?} kept {kept} of {m} at 1/{keep}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_malformed_traces_rejected_with_line_numbers() {
+    // Corrupt one random line of an otherwise-valid JSONL trace in a
+    // random way; the chunked reader must fail (at any chunk size)
+    // and name the corrupted line, never silently skip or reorder.
+    let mut rng = Rng::seed_from_u64(0xbad1);
+    for case in 0..prop_cases(40) {
+        let spec = TraceSpec::surf_lisa(
+            rng.range_f64(0.5, 2.0),
+            rng.range_f64(40.0, 120.0),
+        );
+        let trace = ArrivalTrace::poisson(&spec, rng.next_u64());
+        if trace.entries.len() < 2 {
+            continue;
+        }
+        let mut lines: Vec<String> = trace
+            .entries
+            .iter()
+            .map(|e| e.to_json().to_string())
+            .collect();
+        let victim = rng.below(lines.len() - 1);
+        let kind = rng.below(4);
+        match kind {
+            0 => lines[victim] = "{not json".into(),
+            1 => {
+                lines[victim] =
+                    "{\"at_s\":-1.0,\"class\":\"light\",\"epochs\":2}".into()
+            }
+            2 => {
+                lines[victim] = format!(
+                    "{{\"at_s\":{},\"class\":\"light\",\"epochs\":2.5}}",
+                    trace.entries[victim].at_s
+                )
+            }
+            // Swap two adjacent arrivals to break the time order; the
+            // error lands on whichever line now runs backwards.
+            _ => lines.swap(victim, victim + 1),
+        }
+        let text = lines.join("\n");
+        let chunk = 1 + rng.below(64);
+        let mut reader =
+            ChunkedTraceReader::new(text.as_bytes(), TraceFormat::Jsonl, chunk)
+                .expect("construction never parses");
+        let mut err = None;
+        loop {
+            match reader.next_entry() {
+                Ok(Some(_)) => {}
+                Ok(None) => break,
+                Err(e) => {
+                    err = Some(e.to_string());
+                    break;
+                }
+            }
+        }
+        let err = err.unwrap_or_else(|| {
+            panic!("case {case}: corruption kind {kind} not rejected")
+        });
+        // Swapped equal-time lines cannot corrupt; all other kinds
+        // must name the victim line.
+        let expect_a = format!("trace line {}", victim + 1);
+        let expect_b = format!("trace line {}", victim + 2);
+        assert!(
+            err.contains(&expect_a) || err.contains(&expect_b),
+            "case {case} kind {kind}: error '{err}' names neither \
+             '{expect_a}' nor '{expect_b}'"
+        );
+    }
+}
+
+/// The `trace replay --full` memory contract: a million-pod synthetic
+/// trace streams through the engine end to end while the reader holds
+/// at most one burst and the engine's live-pod high-water mark stays
+/// a small fraction of the trace (slots are recycled at completion).
+/// Heavy (minutes in release); run explicitly via
+/// `cargo test --release --test properties full_scale -- --ignored`.
+#[test]
+#[ignore = "heavy: ~1M pods through the engine; CI runs it in release"]
+fn trace_replay_full_scale_streams_bounded() {
+    let mut config = Config::paper_default();
+    config.cluster = ClusterConfig::scaled(80);
+    let seed = config.experiment.seed;
+    let ctx = ExperimentContext::new(config);
+    let mut synth =
+        SynthTrace::poisson(TraceSpec::surf_lisa(100.0, 10_500.0), seed);
+    let s = run_trace_replay(
+        &ctx,
+        &mut synth,
+        TraceOwnership::RoundRobin,
+        Vec::new(),
+    )
+    .expect("synthetic traces cannot fail");
+    assert!(s.pods >= 1_000_000, "trace too small: {} pods", s.pods);
+    assert_eq!(s.completed + s.unschedulable, s.pods);
+    assert_eq!(s.peak_buffered, 1, "poisson synth buffers one entry");
+    assert!(
+        s.peak_live_pods < s.pods / 10,
+        "peak live pods {} not bounded well below {} total",
+        s.peak_live_pods,
+        s.pods
+    );
+    assert!(s.total_kj.is_finite() && s.total_kj > 0.0);
 }
