@@ -18,6 +18,7 @@ use std::time::{Duration, Instant};
 use crate::cluster::{ClusterState, Pod, PodId};
 use crate::config::{Config, SchedulerKind, J_PER_KWH};
 use crate::energy::{CarbonSignal, EnergyMeter};
+use crate::federation::FederationResult;
 use crate::scheduler::Scheduler;
 use crate::simulation::contention_factor;
 use crate::util::json::Json;
@@ -156,6 +157,22 @@ impl ApiEvent {
             }
         }
     }
+}
+
+/// A federation dispatch log as JSONL-ready [`ApiEvent::Dispatched`]
+/// events (region indexes resolved to names) — what `greenpod
+/// experiment federation --events` streams. Lives here rather than on
+/// [`FederationResult`] so the simulation kernel never depends on the
+/// serving/event layer.
+pub fn dispatched_events(fed: &FederationResult) -> Vec<ApiEvent> {
+    fed.assignments
+        .iter()
+        .map(|a| ApiEvent::Dispatched {
+            pod: a.pod,
+            region: fed.regions[a.region].name.clone(),
+            at_s: a.at_s,
+        })
+        .collect()
 }
 
 /// Timer-wheel entry: a running pod's completion deadline.

@@ -333,7 +333,8 @@ pub fn run_federation(ctx: &ExperimentContext) -> Result<FederationReport> {
                     && dispatch == headline_dispatch
                     && profile == "greenpod"
                 {
-                    headline_dispatches = result.dispatched_events();
+                    headline_dispatches =
+                        crate::api::dispatched_events(&result);
                 }
                 cells.push(cell);
             }

@@ -108,6 +108,7 @@ impl Dispatcher for RoundRobin {
         _pod: &Pod,
         regions: &[RegionSnapshot],
     ) -> usize {
+        debug_assert!(!regions.is_empty(), "dispatch with zero regions");
         let r = self.next % regions.len();
         self.next += 1;
         r

@@ -246,6 +246,15 @@ impl RegionRun {
     }
 }
 
+/// When a scaling action scheduled for `at_s` actually takes effect:
+/// never before `now`. Actions carried over from a past consultation
+/// fire immediately rather than rewriting history — the autoscaler
+/// contract every policy relies on.
+fn effective_at(at_s: f64, now: f64) -> f64 {
+    // greenpod-lint: allow(silent-clamp) reason="past-scheduled scaling actions fire now by contract; asserting would reject valid carried-over decisions"
+    at_s.max(now)
+}
+
 /// The federation engine. Owns every region's state for one run.
 pub struct FederationEngine<'a> {
     regions: &'a [RegionSpec],
@@ -568,6 +577,7 @@ impl<'a> FederationEngine<'a> {
         // region owning the run's last event — and therefore for any
         // 1-region federation, matching the plain engine exactly.
         let end = match self.params.billing_horizon_s {
+            // greenpod-lint: allow(silent-clamp) reason="extending the meter window to the horizon is the feature; runs past the horizon bill to their own end"
             Some(h) => h.max(clock.now()),
             None => clock.now(),
         };
@@ -635,7 +645,7 @@ impl<'a> FederationEngine<'a> {
             match action {
                 ScalingAction::Provision { template, ready_at_s } => {
                     let node = run.state.add_node(&template, now);
-                    let at = ready_at_s.max(now);
+                    let at = effective_at(ready_at_s, now);
                     queue.push(at, region, SimEvent::NodeJoined { node });
                     run.sample_nodes(now);
                     run.scaling.push(ScalingRecord {
@@ -646,7 +656,7 @@ impl<'a> FederationEngine<'a> {
                     });
                 }
                 ScalingAction::Activate { node, at_s } => {
-                    let at = at_s.max(now);
+                    let at = effective_at(at_s, now);
                     queue.push(at, region, SimEvent::NodeJoined { node });
                     run.scaling.push(ScalingRecord {
                         at_s: now,
@@ -656,7 +666,7 @@ impl<'a> FederationEngine<'a> {
                     });
                 }
                 ScalingAction::Deactivate { node, at_s } => {
-                    let at = at_s.max(now);
+                    let at = effective_at(at_s, now);
                     queue.push(at, region, SimEvent::NodeFailed { node });
                     run.scaling.push(ScalingRecord {
                         at_s: now,

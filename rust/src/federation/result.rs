@@ -3,7 +3,6 @@
 //! joules/gCO₂, queue-wait stats, scaling counts) the experiment
 //! drivers and the JSONL event stream read.
 
-use crate::api::ApiEvent;
 use crate::cluster::PodId;
 use crate::config::SchedulerKind;
 use crate::metrics::Summary;
@@ -120,19 +119,5 @@ impl FederationResult {
             .iter()
             .map(|r| r.run.makespan_s)
             .fold(0.0, f64::max)
-    }
-
-    /// The dispatch log as JSONL-ready [`ApiEvent::Dispatched`] events
-    /// (region indexes resolved to names) — what `greenpod experiment
-    /// federation --events` streams.
-    pub fn dispatched_events(&self) -> Vec<ApiEvent> {
-        self.assignments
-            .iter()
-            .map(|a| ApiEvent::Dispatched {
-                pod: a.pod,
-                region: self.regions[a.region].name.clone(),
-                at_s: a.at_s,
-            })
-            .collect()
     }
 }

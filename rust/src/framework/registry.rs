@@ -33,6 +33,7 @@ use crate::config::{
 };
 use crate::energy::CarbonSignal;
 use crate::mcda::McdaMethod;
+// greenpod-lint: allow(kernel-imports-tool) reason="PJRT scoring backend is an opt-in plugin; the engine is a deterministic offline artifact runner, not an ambient tool"
 use crate::runtime::{ArtifactRegistry, PjrtTopsisEngine};
 use crate::scheduler::{
     Estimator, ScoringBackend, DEFAULT_LIGHT_EPOCH_SECS,

@@ -43,8 +43,9 @@
 //!   paper's evaluation (Table VI, Fig 2, Table VII, §V.D, ablations).
 //! * [`api`] — in-process kube-like submission loop (`serve` mode).
 //! * [`lint`] — in-tree determinism & numeric-safety static analysis
-//!   (`greenpod lint`), encoding this repo's bug history as CI-enforced
-//!   rules.
+//!   (`greenpod lint`): a token layer plus an item-level layer (module
+//!   graph, per-function windows), encoding this repo's bug history as
+//!   CI-enforced rules.
 
 // Clippy runs in CI with `-D warnings`. The allows below are API-style
 // choices, not suppressed defects: `Json::to_string` renders compact

@@ -1,0 +1,684 @@
+//! Item-level parsing for the lint pass (L2 of the two-layer
+//! analyzer): `mod` / `use` / `fn` / `impl` / `struct` items with
+//! spans, recovered from the token stream — no expression grammar.
+//!
+//! The lexer ([`super::lexer`]) stays the ground truth for spans; this
+//! layer groups its tokens into just enough structure for symbol- and
+//! module-level rules to be trustworthy:
+//!
+//! * **use declarations** — every leaf path of a (possibly grouped)
+//!   `use` tree, each segment carrying its token index. Feeds the
+//!   crate module graph and `kernel-imports-tool`.
+//! * **functions** — name + body token window, innermost-wins, so
+//!   rules can scope guard searches (`unguarded-div`) and loop scans
+//!   (`unbounded-growth`) to one function at a time.
+//! * **impl blocks** — self-type name + body window, so field
+//!   mutations can be attributed to the type they belong to
+//!   (`stale-version-stamp`) and drain methods can exempt growth
+//!   sites anywhere in the same type's impls.
+//! * **structs** — field names with the head identifier of each
+//!   field's type (`Vec`, `BTreeMap`, …), so "struct-field
+//!   collection" is a checked property, not a guess.
+//!
+//! Like the lexer, the parser never fails: it only ever sees code
+//! rustc already accepted, and anything it cannot shape is skipped
+//! rather than guessed at.
+
+use super::lexer::{Lexed, Token, TokenKind};
+
+/// One leaf path of a `use` tree: `use crate::{a::b, c};` yields the
+/// leaves `crate::a::b` and `crate::c`. Each segment keeps the index
+/// of its token so findings can anchor on the offending segment.
+#[derive(Debug, Clone)]
+pub struct UseLeaf {
+    pub segments: Vec<(String, usize)>,
+}
+
+impl UseLeaf {
+    /// Segment texts only (for matching).
+    pub fn names(&self) -> Vec<&str> {
+        self.segments.iter().map(|(s, _)| s.as_str()).collect()
+    }
+}
+
+/// A `fn` item: free, impl-associated, or nested in an inline mod.
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    pub name: String,
+    /// Token index of the `fn` keyword.
+    pub kw: usize,
+    /// Token range of the body including both braces, when present
+    /// (trait method declarations have none).
+    pub body: Option<(usize, usize)>,
+    /// Index into [`Items::impls`] of the enclosing impl block.
+    pub impl_idx: Option<usize>,
+}
+
+/// An `impl` block with its self-type name (`impl Trait for Type`
+/// resolves to `Type`; path types resolve to their last segment).
+#[derive(Debug, Clone)]
+pub struct ImplItem {
+    pub type_name: String,
+    /// Token range of the body including both braces.
+    pub body: (usize, usize),
+}
+
+/// One named struct field and the head identifier of its type
+/// (`free_cpu_index: FreeIndex` → head `FreeIndex`;
+/// `bound: BTreeMap<PodId, …>` → head `BTreeMap`).
+#[derive(Debug, Clone)]
+pub struct FieldDecl {
+    pub name: String,
+    pub type_head: String,
+}
+
+/// A `struct` item with its named fields (tuple and unit structs
+/// parse with an empty field list).
+#[derive(Debug, Clone)]
+pub struct StructItem {
+    pub name: String,
+    pub fields: Vec<FieldDecl>,
+}
+
+/// A `mod` declaration: `mod x;` (file) or `mod x { … }` (inline).
+#[derive(Debug, Clone)]
+pub struct ModDecl {
+    pub name: String,
+    pub inline: bool,
+}
+
+/// The item-level view of one file.
+#[derive(Debug, Default)]
+pub struct Items {
+    pub uses: Vec<UseLeaf>,
+    pub fns: Vec<FnItem>,
+    pub impls: Vec<ImplItem>,
+    pub structs: Vec<StructItem>,
+    pub mods: Vec<ModDecl>,
+}
+
+impl Items {
+    /// Innermost function whose body window contains token `tok`.
+    pub fn enclosing_fn(&self, tok: usize) -> Option<&FnItem> {
+        self.fns
+            .iter()
+            .filter(|f| {
+                f.body.is_some_and(|(s, e)| s <= tok && tok < e)
+            })
+            .min_by_key(|f| {
+                let (s, e) = f.body.expect("filtered on body");
+                e - s
+            })
+    }
+
+    /// Impl block whose body window contains token `tok`.
+    pub fn enclosing_impl(&self, tok: usize) -> Option<&ImplItem> {
+        self.impls
+            .iter()
+            .filter(|i| i.body.0 <= tok && tok < i.body.1)
+            .min_by_key(|i| i.body.1 - i.body.0)
+    }
+}
+
+fn is_punct(t: &Token, c: u8) -> bool {
+    t.kind == TokenKind::Punct(c)
+}
+
+fn ident<'a>(toks: &[Token], src: &'a str, i: usize) -> Option<&'a str> {
+    toks.get(i).and_then(|t| {
+        (t.kind == TokenKind::Ident).then(|| t.text(src))
+    })
+}
+
+/// Map each `{` to its matching `}` (token indices). Unbalanced input
+/// maps to `usize::MAX` (runs to end of file).
+fn brace_matches(toks: &[Token]) -> Vec<usize> {
+    let mut out = vec![usize::MAX; toks.len()];
+    let mut stack = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if is_punct(t, b'{') {
+            stack.push(i);
+        } else if is_punct(t, b'}') {
+            if let Some(open) = stack.pop() {
+                out[open] = i;
+                out[i] = open;
+            }
+        }
+    }
+    out
+}
+
+/// Is token `i` in item position (start of a declaration)? True after
+/// a closing/opening brace, a semicolon, an attribute's `]`, a
+/// visibility modifier, or at the start of the file.
+fn item_position(toks: &[Token], src: &str, i: usize) -> bool {
+    let Some(j) = i.checked_sub(1) else { return true };
+    let t = &toks[j];
+    match t.kind {
+        TokenKind::Punct(b'{')
+        | TokenKind::Punct(b'}')
+        | TokenKind::Punct(b';')
+        | TokenKind::Punct(b']')
+        | TokenKind::Punct(b')') => true,
+        TokenKind::Ident => matches!(
+            t.text(src),
+            "pub" | "const" | "unsafe" | "async" | "extern" | "default"
+        ),
+        _ => false,
+    }
+}
+
+/// Parse the leaves of a `use` tree starting at token `i` (just after
+/// the `use` keyword). Returns the leaves and the index one past the
+/// terminating `;`.
+fn parse_use_tree(
+    toks: &[Token],
+    src: &str,
+    mut i: usize,
+    prefix: &[(String, usize)],
+    out: &mut Vec<UseLeaf>,
+) -> usize {
+    let mut path = prefix.to_vec();
+    while i < toks.len() {
+        let t = &toks[i];
+        match t.kind {
+            TokenKind::Ident => {
+                let name = t.text(src);
+                if name == "as" {
+                    // Alias: skip the rebind name.
+                    i += 2;
+                    continue;
+                }
+                path.push((name.to_string(), i));
+                i += 1;
+                // `::` continues the path; anything else ends a leaf.
+                if i + 1 < toks.len()
+                    && is_punct(&toks[i], b':')
+                    && is_punct(&toks[i + 1], b':')
+                {
+                    i += 2;
+                    continue;
+                }
+            }
+            TokenKind::Punct(b'{') => {
+                // Group: each comma-separated subtree shares `path`.
+                i += 1;
+                loop {
+                    i = parse_use_tree(toks, src, i, &path, out);
+                    match toks.get(i) {
+                        Some(t) if is_punct(t, b',') => i += 1,
+                        Some(t) if is_punct(t, b'}') => {
+                            i += 1;
+                            break;
+                        }
+                        _ => break,
+                    }
+                }
+                return i;
+            }
+            TokenKind::Punct(b'*') => {
+                path.push(("*".to_string(), i));
+                i += 1;
+            }
+            TokenKind::Punct(b',') | TokenKind::Punct(b'}') => break,
+            TokenKind::Punct(b';') => break,
+            _ => {
+                i += 1;
+                continue;
+            }
+        }
+        // A leaf ended (next token is not `::`).
+        match toks.get(i) {
+            Some(t) if is_punct(t, b',') || is_punct(t, b'}') => break,
+            Some(t) if is_punct(t, b';') => break,
+            _ => {}
+        }
+    }
+    if !path.is_empty() && path.len() > prefix.len() {
+        out.push(UseLeaf { segments: path });
+    }
+    i
+}
+
+/// Last segment of a type path starting at `i` within `toks[..end]`,
+/// skipping leading `&`, lifetimes, `dyn`/`mut` and one generics
+/// group.
+fn type_name_at(
+    toks: &[Token],
+    src: &str,
+    mut i: usize,
+    end: usize,
+) -> Option<String> {
+    let mut angle = 0i32;
+    let mut last: Option<&str> = None;
+    while i < end {
+        let t = &toks[i];
+        match t.kind {
+            TokenKind::Punct(b'<') => angle += 1,
+            TokenKind::Punct(b'>') => angle = (angle - 1).max(0),
+            TokenKind::Ident if angle == 0 => {
+                let name = t.text(src);
+                if !matches!(name, "dyn" | "mut" | "where") {
+                    last = Some(name);
+                    // A path continues through `::`; otherwise the
+                    // first top-level ident chain is the type.
+                    if !(i + 2 < end
+                        && is_punct(&toks[i + 1], b':')
+                        && is_punct(&toks[i + 2], b':'))
+                    {
+                        return last.map(str::to_string);
+                    }
+                    i += 2;
+                }
+                if name == "where" {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    last.map(str::to_string)
+}
+
+/// Parse struct fields between braces `open..close` (exclusive).
+fn parse_fields(
+    toks: &[Token],
+    src: &str,
+    open: usize,
+    close: usize,
+) -> Vec<FieldDecl> {
+    let mut fields = Vec::new();
+    let mut depth = 0i32; // ()/[]/{}/<> nesting inside the body
+    let mut i = open + 1;
+    while i < close {
+        let t = &toks[i];
+        match t.kind {
+            TokenKind::Punct(b'(')
+            | TokenKind::Punct(b'[')
+            | TokenKind::Punct(b'{')
+            | TokenKind::Punct(b'<') => depth += 1,
+            TokenKind::Punct(b')')
+            | TokenKind::Punct(b']')
+            | TokenKind::Punct(b'}')
+            | TokenKind::Punct(b'>') => depth = (depth - 1).max(0),
+            // `name : Type` at top level (skip `::`).
+            TokenKind::Ident if depth == 0 => {
+                let next_colon = i + 1 < close
+                    && is_punct(&toks[i + 1], b':')
+                    && !(i + 2 < close && is_punct(&toks[i + 2], b':'));
+                if next_colon {
+                    let name = t.text(src).to_string();
+                    let head = type_name_at(toks, src, i + 2, close)
+                        .unwrap_or_default();
+                    fields.push(FieldDecl { name, type_head: head });
+                    // Skip to the separating comma at top level.
+                    i += 2;
+                    let mut d = 0i32;
+                    while i < close {
+                        match toks[i].kind {
+                            TokenKind::Punct(b'(')
+                            | TokenKind::Punct(b'[')
+                            | TokenKind::Punct(b'{')
+                            | TokenKind::Punct(b'<') => d += 1,
+                            TokenKind::Punct(b')')
+                            | TokenKind::Punct(b']')
+                            | TokenKind::Punct(b'}') => d -= 1,
+                            TokenKind::Punct(b'>') => {
+                                // `->` is not a closing angle.
+                                if !(i > 0
+                                    && is_punct(&toks[i - 1], b'-')
+                                    && toks[i - 1].end == toks[i].start)
+                                {
+                                    d -= 1;
+                                }
+                            }
+                            TokenKind::Punct(b',') if d <= 0 => break,
+                            _ => {}
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    fields
+}
+
+/// Parse the item-level view of one lexed file.
+pub fn parse(src: &str, lexed: &Lexed) -> Items {
+    let toks = &lexed.tokens;
+    let braces = brace_matches(toks);
+    let mut items = Items::default();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind != TokenKind::Ident {
+            i += 1;
+            continue;
+        }
+        match t.text(src) {
+            "use" if item_position(toks, src, i) => {
+                let mut leaves = Vec::new();
+                let next = parse_use_tree(toks, src, i + 1, &[], &mut leaves);
+                items.uses.extend(leaves);
+                i = next.max(i + 1);
+            }
+            "mod" if item_position(toks, src, i) => {
+                if let Some(name) = ident(toks, src, i + 1) {
+                    let inline = toks
+                        .get(i + 2)
+                        .is_some_and(|t| is_punct(t, b'{'));
+                    items.mods.push(ModDecl {
+                        name: name.to_string(),
+                        inline,
+                    });
+                }
+                i += 2;
+            }
+            "struct" if item_position(toks, src, i) => {
+                let Some(name) = ident(toks, src, i + 1) else {
+                    i += 1;
+                    continue;
+                };
+                // Find the body/terminator: `{` fields, `;` unit,
+                // `(` tuple.
+                let mut j = i + 2;
+                let mut fields = Vec::new();
+                while j < toks.len() {
+                    match toks[j].kind {
+                        TokenKind::Punct(b'{') => {
+                            let close = braces[j];
+                            if close != usize::MAX {
+                                fields =
+                                    parse_fields(toks, src, j, close);
+                            }
+                            break;
+                        }
+                        TokenKind::Punct(b';')
+                        | TokenKind::Punct(b'(') => break,
+                        _ => j += 1,
+                    }
+                }
+                items.structs.push(StructItem {
+                    name: name.to_string(),
+                    fields,
+                });
+                i += 2;
+            }
+            "impl" if item_position(toks, src, i) => {
+                // Header runs to the body `{`.
+                let mut j = i + 1;
+                let mut body_open = None;
+                let mut for_at = None;
+                let mut angle = 0i32;
+                while j < toks.len() {
+                    match toks[j].kind {
+                        TokenKind::Punct(b'{') => {
+                            body_open = Some(j);
+                            break;
+                        }
+                        TokenKind::Punct(b';') => break,
+                        TokenKind::Punct(b'<') => angle += 1,
+                        TokenKind::Punct(b'>') => {
+                            if !(is_punct(&toks[j - 1], b'-')
+                                && toks[j - 1].end == toks[j].start)
+                            {
+                                angle = (angle - 1).max(0);
+                            }
+                        }
+                        TokenKind::Ident
+                            if angle == 0
+                                && toks[j].text(src) == "for" =>
+                        {
+                            for_at = Some(j);
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                if let Some(open) = body_open {
+                    let close = braces[open];
+                    if close != usize::MAX {
+                        // Type = after `for` if present, else after the
+                        // impl keyword's generics.
+                        let ty_start = match for_at {
+                            Some(f) => f + 1,
+                            None => {
+                                let mut k = i + 1;
+                                if k < toks.len()
+                                    && is_punct(&toks[k], b'<')
+                                {
+                                    let mut a = 1i32;
+                                    k += 1;
+                                    while k < toks.len() && a > 0 {
+                                        if is_punct(&toks[k], b'<') {
+                                            a += 1;
+                                        } else if is_punct(
+                                            &toks[k],
+                                            b'>',
+                                        ) {
+                                            a -= 1;
+                                        }
+                                        k += 1;
+                                    }
+                                }
+                                k
+                            }
+                        };
+                        if let Some(name) =
+                            type_name_at(toks, src, ty_start, open)
+                        {
+                            items.impls.push(ImplItem {
+                                type_name: name,
+                                body: (open, close + 1),
+                            });
+                        }
+                    }
+                }
+                i = body_open.map_or(j + 1, |o| o + 1);
+            }
+            "fn" if item_position(toks, src, i) => {
+                let Some(name) = ident(toks, src, i + 1) else {
+                    i += 1;
+                    continue;
+                };
+                // Body = first `{` after the signature at paren
+                // depth 0; a `;` first means a bodiless declaration.
+                let mut j = i + 2;
+                let mut paren = 0i32;
+                let mut body = None;
+                while j < toks.len() {
+                    match toks[j].kind {
+                        TokenKind::Punct(b'(') => paren += 1,
+                        TokenKind::Punct(b')') => paren -= 1,
+                        TokenKind::Punct(b'{') if paren == 0 => {
+                            let close = braces[j];
+                            if close != usize::MAX {
+                                body = Some((j, close + 1));
+                            }
+                            break;
+                        }
+                        TokenKind::Punct(b';') if paren == 0 => break,
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                items.fns.push(FnItem {
+                    name: name.to_string(),
+                    kw: i,
+                    body,
+                    impl_idx: None,
+                });
+                i += 2;
+            }
+            _ => i += 1,
+        }
+    }
+    // Attribute functions to their enclosing impl blocks.
+    for f in &mut items.fns {
+        f.impl_idx = items
+            .impls
+            .iter()
+            .enumerate()
+            .filter(|(_, im)| im.body.0 <= f.kw && f.kw < im.body.1)
+            .min_by_key(|(_, im)| im.body.1 - im.body.0)
+            .map(|(idx, _)| idx);
+    }
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn parsed(src: &str) -> Items {
+        parse(src, &lex(src))
+    }
+
+    #[test]
+    fn use_trees_expand_to_leaves() {
+        let src = "use crate::util::json::Json;\n\
+                   use crate::{cluster::Pod, config};\n\
+                   use std::collections::BTreeMap as Map;\n";
+        let items = parsed(src);
+        let leaves: Vec<Vec<&str>> =
+            items.uses.iter().map(|u| u.names()).collect();
+        assert_eq!(
+            leaves,
+            vec![
+                vec!["crate", "util", "json", "Json"],
+                vec!["crate", "cluster", "Pod"],
+                vec!["crate", "config"],
+                vec!["std", "collections", "BTreeMap"],
+            ]
+        );
+    }
+
+    #[test]
+    fn fns_carry_body_windows_and_impl_owner() {
+        let src = "\
+pub struct S { v: Vec<u64> }
+impl S {
+    pub fn grow(&mut self) { self.v.push(1); }
+}
+fn free() -> u64 { 7 }
+trait T { fn decl(&self); }
+";
+        let items = parsed(src);
+        let names: Vec<&str> =
+            items.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, ["grow", "free", "decl"]);
+        assert!(items.fns[0].body.is_some());
+        assert_eq!(items.fns[0].impl_idx, Some(0));
+        assert_eq!(items.fns[1].impl_idx, None);
+        assert!(items.fns[2].body.is_none());
+        assert_eq!(items.impls.len(), 1);
+        assert_eq!(items.impls[0].type_name, "S");
+    }
+
+    #[test]
+    fn impl_trait_for_type_resolves_to_type() {
+        let src = "\
+impl<R: BufRead> WorkloadTrace for AlibabaTaskReader<R> {
+    fn next_entry(&mut self) {}
+}
+impl crate::cluster::ClusterState {
+    fn helper(&self) {}
+}
+";
+        let items = parsed(src);
+        assert_eq!(items.impls[0].type_name, "AlibabaTaskReader");
+        assert_eq!(items.impls[1].type_name, "ClusterState");
+        assert_eq!(items.fns[0].impl_idx, Some(0));
+        assert_eq!(items.fns[1].impl_idx, Some(1));
+    }
+
+    #[test]
+    fn struct_fields_record_type_heads() {
+        let src = "\
+pub struct ClusterState {
+    nodes: Vec<Node>,
+    pub bound: BTreeMap<PodId, (NodeId, ResourceRequests)>,
+    events: VecDeque<ClusterEvent>,
+    ready_count: usize,
+    cb: Box<dyn Fn(u8) -> u8>,
+}
+struct Unit;
+struct Tup(u8, u8);
+";
+        let items = parsed(src);
+        let s = &items.structs[0];
+        let f: Vec<(&str, &str)> = s
+            .fields
+            .iter()
+            .map(|f| (f.name.as_str(), f.type_head.as_str()))
+            .collect();
+        assert_eq!(
+            f,
+            [
+                ("nodes", "Vec"),
+                ("bound", "BTreeMap"),
+                ("events", "VecDeque"),
+                ("ready_count", "usize"),
+                ("cb", "Box"),
+            ]
+        );
+        assert_eq!(items.structs[1].name, "Unit");
+        assert!(items.structs[1].fields.is_empty());
+        assert!(items.structs[2].fields.is_empty());
+    }
+
+    #[test]
+    fn mods_and_nested_items_parse() {
+        let src = "\
+mod stream;
+mod tests {
+    fn inner() { let x = 1; }
+}
+";
+        let items = parsed(src);
+        assert_eq!(items.mods.len(), 2);
+        assert!(!items.mods[0].inline);
+        assert!(items.mods[1].inline);
+        assert_eq!(items.fns[0].name, "inner");
+    }
+
+    #[test]
+    fn return_position_impl_is_not_an_item() {
+        let src = "fn make() -> impl Iterator<Item = u8> { 0..3 }\n";
+        let items = parsed(src);
+        assert!(items.impls.is_empty());
+        assert_eq!(items.fns.len(), 1);
+    }
+
+    #[test]
+    fn enclosing_fn_is_innermost() {
+        let src = "\
+fn outer() {
+    fn inner() { let marker_inner = 1; }
+    let marker_outer = 2;
+}
+";
+        let items = parsed(src);
+        let lexed = lex(src);
+        let at = |word: &str| {
+            lexed
+                .tokens
+                .iter()
+                .position(|t| t.is_ident(src, word))
+                .unwrap()
+        };
+        assert_eq!(
+            items.enclosing_fn(at("marker_inner")).unwrap().name,
+            "inner"
+        );
+        assert_eq!(
+            items.enclosing_fn(at("marker_outer")).unwrap().name,
+            "outer"
+        );
+    }
+}

@@ -2,38 +2,55 @@
 //! analysis (`greenpod lint [--deny] [--json]`).
 //!
 //! Every headline this repro ships is pinned by bit-identical golden
-//! fixtures, and the last three bugfix sweeps were all silent
-//! determinism or numeric hazards: u64 ids corrupted through f64,
-//! drifted percentile copies, nondeterministic report rows. This pass
-//! encodes that bug history as five token-level rules and runs over
-//! every file under `rust/src/` in CI, so the next instance fails at
-//! review time instead of in a fixture diff:
+//! fixtures, and the bugfix sweeps keep finding the same classes:
+//! silent determinism leaks, numeric hazards, and cache-invalidation
+//! traps in the hot path. This pass encodes that bug history as a
+//! **two-layer analyzer**:
 //!
-//! | rule                   | scope  | catches                        |
-//! |------------------------|--------|--------------------------------|
-//! | `unordered-iter`       | kernel | `HashMap`/`HashSet` use        |
-//! | `wall-clock-in-kernel` | kernel | `Instant::now`, `SystemTime`   |
-//! | `lossy-id-cast`        | all    | id/count ↔ f64 `as` round-trips|
-//! | `float-cmp-unwrap`     | all    | float orderings outside the    |
-//! |                        |        | shared `util::stats::total_order`|
-//! | `banned-path`          | all    | retired monolith schedulers    |
+//! * **L1 — token rules** over the spanned lexer ([`lexer`]): lexical
+//!   shapes like `HashMap` in kernel code or an id cast through f64.
+//! * **L2 — item rules** over the item parser ([`items`]): `mod` /
+//!   `use` / `fn` / `impl` / `struct` items with spans (no expression
+//!   grammar), giving rules a crate module graph and per-function
+//!   token windows to reason in.
+//!
+//! The full rule catalog lives in [`RULE_CATALOG`] (and is mirrored,
+//! by CI assertion, in DESIGN.md §7):
+//!
+//! | rule                   | layer | scope  | catches                 |
+//! |------------------------|-------|--------|-------------------------|
+//! | `unordered-iter`       | token | kernel | `HashMap`/`HashSet` use |
+//! | `wall-clock-in-kernel` | token | kernel | `Instant::now`, …       |
+//! | `lossy-id-cast`        | token | all    | id ↔ f64 `as` trips     |
+//! | `float-cmp-unwrap`     | token | all    | ad-hoc float orderings  |
+//! | `banned-path`          | token | all    | retired monoliths       |
+//! | `kernel-imports-tool`  | item  | kernel | tool imports in kernel  |
+//! | `unguarded-div`        | item  | kernel | `/ len()` with no guard |
+//! | `unbounded-growth`     | item  | kernel | uncapped field growth   |
+//! | `silent-clamp`         | item  | kernel | unasserted time clamps  |
+//! | `stale-version-stamp`  | item  | all    | unstamped cache writes  |
 //!
 //! Scope: a file's first directory under `src/` decides whether the
 //! kernel-only rules apply. `api`, `util`, `runtime`, `experiments`
 //! and `lint` itself are *tool* modules (wall-clock and std hash maps
 //! are fine there); everything else — the simulation kernel and the
 //! layers that feed it — is *kernel*, including files sitting
-//! directly under `src/`.
+//! directly under `src/`. Integration tests, benches and examples
+//! are tool scope wherever they live: they drive the kernel, they
+//! are not inside it.
 //!
 //! Suppression is never silent: see [`rules`] for the
 //! `// greenpod-lint: allow(<rule>) reason="…"` grammar. This module
-//! is analysis only — it never edits files, and the lexer
-//! ([`lexer`]) is hand-rolled in the house style of [`crate::util::json`]
-//! so the workspace still builds offline with zero new dependencies.
+//! is analysis only — it never edits files, and both layers are
+//! hand-rolled in the house style of [`crate::util::json`] so the
+//! workspace still builds offline with zero new dependencies.
 
+pub mod items;
 pub mod lexer;
 mod rules;
+mod rules_item;
 
+use std::collections::BTreeSet;
 use std::fs;
 use std::path::{Path, PathBuf};
 
@@ -47,21 +64,117 @@ pub enum Scope {
     /// Simulation kernel and the layers feeding it: must be virtual-
     /// time deterministic end to end.
     Kernel,
-    /// Offline tooling (CLI plumbing, benches, experiment drivers):
-    /// wall clocks and hash maps are fine as long as they cannot
-    /// reach results.
+    /// Offline tooling (CLI plumbing, benches, experiment drivers,
+    /// integration tests): wall clocks and hash maps are fine as long
+    /// as they cannot reach results.
     Tool,
 }
 
+impl Scope {
+    fn as_str(self) -> &'static str {
+        match self {
+            Scope::Kernel => "kernel",
+            Scope::Tool => "tool",
+        }
+    }
+}
+
 /// First-level directories under `src/` classed as tool modules.
-const TOOL_MODULES: [&str; 5] =
+pub(crate) const TOOL_MODULES: [&str; 5] =
     ["api", "experiments", "lint", "runtime", "util"];
+
+/// Directory names whose contents are tool scope wherever they sit:
+/// integration tests, examples and benches drive the kernel from
+/// outside it.
+const TOOL_DIRS: [&str; 3] = ["benches", "examples", "tests"];
+
+/// Directories skipped by the tree walk: lint fixtures are *seeded
+/// violations* (each rule's test corpus), not code to gate CI on.
+const SKIP_DIRS: [&str; 2] = ["data", "target"];
 
 /// Source files that must stay deleted (PR 7 retired the monolith
 /// schedulers; the federation engine is the one event loop). Paths
 /// relative to the linted source root.
 const BANNED_FILES: [&str; 2] =
     ["scheduler/greenpod.rs", "scheduler/default_k8s.rs"];
+
+/// One entry of the rule catalog: name, analyzer layer, scope, and
+/// the repo bug the rule was distilled from.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInfo {
+    pub name: &'static str,
+    /// `"token"` (L1, lexer stream) or `"item"` (L2, item parser).
+    pub layer: &'static str,
+    /// `"kernel"` or `"all"`.
+    pub scope: &'static str,
+    /// The bug class this rule fences off, with its PR of origin.
+    pub distilled_from: &'static str,
+}
+
+/// The stable rule catalog, sorted by name. `lint --json` emits it
+/// verbatim and CI asserts it matches the DESIGN.md §7 table.
+pub const RULE_CATALOG: [RuleInfo; 10] = [
+    RuleInfo {
+        name: "banned-path",
+        layer: "token",
+        scope: "all",
+        distilled_from: "PR 7: retired monolith schedulers must stay deleted",
+    },
+    RuleInfo {
+        name: "float-cmp-unwrap",
+        layer: "token",
+        scope: "all",
+        distilled_from: "PR 5/8: drifted percentile copies; one shared float total order",
+    },
+    RuleInfo {
+        name: "kernel-imports-tool",
+        layer: "item",
+        scope: "kernel",
+        distilled_from: "PR 8: per-rule kernel/tool scoping, promoted to an import-graph invariant",
+    },
+    RuleInfo {
+        name: "lossy-id-cast",
+        layer: "token",
+        scope: "all",
+        distilled_from: "PR 5/9: 2^53 id corruption through f64; u32 truncation in the trace parser",
+    },
+    RuleInfo {
+        name: "silent-clamp",
+        layer: "item",
+        scope: "kernel",
+        distilled_from: "PR 9: arrival clamp silently reordered a late feeder",
+    },
+    RuleInfo {
+        name: "stale-version-stamp",
+        layer: "item",
+        scope: "all",
+        distilled_from: "PR 6: incremental-scoring cache keyed on node_version stamps",
+    },
+    RuleInfo {
+        name: "unbounded-growth",
+        layer: "item",
+        scope: "kernel",
+        distilled_from: "PR 6: ClusterState event buffer grew without a retention cap",
+    },
+    RuleInfo {
+        name: "unguarded-div",
+        layer: "item",
+        scope: "kernel",
+        distilled_from: "PR 6: NaN utilization on zero-capacity nodes",
+    },
+    RuleInfo {
+        name: "unordered-iter",
+        layer: "token",
+        scope: "kernel",
+        distilled_from: "PR 8: nondeterministic report rows from hash-map iteration",
+    },
+    RuleInfo {
+        name: "wall-clock-in-kernel",
+        layer: "token",
+        scope: "kernel",
+        distilled_from: "PR 8: wall-clock reads in a virtual-time kernel",
+    },
+];
 
 /// One lint violation, `file:line:col`-addressable (1-based).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -71,6 +184,11 @@ pub struct Finding {
     pub line: usize,
     pub col: usize,
     pub message: String,
+    /// For `unused-allow` / `malformed-allow`: the rule named inside
+    /// the offending annotation (the finding's own span is the
+    /// annotation's), so `--json` consumers can locate suppressions
+    /// without re-parsing source.
+    pub allow_rule: Option<String>,
 }
 
 impl Finding {
@@ -85,8 +203,15 @@ impl Finding {
 
 /// Classify a path (kernel vs. tool) by its first directory under
 /// `src/`. Files directly under `src/` (`lib.rs`, `main.rs`) are held
-/// to the stricter kernel rules.
+/// to the stricter kernel rules; anything under a `tests/`,
+/// `examples/` or `benches/` directory is tool scope.
 pub fn scope_of(path: &str) -> Scope {
+    if path
+        .split('/')
+        .any(|component| TOOL_DIRS.contains(&component))
+    {
+        return Scope::Tool;
+    }
     let rel = path.rsplit_once("src/").map_or(path, |(_, r)| r);
     match rel.split_once('/') {
         Some((first, _)) if TOOL_MODULES.contains(&first) => Scope::Tool,
@@ -101,12 +226,25 @@ pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
     rules::check_source(path, scope_of(path), src)
 }
 
+/// One node of the crate module graph: a module, its scope, and the
+/// crate-internal modules it imports (`use crate::…` /
+/// `use greenpod::…` edges, collapsed to top-level modules with
+/// `util` kept at leaf granularity).
+#[derive(Debug, Clone)]
+pub struct ModuleNode {
+    pub module: String,
+    pub scope: Scope,
+    pub imports: Vec<String>,
+}
+
 /// The result of linting a source tree.
 #[derive(Debug)]
 pub struct Report {
     /// All findings, sorted by (path, line, col, rule).
     pub findings: Vec<Finding>,
     pub files_scanned: usize,
+    /// The crate module graph, sorted by module path.
+    pub modules: Vec<ModuleNode>,
 }
 
 impl Report {
@@ -114,7 +252,9 @@ impl Report {
         self.findings.is_empty()
     }
 
-    /// Machine-readable rendering for `greenpod lint --json`.
+    /// Machine-readable rendering for `greenpod lint --json`:
+    /// `files_scanned`, `findings`, the stable rule `catalog`, and
+    /// the crate `modules` graph.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("files_scanned", Json::Uint(self.files_scanned as u64)),
@@ -124,7 +264,7 @@ impl Report {
                     self.findings
                         .iter()
                         .map(|f| {
-                            Json::obj(vec![
+                            let mut fields = vec![
                                 ("rule", Json::Str(f.rule.to_string())),
                                 ("path", Json::Str(f.path.clone())),
                                 ("line", Json::Uint(f.line as u64)),
@@ -132,6 +272,73 @@ impl Report {
                                 (
                                     "message",
                                     Json::Str(f.message.clone()),
+                                ),
+                            ];
+                            if let Some(r) = &f.allow_rule {
+                                fields.push((
+                                    "allow_rule",
+                                    Json::Str(r.clone()),
+                                ));
+                            }
+                            Json::obj(fields)
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "catalog",
+                Json::Arr(
+                    RULE_CATALOG
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", Json::Str(r.name.to_string())),
+                                (
+                                    "layer",
+                                    Json::Str(r.layer.to_string()),
+                                ),
+                                (
+                                    "scope",
+                                    Json::Str(r.scope.to_string()),
+                                ),
+                                (
+                                    "distilled_from",
+                                    Json::Str(
+                                        r.distilled_from.to_string(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "modules",
+                Json::Arr(
+                    self.modules
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                (
+                                    "module",
+                                    Json::Str(m.module.clone()),
+                                ),
+                                (
+                                    "scope",
+                                    Json::Str(
+                                        m.scope.as_str().to_string(),
+                                    ),
+                                ),
+                                (
+                                    "imports",
+                                    Json::Arr(
+                                        m.imports
+                                            .iter()
+                                            .map(|i| {
+                                                Json::Str(i.clone())
+                                            })
+                                            .collect(),
+                                    ),
                                 ),
                             ])
                         })
@@ -146,36 +353,111 @@ impl Report {
 /// never depends on directory enumeration), plus the banned-file
 /// checks relative to `root`.
 pub fn lint_tree(root: &Path) -> Result<Report> {
-    let mut files = Vec::new();
-    collect_rs_files(root, &mut files)
-        .with_context(|| format!("walking {}", root.display()))?;
-    files.sort();
+    lint_roots(&[root.to_path_buf()])
+}
+
+/// Lint several source roots (`rust/src`, `rust/tests`, `examples`)
+/// into one merged report. Banned-file checks apply per root; the
+/// module graph spans all of them.
+pub fn lint_roots(roots: &[PathBuf]) -> Result<Report> {
     let mut findings = Vec::new();
-    for f in &files {
-        let src = fs::read_to_string(f)
-            .with_context(|| format!("reading {}", f.display()))?;
-        findings.extend(lint_source(&display_path(f), &src));
-    }
-    for banned in BANNED_FILES {
-        let p = root.join(banned);
-        if p.exists() {
-            findings.push(Finding {
-                rule: "banned-path",
-                path: display_path(&p),
-                line: 1,
-                col: 1,
-                message: "retired monolith scheduler file must stay \
-                          deleted — the federation engine is the one \
-                          event loop"
-                    .to_string(),
-            });
+    let mut modules = Vec::new();
+    let mut files_scanned = 0usize;
+    for root in roots {
+        let mut files = Vec::new();
+        collect_rs_files(root, &mut files)
+            .with_context(|| format!("walking {}", root.display()))?;
+        files.sort();
+        files_scanned += files.len();
+        for f in &files {
+            let src = fs::read_to_string(f)
+                .with_context(|| format!("reading {}", f.display()))?;
+            let path = display_path(f);
+            findings.extend(lint_source(&path, &src));
+            modules.push(module_node(root, f, &path, &src));
+        }
+        for banned in BANNED_FILES {
+            let p = root.join(banned);
+            if p.exists() {
+                findings.push(Finding {
+                    rule: "banned-path",
+                    path: display_path(&p),
+                    line: 1,
+                    col: 1,
+                    message: "retired monolith scheduler file must stay \
+                              deleted — the federation engine is the one \
+                              event loop"
+                        .to_string(),
+                    allow_rule: None,
+                });
+            }
         }
     }
     findings.sort_by(|a, b| {
         (a.path.as_str(), a.line, a.col, a.rule)
             .cmp(&(b.path.as_str(), b.line, b.col, b.rule))
     });
-    Ok(Report { findings, files_scanned: files.len() })
+    modules.sort_by(|a, b| a.module.cmp(&b.module));
+    Ok(Report { findings, files_scanned, modules })
+}
+
+/// Build one module-graph node: the module path derived from the file
+/// path, its scope, and its crate-internal import edges.
+fn module_node(
+    root: &Path,
+    file: &Path,
+    display: &str,
+    src: &str,
+) -> ModuleNode {
+    // `src/cluster/state.rs` → `cluster::state`; `mod.rs` names its
+    // directory; tests/examples roots prefix their root name.
+    let rel = file.strip_prefix(root).unwrap_or(file);
+    let mut parts: Vec<String> = rel
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect();
+    if let Some(last) = parts.last_mut() {
+        *last = last.trim_end_matches(".rs").to_string();
+    }
+    if parts.last().is_some_and(|l| l == "mod") {
+        parts.pop();
+    }
+    let root_name = root
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    if root_name != "src" && !root_name.is_empty() {
+        parts.insert(0, root_name);
+    }
+    let module = parts.join("::");
+
+    let lexed = lexer::lex(src);
+    let parsed = items::parse(src, &lexed);
+    let mut imports = BTreeSet::new();
+    for u in &parsed.uses {
+        let names = u.names();
+        if names.len() < 2
+            || !matches!(names[0], "crate" | "greenpod")
+        {
+            continue;
+        }
+        let target = names[1];
+        // Root-level re-exports (`use crate::Config`) are types, not
+        // module edges.
+        if !target.starts_with(|c: char| c.is_ascii_lowercase()) {
+            continue;
+        }
+        if target == "util" && names.len() >= 3 {
+            imports.insert(format!("util::{}", names[2]));
+        } else {
+            imports.insert(target.to_string());
+        }
+    }
+    ModuleNode {
+        module,
+        scope: scope_of(display),
+        imports: imports.into_iter().collect(),
+    }
 }
 
 fn display_path(p: &Path) -> String {
@@ -186,6 +468,13 @@ fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
     for entry in fs::read_dir(dir)? {
         let path = entry?.path();
         if path.is_dir() {
+            let name = path
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            if SKIP_DIRS.contains(&name.as_str()) {
+                continue;
+            }
             collect_rs_files(&path, out)?;
         } else if path.extension().is_some_and(|e| e == "rs") {
             out.push(path);
@@ -211,6 +500,10 @@ mod tests {
         // Files directly under src/ are held to kernel rules.
         assert_eq!(scope_of("rust/src/lib.rs"), Scope::Kernel);
         assert_eq!(scope_of("rust/src/main.rs"), Scope::Kernel);
+        // Integration tests, examples and benches are tool scope.
+        assert_eq!(scope_of("rust/tests/properties.rs"), Scope::Tool);
+        assert_eq!(scope_of("examples/quickstart.rs"), Scope::Tool);
+        assert_eq!(scope_of("rust/benches/sched.rs"), Scope::Tool);
     }
 
     #[test]
@@ -221,6 +514,7 @@ mod tests {
             line: 81,
             col: 14,
             message: "m".to_string(),
+            allow_rule: None,
         };
         assert_eq!(
             f.render(),
@@ -231,18 +525,107 @@ mod tests {
     #[test]
     fn report_json_shape() {
         let r = Report {
-            findings: vec![Finding {
-                rule: "banned-path",
-                path: "x.rs".to_string(),
-                line: 1,
-                col: 2,
-                message: "m".to_string(),
-            }],
+            findings: vec![
+                Finding {
+                    rule: "banned-path",
+                    path: "x.rs".to_string(),
+                    line: 1,
+                    col: 2,
+                    message: "m".to_string(),
+                    allow_rule: None,
+                },
+                Finding {
+                    rule: "unused-allow",
+                    path: "x.rs".to_string(),
+                    line: 9,
+                    col: 1,
+                    message: "m".to_string(),
+                    allow_rule: Some("unordered-iter".to_string()),
+                },
+            ],
             files_scanned: 3,
+            modules: vec![ModuleNode {
+                module: "cluster::state".to_string(),
+                scope: Scope::Kernel,
+                imports: vec!["config".to_string()],
+            }],
         };
         let j = r.to_json().to_string();
         assert!(j.contains("\"files_scanned\":3"), "{j}");
         assert!(j.contains("\"rule\":\"banned-path\""), "{j}");
         assert!(j.contains("\"line\":1"), "{j}");
+        // Satellite: unused-allow findings carry the allow's rule.
+        assert!(j.contains("\"allow_rule\":\"unordered-iter\""), "{j}");
+        // The stable catalog section names every rule with its layer.
+        assert!(j.contains("\"catalog\":["), "{j}");
+        assert!(
+            j.contains("\"name\":\"kernel-imports-tool\""),
+            "{j}"
+        );
+        assert!(j.contains("\"layer\":\"item\""), "{j}");
+        // The module graph section.
+        assert!(
+            j.contains("\"module\":\"cluster::state\""),
+            "{j}"
+        );
+        assert!(j.contains("\"scope\":\"kernel\""), "{j}");
+        assert!(j.contains("\"imports\":[\"config\"]"), "{j}");
+    }
+
+    #[test]
+    fn catalog_is_sorted_and_matches_rule_names() {
+        let names: Vec<&str> =
+            RULE_CATALOG.iter().map(|r| r.name).collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted, "catalog must stay sorted by name");
+        for info in &RULE_CATALOG {
+            assert!(
+                matches!(info.layer, "token" | "item"),
+                "{}: bad layer",
+                info.name
+            );
+            assert!(
+                matches!(info.scope, "kernel" | "all"),
+                "{}: bad scope",
+                info.name
+            );
+            assert!(!info.distilled_from.is_empty());
+        }
+    }
+
+    #[test]
+    fn module_node_paths_and_imports() {
+        let n = module_node(
+            Path::new("rust/src"),
+            Path::new("rust/src/cluster/state.rs"),
+            "rust/src/cluster/state.rs",
+            "use crate::config::ClusterConfig;\n\
+             use crate::util::json::Json;\n\
+             use crate::util::stats::total_order;\n\
+             use crate::Config;\n\
+             use std::collections::BTreeMap;\n",
+        );
+        assert_eq!(n.module, "cluster::state");
+        assert_eq!(n.scope, Scope::Kernel);
+        assert_eq!(n.imports, ["config", "util::json", "util::stats"]);
+
+        let m = module_node(
+            Path::new("rust/src"),
+            Path::new("rust/src/trace/mod.rs"),
+            "rust/src/trace/mod.rs",
+            "",
+        );
+        assert_eq!(m.module, "trace");
+
+        let t = module_node(
+            Path::new("rust/tests"),
+            Path::new("rust/tests/lint.rs"),
+            "rust/tests/lint.rs",
+            "use greenpod::lint::lint_source;\n",
+        );
+        assert_eq!(t.module, "tests::lint");
+        assert_eq!(t.scope, Scope::Tool);
+        assert_eq!(t.imports, ["lint"]);
     }
 }

@@ -20,11 +20,18 @@ use std::collections::BTreeSet;
 use super::lexer::{lex, Lexed, Token, TokenKind};
 use super::{Finding, Scope};
 
-/// Rules that may appear inside `allow(…)`.
-pub(super) const RULE_NAMES: [&str; 5] = [
+/// Rules that may appear inside `allow(…)` — the token-level five
+/// (PR 8) plus the item-level five (this PR). Kept sorted; the rule
+/// catalog in [`super::RULE_CATALOG`] is pinned to this list by test.
+pub(super) const RULE_NAMES: [&str; 10] = [
     "banned-path",
     "float-cmp-unwrap",
+    "kernel-imports-tool",
     "lossy-id-cast",
+    "silent-clamp",
+    "stale-version-stamp",
+    "unbounded-growth",
+    "unguarded-div",
     "unordered-iter",
     "wall-clock-in-kernel",
 ];
@@ -43,6 +50,15 @@ pub(super) fn check_source(
     rule_lossy_id_cast(path, src, &lexed.tokens, &mut findings);
     rule_float_cmp_unwrap(path, src, &lexed.tokens, &mut findings);
     rule_banned_ident(path, src, &lexed.tokens, &mut findings);
+    let items = super::items::parse(src, &lexed);
+    super::rules_item::check_items(
+        path,
+        scope,
+        src,
+        &lexed.tokens,
+        &items,
+        &mut findings,
+    );
 
     let mut allows = collect_allows(path, src, &lexed, &mut findings);
     let mut kept = Vec::with_capacity(findings.len());
@@ -70,6 +86,7 @@ pub(super) fn check_source(
                      errors; remove it or move it to the violating line",
                     a.rule
                 ),
+                allow_rule: Some(a.rule.clone()),
             });
         }
     }
@@ -89,6 +106,7 @@ fn finding(
         line: at.line,
         col: at.col,
         message,
+        allow_rule: None,
     }
 }
 
@@ -477,7 +495,7 @@ fn collect_allows(
                     used: false,
                 });
             }
-            Err(why) => findings.push(Finding {
+            Err((why, attempted)) => findings.push(Finding {
                 rule: "malformed-allow",
                 path: path.to_string(),
                 line: c.line,
@@ -486,35 +504,54 @@ fn collect_allows(
                     "{why} — expected `// greenpod-lint: \
                      allow(<rule>) reason=\"…\"`"
                 ),
+                allow_rule: attempted,
             }),
         }
     }
     allows
 }
 
-fn parse_allow(s: &str) -> Result<String, String> {
+/// Parse one annotation body. Errors carry the attempted rule name
+/// when one could be read, so `malformed-allow` findings can point
+/// `--json` consumers at the suppression they concern.
+fn parse_allow(s: &str) -> Result<String, (String, Option<String>)> {
     let s = s
         .strip_prefix("allow(")
-        .ok_or_else(|| "missing `allow(<rule>)`".to_string())?;
+        .ok_or_else(|| ("missing `allow(<rule>)`".to_string(), None))?;
     let close = s
         .find(')')
-        .ok_or_else(|| "unclosed `allow(`".to_string())?;
+        .ok_or_else(|| ("unclosed `allow(`".to_string(), None))?;
     let rule = s[..close].trim();
+    let attempted = (!rule.is_empty()).then(|| rule.to_string());
     if !RULE_NAMES.contains(&rule) {
-        return Err(format!("unknown rule `{rule}`"));
+        return Err((format!("unknown rule `{rule}`"), attempted));
     }
+    let fail = |why: &str| (why.to_string(), attempted.clone());
     let s = s[close + 1..].trim_start();
     let s = s
         .strip_prefix("reason=\"")
-        .ok_or_else(|| "missing mandatory `reason=\"…\"`".to_string())?;
-    let end = s
-        .find('"')
-        .ok_or_else(|| "unterminated reason string".to_string())?;
+        .ok_or_else(|| fail("missing mandatory `reason=\"…\"`"))?;
+    // The reason string supports `\"` escapes (reasons quote code).
+    let b = s.as_bytes();
+    let mut end = None;
+    let mut k = 0usize;
+    while k < b.len() {
+        match b[k] {
+            b'\\' => k += 2,
+            b'"' => {
+                end = Some(k);
+                break;
+            }
+            _ => k += 1,
+        }
+    }
+    let end =
+        end.ok_or_else(|| fail("unterminated reason string"))?;
     if s[..end].trim().is_empty() {
-        return Err("empty reason".to_string());
+        return Err(fail("empty reason"));
     }
     if !s[end + 1..].trim().is_empty() {
-        return Err("trailing text after reason".to_string());
+        return Err(fail("trailing text after reason"));
     }
     Ok(rule.to_string())
 }

@@ -1,0 +1,1158 @@
+//! The five item-level lint rules (L2), distilled from PRs 6–9.
+//!
+//! Where [`super::rules`] matches identifier sequences, these rules
+//! consume the [`super::items`] view — use graphs, function windows,
+//! impl ownership, struct fields — so they can state *symbol-level*
+//! invariants: which modules a kernel file may import, whether a
+//! division's denominator is guarded in the same function, whether a
+//! growing collection is drained anywhere in its type's impls,
+//! whether a clamp on virtual time carries its ordering assertion,
+//! and whether a `ClusterState` cache field is stamped through the
+//! version-bumping methods.
+//!
+//! The allow grammar from [`super::rules`] applies to these rules
+//! unchanged.
+
+use super::items::Items;
+use super::lexer::{Token, TokenKind};
+use super::{Finding, Scope, TOOL_MODULES};
+
+/// Kernel modules may import these `util` leaves: they are
+/// deterministic by construction (seeded RNG, hand-rolled JSON, the
+/// shared float comparator) and are exactly the carve-outs the
+/// token-level rules already assume.
+const DETERMINISTIC_UTIL_LEAVES: [&str; 3] = ["json", "rng", "stats"];
+
+/// Collection type heads whose growth the kernel must bound.
+const COLLECTION_HEADS: [&str; 7] = [
+    "BTreeMap", "BTreeSet", "BinaryHeap", "HashMap", "HashSet", "Vec",
+    "VecDeque",
+];
+
+/// Methods that grow a collection in place.
+const GROWERS: [&str; 5] =
+    ["append", "extend", "insert", "push", "push_back"];
+
+/// Methods that bound or drain a collection; any of these on the same
+/// field anywhere in the same type's impls exempts a growth site.
+const DRAINERS: [&str; 11] = [
+    "clear",
+    "drain",
+    "pop",
+    "pop_back",
+    "pop_front",
+    "remove",
+    "remove_entry",
+    "retain",
+    "split_off",
+    "swap_remove",
+    "truncate",
+];
+
+/// `ClusterState` fields read by the incremental-scoring hot path
+/// (PR 6): feasibility indices, per-node allocations, and the version
+/// stamps that invalidate the PreScore row cache.
+const ALLOC_FIELDS: [&str; 10] = [
+    "alloc",
+    "bound",
+    "free_cpu_index",
+    "free_mem_index",
+    "mutations",
+    "node_version",
+    "nodes",
+    "ready_count",
+    "total_alloc_cpu",
+    "total_cap_cpu",
+];
+
+/// The only `ClusterState` methods allowed to touch [`ALLOC_FIELDS`]:
+/// each one either bumps the version stamps itself or *is* the bump.
+const VERSION_STAMP_METHODS: [&str; 6] =
+    ["add_node", "bind", "from_config", "release", "set_ready", "touch"];
+
+pub(super) fn check_items(
+    path: &str,
+    scope: Scope,
+    src: &str,
+    toks: &[Token],
+    items: &Items,
+    out: &mut Vec<Finding>,
+) {
+    rule_kernel_imports_tool(path, scope, src, toks, items, out);
+    rule_unguarded_div(path, scope, src, toks, items, out);
+    rule_unbounded_growth(path, scope, src, toks, items, out);
+    rule_silent_clamp(path, scope, src, toks, items, out);
+    rule_stale_version_stamp(path, src, toks, items, out);
+}
+
+fn finding(
+    rule: &'static str,
+    path: &str,
+    at: &Token,
+    message: String,
+) -> Finding {
+    Finding {
+        rule,
+        path: path.to_string(),
+        line: at.line,
+        col: at.col,
+        message,
+        allow_rule: None,
+    }
+}
+
+fn is_punct(t: &Token, c: u8) -> bool {
+    t.kind == TokenKind::Punct(c)
+}
+
+// ------------------------------------------------------------- rules
+
+/// `kernel-imports-tool`: kernel modules may not `use crate::<tool>`.
+/// The kernel/tool split is the determinism boundary — tool modules
+/// are where wall clocks and hash maps are legal, so a kernel import
+/// of one is a leak path straight into results. The deterministic
+/// `util` leaves (`json`, `rng`, `stats`) are the audited carve-out.
+fn rule_kernel_imports_tool(
+    path: &str,
+    scope: Scope,
+    _src: &str,
+    toks: &[Token],
+    items: &Items,
+    out: &mut Vec<Finding>,
+) {
+    if scope != Scope::Kernel {
+        return;
+    }
+    for u in &items.uses {
+        let segs = &u.segments;
+        if segs.len() < 2 || segs[0].0 != "crate" {
+            continue;
+        }
+        let module = segs[1].0.as_str();
+        if !TOOL_MODULES.contains(&module) {
+            continue;
+        }
+        if module == "util"
+            && segs.len() >= 3
+            && DETERMINISTIC_UTIL_LEAVES.contains(&segs[2].0.as_str())
+        {
+            continue;
+        }
+        let leaf: Vec<&str> =
+            segs.iter().map(|(s, _)| s.as_str()).collect();
+        out.push(finding(
+            "kernel-imports-tool",
+            path,
+            &toks[segs[1].1],
+            format!(
+                "kernel module imports tool module `{module}` \
+                 (`use {}`): the kernel/tool split is the determinism \
+                 boundary — move the dependency behind a kernel trait, \
+                 use a deterministic util leaf (util::{{json,rng,\
+                 stats}}), or carry an audited allow",
+                leaf.join("::"),
+            ),
+        ));
+    }
+}
+
+/// Dotted-chain segment classification for `unguarded-div`.
+enum Denominator {
+    /// `….len()` — base is the segment the length was taken of.
+    LenCall { base: String },
+    /// A plain named chain ending in a capacity-shaped identifier.
+    Capacity { name: String },
+    /// Anything else (literal, parenthesized, clamped, …).
+    Other,
+}
+
+fn capacity_shaped(name: &str) -> bool {
+    name.split('_').any(|part| {
+        matches!(part, "cap" | "capacity" | "count" | "counts" | "len")
+    })
+}
+
+/// Classify the expression after a `/` or `%` at token `start`: walk a
+/// dotted chain (`self.total_cap_cpu`, `t.entries.len()`), skipping
+/// call parens and index brackets, and look at the terminal segment.
+/// A terminal `.max(..)`/`.min(..)`/`.clamp(..)` means the value is
+/// already clamped away from zero, so it classifies as `Other`.
+fn classify_denominator(
+    src: &str,
+    toks: &[Token],
+    start: usize,
+) -> Denominator {
+    let mut i = start;
+    let mut prev_seg: Option<String> = None;
+    let mut last_seg: Option<(String, bool)> = None; // (name, is_call)
+    loop {
+        let Some(t) = toks.get(i) else { break };
+        if t.kind != TokenKind::Ident {
+            return Denominator::Other;
+        }
+        let name = t.text(src).to_string();
+        i += 1;
+        // Skip one call-argument group and/or index group.
+        let mut is_call = false;
+        while let Some(n) = toks.get(i) {
+            let open = match n.kind {
+                TokenKind::Punct(b'(') => b')',
+                TokenKind::Punct(b'[') => b']',
+                _ => break,
+            };
+            is_call |= open == b')';
+            let mut depth = 1usize;
+            i += 1;
+            while depth > 0 {
+                let Some(m) = toks.get(i) else { break };
+                match m.kind {
+                    TokenKind::Punct(b'(') if open == b')' => depth += 1,
+                    TokenKind::Punct(b')') if open == b')' => depth -= 1,
+                    TokenKind::Punct(b'[') if open == b']' => depth += 1,
+                    TokenKind::Punct(b']') if open == b']' => depth -= 1,
+                    _ => {}
+                }
+                i += 1;
+            }
+        }
+        prev_seg = last_seg.take().map(|(n, _)| n).or(prev_seg);
+        last_seg = Some((name, is_call));
+        // A `.` continues the chain; tuple indices (`.0`) end it as
+        // an unshaped expression.
+        match toks.get(i) {
+            Some(n) if is_punct(n, b'.') => {
+                i += 1;
+                if toks
+                    .get(i)
+                    .is_some_and(|t| t.kind != TokenKind::Ident)
+                {
+                    return Denominator::Other;
+                }
+            }
+            _ => break,
+        }
+    }
+    match last_seg {
+        Some((name, true)) if name == "len" => Denominator::LenCall {
+            base: prev_seg.unwrap_or_else(|| "len".to_string()),
+        },
+        Some((name, true))
+            if matches!(name.as_str(), "max" | "min" | "clamp") =>
+        {
+            Denominator::Other
+        }
+        Some((name, false)) if capacity_shaped(&name) => {
+            Denominator::Capacity { name }
+        }
+        _ => Denominator::Other,
+    }
+}
+
+/// Is there a zero guard for `name` in the token window `[lo, hi)`?
+/// Three accepted shapes: `name.is_empty()` (any polarity), a
+/// comparison of `name` (or `name.len()`) against a numeric literal,
+/// and an assert-family macro whose arguments mention `name`.
+fn has_zero_guard(
+    src: &str,
+    toks: &[Token],
+    lo: usize,
+    hi: usize,
+    name: &str,
+) -> bool {
+    let hi = hi.min(toks.len());
+    for i in lo..hi {
+        let t = &toks[i];
+        if t.kind != TokenKind::Ident {
+            continue;
+        }
+        let text = t.text(src);
+        if text == name {
+            // `name . is_empty` (possibly with an index group or
+            // `.len()` in between).
+            let mut j = i + 1;
+            let mut hops = 0;
+            while j + 1 < hi && hops < 8 {
+                hops += 1;
+                if is_punct(&toks[j], b'.') {
+                    let seg = &toks[j + 1];
+                    if seg.is_ident(src, "is_empty") {
+                        return true;
+                    }
+                    if seg.is_ident(src, "len") {
+                        j += 2;
+                        continue;
+                    }
+                    break;
+                }
+                match toks[j].kind {
+                    TokenKind::Punct(b'[') => {
+                        let mut depth = 1usize;
+                        j += 1;
+                        while j < hi && depth > 0 {
+                            match toks[j].kind {
+                                TokenKind::Punct(b'[') => depth += 1,
+                                TokenKind::Punct(b']') => depth -= 1,
+                                _ => {}
+                            }
+                            j += 1;
+                        }
+                    }
+                    TokenKind::Punct(b'(') | TokenKind::Punct(b')') => {
+                        j += 1
+                    }
+                    _ => break,
+                }
+            }
+            // Comparison against a numeric literal: `name == 0`,
+            // `name > 0`, `name.len() >= 1` (j now sits past any
+            // skipped call/index groups).
+            let mut k = j;
+            if let Some(t) = toks.get(k) {
+                let first = match t.kind {
+                    TokenKind::Punct(c @ (b'=' | b'!' | b'<' | b'>')) => {
+                        Some(c)
+                    }
+                    _ => None,
+                };
+                if let Some(c) = first {
+                    k += 1;
+                    if matches!(c, b'=' | b'!') {
+                        if !toks.get(k).is_some_and(|t| is_punct(t, b'='))
+                        {
+                            continue;
+                        }
+                        k += 1;
+                    } else if toks
+                        .get(k)
+                        .is_some_and(|t| is_punct(t, b'='))
+                    {
+                        k += 1;
+                    }
+                    if toks
+                        .get(k)
+                        .is_some_and(|t| t.kind == TokenKind::Number)
+                    {
+                        return true;
+                    }
+                }
+            }
+        }
+        // Assert-family macro mentioning `name` in its arguments.
+        if (text.starts_with("assert")
+            || text.starts_with("debug_assert")
+            || text == "ensure")
+            && toks.get(i + 1).is_some_and(|t| is_punct(t, b'!'))
+            && toks.get(i + 2).is_some_and(|t| is_punct(t, b'('))
+        {
+            let mut depth = 1usize;
+            let mut j = i + 3;
+            while j < hi && depth > 0 {
+                match toks[j].kind {
+                    TokenKind::Punct(b'(') => depth += 1,
+                    TokenKind::Punct(b')') => depth -= 1,
+                    TokenKind::Ident if toks[j].text(src) == name => {
+                        return true;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+    }
+    false
+}
+
+/// `unguarded-div`: `/` or `%` by a `.len()` / capacity-shaped
+/// denominator in kernel code with no zero guard in the enclosing
+/// function — the PR 6 NaN class (`alloc / capacity` on an empty or
+/// zero-capacity node poisons utilization, scoring, and the energy
+/// ledger without a panic to point at the site).
+fn rule_unguarded_div(
+    path: &str,
+    scope: Scope,
+    src: &str,
+    toks: &[Token],
+    items: &Items,
+    out: &mut Vec<Finding>,
+) {
+    if scope != Scope::Kernel {
+        return;
+    }
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if !matches!(
+            t.kind,
+            TokenKind::Punct(b'/') | TokenKind::Punct(b'%')
+        ) {
+            continue;
+        }
+        // `/=` and `%=` are still divisions; the denominator starts
+        // after the `=`.
+        let mut den = i + 1;
+        if toks.get(den).is_some_and(|t| is_punct(t, b'=')) {
+            den += 1;
+        }
+        let guard_name = match classify_denominator(src, toks, den) {
+            Denominator::LenCall { base } => base,
+            Denominator::Capacity { name } => name,
+            Denominator::Other => continue,
+        };
+        let (lo, hi) = items
+            .enclosing_fn(i)
+            .and_then(|f| f.body)
+            .unwrap_or((0, toks.len()));
+        if !has_zero_guard(src, toks, lo, hi, &guard_name) {
+            out.push(finding(
+                "unguarded-div",
+                path,
+                t,
+                format!(
+                    "division by `{guard_name}` with no zero guard in \
+                     the enclosing function: a zero denominator makes \
+                     NaN, and NaN reaches scoring and the energy \
+                     ledger silently — guard with `is_empty()`/`== 0` \
+                     or assert the invariant"
+                ),
+            ));
+        }
+    }
+}
+
+/// `unbounded-growth`: `.push`/`.insert` on a struct-field collection
+/// inside a kernel loop body, with no drain/cap call on that field
+/// anywhere in the same type's impls — the PR 6 event-buffer class
+/// (`ClusterState::events` grew one entry per mutation for the whole
+/// run until a retention cap landed).
+fn rule_unbounded_growth(
+    path: &str,
+    scope: Scope,
+    src: &str,
+    toks: &[Token],
+    items: &Items,
+    out: &mut Vec<Finding>,
+) {
+    if scope != Scope::Kernel {
+        return;
+    }
+    // Collection-typed fields, per struct.
+    let collection_fields: Vec<(&str, &str)> = items
+        .structs
+        .iter()
+        .flat_map(|s| {
+            s.fields
+                .iter()
+                .filter(|f| {
+                    COLLECTION_HEADS.contains(&f.type_head.as_str())
+                })
+                .map(move |f| (s.name.as_str(), f.name.as_str()))
+        })
+        .collect();
+    if collection_fields.is_empty() {
+        return;
+    }
+    // (type, field) pairs drained somewhere in that type's impls.
+    let mut drained: Vec<(&str, &str)> = Vec::new();
+    for im in &items.impls {
+        for i in im.body.0..im.body.1.min(toks.len()) {
+            if let Some(f) = self_field_method(src, toks, i, &DRAINERS) {
+                drained.push((im.type_name.as_str(), f));
+            }
+        }
+    }
+    // Loop bodies inside function windows.
+    let loop_ranges = loop_body_ranges(src, toks, items);
+    for (lo, hi) in loop_ranges {
+        for i in lo..hi.min(toks.len()) {
+            let Some(field) = self_field_method(src, toks, i, &GROWERS)
+            else {
+                continue;
+            };
+            let Some(im) = items.enclosing_impl(i) else { continue };
+            let ty = im.type_name.as_str();
+            if !collection_fields.contains(&(ty, field)) {
+                continue;
+            }
+            if drained.contains(&(ty, field)) {
+                continue;
+            }
+            // The method token (`push`/`insert`/…) anchors the span.
+            out.push(finding(
+                "unbounded-growth",
+                path,
+                &toks[i + 4],
+                format!(
+                    "`self.{field}` grows inside a kernel loop and no \
+                     impl of `{ty}` drains or caps it: long runs \
+                     accumulate without bound — add a retention \
+                     cap/drain (cf. `ClusterState::events`, PR 6) or \
+                     carry an audited allow"
+                ),
+            ));
+        }
+    }
+}
+
+/// Match `self . <field> . <method∈set> (` at token `i`; returns the
+/// field name.
+fn self_field_method<'a>(
+    src: &'a str,
+    toks: &[Token],
+    i: usize,
+    set: &[&str],
+) -> Option<&'a str> {
+    if !toks.get(i)?.is_ident(src, "self") {
+        return None;
+    }
+    if !is_punct(toks.get(i + 1)?, b'.') {
+        return None;
+    }
+    let field = toks.get(i + 2)?;
+    if field.kind != TokenKind::Ident {
+        return None;
+    }
+    if !is_punct(toks.get(i + 3)?, b'.') {
+        return None;
+    }
+    let method = toks.get(i + 4)?;
+    if method.kind != TokenKind::Ident
+        || !set.contains(&method.text(src))
+    {
+        return None;
+    }
+    if !is_punct(toks.get(i + 5)?, b'(') {
+        return None;
+    }
+    Some(field.text(src))
+}
+
+/// Token ranges of `for`/`while`/`loop` bodies inside function
+/// windows (the loop keyword must be in statement position).
+fn loop_body_ranges(
+    src: &str,
+    toks: &[Token],
+    items: &Items,
+) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for f in &items.fns {
+        let Some((lo, hi)) = f.body else { continue };
+        for i in lo..hi.min(toks.len()) {
+            let t = &toks[i];
+            if t.kind != TokenKind::Ident
+                || !matches!(t.text(src), "for" | "while" | "loop")
+            {
+                continue;
+            }
+            let stmt_position = i == 0
+                || matches!(
+                    toks[i - 1].kind,
+                    TokenKind::Punct(b'{')
+                        | TokenKind::Punct(b'}')
+                        | TokenKind::Punct(b';')
+                );
+            if !stmt_position {
+                continue;
+            }
+            // Body = first `{` after the header at paren depth 0.
+            let mut paren = 0i32;
+            let mut j = i + 1;
+            while j < hi.min(toks.len()) {
+                match toks[j].kind {
+                    TokenKind::Punct(b'(') => paren += 1,
+                    TokenKind::Punct(b')') => paren -= 1,
+                    TokenKind::Punct(b'{') if paren == 0 => {
+                        let mut depth = 1usize;
+                        let mut k = j + 1;
+                        while k < toks.len() && depth > 0 {
+                            match toks[k].kind {
+                                TokenKind::Punct(b'{') => depth += 1,
+                                TokenKind::Punct(b'}') => depth -= 1,
+                                _ => {}
+                            }
+                            k += 1;
+                        }
+                        out.push((j, k));
+                        break;
+                    }
+                    TokenKind::Punct(b';') if paren == 0 => break,
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+fn time_like(name: &str) -> bool {
+    name.ends_with("_s")
+        || name.ends_with("_ts")
+        || name.contains("time")
+        || matches!(
+            name,
+            "now" | "ts"
+                | "at"
+                | "when"
+                | "deadline"
+                | "horizon"
+                | "makespan"
+                | "timestamp"
+                | "clock"
+        )
+}
+
+/// `silent-clamp`: `.max(…)`/`.clamp(…)` on a time-like value with no
+/// adjacent `debug_assert` — the PR 9 ordering-clamp class (a
+/// `.max(now)` on an arrival timestamp silently reordered a late
+/// feeder instead of failing loudly, and the golden traces pinned the
+/// wrong order). A clamp states "this should already hold"; the
+/// assert makes the violation visible in debug runs.
+fn rule_silent_clamp(
+    path: &str,
+    scope: Scope,
+    src: &str,
+    toks: &[Token],
+    _items: &Items,
+    out: &mut Vec<Finding>,
+) {
+    if scope != Scope::Kernel {
+        return;
+    }
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokenKind::Ident
+            || !matches!(t.text(src), "max" | "clamp")
+        {
+            continue;
+        }
+        // Method call with at least one argument.
+        if i == 0 || !is_punct(&toks[i - 1], b'.') {
+            continue;
+        }
+        let Some(open) = toks.get(i + 1) else { continue };
+        if !is_punct(open, b'(') {
+            continue;
+        }
+        if toks.get(i + 2).is_some_and(|t| is_punct(t, b')')) {
+            continue; // iterator `.max()` — not a clamp
+        }
+        let arg_end = match matching_paren(toks, i + 1) {
+            Some(e) => e,
+            None => continue,
+        };
+        let recv_start = receiver_start(toks, i - 1);
+        // Time-likeness: any identifier in the receiver chain or the
+        // argument list.
+        let involved = (recv_start..=arg_end).any(|j| {
+            let t = &toks[j];
+            t.kind == TokenKind::Ident
+                && !matches!(t.text(src), "max" | "clamp")
+                && time_like(t.text(src))
+        });
+        if !involved {
+            continue;
+        }
+        // Running-max exemption: `lhs = lhs.max(x)` where the
+        // assignment target is the receiver chain itself.
+        if running_max_shape(src, toks, recv_start, i - 1) {
+            continue;
+        }
+        // An assert within the adjacent window keeps the clamp
+        // honest.
+        let line = t.line;
+        let asserted = toks.iter().any(|a| {
+            a.kind == TokenKind::Ident
+                && a.line + 4 >= line
+                && a.line <= line + 1
+                && {
+                    let n = a.text(src);
+                    n.starts_with("debug_assert")
+                        || n.starts_with("assert")
+                        || n == "ensure"
+                }
+        });
+        if !asserted {
+            out.push(finding(
+                "silent-clamp",
+                path,
+                t,
+                format!(
+                    "`.{}` on a time-like value with no adjacent \
+                     `debug_assert`: a clamp that \"fixes\" \
+                     out-of-order virtual time hides the ordering bug \
+                     it papers over (PR 9) — assert the expected \
+                     ordering next to the clamp",
+                    t.text(src)
+                ),
+            ));
+        }
+    }
+}
+
+fn matching_paren(toks: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 1usize;
+    let mut j = open + 1;
+    while j < toks.len() {
+        match toks[j].kind {
+            TokenKind::Punct(b'(') => depth += 1,
+            TokenKind::Punct(b')') => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(j);
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Walk back from the `.` before a method name to the start of the
+/// receiver chain (`a.b`, `f(x).y`, `xs[i]`, `(a - b)`).
+fn receiver_start(toks: &[Token], dot: usize) -> usize {
+    let mut j = dot; // at the `.`
+    loop {
+        if j == 0 {
+            return 0;
+        }
+        // Element before the current position.
+        let mut k = j - 1;
+        match toks[k].kind {
+            TokenKind::Ident | TokenKind::Number => {}
+            TokenKind::Punct(close @ (b')' | b']')) => {
+                let open = if close == b')' { b'(' } else { b'[' };
+                let mut depth = 1usize;
+                while depth > 0 {
+                    if k == 0 {
+                        return 0;
+                    }
+                    k -= 1;
+                    match toks[k].kind {
+                        TokenKind::Punct(c) if c == close => depth += 1,
+                        TokenKind::Punct(c) if c == open => depth -= 1,
+                        _ => {}
+                    }
+                }
+                // A call's callee ident belongs to the chain too.
+                if k > 0 && toks[k - 1].kind == TokenKind::Ident {
+                    k -= 1;
+                }
+            }
+            _ => return j + 1,
+        }
+        // Continue through a preceding `.`; otherwise `k` starts the
+        // chain.
+        if k > 0 && is_punct(&toks[k - 1], b'.') {
+            j = k - 1;
+        } else {
+            return k;
+        }
+    }
+}
+
+/// `lhs = lhs.max(x)` running-max shape: the tokens before the
+/// receiver are `=` preceded by the same ident/`.` chain.
+fn running_max_shape(
+    src: &str,
+    toks: &[Token],
+    recv_start: usize,
+    dot: usize,
+) -> bool {
+    if recv_start == 0 {
+        return false;
+    }
+    let eq = recv_start - 1;
+    if !is_punct(&toks[eq], b'=') {
+        return false;
+    }
+    // `==`, `+=`, `<=` etc. are not plain assignment.
+    if eq > 0
+        && matches!(
+            toks[eq - 1].kind,
+            TokenKind::Punct(b'=')
+                | TokenKind::Punct(b'!')
+                | TokenKind::Punct(b'<')
+                | TokenKind::Punct(b'>')
+                | TokenKind::Punct(b'+')
+                | TokenKind::Punct(b'-')
+                | TokenKind::Punct(b'*')
+                | TokenKind::Punct(b'/')
+        )
+    {
+        return false;
+    }
+    let recv: String = toks[recv_start..dot]
+        .iter()
+        .map(|t| t.text(src))
+        .collect();
+    // Collect the assignment target chain right-to-left (idents,
+    // `.`, and a leading `*` deref are part of the place).
+    let mut k = eq;
+    let mut lo = eq;
+    while k > 0 {
+        k -= 1;
+        match toks[k].kind {
+            TokenKind::Ident
+            | TokenKind::Number
+            | TokenKind::Punct(b'.') => lo = k,
+            TokenKind::Punct(b'*') if lo == k + 1 => {
+                lo = k;
+                break;
+            }
+            _ => break,
+        }
+    }
+    let lhs: String = toks[lo..eq]
+        .iter()
+        .map(|t| t.text(src))
+        .collect::<String>()
+        .trim_start_matches('*')
+        .to_string();
+    !lhs.is_empty() && lhs == recv
+}
+
+/// `stale-version-stamp`: mutating a `ClusterState` allocation field
+/// outside the version-bumping method allowlist. PR 6's incremental
+/// scoring trusts `node_version` to invalidate its row cache; a field
+/// write that skips `touch()` leaves the cache serving stale rows
+/// with no failing assertion anywhere near the bug.
+fn rule_stale_version_stamp(
+    path: &str,
+    src: &str,
+    toks: &[Token],
+    items: &Items,
+    out: &mut Vec<Finding>,
+) {
+    for f in &items.fns {
+        let Some((lo, hi)) = f.body else { continue };
+        let in_cluster_state = f
+            .impl_idx
+            .and_then(|i| items.impls.get(i))
+            .is_some_and(|im| im.type_name == "ClusterState");
+        if !in_cluster_state {
+            continue;
+        }
+        if VERSION_STAMP_METHODS.contains(&f.name.as_str()) {
+            continue;
+        }
+        for i in lo..hi.min(toks.len()) {
+            let Some(field) = self_alloc_field(src, toks, i) else {
+                continue;
+            };
+            if !is_field_write(src, toks, i) {
+                continue;
+            }
+            out.push(finding(
+                "stale-version-stamp",
+                path,
+                &toks[i + 2],
+                format!(
+                    "`self.{field}` mutated outside the \
+                     version-stamping allowlist \
+                     ({}): the incremental-scoring cache keys on \
+                     `node_version`, so an unstamped write serves \
+                     stale rows — route the mutation through an \
+                     allowlisted method or call `touch()` and extend \
+                     the allowlist",
+                    VERSION_STAMP_METHODS.join("/"),
+                ),
+            ));
+        }
+    }
+}
+
+/// Match `self . <field∈ALLOC_FIELDS>` at token `i`.
+fn self_alloc_field<'a>(
+    src: &'a str,
+    toks: &[Token],
+    i: usize,
+) -> Option<&'a str> {
+    if !toks.get(i)?.is_ident(src, "self") {
+        return None;
+    }
+    if !is_punct(toks.get(i + 1)?, b'.') {
+        return None;
+    }
+    let field = toks.get(i + 2)?;
+    if field.kind != TokenKind::Ident {
+        return None;
+    }
+    let name = field.text(src);
+    ALLOC_FIELDS.contains(&name).then_some(name)
+}
+
+/// Is the `self.<field>` at token `i` a write? Covers `=`/`+=`/`-=`
+/// (after optional index groups / nested field hops), mutating method
+/// calls, and `&mut self.<field>` borrows.
+fn is_field_write(src: &str, toks: &[Token], i: usize) -> bool {
+    // `& mut self . field` (the borrow hands out write access).
+    if i >= 2
+        && is_punct(&toks[i - 2], b'&')
+        && toks[i - 1].is_ident(src, "mut")
+    {
+        return true;
+    }
+    let mut j = i + 3; // past `self . field`
+    // Skip index groups and nested field accesses: `self.nodes[id]
+    // .ready = …` is still a write into `nodes`.
+    let mut hops = 0usize;
+    while hops < 16 {
+        hops += 1;
+        match toks.get(j).map(|t| t.kind) {
+            Some(TokenKind::Punct(b'[')) => {
+                let mut depth = 1usize;
+                j += 1;
+                while j < toks.len() && depth > 0 {
+                    match toks[j].kind {
+                        TokenKind::Punct(b'[') => depth += 1,
+                        TokenKind::Punct(b']') => depth -= 1,
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            }
+            Some(TokenKind::Punct(b'.')) => {
+                let Some(next) = toks.get(j + 1) else { return false };
+                if next.kind != TokenKind::Ident {
+                    return false;
+                }
+                j += 2;
+            }
+            _ => break,
+        }
+    }
+    match toks.get(j).map(|t| t.kind) {
+        // Plain assignment `= …` (not `==`).
+        Some(TokenKind::Punct(b'=')) => !toks
+            .get(j + 1)
+            .is_some_and(|t| is_punct(t, b'=')),
+        // Compound assignment `+=`, `-=`, `*=`, `/=`.
+        Some(TokenKind::Punct(b'+' | b'-' | b'*' | b'/')) => {
+            toks.get(j + 1).is_some_and(|t| is_punct(t, b'='))
+        }
+        // Mutating method call: the dotted-hop loop above left `j` at
+        // the `(` of the last chain segment when it is a call.
+        _ => {
+            if j >= 1
+                && toks.get(j).is_some_and(|t| is_punct(t, b'('))
+                && toks[j - 1].kind == TokenKind::Ident
+            {
+                const MUTATORS: [&str; 10] = [
+                    "clear", "drain", "insert", "pop", "push",
+                    "push_back", "remove", "swap_remove", "truncate",
+                    "update",
+                ];
+                return MUTATORS.contains(&toks[j - 1].text(src));
+            }
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lint_source;
+
+    const KERNEL: &str = "rust/src/simulation/fixture.rs";
+    const TOOL: &str = "rust/src/util/fixture.rs";
+
+    fn rules_of(path: &str, src: &str) -> Vec<&'static str> {
+        lint_source(path, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn kernel_imports_tool_flags_tool_modules_not_util_leaves() {
+        let bad = "use crate::api::ApiEvent;\n";
+        assert_eq!(rules_of(KERNEL, bad), ["kernel-imports-tool"]);
+        assert!(rules_of(TOOL, bad).is_empty());
+        // Deterministic util leaves are the audited carve-out.
+        assert!(rules_of(KERNEL, "use crate::util::json::Json;\n")
+            .is_empty());
+        assert!(rules_of(KERNEL, "use crate::util::rng::SplitMix64;\n")
+            .is_empty());
+        // Bare `crate::util` (or a non-leaf) is still a violation.
+        assert_eq!(
+            rules_of(KERNEL, "use crate::util::bench::Bench;\n"),
+            ["kernel-imports-tool"]
+        );
+        // Grouped use trees flag each offending leaf.
+        let grouped =
+            "use crate::{runtime::Engine, cluster::Pod, api::Api};\n";
+        assert_eq!(
+            rules_of(KERNEL, grouped),
+            ["kernel-imports-tool", "kernel-imports-tool"]
+        );
+        // Non-crate paths never fire.
+        assert!(rules_of(KERNEL, "use std::api::whatever;\n").is_empty());
+    }
+
+    #[test]
+    fn unguarded_div_requires_guard_in_same_fn() {
+        let bad = "fn mean(xs: &[f64]) -> f64 {\n\
+                   xs.iter().sum::<f64>() / xs.len() as f64\n}\n";
+        assert_eq!(rules_of(KERNEL, bad), ["unguarded-div"]);
+        assert!(rules_of(TOOL, bad).is_empty());
+        let guarded = "fn mean(xs: &[f64]) -> f64 {\n\
+                       if xs.is_empty() { return 0.0; }\n\
+                       xs.iter().sum::<f64>() / xs.len() as f64\n}\n";
+        assert!(rules_of(KERNEL, guarded).is_empty());
+        let zero_cmp = "fn util(&self) -> f64 {\n\
+                        let cap = self.cap_millis;\n\
+                        if cap == 0 { return 0.0; }\n\
+                        self.alloc_millis as f64 / cap as f64\n}\n";
+        assert!(rules_of(KERNEL, zero_cmp).is_empty());
+        let asserted = "fn share(&self, total_count: u64) -> f64 {\n\
+                        debug_assert!(total_count > 0);\n\
+                        self.n as f64 / total_count as f64\n}\n";
+        assert!(rules_of(KERNEL, asserted).is_empty());
+        // A clamped denominator is already safe.
+        assert!(rules_of(
+            KERNEL,
+            "fn f(xs: &[u64]) -> usize { 10 / xs.len().max(1) }\n"
+        )
+        .is_empty());
+        // Plain numeric denominators never fire.
+        assert!(rules_of(KERNEL, "fn f(x: f64) -> f64 { x / 8.0 }\n")
+            .is_empty());
+    }
+
+    #[test]
+    fn unbounded_growth_needs_drain_in_same_type() {
+        let bad = "\
+struct Log { entries: Vec<u64> }
+impl Log {
+    fn ingest(&mut self, batch: &[u64]) {
+        for &e in batch {
+            self.entries.push(e);
+        }
+    }
+}
+";
+        assert_eq!(rules_of(KERNEL, bad), ["unbounded-growth"]);
+        assert!(rules_of(TOOL, bad).is_empty());
+        // A drain in a *different* impl block of the same type (the
+        // AlibabaTaskReader shape) still exempts.
+        let drained = format!(
+            "{bad}impl Log {{\n    fn next(&mut self) -> Option<u64> \
+             {{ self.entries.pop() }}\n}}\n"
+        );
+        assert!(rules_of(KERNEL, &drained).is_empty());
+        // Pushes outside loops are fine.
+        let no_loop = "\
+struct Log { entries: Vec<u64> }
+impl Log {
+    fn record(&mut self, e: u64) { self.entries.push(e); }
+}
+";
+        assert!(rules_of(KERNEL, no_loop).is_empty());
+        // Local (non-self) collections are out of scope.
+        let local = "\
+struct Log { entries: Vec<u64> }
+impl Log {
+    fn collect(&self, batch: &[u64]) -> Vec<u64> {
+        let mut v = Vec::new();
+        for &e in batch { v.push(e); }
+        v
+    }
+}
+";
+        assert!(rules_of(KERNEL, local).is_empty());
+    }
+
+    #[test]
+    fn silent_clamp_wants_adjacent_assert() {
+        let bad = "fn effective(at_s: f64, now: f64) -> f64 {\n\
+                   at_s.max(now)\n}\n";
+        assert_eq!(rules_of(KERNEL, bad), ["silent-clamp"]);
+        assert!(rules_of(TOOL, bad).is_empty());
+        let asserted = "fn effective(at_s: f64, now: f64) -> f64 {\n\
+                        debug_assert!(at_s >= now);\n\
+                        at_s.max(now)\n}\n";
+        assert!(rules_of(KERNEL, asserted).is_empty());
+        // Running max is accumulation, not ordering repair.
+        let running = "fn track(&mut self, now: f64) {\n\
+                       self.makespan = self.makespan.max(now);\n}\n";
+        assert!(rules_of(KERNEL, running).is_empty());
+        // Non-time values clamp freely.
+        assert!(rules_of(
+            KERNEL,
+            "fn f(w: f64, peak: f64) -> f64 { w.max(peak) }\n"
+        )
+        .is_empty());
+        // Iterator `.max()` is not a clamp.
+        assert!(rules_of(
+            KERNEL,
+            "fn f(xs: &[u64]) -> Option<u64> { \
+             xs.iter().copied().max() }\n"
+        )
+        .is_empty());
+        // `.clamp` with a time-like bound counts too.
+        let clamp = "fn f(x: f64, end_s: f64) -> f64 {\n\
+                     x.clamp(0.0, end_s)\n}\n";
+        assert_eq!(rules_of(KERNEL, clamp), ["silent-clamp"]);
+    }
+
+    #[test]
+    fn stale_version_stamp_allowlists_stamping_methods() {
+        let bad = "\
+pub struct ClusterState { alloc: Vec<u64>, node_version: Vec<u64> }
+impl ClusterState {
+    pub fn sneak(&mut self, id: usize) {
+        self.alloc[id] += 1;
+    }
+}
+";
+        assert_eq!(rules_of(KERNEL, bad), ["stale-version-stamp"]);
+        // Tool scope still applies: the rule is about the type, not
+        // the directory.
+        assert_eq!(rules_of(TOOL, bad), ["stale-version-stamp"]);
+        let allowlisted = "\
+pub struct ClusterState { alloc: Vec<u64>, node_version: Vec<u64> }
+impl ClusterState {
+    pub fn bind(&mut self, id: usize) {
+        self.alloc[id] += 1;
+        self.touch(id);
+    }
+    fn touch(&mut self, id: usize) { self.node_version[id] += 1; }
+}
+";
+        assert!(rules_of(KERNEL, allowlisted).is_empty());
+        // Reads are not writes.
+        let read = "\
+pub struct ClusterState { alloc: Vec<u64> }
+impl ClusterState {
+    pub fn peek(&self, id: usize) -> u64 { self.alloc[id] }
+    pub fn same(&self, id: usize) -> bool { self.alloc[id] == 0 }
+}
+";
+        assert!(rules_of(KERNEL, read).is_empty());
+        // Other types' fields named like alloc fields are fine.
+        let other = "\
+pub struct Arena { alloc: Vec<u64> }
+impl Arena {
+    pub fn grab(&mut self, id: usize) { self.alloc[id] += 1; }
+}
+";
+        assert!(rules_of(KERNEL, other).is_empty());
+        // `&mut` borrows of alloc fields count as writes.
+        let borrow = "\
+pub struct ClusterState { free_cpu_index: Index }
+impl ClusterState {
+    pub fn fiddle(&mut self) {
+        let idx = &mut self.free_cpu_index;
+        idx.update(0, 1);
+    }
+}
+";
+        assert_eq!(rules_of(KERNEL, borrow), ["stale-version-stamp"]);
+    }
+
+    #[test]
+    fn item_rules_respect_allows() {
+        let src = "\
+// greenpod-lint: allow(kernel-imports-tool) reason=\"adapter seam\"
+use crate::api::ApiEvent;
+";
+        assert!(rules_of(KERNEL, src).is_empty());
+    }
+}

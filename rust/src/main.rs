@@ -581,17 +581,25 @@ fn bench_sched(cfg: &Config, grid: &str) -> Result<()> {
 }
 
 /// `greenpod lint [--deny] [--json]` — the in-tree determinism &
-/// numeric-safety static analysis over `rust/src/` (rules, scoping
-/// and the allow grammar are documented on [`greenpod::lint`]).
+/// numeric-safety static analysis over `rust/src/`, `rust/tests/`
+/// and `examples/` (rules, scoping and the allow grammar are
+/// documented on [`greenpod::lint`]).
 fn run_lint(args: &Args) -> Result<()> {
-    // Resolve the source root whether we run from the repo root or
-    // from inside `rust/` (plain `cargo run`).
-    let root = if std::path::Path::new("rust/src").is_dir() {
-        std::path::Path::new("rust/src")
+    use std::path::{Path, PathBuf};
+    // Resolve the roots whether we run from the repo root or from
+    // inside `rust/` (plain `cargo run`). Tests and examples are
+    // linted in tool scope; roots that don't exist are skipped.
+    let candidates: &[&str] = if Path::new("rust/src").is_dir() {
+        &["rust/src", "rust/tests", "examples"]
     } else {
-        std::path::Path::new("src")
+        &["src", "tests", "../examples"]
     };
-    let report = greenpod::lint::lint_tree(root)?;
+    let roots: Vec<PathBuf> = candidates
+        .iter()
+        .map(PathBuf::from)
+        .filter(|p| p.is_dir())
+        .collect();
+    let report = greenpod::lint::lint_roots(&roots)?;
     if args.flag("json") {
         println!("{}", report.to_json().to_string());
     } else {

@@ -141,6 +141,7 @@ pub fn format_timeline(
     }
     let lo = samples.iter().map(|&(_, v)| v).min().unwrap_or(0);
     let hi = samples.iter().map(|&(_, v)| v).max().unwrap_or(0);
+    // greenpod-lint: allow(silent-clamp) reason="chart x-range must reach the last sample even when it lands past the nominal end"
     let end = end_s.max(samples.last().unwrap().0);
     let value_at = |t: f64| {
         let mut v = samples[0].1;

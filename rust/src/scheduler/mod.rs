@@ -27,6 +27,7 @@ use std::time::Duration;
 
 use crate::cluster::{ClusterState, NodeId, Pod};
 use crate::mcda::McdaMethod;
+// greenpod-lint: allow(kernel-imports-tool) reason="ScoringBackend::Pjrt wraps the deterministic compiled-TOPSIS engine; scheduling stays bit-reproducible either way"
 use crate::runtime::PjrtTopsisEngine;
 
 /// How an MCDA scorer turns a decision matrix into scores.

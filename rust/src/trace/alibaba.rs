@@ -7,12 +7,16 @@
 //! * `batch_task.csv` → [`AlibabaTaskReader`] ([`WorkloadTrace`]).
 //!   Columns: `start_ts,end_ts,job_id,task_id,instance_num,status,
 //!   plan_cpu,plan_mem`. `plan_cpu` is percent-of-one-core (50 = half
-//!   a core), i.e. `plan_cpu × 10` millicores, snapped to the nearest
-//!   paper class (Light 200 m / Medium 500 m / Complex 1000 m, ties to
-//!   the smaller); work size is `end_ts - start_ts` rebased into
-//!   epochs at 100 s per epoch; `instance_num` expands a task row into
-//!   that many identical submissions. Timestamps are rebased to the
-//!   first task's `start_ts`.
+//!   a core), i.e. `plan_cpu × 10` millicores; `plan_mem` is
+//!   normalized GB, i.e. `plan_mem × 1024` MiB. Rows with both plans
+//!   snap to the paper class (Table II: Light 200 m/512 MiB, Medium
+//!   500 m/1024 MiB, Complex 1000 m/2048 MiB) with the smallest
+//!   summed relative distance across both dimensions; rows with an
+//!   empty or absent `plan_mem` fall back to the cpu-only snap. Ties
+//!   go to the smaller class either way. Work size is `end_ts -
+//!   start_ts` rebased into epochs at 100 s per epoch; `instance_num`
+//!   expands a task row into that many identical submissions.
+//!   Timestamps are rebased to the first task's `start_ts`.
 //! * `machine_events.csv` → [`AlibabaMachineReader`] ([`ClusterTrace`]).
 //!   Columns: `timestamp,machine_id,event_type` with `add` = up and
 //!   `remove`/`softerror`/`harderror` = down, rebased to the table's
@@ -35,7 +39,8 @@ use crate::workload::{TraceEntry, WorkloadClass};
 const SECS_PER_EPOCH: f64 = 100.0;
 
 /// Snap a millicore request to the nearest paper class (ties to the
-/// smaller class — the energy-conservative choice).
+/// smaller class — the energy-conservative choice). The cpu-only
+/// fallback for rows whose `plan_mem` column is empty.
 fn class_for_millis(millis: f64) -> WorkloadClass {
     let mut best = WorkloadClass::Light;
     let mut best_d = (millis - 200.0).abs();
@@ -43,6 +48,31 @@ fn class_for_millis(millis: f64) -> WorkloadClass {
         [(WorkloadClass::Medium, 500.0), (WorkloadClass::Complex, 1000.0)]
     {
         let d = (millis - m).abs();
+        if d < best_d {
+            best = class;
+            best_d = d;
+        }
+    }
+    best
+}
+
+/// Snap a (millicore, MiB) request pair to the paper class with the
+/// smallest summed relative distance across both dimensions (ties to
+/// the smaller class). Relative — not absolute — distance keeps the
+/// two axes comparable: 2048 MiB of Complex-shaped memory outweighs
+/// 250 m of Light-shaped cpu instead of drowning in MiB magnitudes.
+fn class_for_shape(millis: f64, mem_mib: f64) -> WorkloadClass {
+    let mut best = WorkloadClass::Light;
+    let mut best_d = f64::INFINITY;
+    for class in [
+        WorkloadClass::Light,
+        WorkloadClass::Medium,
+        WorkloadClass::Complex,
+    ] {
+        let r = class.requests();
+        let cpu = r.cpu_millis as f64;
+        let mem = r.memory_mib as f64;
+        let d = (millis - cpu).abs() / cpu + (mem_mib - mem).abs() / mem;
         if d < best_d {
             best = class;
             best_d = d;
@@ -147,7 +177,22 @@ impl<R: BufRead> AlibabaTaskReader<R> {
         );
         // Lossless by the bound just checked.
         let epochs = epochs_f as u32;
-        let class = class_for_millis(plan_cpu * 10.0);
+        // `plan_mem` (normalized GB) refines the class when present;
+        // the public trace leaves it empty on many rows.
+        let plan_mem = fields.get(7).copied().unwrap_or("");
+        let class = if plan_mem.is_empty() {
+            class_for_millis(plan_cpu * 10.0)
+        } else {
+            let plan_mem: f64 = plan_mem.parse().map_err(|e| {
+                anyhow::anyhow!("bad plan_mem `{plan_mem}`: {e}")
+            })?;
+            anyhow::ensure!(
+                plan_mem.is_finite() && plan_mem >= 0.0,
+                "`plan_mem` must be finite and non-negative, got \
+                 {plan_mem}"
+            );
+            class_for_shape(plan_cpu * 10.0, plan_mem * 1024.0)
+        };
         self.last_at = at_s;
         for _ in 0..instances {
             self.pending.push_back(TraceEntry { at_s, class, epochs });
@@ -317,6 +362,35 @@ mod tests {
         assert_eq!(class_for_millis(750.0), WorkloadClass::Medium);
         assert_eq!(class_for_millis(0.0), WorkloadClass::Light);
         assert_eq!(class_for_millis(5000.0), WorkloadClass::Complex);
+    }
+
+    #[test]
+    fn mixed_shape_rows_weigh_memory_too() {
+        // plan_cpu 25 (250 m) looks Light on cpu alone, but plan_mem
+        // 2.0 (2048 MiB) is Complex-shaped memory: the joint relative
+        // distance picks Complex (0.75) over Medium (1.5) and Light
+        // (3.25).
+        let text = "100,300,j1,t1,1,Terminated,25,2.0\n";
+        let entries = drain(&mut tasks(text));
+        assert_eq!(entries[0].class, WorkloadClass::Complex);
+        // An empty plan_mem column falls back to the cpu-only snap…
+        let text = "100,300,j1,t1,1,Terminated,25,\n";
+        let entries = drain(&mut tasks(text));
+        assert_eq!(entries[0].class, WorkloadClass::Light);
+        // …and so does a short row with no plan_mem column at all.
+        let text = "100,300,j1,t1,1,Terminated,25\n";
+        let entries = drain(&mut tasks(text));
+        assert_eq!(entries[0].class, WorkloadClass::Light);
+        // On-spec shapes land exactly; the degenerate all-tie point
+        // resolves to the smallest class.
+        assert_eq!(class_for_shape(550.0, 1024.0), WorkloadClass::Medium);
+        assert_eq!(class_for_shape(0.0, 0.0), WorkloadClass::Light);
+        // A malformed plan_mem is an error, not a silent fallback.
+        let err = tasks("100,300,j1,t1,1,T,25,lots\n")
+            .next_entry()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bad plan_mem"), "{err}");
     }
 
     #[test]

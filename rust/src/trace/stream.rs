@@ -383,6 +383,40 @@ mod tests {
     }
 
     #[test]
+    fn crlf_traces_parse_identically_to_lf() {
+        // Windows-edited traces reach the reader with `\r\n` line
+        // endings; `refill`'s trim must make them byte-identical to
+        // their LF twins in both formats.
+        let cases = [
+            (
+                TraceFormat::Csv,
+                "at_s,class,epochs\n0.5,light,3\n1.0,complex,8\n",
+            ),
+            (
+                TraceFormat::Jsonl,
+                "{\"at_s\":0.5,\"class\":\"light\"}\n\
+                 {\"at_s\":1.5,\"class\":\"medium\"}\n",
+            ),
+        ];
+        for (format, lf) in cases {
+            let crlf = lf.replace('\n', "\r\n");
+            let mut a = reader(lf, format, 1);
+            let mut b = reader(&crlf, format, 1);
+            let ea = drain(&mut a).unwrap();
+            let eb = drain(&mut b).unwrap();
+            assert_eq!(ea.len(), 2, "{format:?}");
+            assert_eq!(ea.len(), eb.len(), "{format:?}");
+            for (x, y) in ea.iter().zip(&eb) {
+                assert_eq!(
+                    (x.at_s, x.class, x.epochs),
+                    (y.at_s, y.class, y.epochs),
+                    "{format:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn format_inference() {
         assert_eq!(TraceFormat::from_path("a/b.jsonl").unwrap(), TraceFormat::Jsonl);
         assert_eq!(TraceFormat::from_path("t.csv").unwrap(), TraceFormat::Csv);

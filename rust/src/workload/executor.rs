@@ -19,6 +19,7 @@
 use std::rc::Rc;
 
 use crate::cluster::{Node, Pod};
+// greenpod-lint: allow(kernel-imports-tool) reason="measured-mode execution deliberately bridges to the PJRT runner; analytic mode never touches it and stays deterministic"
 use crate::runtime::{ArtifactRegistry, EpochResult, LinRegRunner};
 use crate::scheduler::estimator::DEFAULT_LIGHT_EPOCH_SECS;
 use crate::workload::WorkloadClass;

@@ -276,6 +276,7 @@ mod tests {
     fn surf_lisa_composition() {
         let spec = TraceSpec::surf_lisa(5.0, 2000.0);
         let t = ArrivalTrace::poisson(&spec, 7);
+        assert!(!t.entries.is_empty(), "poisson trace must admit pods");
         let light = t
             .entries
             .iter()

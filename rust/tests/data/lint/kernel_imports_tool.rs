@@ -1,0 +1,13 @@
+//! `kernel-imports-tool` fixture: kernel files importing tool
+//! modules fire at the tool segment (once per offending leaf);
+//! kernel-to-kernel imports, deterministic util leaves, and the
+//! annotated twin stay clean.
+
+use crate::api::{ApiEvent, PodSubmission};
+use crate::cluster::Pod;
+use crate::runtime::PjrtTopsisEngine;
+use crate::util::pretty::human_bytes;
+use crate::util::stats::total_order;
+
+// greenpod-lint: allow(kernel-imports-tool) reason="fixture twin: audited tool-module import"
+use crate::experiments::grid;

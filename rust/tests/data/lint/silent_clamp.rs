@@ -1,0 +1,34 @@
+//! `silent-clamp` fixture: `.max(…)`/`.clamp(…)` on time-like
+//! values with no adjacent assert fire at the method name; the
+//! running max, the asserted clamp, the non-time clamp, and the
+//! annotated twin stay clean.
+
+pub fn settle(arrival_s: f64, now: f64) -> f64 {
+    arrival_s.max(now)
+}
+
+pub fn window(deadline: f64, horizon: f64) -> f64 {
+    deadline.clamp(0.0, horizon)
+}
+
+pub fn widest(spans: &[f64]) -> f64 {
+    let mut makespan = 0.0f64;
+    for &s in spans {
+        makespan = makespan.max(s);
+    }
+    makespan
+}
+
+pub fn guarded(start_s: f64, end_s: f64) -> f64 {
+    debug_assert!(start_s <= end_s, "window order");
+    end_s.max(start_s)
+}
+
+pub fn cores(requested: f64, available: f64) -> f64 {
+    requested.min(available).max(1.0)
+}
+
+pub fn twin(at_s: f64, now: f64) -> f64 {
+    // greenpod-lint: allow(silent-clamp) reason="fixture twin: late actions fire now by contract"
+    at_s.max(now)
+}

@@ -1,0 +1,29 @@
+//! `stale-version-stamp` fixture: mutating a `ClusterState`
+//! allocation field outside the version-stamping allowlist fires at
+//! the field; allowlisted methods, reads, and the annotated twin
+//! stay clean.
+
+pub struct ClusterState {
+    ready_count: usize,
+    node_version: u64,
+}
+
+impl ClusterState {
+    pub fn set_ready(&mut self, up: bool) {
+        self.ready_count += if up { 1 } else { 0 };
+        self.node_version += 1;
+    }
+
+    pub fn rebalance(&mut self) {
+        self.ready_count = 0;
+    }
+
+    pub fn ready(&self) -> usize {
+        self.ready_count
+    }
+
+    pub fn restore(&mut self, version: u64) {
+        // greenpod-lint: allow(stale-version-stamp) reason="fixture twin: snapshot restore re-stamps explicitly"
+        self.node_version = version;
+    }
+}

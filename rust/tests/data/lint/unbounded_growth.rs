@@ -1,0 +1,38 @@
+//! `unbounded-growth` fixture: a collection field grown inside a
+//! kernel loop with no draining method anywhere in the type's impls
+//! fires at the grower call; drained fields, straight-line pushes,
+//! and the annotated twin stay clean.
+
+use std::collections::VecDeque;
+
+pub struct EventLog {
+    entries: Vec<u64>,
+    recent: VecDeque<u64>,
+    audit: Vec<u64>,
+}
+
+impl EventLog {
+    pub fn ingest(&mut self, batch: &[u64]) {
+        for &e in batch {
+            self.entries.push(e);
+            self.recent.push_back(e);
+        }
+    }
+
+    pub fn seed(&mut self, e: u64) {
+        self.audit.push(e);
+    }
+
+    pub fn trim(&mut self) {
+        while self.recent.len() > 64 {
+            self.recent.pop_front();
+        }
+    }
+
+    pub fn archive(&mut self, batch: &[u64]) {
+        for &e in batch {
+            // greenpod-lint: allow(unbounded-growth) reason="fixture twin: retention is the external compactor's job"
+            self.audit.push(e);
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! `unguarded-div` fixture: kernel divisions by `.len()` or a
+//! capacity-shaped name with no zero guard in the enclosing fn fire
+//! at the division operator; the guarded, asserted, and clamped
+//! twins stay clean.
+
+pub fn mean_wait(waits: &[f64]) -> f64 {
+    waits.iter().sum::<f64>() / waits.len() as f64
+}
+
+pub fn shard_of(pod: u64, shard_count: u64) -> u64 {
+    pod % shard_count
+}
+
+pub fn guarded_mean(waits: &[f64]) -> f64 {
+    if waits.is_empty() {
+        return 0.0;
+    }
+    waits.iter().sum::<f64>() / waits.len() as f64
+}
+
+pub fn asserted_shard(pod: u64, shard_count: u64) -> u64 {
+    debug_assert!(shard_count > 0, "zero shards");
+    pod % shard_count
+}
+
+pub fn clamped_rate(total: f64, node_count: f64) -> f64 {
+    total / node_count.max(1.0)
+}
+
+pub fn sampled(total: f64, sample_count: f64) -> f64 {
+    // greenpod-lint: allow(unguarded-div) reason="fixture twin: caller pins a non-empty sample set"
+    total / sample_count
+}

@@ -1,14 +1,17 @@
-//! Integration tests for `greenpod lint` (L2): every rule fires on
-//! its seeded-violation fixture at exactly the expected spans while
-//! the annotated twin in the same file stays clean, the full pass
-//! over `rust/src/` reports zero findings (the same gate CI runs via
-//! `greenpod lint --deny`), and the file-existence half of
-//! `banned-path` flags a resurrected monolith scheduler file.
+//! Integration tests for `greenpod lint` (L2): every rule — token
+//! layer and item layer — fires on its seeded-violation fixture at
+//! exactly the expected spans while the annotated twin in the same
+//! file stays clean, the full pass over `rust/src/`, `rust/tests/`,
+//! and `examples/` reports zero findings (the same gate CI runs via
+//! `greenpod lint --deny`), the allow grammar survives its edge
+//! cases (stacked own-line annotations, CRLF sources, escaped-quote
+//! reasons), and the file-existence half of `banned-path` flags a
+//! resurrected monolith scheduler file.
 
 use std::fs;
 use std::path::Path;
 
-use greenpod::lint::{lint_source, lint_tree};
+use greenpod::lint::{lint_roots, lint_source, lint_tree};
 
 fn fixture(name: &str) -> String {
     let p = Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -105,11 +108,69 @@ fn banned_path_fixture_fires_on_both_idents() {
 }
 
 #[test]
+fn kernel_imports_tool_fixture_fires_per_offending_leaf() {
+    // The grouped `crate::api::{…}` use expands to two leaves, both
+    // anchored at the shared `api` segment; the deterministic util
+    // leaf (`util::stats`) and the kernel-to-kernel import are quiet.
+    check_fixture(
+        "kernel_imports_tool.rs",
+        "kernel-imports-tool",
+        &[(6, "api"), (6, "api"), (8, "runtime"), (9, "util")],
+    );
+}
+
+#[test]
+fn unguarded_div_fixture_fires_at_the_operators() {
+    check_fixture(
+        "unguarded_div.rs",
+        "unguarded-div",
+        &[(7, "/"), (11, "%")],
+    );
+}
+
+#[test]
+fn unbounded_growth_fixture_fires_at_the_grower() {
+    // Only the undrained `entries` push fires: `recent` has a
+    // `pop_front` drain in `trim`, and the straight-line `audit`
+    // push sits outside any loop.
+    check_fixture(
+        "unbounded_growth.rs",
+        "unbounded-growth",
+        &[(17, "push")],
+    );
+}
+
+#[test]
+fn silent_clamp_fixture_fires_at_the_method_names() {
+    check_fixture(
+        "silent_clamp.rs",
+        "silent-clamp",
+        &[(7, "max"), (11, "clamp")],
+    );
+}
+
+#[test]
+fn stale_version_stamp_fixture_fires_at_the_field() {
+    check_fixture(
+        "stale_version_stamp.rs",
+        "stale-version-stamp",
+        &[(18, "ready_count")],
+    );
+}
+
+#[test]
 fn kernel_only_rules_stay_quiet_in_tool_scope() {
     // The same seeded violations under a tool-module label: the
     // kernel-only rules must not fire, so the only findings left are
     // the twins' now-unused allows.
-    for name in ["unordered_iter.rs", "wall_clock.rs"] {
+    for name in [
+        "unordered_iter.rs",
+        "wall_clock.rs",
+        "kernel_imports_tool.rs",
+        "unguarded_div.rs",
+        "unbounded_growth.rs",
+        "silent_clamp.rs",
+    ] {
         let src = fixture(name);
         let out = lint_source(&format!("rust/src/util/{name}"), &src);
         assert_eq!(out.len(), 1, "{name}: {out:?}");
@@ -118,17 +179,112 @@ fn kernel_only_rules_stay_quiet_in_tool_scope() {
 }
 
 #[test]
+fn stale_version_stamp_fires_in_tool_scope_too() {
+    // The version-stamp contract holds everywhere `ClusterState` is
+    // mutated — tests and tools included — so the tool-scoped run
+    // keeps the same finding (and its twin's allow stays used).
+    let src = fixture("stale_version_stamp.rs");
+    let out =
+        lint_source("rust/src/util/stale_version_stamp.rs", &src);
+    assert_eq!(out.len(), 1, "{out:?}");
+    assert_eq!(out[0].rule, "stale-version-stamp", "{out:?}");
+    assert_eq!(out[0].line, 18, "{out:?}");
+}
+
+#[test]
+fn stacked_own_line_allows_cover_the_same_line() {
+    // Two consecutive own-line annotations both attach to the next
+    // code line, suppressing that line's two different-rule findings
+    // with zero unused-allow residue.
+    let src = "fn f(v: &mut [f64], id: u64) -> f64 {\n\
+        // greenpod-lint: allow(lossy-id-cast) reason=\"edge case: display-only cast\"\n\
+        // greenpod-lint: allow(float-cmp-unwrap) reason=\"edge case: ad-hoc order under test\"\n\
+        let y = id as f64; v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+        y\n}\n";
+    let out = lint_source("rust/src/simulation/stacked.rs", src);
+    assert!(out.is_empty(), "{out:?}");
+    // Dropping the annotations restores both findings — the stacked
+    // pass above really was suppression, not silence.
+    let bare: String = src
+        .lines()
+        .filter(|l| !l.trim_start().starts_with("// greenpod-lint:"))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    let out = lint_source("rust/src/simulation/stacked.rs", &bare);
+    let rules: Vec<&str> = out.iter().map(|f| f.rule).collect();
+    assert_eq!(rules, ["lossy-id-cast", "float-cmp-unwrap"], "{out:?}");
+}
+
+#[test]
+fn escaped_quotes_inside_allow_reasons_parse() {
+    let src = "use std::collections::HashMap; \
+        // greenpod-lint: allow(unordered-iter) reason=\"pins \\\"exact\\\" iteration twin\"\n";
+    let out = lint_source("rust/src/simulation/escaped.rs", src);
+    assert!(out.is_empty(), "{out:?}");
+}
+
+#[test]
+fn crlf_sources_lint_like_lf_sources() {
+    // CRLF line endings must not shift spans or break trailing
+    // annotations (the comment body carries a `\r` the parser trims).
+    let bare = "use std::collections::HashMap;\r\n\
+                fn f() { let t = Instant::now(); }\r\n";
+    let out = lint_source("rust/src/simulation/crlf.rs", bare);
+    let spans: Vec<(&str, usize)> =
+        out.iter().map(|f| (f.rule, f.line)).collect();
+    assert_eq!(
+        spans,
+        [("unordered-iter", 1), ("wall-clock-in-kernel", 2)],
+        "{out:?}"
+    );
+    let allowed = "use std::collections::HashMap; \
+        // greenpod-lint: allow(unordered-iter) reason=\"crlf twin\"\r\n\
+        // greenpod-lint: allow(wall-clock-in-kernel) reason=\"crlf twin\"\r\n\
+        fn f() { let t = Instant::now(); }\r\n";
+    let out = lint_source("rust/src/simulation/crlf.rs", allowed);
+    assert!(out.is_empty(), "{out:?}");
+}
+
+#[test]
+fn unused_and_malformed_allows_name_the_offending_rule() {
+    // `unused-allow` carries the rule the annotation tried to
+    // suppress…
+    let src = "// greenpod-lint: allow(banned-path) reason=\"nothing here\"\n\
+               fn f() {}\n";
+    let out = lint_source("rust/src/simulation/unused.rs", src);
+    assert_eq!(out.len(), 1, "{out:?}");
+    assert_eq!(out[0].rule, "unused-allow");
+    assert_eq!(out[0].allow_rule.as_deref(), Some("banned-path"));
+    // …and so does `malformed-allow` when the rule name parsed but
+    // the reason is missing (the underlying finding still fires).
+    let src = "use std::collections::HashMap; \
+               // greenpod-lint: allow(unordered-iter)\n";
+    let out = lint_source("rust/src/simulation/malformed.rs", src);
+    let rules: Vec<&str> = out.iter().map(|f| f.rule).collect();
+    assert_eq!(rules, ["unordered-iter", "malformed-allow"], "{out:?}");
+    let mal = out.iter().find(|f| f.rule == "malformed-allow").unwrap();
+    assert_eq!(mal.allow_rule.as_deref(), Some("unordered-iter"));
+}
+
+#[test]
 fn lint_repo_is_clean() {
-    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
-    let report = lint_tree(&root).expect("lint walk over rust/src");
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let roots = [
+        manifest.join("src"),
+        manifest.join("tests"),
+        manifest.join("../examples"),
+    ];
+    let report =
+        lint_roots(&roots).expect("lint walk over src/tests/examples");
     assert!(
-        report.files_scanned > 40,
-        "only {} files scanned — wrong root?",
+        report.files_scanned > 50,
+        "only {} files scanned — wrong roots?",
         report.files_scanned
     );
     assert!(
         report.clean(),
-        "rust/src must lint clean (CI runs `greenpod lint --deny`):\n{}",
+        "the swept tree must lint clean (CI runs `greenpod lint \
+         --deny`):\n{}",
         report
             .findings
             .iter()
@@ -136,6 +292,10 @@ fn lint_repo_is_clean() {
             .collect::<Vec<_>>()
             .join("\n")
     );
+    // The legacy single-root entry point still walks `src` alone.
+    let src_only = lint_tree(&manifest.join("src"))
+        .expect("lint walk over rust/src");
+    assert!(src_only.clean() && src_only.files_scanned > 40);
 }
 
 #[test]

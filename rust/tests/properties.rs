@@ -972,7 +972,7 @@ fn prop_carbon_integral_nonnegative_and_additive() {
             rng.range_f64(-20.0, 80.0),
             rng.range_f64(-20.0, 80.0),
         ];
-        ts.sort_by(f64::total_cmp);
+        ts.sort_by(total_order);
         let [a, b, c] = ts;
         let whole = s.integral(a, c);
         let split = s.integral(a, b) + s.integral(b, c);
@@ -1001,7 +1001,7 @@ fn prop_carbon_ledger_nonnegative_and_additive_across_splits() {
         let mut splits: Vec<f64> = (0..rng.below(6))
             .map(|_| start + rng.range_f64(0.0, dur))
             .collect();
-        splits.sort_by(f64::total_cmp);
+        splits.sort_by(total_order);
         let run = |splits: &[f64]| -> (f64, f64) {
             let mut m = EnergyMeter::new().with_carbon(signal.clone());
             m.start(
@@ -1538,7 +1538,7 @@ fn prop_nearest_rank_matches_legacy_percentile_formulas() {
             _ => rng.range_f64(0.0, 1.0),
         };
         let mut sorted = samples.clone();
-        sorted.sort_by(f64::total_cmp);
+        sorted.sort_by(total_order);
         // Retired metrics::Summary closure: round() then clamp.
         let legacy_summary = {
             let idx = ((n as f64 - 1.0) * q).round() as usize;
@@ -1890,8 +1890,10 @@ fn prop_total_order_bit_identical_to_ad_hoc_comparators_off_nan() {
         let mut by_helper = v.clone();
         by_helper.sort_by(total_order);
         let mut by_partial = v.clone();
+        // greenpod-lint: allow(float-cmp-unwrap) reason="differential property: the ad-hoc comparator IS the subject under test"
         by_partial.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mut by_total = v;
+        // greenpod-lint: allow(float-cmp-unwrap) reason="differential property: raw total_cmp is the reference being pinned"
         by_total.sort_by(|a, b| a.total_cmp(b));
         for i in 0..n {
             assert_eq!(
